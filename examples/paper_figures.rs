@@ -1,0 +1,37 @@
+//! Regenerates every table and figure of the paper in one run.
+//!
+//! ```text
+//! cargo run --release --example paper_figures [-- --scale 0.25 --out results]
+//! ```
+//!
+//! Equivalent to `phi-spmv all`; kept as an example so `cargo run
+//! --example` users see the full reproduction surface. At `--scale 1.0`
+//! the matrices match Table 1's sizes exactly (a few GB of RAM and some
+//! patience); the default 0.25 preserves every per-row statistic.
+
+use phi_spmv::coordinator::{Ctx, Experiment, ALL_EXPERIMENTS};
+use phi_spmv::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let ctx = Ctx {
+        scale: args.get("scale", 0.25f64).clamp(1e-4, 1.0),
+        out_dir: args.get_str("out").unwrap_or("results").into(),
+        verbose: true,
+        ..Ctx::default()
+    };
+    let t0 = std::time::Instant::now();
+    for id in ALL_EXPERIMENTS {
+        let r = Experiment::run(id, &ctx)?;
+        println!("{}", r.render());
+        r.save(&ctx.out_dir)?;
+    }
+    println!(
+        "regenerated {} experiments into {} in {:.1}s (scale {})",
+        ALL_EXPERIMENTS.len(),
+        ctx.out_dir.display(),
+        t0.elapsed().as_secs_f64(),
+        ctx.scale
+    );
+    Ok(())
+}

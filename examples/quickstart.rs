@@ -1,0 +1,76 @@
+//! Quickstart: generate a matrix, run SpMV three ways, check they agree.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the three execution paths of the library:
+//! 1. the serial CSR oracle,
+//! 2. the native multithreaded kernel (the paper's OpenMP analog),
+//! 3. the AOT path: JAX/Pallas kernel lowered to HLO, executed via PJRT.
+
+use phi_spmv::kernels::spmv_parallel;
+use phi_spmv::runtime::Runtime;
+use phi_spmv::sched::Policy;
+use phi_spmv::sparse::gen::stencil::stencil_2d;
+use phi_spmv::sparse::gen::{random_vector, randomize_values};
+use phi_spmv::sparse::stats::{ucld, MatrixStats};
+use phi_spmv::util::bench::Bencher;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A small 5-point stencil (the paper's mesh_2048, scaled down).
+    let mut a = stencil_2d(64, 64);
+    randomize_values(&mut a, 1);
+    let st = MatrixStats::compute("mesh_64", &a);
+    println!(
+        "matrix: {} ({} rows, {} nnz, {:.2} nnz/row, UCLD {:.3})",
+        st.name,
+        st.nrows,
+        st.nnz,
+        st.nnz_per_row,
+        ucld(&a)
+    );
+
+    let x = random_vector(a.ncols, 2);
+    let flops = 2.0 * a.nnz() as f64;
+
+    // 2. Serial oracle.
+    let want = a.spmv(&x);
+
+    // 3. Native parallel kernel (dynamic,64 — the paper's best policy).
+    let threads = std::thread::available_parallelism()?.get();
+    let got = spmv_parallel(&a, &x, threads, Policy::Dynamic(64));
+    assert_eq!(got.len(), want.len());
+    let max_err = got.iter().zip(&want).map(|(u, v)| (u - v).abs()).fold(0.0, f64::max);
+    println!("native parallel vs serial: max |Δ| = {max_err:.2e}");
+
+    let bencher = Bencher::quick();
+    let m = bencher.run("native spmv", || spmv_parallel(&a, &x, threads, Policy::Dynamic(64)));
+    println!("native: {:.2} GFlop/s ({} threads)", m.gflops(flops), threads);
+
+    // 4. AOT/PJRT path (JAX+Pallas lowered at build time by `make artifacts`).
+    match Runtime::from_default_dir() {
+        Ok(mut rt) => {
+            let exe = rt.spmv(&a)?;
+            println!(
+                "pjrt: platform={}, bucket={} ({}x{} w{})",
+                rt.platform(),
+                exe.meta.name,
+                exe.meta.rows,
+                exe.meta.ncols,
+                exe.meta.width
+            );
+            let y = rt.run_spmv(&exe, &x)?;
+            let max_err =
+                y.iter().zip(&want).map(|(u, v)| (u - v).abs()).fold(0.0, f64::max);
+            println!("pjrt vs serial: max |Δ| = {max_err:.2e}");
+            assert!(max_err < 1e-10, "PJRT result mismatch");
+            let mp = bencher.run("pjrt spmv", || rt.run_spmv(&exe, &x).unwrap());
+            println!("pjrt: {:.2} GFlop/s", mp.gflops(flops));
+        }
+        Err(e) => println!("pjrt path skipped ({e}); run `make artifacts`"),
+    }
+
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,108 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts + manifest.json.
+
+HLO *text* is the interchange format (NOT serialized HloModuleProto): the
+image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit instruction-id protos,
+while the text parser reassigns ids — see /opt/xla-example/README.md.
+
+Run once via ``make artifacts``; Rust loads the result at startup and
+Python never appears on the request path.
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Shape buckets: (rows == ncols, ell width). Chosen to cover the examples
+# (64²/128²/256² stencils, recommender bipartite graph) while keeping
+# Rust-side compile times short.
+SPMV_BUCKETS = [(4096, 8), (4096, 16), (16384, 8), (16384, 16), (65536, 8)]
+SPMM_BUCKETS = [(4096, 8, 16), (16384, 8, 16), (8192, 64, 16)]
+POWER_BUCKETS = [(4096, 8), (16384, 8), (65536, 8)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (the working recipe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spmv(rows, width):
+    vals = jax.ShapeDtypeStruct((rows, width), jnp.float64)
+    cols = jax.ShapeDtypeStruct((rows, width), jnp.int32)
+    x = jax.ShapeDtypeStruct((rows,), jnp.float64)
+    return jax.jit(model.spmv).lower(vals, cols, x)
+
+
+def lower_spmm(rows, width, k):
+    vals = jax.ShapeDtypeStruct((rows, width), jnp.float64)
+    cols = jax.ShapeDtypeStruct((rows, width), jnp.int32)
+    xmat = jax.ShapeDtypeStruct((rows, k), jnp.float64)
+    return jax.jit(model.spmm).lower(vals, cols, xmat)
+
+
+def lower_power(rows, width):
+    vals = jax.ShapeDtypeStruct((rows, width), jnp.float64)
+    cols = jax.ShapeDtypeStruct((rows, width), jnp.int32)
+    x = jax.ShapeDtypeStruct((rows,), jnp.float64)
+    return jax.jit(model.power_iteration_step).lower(vals, cols, x)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifacts directory")
+    parser.add_argument(
+        "--quick", action="store_true", help="only the smallest bucket of each kind"
+    )
+    args = parser.parse_args()
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    spmv_buckets = SPMV_BUCKETS[:1] if args.quick else SPMV_BUCKETS
+    spmm_buckets = SPMM_BUCKETS[:1] if args.quick else SPMM_BUCKETS
+    power_buckets = POWER_BUCKETS[:1] if args.quick else POWER_BUCKETS
+
+    artifacts = []
+
+    def emit(name, kind, rows, width, ncols, k, lowered):
+        path = f"{name}.hlo.txt"
+        text = to_hlo_text(lowered)
+        (out / path).write_text(text)
+        artifacts.append(
+            dict(name=name, kind=kind, rows=rows, width=width, ncols=ncols, k=k, path=path)
+        )
+        print(f"  wrote {path} ({len(text) / 1024:.0f} kB)")
+
+    for rows, width in spmv_buckets:
+        name = f"spmv_r{rows}_w{width}_n{rows}"
+        print(f"lowering {name} ...")
+        emit(name, "spmv", rows, width, rows, 1, lower_spmv(rows, width))
+
+    for rows, width, k in spmm_buckets:
+        name = f"spmm_r{rows}_w{width}_n{rows}_k{k}"
+        print(f"lowering {name} ...")
+        emit(name, "spmm", rows, width, rows, k, lower_spmm(rows, width, k))
+
+    for rows, width in power_buckets:
+        name = f"power_r{rows}_w{width}_n{rows}"
+        print(f"lowering {name} ...")
+        emit(name, "power", rows, width, rows, 1, lower_power(rows, width))
+
+    manifest = dict(version=1, artifacts=artifacts)
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"wrote manifest with {len(artifacts)} artifacts to {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Layer-1 Pallas kernel: ELL SpMV.
+
+TPU adaptation of the paper's `vgatherd` inner loop (DESIGN.md
+§Hardware-Adaptation):
+
+* the 512-bit SIMD row group (8 doubles) becomes the ELL lane dimension;
+* `vgatherd` becomes a VMEM gather ``x[cols_tile]`` — the input vector is
+  held resident in VMEM while value/column tiles stream HBM→VMEM through
+  the BlockSpec schedule, exactly the role the paper's cachelines play;
+* rows are tiled in blocks of ``ROW_TILE`` so the (vals, cols) working set
+  per grid step stays small while the reduction across the width happens
+  in-register.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU efficiency is estimated in DESIGN.md §Perf from the
+VMEM footprint of these BlockSpecs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 128 rows × width 8 × 8 B = 8 kB of values (+4 kB of
+# column ids) per step — far under VMEM; x dominates the footprint.
+ROW_TILE = 128
+
+
+def _spmv_kernel(cols_ref, x_ref, vals_ref, y_ref):
+    """One row tile: gather x by column id, multiply, reduce across width."""
+    vals = vals_ref[...]  # (ROW_TILE, W)
+    cols = cols_ref[...]  # (ROW_TILE, W) int32
+    x = x_ref[...]  # (N,) resident in VMEM
+    y_ref[...] = jnp.sum(vals * x[cols], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def spmv_ell(vals, cols, x):
+    """ELL SpMV via Pallas: ``y = A x`` with A in padded ELL form.
+
+    Args:
+      vals: f64[rows, width] — values, zero-padded.
+      cols: i32[rows, width] — column ids, sentinel-padded.
+      x:    f64[n] — input vector.
+
+    Returns:
+      f64[rows].
+    """
+    rows, width = vals.shape
+    (n,) = x.shape
+    if rows % ROW_TILE != 0:
+        raise ValueError(f"rows={rows} must be a multiple of {ROW_TILE}")
+    grid = (rows // ROW_TILE,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, width), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((ROW_TILE, width), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), vals.dtype),
+        interpret=True,
+    )(cols, x, vals)

@@ -1,0 +1,39 @@
+"""Layer-2 JAX model: the jitted entry points that get AOT-lowered.
+
+Each function composes the Layer-1 Pallas kernels into the computation the
+Rust coordinator executes. Lowered once per shape bucket by ``aot.py``;
+Python never runs at serve time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels.spmm_ell import spmm_ell  # noqa: E402
+from .kernels.spmv_ell import spmv_ell  # noqa: E402
+
+
+def spmv(vals, cols, x):
+    """``y = A x`` — thin wrapper so the artifact is a 1-tuple."""
+    return (spmv_ell(vals, cols, x),)
+
+
+def spmm(vals, cols, xmat):
+    """``Y = A X``."""
+    return (spmm_ell(vals, cols, xmat),)
+
+
+def power_iteration_step(vals, cols, x):
+    """One normalized power-iteration step: ``x' = Ax / ||Ax||₂``.
+
+    Fuses the L2 normalization into the artifact so the eigensolver
+    example's hot loop is a single PJRT call. Also returns the Rayleigh
+    quotient numerator ``xᵀAx`` and the norm, letting the Rust driver track
+    convergence without touching the vector on the host.
+    """
+    y = spmv_ell(vals, cols, x)
+    norm = jnp.sqrt(jnp.sum(y * y))
+    rayleigh = jnp.sum(x * y)
+    safe = jnp.where(norm == 0.0, 1.0, norm)
+    return (y / safe, norm, rayleigh)

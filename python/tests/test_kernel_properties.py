@@ -1,0 +1,77 @@
+"""Additional algebraic properties of the Pallas kernels under hypothesis:
+linearity in A, column-permutation equivariance, and SpMM decomposition —
+the L1 analogs of the Rust proptests."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.spmm_ell import ROW_TILE as SPMM_TILE, spmm_ell
+from compile.kernels.spmv_ell import ROW_TILE as SPMV_TILE, spmv_ell
+
+from .test_kernels import make_ell
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), alpha=st.floats(-3, 3), beta=st.floats(-3, 3))
+def test_linearity_in_matrix_values(seed, alpha, beta):
+    """(αA + βB)x == αAx + βBx for matrices sharing a pattern."""
+    rng = np.random.default_rng(seed)
+    vals, cols, _ = make_ell(rng, SPMV_TILE, 8, 64, np.float64)
+    vals_b = vals * rng.uniform(0.5, 2.0)  # same pattern, scaled values
+    x = jnp.asarray(rng.uniform(-1, 1, 64))
+    v, vb, c = jnp.asarray(vals), jnp.asarray(vals_b), jnp.asarray(cols)
+    lhs = spmv_ell(alpha * v + beta * vb, c, x)
+    rhs = alpha * spmv_ell(v, c, x) + beta * spmv_ell(vb, c, x)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_column_permutation_equivariance(seed):
+    """Relabeling columns and permuting x identically leaves y unchanged."""
+    rng = np.random.default_rng(seed)
+    n = 96
+    vals, cols, _ = make_ell(rng, SPMV_TILE, 8, n, np.float64)
+    x = rng.uniform(-1, 1, n)
+    perm = rng.permutation(n).astype(np.int32)  # perm[old] = new
+    cols_p = perm[cols]
+    x_p = np.zeros_like(x)
+    x_p[perm] = x
+    y = spmv_ell(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x))
+    y_p = spmv_ell(jnp.asarray(vals), jnp.asarray(cols_p), jnp.asarray(x_p))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_p), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.sampled_from([2, 8, 16]))
+def test_spmm_decomposes_into_spmv_columns(seed, k):
+    rng = np.random.default_rng(seed)
+    rows = max(SPMV_TILE, SPMM_TILE)
+    vals, cols, _ = make_ell(rng, rows, 8, 80, np.float64)
+    xmat = rng.uniform(-1, 1, (80, k))
+    v, c = jnp.asarray(vals), jnp.asarray(cols)
+    y = spmm_ell(v, c, jnp.asarray(xmat))
+    for col in range(k):
+        yc = spmv_ell(v, c, jnp.asarray(xmat[:, col]))
+        np.testing.assert_allclose(
+            np.asarray(y)[:, col], np.asarray(yc), rtol=1e-11, atol=1e-11
+        )
+
+
+def test_duplicate_column_ids_accumulate():
+    """ELL semantics: repeated column ids in a row sum their contributions
+    (needed because COO→CSR merging happens Rust-side, but padding rows
+    share the sentinel column)."""
+    vals = np.zeros((SPMV_TILE, 8))
+    cols = np.zeros((SPMV_TILE, 8), dtype=np.int32)
+    vals[0, :3] = [1.0, 2.0, 4.0]
+    cols[0, :3] = [5, 5, 5]
+    x = np.zeros(16)
+    x[5] = 10.0
+    y = spmv_ell(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x))
+    assert float(y[0]) == 70.0

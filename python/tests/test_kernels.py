@@ -1,0 +1,130 @@
+"""Pallas kernels vs pure-jnp references — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, dtypes and sparsity patterns; every case must
+match ``ref.py`` under ``assert_allclose``.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.spmm_ell import ROW_TILE as SPMM_TILE, spmm_ell
+from compile.kernels.spmv_ell import ROW_TILE as SPMV_TILE, spmv_ell
+
+
+def make_ell(rng, rows, width, n, dtype, fill=0.5, aligned_runs=False):
+    """Random padded-ELL instance: (vals, cols, dense) with dense oracle."""
+    vals = np.zeros((rows, width), dtype=dtype)
+    cols = np.zeros((rows, width), dtype=np.int32)
+    dense = np.zeros((rows, n), dtype=dtype)
+    for i in range(rows):
+        nnz = rng.integers(0, width + 1)
+        if aligned_runs and nnz > 0:
+            start = int(rng.integers(0, max(1, n - nnz)))
+            chosen = np.arange(start, start + nnz) % n
+            chosen = np.unique(chosen)
+        else:
+            chosen = np.unique(rng.integers(0, n, size=nnz))
+        chosen = np.sort(chosen)
+        for j, c in enumerate(chosen):
+            v = rng.uniform(-1, 1) * fill
+            if v == 0:
+                v = 0.25
+            vals[i, j] = v
+            cols[i, j] = c
+            dense[i, c] += v
+    return vals, cols, dense
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows_mult=st.integers(1, 2),
+    width=st.sampled_from([8, 16, 24]),
+    n=st.integers(16, 400),
+    seed=st.integers(0, 2**31 - 1),
+    aligned=st.booleans(),
+)
+def test_spmv_matches_ref_hypothesis(rows_mult, width, n, seed, aligned):
+    rng = np.random.default_rng(seed)
+    rows = SPMV_TILE * rows_mult
+    vals, cols, dense = make_ell(rng, rows, width, n, np.float64, aligned_runs=aligned)
+    x = rng.uniform(-2, 2, size=n)
+    got = spmv_ell(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x))
+    want = ref.spmv_ell_ref(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+    # And both must agree with the dense oracle.
+    np.testing.assert_allclose(np.asarray(got), dense @ x, rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    width=st.sampled_from([8, 16]),
+    n=st.integers(16, 200),
+    k=st.sampled_from([1, 4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spmm_matches_ref_hypothesis(width, n, k, seed):
+    rng = np.random.default_rng(seed)
+    rows = SPMM_TILE
+    vals, cols, dense = make_ell(rng, rows, width, n, np.float64)
+    xmat = rng.uniform(-2, 2, size=(n, k))
+    got = spmm_ell(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(xmat))
+    want = ref.spmm_ell_ref(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(xmat))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(got), dense @ xmat, rtol=1e-10, atol=1e-10)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_spmv_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    vals, cols, dense = make_ell(rng, SPMV_TILE, 8, 64, dtype)
+    x = rng.uniform(-1, 1, size=64).astype(dtype)
+    got = spmv_ell(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x))
+    assert np.asarray(got).dtype == dtype
+    tol = 1e-5 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(got), dense @ x, rtol=tol, atol=tol)
+
+
+def test_spmv_rejects_unaligned_rows():
+    vals = jnp.zeros((100, 8))
+    cols = jnp.zeros((100, 8), dtype=jnp.int32)
+    x = jnp.zeros((100,))
+    with pytest.raises(ValueError, match="multiple"):
+        spmv_ell(vals, cols, x)
+
+
+def test_all_padding_rows_give_zero():
+    vals = jnp.zeros((SPMV_TILE, 8))
+    cols = jnp.zeros((SPMV_TILE, 8), dtype=jnp.int32)
+    x = jnp.full((32,), 5.0)
+    got = spmv_ell(vals, cols, x)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(SPMV_TILE))
+
+
+def test_spmv_linearity():
+    """A(αx + βz) == αAx + βAz — the SpMV invariant."""
+    rng = np.random.default_rng(11)
+    vals, cols, _ = make_ell(rng, SPMV_TILE, 16, 128, np.float64)
+    v, c = jnp.asarray(vals), jnp.asarray(cols)
+    x = jnp.asarray(rng.uniform(-1, 1, 128))
+    z = jnp.asarray(rng.uniform(-1, 1, 128))
+    lhs = spmv_ell(v, c, 2.0 * x + 3.0 * z)
+    rhs = 2.0 * spmv_ell(v, c, x) + 3.0 * spmv_ell(v, c, z)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-11, atol=1e-11)
+
+
+def test_spmm_k1_column_equals_spmv():
+    rng = np.random.default_rng(13)
+    rows = max(SPMV_TILE, SPMM_TILE)
+    vals, cols, _ = make_ell(rng, rows, 8, 96, np.float64)
+    x = rng.uniform(-1, 1, size=96)
+    v, c = jnp.asarray(vals), jnp.asarray(cols)
+    y1 = spmv_ell(v, c, jnp.asarray(x))
+    y2 = spmm_ell(v, c, jnp.asarray(x[:, None]))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2)[:, 0], rtol=1e-12)

@@ -1,0 +1,59 @@
+"""Layer-2 model + AOT lowering smoke tests."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels.spmv_ell import ROW_TILE
+
+from .test_kernels import make_ell
+
+
+def test_power_iteration_step_semantics():
+    rng = np.random.default_rng(3)
+    vals, cols, dense = make_ell(rng, ROW_TILE, 8, ROW_TILE, np.float64)
+    # Square system: n == rows.
+    x = rng.uniform(-1, 1, size=ROW_TILE)
+    xn, norm, rayleigh = model.power_iteration_step(
+        jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x)
+    )
+    y = dense @ x
+    np.testing.assert_allclose(float(norm), np.linalg.norm(y), rtol=1e-12)
+    np.testing.assert_allclose(float(rayleigh), x @ y, rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(xn), y / np.linalg.norm(y), rtol=1e-12)
+
+
+def test_power_step_zero_vector_safe():
+    vals = jnp.zeros((ROW_TILE, 8))
+    cols = jnp.zeros((ROW_TILE, 8), dtype=jnp.int32)
+    x = jnp.zeros((ROW_TILE,))
+    xn, norm, _ = model.power_iteration_step(vals, cols, x)
+    assert float(norm) == 0.0
+    assert np.all(np.isfinite(np.asarray(xn)))
+
+
+def test_hlo_text_lowering_small_bucket():
+    lowered = aot.lower_spmv(ROW_TILE, 8)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f64" in text
+    assert "gather" in text.lower()
+
+
+def test_spmm_lowering_has_expected_shapes():
+    lowered = aot.lower_spmm(ROW_TILE * 2, 8, 16)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert f"f64[{ROW_TILE * 2},16]" in text.replace(" ", "")
+
+
+def test_power_lowering_returns_three_outputs():
+    lowered = aot.lower_power(ROW_TILE, 8)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    # tuple of (vector, scalar, scalar)
+    assert text.count("f64[]") >= 2

@@ -1,0 +1,75 @@
+//! Register-blocking benchmarks (paper §4.5, Table 2).
+//!
+//! Measured: BCSR conversion cost + native blocked SpMV vs plain CSR on
+//! host hardware, for all seven paper block shapes. Modeled: Table 2's
+//! relative-performance row on KNC.
+//!
+//! `cargo bench --bench bench_blocking [-- --scale 0.05]`
+
+use phi_spmv::arch::PhiMachine;
+use phi_spmv::kernels::blocked_model::bcsr_profile;
+use phi_spmv::kernels::native::bcsr_spmv_parallel;
+use phi_spmv::kernels::spmv_model::{spmv_profile, SpmvAnalysis, SpmvVariant};
+use phi_spmv::kernels::spmv_parallel;
+use phi_spmv::sched::Policy;
+use phi_spmv::sparse::bcsr::PAPER_BLOCK_CONFIGS;
+use phi_spmv::sparse::gen::{paper_suite, random_vector, randomize_values};
+use phi_spmv::sparse::Bcsr;
+use phi_spmv::util::bench::Bencher;
+use phi_spmv::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = args.get("scale", 0.05f64);
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let bencher = Bencher::quick();
+    let machine = PhiMachine::se10p();
+    let suite = paper_suite();
+
+    // cant (dense 3-blocks, blocking-friendliest) and scircuit (hostile).
+    for idx in [5usize, 2] {
+        let e = &suite[idx];
+        let mut a = e.generate_scaled(scale);
+        randomize_values(&mut a, e.id as u64);
+        let x = random_vector(a.ncols, 6);
+        let flops = 2.0 * a.nnz() as f64;
+
+        let base = bencher.run(&format!("csr/{}", e.name), || {
+            spmv_parallel(&a, &x, threads, Policy::Dynamic(64))
+        });
+        let base_gfs = base.gflops(flops);
+        println!("== {} ({} nnz): CSR {:.3} GFlop/s ==", e.name, a.nnz(), base_gfs);
+        println!(
+            "{:>6} {:>10} {:>12} {:>12} {:>12} {:>10}",
+            "block", "density", "conv_ms", "native GF/s", "native rel", "model rel"
+        );
+
+        let an = SpmvAnalysis::compute(&a, 61);
+        let model_base = machine
+            .best_config(&spmv_profile(&a, SpmvVariant::O3, &an), &[60, 61])
+            .2
+            .gflops();
+        for (r, c) in PAPER_BLOCK_CONFIGS {
+            let conv = bencher.run(&format!("bcsr{r}x{c}/{}", e.name), || Bcsr::from_csr(&a, r, c));
+            let b = Bcsr::from_csr(&a, r, c);
+            let nat = bencher.run(&format!("bspmv{r}x{c}/{}", e.name), || {
+                bcsr_spmv_parallel(&b, &x, threads, 16)
+            });
+            let nat_gfs = nat.gflops(flops);
+            let model_rel = machine
+                .best_config(&bcsr_profile(&a, &b, 61), &[60, 61])
+                .2
+                .gflops()
+                / model_base;
+            println!(
+                "{:>6} {:>10.3} {:>12.2} {:>12.3} {:>12.2} {:>10.2}",
+                format!("{r}x{c}"),
+                b.block_density(a.nnz()),
+                conv.mean_s * 1e3,
+                nat_gfs,
+                nat_gfs / base_gfs,
+                model_rel
+            );
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! End-to-end figure regeneration timing: runs every paper experiment at
+//! bench scale and reports wall time per figure (the coordinator's own
+//! hot path — matrix generation + analyses dominate).
+//!
+//! `cargo bench --bench bench_figures [-- --scale 0.02]`
+
+use phi_spmv::coordinator::{Ctx, Experiment, ALL_EXPERIMENTS};
+use phi_spmv::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let ctx = Ctx {
+        scale: args.get("scale", 0.02f64),
+        out_dir: std::env::temp_dir().join("phi-spmv-bench-figures"),
+        verbose: false,
+        ..Ctx::default()
+    };
+    println!("scale {} → {}", ctx.scale, ctx.out_dir.display());
+    let mut total = 0.0;
+    for id in ALL_EXPERIMENTS {
+        let t0 = std::time::Instant::now();
+        let r = Experiment::run(id, &ctx).expect("experiment");
+        r.save(&ctx.out_dir).expect("save");
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        println!("{id:<8} {dt:>8.2}s  ({} tables)", r.tables.len());
+    }
+    println!("total    {total:>8.2}s");
+}

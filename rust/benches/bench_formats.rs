@@ -1,0 +1,104 @@
+//! Format ablation: CRS vs ELL vs JDS vs DIA vs HYB vs dense-BCSR vs
+//! bitmap-BCSR — storage bytes and measured SpMV throughput per class of
+//! matrix. Completes the paper's §3/§4.5 storage-scheme discussion with
+//! the bitmap variant it proposes as future work.
+//!
+//! `cargo bench --bench bench_formats [-- --scale 0.05]`
+
+use phi_spmv::sparse::alt_formats::{Dia, Hyb, Jds};
+use phi_spmv::sparse::gen::{paper_suite, random_vector, randomize_values};
+use phi_spmv::sparse::{Bcsr, BitmapBcsr, Ell};
+use phi_spmv::util::bench::Bencher;
+use phi_spmv::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = args.get("scale", 0.05f64);
+    let bencher = Bencher::quick();
+    let suite = paper_suite();
+
+    // stencil (DIA-friendly), FEM (BCSR-friendly), web (ELL-hostile).
+    for idx in [19usize, 5, 7] {
+        let e = &suite[idx];
+        let mut a = e.generate_scaled(scale);
+        randomize_values(&mut a, e.id as u64);
+        let x = random_vector(a.ncols, 61);
+        let flops = 2.0 * a.nnz() as f64;
+        let want = a.spmv(&x);
+        let check = |y: &[f64]| {
+            y.iter().zip(&want).all(|(u, v)| (u - v).abs() < 1e-9 * (1.0 + v.abs()))
+        };
+
+        println!("== {} ({} rows, {} nnz) ==", e.name, a.nrows, a.nnz());
+        println!("{:<14} {:>14} {:>12} {:>8}", "format", "bytes", "GFlop/s", "ok");
+
+        let m = bencher.run("csr", || a.spmv(&x));
+        println!("{:<14} {:>14} {:>12.3} {:>8}", "csr", a.storage_bytes(), m.gflops(flops), "ref");
+
+        let ell = Ell::from_csr(&a, 0);
+        let m = bencher.run("ell", || ell.spmv(&x));
+        println!(
+            "{:<14} {:>14} {:>12.3} {:>8}",
+            format!("ell w{}", ell.width),
+            ell.padded_len() * 12,
+            m.gflops(flops),
+            check(&ell.spmv(&x))
+        );
+
+        let jds = Jds::from_csr(&a);
+        let m = bencher.run("jds", || jds.spmv(&x));
+        println!(
+            "{:<14} {:>14} {:>12.3} {:>8}",
+            "jds",
+            jds.vals.len() * 12 + jds.perm.len() * 4,
+            m.gflops(flops),
+            check(&jds.spmv(&x))
+        );
+
+        match Dia::from_csr(&a, 64) {
+            Some(dia) => {
+                let m = bencher.run("dia", || dia.spmv(&x));
+                println!(
+                    "{:<14} {:>14} {:>12.3} {:>8}",
+                    format!("dia d{}", dia.offsets.len()),
+                    dia.stored() * 8,
+                    m.gflops(flops),
+                    check(&dia.spmv(&x))
+                );
+            }
+            None => println!("{:<14} {:>14} {:>12} {:>8}", "dia", "overflow", "-", "-"),
+        }
+
+        let hyb = Hyb::from_csr(&a, 8);
+        let m = bencher.run("hyb", || hyb.spmv(&x));
+        println!(
+            "{:<14} {:>14} {:>12.3} {:>8}",
+            format!("hyb {:.0}%ell", 100.0 * hyb.regular_fraction(a.nnz())),
+            hyb.ell.padded_len() * 12 + hyb.coo.nnz() * 16,
+            m.gflops(flops),
+            check(&hyb.spmv(&x))
+        );
+
+        for (r, c) in [(8usize, 8usize), (8, 1)] {
+            let b = Bcsr::from_csr(&a, r, c);
+            let m = bencher.run("bcsr", || b.spmv(&x));
+            println!(
+                "{:<14} {:>14} {:>12.3} {:>8}",
+                format!("bcsr {r}x{c}"),
+                b.storage_bytes(),
+                m.gflops(flops),
+                check(&b.spmv(&x))
+            );
+            let bb = BitmapBcsr::from_csr(&a, r, c);
+            let m = bencher.run("bitmap", || bb.spmv(&x));
+            println!(
+                "{:<14} {:>14} {:>12.3} {:>8}",
+                format!("bitmap {r}x{c}"),
+                bb.storage_bytes(),
+                m.gflops(flops),
+                check(&bb.spmv(&x))
+            );
+        }
+        println!();
+    }
+}

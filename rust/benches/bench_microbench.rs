@@ -1,0 +1,55 @@
+//! Micro-benchmarks (paper Fig. 1 / Fig. 2).
+//!
+//! Measured: host read/write bandwidth with the same kernels the paper
+//! uses (char sum, vectorized f64 sum, fill), across thread counts.
+//! Modeled: the calibrated KNC curves at the paper's sweep points.
+//!
+//! `cargo bench --bench bench_microbench`
+
+use phi_spmv::kernels::micro::{
+    host_fill, host_sum_bytes, host_sum_f64, model_read, model_write, ReadBench, WriteBench,
+};
+use phi_spmv::util::bench::Bencher;
+
+fn main() {
+    let bencher = Bencher::new(3, 10);
+    let max_threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+
+    println!("== measured: host memory bandwidth ==");
+    let bytes: Vec<u8> = vec![1u8; 64 << 20];
+    let doubles: Vec<f64> = vec![1.5f64; 8 << 20];
+    let mut buf = vec![0.0f64; 8 << 20];
+    for t in [1usize, 2, 4, max_threads] {
+        if t > max_threads {
+            continue;
+        }
+        let m = bencher.run(&format!("char sum, {t} threads"), || host_sum_bytes(&bytes, t));
+        println!("{}  {:.2} GB/s", m.line(), m.gbps(bytes.len() as f64));
+        let m = bencher.run(&format!("f64 vector sum, {t} threads"), || host_sum_f64(&doubles, t));
+        println!("{}  {:.2} GB/s", m.line(), m.gbps((doubles.len() * 8) as f64));
+        let m = bencher.run(&format!("fill, {t} threads"), || host_fill(&mut buf, 2.0, t));
+        println!("{}  {:.2} GB/s", m.line(), m.gbps((buf.len() * 8) as f64));
+    }
+
+    println!("\n== modeled: KNC Fig. 1 read benches (61 cores) ==");
+    println!("{:<22} {:>8} {:>8} {:>8} {:>8}", "bench", "1t", "2t", "3t", "4t");
+    for (name, b) in [
+        ("a: char sum", ReadBench::SumChar),
+        ("b: int sum", ReadBench::SumInt),
+        ("c: vector sum", ReadBench::SumVector),
+        ("d: vector+prefetch", ReadBench::SumVectorPrefetch),
+    ] {
+        let g: Vec<f64> = (1..=4).map(|t| model_read(b, 61, t).gbps).collect();
+        println!("{name:<22} {:>8.1} {:>8.1} {:>8.1} {:>8.1}", g[0], g[1], g[2], g[3]);
+    }
+
+    println!("\n== modeled: KNC Fig. 2 write benches (61 cores) ==");
+    for (name, b) in [
+        ("a: store", WriteBench::Store),
+        ("b: store+NR", WriteBench::StoreNoRead),
+        ("c: store+NRNGO", WriteBench::StoreNrNgo),
+    ] {
+        let g: Vec<f64> = (1..=4).map(|t| model_write(b, 61, t).gbps).collect();
+        println!("{name:<22} {:>8.1} {:>8.1} {:>8.1} {:>8.1}", g[0], g[1], g[2], g[3]);
+    }
+}

@@ -1,0 +1,77 @@
+//! RCM ordering benchmarks (paper §4.4, Fig. 8).
+//!
+//! Measured: RCM computation time and the native-SpMV effect of the
+//! reordering on host hardware. Modeled: the KNC Fig. 8 deltas.
+//!
+//! `cargo bench --bench bench_ordering [-- --scale 0.05]`
+
+use phi_spmv::analysis::vector_traffic;
+use phi_spmv::arch::PhiMachine;
+use phi_spmv::kernels::spmv_model::{spmv_profile, SpmvAnalysis, SpmvVariant};
+use phi_spmv::kernels::spmv_parallel;
+use phi_spmv::sched::Policy;
+use phi_spmv::sparse::gen::{paper_suite, random_vector, randomize_values};
+use phi_spmv::sparse::ordering::{apply_symmetric_permutation, rcm};
+use phi_spmv::sparse::stats::{matrix_bandwidth, ucld};
+use phi_spmv::util::bench::Bencher;
+use phi_spmv::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = args.get("scale", 0.05f64);
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let bencher = Bencher::quick();
+    let machine = PhiMachine::se10p();
+    let suite = paper_suite();
+
+    println!(
+        "{:>2} {:<16} {:>9} {:>9} {:>8} {:>8} {:>9} {:>9} {:>10}",
+        "#", "name", "bw_pre", "bw_post", "ucld_pre", "ucld_post", "gfs_pre", "gfs_post", "rcm_ms"
+    );
+    // F1, cant, pre2, webbase: the paper's biggest winner, an already-local
+    // FEM, a circuit, and a web graph (RCM-hostile).
+    for idx in [16usize, 5, 10, 7] {
+        let e = &suite[idx];
+        let mut a = e.generate_scaled(scale);
+        randomize_values(&mut a, e.id as u64);
+        let m = bencher.run(&format!("rcm/{}", e.name), || rcm(&a));
+        let perm = rcm(&a);
+        let b = apply_symmetric_permutation(&a, &perm);
+
+        let gfs = |mat: &phi_spmv::sparse::Csr| {
+            let an = SpmvAnalysis::compute(mat, 61);
+            machine
+                .best_config(&spmv_profile(mat, SpmvVariant::O3, &an), &[60, 61])
+                .2
+                .gflops()
+        };
+        println!(
+            "{:>2} {:<16} {:>9} {:>9} {:>8.3} {:>8.3} {:>9.2} {:>9.2} {:>10.2}",
+            e.id,
+            e.name,
+            matrix_bandwidth(&a),
+            matrix_bandwidth(&b),
+            ucld(&a),
+            ucld(&b),
+            gfs(&a),
+            gfs(&b),
+            m.mean_s * 1e3
+        );
+
+        // Host-measured effect of reordering on the native kernel.
+        let x = random_vector(a.ncols, 5);
+        let flops = 2.0 * a.nnz() as f64;
+        let ma = bencher
+            .run(&format!("native/{}/orig", e.name), || spmv_parallel(&a, &x, threads, Policy::Dynamic(64)));
+        let xb = random_vector(b.ncols, 5);
+        let mb = bencher
+            .run(&format!("native/{}/rcm", e.name), || spmv_parallel(&b, &xb, threads, Policy::Dynamic(64)));
+        println!(
+            "    native: {:.3} → {:.3} GFlop/s; vector access {:.2} → {:.2}",
+            ma.gflops(flops),
+            mb.gflops(flops),
+            vector_traffic(&a, 61, 64, 8).vector_access(),
+            vector_traffic(&b, 61, 64, 8).vector_access()
+        );
+    }
+}

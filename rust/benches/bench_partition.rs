@@ -1,0 +1,56 @@
+//! Partitioning ablation — the paper's §7 future work, quantified:
+//! contiguous balanced partitioning vs round-robin `dynamic,64` chunking,
+//! measured by (a) total x-cachelines transferred across 61 simulated
+//! caches (the Vector Access driver) and (b) modeled KNC SpMV GFlop/s
+//! with the partitioned traffic.
+//!
+//! `cargo bench --bench bench_partition [-- --scale 0.05]`
+
+use phi_spmv::arch::PhiMachine;
+use phi_spmv::kernels::spmv_model::{spmv_profile, SpmvAnalysis, SpmvVariant};
+use phi_spmv::sched::{Policy, StaticAssignment};
+use phi_spmv::sparse::partition::{assignment_vector_lines, Partition};
+use phi_spmv::sparse::gen::{paper_suite, randomize_values};
+use phi_spmv::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = args.get("scale", 0.05f64);
+    let machine = PhiMachine::se10p();
+    let suite = paper_suite();
+
+    println!(
+        "{:>2} {:<16} {:>12} {:>12} {:>8} {:>10} {:>10} {:>9}",
+        "#", "name", "rr_lines", "part_lines", "saved", "rr GF/s", "part GF/s", "imbal"
+    );
+    for e in &suite {
+        let mut a = e.generate_scaled(scale);
+        randomize_values(&mut a, e.id as u64);
+        let rr = StaticAssignment::build(Policy::Dynamic(64), a.nrows, 61);
+        let part = Partition::contiguous_balanced(&a, 61);
+        let lines_rr = assignment_vector_lines(&a, &rr);
+        let lines_part = assignment_vector_lines(&a, &part.to_assignment());
+
+        // Model the effect: swap the traffic term in the -O3 profile.
+        let an = SpmvAnalysis::compute(&a, 61);
+        let w_rr = spmv_profile(&a, SpmvVariant::O3, &an);
+        let mut w_part = w_rr;
+        let ratio = lines_part as f64 / an.traffic.lines_infinite.max(1) as f64;
+        w_part.random_read_lines = (w_rr.random_read_lines * ratio).max(lines_part as f64 * 0.5);
+        w_part.imbalance = part.imbalance(&a).max(1.0);
+        let g_rr = machine.best_config(&w_rr, &[60, 61]).2.gflops();
+        let g_part = machine.best_config(&w_part, &[60, 61]).2.gflops();
+
+        println!(
+            "{:>2} {:<16} {:>12} {:>12} {:>7.0}% {:>10.2} {:>10.2} {:>9.2}",
+            e.id,
+            e.name,
+            lines_rr,
+            lines_part,
+            100.0 * (1.0 - lines_part as f64 / lines_rr.max(1) as f64),
+            g_rr,
+            g_part,
+            part.imbalance(&a)
+        );
+    }
+}

@@ -1,0 +1,59 @@
+//! SpMM benchmarks (paper §5, Fig. 9).
+//!
+//! Measured: native SpMM across k ∈ {1, 4, 8, 16, 32} showing the
+//! flop:byte-driven throughput growth (the paper's core §5 argument), and
+//! a policy sweep at k=16. Modeled: the KNC Fig. 9 variant triple.
+//!
+//! `cargo bench --bench bench_spmm [-- --scale 0.05]`
+
+use phi_spmv::arch::PhiMachine;
+use phi_spmv::kernels::spmm_model::{spmm_profile, SpmmAnalysis, SpmmVariant};
+use phi_spmv::kernels::{spmm_parallel, spmv_parallel};
+use phi_spmv::sched::Policy;
+use phi_spmv::sparse::gen::{paper_suite, random_vector, randomize_values};
+use phi_spmv::util::bench::Bencher;
+use phi_spmv::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = args.get("scale", 0.05f64);
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let bencher = Bencher::quick();
+    let suite = paper_suite();
+
+    // pwtk — the paper's SpMM peak instance.
+    let e = &suite[11];
+    let mut a = e.generate_scaled(scale);
+    randomize_values(&mut a, 12);
+
+    println!("== measured: native SpMM on {} ({} nnz), {threads} threads ==", e.name, a.nnz());
+    let x1 = random_vector(a.ncols, 4);
+    let m1 = bencher.run("spmv (k=1 baseline)", || {
+        spmv_parallel(&a, &x1, threads, Policy::Dynamic(64))
+    });
+    println!("{}  {:.3} GFlop/s", m1.line(), m1.gflops(2.0 * a.nnz() as f64));
+    for k in [4usize, 8, 16, 32] {
+        let x = random_vector(a.ncols * k, 4);
+        let m = bencher.run(&format!("spmm k={k}"), || {
+            spmm_parallel(&a, &x, k, threads, Policy::Dynamic(64))
+        });
+        println!("{}  {:.3} GFlop/s", m.line(), m.gflops(2.0 * a.nnz() as f64 * k as f64));
+    }
+
+    println!("\n== modeled: KNC Fig. 9 (k=16) ==");
+    let machine = PhiMachine::se10p();
+    println!(
+        "{:>2} {:<16} {:>9} {:>9} {:>9}",
+        "#", "name", "generic", "manual", "nrngo"
+    );
+    for e in &suite {
+        let mut a = e.generate_scaled(scale);
+        randomize_values(&mut a, e.id as u64);
+        let an = SpmmAnalysis::compute(&a, 61, 16);
+        let g: Vec<f64> = [SpmmVariant::Generic, SpmmVariant::Manual, SpmmVariant::Nrngo]
+            .into_iter()
+            .map(|v| machine.best_config(&spmm_profile(&a, v, &an), &[60, 61]).2.gflops())
+            .collect();
+        println!("{:>2} {:<16} {:>9.1} {:>9.1} {:>9.1}", e.id, e.name, g[0], g[1], g[2]);
+    }
+}

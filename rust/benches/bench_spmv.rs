@@ -1,0 +1,102 @@
+//! SpMV benchmarks (paper Fig. 4 / Fig. 5 / Fig. 6).
+//!
+//! Two parts:
+//! * **measured** — the native Rust kernel on host hardware, across
+//!   representative suite matrices, thread counts and scheduling policies
+//!   (the paper's §4.1 sweep);
+//! * **modeled** — the calibrated KNC model regenerating the paper's
+//!   Fig. 4 rows (-O1 vs -O3 GFlop/s per matrix).
+//!
+//! `cargo bench --bench bench_spmv [-- --scale 0.05]`
+
+use phi_spmv::analysis::app_bytes_spmv;
+use phi_spmv::arch::PhiMachine;
+use phi_spmv::kernels::spmv_model::{spmv_profile, SpmvAnalysis, SpmvVariant};
+use phi_spmv::kernels::spmv_parallel;
+use phi_spmv::sched::Policy;
+use phi_spmv::sparse::gen::{paper_suite, random_vector, randomize_values};
+use phi_spmv::util::bench::Bencher;
+use phi_spmv::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = args.get("scale", 0.05f64);
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let bencher = Bencher::quick();
+    let suite = paper_suite();
+
+    println!("== measured: native SpMV, {threads} threads, scale {scale} ==");
+    // Representative picks: stencil / FEM / web / scattered / dense-rows.
+    for idx in [19usize, 11, 7, 3, 17] {
+        let e = &suite[idx];
+        let mut a = e.generate_scaled(scale);
+        randomize_values(&mut a, e.id as u64);
+        let x = random_vector(a.ncols, 3);
+        let flops = 2.0 * a.nnz() as f64;
+        for policy in [Policy::StaticBlock, Policy::Dynamic(32), Policy::Dynamic(64)] {
+            let m = bencher.run(&format!("spmv/{}/{policy}", e.name), || {
+                spmv_parallel(&a, &x, threads, policy)
+            });
+            println!(
+                "{}  {:.3} GFlop/s  app {:.2} GB/s",
+                m.line(),
+                m.gflops(flops),
+                m.gbps(app_bytes_spmv(&a))
+            );
+        }
+    }
+
+    // §Perf ablation: rolled vs unrolled inner loop, allocation on/off the
+    // hot path, chunk-size sweep.
+    println!("\n== §Perf ablation (pwtk class, serial + threaded) ==");
+    {
+        let e = &suite[11];
+        let mut a = e.generate_scaled(scale.max(0.1));
+        phi_spmv::sparse::gen::randomize_values(&mut a, 12);
+        let x = random_vector(a.ncols, 9);
+        let flops = 2.0 * a.nnz() as f64;
+        let mut y = vec![0.0; a.nrows];
+        let m0 = bencher.run("rolled serial (before)", || {
+            phi_spmv::kernels::native::spmv_serial_rolled(&a, &x, &mut y)
+        });
+        println!("{}  {:.3} GFlop/s", m0.line(), m0.gflops(flops));
+        let m1 = bencher.run("unrolled serial (after)", || {
+            phi_spmv::kernels::spmv_parallel_into(&a, &x, &mut y, 1, Policy::Dynamic(64))
+        });
+        println!("{}  {:.3} GFlop/s  ({:+.1}%)", m1.line(), m1.gflops(flops),
+            100.0 * (m0.mean_s / m1.mean_s - 1.0));
+        let m2 = bencher.run("alloc per call (before)", || {
+            spmv_parallel(&a, &x, threads, Policy::Dynamic(64))
+        });
+        println!("{}  {:.3} GFlop/s", m2.line(), m2.gflops(flops));
+        let m3 = bencher.run("into-buffer (after)", || {
+            phi_spmv::kernels::spmv_parallel_into(&a, &x, &mut y, threads, Policy::Dynamic(64))
+        });
+        println!("{}  {:.3} GFlop/s  ({:+.1}%)", m3.line(), m3.gflops(flops),
+            100.0 * (m2.mean_s / m3.mean_s - 1.0));
+        for chunk in [16usize, 64, 256, 1024] {
+            let m = bencher.run(&format!("chunk {chunk}"), || {
+                phi_spmv::kernels::spmv_parallel_into(&a, &x, &mut y, threads, Policy::Dynamic(chunk))
+            });
+            println!("{}  {:.3} GFlop/s", m.line(), m.gflops(flops));
+        }
+    }
+
+    println!("\n== modeled: KNC Fig. 4 (-O1 vs -O3), scale {scale} ==");
+    let machine = PhiMachine::se10p();
+    println!("{:>2} {:<16} {:>10} {:>10} {:>8}", "#", "name", "o1 GF/s", "o3 GF/s", "x");
+    for e in &suite {
+        let mut a = e.generate_scaled(scale);
+        randomize_values(&mut a, e.id as u64);
+        let an = SpmvAnalysis::compute(&a, 61);
+        let g1 = machine
+            .best_config(&spmv_profile(&a, SpmvVariant::O1, &an), &[60, 61])
+            .2
+            .gflops();
+        let g3 = machine
+            .best_config(&spmv_profile(&a, SpmvVariant::O3, &an), &[60, 61])
+            .2
+            .gflops();
+        println!("{:>2} {:<16} {:>10.2} {:>10.2} {:>8.2}", e.id, e.name, g1, g3, g3 / g1);
+    }
+}

@@ -1,0 +1,114 @@
+//! `vgatherd` issue counting (paper §4.1).
+//!
+//! The -O3 inner loop processes 8 nonzeros per vector iteration; fetching
+//! the 8 input-vector elements requires one `vgatherd` *per distinct
+//! cacheline* among the 8 column indices. We count those exactly: the
+//! instruction stream of the vectorized kernel is therefore a function of
+//! the matrix pattern, which is how UCLD ends up correlated with the -O3
+//! speedup (Fig. 5).
+
+use crate::sparse::{Csr, DOUBLES_PER_CACHELINE};
+
+/// Exact instruction-relevant gather statistics of a matrix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GatherStats {
+    /// Number of 8-nonzero vector iterations (Σ ⌈row/8⌉).
+    pub vector_iters: u64,
+    /// Total `vgatherd` issues (Σ distinct lines per 8-group).
+    pub gather_issues: u64,
+    /// Mean gathers per vector iteration ∈ [1, 8].
+    pub gathers_per_iter: f64,
+}
+
+/// Counts vector iterations and `vgatherd` issues over all rows.
+pub fn gather_stats(a: &Csr) -> GatherStats {
+    let mut vector_iters = 0u64;
+    let mut gather_issues = 0u64;
+    for i in 0..a.nrows {
+        let cids = a.row_cids(i);
+        for group in cids.chunks(DOUBLES_PER_CACHELINE) {
+            vector_iters += 1;
+            // Columns are sorted within a row → distinct lines by scan.
+            let mut last = u32::MAX;
+            for &c in group {
+                let line = c / DOUBLES_PER_CACHELINE as u32;
+                if line != last {
+                    gather_issues += 1;
+                    last = line;
+                }
+            }
+        }
+    }
+    let gpi = if vector_iters == 0 { 0.0 } else { gather_issues as f64 / vector_iters as f64 };
+    GatherStats { vector_iters, gather_issues, gathers_per_iter: gpi }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn row_matrix(cols: &[u32]) -> Csr {
+        let mut coo = Coo::new(1, 1 + *cols.iter().max().unwrap_or(&0) as usize);
+        for &c in cols {
+            coo.push(0, c as usize, 1.0);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn packed_row_one_gather_per_group() {
+        let a = row_matrix(&[0, 1, 2, 3, 4, 5, 6, 7]);
+        let g = gather_stats(&a);
+        assert_eq!(g.vector_iters, 1);
+        assert_eq!(g.gather_issues, 1);
+    }
+
+    #[test]
+    fn scattered_row_eight_gathers() {
+        // Each of the 8 columns on a different line.
+        let a = row_matrix(&[0, 8, 16, 24, 32, 40, 48, 56]);
+        let g = gather_stats(&a);
+        assert_eq!(g.vector_iters, 1);
+        assert_eq!(g.gather_issues, 8);
+        assert_eq!(g.gathers_per_iter, 8.0);
+    }
+
+    #[test]
+    fn partial_last_group() {
+        // 11 nonzeros → 2 groups (8 + 3).
+        let a = row_matrix(&[0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10]);
+        let g = gather_stats(&a);
+        assert_eq!(g.vector_iters, 2);
+        // group 1: line 0 → 1 gather; group 2: cols 8..10 → line 1 → 1.
+        assert_eq!(g.gather_issues, 2);
+    }
+
+    #[test]
+    fn paper_example_row() {
+        // Columns {0, 19, 20}: one group, lines {0, 2} → 2 gathers.
+        let a = row_matrix(&[0, 19, 20]);
+        let g = gather_stats(&a);
+        assert_eq!(g.gather_issues, 2);
+    }
+
+    #[test]
+    fn gathers_track_ucld_inverse() {
+        use crate::sparse::gen::banded::{banded_runs, BandedSpec};
+        let packed =
+            banded_runs(&BandedSpec { n: 2000, mean_row: 16.0, run: 8, locality: 0.05, seed: 1 });
+        let scattered =
+            banded_runs(&BandedSpec { n: 2000, mean_row: 16.0, run: 1, locality: 0.05, seed: 1 });
+        let gp = gather_stats(&packed);
+        let gs = gather_stats(&scattered);
+        assert!(gp.gathers_per_iter < gs.gathers_per_iter);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let a = Coo::new(3, 3).to_csr();
+        let g = gather_stats(&a);
+        assert_eq!(g.vector_iters, 0);
+        assert_eq!(g.gathers_per_iter, 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Bandwidth and traffic analysis (paper §4.2).
+//!
+//! Implements the paper's three bandwidth accountings for SpMV/SpMM —
+//! naive, application, and *estimated actual* (per-core input-vector
+//! traffic under round-robin 64-row chunks, with an infinite or a 512 kB
+//! cache) — plus the per-8-nonzero `vgatherd` issue counts the -O3 kernel
+//! model needs, and the Vector Access metric of Fig. 8.
+
+pub mod bandwidth;
+pub mod gather;
+
+pub use bandwidth::{
+    actual_bytes_spmv_finite, actual_bytes_spmv_infinite, app_bytes_spmm, app_bytes_spmv,
+    naive_bytes_spmv, vector_traffic, VectorTraffic,
+};
+pub use gather::{gather_stats, GatherStats};

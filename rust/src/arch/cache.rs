@@ -1,0 +1,167 @@
+//! Set-associative LRU cache simulator.
+//!
+//! Used for the paper's §4.2 finite-cache analysis: how many input-vector
+//! cachelines does each core actually transfer when its private L2 is only
+//! 512 kB? (The paper finds: essentially the same as with an infinite
+//! cache — "no cache thrashing occurs".)
+
+use crate::sparse::CACHELINE_BYTES;
+
+/// A set-associative LRU cache over 64-byte lines, counting hits/misses.
+#[derive(Debug, Clone)]
+pub struct SetAssocCache {
+    sets: Vec<Vec<u64>>, // per-set LRU stack, most-recent last
+    ways: usize,
+    set_mask: u64,
+    /// Number of accesses that hit.
+    pub hits: u64,
+    /// Number of accesses that missed (→ a line transfer).
+    pub misses: u64,
+}
+
+impl SetAssocCache {
+    /// Creates a cache of `capacity_bytes` with `ways` associativity.
+    /// The set count is rounded down to a power of two.
+    pub fn new(capacity_bytes: usize, ways: usize) -> Self {
+        let lines = (capacity_bytes / CACHELINE_BYTES).max(1);
+        let raw = (lines / ways).max(1);
+        // Round down to a power of two for cheap set indexing.
+        let sets = 1usize << (usize::BITS - 1 - raw.leading_zeros());
+        SetAssocCache {
+            sets: vec![Vec::with_capacity(ways); sets],
+            ways,
+            set_mask: sets as u64 - 1,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// The KNC per-core L2: 512 kB, 8-way.
+    pub fn knc_l2() -> Self {
+        SetAssocCache::new(512 * 1024, 8)
+    }
+
+    /// Accesses the line containing byte address `addr`; returns `true` on
+    /// hit.
+    #[inline]
+    pub fn access(&mut self, addr: u64) -> bool {
+        let line = addr / CACHELINE_BYTES as u64;
+        let set = &mut self.sets[(line & self.set_mask) as usize];
+        if let Some(pos) = set.iter().position(|&l| l == line) {
+            set.remove(pos);
+            set.push(line);
+            self.hits += 1;
+            true
+        } else {
+            if set.len() == self.ways {
+                set.remove(0); // evict LRU
+            }
+            set.push(line);
+            self.misses += 1;
+            false
+        }
+    }
+
+    /// Accesses the line of element `index` in an array of `elem_bytes`
+    /// element size starting at byte offset `base`.
+    #[inline]
+    pub fn access_elem(&mut self, base: u64, index: usize, elem_bytes: usize) -> bool {
+        self.access(base + (index * elem_bytes) as u64)
+    }
+
+    /// Clears contents and counters.
+    pub fn reset(&mut self) {
+        for s in &mut self.sets {
+            s.clear();
+        }
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+/// Counts the distinct cachelines touched by `indices` into an array of
+/// `elem_bytes`-sized elements — the infinite-cache transfer count.
+pub fn distinct_lines(indices: impl IntoIterator<Item = usize>, elem_bytes: usize) -> usize {
+    let mut lines: Vec<u64> =
+        indices.into_iter().map(|i| (i * elem_bytes) as u64 / CACHELINE_BYTES as u64).collect();
+    lines.sort_unstable();
+    lines.dedup();
+    lines.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeated_access_hits() {
+        let mut c = SetAssocCache::new(4096, 4);
+        assert!(!c.access(0));
+        assert!(c.access(8)); // same line
+        assert!(c.access(63));
+        assert!(!c.access(64)); // next line
+        assert_eq!(c.misses, 2);
+        assert_eq!(c.hits, 2);
+    }
+
+    #[test]
+    fn lru_eviction_within_set() {
+        // 4 lines capacity, 1 way → 4 sets; lines mapping to the same set
+        // (stride = sets*64) evict each other.
+        let mut c = SetAssocCache::new(256, 1);
+        let stride = 4 * 64u64;
+        assert!(!c.access(0));
+        assert!(!c.access(stride)); // evicts line 0
+        assert!(!c.access(0)); // miss again
+        assert_eq!(c.misses, 3);
+    }
+
+    #[test]
+    fn associativity_retains_conflicting_lines() {
+        // Same total size, 2-way: two conflicting lines now co-reside.
+        let mut c = SetAssocCache::new(256, 2);
+        let stride = 2 * 64u64;
+        assert!(!c.access(0));
+        assert!(!c.access(stride));
+        assert!(c.access(0));
+        assert!(c.access(stride));
+    }
+
+    #[test]
+    fn capacity_bounds_working_set() {
+        // Stream 16 kB twice through an 8 kB cache: second pass still misses.
+        let mut c = SetAssocCache::new(8 * 1024, 8);
+        for pass in 0..2 {
+            for i in 0..256 {
+                c.access(i * 64);
+            }
+            let _ = pass;
+        }
+        assert!(c.misses > 256, "misses {}", c.misses);
+        // And a 4 kB working set fits: second pass all hits.
+        let mut c2 = SetAssocCache::new(8 * 1024, 8);
+        for _ in 0..2 {
+            for i in 0..64 {
+                c2.access(i * 64);
+            }
+        }
+        assert_eq!(c2.misses, 64);
+        assert_eq!(c2.hits, 64);
+    }
+
+    #[test]
+    fn distinct_lines_counts() {
+        // 8 doubles per line: indices 0..8 on one line, 8 on the next.
+        assert_eq!(distinct_lines([0, 1, 7], 8), 1);
+        assert_eq!(distinct_lines([0, 8], 8), 2);
+        assert_eq!(distinct_lines([0, 19, 20], 8), 2); // the paper's example
+        assert_eq!(distinct_lines(std::iter::empty(), 8), 0);
+    }
+
+    #[test]
+    fn knc_l2_shape() {
+        let c = SetAssocCache::knc_l2();
+        assert_eq!(c.ways, 8);
+        assert_eq!(c.sets.len(), 1024);
+    }
+}

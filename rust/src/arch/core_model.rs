@@ -1,0 +1,114 @@
+//! In-order dual-pipe core issue model (KNC).
+//!
+//! The paper's §2 description, encoded:
+//! * a core holds 4 hardware contexts and **never issues two consecutive
+//!   cycles from the same context** — one thread alone wastes half the
+//!   cycles;
+//! * two pipelines (U/V) can pair two instructions per cycle, but at most
+//!   **one** vector/FP instruction per cycle (two ALU ops can pair);
+//! * hence the Fig. 1 "No Pairing" (1 instr/cycle) and "Full Pairing"
+//!   (2 instr/cycle) effective-bandwidth bounds.
+
+/// Instruction mix of one kernel iteration (loop body).
+#[derive(Debug, Clone, Copy)]
+pub struct InstrMix {
+    /// Total instructions per iteration.
+    pub instructions: f64,
+    /// Fraction of instructions that can pair into the second pipe
+    /// (0 = "No Pairing" behaviour, 1 = "Full Pairing").
+    pub pairable: f64,
+}
+
+impl InstrMix {
+    /// Effective instructions-per-cycle on one core given the thread count,
+    /// before memory effects.
+    ///
+    /// `threads == 1` halves issue (no back-to-back same-context issue);
+    /// pairing raises throughput toward 2/cycle.
+    pub fn ipc(&self, threads: usize) -> f64 {
+        let base = if threads <= 1 { 0.5 } else { 1.0 };
+        base * (1.0 + self.pairable.clamp(0.0, 1.0))
+    }
+
+    /// Cycles to retire `iters` iterations on one core with `threads`
+    /// contexts.
+    pub fn cycles(&self, iters: f64, threads: usize) -> f64 {
+        iters * self.instructions / self.ipc(threads)
+    }
+}
+
+/// Issue model of a whole core grid.
+#[derive(Debug, Clone, Copy)]
+pub struct IssueModel {
+    /// Core clock in Hz (KNC SE10P: 1.05 GHz).
+    pub freq_hz: f64,
+}
+
+impl IssueModel {
+    /// Seconds to retire `iters` iterations of `mix` on one core.
+    pub fn time_one_core(&self, mix: InstrMix, iters: f64, threads: usize) -> f64 {
+        mix.cycles(iters, threads) / self.freq_hz
+    }
+
+    /// Peak effective bandwidth of an instruction-bound streaming loop that
+    /// moves `bytes_per_iter` with `mix`, across `cores` — the Fig. 1(a/b)
+    /// upper-bound lines.
+    pub fn stream_bound_gbps(
+        &self,
+        mix: InstrMix,
+        bytes_per_iter: f64,
+        cores: usize,
+        threads: usize,
+    ) -> f64 {
+        let iters_per_s = self.freq_hz * mix.ipc(threads) / mix.instructions;
+        iters_per_s * bytes_per_iter * cores as f64 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KNC: IssueModel = IssueModel { freq_hz: 1.05e9 };
+
+    #[test]
+    fn single_thread_wastes_half() {
+        let mix = InstrMix { instructions: 4.0, pairable: 0.0 };
+        assert_eq!(mix.ipc(1), 0.5);
+        assert_eq!(mix.ipc(2), 1.0);
+        assert_eq!(mix.ipc(4), 1.0);
+    }
+
+    #[test]
+    fn pairing_doubles_throughput() {
+        let mix = InstrMix { instructions: 4.0, pairable: 1.0 };
+        assert_eq!(mix.ipc(2), 2.0);
+    }
+
+    #[test]
+    fn fig1a_char_sum_bound() {
+        // Paper Fig. 1(a): 5 instructions per char; the No-Pairing bound at
+        // 61 cores is 61 × 1.05 GHz / 5 ≈ 12.8 GB/s — and the measured peak
+        // was 12 GB/s.
+        let mix = InstrMix { instructions: 5.0, pairable: 0.0 };
+        let bound = KNC.stream_bound_gbps(mix, 1.0, 61, 2);
+        assert!((bound - 12.81).abs() < 0.01, "{bound}");
+    }
+
+    #[test]
+    fn fig1b_int_sum_bound() {
+        // Paper Fig. 1(b): 4 instructions per 4-byte int → 64 GB/s bound at
+        // 61 cores; measured peak 60 GB/s.
+        let mix = InstrMix { instructions: 4.0, pairable: 0.0 };
+        let bound = KNC.stream_bound_gbps(mix, 4.0, 61, 4);
+        assert!((bound - 64.05).abs() < 0.01, "{bound}");
+    }
+
+    #[test]
+    fn cycles_scale_with_iters() {
+        let mix = InstrMix { instructions: 6.0, pairable: 0.5 };
+        let c1 = mix.cycles(100.0, 4);
+        let c2 = mix.cycles(200.0, 4);
+        assert!((c2 / c1 - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,196 @@
+//! GPU baselines: NVIDIA Tesla C2050 (Fermi) and K20 (Kepler) running
+//! cuSPARSE-style CSR kernels, as in the paper's §6.
+//!
+//! cuSPARSE's CSR SpMV assigns a warp (32 threads) per row; performance is
+//! governed by (a) effective memory bandwidth under ECC, (b) warp-lane
+//! utilization on short rows (rows shorter than 32 idle most lanes), and
+//! (c) coalescing of the x gathers. All three derive from row-length
+//! statistics we compute exactly.
+
+use super::{Bottleneck, Estimate};
+
+/// A GPU configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    /// Human name.
+    pub name: &'static str,
+    /// Effective device bandwidth with ECC on (B/s).
+    pub mem_bw: f64,
+    /// Peak DP flops (B/s).
+    pub peak_flops: f64,
+    /// Warp size.
+    pub warp: usize,
+    /// Kernel-launch + reduction overhead per SpMV call (s).
+    pub launch_overhead_s: f64,
+    /// Relative maturity of the cuSPARSE SpMM path (the paper finds GPU
+    /// SpMM underwhelming vs. its SpMV: K20 never reaches 60 GFlop/s).
+    pub spmm_efficiency: f64,
+}
+
+impl GpuSpec {
+    /// Tesla C2050, ECC on: 144 GB/s raw ≈ 105 GB/s effective.
+    pub fn c2050() -> Self {
+        GpuSpec {
+            name: "C2050",
+            mem_bw: 105e9,
+            peak_flops: 515e9,
+            warp: 32,
+            launch_overhead_s: 12e-6,
+            spmm_efficiency: 0.55,
+        }
+    }
+
+    /// Tesla K20, ECC on: 208 GB/s raw ≈ 150 GB/s effective.
+    pub fn k20() -> Self {
+        GpuSpec {
+            name: "K20",
+            mem_bw: 150e9,
+            peak_flops: 1170e9,
+            warp: 32,
+            launch_overhead_s: 8e-6,
+            spmm_efficiency: 0.65,
+        }
+    }
+
+    /// Warp-lane utilization of CSR-vector over the row-length histogram:
+    /// a row of length ℓ occupies ⌈ℓ/32⌉ warp-iterations; utilization is
+    /// useful lanes / issued lanes.
+    pub fn warp_utilization(&self, row_lengths: impl IntoIterator<Item = usize>) -> f64 {
+        let mut useful = 0f64;
+        let mut issued = 0f64;
+        for l in row_lengths {
+            useful += l as f64;
+            issued += (l.div_ceil(self.warp).max(1) * self.warp) as f64;
+        }
+        if issued == 0.0 {
+            return 1.0;
+        }
+        useful / issued
+    }
+
+    /// SpMV estimate.
+    ///
+    /// * `row_utilization` — from [`Self::warp_utilization`];
+    /// * `gather_eff` — coalescing efficiency of x gathers ∈ (0, 1],
+    ///   derived from UCLD (consecutive columns coalesce);
+    /// * `app_bytes` — the paper's application-byte metric.
+    pub fn spmv_estimate(
+        &self,
+        nnz: usize,
+        nrows: usize,
+        row_utilization: f64,
+        gather_eff: f64,
+        app_bytes: f64,
+    ) -> Estimate {
+        let flops = 2.0 * nnz as f64;
+        // Matrix stream is perfectly coalesced; warp divergence wastes
+        // issued bandwidth ∝ 1/utilization, but cuSPARSE mitigates short
+        // rows (row-per-thread fallback, multiple rows per warp) — floor
+        // the effective utilization at 0.5. x gathers ride the device L2 +
+        // massive thread-level parallelism, so scattered access costs far
+        // less than a full line per element — floor the coalescing
+        // efficiency at 0.4. (This is why the paper's K20 never drops
+        // below 4.9 GFlop/s even on webbase-1M.)
+        let stream = (12.0 * nnz as f64) / row_utilization.max(0.5)
+            + 12.0 * nrows as f64; // rptrs + y
+        let gathers = nnz as f64 * 8.0 / gather_eff.max(0.4);
+        let t_mem = (stream + gathers) / self.mem_bw;
+        let t_core = flops / (self.peak_flops * 0.35); // issue-bound floor
+        let time = t_mem.max(t_core) + self.launch_overhead_s;
+        Estimate {
+            time_s: time,
+            flops,
+            app_bytes,
+            bottleneck: if t_mem >= t_core {
+                Bottleneck::DramBandwidth
+            } else {
+                Bottleneck::InstructionIssue
+            },
+        }
+    }
+
+    /// SpMM estimate (k dense vectors, row-major X).
+    pub fn spmm_estimate(
+        &self,
+        nnz: usize,
+        nrows: usize,
+        k: usize,
+        row_utilization: f64,
+        app_bytes: f64,
+    ) -> Estimate {
+        let flops = 2.0 * nnz as f64 * k as f64;
+        // X rows are contiguous (coalesce well); reuse through L2 is weak
+        // on these parts, so X traffic ≈ k·8 bytes per nnz, discounted by
+        // the spmm_efficiency maturity factor.
+        let stream = (12.0 * nnz as f64) / row_utilization.max(0.05)
+            + 8.0 * k as f64 * nnz as f64 * 0.6
+            + 8.0 * k as f64 * nrows as f64 * 2.0;
+        let t_mem = stream / (self.mem_bw * self.spmm_efficiency);
+        let t_core = flops / (self.peak_flops * 0.5);
+        let time = t_mem.max(t_core) + self.launch_overhead_s;
+        Estimate {
+            time_s: time,
+            flops,
+            app_bytes,
+            bottleneck: if t_mem >= t_core {
+                Bottleneck::DramBandwidth
+            } else {
+                Bottleneck::InstructionIssue
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warp_utilization_short_rows_poor() {
+        let g = GpuSpec::k20();
+        // All rows length 4: 4/32 lanes useful.
+        let u = g.warp_utilization(std::iter::repeat(4).take(100));
+        assert!((u - 0.125).abs() < 1e-12);
+        // Rows of length 64 are fully utilized.
+        let u2 = g.warp_utilization(std::iter::repeat(64).take(100));
+        assert!((u2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn k20_beats_c2050_spmv() {
+        // Paper: K20 faster on 18/22 instances, 4.9–13.2 GFlop/s.
+        let nnz = 6_000_000usize;
+        let nrows = 220_000usize;
+        let app = 12.0 * nnz as f64 + 20.0 * nrows as f64;
+        let k20 = GpuSpec::k20().spmv_estimate(nnz, nrows, 0.8, 0.5, app);
+        let c = GpuSpec::c2050().spmv_estimate(nnz, nrows, 0.8, 0.5, app);
+        assert!(k20.gflops() > c.gflops());
+        assert!((4.0..14.5).contains(&k20.gflops()), "k20 {}", k20.gflops());
+    }
+
+    #[test]
+    fn gpu_spmm_stays_below_60() {
+        // Paper: "the GPU configurations never achieve [60 GFlop/s]" on SpMM.
+        let nnz = 14_000_000usize;
+        let nrows = 72_000usize;
+        let app = 12.0 * nnz as f64 + 8.0 * 32.0 * nrows as f64;
+        for g in [GpuSpec::c2050(), GpuSpec::k20()] {
+            let e = g.spmm_estimate(nnz, nrows, 16, 0.9, app);
+            assert!(e.gflops() < 60.0, "{} spmm {}", g.name, e.gflops());
+            assert!(e.gflops() > 5.0, "{} spmm {}", g.name, e.gflops());
+        }
+    }
+
+    #[test]
+    fn short_rows_hurt_gpu_more_than_long() {
+        let nnz = 3_000_000usize;
+        let nrows = 1_000_000usize;
+        let app = 12.0 * nnz as f64 + 20.0 * nrows as f64;
+        let g = GpuSpec::k20();
+        let short = g.spmv_estimate(nnz, nrows, 0.1, 0.3, app);
+        let long = g.spmv_estimate(nnz, nrows / 100, 0.9, 0.3, app);
+        // The mitigation floors temper the gap, but long rows still win
+        // (the paper's K20 spans 4.9–13.2 GFlop/s, a 2.7× spread).
+        assert!(long.gflops() > short.gflops() * 1.3, "{} vs {}", long.gflops(), short.gflops());
+    }
+}

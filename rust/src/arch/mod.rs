@@ -1,0 +1,90 @@
+//! Machine models.
+//!
+//! We have no Xeon Phi / Westmere / Sandy Bridge / Tesla silicon, so every
+//! architecture the paper measures is replaced by an *analytic performance
+//! model* — the same first-order analysis the paper itself uses to explain
+//! its measurements (instruction-issue bounds, latency-hiding by hardware
+//! threads, per-core link / ring / DRAM bandwidth ceilings). Constants are
+//! calibrated once against the paper's micro-benchmarks (Figs. 1–2) and
+//! then *fixed*; every kernel estimate derives from matrix pattern metrics
+//! computed exactly on our side (UCLD, vgatherd line counts, per-core
+//! vector traffic under round-robin chunking). See DESIGN.md §2.
+//!
+//! * [`cache`] — set-associative LRU cache simulator (finite-cache vector
+//!   traffic, §4.2's 512 kB analysis).
+//! * [`core_model`] — in-order dual-pipe issue model with 4 hardware
+//!   contexts (the "No Pairing"/"Full Pairing" bounds of Fig. 1).
+//! * [`mem`] — latency/bandwidth memory-system model (per-core link, ring,
+//!   DRAM, prefetch depth).
+//! * [`phi`] — the assembled Xeon Phi SE10P (KNC) machine.
+//! * [`cpu`] — Westmere (2× X5680) and Sandy Bridge (2× E5-2670) baselines.
+//! * [`gpu`] — Tesla C2050 and K20 + cuSPARSE-style CSR kernels.
+
+pub mod cache;
+pub mod core_model;
+pub mod cpu;
+pub mod gpu;
+pub mod mem;
+pub mod phi;
+
+pub use cache::SetAssocCache;
+pub use core_model::{InstrMix, IssueModel};
+pub use mem::MemSystem;
+pub use phi::PhiMachine;
+
+/// What limits a kernel on a machine — the attribution the paper spends
+/// §4.2 establishing ("it is the memory latency, not the bandwidth").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Bottleneck {
+    /// Core instruction issue (Fig. 1a/1b: scalar sums).
+    InstructionIssue,
+    /// Exposed memory latency not hidden by hardware threads (most SpMV).
+    MemoryLatency,
+    /// Per-core link bandwidth ceiling.
+    CoreBandwidth,
+    /// Ring interconnect ceiling.
+    RingBandwidth,
+    /// Aggregate DRAM bandwidth ceiling (SpMM, dense streams).
+    DramBandwidth,
+    /// Store ordering / write-buffer drain (Fig. 2a/2b).
+    StoreOrdering,
+}
+
+impl std::fmt::Display for Bottleneck {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Bottleneck::InstructionIssue => "instruction-issue",
+            Bottleneck::MemoryLatency => "memory-latency",
+            Bottleneck::CoreBandwidth => "core-bandwidth",
+            Bottleneck::RingBandwidth => "ring-bandwidth",
+            Bottleneck::DramBandwidth => "dram-bandwidth",
+            Bottleneck::StoreOrdering => "store-ordering",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A performance estimate for one kernel execution on one machine config.
+#[derive(Debug, Clone)]
+pub struct Estimate {
+    /// Predicted wall time in seconds.
+    pub time_s: f64,
+    /// Floating point operations performed.
+    pub flops: f64,
+    /// Application bytes (the paper's cross-architecture bandwidth metric).
+    pub app_bytes: f64,
+    /// What bound the execution.
+    pub bottleneck: Bottleneck,
+}
+
+impl Estimate {
+    /// GFlop/s of the estimate.
+    pub fn gflops(&self) -> f64 {
+        self.flops / self.time_s / 1e9
+    }
+
+    /// Application bandwidth in GB/s.
+    pub fn app_gbps(&self) -> f64 {
+        self.app_bytes / self.time_s / 1e9
+    }
+}

@@ -1,0 +1,645 @@
+//! One driver per paper table/figure.
+
+use crate::analysis::{
+    actual_bytes_spmv_finite, actual_bytes_spmv_infinite, app_bytes_spmm, app_bytes_spmv,
+    naive_bytes_spmv, vector_traffic,
+};
+use crate::arch::cpu::CpuSpec;
+use crate::arch::gpu::GpuSpec;
+use crate::arch::PhiMachine;
+use crate::kernels::blocked_model::bcsr_profile;
+use crate::kernels::micro::{model_read, model_write, ring_core_bound_gbps, ReadBench, WriteBench};
+use crate::kernels::spmm_model::{spmm_profile, SpmmAnalysis, SpmmVariant};
+use crate::kernels::spmv_model::{spmv_profile, SpmvAnalysis, SpmvVariant};
+use crate::sparse::bcsr::PAPER_BLOCK_CONFIGS;
+use crate::sparse::gen::{paper_suite, randomize_values, SuiteEntry};
+use crate::sparse::ordering::{apply_symmetric_permutation, rcm};
+use crate::sparse::stats::{ucld, MatrixStats};
+use crate::sparse::{Bcsr, Csr};
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+use super::report::Report;
+
+/// Experiment context: scale, output directory, machine sweep.
+#[derive(Debug, Clone)]
+pub struct Ctx {
+    /// Matrix scale factor ∈ (0, 1]: 1.0 reproduces Table 1 sizes.
+    pub scale: f64,
+    /// Directory for result files.
+    pub out_dir: std::path::PathBuf,
+    /// Core counts swept in scaling figures.
+    pub core_sweep: Vec<usize>,
+    /// Print progress to stderr.
+    pub verbose: bool,
+}
+
+impl Default for Ctx {
+    fn default() -> Self {
+        Ctx {
+            scale: 1.0,
+            out_dir: "results".into(),
+            core_sweep: vec![1, 4, 8, 16, 24, 32, 40, 48, 56, 61],
+            verbose: true,
+        }
+    }
+}
+
+impl Ctx {
+    /// A fast context for tests and smoke runs.
+    pub fn quick() -> Ctx {
+        Ctx { scale: 1.0 / 64.0, verbose: false, ..Ctx::default() }
+    }
+
+    fn log(&self, msg: &str) {
+        if self.verbose {
+            eprintln!("[phi-spmv] {msg}");
+        }
+    }
+
+    fn suite_matrix(&self, e: &SuiteEntry) -> (Csr, MatrixStats) {
+        self.log(&format!("generating {} (scale {})", e.name, self.scale));
+        let (mut a, st) = e.generate_with_stats(self.scale);
+        randomize_values(&mut a, e.id as u64 * 101);
+        (a, st)
+    }
+}
+
+/// A named experiment that can be run under a context.
+pub struct Experiment;
+
+impl Experiment {
+    /// Runs an experiment by id and returns its report.
+    pub fn run(id: &str, ctx: &Ctx) -> anyhow::Result<Report> {
+        match id {
+            "table1" => Ok(table1(ctx)),
+            "fig1" => Ok(fig1(ctx)),
+            "fig2" => Ok(fig2(ctx)),
+            "fig4" => Ok(fig4(ctx)),
+            "fig5" => Ok(fig5(ctx)),
+            "fig6" => Ok(fig6(ctx)),
+            "fig7" => Ok(fig7(ctx)),
+            "fig8" => Ok(fig8(ctx)),
+            "table2" => Ok(table2(ctx)),
+            "fig9" => Ok(fig9(ctx)),
+            "fig10" => Ok(fig10(ctx)),
+            other => anyhow::bail!("unknown experiment {other:?} (see ALL_EXPERIMENTS)"),
+        }
+    }
+}
+
+/// Best-config SpMV estimate (the paper reports best over scheduling and
+/// cores×threads; we sweep cores 60/61 × threads 1–4).
+fn best_spmv(a: &Csr, variant: SpmvVariant) -> crate::arch::Estimate {
+    let m = PhiMachine::se10p();
+    let an = SpmvAnalysis::compute(a, 61);
+    let w = spmv_profile(a, variant, &an);
+    m.best_config(&w, &[60, 61]).2
+}
+
+fn fmt(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+// ---------------------------------------------------------------- table 1
+
+/// Table 1: suite properties, paper vs generated.
+pub fn table1(ctx: &Ctx) -> Report {
+    let mut r = Report::new("table1", "Properties of the matrices (paper vs generated)");
+    let mut t = Table::new(vec![
+        "#", "name", "paper_n", "gen_n", "paper_nnz", "gen_nnz", "paper_nnz/row", "gen_nnz/row",
+        "paper_max_r", "gen_max_r", "paper_max_c", "gen_max_c",
+    ]);
+    let mut arr = Vec::new();
+    for e in paper_suite() {
+        let (a, st) = ctx.suite_matrix(&e);
+        drop(a);
+        t.row(vec![
+            e.id.to_string(),
+            e.name.to_string(),
+            e.paper.nrows.to_string(),
+            st.nrows.to_string(),
+            e.paper.nnz.to_string(),
+            st.nnz.to_string(),
+            fmt(e.paper.nnz_per_row, 2),
+            fmt(st.nnz_per_row, 2),
+            e.paper.max_nnz_row.to_string(),
+            st.max_nnz_row.to_string(),
+            e.paper.max_nnz_col.to_string(),
+            st.max_nnz_col.to_string(),
+        ]);
+        arr.push(
+            Json::obj()
+                .set("id", e.id)
+                .set("name", e.name)
+                .set("gen_nrows", st.nrows)
+                .set("gen_nnz", st.nnz)
+                .set("gen_nnz_per_row", st.nnz_per_row)
+                .set("paper_nnz_per_row", e.paper.nnz_per_row),
+        );
+    }
+    r.push_table("", t);
+    r.json = Json::obj().set("scale", ctx.scale).set("matrices", Json::Arr(arr));
+    r
+}
+
+// ------------------------------------------------------------------ fig 1
+
+/// Fig. 1: read-bandwidth micro-benchmarks (model sweep + bounds).
+pub fn fig1(ctx: &Ctx) -> Report {
+    let mut r = Report::new("fig1", "Read bandwidth micro-benchmarks (KNC model)");
+    let benches = [
+        ("a_sum_char", ReadBench::SumChar),
+        ("b_sum_int", ReadBench::SumInt),
+        ("c_sum_vector", ReadBench::SumVector),
+        ("d_sum_vector_prefetch", ReadBench::SumVectorPrefetch),
+    ];
+    let mut arr = Vec::new();
+    for (label, bench) in benches {
+        let mut t = Table::new(vec!["cores", "t1_gbps", "t2_gbps", "t3_gbps", "t4_gbps", "bound_gbps"]);
+        for &cores in &ctx.core_sweep {
+            let pts: Vec<f64> = (1..=4).map(|th| model_read(bench, cores, th).gbps).collect();
+            let bound = match bench {
+                ReadBench::SumChar => cores as f64 * 1.05 / 5.0,
+                ReadBench::SumInt => cores as f64 * 1.05,
+                _ => ring_core_bound_gbps(cores),
+            };
+            t.row(vec![
+                cores.to_string(),
+                fmt(pts[0], 2),
+                fmt(pts[1], 2),
+                fmt(pts[2], 2),
+                fmt(pts[3], 2),
+                fmt(bound, 2),
+            ]);
+            arr.push(
+                Json::obj()
+                    .set("bench", label)
+                    .set("cores", cores)
+                    .set("gbps", pts.clone())
+                    .set("bound", bound),
+            );
+        }
+        r.push_table(label, t);
+    }
+    r.json = Json::obj().set("points", Json::Arr(arr));
+    r
+}
+
+// ------------------------------------------------------------------ fig 2
+
+/// Fig. 2: write-bandwidth micro-benchmarks (model sweep).
+pub fn fig2(ctx: &Ctx) -> Report {
+    let mut r = Report::new("fig2", "Write bandwidth micro-benchmarks (KNC model)");
+    let benches = [
+        ("a_store", WriteBench::Store),
+        ("b_store_noread", WriteBench::StoreNoRead),
+        ("c_store_nrngo", WriteBench::StoreNrNgo),
+    ];
+    let mut arr = Vec::new();
+    for (label, bench) in benches {
+        let mut t = Table::new(vec!["cores", "t1_gbps", "t2_gbps", "t3_gbps", "t4_gbps", "bound_gbps"]);
+        for &cores in &ctx.core_sweep {
+            let pts: Vec<f64> = (1..=4).map(|th| model_write(bench, cores, th).gbps).collect();
+            t.row(vec![
+                cores.to_string(),
+                fmt(pts[0], 2),
+                fmt(pts[1], 2),
+                fmt(pts[2], 2),
+                fmt(pts[3], 2),
+                fmt(ring_core_bound_gbps(cores), 2),
+            ]);
+            arr.push(Json::obj().set("bench", label).set("cores", cores).set("gbps", pts.clone()));
+        }
+        r.push_table(label, t);
+    }
+    r.json = Json::obj().set("points", Json::Arr(arr));
+    r
+}
+
+// ------------------------------------------------------------------ fig 4
+
+/// Fig. 4: SpMV -O1 vs -O3 GFlop/s across the suite.
+pub fn fig4(ctx: &Ctx) -> Report {
+    let mut r = Report::new("fig4", "SpMV: No Vect. (-O1) vs Comp. Vect. (-O3)");
+    let mut t = Table::new(vec!["#", "name", "o1_gflops", "o3_gflops", "speedup", "bottleneck_o3"]);
+    let mut arr = Vec::new();
+    for e in paper_suite() {
+        let (a, _) = ctx.suite_matrix(&e);
+        let e1 = best_spmv(&a, SpmvVariant::O1);
+        let e3 = best_spmv(&a, SpmvVariant::O3);
+        t.row(vec![
+            e.id.to_string(),
+            e.name.to_string(),
+            fmt(e1.gflops(), 2),
+            fmt(e3.gflops(), 2),
+            fmt(e3.gflops() / e1.gflops(), 2),
+            e3.bottleneck.to_string(),
+        ]);
+        arr.push(
+            Json::obj()
+                .set("id", e.id)
+                .set("name", e.name)
+                .set("o1_gflops", e1.gflops())
+                .set("o3_gflops", e3.gflops()),
+        );
+    }
+    r.push_table("", t);
+    r.json = Json::obj().set("matrices", Json::Arr(arr));
+    r
+}
+
+// ------------------------------------------------------------------ fig 5
+
+/// Fig. 5: performance vs useful cacheline density.
+pub fn fig5(ctx: &Ctx) -> Report {
+    let mut r = Report::new("fig5", "SpMV GFlop/s vs UCLD");
+    let mut t = Table::new(vec!["#", "name", "ucld", "o1_gflops", "o3_gflops"]);
+    let mut arr = Vec::new();
+    for e in paper_suite() {
+        let (a, _) = ctx.suite_matrix(&e);
+        let u = ucld(&a);
+        let g1 = best_spmv(&a, SpmvVariant::O1).gflops();
+        let g3 = best_spmv(&a, SpmvVariant::O3).gflops();
+        t.row(vec![
+            e.id.to_string(),
+            e.name.to_string(),
+            fmt(u, 3),
+            fmt(g1, 2),
+            fmt(g3, 2),
+        ]);
+        arr.push(
+            Json::obj().set("id", e.id).set("name", e.name).set("ucld", u).set("o1", g1).set("o3", g3),
+        );
+    }
+    r.push_table("", t);
+    r.json = Json::obj().set("matrices", Json::Arr(arr));
+    r
+}
+
+// ------------------------------------------------------------------ fig 6
+
+/// Fig. 6: bandwidth under naive / application / estimated-actual
+/// accounting (∞ and 512 kB caches).
+pub fn fig6(ctx: &Ctx) -> Report {
+    let mut r = Report::new("fig6", "SpMV bandwidth under different accountings");
+    let mut t = Table::new(vec![
+        "#", "name", "naive_gbps", "app_gbps", "actual_inf_gbps", "actual_512k_gbps", "vector_access",
+    ]);
+    let mut arr = Vec::new();
+    for e in paper_suite() {
+        let (a, _) = ctx.suite_matrix(&e);
+        let est = best_spmv(&a, SpmvVariant::O3);
+        let vt = vector_traffic(&a, 61, 64, 8);
+        let time = est.time_s;
+        let naive = naive_bytes_spmv(&a) / time / 1e9;
+        let app = app_bytes_spmv(&a) / time / 1e9;
+        let inf = actual_bytes_spmv_infinite(&a, &vt) / time / 1e9;
+        let fin = actual_bytes_spmv_finite(&a, &vt) / time / 1e9;
+        t.row(vec![
+            e.id.to_string(),
+            e.name.to_string(),
+            fmt(naive, 1),
+            fmt(app, 1),
+            fmt(inf, 1),
+            fmt(fin, 1),
+            fmt(vt.vector_access(), 2),
+        ]);
+        arr.push(
+            Json::obj()
+                .set("id", e.id)
+                .set("name", e.name)
+                .set("naive", naive)
+                .set("app", app)
+                .set("actual_infinite", inf)
+                .set("actual_finite", fin)
+                .set("vector_access", vt.vector_access()),
+        );
+    }
+    r.push_table("", t);
+    r.json = Json::obj().set("matrices", Json::Arr(arr));
+    r
+}
+
+// ------------------------------------------------------------------ fig 7
+
+/// Fig. 7: strong scaling of application bandwidth for two representative
+/// instances (a latency-bound profile and an on-core-bound profile).
+pub fn fig7(ctx: &Ctx) -> Report {
+    let mut r = Report::new("fig7", "Strong scaling of application bandwidth (dynamic,64)");
+    let suite = paper_suite();
+    // Paper: most matrices look like msdoor (#16, threads keep helping);
+    // 5 look like nd24k (#18, 3≈4 threads).
+    let picks = [15usize, 17]; // 0-based indices of msdoor, nd24k
+    let m = PhiMachine::se10p();
+    let mut arr = Vec::new();
+    for &pi in &picks {
+        let e = &suite[pi];
+        let (a, _) = ctx.suite_matrix(e);
+        let mut t = Table::new(vec!["cores", "t1_gbps", "t2_gbps", "t3_gbps", "t4_gbps"]);
+        for &cores in &ctx.core_sweep {
+            let an = SpmvAnalysis::compute(&a, cores);
+            let w = spmv_profile(&a, SpmvVariant::O3, &an);
+            let pts: Vec<f64> =
+                (1..=4).map(|th| m.estimate(cores, th, &w).app_gbps()).collect();
+            t.row(vec![
+                cores.to_string(),
+                fmt(pts[0], 2),
+                fmt(pts[1], 2),
+                fmt(pts[2], 2),
+                fmt(pts[3], 2),
+            ]);
+            arr.push(
+                Json::obj().set("name", e.name).set("cores", cores).set("gbps", pts.clone()),
+            );
+        }
+        r.push_table(e.name, t);
+    }
+    r.json = Json::obj().set("points", Json::Arr(arr));
+    r
+}
+
+// ------------------------------------------------------------------ fig 8
+
+/// Fig. 8: effect of RCM ordering (ΔGFlop/s, ΔUCLD, ΔVector Access).
+pub fn fig8(ctx: &Ctx) -> Report {
+    let mut r = Report::new("fig8", "Effect of RCM ordering (positive = improvement)");
+    let mut t = Table::new(vec![
+        "#", "name", "gflops_before", "gflops_after", "delta_gflops", "delta_ucld", "delta_vaccess",
+    ]);
+    let mut arr = Vec::new();
+    for e in paper_suite() {
+        let (a, _) = ctx.suite_matrix(&e);
+        let perm = rcm(&a);
+        let b = apply_symmetric_permutation(&a, &perm);
+        let ga = best_spmv(&a, SpmvVariant::O3).gflops();
+        let gb = best_spmv(&b, SpmvVariant::O3).gflops();
+        let ua = ucld(&a);
+        let ub = ucld(&b);
+        let va = vector_traffic(&a, 61, 64, 8).vector_access();
+        let vb = vector_traffic(&b, 61, 64, 8).vector_access();
+        t.row(vec![
+            e.id.to_string(),
+            e.name.to_string(),
+            fmt(ga, 2),
+            fmt(gb, 2),
+            fmt(gb - ga, 2),
+            fmt(ub - ua, 3),
+            // positive = fewer transfers = improvement, as in the paper
+            fmt(va - vb, 2),
+        ]);
+        arr.push(
+            Json::obj()
+                .set("id", e.id)
+                .set("name", e.name)
+                .set("delta_gflops", gb - ga)
+                .set("delta_ucld", ub - ua)
+                .set("delta_vaccess", va - vb),
+        );
+    }
+    r.push_table("", t);
+    r.json = Json::obj().set("matrices", Json::Arr(arr));
+    r
+}
+
+// ---------------------------------------------------------------- table 2
+
+/// Table 2: register blocking relative performance.
+pub fn table2(ctx: &Ctx) -> Report {
+    let mut r = Report::new("table2", "Register blocking relative to CRS (-O3)");
+    let mut t = Table::new(vec!["config", "geomean_rel", "n_improved"]);
+    let mut per_matrix = Table::new(vec![
+        "#", "name", "8x8", "8x4", "8x2", "8x1", "4x8", "2x8", "1x8",
+    ]);
+    let m = PhiMachine::se10p();
+    let mut rel: Vec<Vec<f64>> = vec![Vec::new(); PAPER_BLOCK_CONFIGS.len()];
+    for e in paper_suite() {
+        let (a, _) = ctx.suite_matrix(&e);
+        let base = best_spmv(&a, SpmvVariant::O3).gflops();
+        let mut row = vec![e.id.to_string(), e.name.to_string()];
+        for (ci, &(br, bc)) in PAPER_BLOCK_CONFIGS.iter().enumerate() {
+            let b = Bcsr::from_csr(&a, br, bc);
+            let w = bcsr_profile(&a, &b, 61);
+            let g = m.best_config(&w, &[60, 61]).2.gflops();
+            rel[ci].push(g / base);
+            row.push(fmt(g / base, 2));
+        }
+        per_matrix.row(row);
+    }
+    let mut arr = Vec::new();
+    for (ci, &(br, bc)) in PAPER_BLOCK_CONFIGS.iter().enumerate() {
+        let geo = geomean(&rel[ci]);
+        let improved = rel[ci].iter().filter(|&&x| x > 1.0).count();
+        t.row(vec![format!("{br}x{bc}"), fmt(geo, 2), improved.to_string()]);
+        arr.push(
+            Json::obj()
+                .set("config", format!("{br}x{bc}"))
+                .set("geomean", geo)
+                .set("improved", improved),
+        );
+    }
+    r.push_table("summary", t);
+    r.push_table("per matrix", per_matrix);
+    r.json = Json::obj().set("configs", Json::Arr(arr));
+    r
+}
+
+fn geomean(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    (v.iter().map(|x| x.ln()).sum::<f64>() / v.len() as f64).exp()
+}
+
+// ------------------------------------------------------------------ fig 9
+
+/// Fig. 9: SpMM (k=16) — three variants + bandwidth.
+pub fn fig9(ctx: &Ctx) -> Report {
+    let mut r = Report::new("fig9", "SpMM k=16: generic / manual vect / NRNGO");
+    let mut t = Table::new(vec![
+        "#", "name", "generic_gflops", "manual_gflops", "nrngo_gflops", "app_gbps",
+    ]);
+    let m = PhiMachine::se10p();
+    let k = 16;
+    let mut arr = Vec::new();
+    for e in paper_suite() {
+        let (a, _) = ctx.suite_matrix(&e);
+        let an = SpmmAnalysis::compute(&a, 61, k);
+        let mut g = [0.0f64; 3];
+        let mut best_time = f64::INFINITY;
+        for (vi, v) in [SpmmVariant::Generic, SpmmVariant::Manual, SpmmVariant::Nrngo]
+            .into_iter()
+            .enumerate()
+        {
+            let w = spmm_profile(&a, v, &an);
+            let est = m.best_config(&w, &[60, 61]).2;
+            g[vi] = est.gflops();
+            if est.time_s < best_time {
+                best_time = est.time_s;
+            }
+        }
+        let app_gbps = app_bytes_spmm(&a, k) / best_time / 1e9;
+        t.row(vec![
+            e.id.to_string(),
+            e.name.to_string(),
+            fmt(g[0], 1),
+            fmt(g[1], 1),
+            fmt(g[2], 1),
+            fmt(app_gbps, 1),
+        ]);
+        arr.push(
+            Json::obj()
+                .set("id", e.id)
+                .set("name", e.name)
+                .set("generic", g[0])
+                .set("manual", g[1])
+                .set("nrngo", g[2])
+                .set("app_gbps", app_gbps),
+        );
+    }
+    r.push_table("", t);
+    r.json = Json::obj().set("k", k).set("matrices", Json::Arr(arr));
+    r
+}
+
+// ----------------------------------------------------------------- fig 10
+
+/// Fig. 10: architectural comparison (Phi vs Westmere/Sandy/C2050/K20).
+pub fn fig10(ctx: &Ctx) -> Report {
+    let mut r = Report::new("fig10", "Architecture comparison: SpMV and SpMM (k=16)");
+    let mut tv = Table::new(vec!["#", "name", "phi", "westmere", "sandy", "c2050", "k20", "winner"]);
+    let mut tm = Table::new(vec!["#", "name", "phi", "westmere", "sandy", "c2050", "k20", "winner"]);
+    let m = PhiMachine::se10p();
+    let (wm, sb) = (CpuSpec::westmere(), CpuSpec::sandy());
+    let (c2, k20) = (GpuSpec::c2050(), GpuSpec::k20());
+    let k = 16;
+    let mut arr = Vec::new();
+    let mut wins_spmv = [0usize; 5];
+    let mut wins_spmm = [0usize; 5];
+    for e in paper_suite() {
+        let (a, st) = ctx.suite_matrix(&e);
+        let u = ucld(&a);
+        let app_v = app_bytes_spmv(&a);
+        let app_m = app_bytes_spmm(&a, k);
+        // CPU shared-L3 x traffic ≈ single-cache distinct lines.
+        let cpu_lines = vector_traffic(&a, 1, 64, 8).lines_infinite as f64;
+        let row_lens: Vec<usize> = (0..a.nrows).map(|i| a.row_nnz(i)).collect();
+        let util = k20.warp_utilization(row_lens.iter().copied());
+        let gather_eff = u.clamp(0.15, 1.0);
+
+        // --- SpMV ---
+        let gv = [
+            best_spmv(&a, SpmvVariant::O3).gflops(),
+            wm.spmv_estimate(a.nnz(), a.nrows, cpu_lines, app_v).gflops(),
+            sb.spmv_estimate(a.nnz(), a.nrows, cpu_lines, app_v).gflops(),
+            c2.spmv_estimate(a.nnz(), a.nrows, util, gather_eff, app_v).gflops(),
+            k20.spmv_estimate(a.nnz(), a.nrows, util, gather_eff, app_v).gflops(),
+        ];
+        // --- SpMM ---
+        let an = SpmmAnalysis::compute(&a, 61, k);
+        let wq = spmm_profile(&a, SpmmVariant::Nrngo, &an);
+        let cpu_lines_k = vector_traffic(&a, 1, 64, 8 * k).lines_infinite as f64;
+        let gm = [
+            m.best_config(&wq, &[60, 61]).2.gflops(),
+            wm.spmm_estimate(a.nnz(), a.nrows, k, cpu_lines_k, app_m).gflops(),
+            sb.spmm_estimate(a.nnz(), a.nrows, k, cpu_lines_k, app_m).gflops(),
+            c2.spmm_estimate(a.nnz(), a.nrows, k, util, app_m).gflops(),
+            k20.spmm_estimate(a.nnz(), a.nrows, k, util, app_m).gflops(),
+        ];
+        let names = ["phi", "westmere", "sandy", "c2050", "k20"];
+        let wi_v = argmax(&gv);
+        let wi_m = argmax(&gm);
+        wins_spmv[wi_v] += 1;
+        wins_spmm[wi_m] += 1;
+        tv.row(vec![
+            e.id.to_string(),
+            e.name.to_string(),
+            fmt(gv[0], 2),
+            fmt(gv[1], 2),
+            fmt(gv[2], 2),
+            fmt(gv[3], 2),
+            fmt(gv[4], 2),
+            names[wi_v].to_string(),
+        ]);
+        tm.row(vec![
+            e.id.to_string(),
+            e.name.to_string(),
+            fmt(gm[0], 1),
+            fmt(gm[1], 1),
+            fmt(gm[2], 1),
+            fmt(gm[3], 1),
+            fmt(gm[4], 1),
+            names[wi_m].to_string(),
+        ]);
+        arr.push(
+            Json::obj()
+                .set("id", e.id)
+                .set("name", e.name)
+                .set("spmv", gv.to_vec())
+                .set("spmm", gm.to_vec()),
+        );
+        let _ = st;
+    }
+    r.push_table("a_spmv", tv);
+    r.push_table("b_spmm_k16", tm);
+    r.json = Json::obj()
+        .set("arches", vec!["phi", "westmere", "sandy", "c2050", "k20"])
+        .set("wins_spmv", wins_spmv.iter().map(|&w| Json::from(w)).collect::<Vec<_>>())
+        .set("wins_spmm", wins_spmm.iter().map(|&w| Json::from(w)).collect::<Vec<_>>())
+        .set("matrices", Json::Arr(arr));
+    r
+}
+
+fn argmax(v: &[f64]) -> usize {
+    let mut bi = 0;
+    for (i, x) in v.iter().enumerate() {
+        if *x > v[bi] {
+            bi = i;
+        }
+    }
+    bi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_experiments_run_quick() {
+        let ctx = Ctx::quick();
+        for id in crate::coordinator::ALL_EXPERIMENTS {
+            let r = Experiment::run(id, &ctx).unwrap();
+            assert!(!r.tables.is_empty(), "{id} produced no tables");
+            let text = r.render();
+            assert!(text.len() > 100, "{id} render too short");
+        }
+    }
+
+    #[test]
+    fn unknown_experiment_rejected() {
+        assert!(Experiment::run("fig99", &Ctx::quick()).is_err());
+    }
+
+    #[test]
+    fn fig4_o3_wins_overall() {
+        let r = fig4(&Ctx::quick());
+        // Across the suite -O3 must beat -O1 on average (paper: "the
+        // performance rises for all matrices").
+        let arr = r.json.get("matrices").unwrap().as_arr().unwrap();
+        let mut better = 0;
+        for m in arr {
+            if m.get("o3_gflops").unwrap().as_f64() >= m.get("o1_gflops").unwrap().as_f64() {
+                better += 1;
+            }
+        }
+        assert!(better >= 18, "O3 better on only {better}/22");
+    }
+
+    #[test]
+    fn fig10_phi_wins_majority_spmm() {
+        let r = fig10(&Ctx::quick());
+        let wins = r.json.get("wins_spmm").unwrap().as_arr().unwrap();
+        let phi = wins[0].as_f64().unwrap();
+        assert!(phi >= 11.0, "phi spmm wins {phi}/22");
+    }
+}

@@ -1,0 +1,22 @@
+//! Experiment orchestration — the L3 coordinator.
+//!
+//! Each paper table/figure has a driver here that (a) generates the
+//! matrices, (b) runs the analytic machine models and/or the native
+//! kernels, and (c) renders the same rows/series the paper reports, as
+//! aligned text + CSV + JSON under `results/`.
+//!
+//! The CLI (`phi-spmv <experiment>`) and the benches both call into this
+//! module; `examples/paper_figures.rs` regenerates everything at once.
+
+pub mod experiments;
+pub mod report;
+pub mod server;
+
+pub use experiments::{Ctx, Experiment};
+pub use report::Report;
+pub use server::{ServerConfig, SpmvClient, SpmvServer};
+
+/// All experiment ids, in paper order.
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "table1", "fig1", "fig2", "fig4", "fig5", "fig6", "fig7", "fig8", "table2", "fig9", "fig10",
+];

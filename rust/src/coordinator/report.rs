@@ -1,0 +1,92 @@
+//! Result rendering and persistence.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// A rendered experiment result: text table(s) + JSON payload.
+#[derive(Debug)]
+pub struct Report {
+    /// Experiment id (e.g. "fig4").
+    pub id: String,
+    /// Human title.
+    pub title: String,
+    /// Named tables (label, table).
+    pub tables: Vec<(String, Table)>,
+    /// Machine-readable payload.
+    pub json: Json,
+}
+
+impl Report {
+    /// Creates an empty report.
+    pub fn new(id: &str, title: &str) -> Report {
+        Report { id: id.to_string(), title: title.to_string(), tables: Vec::new(), json: Json::obj() }
+    }
+
+    /// Adds a table section.
+    pub fn push_table(&mut self, label: &str, table: Table) {
+        self.tables.push((label.to_string(), table));
+    }
+
+    /// Renders everything as text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("=== {} — {} ===\n", self.id, self.title));
+        for (label, t) in &self.tables {
+            if !label.is_empty() {
+                out.push_str(&format!("\n--- {label} ---\n"));
+            }
+            out.push_str(&t.render());
+        }
+        out
+    }
+
+    /// Writes `<dir>/<id>.txt`, `.csv` (first table) and `.json`.
+    pub fn save(&self, dir: &Path) -> anyhow::Result<Vec<PathBuf>> {
+        std::fs::create_dir_all(dir)?;
+        let mut written = Vec::new();
+        let txt = dir.join(format!("{}.txt", self.id));
+        std::fs::write(&txt, self.render())?;
+        written.push(txt);
+        for (i, (label, t)) in self.tables.iter().enumerate() {
+            let suffix = if i == 0 { String::new() } else { format!("_{}", sanitize(label)) };
+            let csv = dir.join(format!("{}{suffix}.csv", self.id));
+            std::fs::write(&csv, t.to_csv())?;
+            written.push(csv);
+        }
+        let json = dir.join(format!("{}.json", self.id));
+        std::fs::write(&json, self.json.to_pretty())?;
+        written.push(json);
+        Ok(written)
+    }
+}
+
+fn sanitize(s: &str) -> String {
+    s.chars().map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_writes_all_files() {
+        let dir = crate::util::testing::TempDir::new("report");
+        let mut r = Report::new("figX", "test");
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["1", "2"]);
+        r.push_table("main", t);
+        let mut t2 = Table::new(vec!["c"]);
+        t2.row(vec!["3"]);
+        r.push_table("aux data", t2);
+        r.json = Json::obj().set("ok", true);
+        let files = r.save(dir.path()).unwrap();
+        assert_eq!(files.len(), 4);
+        let txt = std::fs::read_to_string(dir.path().join("figX.txt")).unwrap();
+        assert!(txt.contains("figX"));
+        assert!(dir.path().join("figX_aux_data.csv").exists());
+        let json = std::fs::read_to_string(dir.path().join("figX.json")).unwrap();
+        assert!(json.contains("\"ok\": true"));
+    }
+}

@@ -1,0 +1,298 @@
+//! Request-serving coordinator: dynamic batching of SpMV requests into
+//! SpMM executions.
+//!
+//! The paper motivates SpMM with "throughput oriented server-side code …
+//! such as product/friend recommendation" (§1, §5): individual requests
+//! are single-vector multiplies, but batching k of them into one SpMM
+//! multiplies the flop:byte ratio. This module is that server: a bounded
+//! queue, a batcher that waits up to `max_wait` for up to `max_batch`
+//! requests, a worker executing the batch through the native SpMM kernel,
+//! and per-request latency accounting.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Message to the serve loop: a request or an orderly stop.
+enum Msg {
+    Req(Request),
+    Stop,
+}
+use std::time::{Duration, Instant};
+
+use crate::kernels::spmm_parallel;
+use crate::sched::Policy;
+use crate::sparse::Csr;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Maximum requests fused into one SpMM (the paper's k; 16 default).
+    pub max_batch: usize,
+    /// Maximum time the batcher waits to fill a batch.
+    pub max_wait: Duration,
+    /// Worker threads for the SpMM kernel.
+    pub threads: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_batch: 16, max_wait: Duration::from_millis(2), threads: 1 }
+    }
+}
+
+/// One in-flight request: the input vector and a completion channel.
+struct Request {
+    x: Vec<f64>,
+    enqueued: Instant,
+    reply: mpsc::Sender<Response>,
+}
+
+/// A served response.
+#[derive(Debug)]
+pub struct Response {
+    /// The result vector `Ax`.
+    pub y: Vec<f64>,
+    /// Queue + batch + compute latency for this request.
+    pub latency: Duration,
+    /// Number of requests in the batch that served this one.
+    pub batch_size: usize,
+}
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct SpmvClient {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl SpmvClient {
+    /// Submits a request; returns a receiver for the response.
+    pub fn submit(&self, x: Vec<f64>) -> anyhow::Result<mpsc::Receiver<Response>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Req(Request { x, enqueued: Instant::now(), reply: reply_tx }))
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(reply_rx)
+    }
+
+    /// Submits and waits.
+    pub fn call(&self, x: Vec<f64>) -> anyhow::Result<Response> {
+        Ok(self.submit(x)?.recv()?)
+    }
+}
+
+/// The running server; dropping joins the worker.
+pub struct SpmvServer {
+    client: SpmvClient,
+    worker: Option<std::thread::JoinHandle<ServerStats>>,
+}
+
+/// Aggregate statistics reported at shutdown.
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    /// Requests served.
+    pub served: usize,
+    /// Batches executed.
+    pub batches: usize,
+    /// Total flops executed.
+    pub flops: f64,
+    /// Busy time in the SpMM kernel.
+    pub compute_s: f64,
+}
+
+impl ServerStats {
+    /// Mean requests per batch.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served as f64 / self.batches as f64
+        }
+    }
+}
+
+impl SpmvServer {
+    /// Starts a server over matrix `a`.
+    pub fn start(a: Arc<Csr>, config: ServerConfig) -> SpmvServer {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let worker = std::thread::spawn(move || serve_loop(a, config, rx));
+        SpmvServer { client: SpmvClient { tx }, worker: Some(worker) }
+    }
+
+    /// A client handle (cloneable across threads).
+    pub fn client(&self) -> SpmvClient {
+        self.client.clone()
+    }
+
+    /// Stops the server (after the queue drains) and returns stats.
+    /// Outstanding client clones become inert once the loop exits.
+    pub fn shutdown(mut self) -> ServerStats {
+        let _ = self.client.tx.send(Msg::Stop);
+        self.worker.take().map(|w| w.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+fn serve_loop(a: Arc<Csr>, config: ServerConfig, rx: mpsc::Receiver<Msg>) -> ServerStats {
+    let mut stats = ServerStats::default();
+    let max_batch = config.max_batch.max(1);
+    let mut stopping = false;
+    loop {
+        // Block for the first request of the batch.
+        let first = match rx.recv() {
+            Ok(Msg::Req(r)) => r,
+            Ok(Msg::Stop) | Err(_) => return stats,
+        };
+        let deadline = Instant::now() + config.max_wait;
+        let mut batch = vec![first];
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Req(r)) => batch.push(r),
+                Ok(Msg::Stop) => {
+                    stopping = true;
+                    break;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Pack the batch into a row-major X (ncols × k).
+        let k = batch.len();
+        let mut x = vec![0.0f64; a.ncols * k];
+        for (u, req) in batch.iter().enumerate() {
+            assert_eq!(req.x.len(), a.ncols, "request length mismatch");
+            for i in 0..a.ncols {
+                x[i * k + u] = req.x[i];
+            }
+        }
+        let t0 = Instant::now();
+        let y = spmm_parallel(&a, &x, k, config.threads, Policy::Dynamic(64));
+        let compute = t0.elapsed();
+        stats.compute_s += compute.as_secs_f64();
+        stats.flops += 2.0 * a.nnz() as f64 * k as f64;
+        stats.batches += 1;
+
+        for (u, req) in batch.into_iter().enumerate() {
+            let yi: Vec<f64> = (0..a.nrows).map(|i| y[i * k + u]).collect();
+            let _ = req.reply.send(Response {
+                y: yi,
+                latency: req.enqueued.elapsed(),
+                batch_size: k,
+            });
+            stats.served += 1;
+        }
+        if stopping {
+            return stats;
+        }
+    }
+}
+
+/// Latency percentile helper for client-side measurement.
+pub fn percentile(sorted_latencies: &[Duration], p: f64) -> Duration {
+    if sorted_latencies.is_empty() {
+        return Duration::ZERO;
+    }
+    // Nearest-rank definition: ceil(p·n) − 1.
+    let idx = (p.clamp(0.0, 1.0) * sorted_latencies.len() as f64).ceil() as usize;
+    sorted_latencies[idx.saturating_sub(1).min(sorted_latencies.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::stencil::stencil_2d;
+    use crate::sparse::gen::{random_vector, randomize_values};
+
+    fn matrix() -> Arc<Csr> {
+        let mut a = stencil_2d(30, 30);
+        randomize_values(&mut a, 55);
+        Arc::new(a)
+    }
+
+    #[test]
+    fn responses_match_serial_spmv() {
+        let a = matrix();
+        let server = SpmvServer::start(a.clone(), ServerConfig::default());
+        let client = server.client();
+        let mut expected = Vec::new();
+        let mut rxs = Vec::new();
+        for s in 0..20u64 {
+            let x = random_vector(a.ncols, 100 + s);
+            expected.push(a.spmv(&x));
+            rxs.push(client.submit(x).unwrap());
+        }
+        for (rx, want) in rxs.into_iter().zip(expected) {
+            let resp = rx.recv().unwrap();
+            for (u, v) in resp.y.iter().zip(&want) {
+                assert!((u - v).abs() < 1e-10);
+            }
+            assert!(resp.batch_size >= 1);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 20);
+        assert!(stats.batches <= 20);
+    }
+
+    #[test]
+    fn batching_fuses_concurrent_requests() {
+        let a = matrix();
+        let server = SpmvServer::start(
+            a.clone(),
+            ServerConfig { max_batch: 8, max_wait: Duration::from_millis(50), threads: 1 },
+        );
+        let client = server.client();
+        // Fire 8 requests before any can complete; the 50 ms window lets
+        // the batcher fuse them.
+        let rxs: Vec<_> =
+            (0..8).map(|s| client.submit(random_vector(a.ncols, 200 + s)).unwrap()).collect();
+        let sizes: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap().batch_size).collect();
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 8);
+        assert!(
+            stats.batches < 8,
+            "expected fusing, got {} batches (sizes {sizes:?})",
+            stats.batches
+        );
+        assert!(sizes.iter().any(|&s| s > 1));
+    }
+
+    #[test]
+    fn max_batch_respected() {
+        let a = matrix();
+        let server = SpmvServer::start(
+            a.clone(),
+            ServerConfig { max_batch: 3, max_wait: Duration::from_millis(30), threads: 1 },
+        );
+        let client = server.client();
+        let rxs: Vec<_> =
+            (0..9).map(|s| client.submit(random_vector(a.ncols, 300 + s)).unwrap()).collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().batch_size <= 3);
+        }
+        let stats = server.shutdown();
+        assert!(stats.batches >= 3);
+    }
+
+    #[test]
+    fn shutdown_returns_stats() {
+        let a = matrix();
+        let server = SpmvServer::start(a.clone(), ServerConfig::default());
+        let client = server.client();
+        client.call(random_vector(a.ncols, 1)).unwrap();
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 1);
+        assert!(stats.flops > 0.0);
+        assert!((stats.mean_batch() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_helper() {
+        let lat: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
+        assert_eq!(percentile(&lat, 0.5), Duration::from_millis(50));
+        assert_eq!(percentile(&lat, 0.99), Duration::from_millis(99));
+        assert_eq!(percentile(&[], 0.5), Duration::ZERO);
+    }
+}

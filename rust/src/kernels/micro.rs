@@ -1,0 +1,228 @@
+//! Micro-benchmark models and host equivalents (paper §2.1–§2.2, Figs 1–2).
+//!
+//! Each benchmark is described by the instruction stream the paper reports
+//! (e.g. "5 instructions per char", "4 per int") plus its memory behaviour;
+//! the KNC model turns that into GB/s for any cores × threads point. The
+//! host-native versions actually run and are used by `bench_microbench`.
+
+use crate::arch::core_model::{InstrMix, IssueModel};
+use crate::arch::mem::{MemSystem, StoreFlavour};
+use crate::arch::Bottleneck;
+
+/// The four read micro-benchmarks of Fig. 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReadBench {
+    /// (a) sum of 8-bit chars, `-O1`: 5 instructions per byte.
+    SumChar,
+    /// (b) sum of 32-bit ints, `-O1`: 4 instructions per int.
+    SumInt,
+    /// (c) vector sum, 512 bits (a full cacheline) at a time.
+    SumVector,
+    /// (d) vector sum with software prefetching.
+    SumVectorPrefetch,
+}
+
+/// The three write micro-benchmarks of Fig. 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WriteBench {
+    /// (a) 512-bit stores (Read-For-Ownership applies).
+    Store,
+    /// (b) stores with the No-Read hint.
+    StoreNoRead,
+    /// (c) Non-Globally-Ordered stores with No-Read hint.
+    StoreNrNgo,
+}
+
+/// Model output: achieved GB/s and the binding constraint.
+#[derive(Debug, Clone, Copy)]
+pub struct MicroPoint {
+    /// Effective (application) bandwidth in GB/s.
+    pub gbps: f64,
+    /// The binding constraint.
+    pub bottleneck: Bottleneck,
+}
+
+/// KNC model of a read benchmark at `cores` × `threads`.
+pub fn model_read(bench: ReadBench, cores: usize, threads: usize) -> MicroPoint {
+    let issue = IssueModel { freq_hz: 1.05e9 };
+    let mem = MemSystem::knc();
+    let (mix, bytes_per_iter, prefetch) = match bench {
+        // -O1 loops don't pair (paper: "those 5 instructions were not
+        // paired, this benchmark is instruction bound").
+        ReadBench::SumChar => (InstrMix { instructions: 5.0, pairable: 0.0 }, 1.0, true),
+        ReadBench::SumInt => (InstrMix { instructions: 4.0, pairable: 0.0 }, 4.0, true),
+        // Vector loop: vload + vadd + increment + test&jump ≈ 4 per line.
+        ReadBench::SumVector => (InstrMix { instructions: 4.0, pairable: 0.25 }, 64.0, false),
+        // + prefetch instruction, but misses overlap.
+        ReadBench::SumVectorPrefetch => {
+            (InstrMix { instructions: 5.0, pairable: 0.25 }, 64.0, true)
+        }
+    };
+    let instr_gbps = issue.stream_bound_gbps(mix, bytes_per_iter, cores, threads);
+    let (mem_bw, mem_bn) = mem.read_bw(cores, threads, prefetch);
+    let mem_gbps = mem_bw / 1e9;
+    if instr_gbps <= mem_gbps {
+        MicroPoint { gbps: instr_gbps, bottleneck: Bottleneck::InstructionIssue }
+    } else {
+        MicroPoint { gbps: mem_gbps, bottleneck: mem_bn }
+    }
+}
+
+/// KNC model of a write benchmark at `cores` × `threads`.
+pub fn model_write(bench: WriteBench, cores: usize, threads: usize) -> MicroPoint {
+    let mem = MemSystem::knc();
+    let flavour = match bench {
+        WriteBench::Store => StoreFlavour::Ordered,
+        WriteBench::StoreNoRead => StoreFlavour::NoRead,
+        WriteBench::StoreNrNgo => StoreFlavour::NrNgo,
+    };
+    let (bw, bn) = mem.write_bw(cores, threads, flavour);
+    MicroPoint { gbps: bw / 1e9, bottleneck: bn }
+}
+
+/// The theoretical upper bound the paper plots in Fig. 1(c,d)/2(c):
+/// `min(8.4 GB/s × cores, 220 GB/s)`.
+pub fn ring_core_bound_gbps(cores: usize) -> f64 {
+    (8.4 * cores as f64).min(220.0)
+}
+
+// --- host-native equivalents (actually executed) ---
+
+/// Sums `data` as bytes with `nthreads` (host benchmark; returns the sum so
+/// the work can't be eliminated).
+pub fn host_sum_bytes(data: &[u8], nthreads: usize) -> u64 {
+    let nthreads = nthreads.max(1);
+    let chunk = data.len().div_ceil(nthreads);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..nthreads {
+            let lo = (t * chunk).min(data.len());
+            let hi = ((t + 1) * chunk).min(data.len());
+            let slice = &data[lo..hi];
+            handles.push(s.spawn(move || slice.iter().map(|&b| b as u64).sum::<u64>()));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    })
+}
+
+/// Sums `data` as f64 with `nthreads` (host vector-read benchmark).
+pub fn host_sum_f64(data: &[f64], nthreads: usize) -> f64 {
+    let nthreads = nthreads.max(1);
+    let chunk = data.len().div_ceil(nthreads);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..nthreads {
+            let lo = (t * chunk).min(data.len());
+            let hi = ((t + 1) * chunk).min(data.len());
+            let slice = &data[lo..hi];
+            handles.push(s.spawn(move || {
+                let mut acc = [0.0f64; 8];
+                let mut it = slice.chunks_exact(8);
+                for c in &mut it {
+                    for (a, v) in acc.iter_mut().zip(c) {
+                        *a += v;
+                    }
+                }
+                acc.iter().sum::<f64>() + it.remainder().iter().sum::<f64>()
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    })
+}
+
+/// Fills `data` with a value using `nthreads` (host write benchmark).
+pub fn host_fill(data: &mut [f64], value: f64, nthreads: usize) {
+    let nthreads = nthreads.max(1);
+    let chunk = data.len().div_ceil(nthreads).max(1);
+    std::thread::scope(|s| {
+        for part in data.chunks_mut(chunk) {
+            s.spawn(move || part.iter_mut().for_each(|v| *v = value));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1a_peak_12gbps_at_61_cores() {
+        // Paper: char sum peaks at 12 GB/s with 61 cores, instruction bound,
+        // and extra threads past 2 don't help.
+        let p2 = model_read(ReadBench::SumChar, 61, 2);
+        let p4 = model_read(ReadBench::SumChar, 61, 4);
+        assert!((p2.gbps - 12.8).abs() < 1.0, "{}", p2.gbps);
+        assert_eq!(p2.bottleneck, Bottleneck::InstructionIssue);
+        assert!((p4.gbps - p2.gbps).abs() < 0.01);
+    }
+
+    #[test]
+    fn fig1b_peak_60gbps() {
+        // Paper: int sum peaks at 60.0 GB/s (4 threads), ~5× the char rate.
+        let p = model_read(ReadBench::SumInt, 61, 4);
+        assert!((p.gbps - 64.0).abs() < 5.0, "{}", p.gbps);
+        assert_eq!(p.bottleneck, Bottleneck::InstructionIssue);
+        let c = model_read(ReadBench::SumChar, 61, 4);
+        assert!((p.gbps / c.gbps - 5.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn fig1c_peak_171gbps_needs_4_threads() {
+        let p4 = model_read(ReadBench::SumVector, 61, 4);
+        let p3 = model_read(ReadBench::SumVector, 61, 3);
+        assert!((p4.gbps - 171.0).abs() < 3.0, "{}", p4.gbps);
+        assert_eq!(p4.bottleneck, Bottleneck::MemoryLatency);
+        assert!(p3.gbps < p4.gbps, "3 threads can't hide latency");
+    }
+
+    #[test]
+    fn fig1d_prefetch_183_plateau() {
+        let p1 = model_read(ReadBench::SumVectorPrefetch, 61, 1);
+        let p2 = model_read(ReadBench::SumVectorPrefetch, 61, 2);
+        assert!((p1.gbps - 149.0).abs() < 3.0, "{}", p1.gbps);
+        assert!((p2.gbps - 183.0).abs() < 2.0, "{}", p2.gbps);
+        assert_eq!(p2.bottleneck, Bottleneck::DramBandwidth);
+    }
+
+    #[test]
+    fn fig2_ordering_of_flavours() {
+        // At 61×4: store < no-read < nrngo, ≈ 69 / 100 / 160 GB/s.
+        let a = model_write(WriteBench::Store, 61, 4);
+        let b = model_write(WriteBench::StoreNoRead, 61, 4);
+        let c = model_write(WriteBench::StoreNrNgo, 61, 4);
+        assert!(a.gbps < b.gbps && b.gbps < c.gbps);
+        assert!((a.gbps - 69.0).abs() < 5.0, "{}", a.gbps);
+        assert!((b.gbps - 100.0).abs() < 5.0, "{}", b.gbps);
+        assert!((c.gbps - 160.0).abs() < 5.0, "{}", c.gbps);
+    }
+
+    #[test]
+    fn fig2c_nrngo_100gbps_at_24_cores() {
+        let p = model_write(WriteBench::StoreNrNgo, 24, 1);
+        assert!((p.gbps - 100.0).abs() < 5.0, "{}", p.gbps);
+        // Single thread per core suffices (paper).
+        let p4 = model_write(WriteBench::StoreNrNgo, 24, 4);
+        assert_eq!(p.gbps, p4.gbps);
+    }
+
+    #[test]
+    fn ring_bound_caps_at_220() {
+        assert_eq!(ring_core_bound_gbps(10), 84.0);
+        assert_eq!(ring_core_bound_gbps(61), 220.0);
+    }
+
+    #[test]
+    fn host_kernels_correct() {
+        let bytes: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        let want: u64 = bytes.iter().map(|&b| b as u64).sum();
+        assert_eq!(host_sum_bytes(&bytes, 4), want);
+
+        let data: Vec<f64> = (0..10_001).map(|i| i as f64 * 0.25).collect();
+        let want: f64 = data.iter().sum();
+        assert!((host_sum_f64(&data, 4) - want).abs() < 1e-6 * want.abs());
+
+        let mut buf = vec![0.0; 1000];
+        host_fill(&mut buf, 3.5, 4);
+        assert!(buf.iter().all(|&v| v == 3.5));
+    }
+}

@@ -1,0 +1,23 @@
+//! Sparse kernels, twice over.
+//!
+//! * [`native`] — real multithreaded Rust implementations (std::thread +
+//!   atomic chunk claiming, mirroring the paper's OpenMP kernels). These
+//!   execute on the host, are validated against the serial oracle, and are
+//!   the subject of the §Perf optimization pass.
+//! * [`micro`] — Fig. 1/Fig. 2 micro-benchmarks: KNC *models* of the array
+//!   sum and memset variants, plus runnable host equivalents.
+//! * [`spmv_model`] / [`spmm_model`] / [`blocked_model`] — reductions of a
+//!   matrix + configuration to an [`crate::arch::phi::WorkProfile`] for the
+//!   KNC machine model, encoding the instruction streams the paper
+//!   describes for `-O1` (scalar) and `-O3` (vector + `vgatherd`) builds,
+//!   the three SpMM variants, and register-blocked SpMV.
+
+pub mod blocked_model;
+pub mod micro;
+pub mod native;
+pub mod spmm_model;
+pub mod spmv_model;
+
+pub use native::{spmm_parallel, spmv_parallel, spmv_parallel_into};
+pub use spmm_model::SpmmVariant;
+pub use spmv_model::SpmvVariant;

@@ -1,0 +1,339 @@
+//! Native multithreaded sparse kernels (the real, executed hot path).
+//!
+//! Mirrors the paper's OpenMP implementation: rows are processed in
+//! parallel under a scheduling policy; `dynamic,chunk` is an atomic
+//! chunk-claiming queue. Each row is written by exactly one thread, so the
+//! output vector can be shared mutably without synchronization — expressed
+//! here with a `SendPtr` wrapper around the disjoint writes.
+
+use crate::sched::{DynamicQueue, Policy, StaticAssignment};
+use crate::sparse::{Bcsr, Csr};
+
+/// Raw-pointer wrapper asserting disjoint row ownership across threads.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Parallel SpMV: `y ← Ax` with `nthreads` workers under `policy`.
+pub fn spmv_parallel(a: &Csr, x: &[f64], nthreads: usize, policy: Policy) -> Vec<f64> {
+    let mut y = vec![0.0; a.nrows];
+    spmv_parallel_into(a, x, &mut y, nthreads, policy);
+    y
+}
+
+/// Parallel SpMV writing into a caller-provided buffer (no allocation on
+/// the hot path — the §Perf-relevant entry point).
+pub fn spmv_parallel_into(a: &Csr, x: &[f64], y: &mut [f64], nthreads: usize, policy: Policy) {
+    assert_eq!(x.len(), a.ncols);
+    assert_eq!(y.len(), a.nrows);
+    let nthreads = nthreads.max(1);
+    if nthreads == 1 || a.nrows < 256 {
+        spmv_range(a, x, y, 0..a.nrows);
+        return;
+    }
+    let yp = SendPtr(y.as_mut_ptr());
+    match policy {
+        Policy::Dynamic(chunk) => {
+            let queue = DynamicQueue::new(a.nrows, chunk.max(1));
+            std::thread::scope(|s| {
+                for _ in 0..nthreads {
+                    let queue = &queue;
+                    s.spawn(move || {
+                        let yp = yp;
+                        while let Some(r) = queue.claim() {
+                            let ys = unsafe {
+                                std::slice::from_raw_parts_mut(yp.0.add(r.start), r.len())
+                            };
+                            spmv_range_into(a, x, ys, r);
+                        }
+                    });
+                }
+            });
+        }
+        _ => {
+            let assign = StaticAssignment::build(policy, a.nrows, nthreads);
+            std::thread::scope(|s| {
+                for ranges in &assign.ranges {
+                    s.spawn(move || {
+                        let yp = yp;
+                        for r in ranges {
+                            let ys = unsafe {
+                                std::slice::from_raw_parts_mut(yp.0.add(r.start), r.len())
+                            };
+                            spmv_range_into(a, x, ys, r.clone());
+                        }
+                    });
+                }
+            });
+        }
+    }
+}
+
+/// Serial SpMV over a row range, writing `y[r]` (absolute indexing).
+fn spmv_range(a: &Csr, x: &[f64], y: &mut [f64], r: std::ops::Range<usize>) {
+    let (start, len) = (r.start, r.len());
+    spmv_range_into(a, x, &mut y[start..start + len], r);
+}
+
+/// Serial SpMV over a row range into a local slice (`ys[0]` = row r.start).
+#[inline]
+fn spmv_range_into(a: &Csr, x: &[f64], ys: &mut [f64], r: std::ops::Range<usize>) {
+    for (yi, i) in ys.iter_mut().zip(r) {
+        let lo = a.rptrs[i];
+        let hi = a.rptrs[i + 1];
+        let cids = &a.cids[lo..hi];
+        let vals = &a.vals[lo..hi];
+        // 4-way unrolled dot product: independent partial sums give the
+        // compiler/OoO core ILP the rolled loop lacks (§Perf L3).
+        let mut acc0 = 0.0f64;
+        let mut acc1 = 0.0f64;
+        let mut acc2 = 0.0f64;
+        let mut acc3 = 0.0f64;
+        let mut k = 0usize;
+        while k + 4 <= cids.len() {
+            acc0 += vals[k] * x[cids[k] as usize];
+            acc1 += vals[k + 1] * x[cids[k + 1] as usize];
+            acc2 += vals[k + 2] * x[cids[k + 2] as usize];
+            acc3 += vals[k + 3] * x[cids[k + 3] as usize];
+            k += 4;
+        }
+        let mut acc = (acc0 + acc1) + (acc2 + acc3);
+        while k < cids.len() {
+            acc += vals[k] * x[cids[k] as usize];
+            k += 1;
+        }
+        *yi = acc;
+    }
+}
+
+/// Naive rolled-loop serial SpMV — the §Perf *before* baseline kept for
+/// the ablation bench (`bench_spmv -- --ablation`); the production path
+/// uses the 4-way unrolled [`spmv_range_into`].
+pub fn spmv_serial_rolled(a: &Csr, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), a.ncols);
+    assert_eq!(y.len(), a.nrows);
+    for i in 0..a.nrows {
+        let mut acc = 0.0;
+        for (c, v) in a.row_cids(i).iter().zip(a.row_vals(i)) {
+            acc += v * x[*c as usize];
+        }
+        y[i] = acc;
+    }
+}
+
+/// Parallel SpMM: `Y ← AX`, row-major `X`/`Y` of width `k`.
+pub fn spmm_parallel(a: &Csr, x: &[f64], k: usize, nthreads: usize, policy: Policy) -> Vec<f64> {
+    assert_eq!(x.len(), a.ncols * k);
+    let mut y = vec![0.0; a.nrows * k];
+    let nthreads = nthreads.max(1);
+    if nthreads == 1 || a.nrows < 256 {
+        spmm_rows(a, x, &mut y, k, 0..a.nrows);
+        return y;
+    }
+    let yp = SendPtr(y.as_mut_ptr());
+    let chunk = match policy {
+        Policy::Dynamic(c) | Policy::StaticChunk(c) | Policy::Guided(c) => c.max(1),
+        Policy::StaticBlock => (a.nrows / (nthreads * 8)).max(1),
+    };
+    let queue = DynamicQueue::new(a.nrows, chunk);
+    std::thread::scope(|s| {
+        for _ in 0..nthreads {
+            let queue = &queue;
+            s.spawn(move || {
+                let yp = yp;
+                while let Some(r) = queue.claim() {
+                    let ys = unsafe {
+                        std::slice::from_raw_parts_mut(yp.0.add(r.start * k), r.len() * k)
+                    };
+                    spmm_rows_local(a, x, ys, k, r);
+                }
+            });
+        }
+    });
+    y
+}
+
+fn spmm_rows(a: &Csr, x: &[f64], y: &mut [f64], k: usize, r: std::ops::Range<usize>) {
+    let start = r.start;
+    let len = r.len();
+    spmm_rows_local(a, x, &mut y[start * k..(start + len) * k], k, r);
+}
+
+/// SpMM over a row range; `ys` is the local Y block (row r.start at 0).
+///
+/// The temporary accumulator row lives in registers/L1 (the paper's manual
+/// vectorization keeps it in SIMD registers; `k = 16` fits in two AVX-512
+/// or four AVX2 registers after autovectorization).
+#[inline]
+fn spmm_rows_local(a: &Csr, x: &[f64], ys: &mut [f64], k: usize, r: std::ops::Range<usize>) {
+    // Fixed-size fast path for the paper's k=16.
+    if k == 16 {
+        for (row_idx, i) in r.enumerate() {
+            let mut acc = [0.0f64; 16];
+            for (c, v) in a.row_cids(i).iter().zip(a.row_vals(i)) {
+                let xrow = &x[*c as usize * 16..*c as usize * 16 + 16];
+                for t in 0..16 {
+                    acc[t] += v * xrow[t];
+                }
+            }
+            ys[row_idx * 16..row_idx * 16 + 16].copy_from_slice(&acc);
+        }
+        return;
+    }
+    let mut acc = vec![0.0f64; k];
+    for (row_idx, i) in r.enumerate() {
+        acc.iter_mut().for_each(|v| *v = 0.0);
+        for (c, v) in a.row_cids(i).iter().zip(a.row_vals(i)) {
+            let xrow = &x[*c as usize * k..(*c as usize + 1) * k];
+            for t in 0..k {
+                acc[t] += v * xrow[t];
+            }
+        }
+        ys[row_idx * k..(row_idx + 1) * k].copy_from_slice(&acc);
+    }
+}
+
+/// Parallel register-blocked SpMV over a [`Bcsr`] matrix.
+pub fn bcsr_spmv_parallel(b: &Bcsr, x: &[f64], nthreads: usize, chunk: usize) -> Vec<f64> {
+    assert_eq!(x.len(), b.ncols);
+    let mut y = vec![0.0; b.nrows];
+    let nthreads = nthreads.max(1);
+    if nthreads == 1 || b.nbrows() < 64 {
+        bcsr_rows(b, x, &mut y, 0..b.nbrows());
+        return y;
+    }
+    let yp = SendPtr(y.as_mut_ptr());
+    let queue = DynamicQueue::new(b.nbrows(), chunk.max(1));
+    std::thread::scope(|s| {
+        for _ in 0..nthreads {
+            let queue = &queue;
+            s.spawn(move || {
+                let yp = yp;
+                while let Some(r) = queue.claim() {
+                    // Block rows map to disjoint y ranges.
+                    let lo = r.start * b.r;
+                    let hi = (r.end * b.r).min(b.nrows);
+                    let ys =
+                        unsafe { std::slice::from_raw_parts_mut(yp.0.add(lo), hi - lo) };
+                    bcsr_rows_local(b, x, ys, r);
+                }
+            });
+        }
+    });
+    y
+}
+
+fn bcsr_rows(b: &Bcsr, x: &[f64], y: &mut [f64], br_range: std::ops::Range<usize>) {
+    let lo = br_range.start * b.r;
+    let hi = (br_range.end * b.r).min(b.nrows);
+    bcsr_rows_local(b, x, &mut y[lo..hi], br_range);
+}
+
+#[inline]
+fn bcsr_rows_local(b: &Bcsr, x: &[f64], ys: &mut [f64], br_range: std::ops::Range<usize>) {
+    let base_row = br_range.start * b.r;
+    for br in br_range {
+        let row_lo = br * b.r;
+        let row_hi = (row_lo + b.r).min(b.nrows);
+        for kblk in b.brptrs[br]..b.brptrs[br + 1] {
+            let col_lo = b.bcids[kblk] as usize * b.c;
+            let block = &b.vals[kblk * b.r * b.c..(kblk + 1) * b.r * b.c];
+            let cwidth = b.c.min(b.ncols - col_lo);
+            let xs = &x[col_lo..col_lo + cwidth];
+            for i in row_lo..row_hi {
+                let brow = &block[(i - row_lo) * b.c..(i - row_lo) * b.c + cwidth];
+                let mut acc = 0.0;
+                for (bv, xv) in brow.iter().zip(xs) {
+                    acc += bv * xv;
+                }
+                ys[i - base_row] += acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::{random_vector, randomize_values};
+    use crate::sparse::gen::stencil::stencil_2d;
+    use crate::sparse::Bcsr;
+
+    fn test_matrix() -> Csr {
+        let mut a = stencil_2d(40, 37);
+        randomize_values(&mut a, 7);
+        a
+    }
+
+    fn assert_close(a: &[f64], b: &[f64]) {
+        assert_eq!(a.len(), b.len());
+        for (u, v) in a.iter().zip(b) {
+            assert!((u - v).abs() < 1e-10, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_all_policies() {
+        let a = test_matrix();
+        let x = random_vector(a.ncols, 11);
+        let want = a.spmv(&x);
+        for policy in Policy::paper_sweep() {
+            for threads in [1, 2, 3, 8] {
+                let got = spmv_parallel(&a, &x, threads, policy);
+                assert_close(&got, &want);
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_parallel_matches_serial() {
+        let a = test_matrix();
+        for k in [1usize, 4, 16, 17] {
+            let x = random_vector(a.ncols * k, 13);
+            let want = a.spmm(&x, k);
+            let got = spmm_parallel(&a, &x, k, 4, Policy::Dynamic(32));
+            assert_close(&got, &want);
+        }
+    }
+
+    #[test]
+    fn bcsr_parallel_matches_serial() {
+        let a = test_matrix();
+        let x = random_vector(a.ncols, 17);
+        let want = a.spmv(&x);
+        for (r, c) in crate::sparse::bcsr::PAPER_BLOCK_CONFIGS {
+            let b = Bcsr::from_csr(&a, r, c);
+            let got = bcsr_spmv_parallel(&b, &x, 4, 16);
+            assert_close(&got, &want);
+        }
+    }
+
+    #[test]
+    fn into_variant_no_alloc_reuse() {
+        let a = test_matrix();
+        let x = random_vector(a.ncols, 19);
+        let mut y = vec![f64::NAN; a.nrows];
+        spmv_parallel_into(&a, &x, &mut y, 4, Policy::Dynamic(64));
+        assert_close(&y, &a.spmv(&x));
+    }
+
+    #[test]
+    fn tiny_matrix_falls_back_to_serial() {
+        let a = stencil_2d(3, 3);
+        let x = vec![1.0; 9];
+        let got = spmv_parallel(&a, &x, 8, Policy::Dynamic(64));
+        assert_close(&got, &a.spmv(&x));
+    }
+
+    #[test]
+    fn empty_rows_handled() {
+        let mut coo = crate::sparse::Coo::new(500, 500);
+        for i in (0..500).step_by(7) {
+            coo.push(i, i, 2.0);
+        }
+        let a = coo.to_csr();
+        let x = random_vector(500, 23);
+        assert_close(&spmv_parallel(&a, &x, 4, Policy::Dynamic(16)), &a.spmv(&x));
+    }
+}

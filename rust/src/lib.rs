@@ -1,0 +1,37 @@
+//! # phi-spmv
+//!
+//! Reproduction of *"Performance Evaluation of Sparse Matrix Multiplication
+//! Kernels on Intel Xeon Phi"* (Saule, Kaya, Çatalyürek, 2013).
+//!
+//! The library has four pillars:
+//!
+//! * [`sparse`] — sparse-matrix substrate: COO/CSR/CSC/ELL/BCSR formats,
+//!   MatrixMarket I/O, the paper's 22-matrix synthetic suite, RCM ordering,
+//!   and the analysis metrics (UCLD, matrix bandwidth, Table 1 statistics).
+//! * [`arch`] — machine models: a cycle-approximate Intel Xeon Phi (KNC
+//!   SE10P) simulator plus Westmere / Sandy Bridge / Tesla C2050 / K20
+//!   baselines, with bottleneck attribution (instruction vs. latency vs.
+//!   bandwidth bound).
+//! * [`kernels`] — the sparse kernels themselves, twice over: real,
+//!   multithreaded Rust implementations (executed and benchmarked on the
+//!   host), and instruction-stream/traffic models fed to the simulators to
+//!   regenerate the paper's figures.
+//! * [`runtime`] + [`coordinator`] — the three-layer AOT stack: the Rust
+//!   coordinator loads Pallas/JAX kernels AOT-lowered to HLO text and runs
+//!   them through the PJRT CPU client, orchestrating the paper's experiment
+//!   sweeps.
+//!
+//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod analysis;
+pub mod arch;
+pub mod coordinator;
+pub mod kernels;
+pub mod runtime;
+pub mod sched;
+pub mod sparse;
+pub mod util;
+
+/// Library result alias used across fallible APIs.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,146 @@
+//! `phi-spmv` — CLI for the paper-reproduction experiment suite.
+//!
+//! ```text
+//! phi-spmv <experiment|all|list> [--scale S] [--out DIR] [--quiet]
+//! phi-spmv run --matrix <suite-name> [--kernel spmv|spmm] [--threads N]
+//!              [--chunk C] [--scale S] [--pjrt]
+//! ```
+//!
+//! Experiments: table1 fig1 fig2 fig4 fig5 fig6 fig7 fig8 table2 fig9 fig10.
+//! `run` executes the *native* kernels (and optionally the PJRT artifact)
+//! on one suite matrix and reports measured GFlop/s.
+
+use phi_spmv::coordinator::{Ctx, Experiment, ALL_EXPERIMENTS};
+use phi_spmv::kernels::{spmm_parallel, spmv_parallel};
+use phi_spmv::sched::Policy;
+use phi_spmv::sparse::gen::{paper_suite, random_vector, randomize_values};
+use phi_spmv::util::bench::Bencher;
+use phi_spmv::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match dispatch(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    match cmd {
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        "list" => {
+            for id in ALL_EXPERIMENTS {
+                println!("{id}");
+            }
+            Ok(())
+        }
+        "all" => {
+            let ctx = ctx_from(args);
+            for id in ALL_EXPERIMENTS {
+                run_experiment(id, &ctx)?;
+            }
+            Ok(())
+        }
+        "run" => run_native(args),
+        id if ALL_EXPERIMENTS.contains(&id) => {
+            let ctx = ctx_from(args);
+            run_experiment(id, &ctx)
+        }
+        other => anyhow::bail!("unknown command {other:?}; try `phi-spmv help`"),
+    }
+}
+
+fn ctx_from(args: &Args) -> Ctx {
+    Ctx {
+        scale: args.get("scale", 0.25f64).clamp(1e-4, 1.0),
+        out_dir: args.get_str("out").unwrap_or("results").into(),
+        verbose: !args.has_flag("quiet"),
+        ..Ctx::default()
+    }
+}
+
+fn run_experiment(id: &str, ctx: &Ctx) -> anyhow::Result<()> {
+    let report = Experiment::run(id, ctx)?;
+    println!("{}", report.render());
+    let files = report.save(&ctx.out_dir)?;
+    eprintln!("[phi-spmv] saved {} files under {}", files.len(), ctx.out_dir.display());
+    Ok(())
+}
+
+/// `run`: measure the native kernels on one suite matrix.
+fn run_native(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_str("matrix").unwrap_or("mesh_2048").to_string();
+    let scale = args.get("scale", 0.25f64).clamp(1e-4, 1.0);
+    let threads = args.get("threads", std::thread::available_parallelism()?.get());
+    let chunk = args.get("chunk", 64usize);
+    let kernel = args.get_str("kernel").unwrap_or("spmv").to_string();
+    let k = args.get("k", 16usize);
+
+    let suite = paper_suite();
+    let entry = suite
+        .iter()
+        .find(|e| e.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown matrix {name:?}; see `phi-spmv table1`"))?;
+    eprintln!("[phi-spmv] generating {name} at scale {scale}");
+    let mut a = entry.generate_scaled(scale);
+    randomize_values(&mut a, 5);
+    let nnz = a.nnz();
+    eprintln!(
+        "[phi-spmv] {} rows, {} nonzeros, {threads} threads, dynamic,{chunk}",
+        a.nrows, nnz
+    );
+
+    let bencher = Bencher::quick();
+    match kernel.as_str() {
+        "spmv" => {
+            let x = random_vector(a.ncols, 17);
+            let m = bencher
+                .run("native spmv", || spmv_parallel(&a, &x, threads, Policy::Dynamic(chunk)));
+            println!("{}", m.line());
+            println!(
+                "spmv: {:.2} GFlop/s  (app bw {:.2} GB/s)",
+                m.gflops(2.0 * nnz as f64),
+                m.gbps(20.0 * a.nrows as f64 + 12.0 * nnz as f64)
+            );
+            if args.has_flag("pjrt") {
+                let mut rt = phi_spmv::runtime::Runtime::from_default_dir()?;
+                let exe = rt.spmv(&a)?;
+                let mp = bencher.run("pjrt spmv", || rt.run_spmv(&exe, &x).unwrap());
+                println!("{}", mp.line());
+                println!("pjrt spmv: {:.2} GFlop/s", mp.gflops(2.0 * nnz as f64));
+            }
+        }
+        "spmm" => {
+            let x = random_vector(a.ncols * k, 19);
+            let m = bencher.run("native spmm", || {
+                spmm_parallel(&a, &x, k, threads, Policy::Dynamic(chunk))
+            });
+            println!("{}", m.line());
+            println!("spmm k={k}: {:.2} GFlop/s", m.gflops(2.0 * nnz as f64 * k as f64));
+        }
+        other => anyhow::bail!("unknown kernel {other:?} (spmv|spmm)"),
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "phi-spmv — reproduction of 'Performance Evaluation of Sparse Matrix \
+         Multiplication Kernels on Intel Xeon Phi' (2013)\n\n\
+         USAGE:\n  phi-spmv <experiment>|all|list [--scale S] [--out DIR] [--quiet]\n  \
+         phi-spmv run --matrix NAME [--kernel spmv|spmm] [--threads N] [--chunk C] [--pjrt]\n\n\
+         EXPERIMENTS: {}\n\n\
+         --scale S   matrix size factor (default 0.25; 1.0 = paper sizes)\n\
+         --out DIR   results directory (default results/)\n\
+         --pjrt      also run the AOT/PJRT artifact path (needs `make artifacts`)",
+        ALL_EXPERIMENTS.join(" ")
+    );
+}

@@ -1,0 +1,188 @@
+//! PJRT client wrapper: load HLO text → compile → execute.
+//!
+//! Follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Artifacts are lowered with
+//! `return_tuple=True`, so results unwrap with `to_tuple1`.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::sparse::Csr;
+
+use super::manifest::{ArtifactKind, ArtifactMeta, Manifest};
+use super::padded::PaddedEll;
+
+/// The PJRT CPU runtime: client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Creates a CPU runtime over the artifacts in `dir`.
+    pub fn new(dir: &Path) -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    /// Creates a runtime over the default artifacts directory.
+    pub fn from_default_dir() -> anyhow::Result<Runtime> {
+        Self::new(&super::artifacts_dir())
+    }
+
+    /// PJRT platform name (e.g. "cpu") — for logging.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The loaded manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn compiled(&mut self, meta: &ArtifactMeta) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(&meta.name) {
+            let path = self.manifest.hlo_path(meta);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(meta.name.clone(), exe);
+        }
+        Ok(&self.cache[&meta.name])
+    }
+
+    /// Prepares an SpMV executable for matrix `a`: picks the smallest
+    /// fitting bucket, pads, compiles (cached by bucket).
+    pub fn spmv(&mut self, a: &Csr) -> anyhow::Result<SpmvExecutable> {
+        let max_nnz = (0..a.nrows).map(|i| a.row_nnz(i)).max().unwrap_or(0);
+        let meta = self
+            .manifest
+            .find_bucket(ArtifactKind::Spmv, a.nrows, a.ncols, max_nnz, 1)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no spmv artifact bucket fits {}x{} max-row {max_nnz}; \
+                     available: {:?}",
+                    a.nrows,
+                    a.ncols,
+                    self.manifest.artifacts.iter().map(|m| &m.name).collect::<Vec<_>>()
+                )
+            })?
+            .clone();
+        self.compiled(&meta)?; // warm the cache
+        let padded = PaddedEll::fit(a, &meta)?;
+        let vals = xla::Literal::vec1(&padded.vals)
+            .reshape(&[meta.rows as i64, meta.width as i64])?;
+        let cols = xla::Literal::vec1(&padded.cols)
+            .reshape(&[meta.rows as i64, meta.width as i64])?;
+        Ok(SpmvExecutable { meta, padded, vals, cols })
+    }
+
+    /// Runs a prepared SpMV: `y ← Ax` through PJRT.
+    pub fn run_spmv(&mut self, exe: &SpmvExecutable, x: &[f64]) -> anyhow::Result<Vec<f64>> {
+        let xp = exe.padded.pad_x(x);
+        let xl = xla::Literal::vec1(&xp);
+        let compiled = self.compiled(&exe.meta)?;
+        let result = compiled.execute::<&xla::Literal>(&[&exe.vals, &exe.cols, &xl])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let y = out.to_vec::<f64>()?;
+        Ok(exe.padded.unpad_y(y))
+    }
+
+    /// Prepares a fused power-iteration executable
+    /// (`x' = Ax/‖Ax‖`, returning also `‖Ax‖` and `xᵀAx`).
+    pub fn power_step(&mut self, a: &Csr) -> anyhow::Result<SpmvExecutable> {
+        let max_nnz = (0..a.nrows).map(|i| a.row_nnz(i)).max().unwrap_or(0);
+        let meta = self
+            .manifest
+            .find_bucket(ArtifactKind::Power, a.nrows, a.ncols, max_nnz, 1)
+            .ok_or_else(|| anyhow::anyhow!("no power artifact bucket fits"))?
+            .clone();
+        self.compiled(&meta)?;
+        let padded = PaddedEll::fit(a, &meta)?;
+        let vals = xla::Literal::vec1(&padded.vals)
+            .reshape(&[meta.rows as i64, meta.width as i64])?;
+        let cols = xla::Literal::vec1(&padded.cols)
+            .reshape(&[meta.rows as i64, meta.width as i64])?;
+        Ok(SpmvExecutable { meta, padded, vals, cols })
+    }
+
+    /// Runs a prepared power-iteration step. Returns `(x', ‖Ax‖, xᵀAx)`.
+    ///
+    /// Note: with row padding, `x'` is the normalized `Ax` of the *padded*
+    /// system; padding rows are zero so the norm is unaffected.
+    pub fn run_power_step(
+        &mut self,
+        exe: &SpmvExecutable,
+        x: &[f64],
+    ) -> anyhow::Result<(Vec<f64>, f64, f64)> {
+        let xp = exe.padded.pad_x(x);
+        let xl = xla::Literal::vec1(&xp);
+        let compiled = self.compiled(&exe.meta)?;
+        let result = compiled.execute::<&xla::Literal>(&[&exe.vals, &exe.cols, &xl])?[0][0]
+            .to_literal_sync()?;
+        let (xn, norm, rayleigh) = result.to_tuple3()?;
+        let xn = exe.padded.unpad_y(xn.to_vec::<f64>()?);
+        let norm = norm.to_vec::<f64>()?[0];
+        let rayleigh = rayleigh.to_vec::<f64>()?[0];
+        Ok((xn, norm, rayleigh))
+    }
+
+    /// Prepares an SpMM executable (width `k`).
+    pub fn spmm(&mut self, a: &Csr, k: usize) -> anyhow::Result<SpmmExecutable> {
+        let max_nnz = (0..a.nrows).map(|i| a.row_nnz(i)).max().unwrap_or(0);
+        let meta = self
+            .manifest
+            .find_bucket(ArtifactKind::Spmm, a.nrows, a.ncols, max_nnz, k)
+            .ok_or_else(|| anyhow::anyhow!("no spmm bucket fits (k={k})"))?
+            .clone();
+        self.compiled(&meta)?;
+        let padded = PaddedEll::fit(a, &meta)?;
+        let vals = xla::Literal::vec1(&padded.vals)
+            .reshape(&[meta.rows as i64, meta.width as i64])?;
+        let cols = xla::Literal::vec1(&padded.cols)
+            .reshape(&[meta.rows as i64, meta.width as i64])?;
+        Ok(SpmmExecutable { meta, padded, vals, cols, k })
+    }
+
+    /// Runs a prepared SpMM: `Y ← AX` (row-major X of width k).
+    pub fn run_spmm(&mut self, exe: &SpmmExecutable, x: &[f64]) -> anyhow::Result<Vec<f64>> {
+        let xp = exe.padded.pad_xk(x, exe.k);
+        let xl = xla::Literal::vec1(&xp)
+            .reshape(&[exe.padded.ncols as i64, exe.k as i64])?;
+        let compiled = self.compiled(&exe.meta)?;
+        let result = compiled.execute::<&xla::Literal>(&[&exe.vals, &exe.cols, &xl])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let y = out.to_vec::<f64>()?;
+        Ok(exe.padded.unpad_yk(y, exe.k))
+    }
+}
+
+/// A matrix prepared for repeated PJRT SpMV execution.
+pub struct SpmvExecutable {
+    /// Bucket metadata.
+    pub meta: ArtifactMeta,
+    /// The padded matrix.
+    pub padded: PaddedEll,
+    vals: xla::Literal,
+    cols: xla::Literal,
+}
+
+/// A matrix prepared for repeated PJRT SpMM execution.
+pub struct SpmmExecutable {
+    /// Bucket metadata.
+    pub meta: ArtifactMeta,
+    /// The padded matrix.
+    pub padded: PaddedEll,
+    vals: xla::Literal,
+    cols: xla::Literal,
+    /// Dense width.
+    pub k: usize,
+}
+
+// PJRT integration tests live in rust/tests/pjrt_roundtrip.rs (they need
+// `make artifacts` to have produced the HLO files).

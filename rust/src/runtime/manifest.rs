@@ -1,0 +1,173 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Kind of compiled kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// ELL SpMV: `(vals[r,w] f64, cols[r,w] i32, x[n] f64) -> y[r] f64`.
+    Spmv,
+    /// ELL SpMM: `(vals, cols, X[n,k]) -> Y[r,k]`.
+    Spmm,
+    /// Fused power-iteration step:
+    /// `(vals, cols, x) -> (Ax/‖Ax‖, ‖Ax‖, xᵀAx)`.
+    Power,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "spmv" => Ok(ArtifactKind::Spmv),
+            "spmm" => Ok(ArtifactKind::Spmm),
+            "power" => Ok(ArtifactKind::Power),
+            other => anyhow::bail!("unknown artifact kind {other:?}"),
+        }
+    }
+}
+
+/// One compiled artifact (a shape bucket).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Unique name, e.g. `spmv_r4096_w8_n4096`.
+    pub name: String,
+    /// Kernel kind.
+    pub kind: ArtifactKind,
+    /// Padded row count.
+    pub rows: usize,
+    /// ELL width (multiple of 8).
+    pub width: usize,
+    /// Input-vector length (columns of the logical matrix).
+    pub ncols: usize,
+    /// Dense width for SpMM (1 for SpMV).
+    pub k: usize,
+    /// HLO text file, relative to the manifest.
+    pub path: PathBuf,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// All artifacts.
+    pub artifacts: Vec<ArtifactMeta>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Loads `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}; run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parses manifest JSON text.
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
+        let root = Json::parse(text)?;
+        let list = root
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts' array"))?;
+        let mut artifacts = Vec::new();
+        for item in list {
+            let get_usize = |k: &str| {
+                item.get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing numeric {k:?}"))
+            };
+            let get_str = |k: &str| {
+                item.get(k)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing string {k:?}"))
+            };
+            artifacts.push(ArtifactMeta {
+                name: get_str("name")?.to_string(),
+                kind: ArtifactKind::parse(get_str("kind")?)?,
+                rows: get_usize("rows")?,
+                width: get_usize("width")?,
+                ncols: get_usize("ncols")?,
+                k: get_usize("k").unwrap_or(1),
+                path: PathBuf::from(get_str("path")?),
+            });
+        }
+        Ok(Manifest { artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.path)
+    }
+
+    /// Smallest bucket of `kind` that fits a `rows × ncols` matrix with max
+    /// row length `max_nnz` (and width-k for SpMM).
+    pub fn find_bucket(
+        &self,
+        kind: ArtifactKind,
+        rows: usize,
+        ncols: usize,
+        max_nnz: usize,
+        k: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|m| {
+                m.kind == kind
+                    && m.rows >= rows
+                    && m.ncols >= ncols
+                    && m.width >= max_nnz
+                    && (kind == ArtifactKind::Spmv || m.k == k)
+            })
+            .min_by_key(|m| m.rows * m.width)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {"name": "spmv_r4096_w8_n4096", "kind": "spmv", "rows": 4096,
+         "width": 8, "ncols": 4096, "k": 1, "path": "spmv_r4096_w8_n4096.hlo.txt"},
+        {"name": "spmv_r16384_w8_n16384", "kind": "spmv", "rows": 16384,
+         "width": 8, "ncols": 16384, "k": 1, "path": "spmv_r16384_w8_n16384.hlo.txt"},
+        {"name": "spmm_r4096_w8_n4096_k16", "kind": "spmm", "rows": 4096,
+         "width": 8, "ncols": 4096, "k": 16, "path": "spmm.hlo.txt"}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("artifacts")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.artifacts[0].kind, ArtifactKind::Spmv);
+        assert_eq!(m.artifacts[2].k, 16);
+    }
+
+    #[test]
+    fn bucket_selection_smallest_fit() {
+        let m = Manifest::parse(SAMPLE, Path::new("a")).unwrap();
+        let b = m.find_bucket(ArtifactKind::Spmv, 3000, 3000, 5, 1).unwrap();
+        assert_eq!(b.rows, 4096);
+        let b2 = m.find_bucket(ArtifactKind::Spmv, 5000, 5000, 5, 1).unwrap();
+        assert_eq!(b2.rows, 16384);
+        assert!(m.find_bucket(ArtifactKind::Spmv, 20_000, 5, 5, 1).is_none());
+        assert!(m.find_bucket(ArtifactKind::Spmv, 100, 100, 9, 1).is_none(), "width exceeded");
+    }
+
+    #[test]
+    fn spmm_bucket_needs_matching_k() {
+        let m = Manifest::parse(SAMPLE, Path::new("a")).unwrap();
+        assert!(m.find_bucket(ArtifactKind::Spmm, 100, 100, 8, 16).is_some());
+        assert!(m.find_bucket(ArtifactKind::Spmm, 100, 100, 8, 32).is_none());
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        let bad = r#"{"artifacts": [{"name": "x", "kind": "spmv"}]}"#;
+        assert!(Manifest::parse(bad, Path::new("a")).is_err());
+    }
+}

@@ -1,0 +1,26 @@
+//! PJRT runtime — the AOT execution path.
+//!
+//! Python/JAX/Pallas runs **once** at build time (`make artifacts`): it
+//! lowers the SpMV/SpMM kernels to HLO *text* (see `python/compile/aot.py`
+//! and `/opt/xla-example/README.md` for why text, not serialized protos)
+//! and writes `artifacts/manifest.json`. This module loads those artifacts
+//! through the `xla` crate's PJRT CPU client and executes them from Rust —
+//! Python is never on the request path.
+//!
+//! XLA executables are shape-specialized, so matrices are padded to the
+//! artifact's ELL shape bucket by [`padded::PaddedEll`].
+
+pub mod executor;
+pub mod manifest;
+pub mod padded;
+
+pub use executor::{Runtime, SpmmExecutable, SpmvExecutable};
+pub use manifest::{ArtifactKind, ArtifactMeta, Manifest};
+pub use padded::PaddedEll;
+
+/// Default artifacts directory, overridable with `PHI_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("PHI_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

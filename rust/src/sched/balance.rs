@@ -1,0 +1,57 @@
+//! Load-balance statistics for a work assignment weighted by per-row cost.
+
+use super::policy::StaticAssignment;
+
+/// Load-balance summary for a weighted assignment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadBalance {
+    /// Work (e.g. nonzeros) per worker.
+    pub per_worker: Vec<u64>,
+    /// max / mean — 1.0 is perfect balance.
+    pub imbalance: f64,
+}
+
+impl LoadBalance {
+    /// Computes balance of an assignment under per-index weights.
+    pub fn compute(assign: &StaticAssignment, weights: &[u64]) -> Self {
+        let per_worker: Vec<u64> = assign
+            .ranges
+            .iter()
+            .map(|rs| rs.iter().map(|r| weights[r.clone()].iter().sum::<u64>()).sum())
+            .collect();
+        let total: u64 = per_worker.iter().sum();
+        let max = per_worker.iter().copied().max().unwrap_or(0);
+        let mean = total as f64 / per_worker.len().max(1) as f64;
+        let imbalance = if mean > 0.0 { max as f64 / mean } else { 1.0 };
+        LoadBalance { per_worker, imbalance }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::Policy;
+
+    #[test]
+    fn uniform_weights_balanced() {
+        let a = StaticAssignment::build(Policy::Dynamic(8), 640, 4);
+        let w = vec![1u64; 640];
+        let lb = LoadBalance::compute(&a, &w);
+        assert!((lb.imbalance - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn skewed_weights_static_block_imbalanced() {
+        // All the work in the first quarter → static block very imbalanced,
+        // small dynamic chunks much better.
+        let n = 1024;
+        let mut w = vec![1u64; n];
+        for x in w.iter_mut().take(n / 4) {
+            *x = 100;
+        }
+        let blk = LoadBalance::compute(&StaticAssignment::build(Policy::StaticBlock, n, 4), &w);
+        let dyn32 = LoadBalance::compute(&StaticAssignment::build(Policy::Dynamic(32), n, 4), &w);
+        assert!(blk.imbalance > 2.0, "static {}", blk.imbalance);
+        assert!(dyn32.imbalance < blk.imbalance);
+    }
+}

@@ -1,0 +1,72 @@
+//! Work scheduling — OpenMP-style loop scheduling policies.
+//!
+//! The paper runs its kernels with OpenMP `schedule(dynamic, 32|64)` and
+//! reports that dynamic with chunk 32/64 is typically best. The same
+//! policies drive (a) the native multithreaded Rust kernels (via an atomic
+//! chunk-claiming iterator) and (b) the simulator's work distribution.
+
+pub mod balance;
+pub mod policy;
+
+pub use balance::LoadBalance;
+pub use policy::{ChunkIter, Policy, StaticAssignment};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A shared dynamic work queue over `0..n` in chunks of `chunk` — the
+/// runtime analog of `schedule(dynamic, chunk)`.
+#[derive(Debug)]
+pub struct DynamicQueue {
+    next: AtomicUsize,
+    n: usize,
+    chunk: usize,
+}
+
+impl DynamicQueue {
+    /// Creates a queue over `0..n` with the given chunk size.
+    pub fn new(n: usize, chunk: usize) -> Self {
+        assert!(chunk > 0, "chunk must be positive");
+        DynamicQueue { next: AtomicUsize::new(0), n, chunk }
+    }
+
+    /// Claims the next chunk; returns `None` when the range is exhausted.
+    #[inline]
+    pub fn claim(&self) -> Option<std::ops::Range<usize>> {
+        let start = self.next.fetch_add(self.chunk, Ordering::Relaxed);
+        if start >= self.n {
+            return None;
+        }
+        Some(start..(start + self.chunk).min(self.n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn dynamic_queue_covers_range_exactly_once() {
+        let q = Arc::new(DynamicQueue::new(1003, 32));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut mine = Vec::new();
+                while let Some(r) = q.claim() {
+                    mine.extend(r);
+                }
+                mine
+            }));
+        }
+        let mut all: Vec<usize> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1003).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_queue() {
+        let q = DynamicQueue::new(0, 64);
+        assert!(q.claim().is_none());
+    }
+}

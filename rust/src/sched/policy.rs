@@ -1,0 +1,226 @@
+//! Scheduling policies: static, dynamic(chunk), guided(chunk).
+
+
+/// An OpenMP-style loop scheduling policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Policy {
+    /// Contiguous equal blocks, one per thread.
+    StaticBlock,
+    /// Round-robin chunks of the given size (OpenMP `static, chunk`).
+    StaticChunk(usize),
+    /// First-come-first-served chunks of the given size.
+    Dynamic(usize),
+    /// Decreasing chunk sizes, floor `chunk` (OpenMP `guided, chunk`).
+    Guided(usize),
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Policy::StaticBlock => write!(f, "static"),
+            Policy::StaticChunk(c) => write!(f, "static,{c}"),
+            Policy::Dynamic(c) => write!(f, "dynamic,{c}"),
+            Policy::Guided(c) => write!(f, "guided,{c}"),
+        }
+    }
+}
+
+impl Policy {
+    /// The policies swept by the paper's experiments ("multiple scheduling
+    /// policies … dynamic with chunk 32 or 64 typically best").
+    pub fn paper_sweep() -> Vec<Policy> {
+        vec![
+            Policy::StaticBlock,
+            Policy::StaticChunk(64),
+            Policy::Dynamic(16),
+            Policy::Dynamic(32),
+            Policy::Dynamic(64),
+            Policy::Dynamic(128),
+            Policy::Guided(32),
+        ]
+    }
+}
+
+/// The deterministic (static-policy) assignment of `0..n` to `nthreads`
+/// workers, used by the simulator — and by the analytic cache model, which
+/// approximates dynamic scheduling by round-robin chunks (§4.2: "chunks of
+/// 64 rows distributed round-robin, a reasonable approximation of the
+/// dynamic scheduling policy").
+#[derive(Debug, Clone)]
+pub struct StaticAssignment {
+    /// Per-worker list of row ranges.
+    pub ranges: Vec<Vec<std::ops::Range<usize>>>,
+}
+
+impl StaticAssignment {
+    /// Builds the assignment for a policy. `Dynamic(c)` and `Guided(c)` are
+    /// approximated by round-robin chunks of `c` (the paper's own
+    /// approximation for analysis).
+    pub fn build(policy: Policy, n: usize, nthreads: usize) -> Self {
+        assert!(nthreads > 0);
+        let mut ranges = vec![Vec::new(); nthreads];
+        match policy {
+            Policy::StaticBlock => {
+                let per = n.div_ceil(nthreads);
+                for (t, r) in ranges.iter_mut().enumerate() {
+                    let lo = (t * per).min(n);
+                    let hi = ((t + 1) * per).min(n);
+                    if lo < hi {
+                        r.push(lo..hi);
+                    }
+                }
+            }
+            Policy::StaticChunk(c) | Policy::Dynamic(c) => {
+                let c = c.max(1);
+                let mut t = 0usize;
+                let mut lo = 0usize;
+                while lo < n {
+                    let hi = (lo + c).min(n);
+                    ranges[t].push(lo..hi);
+                    t = (t + 1) % nthreads;
+                    lo = hi;
+                }
+            }
+            Policy::Guided(c) => {
+                let c = c.max(1);
+                let mut remaining = n;
+                let mut lo = 0usize;
+                let mut t = 0usize;
+                while lo < n {
+                    let size = (remaining / nthreads).max(c).min(remaining);
+                    ranges[t].push(lo..lo + size);
+                    lo += size;
+                    remaining -= size;
+                    t = (t + 1) % nthreads;
+                }
+            }
+        }
+        StaticAssignment { ranges }
+    }
+
+    /// Total rows assigned (must equal `n`).
+    pub fn total(&self) -> usize {
+        self.ranges.iter().flatten().map(|r| r.len()).sum()
+    }
+
+    /// Verifies each index in `0..n` is covered exactly once.
+    pub fn covers_exactly(&self, n: usize) -> bool {
+        let mut seen = vec![false; n];
+        for r in self.ranges.iter().flatten() {
+            for i in r.clone() {
+                if i >= n || seen[i] {
+                    return false;
+                }
+                seen[i] = true;
+            }
+        }
+        seen.into_iter().all(|b| b)
+    }
+}
+
+/// Serial iterator over the chunks a policy produces, in claim order —
+/// used by the simulator's event loop.
+pub struct ChunkIter {
+    chunks: std::vec::IntoIter<std::ops::Range<usize>>,
+}
+
+impl ChunkIter {
+    /// Chunk sequence for a policy over `0..n` (thread-agnostic ordering).
+    pub fn new(policy: Policy, n: usize, nthreads: usize) -> Self {
+        let mut chunks = Vec::new();
+        match policy {
+            Policy::StaticBlock => {
+                let per = n.div_ceil(nthreads.max(1));
+                let mut lo = 0;
+                while lo < n {
+                    chunks.push(lo..(lo + per).min(n));
+                    lo += per;
+                }
+            }
+            Policy::StaticChunk(c) | Policy::Dynamic(c) => {
+                let c = c.max(1);
+                let mut lo = 0;
+                while lo < n {
+                    chunks.push(lo..(lo + c).min(n));
+                    lo += c;
+                }
+            }
+            Policy::Guided(c) => {
+                let c = c.max(1);
+                let mut remaining = n;
+                let mut lo = 0;
+                while lo < n {
+                    let size = (remaining / nthreads.max(1)).max(c).min(remaining);
+                    chunks.push(lo..lo + size);
+                    lo += size;
+                    remaining -= size;
+                }
+            }
+        }
+        ChunkIter { chunks: chunks.into_iter() }
+    }
+}
+
+impl Iterator for ChunkIter {
+    type Item = std::ops::Range<usize>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.chunks.next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_policies_cover_exactly() {
+        for policy in Policy::paper_sweep() {
+            for n in [0usize, 1, 63, 64, 65, 1000] {
+                for t in [1usize, 3, 61] {
+                    let a = StaticAssignment::build(policy, n, t);
+                    assert!(a.covers_exactly(n), "{policy} n={n} t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn static_block_is_contiguous() {
+        let a = StaticAssignment::build(Policy::StaticBlock, 100, 4);
+        for r in &a.ranges {
+            assert!(r.len() <= 1);
+        }
+        assert_eq!(a.ranges[0][0], 0..25);
+    }
+
+    #[test]
+    fn dynamic_round_robin() {
+        let a = StaticAssignment::build(Policy::Dynamic(10), 45, 2);
+        assert_eq!(a.ranges[0], vec![0..10, 20..30, 40..45]);
+        assert_eq!(a.ranges[1], vec![10..20, 30..40]);
+    }
+
+    #[test]
+    fn guided_chunks_decrease() {
+        let it = ChunkIter::new(Policy::Guided(8), 1000, 4);
+        let sizes: Vec<usize> = it.map(|r| r.len()).collect();
+        assert!(sizes.windows(2).all(|w| w[0] >= w[1]));
+        assert_eq!(sizes.iter().sum::<usize>(), 1000);
+        assert!(*sizes.last().unwrap() >= 1);
+    }
+
+    #[test]
+    fn chunk_iter_covers() {
+        for policy in Policy::paper_sweep() {
+            let total: usize = ChunkIter::new(policy, 777, 5).map(|r| r.len()).sum();
+            assert_eq!(total, 777, "{policy}");
+        }
+    }
+
+    #[test]
+    fn display_matches_openmp_syntax() {
+        assert_eq!(Policy::Dynamic(64).to_string(), "dynamic,64");
+        assert_eq!(Policy::StaticBlock.to_string(), "static");
+    }
+}

@@ -1,0 +1,314 @@
+//! Alternative sparse formats (paper §3: "There exist other sparse matrix
+//! representations [14]" — SPARSKIT): JDS, DIA and HYB, with SpMV kernels
+//! and round-trips. Used by the format-ablation bench to show where each
+//! wins relative to CRS, completing the paper's storage-scheme discussion.
+
+use super::{Coo, Csr};
+
+// ---------------------------------------------------------------- JDS ---
+
+/// Jagged Diagonal Storage: rows sorted by decreasing length, stored in
+/// column-of-jags order. The classic vector-machine format — SpMV streams
+/// unit-stride through each jag (no per-row remainder loops).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Jds {
+    /// Logical rows.
+    pub nrows: usize,
+    /// Logical columns.
+    pub ncols: usize,
+    /// Row permutation: `perm[k]` = original row of sorted position k.
+    pub perm: Vec<u32>,
+    /// Start offset of each jag (length `max_row_len + 1`).
+    pub jptrs: Vec<usize>,
+    /// Column ids, jag-major.
+    pub cids: Vec<u32>,
+    /// Values, jag-major.
+    pub vals: Vec<f64>,
+}
+
+impl Jds {
+    /// Builds from CSR.
+    pub fn from_csr(a: &Csr) -> Self {
+        let mut order: Vec<u32> = (0..a.nrows as u32).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(a.row_nnz(i as usize)));
+        let maxlen = order.first().map(|&i| a.row_nnz(i as usize)).unwrap_or(0);
+        let mut jptrs = vec![0usize; maxlen + 1];
+        let mut cids = Vec::with_capacity(a.nnz());
+        let mut vals = Vec::with_capacity(a.nnz());
+        for jag in 0..maxlen {
+            for &row in &order {
+                let r = row as usize;
+                if a.row_nnz(r) > jag {
+                    cids.push(a.row_cids(r)[jag]);
+                    vals.push(a.row_vals(r)[jag]);
+                }
+            }
+            jptrs[jag + 1] = cids.len();
+        }
+        Jds { nrows: a.nrows, ncols: a.ncols, perm: order, jptrs, cids, vals }
+    }
+
+    /// Number of jags.
+    pub fn njags(&self) -> usize {
+        self.jptrs.len() - 1
+    }
+
+    /// SpMV: `y ← Ax` (output in original row order).
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        let mut ysorted = vec![0.0; self.nrows];
+        for jag in 0..self.njags() {
+            let (s, e) = (self.jptrs[jag], self.jptrs[jag + 1]);
+            // Jag `jag` covers sorted rows 0..(e-s), contiguously.
+            for (k, idx) in (s..e).enumerate() {
+                ysorted[k] += self.vals[idx] * x[self.cids[idx] as usize];
+            }
+        }
+        let mut y = vec![0.0; self.nrows];
+        for (k, &row) in self.perm.iter().enumerate() {
+            y[row as usize] = ysorted[k];
+        }
+        y
+    }
+
+    /// Recovers CSR.
+    pub fn to_csr(&self) -> Csr {
+        let mut coo = Coo::with_capacity(self.nrows, self.ncols, self.vals.len());
+        for jag in 0..self.njags() {
+            let (s, e) = (self.jptrs[jag], self.jptrs[jag + 1]);
+            for (k, idx) in (s..e).enumerate() {
+                coo.push(self.perm[k] as usize, self.cids[idx] as usize, self.vals[idx]);
+            }
+        }
+        coo.to_csr()
+    }
+}
+
+// ---------------------------------------------------------------- DIA ---
+
+/// Diagonal storage: one dense array per populated diagonal. Ideal for
+/// stencils (mesh_2048, atmosmodd); catastrophic for scattered matrices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dia {
+    /// Logical rows.
+    pub nrows: usize,
+    /// Logical columns.
+    pub ncols: usize,
+    /// Offsets of stored diagonals (j - i), ascending.
+    pub offsets: Vec<i64>,
+    /// `offsets.len() × nrows` values, diagonal-major; slot `d*nrows + i`
+    /// is entry `(i, i + offsets[d])` (0.0 where out of range/absent).
+    pub vals: Vec<f64>,
+}
+
+impl Dia {
+    /// Builds from CSR. Returns `None` if more than `max_diags` diagonals
+    /// would be stored (the format's guard against scattered matrices).
+    pub fn from_csr(a: &Csr, max_diags: usize) -> Option<Self> {
+        let mut offsets: Vec<i64> = Vec::new();
+        for i in 0..a.nrows {
+            for &c in a.row_cids(i) {
+                let off = c as i64 - i as i64;
+                if let Err(pos) = offsets.binary_search(&off) {
+                    offsets.insert(pos, off);
+                    if offsets.len() > max_diags {
+                        return None;
+                    }
+                }
+            }
+        }
+        let mut vals = vec![0.0; offsets.len() * a.nrows];
+        for i in 0..a.nrows {
+            for (&c, &v) in a.row_cids(i).iter().zip(a.row_vals(i)) {
+                let off = c as i64 - i as i64;
+                let d = offsets.binary_search(&off).unwrap();
+                vals[d * a.nrows + i] += v;
+            }
+        }
+        Some(Dia { nrows: a.nrows, ncols: a.ncols, offsets, vals })
+    }
+
+    /// Stored slots including padding.
+    pub fn stored(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// SpMV: `y ← Ax`.
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        for (d, &off) in self.offsets.iter().enumerate() {
+            let base = d * self.nrows;
+            let lo = (-off).max(0) as usize;
+            let hi = self.nrows.min((self.ncols as i64 - off).max(0) as usize);
+            for i in lo..hi {
+                y[i] += self.vals[base + i] * x[(i as i64 + off) as usize];
+            }
+        }
+        y
+    }
+
+    /// Recovers CSR (explicit zeros dropped).
+    pub fn to_csr(&self) -> Csr {
+        let mut coo = Coo::new(self.nrows, self.ncols);
+        for (d, &off) in self.offsets.iter().enumerate() {
+            for i in 0..self.nrows {
+                let j = i as i64 + off;
+                let v = self.vals[d * self.nrows + i];
+                if v != 0.0 && j >= 0 && (j as usize) < self.ncols {
+                    coo.push(i, j as usize, v);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+}
+
+// ---------------------------------------------------------------- HYB ---
+
+/// Hybrid ELL + COO (cuSPARSE's `hyb`): the regular part of every row in
+/// ELL of width `w`, the overflow in COO. The GPU-side format the paper's
+/// comparison baselines effectively run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hyb {
+    /// The regular ELL part.
+    pub ell: super::Ell,
+    /// Overflow entries.
+    pub coo: Coo,
+}
+
+impl Hyb {
+    /// Builds with the given ELL width; entries beyond `width` per row
+    /// overflow to COO.
+    pub fn from_csr(a: &Csr, width: usize) -> Self {
+        let width = width.max(1);
+        let mut head = Coo::with_capacity(a.nrows, a.ncols, a.nnz());
+        let mut tail = Coo::new(a.nrows, a.ncols);
+        for i in 0..a.nrows {
+            for (k, (&c, &v)) in a.row_cids(i).iter().zip(a.row_vals(i)).enumerate() {
+                if k < width {
+                    head.push(i, c as usize, v);
+                } else {
+                    tail.push(i, c as usize, v);
+                }
+            }
+        }
+        let ell = super::Ell::from_csr(&head.to_csr(), width);
+        Hyb { ell, coo: tail }
+    }
+
+    /// Fraction of nonzeros held in the regular (ELL) part.
+    pub fn regular_fraction(&self, nnz: usize) -> f64 {
+        if nnz == 0 {
+            return 1.0;
+        }
+        (nnz - self.coo.nnz()) as f64 / nnz as f64
+    }
+
+    /// SpMV: `y ← Ax`.
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = self.ell.spmv(x);
+        for idx in 0..self.coo.nnz() {
+            y[self.coo.rows[idx] as usize] += self.coo.vals[idx] * x[self.coo.cols[idx] as usize];
+        }
+        y
+    }
+
+    /// Recovers CSR.
+    pub fn to_csr(&self) -> Csr {
+        let mut coo = self.ell.to_csr().to_coo();
+        coo.rows.extend_from_slice(&self.coo.rows);
+        coo.cols.extend_from_slice(&self.coo.cols);
+        coo.vals.extend_from_slice(&self.coo.vals);
+        coo.to_csr()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::powerlaw::{powerlaw, PowerLawSpec};
+    use crate::sparse::gen::stencil::stencil_2d;
+    use crate::sparse::gen::{random_vector, randomize_values};
+
+    fn stencil() -> Csr {
+        let mut a = stencil_2d(20, 25);
+        randomize_values(&mut a, 31);
+        a
+    }
+
+    fn web() -> Csr {
+        powerlaw(&PowerLawSpec {
+            n: 800,
+            nnz: 4000,
+            row_alpha: 1.6,
+            col_alpha: 1.4,
+            max_row: 60,
+            seed: 33,
+        })
+    }
+
+    fn assert_spmv_matches(a: &Csr, y: &[f64], tag: &str) {
+        let x = random_vector(a.ncols, 35);
+        let _ = x;
+        let want = a.spmv(&random_vector(a.ncols, 35));
+        for (u, v) in y.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-10, "{tag}");
+        }
+    }
+
+    #[test]
+    fn jds_roundtrip_and_spmv() {
+        for a in [stencil(), web()] {
+            let j = Jds::from_csr(&a);
+            assert_eq!(j.to_csr(), a);
+            let x = random_vector(a.ncols, 35);
+            let y = j.spmv(&x);
+            assert_spmv_matches(&a, &y, "jds");
+        }
+    }
+
+    #[test]
+    fn jds_jags_decrease() {
+        let j = Jds::from_csr(&web());
+        let sizes: Vec<usize> = (0..j.njags()).map(|g| j.jptrs[g + 1] - j.jptrs[g]).collect();
+        assert!(sizes.windows(2).all(|w| w[0] >= w[1]), "jags must shrink");
+    }
+
+    #[test]
+    fn dia_fits_stencil_not_web() {
+        let a = stencil();
+        let d = Dia::from_csr(&a, 16).expect("stencil has ≤ 5 diagonals + boundary effects");
+        assert!(d.offsets.len() <= 8, "{:?}", d.offsets);
+        assert_eq!(d.to_csr(), a);
+        let x = random_vector(a.ncols, 35);
+        assert_spmv_matches(&a, &d.spmv(&x), "dia");
+        assert!(Dia::from_csr(&web(), 64).is_none(), "web graph must overflow DIA");
+    }
+
+    #[test]
+    fn hyb_split_and_spmv() {
+        let a = web();
+        let h = Hyb::from_csr(&a, 8);
+        assert_eq!(h.to_csr(), a);
+        assert!(h.regular_fraction(a.nnz()) > 0.5);
+        assert!(h.coo.nnz() > 0, "hub rows must overflow");
+        let x = random_vector(a.ncols, 35);
+        assert_spmv_matches(&a, &h.spmv(&x), "hyb");
+    }
+
+    #[test]
+    fn hyb_wide_width_is_pure_ell() {
+        let a = stencil();
+        let h = Hyb::from_csr(&a, 8);
+        assert_eq!(h.coo.nnz(), 0);
+    }
+
+    #[test]
+    fn dia_empty_matrix() {
+        let a = Coo::new(5, 5).to_csr();
+        let d = Dia::from_csr(&a, 4).unwrap();
+        assert_eq!(d.offsets.len(), 0);
+        assert_eq!(d.spmv(&[1.0; 5]), vec![0.0; 5]);
+    }
+}

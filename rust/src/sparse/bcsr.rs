@@ -1,0 +1,233 @@
+//! Register-blocked CSR (BCSR) — the paper's §4.5 format.
+//!
+//! The matrix is regularly partitioned into `r × c` blocks; every block that
+//! contains at least one nonzero is stored **dense** (explicit zeros
+//! included), and the list of non-empty blocks is itself kept in CSR over
+//! block rows. The paper fixes one dimension to 8 (8 doubles = 512 bits)
+//! and varies the other in {1, 2, 4, 8}: configurations 8×8, 8×4, 8×2, 8×1,
+//! 4×8, 2×8 and 1×8 (Table 2).
+
+use super::Csr;
+
+/// The seven block shapes evaluated in Table 2 of the paper, `(r, c)`.
+pub const PAPER_BLOCK_CONFIGS: [(usize, usize); 7] =
+    [(8, 8), (8, 4), (8, 2), (8, 1), (4, 8), (2, 8), (1, 8)];
+
+/// A sparse matrix in register-blocked CSR with dense `r × c` blocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bcsr {
+    /// Logical number of rows (unpadded).
+    pub nrows: usize,
+    /// Logical number of columns (unpadded).
+    pub ncols: usize,
+    /// Block height.
+    pub r: usize,
+    /// Block width.
+    pub c: usize,
+    /// Block-row pointers, length `ceil(nrows/r) + 1`.
+    pub brptrs: Vec<usize>,
+    /// Block-column ids per stored block.
+    pub bcids: Vec<u32>,
+    /// Dense block payloads, `r*c` values each, row-major within the block.
+    pub vals: Vec<f64>,
+}
+
+impl Bcsr {
+    /// Blocks a CSR matrix into dense `r × c` tiles.
+    pub fn from_csr(a: &Csr, r: usize, c: usize) -> Self {
+        assert!(r > 0 && c > 0, "block dims must be positive");
+        let nbrows = a.nrows.div_ceil(r);
+        let mut brptrs = vec![0usize; nbrows + 1];
+        let mut bcids: Vec<u32> = Vec::new();
+        let mut vals: Vec<f64> = Vec::new();
+        // For each block row, find the set of touched block columns, then
+        // fill dense payloads.
+        let mut touched: Vec<u32> = Vec::new();
+        for br in 0..nbrows {
+            touched.clear();
+            let row_lo = br * r;
+            let row_hi = (row_lo + r).min(a.nrows);
+            for i in row_lo..row_hi {
+                for &cid in a.row_cids(i) {
+                    touched.push(cid / c as u32);
+                }
+            }
+            touched.sort_unstable();
+            touched.dedup();
+            let base_block = vals.len();
+            vals.resize(base_block + touched.len() * r * c, 0.0);
+            for i in row_lo..row_hi {
+                let local_r = i - row_lo;
+                for (&cid, &v) in a.row_cids(i).iter().zip(a.row_vals(i)) {
+                    let bc = cid / c as u32;
+                    let k = touched.binary_search(&bc).unwrap();
+                    let local_c = cid as usize - bc as usize * c;
+                    vals[base_block + k * r * c + local_r * c + local_c] += v;
+                }
+            }
+            bcids.extend_from_slice(&touched);
+            brptrs[br + 1] = bcids.len();
+        }
+        Bcsr { nrows: a.nrows, ncols: a.ncols, r, c, brptrs, bcids, vals }
+    }
+
+    /// Number of stored (non-empty) blocks.
+    pub fn nblocks(&self) -> usize {
+        self.bcids.len()
+    }
+
+    /// Number of block rows.
+    pub fn nbrows(&self) -> usize {
+        self.brptrs.len() - 1
+    }
+
+    /// Stored values including explicit zeros.
+    pub fn stored_values(&self) -> usize {
+        self.nblocks() * self.r * self.c
+    }
+
+    /// Fraction of stored values that are structurally nonzero — the paper's
+    /// block-density statistic ("less than 35% … at 8×8", "70% break-even").
+    pub fn block_density(&self, nnz: usize) -> f64 {
+        if self.stored_values() == 0 { 0.0 } else { nnz as f64 / self.stored_values() as f64 }
+    }
+
+    /// Bytes of the blocked representation: one 4-byte block column id +
+    /// `r·c` doubles per block, plus 4-byte block-row pointers. (The paper's
+    /// 8×8 example: 64 nonzeros in one dense block = 516 bytes vs 768 CRS.)
+    pub fn storage_bytes(&self) -> usize {
+        4 * (self.nbrows() + 1) + self.nblocks() * (4 + 8 * self.r * self.c)
+    }
+
+    /// SpMV over the blocked layout: `y ← Ax`.
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        for br in 0..self.nbrows() {
+            let row_lo = br * self.r;
+            let row_hi = (row_lo + self.r).min(self.nrows);
+            for k in self.brptrs[br]..self.brptrs[br + 1] {
+                let bc = self.bcids[k] as usize;
+                let col_lo = bc * self.c;
+                let col_hi = (col_lo + self.c).min(self.ncols);
+                let block = &self.vals[k * self.r * self.c..(k + 1) * self.r * self.c];
+                for i in row_lo..row_hi {
+                    let bi = i - row_lo;
+                    let mut acc = 0.0;
+                    for j in col_lo..col_hi {
+                        acc += block[bi * self.c + (j - col_lo)] * x[j];
+                    }
+                    y[i] += acc;
+                }
+            }
+        }
+        y
+    }
+
+    /// Recovers CSR (explicit zeros inside blocks are dropped).
+    pub fn to_csr(&self) -> Csr {
+        let mut coo = super::Coo::with_capacity(self.nrows, self.ncols, self.stored_values());
+        for br in 0..self.nbrows() {
+            let row_lo = br * self.r;
+            for k in self.brptrs[br]..self.brptrs[br + 1] {
+                let col_lo = self.bcids[k] as usize * self.c;
+                let block = &self.vals[k * self.r * self.c..(k + 1) * self.r * self.c];
+                for bi in 0..self.r {
+                    let i = row_lo + bi;
+                    if i >= self.nrows {
+                        break;
+                    }
+                    for bj in 0..self.c {
+                        let j = col_lo + bj;
+                        let v = block[bi * self.c + bj];
+                        if j < self.ncols && v != 0.0 {
+                            coo.push(i, j, v);
+                        }
+                    }
+                }
+            }
+        }
+        coo.to_csr()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn sample() -> Csr {
+        let mut coo = Coo::new(10, 10);
+        for i in 0..10 {
+            coo.push(i, i, (i + 1) as f64);
+        }
+        coo.push(0, 9, 5.0);
+        coo.push(9, 0, -5.0);
+        coo.push(3, 4, 2.0);
+        coo.to_csr()
+    }
+
+    #[test]
+    fn spmv_matches_csr_all_paper_configs() {
+        let a = sample();
+        let x: Vec<f64> = (0..10).map(|i| 1.0 / (i as f64 + 1.0)).collect();
+        let want = a.spmv(&x);
+        for (r, c) in PAPER_BLOCK_CONFIGS {
+            let b = Bcsr::from_csr(&a, r, c);
+            let got = b.spmv(&x);
+            for (u, v) in got.iter().zip(&want) {
+                assert!((u - v).abs() < 1e-12, "mismatch at {r}x{c}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_paper_configs() {
+        let a = sample();
+        for (r, c) in PAPER_BLOCK_CONFIGS {
+            assert_eq!(Bcsr::from_csr(&a, r, c).to_csr(), a, "roundtrip {r}x{c}");
+        }
+    }
+
+    #[test]
+    fn one_by_one_blocks_equal_csr_nnz() {
+        let a = sample();
+        let b = Bcsr::from_csr(&a, 1, 1);
+        assert_eq!(b.nblocks(), a.nnz());
+        assert!((b.block_density(a.nnz()) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_storage_example() {
+        // A fully dense 8x8 region: 64 nonzeros. CRS: 64*12 = 768 bytes.
+        // BCSR 8x8: 1 block = 4 + 512 = 516 bytes (+ row pointers).
+        let mut coo = Coo::new(8, 8);
+        for i in 0..8 {
+            for j in 0..8 {
+                coo.push(i, j, 1.0 + (i * 8 + j) as f64);
+            }
+        }
+        let a = coo.to_csr();
+        let b = Bcsr::from_csr(&a, 8, 8);
+        assert_eq!(b.nblocks(), 1);
+        assert_eq!(b.storage_bytes() - 4 * (b.nbrows() + 1), 516);
+        assert_eq!(a.storage_bytes() - 4 * (a.nrows + 1), 768);
+    }
+
+    #[test]
+    fn ragged_edges_handled() {
+        // 10 is not a multiple of 8/4 — bottom/right partial blocks must work.
+        let a = sample();
+        let b = Bcsr::from_csr(&a, 8, 8);
+        assert_eq!(b.nbrows(), 2);
+        assert_eq!(b.to_csr(), a);
+    }
+
+    #[test]
+    fn block_density_decreases_with_block_size() {
+        let a = sample();
+        let d8 = Bcsr::from_csr(&a, 8, 8).block_density(a.nnz());
+        let d1 = Bcsr::from_csr(&a, 8, 1).block_density(a.nnz());
+        assert!(d1 > d8);
+    }
+}

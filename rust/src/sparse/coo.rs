@@ -1,0 +1,189 @@
+//! Coordinate (triplet) format — the assembly/interchange format.
+//!
+//! Generators and the MatrixMarket reader produce [`Coo`]; everything else
+//! converts to [`super::Csr`] before use.
+
+use super::Csr;
+
+/// A sparse matrix as unsorted `(row, col, value)` triplets.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Coo {
+    /// Number of rows.
+    pub nrows: usize,
+    /// Number of columns.
+    pub ncols: usize,
+    /// Row index per entry.
+    pub rows: Vec<u32>,
+    /// Column index per entry.
+    pub cols: Vec<u32>,
+    /// Value per entry.
+    pub vals: Vec<f64>,
+}
+
+impl Coo {
+    /// Creates an empty matrix of the given shape.
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Coo { nrows, ncols, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
+    }
+
+    /// Creates an empty matrix with capacity for `cap` entries.
+    pub fn with_capacity(nrows: usize, ncols: usize, cap: usize) -> Self {
+        Coo {
+            nrows,
+            ncols,
+            rows: Vec::with_capacity(cap),
+            cols: Vec::with_capacity(cap),
+            vals: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Number of stored entries (before duplicate summation).
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Appends one entry. Panics (debug) if out of bounds.
+    #[inline]
+    pub fn push(&mut self, row: usize, col: usize, val: f64) {
+        debug_assert!(row < self.nrows && col < self.ncols, "entry ({row},{col}) out of bounds");
+        self.rows.push(row as u32);
+        self.cols.push(col as u32);
+        self.vals.push(val);
+    }
+
+    /// Converts to CSR, sorting entries and summing duplicates.
+    pub fn to_csr(&self) -> Csr {
+        // Counting sort by row: O(nnz + nrows), stable enough since we sort
+        // columns within each row afterwards.
+        let mut counts = vec![0usize; self.nrows + 1];
+        for &r in &self.rows {
+            counts[r as usize + 1] += 1;
+        }
+        for i in 0..self.nrows {
+            counts[i + 1] += counts[i];
+        }
+        let rptrs_tmp = counts.clone();
+        let mut cids = vec![0u32; self.nnz()];
+        let mut vals = vec![0f64; self.nnz()];
+        let mut cursor = rptrs_tmp;
+        for i in 0..self.nnz() {
+            let r = self.rows[i] as usize;
+            let at = cursor[r];
+            cids[at] = self.cols[i];
+            vals[at] = self.vals[i];
+            cursor[r] += 1;
+        }
+        // Sort within each row and merge duplicates.
+        let mut out_rptrs = vec![0usize; self.nrows + 1];
+        let mut out_cids: Vec<u32> = Vec::with_capacity(self.nnz());
+        let mut out_vals: Vec<f64> = Vec::with_capacity(self.nnz());
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for r in 0..self.nrows {
+            let (s, e) = (counts[r], counts[r + 1]);
+            scratch.clear();
+            scratch.extend(cids[s..e].iter().copied().zip(vals[s..e].iter().copied()));
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < scratch.len() {
+                let (c, mut v) = scratch[i];
+                let mut j = i + 1;
+                while j < scratch.len() && scratch[j].0 == c {
+                    v += scratch[j].1;
+                    j += 1;
+                }
+                out_cids.push(c);
+                out_vals.push(v);
+                i = j;
+            }
+            out_rptrs[r + 1] = out_cids.len();
+        }
+        Csr { nrows: self.nrows, ncols: self.ncols, rptrs: out_rptrs, cids: out_cids, vals: out_vals }
+    }
+
+    /// Transposed copy (swaps rows/cols).
+    pub fn transpose(&self) -> Coo {
+        Coo {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            rows: self.cols.clone(),
+            cols: self.rows.clone(),
+            vals: self.vals.clone(),
+        }
+    }
+
+    /// Symmetrizes the pattern: returns `A + Aᵀ` keeping a single value for
+    /// coincident entries (used when MatrixMarket files are `symmetric`).
+    pub fn symmetrized(&self) -> Coo {
+        let mut out = Coo::with_capacity(self.nrows, self.ncols, self.nnz() * 2);
+        for i in 0..self.nnz() {
+            let (r, c, v) = (self.rows[i], self.cols[i], self.vals[i]);
+            out.rows.push(r);
+            out.cols.push(c);
+            out.vals.push(v);
+            if r != c {
+                out.rows.push(c);
+                out.cols.push(r);
+                out.vals.push(v);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_to_csr() {
+        let coo = Coo::new(3, 4);
+        let csr = coo.to_csr();
+        assert_eq!(csr.nrows, 3);
+        assert_eq!(csr.ncols, 4);
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.rptrs, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 1, 1.0);
+        coo.push(0, 1, 2.5);
+        coo.push(1, 0, -1.0);
+        let csr = coo.to_csr();
+        assert_eq!(csr.nnz(), 2);
+        assert_eq!(csr.get(0, 1), Some(3.5));
+        assert_eq!(csr.get(1, 0), Some(-1.0));
+        assert_eq!(csr.get(0, 0), None);
+    }
+
+    #[test]
+    fn columns_sorted_within_rows() {
+        let mut coo = Coo::new(1, 5);
+        coo.push(0, 4, 4.0);
+        coo.push(0, 0, 0.0);
+        coo.push(0, 2, 2.0);
+        let csr = coo.to_csr();
+        assert_eq!(csr.cids, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn symmetrize_adds_mirror_entries() {
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 1, 2.0);
+        coo.push(2, 2, 1.0);
+        let sym = coo.symmetrized().to_csr();
+        assert_eq!(sym.nnz(), 3);
+        assert_eq!(sym.get(1, 0), Some(2.0));
+        assert_eq!(sym.get(0, 1), Some(2.0));
+    }
+
+    #[test]
+    fn transpose_swaps_shape() {
+        let mut coo = Coo::new(2, 3);
+        coo.push(1, 2, 9.0);
+        let t = coo.transpose().to_csr();
+        assert_eq!((t.nrows, t.ncols), (3, 2));
+        assert_eq!(t.get(2, 1), Some(9.0));
+    }
+}

@@ -1,0 +1,118 @@
+//! Compressed column storage — the CRS dual (§3 of the paper).
+
+use super::Csr;
+
+/// A sparse matrix in compressed column storage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csc {
+    /// Number of rows.
+    pub nrows: usize,
+    /// Number of columns.
+    pub ncols: usize,
+    /// Column pointers, length `ncols + 1`.
+    pub cptrs: Vec<usize>,
+    /// Row ids per nonzero, column-major, sorted within each column.
+    pub rids: Vec<u32>,
+    /// Values aligned with `rids`.
+    pub vals: Vec<f64>,
+}
+
+impl Csc {
+    /// Number of stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.rids.len()
+    }
+
+    /// Row-id slice of column `j`.
+    #[inline]
+    pub fn col_rids(&self, j: usize) -> &[u32] {
+        &self.rids[self.cptrs[j]..self.cptrs[j + 1]]
+    }
+
+    /// Value slice of column `j`.
+    #[inline]
+    pub fn col_vals(&self, j: usize) -> &[f64] {
+        &self.vals[self.cptrs[j]..self.cptrs[j + 1]]
+    }
+
+    /// Number of nonzeros in column `j` — the paper's "max nnz/c" statistic
+    /// is the max of this over columns.
+    #[inline]
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.cptrs[j + 1] - self.cptrs[j]
+    }
+
+    /// Converts to CSR.
+    pub fn to_csr(&self) -> Csr {
+        let mut rptrs = vec![0usize; self.nrows + 1];
+        for &r in &self.rids {
+            rptrs[r as usize + 1] += 1;
+        }
+        for i in 0..self.nrows {
+            rptrs[i + 1] += rptrs[i];
+        }
+        let mut cids = vec![0u32; self.nnz()];
+        let mut vals = vec![0f64; self.nnz()];
+        let mut cursor = rptrs.clone();
+        for j in 0..self.ncols {
+            for (r, v) in self.col_rids(j).iter().zip(self.col_vals(j)) {
+                let at = cursor[*r as usize];
+                cids[at] = j as u32;
+                vals[at] = *v;
+                cursor[*r as usize] += 1;
+            }
+        }
+        Csr { nrows: self.nrows, ncols: self.ncols, rptrs, cids, vals }
+    }
+
+    /// Column-driven SpMV (scatter formulation): `y ← Ax`.
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        for j in 0..self.ncols {
+            let xj = x[j];
+            for (r, v) in self.col_rids(j).iter().zip(self.col_vals(j)) {
+                y[*r as usize] += v * xj;
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn sample() -> Csr {
+        let mut coo = Coo::new(3, 4);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 3, 2.0);
+        coo.push(2, 1, 3.0);
+        coo.push(1, 1, -1.0);
+        coo.to_csr()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let a = sample();
+        assert_eq!(a.to_csc().to_csr(), a);
+    }
+
+    #[test]
+    fn column_spmv_matches_row_spmv() {
+        let a = sample();
+        let x = [0.5, 2.0, -3.0, 1.0];
+        assert_eq!(a.to_csc().spmv(&x), a.spmv(&x));
+    }
+
+    #[test]
+    fn col_nnz_counts() {
+        let c = sample().to_csc();
+        assert_eq!(c.col_nnz(0), 1);
+        assert_eq!(c.col_nnz(1), 2);
+        assert_eq!(c.col_nnz(2), 0);
+        assert_eq!(c.col_nnz(3), 1);
+    }
+}

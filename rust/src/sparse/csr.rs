@@ -1,0 +1,257 @@
+//! Compressed row storage — the paper's CRS baseline format.
+//!
+//! Three arrays, exactly as §3 of the paper describes: `rptrs` (m+1 row
+//! pointers), `cids` (τ 32-bit column ids) and `vals` (τ doubles). Every
+//! kernel, metric and simulator in this crate consumes this type.
+
+use super::{Coo, Csc};
+
+/// A sparse matrix in compressed row storage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    /// Number of rows (`m`).
+    pub nrows: usize,
+    /// Number of columns (`n`).
+    pub ncols: usize,
+    /// Row pointers, length `m + 1`, `rptrs[0] == 0`, `rptrs[m] == nnz`.
+    pub rptrs: Vec<usize>,
+    /// Column ids per nonzero, row-major, sorted within each row.
+    pub cids: Vec<u32>,
+    /// Values per nonzero, aligned with `cids`.
+    pub vals: Vec<f64>,
+}
+
+impl Csr {
+    /// Builds a CSR matrix from raw parts, validating the invariants.
+    pub fn from_parts(
+        nrows: usize,
+        ncols: usize,
+        rptrs: Vec<usize>,
+        cids: Vec<u32>,
+        vals: Vec<f64>,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(rptrs.len() == nrows + 1, "rptrs must have nrows+1 entries");
+        anyhow::ensure!(rptrs[0] == 0, "rptrs[0] must be 0");
+        anyhow::ensure!(*rptrs.last().unwrap() == cids.len(), "rptrs[m] must equal nnz");
+        anyhow::ensure!(cids.len() == vals.len(), "cids/vals length mismatch");
+        anyhow::ensure!(rptrs.windows(2).all(|w| w[0] <= w[1]), "rptrs must be nondecreasing");
+        anyhow::ensure!(
+            cids.iter().all(|&c| (c as usize) < ncols),
+            "column id out of bounds"
+        );
+        Ok(Csr { nrows, ncols, rptrs, cids, vals })
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn identity(n: usize) -> Self {
+        Csr {
+            nrows: n,
+            ncols: n,
+            rptrs: (0..=n).collect(),
+            cids: (0..n as u32).collect(),
+            vals: vec![1.0; n],
+        }
+    }
+
+    /// Number of stored nonzeros (τ).
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.cids.len()
+    }
+
+    /// Column-id slice of row `i`.
+    #[inline]
+    pub fn row_cids(&self, i: usize) -> &[u32] {
+        &self.cids[self.rptrs[i]..self.rptrs[i + 1]]
+    }
+
+    /// Value slice of row `i`.
+    #[inline]
+    pub fn row_vals(&self, i: usize) -> &[f64] {
+        &self.vals[self.rptrs[i]..self.rptrs[i + 1]]
+    }
+
+    /// Number of nonzeros in row `i`.
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.rptrs[i + 1] - self.rptrs[i]
+    }
+
+    /// Looks up entry `(i, j)` by binary search within the row.
+    pub fn get(&self, i: usize, j: usize) -> Option<f64> {
+        let cids = self.row_cids(i);
+        cids.binary_search(&(j as u32)).ok().map(|k| self.row_vals(i)[k])
+    }
+
+    /// Converts to COO triplets.
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::with_capacity(self.nrows, self.ncols, self.nnz());
+        for i in 0..self.nrows {
+            for (c, v) in self.row_cids(i).iter().zip(self.row_vals(i)) {
+                coo.rows.push(i as u32);
+                coo.cols.push(*c);
+                coo.vals.push(*v);
+            }
+        }
+        coo
+    }
+
+    /// Converts to CSC (the dual format).
+    pub fn to_csc(&self) -> Csc {
+        let mut cptrs = vec![0usize; self.ncols + 1];
+        for &c in &self.cids {
+            cptrs[c as usize + 1] += 1;
+        }
+        for j in 0..self.ncols {
+            cptrs[j + 1] += cptrs[j];
+        }
+        let mut rids = vec![0u32; self.nnz()];
+        let mut vals = vec![0f64; self.nnz()];
+        let mut cursor = cptrs.clone();
+        for i in 0..self.nrows {
+            for (c, v) in self.row_cids(i).iter().zip(self.row_vals(i)) {
+                let at = cursor[*c as usize];
+                rids[at] = i as u32;
+                vals[at] = *v;
+                cursor[*c as usize] += 1;
+            }
+        }
+        Csc { nrows: self.nrows, ncols: self.ncols, cptrs, rids, vals }
+    }
+
+    /// Transposed copy (CSR of `Aᵀ`), via the CSC dual.
+    pub fn transpose(&self) -> Csr {
+        let csc = self.to_csc();
+        Csr { nrows: self.ncols, ncols: self.nrows, rptrs: csc.cptrs, cids: csc.rids, vals: csc.vals }
+    }
+
+    /// Whether the *pattern* is structurally symmetric (values ignored).
+    pub fn pattern_symmetric(&self) -> bool {
+        if self.nrows != self.ncols {
+            return false;
+        }
+        let t = self.transpose();
+        self.rptrs == t.rptrs && self.cids == t.cids
+    }
+
+    /// Dense row-major copy — for small-matrix test oracles only.
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![0.0; self.ncols]; self.nrows];
+        for i in 0..self.nrows {
+            for (c, v) in self.row_cids(i).iter().zip(self.row_vals(i)) {
+                d[i][*c as usize] += v;
+            }
+        }
+        d
+    }
+
+    /// Total bytes of the CRS arrays as stored by the paper:
+    /// `4·(m+1) + 12·τ` (32-bit `rptrs`/`cids`, 64-bit values).
+    pub fn storage_bytes(&self) -> usize {
+        4 * (self.nrows + 1) + 12 * self.nnz()
+    }
+
+    /// Serial reference SpMV: `y ← Ax`. The correctness oracle for every
+    /// parallel / simulated / PJRT variant.
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols, "x length must equal ncols");
+        let mut y = vec![0.0; self.nrows];
+        for i in 0..self.nrows {
+            let mut acc = 0.0;
+            for (c, v) in self.row_cids(i).iter().zip(self.row_vals(i)) {
+                acc += v * x[*c as usize];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// Serial reference SpMM: `Y ← AX` with row-major `X` of width `k`.
+    pub fn spmm(&self, x: &[f64], k: usize) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols * k, "X must be ncols*k row-major");
+        let mut y = vec![0.0; self.nrows * k];
+        for i in 0..self.nrows {
+            let yrow = &mut y[i * k..(i + 1) * k];
+            for (c, v) in self.row_cids(i).iter().zip(self.row_vals(i)) {
+                let xrow = &x[*c as usize * k..(*c as usize + 1) * k];
+                for t in 0..k {
+                    yrow[t] += v * xrow[t];
+                }
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [ 1 0 2 ]
+        // [ 0 0 0 ]
+        // [ 3 4 0 ]
+        Csr::from_parts(3, 3, vec![0, 2, 2, 4], vec![0, 2, 0, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap()
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        assert!(Csr::from_parts(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err()); // short rptrs
+        assert!(Csr::from_parts(1, 1, vec![0, 1], vec![5], vec![1.0]).is_err()); // col oob
+        assert!(Csr::from_parts(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 1.0]).is_err()); // non-monotone
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let a = sample();
+        let y = a.spmv(&[1.0, 10.0, 100.0]);
+        assert_eq!(y, vec![201.0, 0.0, 43.0]);
+    }
+
+    #[test]
+    fn spmm_k1_equals_spmv() {
+        let a = sample();
+        let x = [2.0, -1.0, 0.5];
+        assert_eq!(a.spmm(&x, 1), a.spmv(&x));
+    }
+
+    #[test]
+    fn spmm_k3() {
+        let a = sample();
+        // X = I3 scaled columns
+        let x = [1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
+        let y = a.spmm(&x, 3);
+        // Y should equal A itself densified.
+        let d = a.to_dense();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(y[i * 3 + j], d[i][j]);
+            }
+        }
+    }
+
+    #[test]
+    fn csc_roundtrip() {
+        let a = sample();
+        let back = a.to_csc().to_csr();
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn transpose_twice_is_identity() {
+        let a = sample();
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn pattern_symmetry() {
+        assert!(Csr::identity(4).pattern_symmetric());
+        assert!(!sample().pattern_symmetric());
+    }
+
+    #[test]
+    fn storage_bytes_formula() {
+        let a = sample();
+        assert_eq!(a.storage_bytes(), 4 * 4 + 12 * 4);
+    }
+}

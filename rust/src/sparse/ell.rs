@@ -1,0 +1,169 @@
+//! Padded ELLPACK — the fixed-shape format fed to the AOT/PJRT path.
+//!
+//! XLA executables are shape-specialized, so the runtime converts CSR into a
+//! dense `nrows × width` layout (`width` = max row length rounded up to the
+//! SIMD lane count, 8 doubles). Padding slots carry value `0.0` and point at
+//! a fixed sentinel column so gathers stay in bounds — multiplying by zero
+//! makes them numerically inert. This is also the layout the paper's
+//! `vgatherd` inner loop effectively streams: 8 `(value, column)` pairs per
+//! vector issue.
+
+use super::Csr;
+
+/// Lane width of the padded layout: 8 doubles = one 512-bit register = one
+/// cacheline, matching both KNC's SIMD width and our Pallas kernel tiling.
+pub const ELL_LANES: usize = 8;
+
+/// A sparse matrix padded to ELLPACK layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ell {
+    /// Number of rows.
+    pub nrows: usize,
+    /// Number of columns of the logical matrix.
+    pub ncols: usize,
+    /// Padded row width (multiple of [`ELL_LANES`], ≥ max row nnz).
+    pub width: usize,
+    /// `nrows * width` values, row-major; padding slots are `0.0`.
+    pub vals: Vec<f64>,
+    /// `nrows * width` column indices; padding slots hold `sentinel`.
+    pub cids: Vec<u32>,
+    /// Column index used by padding slots (always `< ncols`, conventionally 0).
+    pub sentinel: u32,
+}
+
+impl Ell {
+    /// Converts a CSR matrix, padding each row to `width`.
+    ///
+    /// `min_width` lets callers force a shape bucket (e.g. so several
+    /// matrices share one compiled executable); the effective width is
+    /// `max(max_row_nnz, min_width)` rounded up to [`ELL_LANES`].
+    pub fn from_csr(a: &Csr, min_width: usize) -> Self {
+        let max_nnz = (0..a.nrows).map(|i| a.row_nnz(i)).max().unwrap_or(0);
+        let want = max_nnz.max(min_width).max(1);
+        let width = want.div_ceil(ELL_LANES) * ELL_LANES;
+        let mut vals = vec![0.0; a.nrows * width];
+        let mut cids = vec![0u32; a.nrows * width];
+        for i in 0..a.nrows {
+            let base = i * width;
+            for (k, (c, v)) in a.row_cids(i).iter().zip(a.row_vals(i)).enumerate() {
+                cids[base + k] = *c;
+                vals[base + k] = *v;
+            }
+        }
+        Ell { nrows: a.nrows, ncols: a.ncols, width, vals, cids, sentinel: 0 }
+    }
+
+    /// Total stored slots including padding.
+    pub fn padded_len(&self) -> usize {
+        self.nrows * self.width
+    }
+
+    /// Fraction of slots that are real nonzeros — the ELL analog of the
+    /// paper's block-density argument in §4.5.
+    pub fn fill_ratio(&self, nnz: usize) -> f64 {
+        if self.padded_len() == 0 { 0.0 } else { nnz as f64 / self.padded_len() as f64 }
+    }
+
+    /// Reference SpMV over the padded layout.
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        for i in 0..self.nrows {
+            let base = i * self.width;
+            let mut acc = 0.0;
+            for k in 0..self.width {
+                acc += self.vals[base + k] * x[self.cids[base + k] as usize];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// Recovers the CSR matrix.
+    ///
+    /// `from_csr` stores each row's entries contiguously with sorted column
+    /// ids and fills the *suffix* with `(sentinel, 0.0)` padding, so we can
+    /// recover the row length by trimming the trailing run of
+    /// zero-at-sentinel slots. Documented lossy corner: an *explicit* zero
+    /// stored at the sentinel column as the last entry of a row would be
+    /// trimmed too; our CSR builders never produce one.
+    pub fn to_csr(&self) -> Csr {
+        let mut rptrs = vec![0usize; self.nrows + 1];
+        let mut cids = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..self.nrows {
+            let base = i * self.width;
+            let mut len = self.width;
+            while len > 0
+                && self.vals[base + len - 1] == 0.0
+                && self.cids[base + len - 1] == self.sentinel
+            {
+                len -= 1;
+            }
+            for k in 0..len {
+                cids.push(self.cids[base + k]);
+                vals.push(self.vals[base + k]);
+            }
+            rptrs[i + 1] = cids.len();
+        }
+        Csr { nrows: self.nrows, ncols: self.ncols, rptrs, cids, vals }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn sample() -> Csr {
+        let mut coo = Coo::new(3, 10);
+        for c in [1u32, 3, 5, 7, 9] {
+            coo.push(0, c as usize, c as f64);
+        }
+        coo.push(2, 4, -2.0);
+        coo.to_csr()
+    }
+
+    #[test]
+    fn width_is_lane_multiple() {
+        let e = Ell::from_csr(&sample(), 0);
+        assert_eq!(e.width, 8); // max row nnz 5 → 8
+        let e2 = Ell::from_csr(&sample(), 9);
+        assert_eq!(e2.width, 16);
+    }
+
+    #[test]
+    fn spmv_matches_csr() {
+        let a = sample();
+        let e = Ell::from_csr(&a, 0);
+        let x: Vec<f64> = (0..10).map(|i| (i as f64) * 0.5 - 2.0).collect();
+        let ye = e.spmv(&x);
+        let yc = a.spmv(&x);
+        for (u, v) in ye.iter().zip(&yc) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn empty_rows_are_zero() {
+        let a = sample();
+        let e = Ell::from_csr(&a, 0);
+        let x = vec![1.0; 10];
+        assert_eq!(e.spmv(&x)[1], 0.0);
+    }
+
+    #[test]
+    fn fill_ratio() {
+        let a = sample();
+        let e = Ell::from_csr(&a, 0);
+        assert!((e.fill_ratio(a.nnz()) - 6.0 / 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn roundtrip_pattern() {
+        let a = sample();
+        let e = Ell::from_csr(&a, 0);
+        let back = e.to_csr();
+        assert_eq!(back, a);
+    }
+}

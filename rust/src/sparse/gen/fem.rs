@@ -1,0 +1,162 @@
+//! FEM-class generators: block-structured, banded, structurally symmetric.
+//!
+//! Most of the paper's suite (cant, pdb1HYS, hood, bmw3_2, pwtk, crankseg_2,
+//! msdoor, F1, nd24k, inline_1, ldoor, …) are finite-element stiffness
+//! matrices: nodes carry `b` degrees of freedom (3 for 3D elasticity), and a
+//! node couples to a geometric neighbourhood, so nonzeros come in dense
+//! `b × b` blocks clustered near the diagonal. That block structure is what
+//! gives these matrices their high useful-cacheline density (UCLD) and their
+//! strong response to compiler vectorization in the paper (Fig. 5).
+
+use crate::sparse::{Coo, Csr};
+
+use super::Rng;
+
+/// Parameters of the FEM-class generator.
+#[derive(Debug, Clone)]
+pub struct FemSpec {
+    /// Number of rows/cols of the matrix (rounded up to a block multiple).
+    pub n: usize,
+    /// Degrees of freedom per node (block size); 3 for 3D elasticity, 6 for
+    /// shells; nd24k-class uses larger effective blocks.
+    pub block: usize,
+    /// Mean number of *node* neighbours (including self); row nnz ≈
+    /// `block * neighbors`.
+    pub neighbors: f64,
+    /// Neighbourhood radius as a fraction of the node count — controls the
+    /// matrix bandwidth (RCM-friendliness).
+    pub locality: f64,
+    /// Fraction of neighbours drawn uniformly at random instead of locally
+    /// (models long-range couplings / contact constraints; raises the RCM
+    /// benefit ceiling and the vector-access count).
+    pub scatter: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+/// Generates a structurally-symmetric FEM-class matrix.
+pub fn fem(spec: &FemSpec) -> Csr {
+    let b = spec.block.max(1);
+    let nodes = spec.n.div_ceil(b);
+    let n = nodes * b;
+    let mut rng = Rng::new(spec.seed);
+    // Floor the window so scaled-down replicas still have enough distinct
+    // neighbour candidates (otherwise duplicate couplings merge in CSR and
+    // the nnz/row target is missed).
+    let window = ((nodes as f64 * spec.locality) as usize)
+        .max((3.0 * spec.neighbors) as usize)
+        .max(2)
+        .min(nodes.saturating_sub(1).max(2));
+    // Build the node adjacency (upper triangle, then mirror).
+    let expect_half = (spec.neighbors - 1.0).max(0.0) / 2.0;
+    let mut coo = Coo::with_capacity(n, n, (spec.n as f64 * spec.neighbors) as usize * b);
+    let mut push_block = |coo: &mut Coo, u: usize, v: usize, rng: &mut Rng| {
+        // Dense b×b coupling block between nodes u and v (and its mirror).
+        for i in 0..b {
+            for j in 0..b {
+                let val = rng.f64_range(-1.0, 1.0);
+                coo.push(u * b + i, v * b + j, val);
+                if u != v {
+                    coo.push(v * b + j, u * b + i, val);
+                }
+            }
+        }
+    };
+    for u in 0..nodes {
+        // Self block (diagonal): always present, diagonally weighted.
+        for i in 0..b {
+            for j in 0..b {
+                let val = if i == j { 8.0 * spec.neighbors } else { rng.f64_range(-0.5, 0.5) };
+                coo.push(u * b + i, u * b + j, val);
+            }
+        }
+        // Neighbour blocks in the upper triangle, deduplicated per node so
+        // merged duplicates don't erode the nnz/row target.
+        let deg = rng.poisson(expect_half);
+        let mut chosen: Vec<usize> = Vec::with_capacity(deg);
+        let mut attempts = 0;
+        while chosen.len() < deg && attempts < deg * 4 {
+            attempts += 1;
+            let v = if rng.bool(spec.scatter) {
+                // Long-range coupling.
+                let v = rng.usize_below(nodes);
+                if v == u {
+                    continue;
+                }
+                v
+            } else {
+                // Local coupling within the window.
+                let off = 1 + rng.usize_below(window);
+                if u + off >= nodes {
+                    continue;
+                }
+                u + off
+            };
+            if chosen.contains(&v) {
+                continue;
+            }
+            chosen.push(v);
+            push_block(&mut coo, u.min(v), u.max(v), &mut rng);
+        }
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::stats;
+
+    fn spec() -> FemSpec {
+        FemSpec { n: 3000, block: 3, neighbors: 9.0, locality: 0.02, scatter: 0.02, seed: 1 }
+    }
+
+    #[test]
+    fn shape_is_block_multiple() {
+        let a = fem(&spec());
+        assert_eq!(a.nrows % 3, 0);
+        assert_eq!(a.nrows, a.ncols);
+    }
+
+    #[test]
+    fn structurally_symmetric() {
+        let a = fem(&spec());
+        assert!(a.pattern_symmetric());
+    }
+
+    #[test]
+    fn mean_row_degree_near_target() {
+        let s = spec();
+        let a = fem(&s);
+        let mean = a.nnz() as f64 / a.nrows as f64;
+        let want = s.block as f64 * s.neighbors;
+        assert!(
+            (mean - want).abs() / want < 0.35,
+            "mean nnz/row {mean} vs target {want}"
+        );
+    }
+
+    #[test]
+    fn block_structure_gives_high_ucld() {
+        // Dense 3-wide column runs should beat a same-density scattered
+        // matrix on UCLD.
+        let a = fem(&spec());
+        let u = stats::ucld(&a);
+        assert!(u > 0.3, "FEM UCLD too low: {u}");
+    }
+
+    #[test]
+    fn locality_controls_bandwidth() {
+        let tight = fem(&FemSpec { locality: 0.005, scatter: 0.0, ..spec() });
+        let loose = fem(&FemSpec { locality: 0.5, scatter: 0.0, ..spec() });
+        assert!(
+            stats::matrix_bandwidth(&tight) < stats::matrix_bandwidth(&loose),
+            "locality should tighten the band"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(fem(&spec()), fem(&spec()));
+    }
+}

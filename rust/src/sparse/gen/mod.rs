@@ -1,0 +1,41 @@
+//! Deterministic synthetic matrix generators.
+//!
+//! The paper's dataset is 21 UFL (SuiteSparse) matrices plus one synthetic
+//! 5-point stencil. We cannot ship the UFL data, so each matrix is replaced
+//! by a deterministic generator matched to its Table 1 statistics *and* its
+//! pattern class (stencil / FEM / power-law web graph / circuit / …), since
+//! every metric the paper studies (UCLD, bandwidth, vector-access counts,
+//! RCM response, block density) is a function of the nonzero pattern.
+//! See DESIGN.md §2 for the substitution argument.
+
+pub mod banded;
+pub mod fem;
+pub mod powerlaw;
+pub mod rng;
+pub mod stencil;
+pub mod suite;
+
+pub use rng::Rng;
+pub use suite::{paper_suite, SuiteEntry, SuiteMatrix};
+
+use super::Csr;
+
+/// Fills the values of a pattern with deterministic pseudo-random numbers in
+/// `[-1, 1]` (the paper's kernels are value-agnostic; values only matter for
+/// numerics validation).
+pub fn randomize_values(a: &mut Csr, seed: u64) {
+    let mut rng = Rng::new(seed);
+    for v in &mut a.vals {
+        *v = rng.f64_range(-1.0, 1.0);
+        // Avoid exact zeros so nnz is preserved by any format round-trip.
+        if *v == 0.0 {
+            *v = 0.5;
+        }
+    }
+}
+
+/// Generates a dense vector of deterministic values in `[-1, 1]`.
+pub fn random_vector(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.f64_range(-1.0, 1.0)).collect()
+}

@@ -1,0 +1,145 @@
+//! Small deterministic PRNG (splitmix64 core) so generators are reproducible
+//! without external crates.
+
+/// A splitmix64-based PRNG. Deterministic, seedable, fast; not for crypto.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Creates a generator from a seed.
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero orbit.
+        Rng { state: seed ^ 0x9E37_79B9_7F4A_7C15 }
+    }
+
+    /// Next raw 64-bit value (splitmix64).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)`. `bound` must be > 0.
+    #[inline]
+    pub fn usize_below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        // 128-bit multiply trick avoids modulo bias well enough for our use.
+        ((self.next_u64() as u128 * bound as u128) >> 64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    #[inline]
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Zipf-like sample in `[1, n]` with exponent `alpha` via inverse-CDF on
+    /// the continuous approximation (fast, adequate for pattern synthesis).
+    pub fn zipf(&mut self, n: usize, alpha: f64) -> usize {
+        debug_assert!(n >= 1 && alpha > 0.0 && alpha != 1.0);
+        let u = self.f64().max(1e-15);
+        let exp = 1.0 - alpha;
+        let nf = n as f64;
+        // Inverse of F(x) ∝ (x^(1-a) - 1) on [1, n].
+        let x = ((nf.powf(exp) - 1.0) * u + 1.0).powf(1.0 / exp);
+        (x as usize).clamp(1, n)
+    }
+
+    /// Poisson-ish small-count sample via inversion, mean `lambda` (< ~30).
+    pub fn poisson(&mut self, lambda: f64) -> usize {
+        let l = (-lambda).exp();
+        let mut k = 0usize;
+        let mut p = 1.0;
+        loop {
+            p *= self.f64();
+            if p <= l || k > 10_000 {
+                return k;
+            }
+            k += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn usize_below_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            assert!(r.usize_below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut r = Rng::new(11);
+        let mean: f64 = (0..100_000).map(|_| r.f64()).sum::<f64>() / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn zipf_bounds_and_skew() {
+        let mut r = Rng::new(13);
+        let mut ones = 0;
+        for _ in 0..10_000 {
+            let v = r.zipf(1000, 2.0);
+            assert!((1..=1000).contains(&v));
+            if v == 1 {
+                ones += 1;
+            }
+        }
+        // alpha=2 → P(1) ≈ 0.6+; heavily skewed to small values.
+        assert!(ones > 4_000, "zipf not skewed: {ones}");
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut r = Rng::new(17);
+        let mean: f64 = (0..20_000).map(|_| r.poisson(5.0) as f64).sum::<f64>() / 20_000.0;
+        assert!((mean - 5.0).abs() < 0.2, "poisson mean {mean}");
+    }
+}

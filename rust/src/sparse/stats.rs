@@ -1,0 +1,216 @@
+//! Matrix pattern metrics: Table 1 statistics, UCLD (§4.1) and matrix
+//! bandwidth (§4.4).
+
+
+use super::{Csr, DOUBLES_PER_CACHELINE};
+
+/// The per-matrix properties reported in Table 1 of the paper.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatrixStats {
+    /// Matrix name.
+    pub name: String,
+    /// Number of rows.
+    pub nrows: usize,
+    /// Number of columns.
+    pub ncols: usize,
+    /// Number of nonzeros.
+    pub nnz: usize,
+    /// nnz / (nrows * ncols).
+    pub density: f64,
+    /// Mean nonzeros per row.
+    pub nnz_per_row: f64,
+    /// Maximum nonzeros in any row.
+    pub max_nnz_row: usize,
+    /// Maximum nonzeros in any column.
+    pub max_nnz_col: usize,
+}
+
+impl MatrixStats {
+    /// Computes all Table 1 statistics for a matrix.
+    pub fn compute(name: &str, a: &Csr) -> Self {
+        let mut col_counts = vec![0usize; a.ncols];
+        for &c in &a.cids {
+            col_counts[c as usize] += 1;
+        }
+        MatrixStats {
+            name: name.to_string(),
+            nrows: a.nrows,
+            ncols: a.ncols,
+            nnz: a.nnz(),
+            density: a.nnz() as f64 / (a.nrows as f64 * a.ncols as f64),
+            nnz_per_row: a.nnz() as f64 / a.nrows as f64,
+            max_nnz_row: (0..a.nrows).map(|i| a.row_nnz(i)).max().unwrap_or(0),
+            max_nnz_col: col_counts.into_iter().max().unwrap_or(0),
+        }
+    }
+}
+
+/// Useful cacheline density of a single row (paper §4.1).
+///
+/// Ratio of the row's nonzero count to the number of *elements* covered by
+/// the input-vector cachelines that row touches. A row with nonzeros at
+/// columns {0, 19, 20} touches cachelines ⌊0/8⌋ and ⌊19/8⌋=⌊20/8⌋, i.e. 2
+/// lines = 16 elements, giving 3/16.
+pub fn row_ucld(cids: &[u32]) -> f64 {
+    if cids.is_empty() {
+        // An empty row touches no cachelines; the paper averages over rows,
+        // and an empty row contributes nothing useful — define it as 1.0 so
+        // it neither penalizes nor rewards (it also has zero work).
+        return 1.0;
+    }
+    let mut lines = 0usize;
+    let mut last = u32::MAX;
+    // cids are sorted within a row, so counting distinct lines is a scan.
+    for &c in cids {
+        let line = c / DOUBLES_PER_CACHELINE as u32;
+        if line != last {
+            lines += 1;
+            last = line;
+        }
+    }
+    cids.len() as f64 / (lines * DOUBLES_PER_CACHELINE) as f64
+}
+
+/// Useful cacheline density of the whole matrix: the unweighted mean of the
+/// per-row values, exactly as the paper defines it. Bounds: 1/8 ≤ UCLD ≤ 1.
+pub fn ucld(a: &Csr) -> f64 {
+    if a.nrows == 0 {
+        return 1.0;
+    }
+    let sum: f64 = (0..a.nrows).map(|i| row_ucld(a.row_cids(i))).sum();
+    sum / a.nrows as f64
+}
+
+/// Matrix bandwidth: max over nonzeros of |i - j| — the quantity RCM
+/// minimizes (§4.4).
+pub fn matrix_bandwidth(a: &Csr) -> usize {
+    let mut bw = 0usize;
+    for i in 0..a.nrows {
+        for &c in a.row_cids(i) {
+            bw = bw.max(i.abs_diff(c as usize));
+        }
+    }
+    bw
+}
+
+/// Mean absolute distance of nonzeros from the diagonal — a smoother
+/// profile statistic than the max, used in RCM ablations.
+pub fn mean_diag_distance(a: &Csr) -> f64 {
+    if a.nnz() == 0 {
+        return 0.0;
+    }
+    let mut sum = 0usize;
+    for i in 0..a.nrows {
+        for &c in a.row_cids(i) {
+            sum += i.abs_diff(c as usize);
+        }
+    }
+    sum as f64 / a.nnz() as f64
+}
+
+/// Histogram of row lengths (used by the GPU model: warp divergence is a
+/// function of row-length variance, and by the suite generators' tests).
+pub fn row_length_histogram(a: &Csr) -> std::collections::BTreeMap<usize, usize> {
+    let mut h = std::collections::BTreeMap::new();
+    for i in 0..a.nrows {
+        *h.entry(a.row_nnz(i)).or_insert(0) += 1;
+    }
+    h
+}
+
+/// Coefficient of variation of row lengths.
+pub fn row_length_cv(a: &Csr) -> f64 {
+    if a.nrows == 0 {
+        return 0.0;
+    }
+    let mean = a.nnz() as f64 / a.nrows as f64;
+    if mean == 0.0 {
+        return 0.0;
+    }
+    let var: f64 = (0..a.nrows)
+        .map(|i| {
+            let d = a.row_nnz(i) as f64 - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / a.nrows as f64;
+    var.sqrt() / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    #[test]
+    fn paper_ucld_example() {
+        // Paper: nonzeros at columns 0, 19, 20 → 3/16.
+        assert!((row_ucld(&[0, 19, 20]) - 3.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ucld_bounds() {
+        // Worst case: one element per cacheline → 1/8.
+        assert!((row_ucld(&[0, 8, 16, 24]) - 0.125).abs() < 1e-12);
+        // Best case: a full aligned 8-column pack → 1.0.
+        assert!((row_ucld(&[8, 9, 10, 11, 12, 13, 14, 15]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ucld_matrix_average() {
+        let mut coo = Coo::new(2, 32);
+        for c in 0..8 {
+            coo.push(0, c, 1.0); // UCLD 1.0
+        }
+        coo.push(1, 0, 1.0);
+        coo.push(1, 8, 1.0); // UCLD 2/16
+        let a = coo.to_csr();
+        assert!((ucld(&a) - (1.0 + 0.125) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bandwidth_of_tridiagonal() {
+        let mut coo = Coo::new(5, 5);
+        for i in 0..5usize {
+            coo.push(i, i, 2.0);
+            if i > 0 {
+                coo.push(i, i - 1, -1.0);
+                coo.push(i - 1, i, -1.0);
+            }
+        }
+        let a = coo.to_csr();
+        assert_eq!(matrix_bandwidth(&a), 1);
+        assert!(mean_diag_distance(&a) > 0.0);
+    }
+
+    #[test]
+    fn table1_stats() {
+        let mut coo = Coo::new(4, 4);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 1, 1.0);
+        coo.push(0, 2, 1.0);
+        coo.push(1, 0, 1.0);
+        coo.push(2, 0, 1.0);
+        let a = coo.to_csr();
+        let s = MatrixStats::compute("t", &a);
+        assert_eq!(s.nnz, 5);
+        assert_eq!(s.max_nnz_row, 3);
+        assert_eq!(s.max_nnz_col, 3);
+        assert!((s.density - 5.0 / 16.0).abs() < 1e-12);
+        assert!((s.nnz_per_row - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_length_stats() {
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 1, 1.0);
+        coo.push(1, 1, 1.0);
+        let a = coo.to_csr();
+        let h = row_length_histogram(&a);
+        assert_eq!(h[&2], 1);
+        assert_eq!(h[&1], 1);
+        assert_eq!(h[&0], 1);
+        assert!(row_length_cv(&a) > 0.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Measurement harness (offline stand-in for criterion).
+//!
+//! `cargo bench` targets use [`Bencher`] with plain `main()` functions
+//! (`harness = false`). Follows the paper's own protocol where relevant:
+//! run the operation 70 times, average the last 60 (§4: "we first run the
+//! operation 70 times and compute the averages of the last 60").
+
+use std::time::Instant;
+
+/// Summary statistics of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Benchmark label.
+    pub name: String,
+    /// Mean seconds per iteration (over the measured window).
+    pub mean_s: f64,
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    /// Sample standard deviation of seconds per iteration.
+    pub stddev_s: f64,
+    /// Minimum observed.
+    pub min_s: f64,
+    /// Number of measured iterations.
+    pub iters: usize,
+}
+
+impl Measurement {
+    /// GFlop/s given the flop count of one iteration.
+    pub fn gflops(&self, flops: f64) -> f64 {
+        flops / self.mean_s / 1e9
+    }
+
+    /// GB/s given the bytes moved by one iteration.
+    pub fn gbps(&self, bytes: f64) -> f64 {
+        bytes / self.mean_s / 1e9
+    }
+
+    /// One-line human-readable rendering.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} mean {:>10.4} ms  median {:>10.4} ms  sd {:>8.4} ms  ({} iters)",
+            self.name,
+            self.mean_s * 1e3,
+            self.median_s * 1e3,
+            self.stddev_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// The benchmark driver: warmup iterations then measured iterations.
+pub struct Bencher {
+    /// Iterations discarded as warmup (paper: 10).
+    pub warmup: usize,
+    /// Iterations measured (paper: 60).
+    pub measure: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // The paper's protocol: 70 runs, last 60 averaged.
+        Bencher { warmup: 10, measure: 60 }
+    }
+}
+
+impl Bencher {
+    /// Creates a bencher with explicit warmup/measure counts.
+    pub fn new(warmup: usize, measure: usize) -> Self {
+        Bencher { warmup, measure: measure.max(1) }
+    }
+
+    /// A faster default for large workloads (5 + 15).
+    pub fn quick() -> Self {
+        Bencher { warmup: 5, measure: 15 }
+    }
+
+    /// Runs `f` warmup+measure times and reports statistics. A `black_box`
+    /// on the closure result prevents dead-code elimination.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.measure);
+        for _ in 0..self.measure {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        summarize(name, samples)
+    }
+}
+
+fn summarize(name: &str, mut samples: Vec<f64>) -> Measurement {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let median = if n % 2 == 1 {
+        samples[n / 2]
+    } else {
+        (samples[n / 2 - 1] + samples[n / 2]) / 2.0
+    };
+    let var = if n > 1 {
+        samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    Measurement {
+        name: name.to_string(),
+        mean_s: mean,
+        median_s: median,
+        stddev_s: var.sqrt(),
+        min_s: samples[0],
+        iters: n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher::new(1, 5);
+        let m = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(m.mean_s > 0.0);
+        assert!(m.min_s <= m.median_s);
+        assert_eq!(m.iters, 5);
+    }
+
+    #[test]
+    fn gflops_math() {
+        let m = Measurement {
+            name: "x".into(),
+            mean_s: 0.5,
+            median_s: 0.5,
+            stddev_s: 0.0,
+            min_s: 0.5,
+            iters: 1,
+        };
+        assert!((m.gflops(1e9) - 2.0).abs() < 1e-12);
+        assert!((m.gbps(2e9) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_stats() {
+        let m = summarize("s", vec![3.0, 1.0, 2.0]);
+        assert!((m.mean_s - 2.0).abs() < 1e-12);
+        assert!((m.median_s - 2.0).abs() < 1e-12);
+        assert!((m.stddev_s - 1.0).abs() < 1e-12);
+        assert!((m.min_s - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,106 @@
+//! Tiny CLI argument parser (offline stand-in for clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positionals.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options (last occurrence wins).
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parses an iterator of raw arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parses the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Returns an option value parsed to `T`, or `default`.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.options.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Returns an option as a string if present.
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Whether a bare flag was passed.
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse("fig4 --scale 0.5 --out results --quiet");
+        assert_eq!(a.positional, vec!["fig4"]);
+        assert_eq!(a.get("scale", 1.0f64), 0.5);
+        assert_eq!(a.get_str("out"), Some("results"));
+        assert!(a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("--k=16 --name=spmm");
+        assert_eq!(a.get("k", 0usize), 16);
+        assert_eq!(a.get_str("name"), Some("spmm"));
+    }
+
+    #[test]
+    fn flag_before_positional_not_greedy() {
+        // `--quiet fig4`: fig4 is consumed as the value of quiet per the
+        // "next token isn't --" rule; callers put flags last or use `=`.
+        let a = parse("--verbose --out=x run");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("");
+        assert_eq!(a.get("threads", 4usize), 4);
+        assert!(!a.has_flag("anything"));
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let a = parse("--n 1 --n 2");
+        assert_eq!(a.get("n", 0usize), 2);
+    }
+}

@@ -1,0 +1,22 @@
+//! In-tree stand-ins for unavailable registry crates.
+//!
+//! This image is fully offline (only the `xla` crate's closure is
+//! vendored), so the conventional dependencies — `clap`, `serde_json`,
+//! `criterion`, `proptest`, `tempfile` — are replaced by the small modules
+//! here. Each implements exactly the subset the project needs:
+//!
+//! * [`json`] — a JSON value builder + writer for result files.
+//! * [`cli`] — flag/positional argument parsing for the CLI binary.
+//! * [`bench`] — a criterion-style measurement harness (warmup, repeats,
+//!   mean/median/stddev, throughput) used by `cargo bench` targets.
+//! * [`prop`] — a property-test driver with random case generation and
+//!   failing-seed reporting, used where proptest/hypothesis would be.
+//! * [`table`] — aligned text-table rendering for the paper's figures.
+//! * [`testing`] — temp-dir helper for I/O tests.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod table;
+pub mod testing;

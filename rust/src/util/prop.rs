@@ -1,0 +1,118 @@
+//! Property-test driver (offline stand-in for proptest).
+//!
+//! Runs a property over many generated cases; on failure reports the seed
+//! so the case can be replayed deterministically. Set `PHI_PROP_CASES` to
+//! change the case count.
+
+use crate::sparse::gen::Rng;
+
+/// Number of cases per property (env `PHI_PROP_CASES`, default 64).
+pub fn case_count() -> u64 {
+    std::env::var("PHI_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(64)
+}
+
+/// Runs `prop` over `case_count()` generated cases. `gen` maps a fresh
+/// seeded RNG to a case; `prop` returns `Err(reason)` to fail.
+///
+/// Panics with the failing seed on the first violation.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base: u64 = 0xC0FF_EE00_5EED_BA5E;
+    for case in 0..case_count() {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E37_79B9));
+        let mut rng = Rng::new(seed);
+        let value = gen(&mut rng);
+        if let Err(reason) = prop(&value) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {reason}\nvalue: {value:?}"
+            );
+        }
+    }
+}
+
+/// Convenience RNG helpers used by generator closures in tests.
+pub mod arb {
+    use crate::sparse::gen::Rng;
+    use crate::sparse::{Coo, Csr};
+
+    /// Random CSR matrix: up to `max_n` rows/cols, ~`max_row_nnz` per row.
+    pub fn csr(rng: &mut Rng, max_n: usize, max_row_nnz: usize) -> Csr {
+        let nrows = 1 + rng.usize_below(max_n);
+        let ncols = 1 + rng.usize_below(max_n);
+        let mut coo = Coo::new(nrows, ncols);
+        for i in 0..nrows {
+            let k = rng.usize_below(max_row_nnz + 1);
+            for _ in 0..k {
+                let j = rng.usize_below(ncols);
+                let v = rng.f64_range(-10.0, 10.0);
+                coo.push(i, j, if v == 0.0 { 1.0 } else { v });
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// Random square CSR matrix.
+    pub fn square_csr(rng: &mut Rng, max_n: usize, max_row_nnz: usize) -> Csr {
+        let n = 1 + rng.usize_below(max_n);
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            let k = rng.usize_below(max_row_nnz + 1);
+            for _ in 0..k {
+                let j = rng.usize_below(n);
+                let v = rng.f64_range(-10.0, 10.0);
+                coo.push(i, j, if v == 0.0 { 1.0 } else { v });
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// Random dense vector of length `n`.
+    pub fn vector(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.f64_range(-5.0, 5.0)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            "trivial",
+            |rng| rng.usize_below(100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count as u64, case_count());
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", |rng| rng.usize_below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn arb_csr_valid() {
+        check(
+            "arb-csr-valid",
+            |rng| arb::csr(rng, 30, 8),
+            |a| {
+                if a.rptrs.len() != a.nrows + 1 {
+                    return Err("bad rptrs".into());
+                }
+                if a.cids.iter().any(|&c| c as usize >= a.ncols) {
+                    return Err("col oob".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

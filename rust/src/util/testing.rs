@@ -1,0 +1,60 @@
+//! Test helpers (offline stand-in for tempfile).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A unique temporary directory removed on drop.
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Creates `"$TMPDIR/phi-spmv-<tag>-<pid>-<n>"`.
+    pub fn new(tag: &str) -> TempDir {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "phi-spmv-{tag}-{}-{n}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&path).expect("create temp dir");
+        TempDir { path }
+    }
+
+    /// The directory path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_write_cleanup() {
+        let p;
+        {
+            let d = TempDir::new("t");
+            p = d.path().to_path_buf();
+            std::fs::write(d.path().join("f.txt"), "hello").unwrap();
+            assert!(p.exists());
+        }
+        assert!(!p.exists(), "temp dir should be removed on drop");
+    }
+
+    #[test]
+    fn unique_paths() {
+        let a = TempDir::new("u");
+        let b = TempDir::new("u");
+        assert_ne!(a.path(), b.path());
+    }
+}

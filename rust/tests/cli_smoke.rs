@@ -1,0 +1,65 @@
+//! CLI smoke tests: run the built binary end to end.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_phi-spmv"))
+}
+
+#[test]
+fn help_lists_experiments() {
+    let out = bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for id in ["table1", "fig4", "fig10", "table2"] {
+        assert!(text.contains(id), "help missing {id}");
+    }
+}
+
+#[test]
+fn list_prints_all_ids() {
+    let out = bin().arg("list").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(text.lines().count(), 11);
+}
+
+#[test]
+fn unknown_command_fails_with_message() {
+    let out = bin().arg("fig99").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn table1_runs_and_saves() {
+    let dir = std::env::temp_dir().join(format!("phi-cli-{}", std::process::id()));
+    let out = bin()
+        .args(["table1", "--scale", "0.01", "--out", dir.to_str().unwrap(), "--quiet"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("mesh_2048"));
+    assert!(dir.join("table1.json").exists());
+    assert!(dir.join("table1.csv").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_native_spmv_reports_gflops() {
+    let out = bin()
+        .args(["run", "--matrix", "cant", "--scale", "0.02", "--kernel", "spmv"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("GFlop/s"), "{text}");
+}
+
+#[test]
+fn run_unknown_matrix_fails() {
+    let out = bin().args(["run", "--matrix", "nope"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown matrix"));
+}

@@ -1,0 +1,134 @@
+//! End-to-end AOT integration: JAX/Pallas-lowered HLO artifacts executed
+//! through the PJRT CPU client must agree with the serial CSR oracle.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use phi_spmv::runtime::Runtime;
+use phi_spmv::sparse::gen::stencil::stencil_2d;
+use phi_spmv::sparse::gen::{random_vector, randomize_values};
+use phi_spmv::sparse::{Coo, Csr};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Runtime::new(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn assert_close(a: &[f64], b: &[f64], tol: f64) {
+    assert_eq!(a.len(), b.len());
+    for (i, (u, v)) in a.iter().zip(b).enumerate() {
+        assert!((u - v).abs() <= tol * (1.0 + v.abs()), "idx {i}: {u} vs {v}");
+    }
+}
+
+#[test]
+fn spmv_pjrt_matches_oracle_stencil() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut a = stencil_2d(50, 60); // 3000 rows → r4096 bucket
+    randomize_values(&mut a, 42);
+    let exe = rt.spmv(&a).unwrap();
+    assert_eq!(exe.meta.rows, 4096);
+    let x = random_vector(a.ncols, 7);
+    let got = rt.run_spmv(&exe, &x).unwrap();
+    assert_close(&got, &a.spmv(&x), 1e-12);
+}
+
+#[test]
+fn spmv_pjrt_larger_bucket() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut a = stencil_2d(100, 100); // 10k rows → r16384
+    randomize_values(&mut a, 43);
+    let exe = rt.spmv(&a).unwrap();
+    assert_eq!(exe.meta.rows, 16384);
+    let x = random_vector(a.ncols, 8);
+    let got = rt.run_spmv(&exe, &x).unwrap();
+    assert_close(&got, &a.spmv(&x), 1e-12);
+}
+
+#[test]
+fn spmv_pjrt_wide_rows_pick_w16() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // Rows with up to 12 nonzeros need the w16 bucket.
+    let mut coo = Coo::new(2000, 2000);
+    for i in 0..2000usize {
+        for d in 0..(1 + i % 12) {
+            coo.push(i, (i + d * 7) % 2000, 1.0 + d as f64);
+        }
+    }
+    let a = coo.to_csr();
+    let exe = rt.spmv(&a).unwrap();
+    assert_eq!(exe.meta.width, 16);
+    let x = random_vector(2000, 9);
+    let got = rt.run_spmv(&exe, &x).unwrap();
+    assert_close(&got, &a.spmv(&x), 1e-12);
+}
+
+#[test]
+fn spmm_pjrt_matches_oracle() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut a = stencil_2d(40, 50);
+    randomize_values(&mut a, 44);
+    let k = 16;
+    let exe = rt.spmm(&a, k).unwrap();
+    let x = random_vector(a.ncols * k, 10);
+    let got = rt.run_spmm(&exe, &x).unwrap();
+    assert_close(&got, &a.spmm(&x, k), 1e-12);
+}
+
+#[test]
+fn power_step_pjrt_semantics() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = stencil_2d(60, 60); // SPD Laplacian, 3600 rows → r4096 power bucket
+    let exe = rt.power_step(&a).unwrap();
+    let x = random_vector(a.nrows, 11);
+    let (xn, norm, rayleigh) = rt.run_power_step(&exe, &x).unwrap();
+    let y = a.spmv(&x);
+    let want_norm = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let want_ray: f64 = x.iter().zip(&y).map(|(u, v)| u * v).sum();
+    assert!((norm - want_norm).abs() < 1e-9 * want_norm);
+    assert!((rayleigh - want_ray).abs() < 1e-9 * want_ray.abs());
+    let want_xn: Vec<f64> = y.iter().map(|v| v / want_norm).collect();
+    assert_close(&xn, &want_xn, 1e-10);
+}
+
+#[test]
+fn power_iteration_converges_to_dominant_eigenvalue() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // 2D Laplacian eigenvalues: λ(i,j) = 4 − 2cos(iπ/(n+1)) − 2cos(jπ/(n+1));
+    // the dominant one is 4 + 4cos(π/(n+1)). A 20×20 grid keeps the spectral
+    // gap large enough for power iteration to converge in a few hundred
+    // steps (on 60² the top eigenvalues are nearly degenerate).
+    let a = stencil_2d(20, 20);
+    let exe = rt.power_step(&a).unwrap();
+    let mut x = random_vector(a.nrows, 12);
+    let norm0 = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+    x.iter_mut().for_each(|v| *v /= norm0);
+    let mut lambda = 0.0;
+    for _ in 0..500 {
+        let (xn, _, rayleigh) = rt.run_power_step(&exe, &x).unwrap();
+        x = xn;
+        lambda = rayleigh; // x was unit-norm → rayleigh = xᵀAx
+    }
+    let nx = 20.0f64;
+    let expected = 4.0 + 4.0 * (std::f64::consts::PI / (nx + 1.0)).cos();
+    assert!(
+        (lambda - expected).abs() < 0.005,
+        "λ {lambda} vs analytic {expected}"
+    );
+}
+
+#[test]
+fn oversized_matrix_gives_clear_error() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = Csr::identity(100_000);
+    let err = match rt.spmv(&a) {
+        Ok(_) => panic!("expected bucket-miss error"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("no spmv artifact bucket"), "{err}");
+}

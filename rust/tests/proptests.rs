@@ -1,0 +1,308 @@
+//! Property-based tests over the library's core invariants.
+//!
+//! Uses the in-tree property driver (`util::prop`, the offline stand-in
+//! for proptest — see Cargo.toml). Case count: env `PHI_PROP_CASES`.
+
+use phi_spmv::kernels::{spmm_parallel, spmv_parallel};
+use phi_spmv::sched::{Policy, StaticAssignment};
+use phi_spmv::sparse::bcsr::PAPER_BLOCK_CONFIGS;
+use phi_spmv::sparse::ordering::{apply_symmetric_permutation, invert_permutation, is_permutation, rcm};
+use phi_spmv::sparse::stats::{matrix_bandwidth, row_ucld, ucld};
+use phi_spmv::sparse::{Bcsr, Ell};
+use phi_spmv::util::prop::{arb, check};
+
+fn close(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (u, v)) in a.iter().zip(b).enumerate() {
+        if (u - v).abs() > tol * (1.0 + v.abs()) {
+            return Err(format!("idx {i}: {u} vs {v}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_format_roundtrips_preserve_matrix() {
+    check(
+        "format-roundtrips",
+        |rng| arb::csr(rng, 40, 10),
+        |a| {
+            if a.to_coo().to_csr() != *a {
+                return Err("coo roundtrip".into());
+            }
+            if a.to_csc().to_csr() != *a {
+                return Err("csc roundtrip".into());
+            }
+            if a.transpose().transpose() != *a {
+                return Err("transpose involution".into());
+            }
+            if Ell::from_csr(a, 0).to_csr() != *a {
+                return Err("ell roundtrip".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bcsr_roundtrip_and_spmv_all_configs() {
+    check(
+        "bcsr-roundtrip-spmv",
+        |rng| {
+            let a = arb::csr(rng, 30, 6);
+            let x = arb::vector(rng, a.ncols);
+            (a, x)
+        },
+        |(a, x)| {
+            let want = a.spmv(x);
+            for (r, c) in PAPER_BLOCK_CONFIGS {
+                let b = Bcsr::from_csr(a, r, c);
+                if b.to_csr() != *a {
+                    return Err(format!("bcsr {r}x{c} roundtrip"));
+                }
+                close(&b.spmv(x), &want, 1e-10).map_err(|e| format!("{r}x{c}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_spmv_matches_serial_any_policy() {
+    check(
+        "parallel-spmv",
+        |rng| {
+            let a = arb::csr(rng, 600, 12);
+            let x = arb::vector(rng, a.ncols);
+            let policy = match rng.usize_below(4) {
+                0 => Policy::StaticBlock,
+                1 => Policy::StaticChunk(1 + rng.usize_below(70)),
+                2 => Policy::Dynamic(1 + rng.usize_below(70)),
+                _ => Policy::Guided(1 + rng.usize_below(30)),
+            };
+            let threads = 1 + rng.usize_below(7);
+            (a, x, policy, threads)
+        },
+        |(a, x, policy, threads)| {
+            close(&spmv_parallel(a, x, *threads, *policy), &a.spmv(x), 1e-10)
+        },
+    );
+}
+
+#[test]
+fn prop_spmv_linearity() {
+    check(
+        "spmv-linearity",
+        |rng| {
+            let a = arb::csr(rng, 50, 8);
+            let x = arb::vector(rng, a.ncols);
+            let z = arb::vector(rng, a.ncols);
+            (a, x, z)
+        },
+        |(a, x, z)| {
+            let combo: Vec<f64> = x.iter().zip(z).map(|(u, v)| 2.0 * u - 0.5 * v).collect();
+            let lhs = a.spmv(&combo);
+            let ax = a.spmv(x);
+            let az = a.spmv(z);
+            let rhs: Vec<f64> = ax.iter().zip(&az).map(|(u, v)| 2.0 * u - 0.5 * v).collect();
+            close(&lhs, &rhs, 1e-9)
+        },
+    );
+}
+
+#[test]
+fn prop_spmm_k_columns_equal_k_spmvs() {
+    check(
+        "spmm-columns",
+        |rng| {
+            let a = arb::csr(rng, 300, 8);
+            let k = 1 + rng.usize_below(6);
+            let x = arb::vector(rng, a.ncols * k);
+            (a, x, k)
+        },
+        |(a, x, k)| {
+            let y = spmm_parallel(a, x, *k, 4, Policy::Dynamic(16));
+            for col in 0..*k {
+                let xc: Vec<f64> = (0..a.ncols).map(|i| x[i * k + col]).collect();
+                let want = a.spmv(&xc);
+                let got: Vec<f64> = (0..a.nrows).map(|i| y[i * k + col]).collect();
+                close(&got, &want, 1e-10).map_err(|e| format!("col {col}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scheduler_covers_exactly_once() {
+    check(
+        "scheduler-coverage",
+        |rng| {
+            let n = rng.usize_below(5000);
+            let threads = 1 + rng.usize_below(64);
+            let policy = match rng.usize_below(4) {
+                0 => Policy::StaticBlock,
+                1 => Policy::StaticChunk(1 + rng.usize_below(100)),
+                2 => Policy::Dynamic(1 + rng.usize_below(100)),
+                _ => Policy::Guided(1 + rng.usize_below(50)),
+            };
+            (n, threads, policy)
+        },
+        |(n, threads, policy)| {
+            let a = StaticAssignment::build(*policy, *n, *threads);
+            if !a.covers_exactly(*n) {
+                return Err(format!("{policy} does not cover 0..{n} with {threads} threads"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rcm_is_permutation_and_preserves_spmv() {
+    check(
+        "rcm-permutation",
+        |rng| {
+            let a = arb::square_csr(rng, 60, 5);
+            let x = arb::vector(rng, a.ncols);
+            (a, x)
+        },
+        |(a, x)| {
+            let perm = rcm(a);
+            if !is_permutation(&perm) {
+                return Err("not a permutation".into());
+            }
+            let inv = invert_permutation(&perm);
+            if invert_permutation(&inv) != perm {
+                return Err("inverse not involutive".into());
+            }
+            let b = apply_symmetric_permutation(a, &perm);
+            if b.nnz() != a.nnz() {
+                return Err("nnz changed".into());
+            }
+            // (PAPᵀ)(Px) == P(Ax)
+            let px: Vec<f64> = perm.iter().map(|&p| x[p as usize]).collect();
+            let by = b.spmv(&px);
+            let ay = a.spmv(x);
+            let pay: Vec<f64> = perm.iter().map(|&p| ay[p as usize]).collect();
+            close(&by, &pay, 1e-9)
+        },
+    );
+}
+
+#[test]
+fn prop_rcm_never_worsens_bandwidth_much_on_banded() {
+    // RCM on an already-banded matrix must keep bandwidth within a small
+    // factor (it's the structure RCM is designed for).
+    check(
+        "rcm-banded",
+        |rng| {
+            use phi_spmv::sparse::gen::banded::{banded_runs, BandedSpec};
+            banded_runs(&BandedSpec {
+                n: 200 + rng.usize_below(300),
+                mean_row: 6.0,
+                run: 1 + rng.usize_below(4),
+                locality: 0.03,
+                seed: rng.next_u64(),
+            })
+        },
+        |a| {
+            let before = matrix_bandwidth(a);
+            let b = apply_symmetric_permutation(a, &rcm(a));
+            let after = matrix_bandwidth(&b);
+            if after > before * 2 + 8 {
+                return Err(format!("bandwidth {before} → {after}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ucld_bounds() {
+    check(
+        "ucld-bounds",
+        |rng| arb::csr(rng, 60, 12),
+        |a| {
+            let u = ucld(a);
+            if !(0.125..=1.0 + 1e-12).contains(&u) {
+                return Err(format!("ucld {u} out of [1/8, 1]"));
+            }
+            for i in 0..a.nrows {
+                let r = row_ucld(a.row_cids(i));
+                if !(0.125..=1.0 + 1e-12).contains(&r) {
+                    return Err(format!("row {i} ucld {r}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simulated_time_monotone_in_work() {
+    use phi_spmv::arch::mem::StoreFlavour;
+    use phi_spmv::arch::phi::{PhiMachine, WorkProfile};
+    check(
+        "model-monotone",
+        |rng| {
+            let base = WorkProfile {
+                instructions: 1e6 + rng.f64() * 1e9,
+                pairable: rng.f64() * 0.5,
+                stream_read_bytes: 1e6 + rng.f64() * 1e9,
+                stream_prefetched: rng.bool(0.5),
+                random_read_lines: rng.f64() * 1e6,
+                l2_lines: rng.f64() * 1e7,
+                write_bytes: rng.f64() * 1e8,
+                store: StoreFlavour::Ordered,
+                flops: 1e6,
+                app_bytes: 1e6,
+                imbalance: 1.0 + rng.f64() * 0.5,
+            };
+            let cores = 1 + rng.usize_below(61);
+            let threads = 1 + rng.usize_below(4);
+            (base, cores, threads)
+        },
+        |(w, cores, threads)| {
+            let m = PhiMachine::se10p();
+            let t0 = m.estimate(*cores, *threads, w).time_s;
+            // Doubling every work term must not reduce time.
+            let mut w2 = *w;
+            w2.instructions *= 2.0;
+            w2.stream_read_bytes *= 2.0;
+            w2.random_read_lines *= 2.0;
+            w2.l2_lines *= 2.0;
+            w2.write_bytes *= 2.0;
+            let t2 = m.estimate(*cores, *threads, &w2).time_s;
+            if t2 + 1e-15 < t0 {
+                return Err(format!("time decreased: {t0} → {t2}"));
+            }
+            // And time must be positive and finite.
+            if !(t0.is_finite() && t0 > 0.0) {
+                return Err(format!("bad time {t0}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ucld_permutation_invariant_under_identity() {
+    check(
+        "ucld-identity-perm",
+        |rng| arb::square_csr(rng, 50, 6),
+        |a| {
+            let perm: Vec<u32> = (0..a.nrows as u32).collect();
+            let b = apply_symmetric_permutation(a, &perm);
+            if b != *a {
+                return Err("identity permutation changed the matrix".into());
+            }
+            if (ucld(&b) - ucld(a)).abs() > 1e-12 {
+                return Err("identity permutation changed UCLD".into());
+            }
+            Ok(())
+        },
+    );
+}
