@@ -90,14 +90,19 @@ fn main() -> anyhow::Result<()> {
     run(
         "batched k≤16",
         &a,
-        ServerConfig { max_batch: 16, max_wait: Duration::from_millis(2), threads },
+        ServerConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            threads,
+            ..ServerConfig::default()
+        },
         requests,
         rate,
     )?;
     run(
         "unbatched",
         &a,
-        ServerConfig { max_batch: 1, max_wait: Duration::ZERO, threads },
+        ServerConfig { max_batch: 1, max_wait: Duration::ZERO, threads, ..ServerConfig::default() },
         requests,
         rate,
     )?;

@@ -1,0 +1,86 @@
+//! Tuned configuration vs. the default CSR dynamic,64 baseline across the
+//! generator suite — the payoff measurement for the tuner subsystem.
+//!
+//! For each matrix class we report the default, the tuned pick, and the
+//! best/worst candidates the search saw, so the table shows both the win
+//! over the default and that the tuner never lands on a loser.
+//!
+//! `cargo bench --bench bench_autotune [-- --scale 0.05]`
+
+use phi_spmv::sched::Policy;
+use phi_spmv::sparse::gen::{paper_suite, random_vector, randomize_values};
+use phi_spmv::sparse::MatrixStats;
+use phi_spmv::tuner::space::{enumerate, SpaceConfig};
+use phi_spmv::tuner::{Trialer, Tuner, TunerConfig, TuningCache};
+use phi_spmv::util::bench::Bencher;
+use phi_spmv::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = args.get("scale", 0.05f64).clamp(1e-4, 1.0);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let bencher = Bencher::quick();
+    let suite = paper_suite();
+
+    println!(
+        "{:<16} {:>6} {:>9} | {:>12} {:>12} {:>12} {:>12} | {:<22} {:>6}",
+        "matrix", "cands", "tune_ms", "default", "tuned", "best_cand", "worst_cand", "decision",
+        "ok"
+    );
+
+    // Quad mesh, scattered circuit, power-law web, FEM, 2D stencil.
+    for idx in [0usize, 2, 7, 11, 19] {
+        let entry = &suite[idx];
+        let mut a = entry.generate_scaled(scale);
+        randomize_values(&mut a, entry.id as u64);
+        let x = random_vector(a.ncols, 61);
+        let flops = 2.0 * a.nnz() as f64;
+
+        // Baseline: the configuration every experiment in the paper
+        // defaults to (CSR, dynamic,64, all threads).
+        let baseline = bencher.run("default", || {
+            phi_spmv::kernels::spmv_parallel(&a, &x, threads, Policy::Dynamic(64))
+        });
+
+        // The tuner's decision (its own short trials, in-memory cache).
+        let mut tuner = Tuner::new(TunerConfig::default(), TuningCache::in_memory());
+        let t0 = std::time::Instant::now();
+        let decision = tuner.tune(entry.name, &a).expect("tuning failed");
+        let tune_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // Re-measure the tuned pick with the same protocol as the baseline.
+        let prepared = phi_spmv::tuner::Prepared::new(&a, decision.candidate());
+        let tuned = bencher.run("tuned", || prepared.spmv(&x));
+
+        // Sweep the whole candidate space once more to locate the
+        // best/worst envelope the search chose from.
+        let stats = MatrixStats::compute(entry.name, &a);
+        let space = enumerate(&a, &stats, &SpaceConfig::default());
+        let results = Trialer::default().run_all(&a, &space.candidates);
+        let best = results.iter().map(|r| r.gflops).fold(0.0f64, f64::max);
+        let worst = results.iter().map(|r| r.gflops).fold(f64::INFINITY, f64::min);
+
+        // Acceptance: the tuned config must never be slower than the worst
+        // candidate in its own space (10% timing-noise allowance).
+        let tuned_gflops = tuned.gflops(flops);
+        let ok = tuned_gflops >= worst * 0.9;
+        if !ok {
+            eprintln!(
+                "WARN {}: tuned {tuned_gflops:.3} GFlop/s below worst candidate {worst:.3}",
+                entry.name
+            );
+        }
+        println!(
+            "{:<16} {:>6} {:>9.1} | {:>9.3} GF {:>9.3} GF {:>9.3} GF {:>9.3} GF | {:<22} {:>6}",
+            entry.name,
+            space.candidates.len(),
+            tune_ms,
+            baseline.gflops(flops),
+            tuned_gflops,
+            best,
+            worst,
+            format!("{} {} t{}", decision.format, decision.policy, decision.threads),
+            ok
+        );
+    }
+}

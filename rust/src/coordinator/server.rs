@@ -32,11 +32,32 @@ pub struct ServerConfig {
     pub max_wait: Duration,
     /// Worker threads for the SpMM kernel.
     pub threads: usize,
+    /// Scheduling policy for the SpMM kernel.
+    pub policy: Policy,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_batch: 16, max_wait: Duration::from_millis(2), threads: 1 }
+        ServerConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            threads: 1,
+            policy: Policy::Dynamic(64),
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Derives a server configuration from a tuned decision: the batcher
+    /// adopts the tuned schedule and thread count. (The tuned *format*
+    /// applies to the single-vector SpMV path; the batch kernel is SpMM
+    /// over CSR.)
+    pub fn tuned(config: &crate::tuner::TunedConfig) -> ServerConfig {
+        ServerConfig {
+            threads: config.threads.max(1),
+            policy: config.policy,
+            ..ServerConfig::default()
+        }
     }
 }
 
@@ -118,6 +139,20 @@ impl SpmvServer {
         SpmvServer { client: SpmvClient { tx }, worker: Some(worker) }
     }
 
+    /// Tunes the matrix first (answering from the tuner's cache when the
+    /// fingerprint is known) and starts the server under the tuned
+    /// schedule and thread count. Returns the decision so callers can
+    /// report/serve it alongside the server handle.
+    pub fn start_tuned(
+        a: Arc<Csr>,
+        tuner: &mut crate::tuner::Tuner,
+        name: &str,
+    ) -> anyhow::Result<(SpmvServer, crate::tuner::TunedConfig)> {
+        let config = tuner.tune(name, &a)?;
+        let server = SpmvServer::start(a, ServerConfig::tuned(&config));
+        Ok((server, config))
+    }
+
     /// A client handle (cloneable across threads).
     pub fn client(&self) -> SpmvClient {
         self.client.clone()
@@ -169,7 +204,7 @@ fn serve_loop(a: Arc<Csr>, config: ServerConfig, rx: mpsc::Receiver<Msg>) -> Ser
             }
         }
         let t0 = Instant::now();
-        let y = spmm_parallel(&a, &x, k, config.threads, Policy::Dynamic(64));
+        let y = spmm_parallel(&a, &x, k, config.threads, config.policy);
         let compute = t0.elapsed();
         stats.compute_s += compute.as_secs_f64();
         stats.flops += 2.0 * a.nnz() as f64 * k as f64;
@@ -241,7 +276,11 @@ mod tests {
         let a = matrix();
         let server = SpmvServer::start(
             a.clone(),
-            ServerConfig { max_batch: 8, max_wait: Duration::from_millis(50), threads: 1 },
+            ServerConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(50),
+                ..ServerConfig::default()
+            },
         );
         let client = server.client();
         // Fire 8 requests before any can complete; the 50 ms window lets
@@ -264,7 +303,11 @@ mod tests {
         let a = matrix();
         let server = SpmvServer::start(
             a.clone(),
-            ServerConfig { max_batch: 3, max_wait: Duration::from_millis(30), threads: 1 },
+            ServerConfig {
+                max_batch: 3,
+                max_wait: Duration::from_millis(30),
+                ..ServerConfig::default()
+            },
         );
         let client = server.client();
         let rxs: Vec<_> =
@@ -286,6 +329,29 @@ mod tests {
         assert_eq!(stats.served, 1);
         assert!(stats.flops > 0.0);
         assert!((stats.mean_batch() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tuned_server_serves_and_reports_decision() {
+        let a = matrix();
+        let mut tuner = crate::tuner::Tuner::quick();
+        let (server, decision) = SpmvServer::start_tuned(a.clone(), &mut tuner, "t").unwrap();
+        assert!(decision.threads >= 1);
+        assert_eq!(tuner.cache.misses, 1, "first request must search");
+        let client = server.client();
+        let x = random_vector(a.ncols, 77);
+        let want = a.spmv(&x);
+        let resp = client.call(x).unwrap();
+        for (u, v) in resp.y.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-10);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 1);
+
+        // A second server over the same matrix shape reuses the decision.
+        let (server2, _) = SpmvServer::start_tuned(a.clone(), &mut tuner, "t").unwrap();
+        assert_eq!(tuner.cache.hits, 1, "second request must hit the cache");
+        server2.shutdown();
     }
 
     #[test]

@@ -18,6 +18,9 @@ pub mod native;
 pub mod spmm_model;
 pub mod spmv_model;
 
-pub use native::{spmm_parallel, spmv_parallel, spmv_parallel_into};
+pub use native::{
+    bcsr_spmv_parallel, ell_spmv_parallel, hyb_spmv_parallel, spmm_parallel, spmv_parallel,
+    spmv_parallel_into,
+};
 pub use spmm_model::SpmmVariant;
 pub use spmv_model::SpmvVariant;

@@ -7,7 +7,7 @@
 //! here with a `SendPtr` wrapper around the disjoint writes.
 
 use crate::sched::{DynamicQueue, Policy, StaticAssignment};
-use crate::sparse::{Bcsr, Csr};
+use crate::sparse::{Bcsr, Csr, Ell, Hyb};
 
 /// Raw-pointer wrapper asserting disjoint row ownership across threads.
 #[derive(Clone, Copy)]
@@ -32,10 +32,26 @@ pub fn spmv_parallel_into(a: &Csr, x: &[f64], y: &mut [f64], nthreads: usize, po
         spmv_range(a, x, y, 0..a.nrows);
         return;
     }
+    run_row_partitioned(y, nthreads, policy, &|ys, r| spmv_range_into(a, x, ys, r));
+}
+
+/// The shared scheduling scaffold of the row-parallel kernels: distributes
+/// `0..y.len()` over `nthreads` workers under `policy` and hands each
+/// claimed range to `body` along with the matching disjoint slice of `y`
+/// (`ys[0]` = row `r.start`). Row disjointness is what makes the single
+/// `SendPtr`-based unsafe slicing here sound — keep it the only place
+/// that constructs those slices.
+fn run_row_partitioned(
+    y: &mut [f64],
+    nthreads: usize,
+    policy: Policy,
+    body: &(impl Fn(&mut [f64], std::ops::Range<usize>) + Sync),
+) {
+    let nrows = y.len();
     let yp = SendPtr(y.as_mut_ptr());
     match policy {
         Policy::Dynamic(chunk) => {
-            let queue = DynamicQueue::new(a.nrows, chunk.max(1));
+            let queue = DynamicQueue::new(nrows, chunk.max(1));
             std::thread::scope(|s| {
                 for _ in 0..nthreads {
                     let queue = &queue;
@@ -45,14 +61,14 @@ pub fn spmv_parallel_into(a: &Csr, x: &[f64], y: &mut [f64], nthreads: usize, po
                             let ys = unsafe {
                                 std::slice::from_raw_parts_mut(yp.0.add(r.start), r.len())
                             };
-                            spmv_range_into(a, x, ys, r);
+                            body(ys, r);
                         }
                     });
                 }
             });
         }
         _ => {
-            let assign = StaticAssignment::build(policy, a.nrows, nthreads);
+            let assign = StaticAssignment::build(policy, nrows, nthreads);
             std::thread::scope(|s| {
                 for ranges in &assign.ranges {
                     s.spawn(move || {
@@ -61,7 +77,7 @@ pub fn spmv_parallel_into(a: &Csr, x: &[f64], y: &mut [f64], nthreads: usize, po
                             let ys = unsafe {
                                 std::slice::from_raw_parts_mut(yp.0.add(r.start), r.len())
                             };
-                            spmv_range_into(a, x, ys, r.clone());
+                            body(ys, r.clone());
                         }
                     });
                 }
@@ -253,6 +269,50 @@ fn bcsr_rows_local(b: &Bcsr, x: &[f64], ys: &mut [f64], br_range: std::ops::Rang
     }
 }
 
+/// Parallel SpMV over a padded [`Ell`] matrix: `y ← Ax`.
+///
+/// Rows are distributed exactly like [`spmv_parallel`]; each padded row is
+/// a fixed `width`-slot dot product (sentinel slots multiply by 0.0, so no
+/// per-row length bookkeeping is needed — the layout the tuner picks for
+/// near-uniform row lengths).
+pub fn ell_spmv_parallel(e: &Ell, x: &[f64], nthreads: usize, policy: Policy) -> Vec<f64> {
+    assert_eq!(x.len(), e.ncols);
+    let mut y = vec![0.0; e.nrows];
+    let nthreads = nthreads.max(1);
+    if nthreads == 1 || e.nrows < 256 {
+        ell_rows_local(e, x, &mut y, 0..e.nrows);
+        return y;
+    }
+    run_row_partitioned(&mut y, nthreads, policy, &|ys, r| ell_rows_local(e, x, ys, r));
+    y
+}
+
+/// ELL SpMV over a row range into a local slice (`ys[0]` = row `r.start`).
+#[inline]
+fn ell_rows_local(e: &Ell, x: &[f64], ys: &mut [f64], r: std::ops::Range<usize>) {
+    for (yi, i) in ys.iter_mut().zip(r) {
+        let base = i * e.width;
+        let mut acc = 0.0;
+        for k in 0..e.width {
+            acc += e.vals[base + k] * x[e.cids[base + k] as usize];
+        }
+        *yi = acc;
+    }
+}
+
+/// Parallel SpMV over a [`Hyb`] matrix.
+///
+/// The regular ELL part runs in parallel; the (typically tiny) COO
+/// overflow is applied serially after the join, because overflow entries
+/// are not row-disjoint across threads.
+pub fn hyb_spmv_parallel(h: &Hyb, x: &[f64], nthreads: usize, policy: Policy) -> Vec<f64> {
+    let mut y = ell_spmv_parallel(&h.ell, x, nthreads, policy);
+    for idx in 0..h.coo.nnz() {
+        y[h.coo.rows[idx] as usize] += h.coo.vals[idx] * x[h.coo.cols[idx] as usize];
+    }
+    y
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -324,6 +384,42 @@ mod tests {
         let x = vec![1.0; 9];
         let got = spmv_parallel(&a, &x, 8, Policy::Dynamic(64));
         assert_close(&got, &a.spmv(&x));
+    }
+
+    #[test]
+    fn ell_parallel_matches_serial_all_policies() {
+        let a = test_matrix();
+        let e = Ell::from_csr(&a, 0);
+        let x = random_vector(a.ncols, 29);
+        let want = a.spmv(&x);
+        for policy in Policy::paper_sweep() {
+            for threads in [1, 3, 8] {
+                let got = ell_spmv_parallel(&e, &x, threads, policy);
+                assert_close(&got, &want);
+            }
+        }
+    }
+
+    #[test]
+    fn hyb_parallel_matches_serial() {
+        // A matrix with a few heavy rows so the COO overflow is non-empty.
+        let mut coo = crate::sparse::Coo::new(600, 600);
+        for i in 0..600usize {
+            coo.push(i, i, 1.0);
+            coo.push(i, (i + 1) % 600, -0.5);
+        }
+        for j in 0..200usize {
+            coo.push(3, (j * 3) % 600, 0.25); // hub row overflows width 4
+        }
+        let a = coo.to_csr();
+        let h = Hyb::from_csr(&a, 4);
+        assert!(h.coo.nnz() > 0, "overflow part must be exercised");
+        let x = random_vector(a.ncols, 31);
+        let want = a.spmv(&x);
+        for threads in [1, 4] {
+            let got = hyb_spmv_parallel(&h, &x, threads, Policy::Dynamic(32));
+            assert_close(&got, &want);
+        }
     }
 
     #[test]

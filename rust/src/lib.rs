@@ -20,6 +20,9 @@
 //!   coordinator loads Pallas/JAX kernels AOT-lowered to HLO text and runs
 //!   them through the PJRT CPU client, orchestrating the paper's experiment
 //!   sweeps.
+//! * [`tuner`] — per-matrix auto-tuning: a statistics-pruned search over
+//!   (format, schedule, threads), decided by empirical trials or the
+//!   analytic cost models, cached persistently by matrix fingerprint.
 //!
 //! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -31,6 +34,7 @@ pub mod kernels;
 pub mod runtime;
 pub mod sched;
 pub mod sparse;
+pub mod tuner;
 pub mod util;
 
 /// Library result alias used across fallible APIs.

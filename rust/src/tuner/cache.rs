@@ -1,0 +1,330 @@
+//! The tuned decision and its persistent cache.
+//!
+//! Decisions are keyed by the tuner's matrix fingerprint (the
+//! [`crate::sparse::MatrixStats::fingerprint_hex`] shape component plus a
+//! structural-metrics hash; see `cache_key` in the parent module) and
+//! stored as JSON through [`crate::util::json`], so repeated requests for
+//! the same matrix skip the search entirely — including across processes
+//! when a cache path is configured. Serialization is deterministic
+//! (sorted keys, stable number formatting): saving a loaded cache
+//! reproduces the file byte for byte. Saves merge with the on-disk state
+//! and swap in via rename, which keeps the file always parseable and
+//! makes sequential sharing lossless; truly simultaneous saves have no
+//! file lock, so the losing writer's newest entries can still be dropped
+//! (and simply get re-tuned on the next miss).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::sched::Policy;
+use crate::util::json::Json;
+
+use super::space::{parse_policy, Candidate, Format};
+
+/// File-format version written into every cache file.
+const CACHE_VERSION: usize = 1;
+
+/// The configuration the tuner settled on for one matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedConfig {
+    /// Chosen storage format.
+    pub format: Format,
+    /// Chosen scheduling policy.
+    pub policy: Policy,
+    /// Chosen thread count.
+    pub threads: usize,
+    /// GFlop/s observed (trials) or predicted (model) at decision time.
+    pub gflops: f64,
+    /// `"trial"` or `"model"`.
+    pub source: String,
+}
+
+impl TunedConfig {
+    /// The candidate this config executes.
+    pub fn candidate(&self) -> Candidate {
+        Candidate { format: self.format, policy: self.policy, threads: self.threads }
+    }
+
+    /// Serializes to a JSON object.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("format", self.format.to_string())
+            .set("policy", self.policy.to_string())
+            .set("threads", self.threads)
+            .set("gflops", self.gflops)
+            .set("source", self.source.as_str())
+    }
+
+    /// Parses the [`TunedConfig::to_json`] form.
+    pub fn from_json(j: &Json) -> anyhow::Result<TunedConfig> {
+        let format_s = j
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("tuned config missing 'format'"))?;
+        let format = Format::parse(format_s)
+            .ok_or_else(|| anyhow::anyhow!("unknown format {format_s:?}"))?;
+        let policy_s = j
+            .get("policy")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("tuned config missing 'policy'"))?;
+        let policy = parse_policy(policy_s)
+            .ok_or_else(|| anyhow::anyhow!("unknown policy {policy_s:?}"))?;
+        let threads = j
+            .get("threads")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("tuned config missing 'threads'"))?;
+        let gflops = j.get("gflops").and_then(Json::as_f64).unwrap_or(0.0);
+        let source = j
+            .get("source")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        Ok(TunedConfig { format, policy, threads: threads.max(1), gflops, source })
+    }
+}
+
+impl std::fmt::Display for TunedConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} {} t{} ({:.2} GFlop/s, {})",
+            self.format, self.policy, self.threads, self.gflops, self.source
+        )
+    }
+}
+
+/// Fingerprint-keyed store of tuned configurations.
+#[derive(Debug, Default)]
+pub struct TuningCache {
+    path: Option<PathBuf>,
+    entries: BTreeMap<String, TunedConfig>,
+    /// Lookups answered from the cache.
+    pub hits: usize,
+    /// Lookups that fell through to a search.
+    pub misses: usize,
+}
+
+impl TuningCache {
+    /// A cache with no backing file (decisions live for the process).
+    pub fn in_memory() -> TuningCache {
+        TuningCache::default()
+    }
+
+    /// Loads a cache from `path`; a missing file yields an empty cache
+    /// bound to that path (first `save` creates it).
+    pub fn load(path: &Path) -> anyhow::Result<TuningCache> {
+        let mut cache = TuningCache { path: Some(path.to_path_buf()), ..TuningCache::default() };
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(cache),
+            Err(e) => return Err(anyhow::anyhow!("reading {path:?}: {e}")),
+        };
+        cache.entries = parse_entries(&Json::parse(&text)?)?;
+        Ok(cache)
+    }
+
+    /// Number of stored decisions.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Looks up a fingerprint, counting the hit/miss.
+    pub fn get(&mut self, key: &str) -> Option<&TunedConfig> {
+        if self.entries.contains_key(key) {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        self.entries.get(key)
+    }
+
+    /// Stores a decision.
+    pub fn insert(&mut self, key: String, config: TunedConfig) {
+        self.entries.insert(key, config);
+    }
+
+    /// The whole cache as JSON (the on-disk form).
+    pub fn to_json(&self) -> Json {
+        entries_to_json(&self.entries)
+    }
+
+    /// Rebuilds a cache (no backing path) from [`TuningCache::to_json`].
+    pub fn from_json(j: &Json) -> anyhow::Result<TuningCache> {
+        Ok(TuningCache { entries: parse_entries(j)?, ..TuningCache::default() })
+    }
+
+    /// Writes the cache to its backing file (no-op when in-memory).
+    ///
+    /// The written set is this cache's entries merged over whatever is on
+    /// disk (ours win on key conflicts), and the file is swapped in via a
+    /// temp file + rename, so readers never see a half-written file and
+    /// sequential sharing is lossless. There is no file lock: two saves
+    /// racing in the same instant can still lose the slower writer's
+    /// newest entries (they are re-tuned on the next miss).
+    pub fn save(&self) -> anyhow::Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut merged = self.entries.clone();
+        if let Ok(text) = std::fs::read_to_string(path) {
+            if let Ok(disk) = Json::parse(&text).and_then(|j| parse_entries(&j)) {
+                for (k, v) in disk {
+                    merged.entry(k).or_insert(v);
+                }
+            }
+        }
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(format!(".tmp{}", std::process::id()));
+        let tmp = PathBuf::from(tmp);
+        std::fs::write(&tmp, entries_to_json(&merged).to_pretty())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+}
+
+fn entries_to_json(map: &BTreeMap<String, TunedConfig>) -> Json {
+    let mut entries = Json::obj();
+    for (k, v) in map {
+        entries = entries.set(k, v.to_json());
+    }
+    Json::obj().set("version", CACHE_VERSION).set("entries", entries)
+}
+
+fn parse_entries(j: &Json) -> anyhow::Result<BTreeMap<String, TunedConfig>> {
+    let version = j.get("version").and_then(Json::as_usize).unwrap_or(0);
+    anyhow::ensure!(version == CACHE_VERSION, "unsupported tuning-cache version {version}");
+    let mut out = BTreeMap::new();
+    match j.get("entries") {
+        Some(Json::Obj(map)) => {
+            for (k, v) in map {
+                out.insert(k.clone(), TunedConfig::from_json(v)?);
+            }
+        }
+        Some(_) => anyhow::bail!("'entries' must be an object"),
+        None => anyhow::bail!("cache file missing 'entries'"),
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::TempDir;
+
+    fn sample_entries() -> Vec<(String, TunedConfig)> {
+        vec![
+            (
+                "00aa".to_string(),
+                TunedConfig {
+                    format: Format::Csr,
+                    policy: Policy::Dynamic(64),
+                    threads: 8,
+                    gflops: 3.5,
+                    source: "trial".to_string(),
+                },
+            ),
+            (
+                "00bb".to_string(),
+                TunedConfig {
+                    format: Format::Bcsr { r: 8, c: 1 },
+                    policy: Policy::Dynamic(16),
+                    threads: 4,
+                    gflops: 2.25,
+                    source: "model".to_string(),
+                },
+            ),
+            (
+                "00cc".to_string(),
+                TunedConfig {
+                    format: Format::Hyb { width: 16 },
+                    policy: Policy::StaticBlock,
+                    threads: 1,
+                    gflops: 0.5,
+                    source: "trial".to_string(),
+                },
+            ),
+        ]
+    }
+
+    #[test]
+    fn file_roundtrip_and_hit_accounting() {
+        let dir = TempDir::new("tcache");
+        let path = dir.path().join("cache.json");
+        let mut c = TuningCache::load(&path).unwrap();
+        assert!(c.is_empty());
+        for (k, v) in sample_entries() {
+            c.insert(k, v);
+        }
+        c.save().unwrap();
+
+        let mut back = TuningCache::load(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.get("00bb"), Some(&sample_entries()[1].1));
+        assert!(back.get("missing").is_none());
+        assert_eq!((back.hits, back.misses), (1, 1));
+    }
+
+    #[test]
+    fn save_is_deterministic() {
+        let dir = TempDir::new("tcache-det");
+        let path = dir.path().join("cache.json");
+        let mut c = TuningCache::load(&path).unwrap();
+        for (k, v) in sample_entries() {
+            c.insert(k, v);
+        }
+        c.save().unwrap();
+        let first = std::fs::read_to_string(&path).unwrap();
+        // Load → save must reproduce the file byte for byte.
+        TuningCache::load(&path).unwrap().save().unwrap();
+        let second = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn concurrent_saves_merge_instead_of_clobbering() {
+        let dir = TempDir::new("tcache-merge");
+        let path = dir.path().join("cache.json");
+        let entries = sample_entries();
+        let mut a = TuningCache::load(&path).unwrap();
+        let mut b = TuningCache::load(&path).unwrap();
+        a.insert(entries[0].0.clone(), entries[0].1.clone());
+        a.save().unwrap();
+        b.insert(entries[1].0.clone(), entries[1].1.clone());
+        b.save().unwrap(); // must keep A's entry, not overwrite the file
+        let mut merged = TuningCache::load(&path).unwrap();
+        assert_eq!(merged.len(), 2);
+        assert_eq!(merged.get(&entries[0].0), Some(&entries[0].1));
+        assert_eq!(merged.get(&entries[1].0), Some(&entries[1].1));
+    }
+
+    #[test]
+    fn json_roundtrip_without_file() {
+        let mut c = TuningCache::in_memory();
+        for (k, v) in sample_entries() {
+            c.insert(k, v);
+        }
+        let j = c.to_json();
+        let back = TuningCache::from_json(&j).unwrap();
+        assert_eq!(back.to_json().to_string(), j.to_string());
+    }
+
+    #[test]
+    fn rejects_bad_versions_and_shapes() {
+        assert!(TuningCache::from_json(&Json::parse(r#"{"version": 9}"#).unwrap()).is_err());
+        assert!(
+            TuningCache::from_json(&Json::parse(r#"{"version": 1, "entries": 3}"#).unwrap())
+                .is_err()
+        );
+        let bad_format =
+            r#"{"version": 1, "entries": {"k": {"format": "zzz", "policy": "static", "threads": 1}}}"#;
+        assert!(TuningCache::from_json(&Json::parse(bad_format).unwrap()).is_err());
+    }
+}

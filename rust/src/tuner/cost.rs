@@ -1,0 +1,201 @@
+//! Analytic candidate ranking — the fallback when empirical trials are
+//! disabled (e.g. tuning offline, or on a loaded host where timing is
+//! meaningless).
+//!
+//! Reuses the paper-calibrated machinery: the CSR profile comes from
+//! [`crate::kernels::spmv_model`] (`-O3` variant), BCSR from
+//! [`crate::kernels::blocked_model`], and ELL/HYB are derived from the CSR
+//! profile by scaling the instruction and stream-byte terms with the
+//! padding blowup. Per-candidate scheduling is injected by recomputing the
+//! load imbalance for the candidate's policy, and the thread count maps
+//! onto the KNC model's cores × contexts grid. Absolute seconds are for a
+//! KNC, not the host — only the *ranking* is consumed.
+
+use crate::arch::phi::WorkProfile;
+use crate::arch::PhiMachine;
+use crate::kernels::blocked_model::bcsr_profile;
+use crate::kernels::spmv_model::{spmv_profile, SpmvAnalysis, SpmvVariant};
+use crate::sched::{LoadBalance, StaticAssignment};
+use crate::sparse::ell::ELL_LANES;
+use crate::sparse::{Bcsr, Csr};
+
+use super::space::{Candidate, Format};
+
+/// The analytic ranker.
+pub struct CostModel {
+    machine: PhiMachine,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { machine: PhiMachine::se10p() }
+    }
+}
+
+impl CostModel {
+    /// A cost model over the calibrated SE10P machine.
+    pub fn new() -> CostModel {
+        CostModel::default()
+    }
+
+    /// Ranks candidates by predicted time, ascending (best first).
+    pub fn rank(&self, a: &Csr, candidates: &[Candidate]) -> Vec<(Candidate, f64)> {
+        let analysis = SpmvAnalysis::compute(a, 61);
+        let base = spmv_profile(a, SpmvVariant::O3, &analysis);
+        let weights: Vec<u64> = (0..a.nrows).map(|i| a.row_nnz(i) as u64 + 4).collect();
+        let mut out: Vec<(Candidate, f64)> = candidates
+            .iter()
+            .map(|&cand| {
+                let mut w = self.profile_for(a, &base, cand.format);
+                let assign = StaticAssignment::build(cand.policy, a.nrows, cand.threads.max(1));
+                w.imbalance = LoadBalance::compute(&assign, &weights).imbalance;
+                let (cores, contexts) = map_threads(cand.threads);
+                let est = self.machine.estimate(cores, contexts, &w);
+                (cand, est.time_s)
+            })
+            .collect();
+        out.sort_by(|u, v| u.1.partial_cmp(&v.1).unwrap_or(std::cmp::Ordering::Equal));
+        out
+    }
+
+    /// Predicted time for a single candidate (KNC seconds; ranking only).
+    pub fn predict(&self, a: &Csr, candidate: Candidate) -> f64 {
+        self.rank(a, &[candidate])[0].1
+    }
+
+    fn profile_for(&self, a: &Csr, base: &WorkProfile, format: Format) -> WorkProfile {
+        let nnz = a.nnz() as f64;
+        match format {
+            Format::Csr => *base,
+            Format::Ell => {
+                // Padding inflates both the streamed matrix bytes and the
+                // executed inner-loop iterations by the same factor. The
+                // padded size is computed analytically (same rounding as
+                // `Ell::from_csr`) — materializing the payload here could
+                // allocate nrows × max_row slots just to read one scalar.
+                let max_nnz = (0..a.nrows).map(|i| a.row_nnz(i)).max().unwrap_or(0);
+                let width = max_nnz.max(1).div_ceil(ELL_LANES) * ELL_LANES;
+                let padded = (a.nrows * width) as f64;
+                let pad = padded / nnz.max(1.0);
+                let mut w = *base;
+                w.instructions = base.instructions * pad;
+                w.stream_read_bytes = 12.0 * padded;
+                w
+            }
+            Format::Bcsr { r, c } => bcsr_profile(a, &Bcsr::from_csr(a, r, c), 61),
+            Format::Hyb { width } => {
+                // The overflow split happens at the raw width, but the
+                // stored ELL part is lane-rounded exactly like the real
+                // conversion (`Hyb::from_csr` → `Ell::from_csr`).
+                let stored_width = width.max(1).div_ceil(ELL_LANES) * ELL_LANES;
+                let padded = (a.nrows * stored_width) as f64;
+                let tail: usize =
+                    (0..a.nrows).map(|i| a.row_nnz(i).saturating_sub(width)).sum();
+                let covered = (nnz - tail as f64).max(1.0);
+                let pad = (padded / covered).min(8.0);
+                let mut w = *base;
+                // ELL part scaled by its own fill, plus a scalar COO pass
+                // (~8 instructions and 16 streamed bytes per overflow entry).
+                w.instructions = base.instructions * pad + 8.0 * tail as f64;
+                w.stream_read_bytes = 12.0 * padded + 16.0 * tail as f64;
+                w
+            }
+        }
+    }
+}
+
+/// Maps a host thread count onto the KNC model's (cores, contexts) grid.
+fn map_threads(threads: usize) -> (usize, usize) {
+    let t = threads.max(1);
+    (t.min(61), t.div_ceil(61).min(4))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::Policy;
+    use crate::sparse::gen::powerlaw::{powerlaw, PowerLawSpec};
+    use crate::sparse::gen::stencil::stencil_2d;
+
+    fn cand(format: Format, threads: usize) -> Candidate {
+        Candidate { format, policy: Policy::Dynamic(64), threads }
+    }
+
+    #[test]
+    fn rank_is_sorted_and_finite() {
+        let a = stencil_2d(40, 40);
+        let m = CostModel::new();
+        let ranked = m.rank(
+            &a,
+            &[
+                cand(Format::Csr, 4),
+                cand(Format::Ell, 4),
+                cand(Format::Bcsr { r: 8, c: 1 }, 4),
+            ],
+        );
+        assert_eq!(ranked.len(), 3);
+        for w in ranked.windows(2) {
+            assert!(w[0].1 <= w[1].1, "must be ascending");
+        }
+        for (_, t) in &ranked {
+            assert!(t.is_finite() && *t > 0.0);
+        }
+    }
+
+    #[test]
+    fn padding_blowup_penalizes_ell_on_skewed_rows() {
+        // One hub row of 400 nonzeros forces ELL width 400 → the model must
+        // rank CSR ahead of ELL.
+        let a = powerlaw(&PowerLawSpec {
+            n: 2000,
+            nnz: 10_000,
+            row_alpha: 1.6,
+            col_alpha: 1.4,
+            max_row: 400,
+            seed: 3,
+        });
+        let m = CostModel::new();
+        let csr = m.predict(&a, cand(Format::Csr, 8));
+        let ell = m.predict(&a, cand(Format::Ell, 8));
+        assert!(ell > csr, "ELL {ell} must lose to CSR {csr} under heavy padding");
+    }
+
+    #[test]
+    fn analytic_ell_padding_matches_real_conversion() {
+        let a = stencil_2d(17, 23);
+        let max_nnz = (0..a.nrows).map(|i| a.row_nnz(i)).max().unwrap_or(0);
+        let width = max_nnz.max(1).div_ceil(ELL_LANES) * ELL_LANES;
+        assert_eq!(a.nrows * width, crate::sparse::Ell::from_csr(&a, 0).padded_len());
+    }
+
+    #[test]
+    fn more_threads_never_predicted_slower_on_uniform_work() {
+        let a = stencil_2d(60, 60);
+        let m = CostModel::new();
+        let t1 = m.predict(&a, cand(Format::Csr, 1));
+        let t8 = m.predict(&a, cand(Format::Csr, 8));
+        assert!(t8 < t1, "8 threads {t8} vs serial {t1}");
+    }
+
+    #[test]
+    fn static_predicted_worse_than_dynamic_on_skewed_rows() {
+        let a = powerlaw(&PowerLawSpec {
+            n: 3000,
+            nnz: 12_000,
+            row_alpha: 1.7,
+            col_alpha: 1.4,
+            max_row: 500,
+            seed: 5,
+        });
+        let m = CostModel::new();
+        let dynamic = m.predict(
+            &a,
+            Candidate { format: Format::Csr, policy: Policy::Dynamic(16), threads: 8 },
+        );
+        let stat = m.predict(
+            &a,
+            Candidate { format: Format::Csr, policy: Policy::StaticBlock, threads: 8 },
+        );
+        assert!(stat >= dynamic, "static {stat} vs dynamic {dynamic}");
+    }
+}

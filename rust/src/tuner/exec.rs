@@ -1,0 +1,148 @@
+//! Execution of a chosen candidate: one-time format conversion plus the
+//! SpMV dispatch onto the matching native kernel.
+//!
+//! Conversion is the expensive half of trying a candidate, so the payload
+//! ([`PreparedFormat`]) is independent of schedule and thread count — the
+//! trialer converts each distinct format once and sweeps schedules over it.
+
+use crate::kernels::native::{
+    bcsr_spmv_parallel, ell_spmv_parallel, hyb_spmv_parallel, spmv_parallel,
+};
+use crate::sched::Policy;
+use crate::sparse::{Bcsr, Csr, Ell, Hyb};
+
+use super::space::{Candidate, Format};
+
+/// A matrix converted into one candidate format, ready to execute.
+pub enum PreparedFormat {
+    /// CSR runs straight off the borrowed base matrix.
+    Csr,
+    /// Padded ELLPACK payload.
+    Ell(Ell),
+    /// Register-blocked payload.
+    Bcsr(Bcsr),
+    /// Hybrid ELL + COO payload.
+    Hyb(Hyb),
+}
+
+impl PreparedFormat {
+    /// Converts `a` into `format` (no-op for CSR).
+    pub fn prepare(a: &Csr, format: Format) -> PreparedFormat {
+        match format {
+            Format::Csr => PreparedFormat::Csr,
+            Format::Ell => PreparedFormat::Ell(Ell::from_csr(a, 0)),
+            Format::Bcsr { r, c } => PreparedFormat::Bcsr(Bcsr::from_csr(a, r, c)),
+            Format::Hyb { width } => PreparedFormat::Hyb(Hyb::from_csr(a, width)),
+        }
+    }
+
+    /// Runs one SpMV under the given schedule. `a` must be the matrix this
+    /// payload was prepared from (CSR executes directly on it).
+    pub fn spmv(&self, a: &Csr, x: &[f64], threads: usize, policy: Policy) -> Vec<f64> {
+        match self {
+            PreparedFormat::Csr => spmv_parallel(a, x, threads, policy),
+            PreparedFormat::Ell(e) => ell_spmv_parallel(e, x, threads, policy),
+            PreparedFormat::Bcsr(b) => bcsr_spmv_parallel(b, x, threads, dynamic_chunk(policy)),
+            PreparedFormat::Hyb(h) => hyb_spmv_parallel(h, x, threads, policy),
+        }
+    }
+
+    /// Bytes of the converted representation (CSR reports the base).
+    pub fn storage_bytes(&self, a: &Csr) -> usize {
+        match self {
+            PreparedFormat::Csr => a.storage_bytes(),
+            PreparedFormat::Ell(e) => e.padded_len() * 12,
+            PreparedFormat::Bcsr(b) => b.storage_bytes(),
+            PreparedFormat::Hyb(h) => h.ell.padded_len() * 12 + h.coo.nnz() * 16,
+        }
+    }
+}
+
+/// The dynamic chunk a policy implies for the BCSR block-row queue.
+fn dynamic_chunk(policy: Policy) -> usize {
+    match policy {
+        Policy::StaticChunk(c) | Policy::Dynamic(c) | Policy::Guided(c) => c.max(1),
+        Policy::StaticBlock => 64,
+    }
+}
+
+/// A matrix bound to one candidate: payload + schedule, the thing the
+/// tuner hands back for repeated execution.
+pub struct Prepared<'a> {
+    /// The base CSR matrix.
+    pub base: &'a Csr,
+    /// The candidate this preparation executes.
+    pub candidate: Candidate,
+    /// Converted payload.
+    pub payload: PreparedFormat,
+}
+
+impl<'a> Prepared<'a> {
+    /// Converts `a` for `candidate`.
+    pub fn new(a: &'a Csr, candidate: Candidate) -> Prepared<'a> {
+        Prepared { base: a, candidate, payload: PreparedFormat::prepare(a, candidate.format) }
+    }
+
+    /// Runs one SpMV: `y ← Ax` under the candidate's schedule.
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        self.payload.spmv(self.base, x, self.candidate.threads, self.candidate.policy)
+    }
+
+    /// Bytes of the converted representation.
+    pub fn storage_bytes(&self) -> usize {
+        self.payload.storage_bytes(self.base)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::stencil::stencil_2d;
+    use crate::sparse::gen::{random_vector, randomize_values};
+
+    fn matrix() -> Csr {
+        let mut a = stencil_2d(30, 33);
+        randomize_values(&mut a, 91);
+        a
+    }
+
+    #[test]
+    fn every_format_matches_the_oracle() {
+        let a = matrix();
+        let x = random_vector(a.ncols, 92);
+        let want = a.spmv(&x);
+        for format in [
+            Format::Csr,
+            Format::Ell,
+            Format::Bcsr { r: 8, c: 1 },
+            Format::Bcsr { r: 4, c: 8 },
+            Format::Hyb { width: 4 },
+        ] {
+            for policy in [Policy::StaticBlock, Policy::Dynamic(32)] {
+                for threads in [1usize, 4] {
+                    let p = Prepared::new(&a, Candidate { format, policy, threads });
+                    let got = p.spmv(&x);
+                    assert_eq!(got.len(), want.len());
+                    for (u, v) in got.iter().zip(&want) {
+                        assert!((u - v).abs() < 1e-10, "{format} {policy} t{threads}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn storage_bytes_positive_and_format_dependent() {
+        let a = matrix();
+        let csr = Prepared::new(
+            &a,
+            Candidate { format: Format::Csr, policy: Policy::Dynamic(64), threads: 1 },
+        );
+        let ell = Prepared::new(
+            &a,
+            Candidate { format: Format::Ell, policy: Policy::Dynamic(64), threads: 1 },
+        );
+        assert_eq!(csr.storage_bytes(), a.storage_bytes());
+        assert!(ell.storage_bytes() >= a.nnz() * 12, "ELL stores at least the nonzeros");
+    }
+}

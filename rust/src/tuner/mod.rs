@@ -1,0 +1,338 @@
+//! Auto-tuning: per-matrix selection of format, schedule and thread count.
+//!
+//! The paper's central practical finding is that the best SpMV
+//! configuration — storage format, OpenMP scheduling policy and chunk,
+//! thread count — varies per matrix, and its experiments sweep these by
+//! hand. A serving system cannot: this subsystem makes the selection
+//! automatic and caches it.
+//!
+//! # Architecture
+//!
+//! ```text
+//!             MatrixStats ──► fingerprint ──► TuningCache (JSON, persistent)
+//!                  │                               │ hit: done
+//!                  ▼                               ▼ miss
+//!  [space]   SearchSpace::enumerate ── stats-pruned candidates
+//!                  │
+//!        trials on ▼          trials off
+//!  [trial]   Trialer ─ time      [cost] CostModel ─ rank with the
+//!            each candidate             paper-calibrated KNC models
+//!                  └──────────┬──────────┘
+//!                             ▼
+//!                        TunedConfig ──► [exec] Prepared ──► spmv
+//! ```
+//!
+//! * [`space`] — the candidate space: formats ({CSR, ELL, BCSR r×c,
+//!   HYB}) × [`crate::sched::Policy`] × thread counts, pruned up front by
+//!   [`crate::sparse::MatrixStats`]-driven heuristics (padding blowup
+//!   rules out ELL, block fill rules out BCSR shapes, row-length skew
+//!   rules out static scheduling).
+//! * [`trial`] — the empirical path: short warmup+measure timings of each
+//!   candidate through the real [`crate::kernels::native`] kernels; each
+//!   distinct format is converted once.
+//! * [`cost`] — the analytic fallback when trials are disabled: ranks
+//!   candidates with the [`crate::arch::phi`] machine model fed by the
+//!   [`crate::kernels`] work-profile builders.
+//! * [`cache`] — [`TunedConfig`] + [`TuningCache`]: decisions keyed by the
+//!   stats fingerprint, persisted as JSON via [`crate::util::json`].
+//! * [`exec`] — [`Prepared`]: the chosen format materialized with an
+//!   `spmv` entry that dispatches onto the right kernel.
+//!
+//! # Adding a candidate format
+//!
+//! 1. Add a variant to [`space::Format`] (+ `Display`/`parse` arms — the
+//!    cache round-trips through those strings).
+//! 2. Teach [`exec::PreparedFormat`] to convert and execute it (add a
+//!    parallel kernel to `kernels::native` if the format only has a serial
+//!    reference `spmv`).
+//! 3. Give [`space::enumerate`] a pruning heuristic so hopeless matrices
+//!    never trial it, and [`cost::CostModel::rank`] a work profile so the
+//!    model path can rank it.
+//! 4. Extend the `every_format_matches_the_oracle` test in [`exec`] and
+//!    the property test in `rust/tests/tuner_props.rs`.
+
+pub mod cache;
+pub mod cost;
+pub mod exec;
+pub mod space;
+pub mod trial;
+
+pub use cache::{TunedConfig, TuningCache};
+pub use cost::CostModel;
+pub use exec::{Prepared, PreparedFormat};
+pub use space::{Candidate, Format, SearchSpace, SpaceConfig};
+pub use trial::{TrialResult, Trialer};
+
+use crate::sparse::stats::row_length_cv;
+use crate::sparse::{Csr, MatrixStats};
+
+/// Cache key for one matrix under one tuner configuration.
+///
+/// Three components, because entries must only be shared when the search
+/// would have been identical:
+/// * the [`MatrixStats::fingerprint_hex`] shape statistics;
+/// * the structural metrics the pruner consumes (row-length CV, 8×8 block
+///   fill) — Table 1 statistics alone cannot distinguish, say, aligned
+///   dense blocks from the same counts scattered;
+/// * the decision procedure itself (trials vs. model, and the search-space
+///   shape), so a `model_only` or `quick()` decision is never served to a
+///   full-space trials tuner. Warmup/measure counts are deliberately
+///   excluded — they change timing precision, not the space searched.
+///
+/// The structural scans are O(nnz) and also run inside `enumerate` on a
+/// miss; that duplication is accepted — a hit still costs far less than
+/// the search, and a caller's subsequent SpMV is O(nnz) anyway.
+fn cache_key(a: &Csr, stats: &MatrixStats, config: &TunerConfig) -> String {
+    fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
+        for &b in bytes {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+    let cv = row_length_cv(a);
+    let fill = space::estimate_block_density(a, 8, 8);
+    let mut h = 0xcbf29ce484222325u64;
+    h = fnv(h, &cv.to_bits().to_le_bytes());
+    h = fnv(h, &fill.to_bits().to_le_bytes());
+    h = fnv(h, &[config.trials as u8]);
+    let s = &config.space;
+    for &t in &s.threads {
+        h = fnv(h, &(t as u64).to_le_bytes());
+    }
+    for p in &s.policies {
+        h = fnv(h, p.to_string().as_bytes());
+    }
+    for &(r, c) in &s.bcsr_blocks {
+        h = fnv(h, &(r as u64).to_le_bytes());
+        h = fnv(h, &(c as u64).to_le_bytes());
+    }
+    for bits in [s.ell_max_width_ratio, s.ell_max_cv, s.bcsr_min_density, s.hyb_min_width_ratio]
+    {
+        h = fnv(h, &bits.to_bits().to_le_bytes());
+    }
+    format!("{}-{h:016x}", stats.fingerprint_hex())
+}
+
+/// Tuner knobs.
+#[derive(Debug, Clone)]
+pub struct TunerConfig {
+    /// Run empirical trials; `false` ranks with the analytic [`CostModel`].
+    pub trials: bool,
+    /// Warmup iterations per trialed candidate.
+    pub warmup: usize,
+    /// Measured iterations per trialed candidate.
+    pub measure: usize,
+    /// Search-space shape and pruning thresholds.
+    pub space: SpaceConfig,
+    /// Log decisions (and cache hits) to stderr.
+    pub verbose: bool,
+}
+
+impl Default for TunerConfig {
+    fn default() -> Self {
+        TunerConfig {
+            trials: true,
+            warmup: 2,
+            measure: 8,
+            space: SpaceConfig::default(),
+            verbose: false,
+        }
+    }
+}
+
+impl TunerConfig {
+    /// A fast configuration for tests: tiny space, one warmup, few runs.
+    pub fn quick() -> TunerConfig {
+        TunerConfig { warmup: 1, measure: 3, space: SpaceConfig::quick(), ..TunerConfig::default() }
+    }
+
+    /// Trials disabled: rank analytically (deterministic, load-immune).
+    pub fn model_only() -> TunerConfig {
+        TunerConfig { trials: false, ..TunerConfig::default() }
+    }
+}
+
+/// The tuner: a configuration plus a (possibly persistent) decision cache.
+pub struct Tuner {
+    /// Knobs.
+    pub config: TunerConfig,
+    /// Decision cache; inspect `hits`/`misses` for observability.
+    pub cache: TuningCache,
+}
+
+impl Tuner {
+    /// Creates a tuner over an explicit cache.
+    pub fn new(config: TunerConfig, cache: TuningCache) -> Tuner {
+        Tuner { config, cache }
+    }
+
+    /// Default config, in-memory cache.
+    pub fn in_memory() -> Tuner {
+        Tuner::new(TunerConfig::default(), TuningCache::in_memory())
+    }
+
+    /// Quick-config, in-memory cache (tests and latency-sensitive callers).
+    pub fn quick() -> Tuner {
+        Tuner::new(TunerConfig::quick(), TuningCache::in_memory())
+    }
+
+    /// Selects a configuration for `a`: answers from the cache when the
+    /// fingerprint is known, otherwise searches (trials or cost model),
+    /// stores the decision and persists the cache.
+    pub fn tune(&mut self, name: &str, a: &Csr) -> crate::Result<TunedConfig> {
+        let stats = MatrixStats::compute(name, a);
+        self.tune_with_stats(a, &stats)
+    }
+
+    /// [`Tuner::tune`] with precomputed statistics.
+    pub fn tune_with_stats(&mut self, a: &Csr, stats: &MatrixStats) -> crate::Result<TunedConfig> {
+        let key = cache_key(a, stats, &self.config);
+        if let Some(found) = self.cache.get(&key) {
+            let found = found.clone();
+            if self.config.verbose {
+                eprintln!("[tuner] cache hit {key} ({}): {found}", stats.name);
+            }
+            return Ok(found);
+        }
+        let space = space::enumerate(a, stats, &self.config.space);
+        anyhow::ensure!(
+            !space.candidates.is_empty(),
+            "search space empty for {} ({} pruned)",
+            stats.name,
+            space.pruned.len()
+        );
+        if self.config.verbose {
+            for reason in &space.pruned {
+                eprintln!("[tuner] {}: pruned {reason}", stats.name);
+            }
+        }
+        let chosen = if self.config.trials {
+            let best = Trialer::new(self.config.warmup, self.config.measure)
+                .best(a, &space.candidates)
+                .expect("non-empty candidate list");
+            TunedConfig {
+                format: best.candidate.format,
+                policy: best.candidate.policy,
+                threads: best.candidate.threads,
+                gflops: best.gflops,
+                source: "trial".to_string(),
+            }
+        } else {
+            let ranked = CostModel::new().rank(a, &space.candidates);
+            let (cand, secs) = ranked[0];
+            TunedConfig {
+                format: cand.format,
+                policy: cand.policy,
+                threads: cand.threads,
+                gflops: 2.0 * a.nnz() as f64 / secs.max(1e-12) / 1e9,
+                source: "model".to_string(),
+            }
+        };
+        if self.config.verbose {
+            eprintln!(
+                "[tuner] cache miss {key} ({}): searched {} candidates → {chosen}",
+                stats.name,
+                space.candidates.len()
+            );
+        }
+        self.cache.insert(key, chosen.clone());
+        self.cache.save()?;
+        Ok(chosen)
+    }
+
+    /// Tunes (or hits the cache) and runs one SpMV with the chosen config.
+    pub fn tune_and_run(&mut self, name: &str, a: &Csr, x: &[f64]) -> crate::Result<Vec<f64>> {
+        let config = self.tune(name, a)?;
+        Ok(Prepared::new(a, config.candidate()).spmv(x))
+    }
+}
+
+/// One-shot convenience: tune `a` with default settings (in-memory cache)
+/// and run one SpMV. Returns the decision alongside the result; callers
+/// with repeated traffic should hold a [`Tuner`] instead.
+pub fn tune_and_run(a: &Csr, x: &[f64]) -> crate::Result<(TunedConfig, Vec<f64>)> {
+    let mut tuner = Tuner::in_memory();
+    let config = tuner.tune("adhoc", a)?;
+    let y = Prepared::new(a, config.candidate()).spmv(x);
+    Ok((config, y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::stencil::stencil_2d;
+    use crate::sparse::gen::{random_vector, randomize_values};
+    use crate::util::testing::TempDir;
+
+    fn matrix() -> Csr {
+        let mut a = stencil_2d(40, 35);
+        randomize_values(&mut a, 123);
+        a
+    }
+
+    fn assert_close(a: &[f64], b: &[f64]) {
+        assert_eq!(a.len(), b.len());
+        for (u, v) in a.iter().zip(b) {
+            assert!((u - v).abs() < 1e-10 * (1.0 + v.abs()), "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn tune_and_run_matches_oracle() {
+        let a = matrix();
+        let x = random_vector(a.ncols, 7);
+        let mut tuner = Tuner::quick();
+        let y = tuner.tune_and_run("stencil", &a, &x).unwrap();
+        assert_close(&y, &a.spmv(&x));
+    }
+
+    #[test]
+    fn second_tune_is_a_cache_hit() {
+        let a = matrix();
+        let mut tuner = Tuner::quick();
+        let first = tuner.tune("m", &a).unwrap();
+        assert_eq!((tuner.cache.hits, tuner.cache.misses), (0, 1));
+        let second = tuner.tune("m", &a).unwrap();
+        assert_eq!((tuner.cache.hits, tuner.cache.misses), (1, 1));
+        assert_eq!(first, second, "cached decision must be stable");
+    }
+
+    #[test]
+    fn decisions_persist_across_tuner_instances() {
+        let dir = TempDir::new("tuner-persist");
+        let path = dir.path().join("cache.json");
+        let a = matrix();
+
+        let mut t1 = Tuner::new(TunerConfig::quick(), TuningCache::load(&path).unwrap());
+        let first = t1.tune("m", &a).unwrap();
+        assert_eq!(t1.cache.misses, 1);
+
+        let mut t2 = Tuner::new(TunerConfig::quick(), TuningCache::load(&path).unwrap());
+        let second = t2.tune("m", &a).unwrap();
+        assert_eq!((t2.cache.hits, t2.cache.misses), (1, 0), "second process must hit");
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn model_only_mode_is_deterministic() {
+        let a = matrix();
+        let mut t1 = Tuner::new(TunerConfig::model_only(), TuningCache::in_memory());
+        let mut t2 = Tuner::new(TunerConfig::model_only(), TuningCache::in_memory());
+        let c1 = t1.tune("m", &a).unwrap();
+        let c2 = t2.tune("m", &a).unwrap();
+        assert_eq!(c1, c2);
+        assert_eq!(c1.source, "model");
+        // And the model's pick still computes the right answer.
+        let x = random_vector(a.ncols, 9);
+        assert_close(&Prepared::new(&a, c1.candidate()).spmv(&x), &a.spmv(&x));
+    }
+
+    #[test]
+    fn one_shot_helper_returns_decision_and_result() {
+        let a = stencil_2d(20, 20);
+        let x = random_vector(a.ncols, 3);
+        let (config, y) = tune_and_run(&a, &x).unwrap();
+        assert!(config.threads >= 1);
+        assert_close(&y, &a.spmv(&x));
+    }
+}

@@ -1,0 +1,410 @@
+//! The tuner's search space: candidate (format, schedule, threads)
+//! triples, pruned up front by matrix-statistics heuristics.
+//!
+//! Pruning encodes the paper's own findings so the empirical search never
+//! wastes trials on configurations the pattern already rules out:
+//!
+//! * ELL pads every row to the maximum length — skip it when the max/mean
+//!   row-length ratio or the row-length CV says padding would explode
+//!   (webbase-class matrices).
+//! * BCSR streams explicit zeros — skip a block shape whose estimated
+//!   block fill is below the break-even density (§4.5: "fewer than 35% of
+//!   the streamed values are nonzeros at 8×8").
+//! * HYB only earns its split when a heavy tail exists — consider it
+//!   exactly when ELL is hopeless but most rows are short.
+//! * `static` scheduling is dropped when row lengths are skewed (§4.2:
+//!   dynamic,32/64 wins on irregular instances).
+
+use crate::sched::Policy;
+use crate::sparse::stats::row_length_cv;
+use crate::sparse::{Csr, MatrixStats};
+
+/// A candidate storage format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Format {
+    /// Compressed row storage (the paper's CRS baseline).
+    Csr,
+    /// Padded ELLPACK.
+    Ell,
+    /// Register-blocked CSR with dense `r × c` blocks.
+    Bcsr {
+        /// Block height.
+        r: usize,
+        /// Block width.
+        c: usize,
+    },
+    /// Hybrid ELL + COO overflow with the given ELL width.
+    Hyb {
+        /// ELL width of the regular part.
+        width: usize,
+    },
+}
+
+impl std::fmt::Display for Format {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Format::Csr => write!(f, "csr"),
+            Format::Ell => write!(f, "ell"),
+            Format::Bcsr { r, c } => write!(f, "bcsr{r}x{c}"),
+            Format::Hyb { width } => write!(f, "hyb{width}"),
+        }
+    }
+}
+
+impl Format {
+    /// Parses the [`Display`](std::fmt::Display) form back (cache files).
+    /// Zero dimensions are rejected — a corrupted cache entry must fail
+    /// loading, not panic inside `Bcsr::from_csr` at serve time.
+    pub fn parse(s: &str) -> Option<Format> {
+        match s {
+            "csr" => Some(Format::Csr),
+            "ell" => Some(Format::Ell),
+            _ => {
+                if let Some(rest) = s.strip_prefix("bcsr") {
+                    let (r, c) = rest.split_once('x')?;
+                    let (r, c) = (r.parse().ok()?, c.parse().ok()?);
+                    if r == 0 || c == 0 {
+                        return None;
+                    }
+                    Some(Format::Bcsr { r, c })
+                } else if let Some(rest) = s.strip_prefix("hyb") {
+                    let width: usize = rest.parse().ok()?;
+                    if width == 0 {
+                        return None;
+                    }
+                    Some(Format::Hyb { width })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+/// Parses a [`Policy`]'s `Display` form (`"static"`, `"dynamic,64"`, …).
+pub fn parse_policy(s: &str) -> Option<Policy> {
+    if s == "static" {
+        return Some(Policy::StaticBlock);
+    }
+    let (kind, chunk) = s.split_once(',')?;
+    let chunk: usize = chunk.parse().ok()?;
+    match kind {
+        "static" => Some(Policy::StaticChunk(chunk)),
+        "dynamic" => Some(Policy::Dynamic(chunk)),
+        "guided" => Some(Policy::Guided(chunk)),
+        _ => None,
+    }
+}
+
+/// One point of the search space.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    /// Storage format.
+    pub format: Format,
+    /// Scheduling policy (for BCSR only the dynamic chunk applies).
+    pub policy: Policy,
+    /// Worker thread count.
+    pub threads: usize,
+}
+
+impl std::fmt::Display for Candidate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {} t{}", self.format, self.policy, self.threads)
+    }
+}
+
+/// Knobs of the enumeration; [`SpaceConfig::default`] matches the host.
+#[derive(Debug, Clone)]
+pub struct SpaceConfig {
+    /// Thread counts to try (deduped, each ≥ 1).
+    pub threads: Vec<usize>,
+    /// Scheduling policies to try.
+    pub policies: Vec<Policy>,
+    /// BCSR block shapes to consider.
+    pub bcsr_blocks: Vec<(usize, usize)>,
+    /// Skip ELL when `max_nnz_row / nnz_per_row` exceeds this.
+    pub ell_max_width_ratio: f64,
+    /// Skip ELL when the row-length CV exceeds this.
+    pub ell_max_cv: f64,
+    /// Skip a BCSR shape whose estimated block fill is below this.
+    pub bcsr_min_density: f64,
+    /// Consider HYB once `max_nnz_row / nnz_per_row` exceeds this.
+    pub hyb_min_width_ratio: f64,
+}
+
+impl Default for SpaceConfig {
+    fn default() -> Self {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        let mut threads = vec![1, hw / 2, hw];
+        threads.retain(|&t| t >= 1);
+        threads.sort_unstable();
+        threads.dedup();
+        SpaceConfig {
+            threads,
+            policies: vec![
+                Policy::StaticBlock,
+                Policy::Dynamic(16),
+                Policy::Dynamic(64),
+                Policy::Dynamic(256),
+                Policy::Guided(32),
+            ],
+            bcsr_blocks: vec![(8, 1), (4, 8), (8, 8)],
+            ell_max_width_ratio: 4.0,
+            ell_max_cv: 1.0,
+            bcsr_min_density: 0.5,
+            hyb_min_width_ratio: 4.0,
+        }
+    }
+}
+
+impl SpaceConfig {
+    /// A reduced space for tests and latency-sensitive callers: the
+    /// default pruning thresholds (so CSR always, ELL/HYB when the
+    /// pattern allows) but only one BCSR shape, two policies, and at
+    /// most two thread counts.
+    pub fn quick() -> SpaceConfig {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        let mut threads = vec![1, hw.min(4)];
+        threads.dedup();
+        SpaceConfig {
+            threads,
+            policies: vec![Policy::StaticBlock, Policy::Dynamic(64)],
+            bcsr_blocks: vec![(8, 1)],
+            ..SpaceConfig::default()
+        }
+    }
+}
+
+/// The enumerated (already pruned) candidate list, plus what was pruned
+/// and why — surfaced in verbose tuner logs and reports.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// Surviving candidates, in deterministic preference order.
+    pub candidates: Vec<Candidate>,
+    /// Human-readable reasons for each pruned direction.
+    pub pruned: Vec<String>,
+}
+
+/// Exact block-fill ratio of an `r × c` blocking without materializing the
+/// payloads — the same touched-block scan as [`crate::sparse::Bcsr`] minus
+/// the value arrays.
+pub fn estimate_block_density(a: &Csr, r: usize, c: usize) -> f64 {
+    let nbrows = a.nrows.div_ceil(r);
+    let mut blocks = 0usize;
+    let mut touched: Vec<u32> = Vec::new();
+    for br in 0..nbrows {
+        touched.clear();
+        let row_lo = br * r;
+        let row_hi = (row_lo + r).min(a.nrows);
+        for i in row_lo..row_hi {
+            for &cid in a.row_cids(i) {
+                touched.push(cid / c as u32);
+            }
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        blocks += touched.len();
+    }
+    let stored = blocks * r * c;
+    if stored == 0 {
+        0.0
+    } else {
+        a.nnz() as f64 / stored as f64
+    }
+}
+
+/// Enumerates the pruned search space for one matrix.
+pub fn enumerate(a: &Csr, stats: &MatrixStats, cfg: &SpaceConfig) -> SearchSpace {
+    let mut formats: Vec<Format> = vec![Format::Csr];
+    let mut pruned: Vec<String> = Vec::new();
+
+    let mean = stats.nnz_per_row.max(1.0);
+    let ratio = stats.max_nnz_row as f64 / mean;
+    let cv = row_length_cv(a);
+
+    if ratio <= cfg.ell_max_width_ratio && cv <= cfg.ell_max_cv {
+        formats.push(Format::Ell);
+    } else {
+        pruned.push(format!(
+            "ell: max/mean row ratio {ratio:.2} or row-length CV {cv:.2} too high"
+        ));
+    }
+    for &(r, c) in &cfg.bcsr_blocks {
+        let d = estimate_block_density(a, r, c);
+        if d >= cfg.bcsr_min_density {
+            formats.push(Format::Bcsr { r, c });
+        } else {
+            pruned.push(format!(
+                "bcsr{r}x{c}: block fill {d:.2} below break-even {:.2}",
+                cfg.bcsr_min_density
+            ));
+        }
+    }
+    if ratio > cfg.hyb_min_width_ratio && stats.nnz > 0 {
+        let width = (mean.ceil() as usize).max(1).div_ceil(8) * 8;
+        formats.push(Format::Hyb { width });
+    } else {
+        pruned.push(format!(
+            "hyb: no heavy tail (max/mean row ratio {ratio:.2} ≤ {:.2})",
+            cfg.hyb_min_width_ratio
+        ));
+    }
+
+    let mut policies = cfg.policies.clone();
+    if cv > 1.0 {
+        policies.retain(|p| !matches!(p, Policy::StaticBlock));
+        pruned.push(format!("static: row-length CV {cv:.2} > 1 risks imbalance"));
+    }
+    if policies.is_empty() {
+        policies.push(Policy::Dynamic(64));
+    }
+    let mut threads = cfg.threads.clone();
+    threads.retain(|&t| t >= 1);
+    if threads.is_empty() {
+        threads.push(1);
+    }
+    threads.sort_unstable();
+    threads.dedup();
+
+    let mut candidates = Vec::new();
+    for &format in &formats {
+        let mut serial_seen = false;
+        for &policy in &policies {
+            // The BCSR kernel claims block rows from a dynamic queue; other
+            // policies have no meaning for it.
+            if matches!(format, Format::Bcsr { .. }) && !matches!(policy, Policy::Dynamic(_)) {
+                continue;
+            }
+            for &t in &threads {
+                // All policies collapse to the same serial loop at t = 1:
+                // keep one serial candidate per format.
+                if t == 1 {
+                    if serial_seen {
+                        continue;
+                    }
+                    serial_seen = true;
+                }
+                candidates.push(Candidate { format, policy, threads: t });
+            }
+        }
+    }
+    SearchSpace { candidates, pruned }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::powerlaw::{powerlaw, PowerLawSpec};
+    use crate::sparse::gen::stencil::stencil_2d;
+    use crate::sparse::Coo;
+
+    fn space_for(a: &Csr) -> SearchSpace {
+        let stats = MatrixStats::compute("t", a);
+        enumerate(a, &stats, &SpaceConfig::default())
+    }
+
+    fn formats_of(s: &SearchSpace) -> Vec<Format> {
+        let mut f: Vec<Format> = s.candidates.iter().map(|c| c.format).collect();
+        f.dedup();
+        f
+    }
+
+    #[test]
+    fn stencil_keeps_ell_and_static() {
+        let a = stencil_2d(40, 40);
+        let s = space_for(&a);
+        assert!(formats_of(&s).contains(&Format::Ell), "uniform rows suit ELL");
+        assert!(s.candidates.iter().any(|c| c.policy == Policy::StaticBlock));
+        assert!(!s.candidates.is_empty());
+    }
+
+    #[test]
+    fn webgraph_prunes_ell_keeps_hyb() {
+        let a = powerlaw(&PowerLawSpec {
+            n: 3000,
+            nnz: 15_000,
+            row_alpha: 1.6,
+            col_alpha: 1.4,
+            max_row: 400,
+            seed: 21,
+        });
+        let s = space_for(&a);
+        let fmts = formats_of(&s);
+        assert!(!fmts.contains(&Format::Ell), "hub rows must prune ELL");
+        assert!(fmts.iter().any(|f| matches!(f, Format::Hyb { .. })));
+        assert!(s.pruned.iter().any(|p| p.starts_with("ell:")));
+    }
+
+    #[test]
+    fn diagonal_prunes_all_bcsr() {
+        let a = Csr::identity(512);
+        let s = space_for(&a);
+        assert!(
+            !formats_of(&s).iter().any(|f| matches!(f, Format::Bcsr { .. })),
+            "1 nnz per block can never reach break-even fill"
+        );
+    }
+
+    #[test]
+    fn dense_blocks_keep_bcsr() {
+        // Block-diagonal with dense aligned 8x8 blocks: fill 1.0 everywhere.
+        let mut coo = Coo::new(64, 64);
+        for b in 0..8usize {
+            for i in 0..8 {
+                for j in 0..8 {
+                    coo.push(b * 8 + i, b * 8 + j, 1.0);
+                }
+            }
+        }
+        let a = coo.to_csr();
+        for (r, c) in [(8usize, 8usize), (8, 1), (4, 8)] {
+            assert!((estimate_block_density(&a, r, c) - 1.0).abs() < 1e-12, "{r}x{c}");
+        }
+        let s = space_for(&a);
+        assert!(formats_of(&s).iter().any(|f| matches!(f, Format::Bcsr { .. })));
+    }
+
+    #[test]
+    fn serial_candidates_deduped_per_format() {
+        let a = stencil_2d(30, 30);
+        let s = space_for(&a);
+        for fmt in formats_of(&s) {
+            let serial = s
+                .candidates
+                .iter()
+                .filter(|c| c.format == fmt && c.threads == 1)
+                .count();
+            assert!(serial <= 1, "{fmt}: {serial} serial candidates");
+        }
+    }
+
+    #[test]
+    fn format_and_policy_roundtrip_strings() {
+        for f in [
+            Format::Csr,
+            Format::Ell,
+            Format::Bcsr { r: 8, c: 1 },
+            Format::Hyb { width: 16 },
+        ] {
+            assert_eq!(Format::parse(&f.to_string()), Some(f));
+        }
+        assert_eq!(Format::parse("nope"), None);
+        assert_eq!(Format::parse("bcsr0x1"), None, "zero block height must be rejected");
+        assert_eq!(Format::parse("bcsr8x0"), None, "zero block width must be rejected");
+        assert_eq!(Format::parse("hyb0"), None, "zero hyb width must be rejected");
+        for p in Policy::paper_sweep() {
+            assert_eq!(parse_policy(&p.to_string()), Some(p));
+        }
+        assert_eq!(parse_policy("banana,3"), None);
+    }
+
+    #[test]
+    fn estimate_matches_real_bcsr_density() {
+        let a = stencil_2d(20, 20);
+        for (r, c) in [(8usize, 1usize), (4, 8), (8, 8)] {
+            let est = estimate_block_density(&a, r, c);
+            let real = crate::sparse::Bcsr::from_csr(&a, r, c).block_density(a.nnz());
+            assert!((est - real).abs() < 1e-12, "{r}x{c}: {est} vs {real}");
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Empirical trials: time each candidate with short warmup + measure runs
+//! and keep the fastest.
+//!
+//! Trials are deliberately much shorter than the paper's measurement
+//! protocol (70 runs) — tuning happens on the serving path, so the budget
+//! per candidate is a handful of SpMVs and the statistic is the *minimum*,
+//! which is robust to scheduling noise at small sample sizes. Each distinct
+//! format is converted exactly once and reused across every (policy,
+//! threads) combination that names it.
+
+use std::time::Instant;
+
+use crate::sparse::gen::random_vector;
+use crate::sparse::Csr;
+
+use super::exec::PreparedFormat;
+use super::space::{Candidate, Format};
+
+/// Timing of one candidate.
+#[derive(Debug, Clone)]
+pub struct TrialResult {
+    /// The candidate measured.
+    pub candidate: Candidate,
+    /// Best observed seconds per SpMV.
+    pub secs: f64,
+    /// GFlop/s at `secs` (2·nnz flops).
+    pub gflops: f64,
+    /// One-time format conversion cost (amortized over reuse).
+    pub convert_secs: f64,
+}
+
+/// The trial driver: warmup then measured iterations per candidate.
+#[derive(Debug, Clone)]
+pub struct Trialer {
+    /// Untimed iterations per candidate.
+    pub warmup: usize,
+    /// Timed iterations per candidate (min is reported).
+    pub measure: usize,
+}
+
+impl Default for Trialer {
+    fn default() -> Self {
+        Trialer { warmup: 2, measure: 8 }
+    }
+}
+
+impl Trialer {
+    /// Creates a trialer with explicit counts.
+    pub fn new(warmup: usize, measure: usize) -> Trialer {
+        Trialer { warmup, measure: measure.max(1) }
+    }
+
+    /// Times every candidate (formats converted once each).
+    pub fn run_all(&self, a: &Csr, candidates: &[Candidate]) -> Vec<TrialResult> {
+        let x = random_vector(a.ncols, 0x7e57_0001);
+        let mut prepared: Vec<(Format, PreparedFormat, f64)> = Vec::new();
+        let mut out = Vec::with_capacity(candidates.len());
+        for &cand in candidates {
+            if !prepared.iter().any(|(f, _, _)| *f == cand.format) {
+                let t0 = Instant::now();
+                let p = PreparedFormat::prepare(a, cand.format);
+                prepared.push((cand.format, p, t0.elapsed().as_secs_f64()));
+            }
+            let (_, payload, convert_secs) =
+                prepared.iter().find(|(f, _, _)| *f == cand.format).unwrap();
+            for _ in 0..self.warmup {
+                std::hint::black_box(payload.spmv(a, &x, cand.threads, cand.policy));
+            }
+            let mut best = f64::INFINITY;
+            for _ in 0..self.measure.max(1) {
+                let t0 = Instant::now();
+                std::hint::black_box(payload.spmv(a, &x, cand.threads, cand.policy));
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            out.push(TrialResult {
+                candidate: cand,
+                secs: best,
+                gflops: 2.0 * a.nnz() as f64 / best.max(1e-12) / 1e9,
+                convert_secs: *convert_secs,
+            });
+        }
+        out
+    }
+
+    /// Times every candidate and returns the fastest (`None` only for an
+    /// empty candidate list).
+    pub fn best(&self, a: &Csr, candidates: &[Candidate]) -> Option<TrialResult> {
+        self.run_all(a, candidates)
+            .into_iter()
+            .min_by(|u, v| u.secs.partial_cmp(&v.secs).unwrap_or(std::cmp::Ordering::Equal))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::Policy;
+    use crate::sparse::gen::stencil::stencil_2d;
+    use crate::sparse::MatrixStats;
+    use crate::tuner::space::{enumerate, SpaceConfig};
+
+    #[test]
+    fn best_is_min_of_run_all() {
+        let a = stencil_2d(25, 25);
+        let candidates = [
+            Candidate { format: Format::Csr, policy: Policy::Dynamic(64), threads: 1 },
+            Candidate { format: Format::Ell, policy: Policy::Dynamic(64), threads: 1 },
+        ];
+        let t = Trialer::new(1, 3);
+        let all = t.run_all(&a, &candidates);
+        assert_eq!(all.len(), 2);
+        let best = t.best(&a, &candidates).unwrap();
+        assert!(candidates.contains(&best.candidate), "best must come from the list");
+        assert!(best.secs.is_finite() && best.secs >= 0.0);
+        for r in &all {
+            assert!(r.secs >= 0.0 && r.gflops >= 0.0);
+        }
+    }
+
+    #[test]
+    fn empty_candidates_give_none() {
+        let a = stencil_2d(10, 10);
+        assert!(Trialer::default().best(&a, &[]).is_none());
+    }
+
+    #[test]
+    fn trials_cover_a_real_space() {
+        let a = stencil_2d(20, 20);
+        let stats = MatrixStats::compute("s", &a);
+        let space = enumerate(&a, &stats, &SpaceConfig::quick());
+        let results = Trialer::new(0, 1).run_all(&a, &space.candidates);
+        assert_eq!(results.len(), space.candidates.len());
+    }
+}

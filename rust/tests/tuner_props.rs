@@ -1,0 +1,138 @@
+//! Property tests for the auto-tuner: whatever configuration the search
+//! lands on, the numerics must match the serial CSR oracle, and the
+//! persistent cache must round-trip deterministically.
+
+use phi_spmv::sched::Policy;
+use phi_spmv::sparse::MatrixStats;
+use phi_spmv::tuner::space::{enumerate, SpaceConfig};
+use phi_spmv::tuner::{Format, Prepared, TunedConfig, Tuner, TuningCache};
+use phi_spmv::util::prop::{arb, check};
+
+fn assert_close(got: &[f64], want: &[f64]) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("length {} vs {}", got.len(), want.len()));
+    }
+    for (i, (u, v)) in got.iter().zip(want).enumerate() {
+        if (u - v).abs() > 1e-9 * (1.0 + v.abs()) {
+            return Err(format!("idx {i}: {u} vs {v}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn tuned_config_always_matches_serial_oracle() {
+    check(
+        "tuner-oracle",
+        |rng| {
+            let a = arb::csr(rng, 120, 10);
+            let x = arb::vector(rng, a.ncols);
+            (a, x)
+        },
+        |(a, x)| {
+            let mut tuner = Tuner::quick();
+            let y = tuner.tune_and_run("prop", a, x).map_err(|e| e.to_string())?;
+            assert_close(&y, &a.spmv(x))
+        },
+    );
+}
+
+#[test]
+fn every_surviving_candidate_matches_serial_oracle() {
+    // Stronger than the tuned pick: whatever the pruner lets through must
+    // be numerically safe, so the trialer can never "win" with a wrong
+    // kernel.
+    check(
+        "space-oracle",
+        |rng| {
+            let a = arb::square_csr(rng, 80, 8);
+            let x = arb::vector(rng, a.ncols);
+            (a, x)
+        },
+        |(a, x)| {
+            let stats = MatrixStats::compute("prop", a);
+            let space = enumerate(a, &stats, &SpaceConfig::quick());
+            if space.candidates.is_empty() {
+                return Err("space must never be empty (CSR is always in)".to_string());
+            }
+            let want = a.spmv(x);
+            for cand in &space.candidates {
+                let y = Prepared::new(a, *cand).spmv(x);
+                assert_close(&y, &want).map_err(|e| format!("{cand}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn cached_decision_is_returned_verbatim() {
+    check(
+        "cache-stability",
+        |rng| arb::csr(rng, 100, 8),
+        |a| {
+            let mut tuner = Tuner::quick();
+            let first = tuner.tune("m", a).map_err(|e| e.to_string())?;
+            let second = tuner.tune("m", a).map_err(|e| e.to_string())?;
+            if first != second {
+                return Err(format!("decision changed: {first} vs {second}"));
+            }
+            if tuner.cache.hits != 1 {
+                return Err(format!("expected exactly one hit, got {}", tuner.cache.hits));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tuning_cache_roundtrips_deterministically_through_json() {
+    check(
+        "cache-json-roundtrip",
+        |rng| {
+            // A random cache: random keys mapped to random-but-valid configs.
+            let n = 1 + rng.usize_below(8);
+            let mut cache = TuningCache::in_memory();
+            for _ in 0..n {
+                let format = match rng.usize_below(4) {
+                    0 => Format::Csr,
+                    1 => Format::Ell,
+                    2 => Format::Bcsr { r: 1 + rng.usize_below(8), c: 1 + rng.usize_below(8) },
+                    _ => Format::Hyb { width: 1 + rng.usize_below(32) },
+                };
+                let policy = match rng.usize_below(4) {
+                    0 => Policy::StaticBlock,
+                    1 => Policy::StaticChunk(1 + rng.usize_below(256)),
+                    2 => Policy::Dynamic(1 + rng.usize_below(256)),
+                    _ => Policy::Guided(1 + rng.usize_below(64)),
+                };
+                cache.insert(
+                    format!("{:016x}", rng.next_u64()),
+                    TunedConfig {
+                        format,
+                        policy,
+                        threads: 1 + rng.usize_below(64),
+                        gflops: (rng.usize_below(10_000) as f64) / 64.0,
+                        source: if rng.bool(0.5) { "trial".into() } else { "model".into() },
+                    },
+                );
+            }
+            cache
+        },
+        |cache| {
+            let j = cache.to_json();
+            let text = j.to_pretty();
+            let parsed = phi_spmv::util::json::Json::parse(&text).map_err(|e| e.to_string())?;
+            let back = TuningCache::from_json(&parsed).map_err(|e| e.to_string())?;
+            if back.len() != cache.len() {
+                return Err(format!("entry count {} vs {}", back.len(), cache.len()));
+            }
+            // Serialize → parse → serialize must be a fixed point.
+            let text2 = back.to_json().to_pretty();
+            if text != text2 {
+                return Err("serialization is not deterministic".to_string());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,131 @@
+//! Offline in-tree stand-in for the `anyhow` crate.
+//!
+//! The build image has no registry access, so this path dependency provides
+//! exactly the subset of anyhow's API the workspace uses: [`Error`],
+//! [`Result`], and the [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! [`std::error::Error`]: that is what lets the blanket
+//! `From<E: std::error::Error>` conversion (which makes `?` work on any
+//! standard error) coexist with the reflexive `From<Error>` impl.
+
+use std::fmt;
+
+/// A type-erased error: the rendered message of the source chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Creates an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        // Render the whole chain inline ("outer: inner: …") so context from
+        // wrapped errors is not lost when the box is flattened to a string.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `Result` alias defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Constructs an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(::std::format!($($arg)+))
+    };
+}
+
+/// Returns early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Returns early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_two(s: &str) -> Result<u32> {
+        let n: u32 = s.parse()?; // ParseIntError converts via the blanket From
+        ensure!(n % 2 == 0, "{n} is odd");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_and_ensure() {
+        assert_eq!(parse_two("4").unwrap(), 4);
+        assert_eq!(parse_two("3").unwrap_err().to_string(), "3 is odd");
+        assert!(parse_two("x").unwrap_err().to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let name = "spmv";
+        let e = anyhow!("unknown kernel {name:?} ({}/{})", 1, 2);
+        assert_eq!(e.to_string(), "unknown kernel \"spmv\" (1/2)");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(flag: bool) -> Result<()> {
+            if flag {
+                bail!("stopped: {flag}");
+            }
+            Ok(())
+        }
+        assert!(f(false).is_ok());
+        assert_eq!(f(true).unwrap_err().to_string(), "stopped: true");
+    }
+
+    #[test]
+    fn debug_matches_display() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), format!("{e:?}"));
+    }
+}
