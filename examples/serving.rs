@@ -8,8 +8,11 @@
 //!
 //! A Poisson stream of recommendation requests hits the batching
 //! coordinator, which fuses up to 16 of them into one SpMM. Reports
-//! throughput, mean batch size, and P50/P95/P99 latency — then repeats
-//! with batching disabled (max_batch = 1) to show the SpMM batching win.
+//! throughput, mean batch size, P50/P95/P99 latency, and the storage
+//! format the batches actually executed in — then repeats with batching
+//! disabled (max_batch = 1) to show the SpMM batching win, and once more
+//! under the auto-tuner's decision (which the server now executes for
+//! real instead of silently serving CSR).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -54,13 +57,14 @@ fn run(
     let stats = server.shutdown();
     println!(
         "{label:<14} {requests} reqs in {wall:.2}s = {:.0} req/s | mean batch {:.2} | \
-         P50 {:.2} ms  P95 {:.2} ms  P99 {:.2} ms | kernel {:.2} GFlop/s",
+         P50 {:.2} ms  P95 {:.2} ms  P99 {:.2} ms | kernel {:.2} GFlop/s | format {}",
         requests as f64 / wall,
         batch_sum as f64 / requests as f64,
         percentile(&latencies, 0.50).as_secs_f64() * 1e3,
         percentile(&latencies, 0.95).as_secs_f64() * 1e3,
         percentile(&latencies, 0.99).as_secs_f64() * 1e3,
         stats.flops / stats.compute_s.max(1e-9) / 1e9,
+        stats.format,
     );
     Ok(())
 }
@@ -106,6 +110,14 @@ fn main() -> anyhow::Result<()> {
         requests,
         rate,
     )?;
+
+    // The auto-tuned server: whatever (format, schedule, threads) the
+    // tuner picks is what the serve loop executes — the printed `format`
+    // column is read back from ServerStats, not from the decision.
+    let mut tuner = phi_spmv::tuner::Tuner::in_memory();
+    let decision = tuner.tune("recsys-items", &a)?;
+    println!("tuner decision: {decision}");
+    run("tuned", &a, ServerConfig::tuned(&decision), requests, rate)?;
     println!("serving OK");
     Ok(())
 }

@@ -53,7 +53,7 @@ fn main() {
             let conv = bencher.run(&format!("bcsr{r}x{c}/{}", e.name), || Bcsr::from_csr(&a, r, c));
             let b = Bcsr::from_csr(&a, r, c);
             let nat = bencher.run(&format!("bspmv{r}x{c}/{}", e.name), || {
-                bcsr_spmv_parallel(&b, &x, threads, 16)
+                bcsr_spmv_parallel(&b, &x, threads, Policy::Dynamic(16))
             });
             let nat_gfs = nat.gflops(flops);
             let model_rel = machine

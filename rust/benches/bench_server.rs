@@ -1,0 +1,161 @@
+//! Serving-path benchmark: pooled execution vs spawn-per-call, at batch 1
+//! and at steady state — the payoff measurement for the persistent
+//! [`WorkerPool`](phi_spmv::sched::WorkerPool) refactor, and the start of
+//! the server's perf trajectory (`BENCH_server.json`).
+//!
+//! Two phases per backend:
+//! * `batch1` — sequential request/response round trips with batching
+//!   disabled: every batch pays the kernel launch, so the spawn-per-call
+//!   backend pays thread creation on each request.
+//! * `steady` — a flood of concurrent requests with batching enabled: the
+//!   batcher fuses up to 16 requests per SpMM and the kernel launch cost
+//!   amortizes; what remains is exactly the per-launch overhead the pool
+//!   removes.
+//!
+//! `cargo bench --bench bench_server [-- --requests 200]` writes
+//! `BENCH_server.json` with p50/p99 latency and kernel GFlop/s per
+//! (backend × phase).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use phi_spmv::coordinator::server::{percentile, ServerConfig, SpmvServer};
+use phi_spmv::sparse::gen::powerlaw::{powerlaw, PowerLawSpec};
+use phi_spmv::sparse::gen::{random_vector, randomize_values};
+use phi_spmv::sparse::Csr;
+use phi_spmv::util::cli::Args;
+use phi_spmv::util::json::Json;
+
+struct PhaseResult {
+    p50_ms: f64,
+    p99_ms: f64,
+    gflops: f64,
+    mean_batch: f64,
+}
+
+impl PhaseResult {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("p50_ms", self.p50_ms)
+            .set("p99_ms", self.p99_ms)
+            .set("gflops", self.gflops)
+            .set("mean_batch", self.mean_batch)
+    }
+}
+
+/// Drives one server instance through `requests` requests; `flood` submits
+/// them all up front (steady state), otherwise one at a time (batch 1).
+fn run_phase(a: &Arc<Csr>, cfg: ServerConfig, requests: usize, flood: bool) -> PhaseResult {
+    let server = SpmvServer::start(a.clone(), cfg);
+    let client = server.client();
+    let mut latencies = Vec::with_capacity(requests);
+    if flood {
+        let rxs: Vec<_> = (0..requests)
+            .map(|s| client.submit(random_vector(a.ncols, 1000 + s as u64)).unwrap())
+            .collect();
+        for rx in rxs {
+            latencies.push(rx.recv().unwrap().latency);
+        }
+    } else {
+        for s in 0..requests {
+            let resp = client.call(random_vector(a.ncols, 2000 + s as u64)).unwrap();
+            latencies.push(resp.latency);
+        }
+    }
+    latencies.sort();
+    let stats = server.shutdown();
+    PhaseResult {
+        p50_ms: percentile(&latencies, 0.50).as_secs_f64() * 1e3,
+        p99_ms: percentile(&latencies, 0.99).as_secs_f64() * 1e3,
+        gflops: stats.flops / stats.compute_s.max(1e-9) / 1e9,
+        mean_batch: stats.mean_batch(),
+    }
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let requests = args.get("requests", 200usize);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    let mut a = powerlaw(&PowerLawSpec {
+        n: 20_000,
+        nnz: 240_000,
+        row_alpha: 1.7,
+        col_alpha: 1.5,
+        max_row: 64,
+        seed: 7,
+    });
+    randomize_values(&mut a, 8);
+    let a = Arc::new(a);
+    println!(
+        "server bench: {} rows, {} nnz, {threads} threads, {requests} requests/phase",
+        a.nrows,
+        a.nnz()
+    );
+    println!(
+        "{:<16} {:<8} {:>10} {:>10} {:>10} {:>11}",
+        "backend", "phase", "p50 ms", "p99 ms", "GFlop/s", "mean batch"
+    );
+
+    let mut modes = Json::obj();
+    let mut results = Vec::new();
+    for (label, pooled) in [("pooled", true), ("spawn_per_call", false)] {
+        let batch1 = run_phase(
+            &a,
+            ServerConfig {
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+                threads,
+                pooled,
+                ..ServerConfig::default()
+            },
+            requests,
+            false,
+        );
+        let steady = run_phase(
+            &a,
+            ServerConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(2),
+                threads,
+                pooled,
+                ..ServerConfig::default()
+            },
+            requests,
+            true,
+        );
+        for (phase, r) in [("batch1", &batch1), ("steady", &steady)] {
+            println!(
+                "{label:<16} {phase:<8} {:>10.3} {:>10.3} {:>10.3} {:>11.2}",
+                r.p50_ms, r.p99_ms, r.gflops, r.mean_batch
+            );
+        }
+        modes = modes.set(
+            label,
+            Json::obj().set("batch1", batch1.to_json()).set("steady", steady.to_json()),
+        );
+        results.push((label, batch1, steady));
+    }
+
+    let (pooled_b1, pooled_st) = (&results[0].1, &results[0].2);
+    let (spawn_b1, spawn_st) = (&results[1].1, &results[1].2);
+    println!(
+        "pooled vs spawn: batch1 p50 {:.2}x, steady p50 {:.2}x, steady GFlop/s {:.2}x",
+        spawn_b1.p50_ms / pooled_b1.p50_ms.max(1e-9),
+        spawn_st.p50_ms / pooled_st.p50_ms.max(1e-9),
+        pooled_st.gflops / spawn_st.gflops.max(1e-9),
+    );
+
+    let report = Json::obj()
+        .set("bench", "server")
+        .set(
+            "matrix",
+            Json::obj().set("nrows", a.nrows).set("ncols", a.ncols).set("nnz", a.nnz()),
+        )
+        .set("threads", threads)
+        .set("requests_per_phase", requests)
+        .set("modes", modes);
+    let path = "BENCH_server.json";
+    std::fs::write(path, report.to_pretty()).expect("writing BENCH_server.json");
+    println!("wrote {path}");
+}

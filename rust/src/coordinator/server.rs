@@ -6,8 +6,13 @@
 //! are single-vector multiplies, but batching k of them into one SpMM
 //! multiplies the flop:byte ratio. This module is that server: a bounded
 //! queue, a batcher that waits up to `max_wait` for up to `max_batch`
-//! requests, a worker executing the batch through the native SpMM kernel,
-//! and per-request latency accounting.
+//! requests, a worker executing the batch through the configured
+//! format-erased [`crate::kernels::SpmvOp`] — the tuner's format decision
+//! is executed for real, and [`ServerStats::format`] records which — and
+//! per-request
+//! latency accounting. Kernels run on the persistent
+//! [`crate::sched::WorkerPool`] unless [`ServerConfig::pooled`] opts into
+//! the spawn-per-call ablation baseline.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -19,9 +24,10 @@ enum Msg {
 }
 use std::time::{Duration, Instant};
 
-use crate::kernels::spmm_parallel;
+use crate::kernels::op::ExecCtx;
 use crate::sched::Policy;
 use crate::sparse::Csr;
+use crate::tuner::{exec::prepare_owned, Format};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -30,10 +36,17 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// Maximum time the batcher waits to fill a batch.
     pub max_wait: Duration,
-    /// Worker threads for the SpMM kernel.
+    /// Worker threads for the batch kernel.
     pub threads: usize,
-    /// Scheduling policy for the SpMM kernel.
+    /// Scheduling policy for the batch kernel.
     pub policy: Policy,
+    /// Storage format the server converts to (once, at startup) and
+    /// executes every batch in.
+    pub format: Format,
+    /// Execute on the persistent global worker pool (default) instead of
+    /// spawning threads per batch (the ablation baseline `bench_server`
+    /// measures against).
+    pub pooled: bool,
 }
 
 impl Default for ServerConfig {
@@ -43,19 +56,22 @@ impl Default for ServerConfig {
             max_wait: Duration::from_millis(2),
             threads: 1,
             policy: Policy::Dynamic(64),
+            format: Format::Csr,
+            pooled: true,
         }
     }
 }
 
 impl ServerConfig {
     /// Derives a server configuration from a tuned decision: the batcher
-    /// adopts the tuned schedule and thread count. (The tuned *format*
-    /// applies to the single-vector SpMV path; the batch kernel is SpMM
-    /// over CSR.)
+    /// adopts the tuned format, schedule and thread count, and the serve
+    /// loop executes batches in that format (a `bcsr4x2` decision used to
+    /// silently serve CSR).
     pub fn tuned(config: &crate::tuner::TunedConfig) -> ServerConfig {
         ServerConfig {
             threads: config.threads.max(1),
             policy: config.policy,
+            format: config.format,
             ..ServerConfig::default()
         }
     }
@@ -116,8 +132,11 @@ pub struct ServerStats {
     pub batches: usize,
     /// Total flops executed.
     pub flops: f64,
-    /// Busy time in the SpMM kernel.
+    /// Busy time in the batch kernel.
     pub compute_s: f64,
+    /// Storage format the batches actually executed in (the
+    /// [`Format`] display string, e.g. `"csr"`, `"sell8-256"`).
+    pub format: String,
 }
 
 impl ServerStats {
@@ -167,7 +186,19 @@ impl SpmvServer {
 }
 
 fn serve_loop(a: Arc<Csr>, config: ServerConfig, rx: mpsc::Receiver<Msg>) -> ServerStats {
-    let mut stats = ServerStats::default();
+    // Imported at function scope on purpose: with the trait visible
+    // file-wide, the blanket `impl SpmvOp for Arc<T>` would shadow
+    // `Csr::spmv` for the tests' `Arc<Csr>` receivers.
+    use crate::kernels::op::SpmvOp;
+    // One-time conversion into the configured format; every batch then
+    // runs through the format-erased op (CSR shares the Arc, no copy).
+    let op = prepare_owned(&a, config.format);
+    let ctx = if config.pooled {
+        ExecCtx::pooled(config.threads, config.policy)
+    } else {
+        ExecCtx::spawning(config.threads, config.policy)
+    };
+    let mut stats = ServerStats { format: config.format.to_string(), ..ServerStats::default() };
     let max_batch = config.max_batch.max(1);
     let mut stopping = false;
     loop {
@@ -203,8 +234,9 @@ fn serve_loop(a: Arc<Csr>, config: ServerConfig, rx: mpsc::Receiver<Msg>) -> Ser
                 x[i * k + u] = req.x[i];
             }
         }
+        let mut y = vec![0.0f64; a.nrows * k];
         let t0 = Instant::now();
-        let y = spmm_parallel(&a, &x, k, config.threads, config.policy);
+        op.spmm_into(&x, &mut y, k, &ctx);
         let compute = t0.elapsed();
         stats.compute_s += compute.as_secs_f64();
         stats.flops += 2.0 * a.nnz() as f64 * k as f64;
@@ -329,6 +361,52 @@ mod tests {
         assert_eq!(stats.served, 1);
         assert!(stats.flops > 0.0);
         assert!((stats.mean_batch() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_csr_decision_is_executed_in_that_format() {
+        // The regression this field exists for: a tuned non-CSR format
+        // used to be silently dropped and served as CSR.
+        let a = matrix();
+        let formats = [Format::Ell, Format::Sell { c: 8, sigma: 64 }, Format::Bcsr { r: 4, c: 2 }];
+        for format in formats {
+            let decision = crate::tuner::TunedConfig {
+                format,
+                policy: Policy::Dynamic(32),
+                threads: 2,
+                gflops: 0.0,
+                source: "trial".to_string(),
+            };
+            let server = SpmvServer::start(a.clone(), ServerConfig::tuned(&decision));
+            let client = server.client();
+            let x = random_vector(a.ncols, 88);
+            let want = a.spmv(&x);
+            let resp = client.call(x).unwrap();
+            for (u, v) in resp.y.iter().zip(&want) {
+                assert!((u - v).abs() < 1e-10, "{format}");
+            }
+            let stats = server.shutdown();
+            assert_eq!(stats.format, format.to_string(), "executed format must be recorded");
+            assert_eq!(stats.served, 1);
+        }
+    }
+
+    #[test]
+    fn spawn_per_call_backend_serves_identically() {
+        let a = matrix();
+        let server = SpmvServer::start(
+            a.clone(),
+            ServerConfig { pooled: false, threads: 2, ..ServerConfig::default() },
+        );
+        let client = server.client();
+        let x = random_vector(a.ncols, 91);
+        let want = a.spmv(&x);
+        let resp = client.call(x).unwrap();
+        for (u, v) in resp.y.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-10);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.format, "csr");
     }
 
     #[test]

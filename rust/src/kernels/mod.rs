@@ -1,9 +1,15 @@
 //! Sparse kernels, twice over.
 //!
-//! * [`native`] — real multithreaded Rust implementations (std::thread +
-//!   atomic chunk claiming, mirroring the paper's OpenMP kernels). These
-//!   execute on the host, are validated against the serial oracle, and are
-//!   the subject of the §Perf optimization pass.
+//! * [`op`] — the format-erased execution surface: every storage format
+//!   implements [`op::SpmvOp`] (`spmv_into`/`spmm_into`/`storage_bytes`),
+//!   and callers above the kernels hold a `Box<dyn SpmvOp>` plus an
+//!   [`op::ExecCtx`] (threads × policy × backend) instead of matching on
+//!   formats.
+//! * [`native`] — the real multithreaded Rust implementations behind the
+//!   trait (atomic chunk claiming over a persistent
+//!   [`crate::sched::WorkerPool`], mirroring the paper's OpenMP kernels).
+//!   These execute on the host, are validated against the serial oracle,
+//!   and are the subject of the §Perf optimization pass.
 //! * [`micro`] — Fig. 1/Fig. 2 micro-benchmarks: KNC *models* of the array
 //!   sum and memset variants, plus runnable host equivalents.
 //! * [`spmv_model`] / [`spmm_model`] / [`blocked_model`] — reductions of a
@@ -15,12 +21,14 @@
 pub mod blocked_model;
 pub mod micro;
 pub mod native;
+pub mod op;
 pub mod spmm_model;
 pub mod spmv_model;
 
 pub use native::{
-    bcsr_spmv_parallel, ell_spmv_parallel, hyb_spmv_parallel, spmm_parallel, spmv_parallel,
-    spmv_parallel_into,
+    bcsr_spmv_parallel, ell_spmv_parallel, hyb_spmv_parallel, sell_spmv_parallel,
+    spmm_parallel, spmv_parallel, spmv_parallel_into,
 };
+pub use op::{ExecCtx, SpmvOp};
 pub use spmm_model::SpmmVariant;
 pub use spmv_model::SpmvVariant;

@@ -1,21 +1,108 @@
 //! Native multithreaded sparse kernels (the real, executed hot path).
 //!
-//! Mirrors the paper's OpenMP implementation: rows are processed in
-//! parallel under a scheduling policy; `dynamic,chunk` is an atomic
-//! chunk-claiming queue. Each row is written by exactly one thread, so the
-//! output vector can be shared mutably without synchronization — expressed
-//! here with a `SendPtr` wrapper around the disjoint writes.
+//! Mirrors the paper's OpenMP implementation: work units (rows, block
+//! rows, or SELL chunks) are processed in parallel under a scheduling
+//! policy; `dynamic,chunk` is an atomic chunk-claiming queue. Workers come
+//! from a persistent [`crate::sched::WorkerPool`] by default (an
+//! [`ExecCtx`] can opt into spawn-per-call threads for ablation), so the
+//! steady-state serving path never pays thread-creation latency.
+//!
+//! Each work unit is written by exactly one worker, so the output vector
+//! can be shared mutably without synchronization — expressed with a
+//! `SendPtr` wrapper around the disjoint writes. Every kernel builds its
+//! own disjoint-write body; [`run_partitioned`] only distributes the unit
+//! ranges.
 
-use crate::sched::{DynamicQueue, Policy, StaticAssignment};
-use crate::sparse::{Bcsr, Csr, Ell, Hyb};
+use crate::sched::{run_spawned, DynamicQueue, Policy, StaticAssignment};
+use crate::sparse::{Bcsr, Csr, Ell, Hyb, Sell};
 
-/// Raw-pointer wrapper asserting disjoint row ownership across threads.
+use super::op::ExecCtx;
+
+/// Raw-pointer wrapper asserting disjoint ownership across threads.
 #[derive(Clone, Copy)]
 struct SendPtr(*mut f64);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 
-/// Parallel SpMV: `y ← Ax` with `nthreads` workers under `policy`.
+/// Below this many row-units a kernel runs serially on the caller.
+const SERIAL_ROWS: usize = 256;
+/// Serial threshold for the coarser block-row/chunk units.
+const SERIAL_UNITS: usize = 64;
+
+/// The shared scheduling scaffold of every parallel kernel: distributes
+/// `0..n` work units over `ctx.threads` workers under `ctx.policy` and
+/// hands each claimed unit range to `body`. Bodies write disjoint parts of
+/// the output (unit ranges partition `0..n` exactly once); the execution
+/// backend is `ctx.pool` (persistent workers) or spawn-per-call.
+pub(crate) fn run_partitioned(
+    ctx: &ExecCtx<'_>,
+    n: usize,
+    body: &(impl Fn(std::ops::Range<usize>) + Sync),
+) {
+    if n == 0 {
+        return;
+    }
+    let nthreads = ctx.threads.max(1);
+    if nthreads == 1 {
+        body(0..n);
+        return;
+    }
+    match ctx.policy {
+        Policy::Dynamic(chunk) => {
+            let queue = DynamicQueue::new(n, chunk.max(1));
+            dispatch(ctx, nthreads, &|_worker| {
+                while let Some(r) = queue.claim() {
+                    body(r);
+                }
+            });
+        }
+        _ => {
+            let assign = StaticAssignment::build(ctx.policy, n, nthreads);
+            dispatch(ctx, nthreads, &|worker| {
+                for r in &assign.ranges[worker] {
+                    body(r.clone());
+                }
+            });
+        }
+    }
+}
+
+/// Runs `job(0..ntasks)` on the context's backend.
+fn dispatch(ctx: &ExecCtx<'_>, ntasks: usize, job: &(dyn Fn(usize) + Sync)) {
+    match ctx.pool {
+        Some(pool) => pool.run(ntasks, job),
+        None => run_spawned(ntasks, job),
+    }
+}
+
+/// Row-unit specialization of [`run_partitioned`]: hands each claimed row
+/// range the matching disjoint slice of `y` (`ys[0]` = row `r.start`).
+/// Row ranges partition `0..y.len()` exactly once, which makes this slice
+/// construction sound — keep it the only place that builds row slices;
+/// kernels with non-row units (SpMM's k-wide blocks, BCSR block rows,
+/// SELL's permuted scatter) carry their own disjointness arguments.
+fn run_row_partitioned(
+    ctx: &ExecCtx<'_>,
+    y: &mut [f64],
+    body: &(impl Fn(&mut [f64], std::ops::Range<usize>) + Sync),
+) {
+    let yp = SendPtr(y.as_mut_ptr());
+    run_partitioned(ctx, y.len(), &move |r| {
+        let ys = unsafe { std::slice::from_raw_parts_mut(yp.0.add(r.start), r.len()) };
+        body(ys, r);
+    });
+}
+
+/// `ctx` with the thread count the kernel will actually use: serial when
+/// the unit count is below the parallel break-even.
+fn effective<'p>(ctx: &ExecCtx<'p>, units: usize, serial_below: usize) -> ExecCtx<'p> {
+    let threads = if units < serial_below { 1 } else { ctx.threads.max(1) };
+    ExecCtx { threads, ..*ctx }
+}
+
+// ------------------------------------------------------------------ CSR --
+
+/// Parallel SpMV: `y ← Ax` with `nthreads` pooled workers under `policy`.
 pub fn spmv_parallel(a: &Csr, x: &[f64], nthreads: usize, policy: Policy) -> Vec<f64> {
     let mut y = vec![0.0; a.nrows];
     spmv_parallel_into(a, x, &mut y, nthreads, policy);
@@ -25,71 +112,15 @@ pub fn spmv_parallel(a: &Csr, x: &[f64], nthreads: usize, policy: Policy) -> Vec
 /// Parallel SpMV writing into a caller-provided buffer (no allocation on
 /// the hot path — the §Perf-relevant entry point).
 pub fn spmv_parallel_into(a: &Csr, x: &[f64], y: &mut [f64], nthreads: usize, policy: Policy) {
+    csr_spmv_into(a, x, y, &ExecCtx::pooled(nthreads, policy));
+}
+
+/// CSR SpMV under an explicit execution context.
+pub(crate) fn csr_spmv_into(a: &Csr, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
     assert_eq!(x.len(), a.ncols);
     assert_eq!(y.len(), a.nrows);
-    let nthreads = nthreads.max(1);
-    if nthreads == 1 || a.nrows < 256 {
-        spmv_range(a, x, y, 0..a.nrows);
-        return;
-    }
-    run_row_partitioned(y, nthreads, policy, &|ys, r| spmv_range_into(a, x, ys, r));
-}
-
-/// The shared scheduling scaffold of the row-parallel kernels: distributes
-/// `0..y.len()` over `nthreads` workers under `policy` and hands each
-/// claimed range to `body` along with the matching disjoint slice of `y`
-/// (`ys[0]` = row `r.start`). Row disjointness is what makes the single
-/// `SendPtr`-based unsafe slicing here sound — keep it the only place
-/// that constructs those slices.
-fn run_row_partitioned(
-    y: &mut [f64],
-    nthreads: usize,
-    policy: Policy,
-    body: &(impl Fn(&mut [f64], std::ops::Range<usize>) + Sync),
-) {
-    let nrows = y.len();
-    let yp = SendPtr(y.as_mut_ptr());
-    match policy {
-        Policy::Dynamic(chunk) => {
-            let queue = DynamicQueue::new(nrows, chunk.max(1));
-            std::thread::scope(|s| {
-                for _ in 0..nthreads {
-                    let queue = &queue;
-                    s.spawn(move || {
-                        let yp = yp;
-                        while let Some(r) = queue.claim() {
-                            let ys = unsafe {
-                                std::slice::from_raw_parts_mut(yp.0.add(r.start), r.len())
-                            };
-                            body(ys, r);
-                        }
-                    });
-                }
-            });
-        }
-        _ => {
-            let assign = StaticAssignment::build(policy, nrows, nthreads);
-            std::thread::scope(|s| {
-                for ranges in &assign.ranges {
-                    s.spawn(move || {
-                        let yp = yp;
-                        for r in ranges {
-                            let ys = unsafe {
-                                std::slice::from_raw_parts_mut(yp.0.add(r.start), r.len())
-                            };
-                            body(ys, r.clone());
-                        }
-                    });
-                }
-            });
-        }
-    }
-}
-
-/// Serial SpMV over a row range, writing `y[r]` (absolute indexing).
-fn spmv_range(a: &Csr, x: &[f64], y: &mut [f64], r: std::ops::Range<usize>) {
-    let (start, len) = (r.start, r.len());
-    spmv_range_into(a, x, &mut y[start..start + len], r);
+    let ctx = effective(ctx, a.nrows, SERIAL_ROWS);
+    run_row_partitioned(&ctx, y, &|ys, r| spmv_range_into(a, x, ys, r));
 }
 
 /// Serial SpMV over a row range into a local slice (`ys[0]` = row r.start).
@@ -140,40 +171,25 @@ pub fn spmv_serial_rolled(a: &Csr, x: &[f64], y: &mut [f64]) {
 
 /// Parallel SpMM: `Y ← AX`, row-major `X`/`Y` of width `k`.
 pub fn spmm_parallel(a: &Csr, x: &[f64], k: usize, nthreads: usize, policy: Policy) -> Vec<f64> {
-    assert_eq!(x.len(), a.ncols * k);
     let mut y = vec![0.0; a.nrows * k];
-    let nthreads = nthreads.max(1);
-    if nthreads == 1 || a.nrows < 256 {
-        spmm_rows(a, x, &mut y, k, 0..a.nrows);
-        return y;
-    }
-    let yp = SendPtr(y.as_mut_ptr());
-    let chunk = match policy {
-        Policy::Dynamic(c) | Policy::StaticChunk(c) | Policy::Guided(c) => c.max(1),
-        Policy::StaticBlock => (a.nrows / (nthreads * 8)).max(1),
-    };
-    let queue = DynamicQueue::new(a.nrows, chunk);
-    std::thread::scope(|s| {
-        for _ in 0..nthreads {
-            let queue = &queue;
-            s.spawn(move || {
-                let yp = yp;
-                while let Some(r) = queue.claim() {
-                    let ys = unsafe {
-                        std::slice::from_raw_parts_mut(yp.0.add(r.start * k), r.len() * k)
-                    };
-                    spmm_rows_local(a, x, ys, k, r);
-                }
-            });
-        }
-    });
+    csr_spmm_into(a, x, &mut y, k, &ExecCtx::pooled(nthreads, policy));
     y
 }
 
-fn spmm_rows(a: &Csr, x: &[f64], y: &mut [f64], k: usize, r: std::ops::Range<usize>) {
-    let start = r.start;
-    let len = r.len();
-    spmm_rows_local(a, x, &mut y[start * k..(start + len) * k], k, r);
+/// Fused CSR SpMM under an explicit execution context.
+pub(crate) fn csr_spmm_into(a: &Csr, x: &[f64], y: &mut [f64], k: usize, ctx: &ExecCtx<'_>) {
+    assert_eq!(x.len(), a.ncols * k, "X must be ncols*k row-major");
+    assert_eq!(y.len(), a.nrows * k, "Y must be nrows*k row-major");
+    if k == 0 {
+        return;
+    }
+    let ctx = effective(ctx, a.nrows, SERIAL_ROWS);
+    let yp = SendPtr(y.as_mut_ptr());
+    run_partitioned(&ctx, a.nrows, &move |r| {
+        // Disjoint row ranges map to disjoint k-wide Y blocks.
+        let ys = unsafe { std::slice::from_raw_parts_mut(yp.0.add(r.start * k), r.len() * k) };
+        spmm_rows_local(a, x, ys, k, r);
+    });
 }
 
 /// SpMM over a row range; `ys` is the local Y block (row r.start at 0).
@@ -210,40 +226,33 @@ fn spmm_rows_local(a: &Csr, x: &[f64], ys: &mut [f64], k: usize, r: std::ops::Ra
     }
 }
 
-/// Parallel register-blocked SpMV over a [`Bcsr`] matrix.
-pub fn bcsr_spmv_parallel(b: &Bcsr, x: &[f64], nthreads: usize, chunk: usize) -> Vec<f64> {
-    assert_eq!(x.len(), b.ncols);
+// ----------------------------------------------------------------- BCSR --
+
+/// Parallel register-blocked SpMV over a [`Bcsr`] matrix. Block rows go
+/// through the shared scaffold, so every [`Policy`] variant applies (the
+/// old entry point only understood a dynamic chunk).
+pub fn bcsr_spmv_parallel(b: &Bcsr, x: &[f64], nthreads: usize, policy: Policy) -> Vec<f64> {
     let mut y = vec![0.0; b.nrows];
-    let nthreads = nthreads.max(1);
-    if nthreads == 1 || b.nbrows() < 64 {
-        bcsr_rows(b, x, &mut y, 0..b.nbrows());
-        return y;
-    }
-    let yp = SendPtr(y.as_mut_ptr());
-    let queue = DynamicQueue::new(b.nbrows(), chunk.max(1));
-    std::thread::scope(|s| {
-        for _ in 0..nthreads {
-            let queue = &queue;
-            s.spawn(move || {
-                let yp = yp;
-                while let Some(r) = queue.claim() {
-                    // Block rows map to disjoint y ranges.
-                    let lo = r.start * b.r;
-                    let hi = (r.end * b.r).min(b.nrows);
-                    let ys =
-                        unsafe { std::slice::from_raw_parts_mut(yp.0.add(lo), hi - lo) };
-                    bcsr_rows_local(b, x, ys, r);
-                }
-            });
-        }
-    });
+    bcsr_spmv_into(b, x, &mut y, &ExecCtx::pooled(nthreads, policy));
     y
 }
 
-fn bcsr_rows(b: &Bcsr, x: &[f64], y: &mut [f64], br_range: std::ops::Range<usize>) {
-    let lo = br_range.start * b.r;
-    let hi = (br_range.end * b.r).min(b.nrows);
-    bcsr_rows_local(b, x, &mut y[lo..hi], br_range);
+/// BCSR SpMV under an explicit execution context.
+pub(crate) fn bcsr_spmv_into(b: &Bcsr, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
+    assert_eq!(x.len(), b.ncols);
+    assert_eq!(y.len(), b.nrows);
+    // The block kernel accumulates (`+=`) into y.
+    y.fill(0.0);
+    let nbrows = b.nbrows();
+    let ctx = effective(ctx, nbrows, SERIAL_UNITS);
+    let yp = SendPtr(y.as_mut_ptr());
+    run_partitioned(&ctx, nbrows, &move |r| {
+        // Block rows map to disjoint y ranges.
+        let lo = r.start * b.r;
+        let hi = (r.end * b.r).min(b.nrows);
+        let ys = unsafe { std::slice::from_raw_parts_mut(yp.0.add(lo), hi - lo) };
+        bcsr_rows_local(b, x, ys, r);
+    });
 }
 
 #[inline]
@@ -269,6 +278,8 @@ fn bcsr_rows_local(b: &Bcsr, x: &[f64], ys: &mut [f64], br_range: std::ops::Rang
     }
 }
 
+// ------------------------------------------------------------------ ELL --
+
 /// Parallel SpMV over a padded [`Ell`] matrix: `y ← Ax`.
 ///
 /// Rows are distributed exactly like [`spmv_parallel`]; each padded row is
@@ -276,15 +287,17 @@ fn bcsr_rows_local(b: &Bcsr, x: &[f64], ys: &mut [f64], br_range: std::ops::Rang
 /// per-row length bookkeeping is needed — the layout the tuner picks for
 /// near-uniform row lengths).
 pub fn ell_spmv_parallel(e: &Ell, x: &[f64], nthreads: usize, policy: Policy) -> Vec<f64> {
-    assert_eq!(x.len(), e.ncols);
     let mut y = vec![0.0; e.nrows];
-    let nthreads = nthreads.max(1);
-    if nthreads == 1 || e.nrows < 256 {
-        ell_rows_local(e, x, &mut y, 0..e.nrows);
-        return y;
-    }
-    run_row_partitioned(&mut y, nthreads, policy, &|ys, r| ell_rows_local(e, x, ys, r));
+    ell_spmv_into(e, x, &mut y, &ExecCtx::pooled(nthreads, policy));
     y
+}
+
+/// ELL SpMV under an explicit execution context.
+pub(crate) fn ell_spmv_into(e: &Ell, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
+    assert_eq!(x.len(), e.ncols);
+    assert_eq!(y.len(), e.nrows);
+    let ctx = effective(ctx, e.nrows, SERIAL_ROWS);
+    run_row_partitioned(&ctx, y, &|ys, r| ell_rows_local(e, x, ys, r));
 }
 
 /// ELL SpMV over a row range into a local slice (`ys[0]` = row `r.start`).
@@ -300,24 +313,78 @@ fn ell_rows_local(e: &Ell, x: &[f64], ys: &mut [f64], r: std::ops::Range<usize>)
     }
 }
 
+// ------------------------------------------------------------------ HYB --
+
 /// Parallel SpMV over a [`Hyb`] matrix.
 ///
 /// The regular ELL part runs in parallel; the (typically tiny) COO
 /// overflow is applied serially after the join, because overflow entries
 /// are not row-disjoint across threads.
 pub fn hyb_spmv_parallel(h: &Hyb, x: &[f64], nthreads: usize, policy: Policy) -> Vec<f64> {
-    let mut y = ell_spmv_parallel(&h.ell, x, nthreads, policy);
+    let mut y = vec![0.0; h.ell.nrows];
+    hyb_spmv_into(h, x, &mut y, &ExecCtx::pooled(nthreads, policy));
+    y
+}
+
+/// HYB SpMV under an explicit execution context.
+pub(crate) fn hyb_spmv_into(h: &Hyb, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
+    ell_spmv_into(&h.ell, x, y, ctx);
     for idx in 0..h.coo.nnz() {
         y[h.coo.rows[idx] as usize] += h.coo.vals[idx] * x[h.coo.cols[idx] as usize];
     }
+}
+
+// ----------------------------------------------------------------- SELL --
+
+/// Parallel SpMV over a [`Sell`] (SELL-C-σ) matrix: `y ← Ax`.
+///
+/// The work unit is a chunk of C rows: each chunk is a column-major padded
+/// slice whose C lanes accumulate independently (the SIMD-friendly inner
+/// loop), then scatter to `y` through the σ-window row permutation.
+pub fn sell_spmv_parallel(s: &Sell, x: &[f64], nthreads: usize, policy: Policy) -> Vec<f64> {
+    let mut y = vec![0.0; s.nrows];
+    sell_spmv_into(s, x, &mut y, &ExecCtx::pooled(nthreads, policy));
     y
+}
+
+/// SELL-C-σ SpMV under an explicit execution context.
+pub(crate) fn sell_spmv_into(s: &Sell, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
+    assert_eq!(x.len(), s.ncols);
+    assert_eq!(y.len(), s.nrows);
+    let nchunks = s.nchunks();
+    let ctx = effective(ctx, nchunks, SERIAL_UNITS);
+    let yp = SendPtr(y.as_mut_ptr());
+    run_partitioned(&ctx, nchunks, &move |r| {
+        let c = s.chunk;
+        let mut acc = vec![0.0f64; c];
+        for ch in r {
+            let lo = ch * c;
+            let lanes = s.nrows.min(lo + c) - lo;
+            let base = s.chunk_ptrs[ch];
+            let width = (s.chunk_ptrs[ch + 1] - base) / c;
+            acc.iter_mut().for_each(|v| *v = 0.0);
+            for j in 0..width {
+                let slot = base + j * c;
+                for lane in 0..c {
+                    acc[lane] += s.vals[slot + lane] * x[s.cids[slot + lane] as usize];
+                }
+            }
+            // Chunk-disjoint sorted positions map to disjoint y slots
+            // because the permutation is a bijection.
+            for lane in 0..lanes {
+                unsafe {
+                    *yp.0.add(s.perm[lo + lane] as usize) = acc[lane];
+                }
+            }
+        }
+    });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sparse::gen::{random_vector, randomize_values};
     use crate::sparse::gen::stencil::stencil_2d;
+    use crate::sparse::gen::{random_vector, randomize_values};
     use crate::sparse::Bcsr;
 
     fn test_matrix() -> Csr {
@@ -347,6 +414,16 @@ mod tests {
     }
 
     #[test]
+    fn spawned_backend_matches_pooled() {
+        let a = test_matrix();
+        let x = random_vector(a.ncols, 43);
+        let want = a.spmv(&x);
+        let mut y = vec![f64::NAN; a.nrows];
+        csr_spmv_into(&a, &x, &mut y, &ExecCtx::spawning(4, Policy::Dynamic(32)));
+        assert_close(&y, &want);
+    }
+
+    #[test]
     fn spmm_parallel_matches_serial() {
         let a = test_matrix();
         for k in [1usize, 4, 16, 17] {
@@ -358,14 +435,43 @@ mod tests {
     }
 
     #[test]
-    fn bcsr_parallel_matches_serial() {
+    fn spmm_all_policies() {
+        let a = test_matrix();
+        let k = 3;
+        let x = random_vector(a.ncols * k, 47);
+        let want = a.spmm(&x, k);
+        for policy in Policy::paper_sweep() {
+            assert_close(&spmm_parallel(&a, &x, k, 4, policy), &want);
+        }
+    }
+
+    #[test]
+    fn bcsr_parallel_matches_serial_all_policies() {
         let a = test_matrix();
         let x = random_vector(a.ncols, 17);
         let want = a.spmv(&x);
         for (r, c) in crate::sparse::bcsr::PAPER_BLOCK_CONFIGS {
             let b = Bcsr::from_csr(&a, r, c);
-            let got = bcsr_spmv_parallel(&b, &x, 4, 16);
-            assert_close(&got, &want);
+            for policy in Policy::paper_sweep() {
+                let got = bcsr_spmv_parallel(&b, &x, 4, policy);
+                assert_close(&got, &want);
+            }
+        }
+    }
+
+    #[test]
+    fn sell_parallel_matches_serial_all_policies() {
+        let a = test_matrix();
+        let x = random_vector(a.ncols, 53);
+        let want = a.spmv(&x);
+        for (c, sigma) in [(4usize, 32usize), (8, 64), (8, 1 << 20)] {
+            let s = Sell::from_csr(&a, c, sigma);
+            for policy in Policy::paper_sweep() {
+                for threads in [1, 3, 8] {
+                    let got = sell_spmv_parallel(&s, &x, threads, policy);
+                    assert_close(&got, &want);
+                }
+            }
         }
     }
 
@@ -431,5 +537,9 @@ mod tests {
         let a = coo.to_csr();
         let x = random_vector(500, 23);
         assert_close(&spmv_parallel(&a, &x, 4, Policy::Dynamic(16)), &a.spmv(&x));
+        for (c, sigma) in [(8usize, 64usize), (3, 10)] {
+            let s = Sell::from_csr(&a, c, sigma);
+            assert_close(&sell_spmv_parallel(&s, &x, 4, Policy::Dynamic(8)), &a.spmv(&x));
+        }
     }
 }

@@ -1,0 +1,334 @@
+//! Format-erased kernel dispatch: the [`SpmvOp`] trait and the execution
+//! context it runs under.
+//!
+//! Every storage format (CSR, ELL, BCSR, HYB, SELL-C-σ, …) implements one
+//! trait with `spmv_into` / `spmm_into` / `storage_bytes`; everything
+//! above the kernels — the tuner's trialer, the serving coordinator, the
+//! benches — holds a `Box<dyn SpmvOp>` and never matches on the format
+//! again. Adding a format is one `impl` plus a conversion arm in
+//! [`crate::tuner::exec::prepare`], not a five-site edit.
+//!
+//! [`ExecCtx`] carries the *how*: thread count, scheduling policy, and the
+//! execution backend — a persistent [`WorkerPool`] (the default; see
+//! [`crate::sched::pool`]) or spawn-per-call threads (the pre-pool
+//! behavior, kept for ablation benches).
+
+use std::sync::Arc;
+
+use crate::sched::{Policy, WorkerPool};
+use crate::sparse::{Bcsr, Csr, Ell, Hyb, Sell};
+
+use super::native;
+
+/// How a kernel call executes: worker count, schedule, and backend.
+#[derive(Clone, Copy)]
+pub struct ExecCtx<'p> {
+    /// Worker lanes requested (clamped to ≥ 1 by the kernels).
+    pub threads: usize,
+    /// Loop scheduling policy.
+    pub policy: Policy,
+    /// `Some(pool)` reuses the pool's parked workers; `None` spawns
+    /// threads per call (the ablation baseline).
+    pub pool: Option<&'p WorkerPool>,
+}
+
+impl ExecCtx<'static> {
+    /// Execution on the process-wide [`WorkerPool::global`] pool — the
+    /// default for every serving and tuning path.
+    pub fn pooled(threads: usize, policy: Policy) -> ExecCtx<'static> {
+        ExecCtx { threads, policy, pool: Some(WorkerPool::global()) }
+    }
+
+    /// Spawn-per-call execution (what every kernel did before the pool).
+    pub fn spawning(threads: usize, policy: Policy) -> ExecCtx<'static> {
+        ExecCtx { threads, policy, pool: None }
+    }
+
+    /// Single-threaded execution on the calling thread.
+    pub fn serial() -> ExecCtx<'static> {
+        ExecCtx { threads: 1, policy: Policy::Dynamic(64), pool: None }
+    }
+}
+
+impl<'p> ExecCtx<'p> {
+    /// Execution on an explicit (typically test-owned) pool.
+    pub fn on_pool(pool: &'p WorkerPool, threads: usize, policy: Policy) -> ExecCtx<'p> {
+        ExecCtx { threads, policy, pool: Some(pool) }
+    }
+}
+
+/// A sparse matrix, erased down to what the execution layers need:
+/// multiply and account for storage.
+///
+/// `spmv_into`/`spmm_into` must tolerate any `ExecCtx` (they clamp thread
+/// counts and fall back to serial under their own size thresholds) and
+/// must fully overwrite `y`.
+pub trait SpmvOp: Send + Sync {
+    /// Logical row count (`y` length for SpMV).
+    fn nrows(&self) -> usize;
+    /// Logical column count (`x` length for SpMV).
+    fn ncols(&self) -> usize;
+    /// Bytes of this representation, padding and index arrays included.
+    fn storage_bytes(&self) -> usize;
+    /// Self-description for logs and stats (e.g. `"csr"`, `"sell8-256"`).
+    /// Reports the *materialized* layout; tuner decisions print their own
+    /// [`crate::tuner::Format`], which may differ by lane rounding (HYB).
+    fn format_name(&self) -> String;
+    /// SpMV: `y ← Ax`.
+    fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>);
+
+    /// SpMM: `Y ← AX` with row-major `X`/`Y` of width `k`.
+    ///
+    /// The default runs `k` strided gather → SpMV → scatter passes, which
+    /// is always correct; formats with a fused multi-vector kernel (CSR)
+    /// override it. Callers batching heavily over a non-CSR op should
+    /// know the tuner's decision was measured on single-vector SpMV, not
+    /// this path — fused non-CSR SpMM kernels and SpMM-aware tuning are
+    /// tracked as ROADMAP open items.
+    fn spmm_into(&self, x: &[f64], y: &mut [f64], k: usize, ctx: &ExecCtx<'_>) {
+        assert_eq!(x.len(), self.ncols() * k, "X must be ncols*k row-major");
+        assert_eq!(y.len(), self.nrows() * k, "Y must be nrows*k row-major");
+        if k == 0 {
+            return;
+        }
+        let (m, n) = (self.nrows(), self.ncols());
+        let mut xu = vec![0.0f64; n];
+        let mut yu = vec![0.0f64; m];
+        for u in 0..k {
+            for i in 0..n {
+                xu[i] = x[i * k + u];
+            }
+            self.spmv_into(&xu, &mut yu, ctx);
+            for i in 0..m {
+                y[i * k + u] = yu[i];
+            }
+        }
+    }
+
+    /// Allocating SpMV convenience.
+    fn spmv(&self, x: &[f64], ctx: &ExecCtx<'_>) -> Vec<f64> {
+        let mut y = vec![0.0; self.nrows()];
+        self.spmv_into(x, &mut y, ctx);
+        y
+    }
+
+    /// Allocating SpMM convenience.
+    fn spmm(&self, x: &[f64], k: usize, ctx: &ExecCtx<'_>) -> Vec<f64> {
+        let mut y = vec![0.0; self.nrows() * k];
+        self.spmm_into(x, &mut y, k, ctx);
+        y
+    }
+}
+
+impl SpmvOp for Csr {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn storage_bytes(&self) -> usize {
+        Csr::storage_bytes(self)
+    }
+    fn format_name(&self) -> String {
+        "csr".to_string()
+    }
+    fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
+        native::csr_spmv_into(self, x, y, ctx);
+    }
+    fn spmm_into(&self, x: &[f64], y: &mut [f64], k: usize, ctx: &ExecCtx<'_>) {
+        native::csr_spmm_into(self, x, y, k, ctx);
+    }
+}
+
+impl SpmvOp for Ell {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn storage_bytes(&self) -> usize {
+        Ell::storage_bytes(self)
+    }
+    fn format_name(&self) -> String {
+        "ell".to_string()
+    }
+    fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
+        native::ell_spmv_into(self, x, y, ctx);
+    }
+}
+
+impl SpmvOp for Bcsr {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn storage_bytes(&self) -> usize {
+        Bcsr::storage_bytes(self)
+    }
+    fn format_name(&self) -> String {
+        format!("bcsr{}x{}", self.r, self.c)
+    }
+    fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
+        native::bcsr_spmv_into(self, x, y, ctx);
+    }
+}
+
+impl SpmvOp for Hyb {
+    fn nrows(&self) -> usize {
+        self.ell.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ell.ncols
+    }
+    fn storage_bytes(&self) -> usize {
+        Hyb::storage_bytes(self)
+    }
+    fn format_name(&self) -> String {
+        format!("hyb{}", self.ell.width)
+    }
+    fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
+        native::hyb_spmv_into(self, x, y, ctx);
+    }
+}
+
+impl SpmvOp for Sell {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn storage_bytes(&self) -> usize {
+        Sell::storage_bytes(self)
+    }
+    fn format_name(&self) -> String {
+        format!("sell{}-{}", self.chunk, self.sigma)
+    }
+    fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
+        native::sell_spmv_into(self, x, y, ctx);
+    }
+}
+
+/// Forwards every method (overrides included — a plain supertrait default
+/// would silently bypass e.g. CSR's fused SpMM) through a pointer-like
+/// wrapper.
+macro_rules! forward_spmv_op {
+    ($($wrapper:ty),+) => {$(
+        impl<T: SpmvOp + ?Sized> SpmvOp for $wrapper {
+            fn nrows(&self) -> usize {
+                (**self).nrows()
+            }
+            fn ncols(&self) -> usize {
+                (**self).ncols()
+            }
+            fn storage_bytes(&self) -> usize {
+                (**self).storage_bytes()
+            }
+            fn format_name(&self) -> String {
+                (**self).format_name()
+            }
+            fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
+                (**self).spmv_into(x, y, ctx)
+            }
+            fn spmm_into(&self, x: &[f64], y: &mut [f64], k: usize, ctx: &ExecCtx<'_>) {
+                (**self).spmm_into(x, y, k, ctx)
+            }
+        }
+    )+};
+}
+
+forward_spmv_op!(&T, Arc<T>, Box<T>);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::stencil::stencil_2d;
+    use crate::sparse::gen::{random_vector, randomize_values};
+
+    fn matrix() -> Csr {
+        let mut a = stencil_2d(30, 31);
+        randomize_values(&mut a, 77);
+        a
+    }
+
+    fn assert_close(a: &[f64], b: &[f64]) {
+        assert_eq!(a.len(), b.len());
+        for (u, v) in a.iter().zip(b) {
+            assert!((u - v).abs() < 1e-10, "{u} vs {v}");
+        }
+    }
+
+    fn all_ops(a: &Csr) -> Vec<Box<dyn SpmvOp + '_>> {
+        vec![
+            Box::new(a),
+            Box::new(Ell::from_csr(a, 0)),
+            Box::new(Bcsr::from_csr(a, 4, 2)),
+            Box::new(Hyb::from_csr(a, 3)),
+            Box::new(Sell::from_csr(a, 8, 64)),
+        ]
+    }
+
+    #[test]
+    fn every_op_matches_the_oracle_under_every_backend() {
+        let a = matrix();
+        let x = random_vector(a.ncols, 19);
+        let want = a.spmv(&x);
+        let pool = crate::sched::WorkerPool::new(2);
+        for op in all_ops(&a) {
+            for ctx in [
+                ExecCtx::serial(),
+                ExecCtx::pooled(4, Policy::Dynamic(32)),
+                ExecCtx::spawning(3, Policy::StaticBlock),
+                ExecCtx::on_pool(&pool, 4, Policy::Guided(16)),
+            ] {
+                let got = op.spmv(&x, &ctx);
+                assert_close(&got, &want);
+            }
+        }
+    }
+
+    #[test]
+    fn default_spmm_matches_fused_csr_spmm() {
+        let a = matrix();
+        let k = 5;
+        let x = random_vector(a.ncols * k, 23);
+        let want = a.spmm(&x, k);
+        let ctx = ExecCtx::pooled(4, Policy::Dynamic(64));
+        for op in all_ops(&a) {
+            let got = op.spmm(&x, k, &ctx);
+            assert_close(&got, &want);
+        }
+    }
+
+    #[test]
+    fn storage_bytes_and_names_come_from_the_formats() {
+        let a = matrix();
+        let ops = all_ops(&a);
+        assert_eq!(ops[0].storage_bytes(), a.storage_bytes());
+        assert_eq!(ops[0].format_name(), "csr");
+        let e = Ell::from_csr(&a, 0);
+        assert_eq!(ops[1].storage_bytes(), e.padded_len() * 12);
+        assert_eq!(ops[4].format_name(), "sell8-64");
+        for op in &ops {
+            assert!(op.storage_bytes() > 0, "{}", op.format_name());
+            assert_eq!((op.nrows(), op.ncols()), (a.nrows, a.ncols));
+        }
+    }
+
+    #[test]
+    fn erased_ops_work_through_arc_and_box() {
+        let a = Arc::new(matrix());
+        let x = random_vector(a.ncols, 29);
+        // UFCS: the blanket Arc impl would otherwise shadow the inherent
+        // one-argument `Csr::spmv` during method probing.
+        let want = Csr::spmv(&a, &x);
+        let op: Box<dyn SpmvOp> = Box::new(a.clone());
+        assert_close(&op.spmv(&x, &ExecCtx::serial()), &want);
+        let nested: Box<dyn SpmvOp> = Box::new(op);
+        assert_close(&nested.spmv(&x, &ExecCtx::pooled(2, Policy::Dynamic(16))), &want);
+    }
+}

@@ -15,7 +15,13 @@
 //! * [`kernels`] — the sparse kernels themselves, twice over: real,
 //!   multithreaded Rust implementations (executed and benchmarked on the
 //!   host), and instruction-stream/traffic models fed to the simulators to
-//!   regenerate the paper's figures.
+//!   regenerate the paper's figures. Execution is format-erased: every
+//!   storage format (CSR/ELL/BCSR/HYB/SELL-C-σ) implements
+//!   [`kernels::SpmvOp`] (`spmv_into`/`spmm_into`/`storage_bytes`), and
+//!   all parallel kernels run on a persistent
+//!   [`sched::WorkerPool`] — parked workers woken by a generation-counter
+//!   barrier — instead of spawning threads per call, so the tuner, the
+//!   serving coordinator, and the benches share one set of warm threads.
 //! * [`runtime`] + [`coordinator`] — the three-layer AOT stack: the Rust
 //!   coordinator loads Pallas/JAX kernels AOT-lowered to HLO text and runs
 //!   them through the PJRT CPU client, orchestrating the paper's experiment

@@ -7,9 +7,11 @@
 
 pub mod balance;
 pub mod policy;
+pub mod pool;
 
 pub use balance::LoadBalance;
 pub use policy::{ChunkIter, Policy, StaticAssignment};
+pub use pool::{run_spawned, WorkerPool};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 

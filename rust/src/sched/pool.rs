@@ -1,0 +1,356 @@
+//! Persistent worker pool — parked OS threads reused across kernel calls.
+//!
+//! Every parallel kernel used to spawn fresh threads through
+//! `std::thread::scope`, so each SpMV paid thread-creation latency and the
+//! tuner's trial timings included spawn noise. A [`WorkerPool`] keeps
+//! `workers` threads parked on a condvar; each [`WorkerPool::run`] call
+//! publishes a job, bumps a generation counter to wake them, and waits on
+//! a completion barrier. The calling thread participates in the work, so a
+//! pool of `w` workers executes with `w + 1`-way parallelism and a pool of
+//! zero workers degrades to serial execution on the caller.
+//!
+//! Task indices are claimed from a shared atomic counter, so `ntasks` may
+//! exceed the pool size (stragglers pick up the remainder) or undershoot
+//! it (surplus workers find the counter exhausted and re-park). The
+//! generation barrier — `run` returns only after *every* worker has
+//! finished the current generation, not merely after all tasks are claimed
+//! — is what makes the job pointer's lifetime sound and prevents a slow
+//! worker from claiming into the next call's counter.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// The job signature: called once per task index in `0..ntasks`.
+type Job = dyn Fn(usize) + Sync;
+
+struct Ctrl {
+    /// Bumped once per `run` call; workers wake when it changes.
+    generation: u64,
+    /// Tasks in the current generation.
+    ntasks: usize,
+    /// The published job. `'static` is a lie told only inside this module:
+    /// `run` transmutes the caller's borrow and never returns while any
+    /// worker can still dereference it.
+    job: Option<&'static Job>,
+    /// Workers that have not yet finished the current generation.
+    active: usize,
+    /// A worker's job panicked in the current generation.
+    panicked: bool,
+    /// Pool is being dropped; workers exit.
+    shutdown: bool,
+}
+
+struct Shared {
+    ctrl: Mutex<Ctrl>,
+    /// Wakes parked workers on a new generation (or shutdown).
+    work_cv: Condvar,
+    /// Wakes the caller when the last worker finishes the generation.
+    done_cv: Condvar,
+    /// Next unclaimed task index of the current generation.
+    claim: AtomicUsize,
+}
+
+/// A fixed set of parked worker threads executing submitted jobs.
+pub struct WorkerPool {
+    shared: std::sync::Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Serializes concurrent `run` calls from different threads: one
+    /// generation is in flight at a time, so concurrent kernels queue on
+    /// the pool instead of oversubscribing the machine.
+    run_gate: Mutex<()>,
+}
+
+/// Locks a mutex, ignoring poisoning (a panicked job must not wedge every
+/// later kernel call; the panic itself is re-raised by `run`).
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl WorkerPool {
+    /// Spawns a pool of `workers` parked threads. `new(0)` is valid: every
+    /// `run` then executes serially on the calling thread.
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = std::sync::Arc::new(Shared {
+            ctrl: Mutex::new(Ctrl {
+                generation: 0,
+                ntasks: 0,
+                job: None,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            claim: AtomicUsize::new(0),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let shared = shared.clone();
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        WorkerPool { shared, handles, run_gate: Mutex::new(()) }
+    }
+
+    /// The process-wide pool shared by the native kernels, the server and
+    /// the tuner's trials: `available_parallelism - 1` workers (the caller
+    /// is the final lane), created on first use.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            WorkerPool::new(hw.saturating_sub(1))
+        })
+    }
+
+    /// Number of parked worker threads (the caller adds one more lane).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Executes `job(t)` exactly once for every `t` in `0..ntasks` and
+    /// returns when all calls have finished. The caller participates;
+    /// parallelism is `min(ntasks, workers + 1)`. Panics if a job panicked
+    /// (after the generation barrier, so the pool stays usable).
+    ///
+    /// Every generation wakes and barriers on *all* pool workers, even
+    /// when `ntasks` is smaller — a deliberate simplicity/soundness
+    /// trade-off: partial wakeups with condvars cannot distinguish
+    /// spurious wakers, so selective participation would need per-worker
+    /// handshakes. A condvar wake of a parked thread is still an order of
+    /// magnitude cheaper than the OS thread spawn this replaces; revisit
+    /// if profiles show barrier cost on many-core hosts.
+    pub fn run(&self, ntasks: usize, job: &(dyn Fn(usize) + Sync)) {
+        if ntasks == 0 {
+            return;
+        }
+        if self.handles.is_empty() || ntasks == 1 {
+            for t in 0..ntasks {
+                job(t);
+            }
+            return;
+        }
+        let _gate = lock(&self.run_gate);
+        // Safety: the pointee outlives this call, and the generation
+        // barrier below guarantees no worker holds the reference after
+        // `run` returns (each worker re-parks before decrementing would
+        // allow otherwise — the decrement is its last touch).
+        let job_static: &'static Job = unsafe { std::mem::transmute::<&Job, &'static Job>(job) };
+        {
+            let mut ctrl = lock(&self.shared.ctrl);
+            self.shared.claim.store(0, Ordering::Relaxed);
+            ctrl.job = Some(job_static);
+            ctrl.ntasks = ntasks;
+            ctrl.active = self.handles.len();
+            ctrl.panicked = false;
+            ctrl.generation = ctrl.generation.wrapping_add(1);
+            self.shared.work_cv.notify_all();
+        }
+        // The caller is a worker too. Its claim loop is panic-guarded so
+        // the generation barrier below always runs — unwinding past it
+        // would let a straggler worker claim into the *next* call's
+        // counter and dereference a dead job pointer.
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let t = self.shared.claim.fetch_add(1, Ordering::Relaxed);
+            if t >= ntasks {
+                break;
+            }
+            job(t);
+        }));
+        let panicked_on_worker;
+        {
+            let mut ctrl = lock(&self.shared.ctrl);
+            while ctrl.active > 0 {
+                ctrl = self.shared.done_cv.wait(ctrl).unwrap_or_else(|e| e.into_inner());
+            }
+            ctrl.job = None;
+            panicked_on_worker = ctrl.panicked;
+        }
+        if let Err(payload) = caller {
+            std::panic::resume_unwind(payload);
+        }
+        if panicked_on_worker {
+            panic!("WorkerPool: a job panicked on a pool worker");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    /// Signals shutdown and joins every worker — no threads outlive the
+    /// pool.
+    fn drop(&mut self) {
+        {
+            let mut ctrl = lock(&self.shared.ctrl);
+            ctrl.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let (job, ntasks) = {
+            let mut ctrl = lock(&shared.ctrl);
+            loop {
+                if ctrl.shutdown {
+                    return;
+                }
+                if ctrl.generation != seen {
+                    break;
+                }
+                ctrl = shared.work_cv.wait(ctrl).unwrap_or_else(|e| e.into_inner());
+            }
+            seen = ctrl.generation;
+            (ctrl.job.expect("generation bumped without a job"), ctrl.ntasks)
+        };
+        // Claim-loop; a panicking job is contained so the barrier still
+        // completes and the pool survives for the next call.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let t = shared.claim.fetch_add(1, Ordering::Relaxed);
+            if t >= ntasks {
+                break;
+            }
+            job(t);
+        }));
+        let mut ctrl = lock(&shared.ctrl);
+        if outcome.is_err() {
+            ctrl.panicked = true;
+        }
+        ctrl.active -= 1;
+        if ctrl.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Spawn-per-call execution of the same job contract as
+/// [`WorkerPool::run`] — the pre-pool behavior, kept as the ablation
+/// baseline for `bench_server` and as a fallback for callers that must not
+/// share the global pool.
+pub fn run_spawned(ntasks: usize, job: &(dyn Fn(usize) + Sync)) {
+    if ntasks <= 1 {
+        if ntasks == 1 {
+            job(0);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        for t in 1..ntasks {
+            s.spawn(move || job(t));
+        }
+        job(0);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    /// Each task marks its slot; afterwards every slot is marked exactly
+    /// once.
+    fn exact_coverage(pool: &WorkerPool, ntasks: usize) {
+        let hits: Vec<AtomicUsize> = (0..ntasks).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(ntasks, &|t| {
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        });
+        for (t, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {t}");
+        }
+    }
+
+    #[test]
+    fn covers_tasks_above_below_and_at_pool_size() {
+        let pool = WorkerPool::new(3);
+        for ntasks in [0usize, 1, 2, 3, 4, 17, 256] {
+            exact_coverage(&pool, ntasks);
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_serially() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 0);
+        exact_coverage(&pool, 5);
+    }
+
+    #[test]
+    fn consecutive_runs_reuse_the_same_pool() {
+        let pool = WorkerPool::new(4);
+        let sum = |n: u64| {
+            let acc = AtomicU64::new(0);
+            pool.run(64, &|t| {
+                acc.fetch_add(n + t as u64, Ordering::Relaxed);
+            });
+            acc.load(Ordering::Relaxed)
+        };
+        let first = sum(1);
+        let second = sum(1);
+        assert_eq!(first, second, "two consecutive calls must agree");
+        assert_eq!(first, 64 + (0..64).sum::<u64>());
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        // Workers hold the only other strong references to the shared
+        // state; after drop joins them, the weak upgrade must fail.
+        let weak = {
+            let pool = WorkerPool::new(3);
+            exact_coverage(&pool, 9);
+            std::sync::Arc::downgrade(&pool.shared)
+        };
+        assert!(weak.upgrade().is_none(), "worker threads leaked past drop");
+    }
+
+    #[test]
+    fn concurrent_callers_serialize_safely() {
+        let pool = WorkerPool::new(2);
+        let total = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    pool.run(32, &|t| {
+                        total.fetch_add(t as u64, Ordering::Relaxed);
+                    });
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * (0..32).sum::<u64>());
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job() {
+        let pool = WorkerPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, &|t| {
+                if t == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the caller");
+        // The pool must still work.
+        exact_coverage(&pool, 8);
+    }
+
+    #[test]
+    fn run_spawned_matches_contract() {
+        let hits: Vec<AtomicUsize> = (0..13).map(|_| AtomicUsize::new(0)).collect();
+        run_spawned(13, &|t| {
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+        run_spawned(0, &|_| panic!("no tasks, no calls"));
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton() {
+        assert!(std::ptr::eq(WorkerPool::global(), WorkerPool::global()));
+    }
+}

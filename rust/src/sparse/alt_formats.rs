@@ -197,6 +197,12 @@ impl Hyb {
         Hyb { ell, coo: tail }
     }
 
+    /// Bytes of the hybrid representation: the padded ELL part plus
+    /// 16 bytes per overflow entry (8-byte value + two 4-byte indices).
+    pub fn storage_bytes(&self) -> usize {
+        self.ell.storage_bytes() + self.coo.nnz() * 16
+    }
+
     /// Fraction of nonzeros held in the regular (ELL) part.
     pub fn regular_fraction(&self, nnz: usize) -> f64 {
         if nnz == 0 {

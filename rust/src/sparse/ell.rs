@@ -58,6 +58,12 @@ impl Ell {
         self.nrows * self.width
     }
 
+    /// Bytes of the padded representation: 8-byte value + 4-byte column id
+    /// per stored slot, padding included.
+    pub fn storage_bytes(&self) -> usize {
+        self.padded_len() * 12
+    }
+
     /// Fraction of slots that are real nonzeros — the ELL analog of the
     /// paper's block-density argument in §4.5.
     pub fn fill_ratio(&self, nnz: usize) -> f64 {

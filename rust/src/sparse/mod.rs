@@ -17,6 +17,7 @@ pub mod gen;
 pub mod mm_io;
 pub mod ordering;
 pub mod partition;
+pub mod sell;
 pub mod stats;
 
 pub use alt_formats::{Dia, Hyb, Jds};
@@ -26,6 +27,7 @@ pub use coo::Coo;
 pub use csc::Csc;
 pub use csr::Csr;
 pub use ell::Ell;
+pub use sell::Sell;
 pub use stats::MatrixStats;
 
 /// Number of 8-byte doubles per 64-byte cacheline — the granularity the

@@ -1,0 +1,312 @@
+//! SELL-C-σ — sliced ELLPACK with σ-window row sorting (Kreutzer et al.,
+//! arXiv:1307.6209), the CV-robust middle ground between CSR and ELL.
+//!
+//! ELL pads every row to the global maximum, so one hub row blows up the
+//! whole matrix; CSR keeps rows tight but defeats wide SIMD. SELL-C-σ
+//! splits the difference: rows are sorted by length *only within windows
+//! of σ rows* (bounding how far a row can travel from its original
+//! position), the sorted rows are sliced into chunks of C, and each chunk
+//! is padded to its own local maximum and stored column-major — one
+//! vector lane per row, exactly the layout a 512-bit gather streams.
+//! Padding cost is per-chunk instead of global, so a single heavy row
+//! inflates at most its own chunk.
+
+use super::Csr;
+
+/// A sparse matrix in SELL-C-σ layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sell {
+    /// Logical number of rows.
+    pub nrows: usize,
+    /// Logical number of columns.
+    pub ncols: usize,
+    /// Chunk height C (rows per slice; the SIMD lane count).
+    pub chunk: usize,
+    /// Sorting window σ (rows are length-sorted only within windows).
+    pub sigma: usize,
+    /// Row permutation: `perm[k]` = original row stored at sorted slot `k`.
+    pub perm: Vec<u32>,
+    /// Per-chunk start offsets into `vals`/`cids`, length `nchunks + 1`.
+    /// Chunk `ch` holds `(ptr[ch+1] - ptr[ch]) / chunk` padded columns.
+    pub chunk_ptrs: Vec<usize>,
+    /// Column ids, column-major within each chunk; padding slots hold 0.
+    pub cids: Vec<u32>,
+    /// Values, column-major within each chunk; padding slots hold 0.0.
+    pub vals: Vec<f64>,
+}
+
+impl Sell {
+    /// Converts a CSR matrix into SELL-C-σ layout.
+    ///
+    /// Rows are sorted by decreasing length within each σ-window (stable,
+    /// so equal-length rows keep their relative order and the conversion
+    /// is deterministic), then sliced into chunks of `chunk` rows; each
+    /// chunk is padded to its local maximum width. `chunk` and `sigma`
+    /// are clamped to ≥ 1; `sigma = 1` disables sorting, `sigma ≥ nrows`
+    /// sorts globally (JDS-like).
+    pub fn from_csr(a: &Csr, chunk: usize, sigma: usize) -> Sell {
+        let c = chunk.max(1);
+        let sigma = sigma.max(1);
+        let mut perm: Vec<u32> = (0..a.nrows as u32).collect();
+        let mut w = 0;
+        while w < a.nrows {
+            let hi = (w + sigma).min(a.nrows);
+            perm[w..hi].sort_by_key(|&i| std::cmp::Reverse(a.row_nnz(i as usize)));
+            w = hi;
+        }
+        let nchunks = a.nrows.div_ceil(c);
+        let mut chunk_ptrs = vec![0usize; nchunks + 1];
+        let mut cids: Vec<u32> = Vec::new();
+        let mut vals: Vec<f64> = Vec::new();
+        for ch in 0..nchunks {
+            let lo = ch * c;
+            let hi = (lo + c).min(a.nrows);
+            let width = perm[lo..hi].iter().map(|&i| a.row_nnz(i as usize)).max().unwrap_or(0);
+            let base = cids.len();
+            // The final chunk stores full C lanes too; lanes beyond nrows
+            // are pure padding, so the kernel never branches on chunk size.
+            cids.resize(base + width * c, 0);
+            vals.resize(base + width * c, 0.0);
+            for (lane, &row) in perm[lo..hi].iter().enumerate() {
+                let r = row as usize;
+                for (j, (&col, &v)) in a.row_cids(r).iter().zip(a.row_vals(r)).enumerate() {
+                    cids[base + j * c + lane] = col;
+                    vals[base + j * c + lane] = v;
+                }
+            }
+            chunk_ptrs[ch + 1] = cids.len();
+        }
+        Sell { nrows: a.nrows, ncols: a.ncols, chunk: c, sigma, perm, chunk_ptrs, cids, vals }
+    }
+
+    /// Number of chunks.
+    pub fn nchunks(&self) -> usize {
+        self.chunk_ptrs.len() - 1
+    }
+
+    /// Padded width (columns) of chunk `ch`.
+    pub fn chunk_width(&self, ch: usize) -> usize {
+        (self.chunk_ptrs[ch + 1] - self.chunk_ptrs[ch]) / self.chunk
+    }
+
+    /// Total stored slots including padding.
+    pub fn padded_len(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Fraction of stored slots that are real nonzeros.
+    pub fn fill_ratio(&self, nnz: usize) -> f64 {
+        if self.padded_len() == 0 { 0.0 } else { nnz as f64 / self.padded_len() as f64 }
+    }
+
+    /// Bytes of the SELL representation: 12 per stored slot (8-byte value +
+    /// 4-byte column id), plus the row permutation and chunk pointers.
+    pub fn storage_bytes(&self) -> usize {
+        self.padded_len() * 12 + 4 * self.perm.len() + 8 * self.chunk_ptrs.len()
+    }
+
+    /// Padded slot count SELL-C-σ *would* store for `a`, computed from row
+    /// lengths alone (same σ-window sort and per-chunk maxima as
+    /// [`Sell::from_csr`]) — the tuner's pruning heuristic, O(nnz + n log σ)
+    /// without materializing the payload.
+    pub fn padded_len_for(a: &Csr, chunk: usize, sigma: usize) -> usize {
+        let c = chunk.max(1);
+        let sigma = sigma.max(1);
+        let mut lens: Vec<usize> = (0..a.nrows).map(|i| a.row_nnz(i)).collect();
+        let mut w = 0;
+        while w < a.nrows {
+            let hi = (w + sigma).min(a.nrows);
+            lens[w..hi].sort_unstable_by_key(|&l| std::cmp::Reverse(l));
+            w = hi;
+        }
+        let mut slots = 0usize;
+        let mut lo = 0usize;
+        while lo < a.nrows {
+            let hi = (lo + c).min(a.nrows);
+            slots += lens[lo..hi].iter().max().copied().unwrap_or(0) * c;
+            lo = hi;
+        }
+        slots
+    }
+
+    /// Serial reference SpMV: `y ← Ax` in original row order.
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        let c = self.chunk;
+        let mut acc = vec![0.0f64; c];
+        for ch in 0..self.nchunks() {
+            let lo = ch * c;
+            let lanes = self.nrows.min(lo + c) - lo;
+            let base = self.chunk_ptrs[ch];
+            let width = self.chunk_width(ch);
+            acc.iter_mut().for_each(|v| *v = 0.0);
+            for j in 0..width {
+                let slot = base + j * c;
+                for lane in 0..c {
+                    acc[lane] += self.vals[slot + lane] * x[self.cids[slot + lane] as usize];
+                }
+            }
+            for lane in 0..lanes {
+                y[self.perm[lo + lane] as usize] = acc[lane];
+            }
+        }
+        y
+    }
+
+    /// Recovers the CSR matrix.
+    ///
+    /// Same documented lossy corner as [`super::Ell::to_csr`]: each lane's
+    /// entries are contiguous with a `(0, 0.0)` padding suffix, recovered
+    /// by trimming the trailing run of zero-at-column-0 slots; an explicit
+    /// zero stored at column 0 as a row's last entry would be trimmed too.
+    pub fn to_csr(&self) -> Csr {
+        let mut coo = super::Coo::new(self.nrows, self.ncols);
+        let c = self.chunk;
+        for ch in 0..self.nchunks() {
+            let lo = ch * c;
+            let lanes = self.nrows.min(lo + c) - lo;
+            let base = self.chunk_ptrs[ch];
+            let width = self.chunk_width(ch);
+            for lane in 0..lanes {
+                let row = self.perm[lo + lane] as usize;
+                let mut len = width;
+                while len > 0
+                    && self.vals[base + (len - 1) * c + lane] == 0.0
+                    && self.cids[base + (len - 1) * c + lane] == 0
+                {
+                    len -= 1;
+                }
+                for j in 0..len {
+                    coo.push(
+                        row,
+                        self.cids[base + j * c + lane] as usize,
+                        self.vals[base + j * c + lane],
+                    );
+                }
+            }
+        }
+        coo.to_csr()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::powerlaw::{powerlaw, PowerLawSpec};
+    use crate::sparse::gen::{random_vector, randomize_values};
+    use crate::sparse::gen::stencil::stencil_2d;
+    use crate::sparse::Coo;
+
+    fn stencil() -> Csr {
+        let mut a = stencil_2d(20, 23);
+        randomize_values(&mut a, 41);
+        a
+    }
+
+    fn web() -> Csr {
+        powerlaw(&PowerLawSpec {
+            n: 700,
+            nnz: 4200,
+            row_alpha: 1.6,
+            col_alpha: 1.4,
+            max_row: 90,
+            seed: 17,
+        })
+    }
+
+    fn assert_close(a: &[f64], b: &[f64]) {
+        assert_eq!(a.len(), b.len());
+        for (u, v) in a.iter().zip(b) {
+            assert!((u - v).abs() < 1e-10, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn spmv_matches_csr_many_configs() {
+        for a in [stencil(), web()] {
+            let x = random_vector(a.ncols, 5);
+            let want = a.spmv(&x);
+            for (c, sigma) in [(1usize, 1usize), (2, 4), (8, 64), (8, 100_000), (32, 256), (7, 13)]
+            {
+                let s = Sell::from_csr(&a, c, sigma);
+                assert_close(&s.spmv(&x), &want);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_many_configs() {
+        for a in [stencil(), web()] {
+            for (c, sigma) in [(1usize, 1usize), (4, 16), (8, 64), (8, 100_000)] {
+                assert_eq!(Sell::from_csr(&a, c, sigma).to_csr(), a, "C={c} σ={sigma}");
+            }
+        }
+    }
+
+    #[test]
+    fn sigma_sorting_reduces_padding_on_skewed_rows() {
+        let a = web();
+        let unsorted = Sell::from_csr(&a, 8, 1);
+        let sorted = Sell::from_csr(&a, 8, 256);
+        assert!(
+            sorted.padded_len() < unsorted.padded_len(),
+            "σ-sorting must shrink padding: {} vs {}",
+            sorted.padded_len(),
+            unsorted.padded_len()
+        );
+        // And SELL never pads more than ELL (global width) at the same data.
+        let ell = crate::sparse::Ell::from_csr(&a, 0);
+        assert!(sorted.padded_len() <= ell.padded_len());
+    }
+
+    #[test]
+    fn analytic_padding_matches_real_conversion() {
+        for a in [stencil(), web()] {
+            for (c, sigma) in [(1usize, 1usize), (2, 4), (8, 64), (8, 100_000), (32, 256)] {
+                let s = Sell::from_csr(&a, c, sigma);
+                assert_eq!(Sell::padded_len_for(&a, c, sigma), s.padded_len(), "C={c} σ={sigma}");
+            }
+        }
+    }
+
+    #[test]
+    fn perm_is_a_bijection_bounded_by_sigma() {
+        let a = web();
+        let sigma = 32;
+        let s = Sell::from_csr(&a, 8, sigma);
+        let mut seen = vec![false; a.nrows];
+        for (k, &row) in s.perm.iter().enumerate() {
+            assert!(!seen[row as usize], "duplicate row {row}");
+            seen[row as usize] = true;
+            // A row never leaves its σ-window.
+            assert_eq!(k / sigma, row as usize / sigma, "row {row} escaped its window");
+        }
+        assert!(seen.into_iter().all(|b| b));
+    }
+
+    #[test]
+    fn empty_rows_and_ragged_tail() {
+        // 11 rows (not a multiple of C=4), some empty.
+        let mut coo = Coo::new(11, 11);
+        for i in (0..11).step_by(3) {
+            coo.push(i, i, 1.0 + i as f64);
+            coo.push(i, (i + 5) % 11, -0.5);
+        }
+        let a = coo.to_csr();
+        let s = Sell::from_csr(&a, 4, 8);
+        assert_eq!(s.nchunks(), 3);
+        let x = random_vector(11, 9);
+        assert_close(&s.spmv(&x), &a.spmv(&x));
+        assert_eq!(s.to_csr(), a);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let a = stencil();
+        let s = Sell::from_csr(&a, 8, 64);
+        assert!(s.fill_ratio(a.nnz()) > 0.0 && s.fill_ratio(a.nnz()) <= 1.0);
+        assert!(s.storage_bytes() >= s.padded_len() * 12);
+        assert!(s.padded_len() >= a.nnz());
+    }
+}

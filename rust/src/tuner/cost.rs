@@ -83,6 +83,17 @@ impl CostModel {
                 w
             }
             Format::Bcsr { r, c } => bcsr_profile(a, &Bcsr::from_csr(a, r, c), 61),
+            Format::Sell { c, sigma } => {
+                // Same padding-scaling shape as ELL, but with SELL's much
+                // smaller per-chunk padded size, computed analytically
+                // (identical arithmetic to `Sell::from_csr`).
+                let padded = crate::sparse::Sell::padded_len_for(a, c, sigma) as f64;
+                let pad = padded / nnz.max(1.0);
+                let mut w = *base;
+                w.instructions = base.instructions * pad;
+                w.stream_read_bytes = 12.0 * padded;
+                w
+            }
             Format::Hyb { width } => {
                 // The overflow split happens at the raw width, but the
                 // stored ELL part is lane-rounded exactly like the real
@@ -158,6 +169,25 @@ mod tests {
         let csr = m.predict(&a, cand(Format::Csr, 8));
         let ell = m.predict(&a, cand(Format::Ell, 8));
         assert!(ell > csr, "ELL {ell} must lose to CSR {csr} under heavy padding");
+    }
+
+    #[test]
+    fn sell_predicted_no_worse_than_ell_and_finite() {
+        // SELL's padding is per-chunk, so on skewed rows it must never be
+        // ranked behind ELL's global-width padding by the model.
+        let a = powerlaw(&PowerLawSpec {
+            n: 2000,
+            nnz: 10_000,
+            row_alpha: 1.6,
+            col_alpha: 1.4,
+            max_row: 400,
+            seed: 3,
+        });
+        let m = CostModel::new();
+        let ell = m.predict(&a, cand(Format::Ell, 8));
+        let sell = m.predict(&a, cand(Format::Sell { c: 8, sigma: 256 }, 8));
+        assert!(sell.is_finite() && sell > 0.0);
+        assert!(sell <= ell, "SELL {sell} must not lose to ELL {ell} on skewed rows");
     }
 
     #[test]

@@ -1,102 +1,85 @@
-//! Execution of a chosen candidate: one-time format conversion plus the
-//! SpMV dispatch onto the matching native kernel.
+//! Execution of a chosen candidate: one-time format conversion into a
+//! format-erased [`SpmvOp`].
 //!
 //! Conversion is the expensive half of trying a candidate, so the payload
-//! ([`PreparedFormat`]) is independent of schedule and thread count — the
-//! trialer converts each distinct format once and sweeps schedules over it.
+//! (a `Box<dyn SpmvOp>`) is independent of schedule and thread count — the
+//! trialer converts each distinct format once and sweeps schedules over
+//! it. Dispatch-by-format lives *behind* the trait now: this module only
+//! knows how to construct each format, never how to run it.
 
-use crate::kernels::native::{
-    bcsr_spmv_parallel, ell_spmv_parallel, hyb_spmv_parallel, spmv_parallel,
-};
-use crate::sched::Policy;
-use crate::sparse::{Bcsr, Csr, Ell, Hyb};
+use std::sync::Arc;
+
+use crate::kernels::op::{ExecCtx, SpmvOp};
+use crate::sparse::{Bcsr, Csr, Ell, Hyb, Sell};
 
 use super::space::{Candidate, Format};
 
-/// A matrix converted into one candidate format, ready to execute.
-pub enum PreparedFormat {
-    /// CSR runs straight off the borrowed base matrix.
-    Csr,
-    /// Padded ELLPACK payload.
-    Ell(Ell),
-    /// Register-blocked payload.
-    Bcsr(Bcsr),
-    /// Hybrid ELL + COO payload.
-    Hyb(Hyb),
-}
-
-impl PreparedFormat {
-    /// Converts `a` into `format` (no-op for CSR).
-    pub fn prepare(a: &Csr, format: Format) -> PreparedFormat {
-        match format {
-            Format::Csr => PreparedFormat::Csr,
-            Format::Ell => PreparedFormat::Ell(Ell::from_csr(a, 0)),
-            Format::Bcsr { r, c } => PreparedFormat::Bcsr(Bcsr::from_csr(a, r, c)),
-            Format::Hyb { width } => PreparedFormat::Hyb(Hyb::from_csr(a, width)),
-        }
-    }
-
-    /// Runs one SpMV under the given schedule. `a` must be the matrix this
-    /// payload was prepared from (CSR executes directly on it).
-    pub fn spmv(&self, a: &Csr, x: &[f64], threads: usize, policy: Policy) -> Vec<f64> {
-        match self {
-            PreparedFormat::Csr => spmv_parallel(a, x, threads, policy),
-            PreparedFormat::Ell(e) => ell_spmv_parallel(e, x, threads, policy),
-            PreparedFormat::Bcsr(b) => bcsr_spmv_parallel(b, x, threads, dynamic_chunk(policy)),
-            PreparedFormat::Hyb(h) => hyb_spmv_parallel(h, x, threads, policy),
-        }
-    }
-
-    /// Bytes of the converted representation (CSR reports the base).
-    pub fn storage_bytes(&self, a: &Csr) -> usize {
-        match self {
-            PreparedFormat::Csr => a.storage_bytes(),
-            PreparedFormat::Ell(e) => e.padded_len() * 12,
-            PreparedFormat::Bcsr(b) => b.storage_bytes(),
-            PreparedFormat::Hyb(h) => h.ell.padded_len() * 12 + h.coo.nnz() * 16,
-        }
+/// Converts `a` into `format`'s executable op. CSR runs straight off the
+/// borrowed base matrix (no copy); every other format materializes its
+/// payload.
+pub fn prepare(a: &Csr, format: Format) -> Box<dyn SpmvOp + '_> {
+    match format {
+        Format::Csr => Box::new(a),
+        Format::Ell => Box::new(Ell::from_csr(a, 0)),
+        Format::Bcsr { r, c } => Box::new(Bcsr::from_csr(a, r, c)),
+        Format::Hyb { width } => Box::new(Hyb::from_csr(a, width)),
+        Format::Sell { c, sigma } => Box::new(Sell::from_csr(a, c, sigma)),
     }
 }
 
-/// The dynamic chunk a policy implies for the BCSR block-row queue.
-fn dynamic_chunk(policy: Policy) -> usize {
-    match policy {
-        Policy::StaticChunk(c) | Policy::Dynamic(c) | Policy::Guided(c) => c.max(1),
-        Policy::StaticBlock => 64,
+/// [`prepare`] for owners: CSR shares the `Arc` (still no copy), so the
+/// returned op is `'static` and can cross thread boundaries — the serving
+/// coordinator's constructor.
+pub fn prepare_owned(a: &Arc<Csr>, format: Format) -> Box<dyn SpmvOp> {
+    match format {
+        Format::Csr => Box::new(a.clone()),
+        Format::Ell => Box::new(Ell::from_csr(a, 0)),
+        Format::Bcsr { r, c } => Box::new(Bcsr::from_csr(a, r, c)),
+        Format::Hyb { width } => Box::new(Hyb::from_csr(a, width)),
+        Format::Sell { c, sigma } => Box::new(Sell::from_csr(a, c, sigma)),
     }
 }
 
 /// A matrix bound to one candidate: payload + schedule, the thing the
 /// tuner hands back for repeated execution.
 pub struct Prepared<'a> {
-    /// The base CSR matrix.
-    pub base: &'a Csr,
     /// The candidate this preparation executes.
     pub candidate: Candidate,
-    /// Converted payload.
-    pub payload: PreparedFormat,
+    /// Converted format-erased payload.
+    pub op: Box<dyn SpmvOp + 'a>,
 }
 
 impl<'a> Prepared<'a> {
     /// Converts `a` for `candidate`.
     pub fn new(a: &'a Csr, candidate: Candidate) -> Prepared<'a> {
-        Prepared { base: a, candidate, payload: PreparedFormat::prepare(a, candidate.format) }
+        Prepared { candidate, op: prepare(a, candidate.format) }
+    }
+
+    /// The execution context the candidate implies (pooled workers).
+    pub fn ctx(&self) -> ExecCtx<'static> {
+        ExecCtx::pooled(self.candidate.threads, self.candidate.policy)
     }
 
     /// Runs one SpMV: `y ← Ax` under the candidate's schedule.
     pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
-        self.payload.spmv(self.base, x, self.candidate.threads, self.candidate.policy)
+        self.op.spmv(x, &self.ctx())
+    }
+
+    /// SpMV into a caller-provided buffer (the serving hot path).
+    pub fn spmv_into(&self, x: &[f64], y: &mut [f64]) {
+        self.op.spmv_into(x, y, &self.ctx());
     }
 
     /// Bytes of the converted representation.
     pub fn storage_bytes(&self) -> usize {
-        self.payload.storage_bytes(self.base)
+        self.op.storage_bytes()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sched::Policy;
     use crate::sparse::gen::stencil::stencil_2d;
     use crate::sparse::gen::{random_vector, randomize_values};
 
@@ -117,6 +100,8 @@ mod tests {
             Format::Bcsr { r: 8, c: 1 },
             Format::Bcsr { r: 4, c: 8 },
             Format::Hyb { width: 4 },
+            Format::Sell { c: 8, sigma: 64 },
+            Format::Sell { c: 32, sigma: 1024 },
         ] {
             for policy in [Policy::StaticBlock, Policy::Dynamic(32)] {
                 for threads in [1usize, 4] {
@@ -144,5 +129,34 @@ mod tests {
         );
         assert_eq!(csr.storage_bytes(), a.storage_bytes());
         assert!(ell.storage_bytes() >= a.nnz() * 12, "ELL stores at least the nonzeros");
+        let sell = Prepared::new(
+            &a,
+            Candidate {
+                format: Format::Sell { c: 8, sigma: 256 },
+                policy: Policy::Dynamic(64),
+                threads: 1,
+            },
+        );
+        assert!(
+            sell.storage_bytes() <= ell.storage_bytes() + 4 * a.nrows + 8 * (a.nrows + 1),
+            "SELL must never pad beyond ELL (plus its perm/pointer overhead)"
+        );
+    }
+
+    #[test]
+    fn prepared_owned_is_static_and_shares_csr() {
+        let a = Arc::new(matrix());
+        let x = random_vector(a.ncols, 93);
+        // UFCS: with SpmvOp in scope, `a.spmv(&x)` on an Arc receiver
+        // would probe the blanket trait impl (2 args) before Csr's
+        // inherent method.
+        let want = Csr::spmv(&a, &x);
+        let op = prepare_owned(&a, Format::Csr);
+        assert_eq!(Arc::strong_count(&a), 2, "CSR payload must share, not copy");
+        let handle = std::thread::spawn(move || op.spmv(&x, &ExecCtx::serial()));
+        let got = handle.join().unwrap();
+        for (u, v) in got.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-10);
+        }
     }
 }

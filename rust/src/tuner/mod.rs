@@ -22,34 +22,38 @@
 //!                        TunedConfig ──► [exec] Prepared ──► spmv
 //! ```
 //!
-//! * [`space`] — the candidate space: formats ({CSR, ELL, BCSR r×c,
-//!   HYB}) × [`crate::sched::Policy`] × thread counts, pruned up front by
-//!   [`crate::sparse::MatrixStats`]-driven heuristics (padding blowup
-//!   rules out ELL, block fill rules out BCSR shapes, row-length skew
-//!   rules out static scheduling).
+//! * [`space`] — the candidate space: formats ({CSR, ELL, BCSR r×c, HYB,
+//!   SELL-C-σ}) × [`crate::sched::Policy`] × thread counts, pruned up
+//!   front by [`crate::sparse::MatrixStats`]-driven heuristics (padding
+//!   blowup rules out ELL and SELL shapes, block fill rules out BCSR
+//!   shapes, row-length skew rules out static scheduling).
 //! * [`trial`] — the empirical path: short warmup+measure timings of each
-//!   candidate through the real [`crate::kernels::native`] kernels; each
-//!   distinct format is converted once.
+//!   candidate through the real [`crate::kernels::native`] kernels on the
+//!   persistent [`crate::sched::WorkerPool`] (no thread-spawn noise in the
+//!   timings); each distinct format is converted once.
 //! * [`cost`] — the analytic fallback when trials are disabled: ranks
 //!   candidates with the [`crate::arch::phi`] machine model fed by the
 //!   [`crate::kernels`] work-profile builders.
 //! * [`cache`] — [`TunedConfig`] + [`TuningCache`]: decisions keyed by the
 //!   stats fingerprint, persisted as JSON via [`crate::util::json`].
-//! * [`exec`] — [`Prepared`]: the chosen format materialized with an
-//!   `spmv` entry that dispatches onto the right kernel.
+//! * [`exec`] — [`exec::prepare`]/[`Prepared`]: the chosen format
+//!   materialized as a format-erased [`crate::kernels::SpmvOp`]; nothing
+//!   above this line matches on formats again.
 //!
 //! # Adding a candidate format
 //!
-//! 1. Add a variant to [`space::Format`] (+ `Display`/`parse` arms — the
-//!    cache round-trips through those strings).
-//! 2. Teach [`exec::PreparedFormat`] to convert and execute it (add a
+//! 1. Implement [`crate::kernels::SpmvOp`] for the new payload type (add a
 //!    parallel kernel to `kernels::native` if the format only has a serial
 //!    reference `spmv`).
+//! 2. Add a variant to [`space::Format`] (+ `Display`/`parse` arms — the
+//!    cache round-trips through those strings) and a conversion arm in
+//!    [`exec::prepare`]/[`exec::prepare_owned`].
 //! 3. Give [`space::enumerate`] a pruning heuristic so hopeless matrices
 //!    never trial it, and [`cost::CostModel::rank`] a work profile so the
 //!    model path can rank it.
 //! 4. Extend the `every_format_matches_the_oracle` test in [`exec`] and
-//!    the property test in `rust/tests/tuner_props.rs`.
+//!    the property tests in `rust/tests/op_props.rs` /
+//!    `rust/tests/tuner_props.rs`.
 
 pub mod cache;
 pub mod cost;
@@ -59,7 +63,7 @@ pub mod trial;
 
 pub use cache::{TunedConfig, TuningCache};
 pub use cost::CostModel;
-pub use exec::{Prepared, PreparedFormat};
+pub use exec::{prepare, prepare_owned, Prepared};
 pub use space::{Candidate, Format, SearchSpace, SpaceConfig};
 pub use trial::{TrialResult, Trialer};
 
@@ -106,8 +110,17 @@ fn cache_key(a: &Csr, stats: &MatrixStats, config: &TunerConfig) -> String {
         h = fnv(h, &(r as u64).to_le_bytes());
         h = fnv(h, &(c as u64).to_le_bytes());
     }
-    for bits in [s.ell_max_width_ratio, s.ell_max_cv, s.bcsr_min_density, s.hyb_min_width_ratio]
-    {
+    for &(c, sigma) in &s.sell_shapes {
+        h = fnv(h, &(c as u64).to_le_bytes());
+        h = fnv(h, &(sigma as u64).to_le_bytes());
+    }
+    for bits in [
+        s.ell_max_width_ratio,
+        s.ell_max_cv,
+        s.bcsr_min_density,
+        s.hyb_min_width_ratio,
+        s.sell_max_pad,
+    ] {
         h = fnv(h, &bits.to_bits().to_le_bytes());
     }
     format!("{}-{h:016x}", stats.fingerprint_hex())

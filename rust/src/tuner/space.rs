@@ -12,6 +12,9 @@
 //!   the streamed values are nonzeros at 8×8").
 //! * HYB only earns its split when a heavy tail exists — consider it
 //!   exactly when ELL is hopeless but most rows are short.
+//! * SELL-C-σ pads per chunk, so it survives skew that kills ELL — but a
+//!   shape is still skipped when its analytic padding blowup (σ-window
+//!   sort of the row lengths, per-chunk maxima) exceeds the break-even.
 //! * `static` scheduling is dropped when row lengths are skewed (§4.2:
 //!   dynamic,32/64 wins on irregular instances).
 
@@ -38,6 +41,13 @@ pub enum Format {
         /// ELL width of the regular part.
         width: usize,
     },
+    /// SELL-C-σ: sliced ELLPACK with σ-window row sorting.
+    Sell {
+        /// Chunk height C.
+        c: usize,
+        /// Sorting window σ.
+        sigma: usize,
+    },
 }
 
 impl std::fmt::Display for Format {
@@ -47,6 +57,7 @@ impl std::fmt::Display for Format {
             Format::Ell => write!(f, "ell"),
             Format::Bcsr { r, c } => write!(f, "bcsr{r}x{c}"),
             Format::Hyb { width } => write!(f, "hyb{width}"),
+            Format::Sell { c, sigma } => write!(f, "sell{c}-{sigma}"),
         }
     }
 }
@@ -67,6 +78,13 @@ impl Format {
                         return None;
                     }
                     Some(Format::Bcsr { r, c })
+                } else if let Some(rest) = s.strip_prefix("sell") {
+                    let (c, sigma) = rest.split_once('-')?;
+                    let (c, sigma) = (c.parse().ok()?, sigma.parse().ok()?);
+                    if c == 0 || sigma == 0 {
+                        return None;
+                    }
+                    Some(Format::Sell { c, sigma })
                 } else if let Some(rest) = s.strip_prefix("hyb") {
                     let width: usize = rest.parse().ok()?;
                     if width == 0 {
@@ -101,7 +119,8 @@ pub fn parse_policy(s: &str) -> Option<Policy> {
 pub struct Candidate {
     /// Storage format.
     pub format: Format,
-    /// Scheduling policy (for BCSR only the dynamic chunk applies).
+    /// Scheduling policy (applied over the format's own work units:
+    /// rows for CSR/ELL/HYB, block rows for BCSR, chunks for SELL).
     pub policy: Policy,
     /// Worker thread count.
     pub threads: usize,
@@ -130,6 +149,11 @@ pub struct SpaceConfig {
     pub bcsr_min_density: f64,
     /// Consider HYB once `max_nnz_row / nnz_per_row` exceeds this.
     pub hyb_min_width_ratio: f64,
+    /// SELL-C-σ `(C, σ)` shapes to consider.
+    pub sell_shapes: Vec<(usize, usize)>,
+    /// Skip a SELL shape whose padded/nnz blowup exceeds this (computed
+    /// analytically via [`crate::sparse::Sell::padded_len_for`]).
+    pub sell_max_pad: f64,
 }
 
 impl Default for SpaceConfig {
@@ -153,6 +177,10 @@ impl Default for SpaceConfig {
             ell_max_cv: 1.0,
             bcsr_min_density: 0.5,
             hyb_min_width_ratio: 4.0,
+            // C = 8 matches the 512-bit lane count; C = 32 amortizes the
+            // per-chunk bookkeeping. σ trades padding against locality.
+            sell_shapes: vec![(8, 256), (32, 1024)],
+            sell_max_pad: 1.5,
         }
     }
 }
@@ -170,6 +198,7 @@ impl SpaceConfig {
             threads,
             policies: vec![Policy::StaticBlock, Policy::Dynamic(64)],
             bcsr_blocks: vec![(8, 1)],
+            sell_shapes: vec![(8, 128)],
             ..SpaceConfig::default()
         }
     }
@@ -249,6 +278,19 @@ pub fn enumerate(a: &Csr, stats: &MatrixStats, cfg: &SpaceConfig) -> SearchSpace
             cfg.hyb_min_width_ratio
         ));
     }
+    for &(c, sigma) in &cfg.sell_shapes {
+        // Analytic padding blowup from row lengths alone; an empty matrix
+        // yields 0/0 = NaN, which the comparison prunes.
+        let pad = crate::sparse::Sell::padded_len_for(a, c, sigma) as f64 / stats.nnz as f64;
+        if pad <= cfg.sell_max_pad {
+            formats.push(Format::Sell { c, sigma });
+        } else {
+            pruned.push(format!(
+                "sell{c}-{sigma}: padding blowup {pad:.2} above {:.2}",
+                cfg.sell_max_pad
+            ));
+        }
+    }
 
     let mut policies = cfg.policies.clone();
     if cv > 1.0 {
@@ -270,11 +312,6 @@ pub fn enumerate(a: &Csr, stats: &MatrixStats, cfg: &SpaceConfig) -> SearchSpace
     for &format in &formats {
         let mut serial_seen = false;
         for &policy in &policies {
-            // The BCSR kernel claims block rows from a dynamic queue; other
-            // policies have no meaning for it.
-            if matches!(format, Format::Bcsr { .. }) && !matches!(policy, Policy::Dynamic(_)) {
-                continue;
-            }
             for &t in &threads {
                 // All policies collapse to the same serial loop at t = 1:
                 // keep one serial candidate per format.
@@ -365,6 +402,57 @@ mod tests {
     }
 
     #[test]
+    fn sell_kept_on_uniform_rows_pruned_on_one_giant_hub() {
+        // Near-uniform row lengths: per-chunk padding ≈ 1, SELL stays.
+        let a = stencil_2d(40, 40);
+        let s = space_for(&a);
+        assert!(
+            formats_of(&s).iter().any(|f| matches!(f, Format::Sell { .. })),
+            "uniform rows must keep SELL (pruned: {:?})",
+            s.pruned
+        );
+
+        // One 500-wide hub over an otherwise diagonal matrix: the hub's
+        // chunk alone pads C·500 slots against ~1500 real nonzeros, far
+        // past the blowup threshold for every configured shape.
+        let mut coo = Coo::new(1000, 1000);
+        for i in 0..1000usize {
+            coo.push(i, i, 1.0);
+        }
+        for j in 0..500usize {
+            coo.push(0, (j * 2 + 1) % 1000, 0.5);
+        }
+        let hub = coo.to_csr();
+        let s = space_for(&hub);
+        assert!(
+            !formats_of(&s).iter().any(|f| matches!(f, Format::Sell { .. })),
+            "a lone giant hub must prune SELL"
+        );
+        assert!(s.pruned.iter().any(|p| p.starts_with("sell")));
+    }
+
+    #[test]
+    fn all_formats_get_all_policies() {
+        let a = stencil_2d(40, 40);
+        let stats = MatrixStats::compute("t", &a);
+        // Pin the thread list so the assertion is host-independent.
+        let cfg = SpaceConfig { threads: vec![1, 4], ..SpaceConfig::default() };
+        let s = enumerate(&a, &stats, &cfg);
+        for fmt in formats_of(&s) {
+            let policies: std::collections::HashSet<String> = s
+                .candidates
+                .iter()
+                .filter(|c| c.format == fmt && c.threads > 1)
+                .map(|c| c.policy.to_string())
+                .collect();
+            assert!(
+                policies.len() > 1,
+                "{fmt}: every format schedules under the full policy list, got {policies:?}"
+            );
+        }
+    }
+
+    #[test]
     fn serial_candidates_deduped_per_format() {
         let a = stencil_2d(30, 30);
         let s = space_for(&a);
@@ -385,6 +473,7 @@ mod tests {
             Format::Ell,
             Format::Bcsr { r: 8, c: 1 },
             Format::Hyb { width: 16 },
+            Format::Sell { c: 8, sigma: 256 },
         ] {
             assert_eq!(Format::parse(&f.to_string()), Some(f));
         }
@@ -392,6 +481,9 @@ mod tests {
         assert_eq!(Format::parse("bcsr0x1"), None, "zero block height must be rejected");
         assert_eq!(Format::parse("bcsr8x0"), None, "zero block width must be rejected");
         assert_eq!(Format::parse("hyb0"), None, "zero hyb width must be rejected");
+        assert_eq!(Format::parse("sell0-8"), None, "zero chunk must be rejected");
+        assert_eq!(Format::parse("sell8-0"), None, "zero sigma must be rejected");
+        assert_eq!(Format::parse("sell8"), None, "sell needs both parameters");
         for p in Policy::paper_sweep() {
             assert_eq!(parse_policy(&p.to_string()), Some(p));
         }

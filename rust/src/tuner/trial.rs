@@ -10,10 +10,11 @@
 
 use std::time::Instant;
 
+use crate::kernels::op::{ExecCtx, SpmvOp};
 use crate::sparse::gen::random_vector;
 use crate::sparse::Csr;
 
-use super::exec::PreparedFormat;
+use super::exec::prepare;
 use super::space::{Candidate, Format};
 
 /// Timing of one candidate.
@@ -50,26 +51,32 @@ impl Trialer {
         Trialer { warmup, measure: measure.max(1) }
     }
 
-    /// Times every candidate (formats converted once each).
+    /// Times every candidate (formats converted once each). Kernels run on
+    /// the persistent global [`crate::sched::WorkerPool`], so the timings
+    /// measure steady-state execution, not thread-spawn latency.
     pub fn run_all(&self, a: &Csr, candidates: &[Candidate]) -> Vec<TrialResult> {
         let x = random_vector(a.ncols, 0x7e57_0001);
-        let mut prepared: Vec<(Format, PreparedFormat, f64)> = Vec::new();
+        let mut y = vec![0.0f64; a.nrows];
+        let mut prepared: Vec<(Format, Box<dyn SpmvOp + '_>, f64)> = Vec::new();
         let mut out = Vec::with_capacity(candidates.len());
         for &cand in candidates {
             if !prepared.iter().any(|(f, _, _)| *f == cand.format) {
                 let t0 = Instant::now();
-                let p = PreparedFormat::prepare(a, cand.format);
-                prepared.push((cand.format, p, t0.elapsed().as_secs_f64()));
+                let op = prepare(a, cand.format);
+                prepared.push((cand.format, op, t0.elapsed().as_secs_f64()));
             }
-            let (_, payload, convert_secs) =
+            let (_, op, convert_secs) =
                 prepared.iter().find(|(f, _, _)| *f == cand.format).unwrap();
+            let ctx = ExecCtx::pooled(cand.threads, cand.policy);
             for _ in 0..self.warmup {
-                std::hint::black_box(payload.spmv(a, &x, cand.threads, cand.policy));
+                op.spmv_into(&x, &mut y, &ctx);
+                std::hint::black_box(&mut y);
             }
             let mut best = f64::INFINITY;
             for _ in 0..self.measure.max(1) {
                 let t0 = Instant::now();
-                std::hint::black_box(payload.spmv(a, &x, cand.threads, cand.policy));
+                op.spmv_into(&x, &mut y, &ctx);
+                std::hint::black_box(&mut y);
                 best = best.min(t0.elapsed().as_secs_f64());
             }
             out.push(TrialResult {

@@ -1,0 +1,134 @@
+//! Property tests for the format-erased execution stack: every [`SpmvOp`]
+//! implementation (including SELL-C-σ across several (C, σ) shapes) must
+//! match the serial CSR oracle on arbitrary matrices and on the paper's
+//! generator suite, and the persistent [`WorkerPool`] must be reusable
+//! across calls without leaking threads.
+
+use phi_spmv::kernels::{ExecCtx, SpmvOp};
+use phi_spmv::sched::{Policy, WorkerPool};
+use phi_spmv::sparse::gen::{paper_suite, random_vector, randomize_values};
+use phi_spmv::sparse::{Bcsr, Csr, Ell, Hyb, Sell};
+use phi_spmv::util::prop::{arb, check};
+
+fn assert_close(got: &[f64], want: &[f64], tag: &str) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{tag}: length {} vs {}", got.len(), want.len()));
+    }
+    for (i, (u, v)) in got.iter().zip(want).enumerate() {
+        if (u - v).abs() > 1e-9 * (1.0 + v.abs()) {
+            return Err(format!("{tag}: idx {i}: {u} vs {v}"));
+        }
+    }
+    Ok(())
+}
+
+/// Every format's op for `a`, SELL in several shapes.
+fn all_ops(a: &Csr) -> Vec<Box<dyn SpmvOp + '_>> {
+    vec![
+        Box::new(a),
+        Box::new(Ell::from_csr(a, 0)),
+        Box::new(Bcsr::from_csr(a, 8, 1)),
+        Box::new(Bcsr::from_csr(a, 4, 2)),
+        Box::new(Hyb::from_csr(a, 4)),
+        Box::new(Sell::from_csr(a, 1, 1)),
+        Box::new(Sell::from_csr(a, 4, 16)),
+        Box::new(Sell::from_csr(a, 8, 64)),
+        Box::new(Sell::from_csr(a, 8, 1 << 20)),
+        Box::new(Sell::from_csr(a, 32, 256)),
+    ]
+}
+
+#[test]
+fn every_op_matches_the_serial_oracle_on_random_matrices() {
+    check(
+        "op-oracle",
+        |rng| {
+            let a = arb::csr(rng, 120, 10);
+            let x = arb::vector(rng, a.ncols);
+            (a, x)
+        },
+        |(a, x)| {
+            // UFCS: with SpmvOp imported, the blanket `impl SpmvOp for &T`
+            // would shadow the inherent one-argument `Csr::spmv` on the
+            // `&Csr` receiver during method probing.
+            let want = Csr::spmv(a, x);
+            for op in all_ops(a) {
+                for ctx in [
+                    ExecCtx::serial(),
+                    ExecCtx::pooled(4, Policy::Dynamic(16)),
+                    ExecCtx::pooled(3, Policy::StaticBlock),
+                ] {
+                    assert_close(&op.spmv(x, &ctx), &want, &op.format_name())?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn every_op_spmm_matches_the_serial_oracle() {
+    check(
+        "op-spmm-oracle",
+        |rng| {
+            let a = arb::csr(rng, 80, 8);
+            let k = 1 + rng.usize_below(6);
+            let x = arb::vector(rng, a.ncols * k);
+            (a, k, x)
+        },
+        |(a, k, x)| {
+            let want = Csr::spmm(a, x, *k);
+            let ctx = ExecCtx::pooled(4, Policy::Dynamic(32));
+            for op in all_ops(a) {
+                let got = op.spmm(x, *k, &ctx);
+                assert_close(&got, &want, &format!("{} k={k}", op.format_name()))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sell_matches_oracle_across_the_generator_suite() {
+    // Representative pattern classes: quad mesh, scattered circuit,
+    // power-law web graph, FEM, 2D stencil (same picks as bench_autotune).
+    let suite = paper_suite();
+    for idx in [0usize, 2, 7, 11, 19] {
+        let entry = &suite[idx];
+        let mut a = entry.generate_scaled(0.02);
+        randomize_values(&mut a, entry.id as u64);
+        let x = random_vector(a.ncols, 1234 + idx as u64);
+        let want = a.spmv(&x);
+        for (c, sigma) in [(4usize, 32usize), (8, 256), (32, 1024)] {
+            let s = Sell::from_csr(&a, c, sigma);
+            let got = s.spmv(&x); // serial reference
+            assert_close(&got, &want, &format!("{} sell{c}-{sigma} serial", entry.name)).unwrap();
+            let op: Box<dyn SpmvOp> = Box::new(s);
+            let par = op.spmv(&x, &ExecCtx::pooled(4, Policy::Dynamic(16)));
+            assert_close(&par, &want, &format!("{} sell{c}-{sigma} par", entry.name)).unwrap();
+        }
+    }
+}
+
+#[test]
+fn worker_pool_reuse_two_calls_identical_results() {
+    let suite = paper_suite();
+    let mut a = suite[19].generate_scaled(0.02);
+    randomize_values(&mut a, 7);
+    let x = random_vector(a.ncols, 77);
+    let want = a.spmv(&x);
+
+    let pool = WorkerPool::new(3);
+    let ctx = ExecCtx::on_pool(&pool, 4, Policy::Dynamic(32));
+    let first = (&a as &dyn SpmvOp).spmv(&x, &ctx);
+    let second = (&a as &dyn SpmvOp).spmv(&x, &ctx);
+    assert_eq!(first, second, "consecutive calls on one pool must agree bit-for-bit");
+    assert_close(&first, &want, "pooled").unwrap();
+
+    // Dropping the pool joins its workers; a fresh pool must be unaffected
+    // by the previous one's lifetime.
+    drop(pool);
+    let pool2 = WorkerPool::new(2);
+    let third = (&a as &dyn SpmvOp).spmv(&x, &ExecCtx::on_pool(&pool2, 4, Policy::Dynamic(32)));
+    assert_eq!(first, third);
+}

@@ -94,10 +94,14 @@ fn tuning_cache_roundtrips_deterministically_through_json() {
             let n = 1 + rng.usize_below(8);
             let mut cache = TuningCache::in_memory();
             for _ in 0..n {
-                let format = match rng.usize_below(4) {
+                let format = match rng.usize_below(5) {
                     0 => Format::Csr,
                     1 => Format::Ell,
                     2 => Format::Bcsr { r: 1 + rng.usize_below(8), c: 1 + rng.usize_below(8) },
+                    3 => Format::Sell {
+                        c: 1 + rng.usize_below(32),
+                        sigma: 1 + rng.usize_below(1024),
+                    },
                     _ => Format::Hyb { width: 1 + rng.usize_below(32) },
                 };
                 let policy = match rng.usize_below(4) {
