@@ -9,17 +9,23 @@
 //! A Poisson stream of recommendation requests hits the batching
 //! coordinator, which fuses up to 16 of them into one SpMM. Reports
 //! throughput, mean batch size, P50/P95/P99 latency, and the storage
-//! format the batches actually executed in — then repeats with batching
-//! disabled (max_batch = 1) to show the SpMM batching win, and once more
-//! under the auto-tuner's decision (which the server now executes for
-//! real instead of silently serving CSR).
+//! format + workload each path actually executed — then repeats with
+//! batching disabled (max_batch = 1) to show the SpMM batching win, and
+//! once more under the auto-tuner's *pair* of decisions: one tuned for
+//! SpMV (lone requests) and one tuned for SpMM at the batch width (fused
+//! batches). At shutdown the measured batch-path throughput is compared
+//! against the cached SpMM decision's recorded GFlop/s and the entry is
+//! invalidated if it drifted — the online re-tuning hook.
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
-use phi_spmv::coordinator::server::{percentile, ServerConfig, SpmvServer};
+use phi_spmv::coordinator::server::{percentile, PathSpec, ServerConfig, ServerStats, SpmvServer};
+use phi_spmv::kernels::Workload;
 use phi_spmv::sparse::gen::powerlaw::{powerlaw, PowerLawSpec};
 use phi_spmv::sparse::gen::{randomize_values, Rng};
+use phi_spmv::tuner::{Tuner, TunerConfig, TuningCache};
 use phi_spmv::util::cli::Args;
 
 fn run(
@@ -28,7 +34,7 @@ fn run(
     cfg: ServerConfig,
     requests: usize,
     rate_hz: f64,
-) -> anyhow::Result<()> {
+) -> anyhow::Result<ServerStats> {
     let server = SpmvServer::start(a.clone(), cfg);
     let client = server.client();
     let mut rng = Rng::new(4242);
@@ -57,22 +63,26 @@ fn run(
     let stats = server.shutdown();
     println!(
         "{label:<14} {requests} reqs in {wall:.2}s = {:.0} req/s | mean batch {:.2} | \
-         P50 {:.2} ms  P95 {:.2} ms  P99 {:.2} ms | kernel {:.2} GFlop/s | format {}",
+         P50 {:.2} ms  P95 {:.2} ms  P99 {:.2} ms | spmv {:.2} GF [{}] | spmm {:.2} GF [{} {}]",
         requests as f64 / wall,
         batch_sum as f64 / requests as f64,
         percentile(&latencies, 0.50).as_secs_f64() * 1e3,
         percentile(&latencies, 0.95).as_secs_f64() * 1e3,
         percentile(&latencies, 0.99).as_secs_f64() * 1e3,
-        stats.flops / stats.compute_s.max(1e-9) / 1e9,
-        stats.format,
+        stats.spmv.gflops(),
+        stats.spmv.format,
+        stats.spmm.gflops(),
+        stats.spmm.format,
+        stats.spmm.workload,
     );
-    Ok(())
+    Ok(stats)
 }
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let requests = args.get("requests", 400usize);
     let rate = args.get("rate", 2000.0f64);
+    let cache_path = args.get_str("cache").unwrap_or("serving_cache.json").to_string();
     let threads = std::thread::available_parallelism()?.get();
 
     let mut a = powerlaw(&PowerLawSpec {
@@ -91,13 +101,14 @@ fn main() -> anyhow::Result<()> {
         a.nnz()
     );
 
+    let with_threads = PathSpec { threads, ..PathSpec::default() };
     run(
         "batched k≤16",
         &a,
         ServerConfig {
             max_batch: 16,
             max_wait: Duration::from_millis(2),
-            threads,
+            spmv: with_threads.clone(),
             ..ServerConfig::default()
         },
         requests,
@@ -106,18 +117,79 @@ fn main() -> anyhow::Result<()> {
     run(
         "unbatched",
         &a,
-        ServerConfig { max_batch: 1, max_wait: Duration::ZERO, threads, ..ServerConfig::default() },
+        ServerConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            spmv: with_threads,
+            ..ServerConfig::default()
+        },
         requests,
         rate,
     )?;
 
-    // The auto-tuned server: whatever (format, schedule, threads) the
-    // tuner picks is what the serve loop executes — the printed `format`
-    // column is read back from ServerStats, not from the decision.
-    let mut tuner = phi_spmv::tuner::Tuner::in_memory();
-    let decision = tuner.tune("recsys-items", &a)?;
-    println!("tuner decision: {decision}");
-    run("tuned", &a, ServerConfig::tuned(&decision), requests, rate)?;
+    // The auto-tuned server, one decision per workload: lone requests run
+    // the SpMV decision, fused batches the SpMM decision tuned at the
+    // serving batch width — what each path executes (format *and*
+    // workload) is read back from ServerStats, not from the decisions.
+    // The cache is persistent, so a drift invalidation below really does
+    // make the next boot re-tune.
+    let mut tuner =
+        Tuner::new(TunerConfig::default(), TuningCache::load(Path::new(&cache_path))?);
+    let spmv_decision = tuner.tune("recsys-items", &a)?;
+    let spmm_decision = tuner.tune_workload("recsys-items", &a, Workload::Spmm { k: 16 })?;
+    println!("tuner decision (spmv): {spmv_decision}");
+    println!("tuner decision (spmm): {spmm_decision}");
+    let stats = run(
+        "tuned pair",
+        &a,
+        ServerConfig::tuned_pair(&spmv_decision, &spmm_decision),
+        requests,
+        rate,
+    )?;
+
+    // Online re-tuning hook: compare what the batch path measured against
+    // what the cached decision promised; a drifted entry is dropped so the
+    // next boot re-tunes under current conditions. The promised figure was
+    // trialed at exactly k = 16, and fused throughput falls with narrower
+    // batches, so the comparison only runs when the serving batches came
+    // close to the tuned width — otherwise a lightly-loaded server would
+    // invalidate a perfectly good decision on every shutdown.
+    let measured = stats.spmm.gflops();
+    let mean_fused = if stats.spmm.batches == 0 {
+        0.0
+    } else {
+        stats.spmm.served as f64 / stats.spmm.batches as f64
+    };
+    // The gate is deliberately strict (3/4 of the tuned width): the
+    // promised figure is a *min-of-iterations* trial at full k, while the
+    // measurement is a serving *average* over mixed widths — comparing
+    // from too far below full width would invalidate healthy entries.
+    let tuned_k = spmm_decision.workload.k();
+    if mean_fused < tuned_k as f64 * 0.75 {
+        println!(
+            "drift check skipped: mean fused batch {mean_fused:.1} is too narrow to \
+             compare against the k={tuned_k} trial figure ({:.2} GFlop/s)",
+            spmm_decision.gflops
+        );
+    } else {
+        // The key is rebuilt from the decision's own workload, so the
+        // tune call and the drift check cannot desynchronize.
+        let key = tuner.key("recsys-items", &a, spmm_decision.workload);
+        if tuner.cache.invalidate_if_drifted(&key, measured, 0.5) {
+            tuner.cache.save()?;
+            println!(
+                "drift: batch path measured {measured:.2} GFlop/s vs promised {:.2} — \
+                 entry dropped from {cache_path}, next boot re-tunes",
+                spmm_decision.gflops
+            );
+        } else {
+            println!(
+                "no drift: batch path measured {measured:.2} GFlop/s against promised {:.2} \
+                 (tolerance 50%, mean fused batch {mean_fused:.1})",
+                spmm_decision.gflops
+            );
+        }
+    }
     println!("serving OK");
     Ok(())
 }

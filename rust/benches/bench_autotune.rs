@@ -53,10 +53,13 @@ fn main() {
         let tuned = bencher.run("tuned", || prepared.spmv(&x));
 
         // Sweep the whole candidate space once more to locate the
-        // best/worst envelope the search chose from.
+        // best/worst envelope the search chose from. The envelope must
+        // fully time every candidate, so the early-termination budget is
+        // disabled (an infinite margin also preserves the given order).
         let stats = MatrixStats::compute(entry.name, &a);
         let space = enumerate(&a, &stats, &SpaceConfig::default());
-        let results = Trialer::default().run_all(&a, &space.candidates);
+        let results =
+            Trialer::default().with_margin(f64::INFINITY).run_all(&a, &space.candidates);
         let best = results.iter().map(|r| r.gflops).fold(0.0f64, f64::max);
         let worst = results.iter().map(|r| r.gflops).fold(f64::INFINITY, f64::min);
 

@@ -19,7 +19,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use phi_spmv::coordinator::server::{percentile, ServerConfig, SpmvServer};
+use phi_spmv::coordinator::server::{percentile, PathSpec, ServerConfig, SpmvServer};
 use phi_spmv::sparse::gen::powerlaw::{powerlaw, PowerLawSpec};
 use phi_spmv::sparse::gen::{random_vector, randomize_values};
 use phi_spmv::sparse::Csr;
@@ -100,12 +100,13 @@ fn main() {
     let mut modes = Json::obj();
     let mut results = Vec::new();
     for (label, pooled) in [("pooled", true), ("spawn_per_call", false)] {
+        let spmv = PathSpec { threads, ..PathSpec::default() };
         let batch1 = run_phase(
             &a,
             ServerConfig {
                 max_batch: 1,
                 max_wait: Duration::ZERO,
-                threads,
+                spmv: spmv.clone(),
                 pooled,
                 ..ServerConfig::default()
             },
@@ -117,7 +118,7 @@ fn main() {
             ServerConfig {
                 max_batch: 16,
                 max_wait: Duration::from_millis(2),
-                threads,
+                spmv,
                 pooled,
                 ..ServerConfig::default()
             },

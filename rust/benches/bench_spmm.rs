@@ -1,18 +1,27 @@
-//! SpMM benchmarks (paper §5, Fig. 9).
+//! SpMM benchmarks (paper §5, Fig. 9): fused kernels vs the k-pass
+//! fallback, per format × batch width, plus the workload-aware tuner.
 //!
-//! Measured: native SpMM across k ∈ {1, 4, 8, 16, 32} showing the
-//! flop:byte-driven throughput growth (the paper's core §5 argument), and
-//! a policy sweep at k=16. Modeled: the KNC Fig. 9 variant triple.
+//! Measured: every format's fused `spmm_into` against the gather/SpMV/
+//! scatter fallback (`spmm_via_spmv`) across k ∈ {1, 4, 16, 32} on three
+//! generator-suite classes — the payoff measurement for the fused SpMM
+//! kernels (the matrix is read once per k vectors instead of k times).
+//! Also records the tuner's SpMV and SpMM decisions for one matrix to
+//! show the workload dimension selecting differently. Modeled: the KNC
+//! Fig. 9 variant triple.
 //!
-//! `cargo bench --bench bench_spmm [-- --scale 0.05]`
+//! `cargo bench --bench bench_spmm [-- --scale 0.05]` writes
+//! `BENCH_spmm.json` with GFlop/s per (matrix × format × k), the
+//! fused:fallback ratio, and both tuner decisions.
 
 use phi_spmv::arch::PhiMachine;
 use phi_spmv::kernels::spmm_model::{spmm_profile, SpmmAnalysis, SpmmVariant};
-use phi_spmv::kernels::{spmm_parallel, spmv_parallel};
+use phi_spmv::kernels::{spmm_via_spmv, ExecCtx, SpmvOp, Workload};
 use phi_spmv::sched::Policy;
 use phi_spmv::sparse::gen::{paper_suite, random_vector, randomize_values};
+use phi_spmv::tuner::{exec::prepare, Format, Tuner, TunerConfig, TuningCache};
 use phi_spmv::util::bench::Bencher;
 use phi_spmv::util::cli::Args;
+use phi_spmv::util::json::Json;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
@@ -20,32 +29,85 @@ fn main() {
     let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     let bencher = Bencher::quick();
     let suite = paper_suite();
+    let ctx = ExecCtx::pooled(threads, Policy::Dynamic(64));
 
-    // pwtk — the paper's SpMM peak instance.
-    let e = &suite[11];
-    let mut a = e.generate_scaled(scale);
-    randomize_values(&mut a, 12);
+    let formats = [
+        Format::Csr,
+        Format::Ell,
+        Format::Hyb { width: 8 },
+        Format::Sell { c: 8, sigma: 256 },
+        Format::Bcsr { r: 4, c: 2 },
+    ];
+    let ks = [1usize, 4, 16, 32];
 
-    println!("== measured: native SpMM on {} ({} nnz), {threads} threads ==", e.name, a.nnz());
-    let x1 = random_vector(a.ncols, 4);
-    let m1 = bencher.run("spmv (k=1 baseline)", || {
-        spmv_parallel(&a, &x1, threads, Policy::Dynamic(64))
-    });
-    println!("{}  {:.3} GFlop/s", m1.line(), m1.gflops(2.0 * a.nnz() as f64));
-    for k in [4usize, 8, 16, 32] {
-        let x = random_vector(a.ncols * k, 4);
-        let m = bencher.run(&format!("spmm k={k}"), || {
-            spmm_parallel(&a, &x, k, threads, Policy::Dynamic(64))
-        });
-        println!("{}  {:.3} GFlop/s", m.line(), m.gflops(2.0 * a.nnz() as f64 * k as f64));
+    // Quad mesh, the paper's SpMM peak instance (pwtk), 2D stencil.
+    println!("== measured: fused SpMM vs k-pass fallback, {threads} threads ==");
+    println!(
+        "{:<16} {:<10} {:>4} {:>12} {:>14} {:>8}",
+        "matrix", "format", "k", "fused GF", "fallback GF", "ratio"
+    );
+    let mut matrices: Vec<Json> = Vec::new();
+    for idx in [0usize, 11, 19] {
+        let entry = &suite[idx];
+        let mut a = entry.generate_scaled(scale);
+        randomize_values(&mut a, entry.id as u64);
+        let mut by_format = Json::obj();
+        for format in formats {
+            let op = prepare(&a, format);
+            let mut by_k = Json::obj();
+            for k in ks {
+                let x = random_vector(a.ncols * k, 4);
+                let mut y = vec![0.0f64; a.nrows * k];
+                let flops = Workload::Spmm { k }.flops(a.nnz());
+                let fused = bencher
+                    .run("fused", || op.spmm_into(&x, &mut y, k, &ctx))
+                    .gflops(flops);
+                let fallback = bencher
+                    .run("fallback", || spmm_via_spmv(op.as_ref(), &x, &mut y, k, &ctx))
+                    .gflops(flops);
+                let ratio = fused / fallback.max(1e-12);
+                println!(
+                    "{:<16} {:<10} {:>4} {:>12.3} {:>14.3} {:>7.2}x",
+                    entry.name, format, k, fused, fallback, ratio
+                );
+                by_k = by_k.set(
+                    &format!("k{k}"),
+                    Json::obj()
+                        .set("fused_gflops", fused)
+                        .set("fallback_gflops", fallback)
+                        .set("ratio", ratio),
+                );
+            }
+            by_format = by_format.set(&format.to_string(), by_k);
+        }
+        matrices.push(
+            Json::obj()
+                .set("name", entry.name)
+                .set("nrows", a.nrows)
+                .set("nnz", a.nnz())
+                .set("formats", by_format),
+        );
     }
+
+    // The workload dimension in the tuner: the same matrix, two searches,
+    // two (potentially different) decisions under distinct cache keys.
+    let entry = &suite[11];
+    let mut a = entry.generate_scaled(scale);
+    randomize_values(&mut a, entry.id as u64);
+    let mut tuner = Tuner::new(TunerConfig::default(), TuningCache::in_memory());
+    let spmv = tuner.tune(entry.name, &a).expect("spmv tuning failed");
+    let spmm = tuner
+        .tune_workload(entry.name, &a, Workload::Spmm { k: 16 })
+        .expect("spmm tuning failed");
+    let distinct = spmv.candidate() != spmm.candidate();
+    println!("\n== tuner on {}: per-workload decisions ==", entry.name);
+    println!("spmv:   {spmv}");
+    println!("spmm16: {spmm}");
+    println!("distinct candidates: {distinct}");
 
     println!("\n== modeled: KNC Fig. 9 (k=16) ==");
     let machine = PhiMachine::se10p();
-    println!(
-        "{:>2} {:<16} {:>9} {:>9} {:>9}",
-        "#", "name", "generic", "manual", "nrngo"
-    );
+    println!("{:>2} {:<16} {:>9} {:>9} {:>9}", "#", "name", "generic", "manual", "nrngo");
     for e in &suite {
         let mut a = e.generate_scaled(scale);
         randomize_values(&mut a, e.id as u64);
@@ -56,4 +118,22 @@ fn main() {
             .collect();
         println!("{:>2} {:<16} {:>9.1} {:>9.1} {:>9.1}", e.id, e.name, g[0], g[1], g[2]);
     }
+
+    let report = Json::obj()
+        .set("bench", "spmm")
+        .set("threads", threads)
+        .set("scale", scale)
+        .set("ks", ks.to_vec())
+        .set("matrices", matrices)
+        .set(
+            "tuner",
+            Json::obj()
+                .set("matrix", entry.name)
+                .set("spmv", spmv.to_json())
+                .set("spmm16", spmm.to_json())
+                .set("distinct", distinct),
+        );
+    let path = "BENCH_spmm.json";
+    std::fs::write(path, report.to_pretty()).expect("writing BENCH_spmm.json");
+    println!("\nwrote {path}");
 }

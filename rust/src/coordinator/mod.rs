@@ -14,7 +14,7 @@ pub mod server;
 
 pub use experiments::{Ctx, Experiment};
 pub use report::Report;
-pub use server::{ServerConfig, SpmvClient, SpmvServer};
+pub use server::{PathSpec, PathStats, ServerConfig, ServerStats, SpmvClient, SpmvServer};
 
 /// All experiment ids, in paper order.
 pub const ALL_EXPERIMENTS: &[&str] = &[

@@ -6,13 +6,16 @@
 //! are single-vector multiplies, but batching k of them into one SpMM
 //! multiplies the flop:byte ratio. This module is that server: a bounded
 //! queue, a batcher that waits up to `max_wait` for up to `max_batch`
-//! requests, a worker executing the batch through the configured
-//! format-erased [`crate::kernels::SpmvOp`] — the tuner's format decision
-//! is executed for real, and [`ServerStats::format`] records which — and
-//! per-request
-//! latency accounting. Kernels run on the persistent
-//! [`crate::sched::WorkerPool`] unless [`ServerConfig::pooled`] opts into
-//! the spawn-per-call ablation baseline.
+//! requests, and a worker that routes each drained batch by its
+//! [`Workload`] — a lone request runs on the SpMV-tuned op, a fused batch
+//! on the SpMM-tuned op ([`ServerConfig::spmm`]), each with its own
+//! format, schedule and thread count. Per-workload execution statistics
+//! come back in [`ServerStats::spmv`]/[`ServerStats::spmm`], whose
+//! measured GFlop/s feed the tuning cache's drift invalidation
+//! ([`crate::tuner::TuningCache::invalidate_if_drifted`]). Kernels run on
+//! the persistent [`crate::sched::WorkerPool`] unless
+//! [`ServerConfig::pooled`] opts into the spawn-per-call ablation
+//! baseline.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -24,10 +27,53 @@ enum Msg {
 }
 use std::time::{Duration, Instant};
 
-use crate::kernels::op::ExecCtx;
+use crate::kernels::op::{ExecCtx, Workload};
 use crate::sched::Policy;
 use crate::sparse::Csr;
-use crate::tuner::{exec::prepare_owned, Format};
+use crate::tuner::{exec::prepare_owned, Format, TunedConfig};
+
+/// One execution path of the server: the format/schedule/threads triple a
+/// workload runs under, plus the workload that triple was tuned for (so
+/// stats and logs can say "this batch path reuses an SpMV decision").
+#[derive(Debug, Clone)]
+pub struct PathSpec {
+    /// Storage format the path converts to (once, at startup) and
+    /// executes in.
+    pub format: Format,
+    /// Scheduling policy for the path's kernel.
+    pub policy: Policy,
+    /// Worker threads for the path's kernel.
+    pub threads: usize,
+    /// Workload this path's configuration was tuned/chosen for.
+    pub workload: Workload,
+}
+
+impl PathSpec {
+    /// The path a tuned decision implies (carrying the decision's
+    /// workload, so reports show what the configuration was tuned for).
+    /// The (format, policy, threads) triple comes from
+    /// [`TunedConfig::candidate`] — the one place that mapping lives.
+    pub fn from_decision(decision: &TunedConfig) -> PathSpec {
+        let cand = decision.candidate();
+        PathSpec {
+            format: cand.format,
+            policy: cand.policy,
+            threads: cand.threads.max(1),
+            workload: decision.workload,
+        }
+    }
+}
+
+impl Default for PathSpec {
+    fn default() -> Self {
+        PathSpec {
+            format: Format::Csr,
+            policy: Policy::Dynamic(64),
+            threads: 1,
+            workload: Workload::Spmv,
+        }
+    }
+}
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -36,13 +82,12 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// Maximum time the batcher waits to fill a batch.
     pub max_wait: Duration,
-    /// Worker threads for the batch kernel.
-    pub threads: usize,
-    /// Scheduling policy for the batch kernel.
-    pub policy: Policy,
-    /// Storage format the server converts to (once, at startup) and
-    /// executes every batch in.
-    pub format: Format,
+    /// Execution path for single-request batches (the SpMV workload).
+    pub spmv: PathSpec,
+    /// Execution path for fused batches (k > 1). `None` reuses the SpMV
+    /// path — the pre-workload behavior, visible in the stats as a batch
+    /// path whose `workload` says `spmv`.
+    pub spmm: Option<PathSpec>,
     /// Execute on the persistent global worker pool (default) instead of
     /// spawning threads per batch (the ablation baseline `bench_server`
     /// measures against).
@@ -54,24 +99,33 @@ impl Default for ServerConfig {
         ServerConfig {
             max_batch: 16,
             max_wait: Duration::from_millis(2),
-            threads: 1,
-            policy: Policy::Dynamic(64),
-            format: Format::Csr,
+            spmv: PathSpec::default(),
+            spmm: None,
             pooled: true,
         }
     }
 }
 
 impl ServerConfig {
-    /// Derives a server configuration from a tuned decision: the batcher
-    /// adopts the tuned format, schedule and thread count, and the serve
-    /// loop executes batches in that format (a `bcsr4x2` decision used to
-    /// silently serve CSR).
-    pub fn tuned(config: &crate::tuner::TunedConfig) -> ServerConfig {
+    /// Derives a server configuration from one tuned decision: both the
+    /// single-request path and the batch path adopt its format, schedule
+    /// and thread count (and the stats record which workload it was tuned
+    /// for). Prefer [`ServerConfig::tuned_pair`] so batches run a decision
+    /// that was actually optimized for batches.
+    pub fn tuned(config: &TunedConfig) -> ServerConfig {
+        ServerConfig { spmv: PathSpec::from_decision(config), ..ServerConfig::default() }
+    }
+
+    /// Derives a server configuration from one decision per workload:
+    /// single requests route to `spmv`'s path, fused batches to `spmm`'s,
+    /// and `max_batch` adopts the batch width the SpMM decision was tuned
+    /// at.
+    pub fn tuned_pair(spmv: &TunedConfig, spmm: &TunedConfig) -> ServerConfig {
+        let max_batch = spmm.workload.k().max(1);
         ServerConfig {
-            threads: config.threads.max(1),
-            policy: config.policy,
-            format: config.format,
+            max_batch,
+            spmv: PathSpec::from_decision(spmv),
+            spmm: Some(PathSpec::from_decision(spmm)),
             ..ServerConfig::default()
         }
     }
@@ -123,20 +177,51 @@ pub struct SpmvServer {
     worker: Option<std::thread::JoinHandle<ServerStats>>,
 }
 
+/// Execution statistics of one workload path.
+#[derive(Debug, Clone, Default)]
+pub struct PathStats {
+    /// Batches this path executed.
+    pub batches: usize,
+    /// Requests those batches served.
+    pub served: usize,
+    /// Total flops executed on this path.
+    pub flops: f64,
+    /// Busy time in this path's kernel.
+    pub compute_s: f64,
+    /// Storage format the path actually executed in.
+    pub format: String,
+    /// Workload the executing configuration was tuned for (`"spmv"` on a
+    /// batch path means batches reused a single-vector decision).
+    pub workload: String,
+}
+
+impl PathStats {
+    /// Measured kernel throughput; 0 when the path never ran.
+    pub fn gflops(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.flops / self.compute_s.max(1e-12) / 1e9
+        }
+    }
+}
+
 /// Aggregate statistics reported at shutdown.
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
-    /// Requests served.
+    /// Requests served (all paths).
     pub served: usize,
-    /// Batches executed.
+    /// Batches executed (all paths).
     pub batches: usize,
     /// Total flops executed.
     pub flops: f64,
-    /// Busy time in the batch kernel.
+    /// Busy time in the batch kernels.
     pub compute_s: f64,
-    /// Storage format the batches actually executed in (the
-    /// [`Format`] display string, e.g. `"csr"`, `"sell8-256"`).
-    pub format: String,
+    /// Single-request (k = 1) executions; `spmv.format` is the executed
+    /// format's [`Format`] display string (e.g. `"csr"`, `"sell8-256"`).
+    pub spmv: PathStats,
+    /// Fused-batch (k > 1) executions.
+    pub spmm: PathStats,
 }
 
 impl ServerStats {
@@ -158,18 +243,22 @@ impl SpmvServer {
         SpmvServer { client: SpmvClient { tx }, worker: Some(worker) }
     }
 
-    /// Tunes the matrix first (answering from the tuner's cache when the
-    /// fingerprint is known) and starts the server under the tuned
-    /// schedule and thread count. Returns the decision so callers can
-    /// report/serve it alongside the server handle.
+    /// Tunes the matrix for *both* workloads — SpMV, and SpMM at the
+    /// default batch width — answering from the tuner's cache when the
+    /// fingerprints are known, then starts the server routing each batch
+    /// to the decision tuned for its width. Returns both decisions so
+    /// callers can report them (and check drift against
+    /// [`ServerStats::spmv`]/[`ServerStats::spmm`] at shutdown).
     pub fn start_tuned(
         a: Arc<Csr>,
         tuner: &mut crate::tuner::Tuner,
         name: &str,
-    ) -> anyhow::Result<(SpmvServer, crate::tuner::TunedConfig)> {
-        let config = tuner.tune(name, &a)?;
-        let server = SpmvServer::start(a, ServerConfig::tuned(&config));
-        Ok((server, config))
+    ) -> anyhow::Result<(SpmvServer, TunedConfig, TunedConfig)> {
+        let spmv = tuner.tune(name, &a)?;
+        let k = ServerConfig::default().max_batch;
+        let spmm = tuner.tune_workload(name, &a, Workload::Spmm { k })?;
+        let server = SpmvServer::start(a, ServerConfig::tuned_pair(&spmv, &spmm));
+        Ok((server, spmv, spmm))
     }
 
     /// A client handle (cloneable across threads).
@@ -190,15 +279,39 @@ fn serve_loop(a: Arc<Csr>, config: ServerConfig, rx: mpsc::Receiver<Msg>) -> Ser
     // file-wide, the blanket `impl SpmvOp for Arc<T>` would shadow
     // `Csr::spmv` for the tests' `Arc<Csr>` receivers.
     use crate::kernels::op::SpmvOp;
-    // One-time conversion into the configured format; every batch then
-    // runs through the format-erased op (CSR shares the Arc, no copy).
-    let op = prepare_owned(&a, config.format);
-    let ctx = if config.pooled {
-        ExecCtx::pooled(config.threads, config.policy)
+    // One-time conversion per path; every batch then runs through a
+    // format-erased op (CSR shares the Arc, no copy). When the batch path
+    // names the same format as the SpMV path — or is absent — the payload
+    // is shared instead of converted twice.
+    let spmv_op = prepare_owned(&a, config.spmv.format);
+    let batch_spec = config.spmm.clone().unwrap_or_else(|| config.spmv.clone());
+    let batch_op: Option<Box<dyn SpmvOp>> = if batch_spec.format == config.spmv.format {
+        None
     } else {
-        ExecCtx::spawning(config.threads, config.policy)
+        Some(prepare_owned(&a, batch_spec.format))
     };
-    let mut stats = ServerStats { format: config.format.to_string(), ..ServerStats::default() };
+    let ctx_for = |spec: &PathSpec| {
+        if config.pooled {
+            ExecCtx::pooled(spec.threads, spec.policy)
+        } else {
+            ExecCtx::spawning(spec.threads, spec.policy)
+        }
+    };
+    let spmv_ctx = ctx_for(&config.spmv);
+    let batch_ctx = ctx_for(&batch_spec);
+    let mut stats = ServerStats {
+        spmv: PathStats {
+            format: config.spmv.format.to_string(),
+            workload: config.spmv.workload.to_string(),
+            ..PathStats::default()
+        },
+        spmm: PathStats {
+            format: batch_spec.format.to_string(),
+            workload: batch_spec.workload.to_string(),
+            ..PathStats::default()
+        },
+        ..ServerStats::default()
+    };
     let max_batch = config.max_batch.max(1);
     let mut stopping = false;
     loop {
@@ -235,11 +348,28 @@ fn serve_loop(a: Arc<Csr>, config: ServerConfig, rx: mpsc::Receiver<Msg>) -> Ser
             }
         }
         let mut y = vec![0.0f64; a.nrows * k];
+        // Route by the drained batch's workload: a lone request runs the
+        // SpMV-tuned path, a fused batch the SpMM-tuned one.
+        let (op, ctx): (&dyn SpmvOp, &ExecCtx<'_>) = if k > 1 {
+            (batch_op.as_deref().unwrap_or(&spmv_op), &batch_ctx)
+        } else {
+            (&spmv_op, &spmv_ctx)
+        };
         let t0 = Instant::now();
-        op.spmm_into(&x, &mut y, k, &ctx);
-        let compute = t0.elapsed();
-        stats.compute_s += compute.as_secs_f64();
-        stats.flops += 2.0 * a.nnz() as f64 * k as f64;
+        if k > 1 {
+            op.spmm_into(&x, &mut y, k, ctx);
+        } else {
+            op.spmv_into(&x, &mut y, ctx);
+        }
+        let compute = t0.elapsed().as_secs_f64();
+        let flops = 2.0 * a.nnz() as f64 * k as f64;
+        let path = if k > 1 { &mut stats.spmm } else { &mut stats.spmv };
+        path.compute_s += compute;
+        path.flops += flops;
+        path.batches += 1;
+        path.served += k;
+        stats.compute_s += compute;
+        stats.flops += flops;
         stats.batches += 1;
 
         for (u, req) in batch.into_iter().enumerate() {
@@ -301,6 +431,8 @@ mod tests {
         let stats = server.shutdown();
         assert_eq!(stats.served, 20);
         assert!(stats.batches <= 20);
+        assert_eq!(stats.spmv.served + stats.spmm.served, 20, "paths partition the traffic");
+        assert_eq!(stats.spmv.batches + stats.spmm.batches, stats.batches);
     }
 
     #[test]
@@ -328,6 +460,10 @@ mod tests {
             stats.batches
         );
         assert!(sizes.iter().any(|&s| s > 1));
+        assert!(stats.spmm.batches >= 1, "fused batches must land on the SpMM path");
+        // With no batch path configured, the stats expose that fused
+        // batches reused the SpMV-tuned configuration.
+        assert_eq!(stats.spmm.workload, "spmv");
     }
 
     #[test]
@@ -361,6 +497,9 @@ mod tests {
         assert_eq!(stats.served, 1);
         assert!(stats.flops > 0.0);
         assert!((stats.mean_batch() - 1.0).abs() < 1e-9);
+        assert_eq!(stats.spmv.served, 1, "a lone request is an SpMV execution");
+        assert_eq!(stats.spmm.batches, 0);
+        assert_eq!(stats.spmm.gflops(), 0.0, "idle path must not invent throughput");
     }
 
     #[test]
@@ -370,7 +509,8 @@ mod tests {
         let a = matrix();
         let formats = [Format::Ell, Format::Sell { c: 8, sigma: 64 }, Format::Bcsr { r: 4, c: 2 }];
         for format in formats {
-            let decision = crate::tuner::TunedConfig {
+            let decision = TunedConfig {
+                workload: Workload::Spmv,
                 format,
                 policy: Policy::Dynamic(32),
                 threads: 2,
@@ -386,9 +526,69 @@ mod tests {
                 assert!((u - v).abs() < 1e-10, "{format}");
             }
             let stats = server.shutdown();
-            assert_eq!(stats.format, format.to_string(), "executed format must be recorded");
+            assert_eq!(stats.spmv.format, format.to_string(), "executed format must be recorded");
             assert_eq!(stats.served, 1);
         }
+    }
+
+    #[test]
+    fn batches_route_to_the_spmm_tuned_path() {
+        // SpMV tuned to CSR, SpMM tuned to SELL: a fused batch must
+        // execute (and record) the SELL path, while a lone request stays
+        // on CSR.
+        let a = matrix();
+        let spmv = TunedConfig {
+            workload: Workload::Spmv,
+            format: Format::Csr,
+            policy: Policy::Dynamic(64),
+            threads: 1,
+            gflops: 0.0,
+            source: "trial".to_string(),
+        };
+        let spmm = TunedConfig {
+            workload: Workload::Spmm { k: 8 },
+            format: Format::Sell { c: 8, sigma: 64 },
+            policy: Policy::Dynamic(16),
+            threads: 2,
+            gflops: 0.0,
+            source: "trial".to_string(),
+        };
+        let config = ServerConfig {
+            max_wait: Duration::from_millis(50),
+            ..ServerConfig::tuned_pair(&spmv, &spmm)
+        };
+        assert_eq!(config.max_batch, 8, "batch width comes from the SpMM decision");
+        let server = SpmvServer::start(a.clone(), config);
+        let client = server.client();
+        let mut expected = Vec::new();
+        let mut rxs = Vec::new();
+        for s in 0..8u64 {
+            let x = random_vector(a.ncols, 400 + s);
+            expected.push(a.spmv(&x));
+            rxs.push(client.submit(x).unwrap());
+        }
+        let mut fused = false;
+        for (rx, want) in rxs.into_iter().zip(expected) {
+            let resp = rx.recv().unwrap();
+            fused |= resp.batch_size > 1;
+            for (u, v) in resp.y.iter().zip(&want) {
+                assert!((u - v).abs() < 1e-10);
+            }
+        }
+        assert!(fused, "the 50 ms window must fuse at least one batch");
+        let stats = server.shutdown();
+        assert_eq!(stats.spmm.format, "sell8-64");
+        assert_eq!(stats.spmm.workload, "spmm8");
+        assert_eq!(stats.spmv.format, "csr", "single-request path unchanged");
+        assert!(stats.spmm.batches >= 1);
+        // A follow-up lone request exercises the SpMV path of the same
+        // server instance.
+        let server = SpmvServer::start(a.clone(), ServerConfig::tuned_pair(&spmv, &spmm));
+        let client = server.client();
+        client.call(random_vector(a.ncols, 500)).unwrap();
+        let stats = server.shutdown();
+        assert_eq!(stats.spmv.batches, 1);
+        assert_eq!(stats.spmv.format, "csr");
     }
 
     #[test]
@@ -396,7 +596,11 @@ mod tests {
         let a = matrix();
         let server = SpmvServer::start(
             a.clone(),
-            ServerConfig { pooled: false, threads: 2, ..ServerConfig::default() },
+            ServerConfig {
+                spmv: PathSpec { threads: 2, ..PathSpec::default() },
+                pooled: false,
+                ..ServerConfig::default()
+            },
         );
         let client = server.client();
         let x = random_vector(a.ncols, 91);
@@ -406,16 +610,18 @@ mod tests {
             assert!((u - v).abs() < 1e-10);
         }
         let stats = server.shutdown();
-        assert_eq!(stats.format, "csr");
+        assert_eq!(stats.spmv.format, "csr");
     }
 
     #[test]
-    fn tuned_server_serves_and_reports_decision() {
+    fn tuned_server_serves_and_reports_both_decisions() {
         let a = matrix();
         let mut tuner = crate::tuner::Tuner::quick();
-        let (server, decision) = SpmvServer::start_tuned(a.clone(), &mut tuner, "t").unwrap();
-        assert!(decision.threads >= 1);
-        assert_eq!(tuner.cache.misses, 1, "first request must search");
+        let (server, spmv, spmm) = SpmvServer::start_tuned(a.clone(), &mut tuner, "t").unwrap();
+        assert!(spmv.threads >= 1);
+        assert_eq!(spmv.workload, Workload::Spmv);
+        assert_eq!(spmm.workload, Workload::Spmm { k: 16 });
+        assert_eq!(tuner.cache.misses, 2, "first boot searches once per workload");
         let client = server.client();
         let x = random_vector(a.ncols, 77);
         let want = a.spmv(&x);
@@ -426,9 +632,10 @@ mod tests {
         let stats = server.shutdown();
         assert_eq!(stats.served, 1);
 
-        // A second server over the same matrix shape reuses the decision.
-        let (server2, _) = SpmvServer::start_tuned(a.clone(), &mut tuner, "t").unwrap();
-        assert_eq!(tuner.cache.hits, 1, "second request must hit the cache");
+        // A second server over the same matrix shape reuses both
+        // decisions.
+        let (server2, _, _) = SpmvServer::start_tuned(a.clone(), &mut tuner, "t").unwrap();
+        assert_eq!(tuner.cache.hits, 2, "second boot must hit for both workloads");
         server2.shutdown();
     }
 

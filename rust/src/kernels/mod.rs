@@ -3,11 +3,14 @@
 //! * [`op`] — the format-erased execution surface: every storage format
 //!   implements [`op::SpmvOp`] (`spmv_into`/`spmm_into`/`storage_bytes`),
 //!   and callers above the kernels hold a `Box<dyn SpmvOp>` plus an
-//!   [`op::ExecCtx`] (threads × policy × backend) instead of matching on
-//!   formats.
+//!   [`op::Workload`] (*what*: SpMV or k-wide SpMM) and an
+//!   [`op::ExecCtx`] (*how*: threads × policy × backend) instead of
+//!   matching on formats.
 //! * [`native`] — the real multithreaded Rust implementations behind the
 //!   trait (atomic chunk claiming over a persistent
 //!   [`crate::sched::WorkerPool`], mirroring the paper's OpenMP kernels).
+//!   Every format has both a parallel SpMV kernel and a fused SpMM kernel
+//!   (matrix read once per k vectors, column-blocked over k).
 //!   These execute on the host, are validated against the serial oracle,
 //!   and are the subject of the §Perf optimization pass.
 //! * [`micro`] — Fig. 1/Fig. 2 micro-benchmarks: KNC *models* of the array
@@ -29,6 +32,6 @@ pub use native::{
     bcsr_spmv_parallel, ell_spmv_parallel, hyb_spmv_parallel, sell_spmv_parallel,
     spmm_parallel, spmv_parallel, spmv_parallel_into,
 };
-pub use op::{ExecCtx, SpmvOp};
+pub use op::{spmm_via_spmv, ExecCtx, SpmvOp, Workload};
 pub use spmm_model::SpmmVariant;
 pub use spmv_model::SpmvVariant;

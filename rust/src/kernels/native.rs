@@ -226,6 +226,14 @@ fn spmm_rows_local(a: &Csr, x: &[f64], ys: &mut [f64], k: usize, r: std::ops::Ra
     }
 }
 
+/// Column-block width of the fused SpMM kernels: every format walks its
+/// work unit once per block of up to 16 vectors, so the accumulator is a
+/// fixed-size array the compiler keeps in registers (two 512-bit registers
+/// of doubles) and each X-row touch is at most 128 contiguous bytes — the
+/// X panel stays cache-resident instead of streaming `k·8` bytes per
+/// nonzero. Matches the CSR `k = 16` fast path and the paper's SpMM k.
+const SPMM_KBLOCK: usize = 16;
+
 // ----------------------------------------------------------------- BCSR --
 
 /// Parallel register-blocked SpMV over a [`Bcsr`] matrix. Block rows go
@@ -278,6 +286,72 @@ fn bcsr_rows_local(b: &Bcsr, x: &[f64], ys: &mut [f64], br_range: std::ops::Rang
     }
 }
 
+/// Fused BCSR SpMM: `Y ← AX`, row-major `X`/`Y` of width `k`, under an
+/// explicit execution context. Block rows are the work unit (like
+/// [`bcsr_spmv_into`]); within one block row the accumulator panel
+/// (`r × SPMM_KBLOCK`) collects every stored block before Y is written, so
+/// Y is stored exactly once per column block and never read.
+pub(crate) fn bcsr_spmm_into(b: &Bcsr, x: &[f64], y: &mut [f64], k: usize, ctx: &ExecCtx<'_>) {
+    assert_eq!(x.len(), b.ncols * k, "X must be ncols*k row-major");
+    assert_eq!(y.len(), b.nrows * k, "Y must be nrows*k row-major");
+    if k == 0 {
+        return;
+    }
+    let nbrows = b.nbrows();
+    let ctx = effective(ctx, nbrows, SERIAL_UNITS);
+    let yp = SendPtr(y.as_mut_ptr());
+    run_partitioned(&ctx, nbrows, &move |r| {
+        // Block rows map to disjoint k-wide Y ranges.
+        let lo = r.start * b.r;
+        let hi = (r.end * b.r).min(b.nrows);
+        let ys = unsafe { std::slice::from_raw_parts_mut(yp.0.add(lo * k), (hi - lo) * k) };
+        bcsr_spmm_rows_local(b, x, ys, k, r);
+    });
+}
+
+#[inline]
+fn bcsr_spmm_rows_local(
+    b: &Bcsr,
+    x: &[f64],
+    ys: &mut [f64],
+    k: usize,
+    br_range: std::ops::Range<usize>,
+) {
+    let base_row = br_range.start * b.r;
+    // One accumulator row per block-row lane; rows without any stored
+    // block stay zero, which the final store writes out (Y is never read).
+    let mut acc = vec![0.0f64; b.r * SPMM_KBLOCK];
+    for br in br_range {
+        let row_lo = br * b.r;
+        let rows = (row_lo + b.r).min(b.nrows) - row_lo;
+        let mut u0 = 0usize;
+        while u0 < k {
+            let ub = (k - u0).min(SPMM_KBLOCK);
+            acc[..rows * SPMM_KBLOCK].fill(0.0);
+            for kblk in b.brptrs[br]..b.brptrs[br + 1] {
+                let col_lo = b.bcids[kblk] as usize * b.c;
+                let cwidth = b.c.min(b.ncols - col_lo);
+                let block = &b.vals[kblk * b.r * b.c..(kblk + 1) * b.r * b.c];
+                for bj in 0..cwidth {
+                    let xrow = &x[(col_lo + bj) * k + u0..][..ub];
+                    for bi in 0..rows {
+                        let v = block[bi * b.c + bj];
+                        let arow = &mut acc[bi * SPMM_KBLOCK..][..ub];
+                        for (a, xv) in arow.iter_mut().zip(xrow) {
+                            *a += v * xv;
+                        }
+                    }
+                }
+            }
+            for bi in 0..rows {
+                ys[(row_lo - base_row + bi) * k + u0..][..ub]
+                    .copy_from_slice(&acc[bi * SPMM_KBLOCK..][..ub]);
+            }
+            u0 += ub;
+        }
+    }
+}
+
 // ------------------------------------------------------------------ ELL --
 
 /// Parallel SpMV over a padded [`Ell`] matrix: `y ← Ax`.
@@ -313,6 +387,49 @@ fn ell_rows_local(e: &Ell, x: &[f64], ys: &mut [f64], r: std::ops::Range<usize>)
     }
 }
 
+/// Fused ELL SpMM: `Y ← AX`, row-major `X`/`Y` of width `k`, under an
+/// explicit execution context. Each padded row is walked once per
+/// [`SPMM_KBLOCK`]-wide column block; padding slots multiply by 0.0 into
+/// the sentinel column's X row, so no per-row length bookkeeping appears
+/// in the inner loop.
+pub(crate) fn ell_spmm_into(e: &Ell, x: &[f64], y: &mut [f64], k: usize, ctx: &ExecCtx<'_>) {
+    assert_eq!(x.len(), e.ncols * k, "X must be ncols*k row-major");
+    assert_eq!(y.len(), e.nrows * k, "Y must be nrows*k row-major");
+    if k == 0 {
+        return;
+    }
+    let ctx = effective(ctx, e.nrows, SERIAL_ROWS);
+    let yp = SendPtr(y.as_mut_ptr());
+    run_partitioned(&ctx, e.nrows, &move |r| {
+        // Disjoint row ranges map to disjoint k-wide Y blocks.
+        let ys = unsafe { std::slice::from_raw_parts_mut(yp.0.add(r.start * k), r.len() * k) };
+        ell_spmm_rows_local(e, x, ys, k, r);
+    });
+}
+
+/// ELL SpMM over a row range; `ys` is the local Y block (row r.start at 0).
+#[inline]
+fn ell_spmm_rows_local(e: &Ell, x: &[f64], ys: &mut [f64], k: usize, r: std::ops::Range<usize>) {
+    let mut acc = [0.0f64; SPMM_KBLOCK];
+    for (row_idx, i) in r.enumerate() {
+        let base = i * e.width;
+        let mut u0 = 0usize;
+        while u0 < k {
+            let ub = (k - u0).min(SPMM_KBLOCK);
+            acc[..ub].fill(0.0);
+            for s in 0..e.width {
+                let v = e.vals[base + s];
+                let xrow = &x[e.cids[base + s] as usize * k + u0..][..ub];
+                for (a, xv) in acc[..ub].iter_mut().zip(xrow) {
+                    *a += v * xv;
+                }
+            }
+            ys[row_idx * k + u0..][..ub].copy_from_slice(&acc[..ub]);
+            u0 += ub;
+        }
+    }
+}
+
 // ------------------------------------------------------------------ HYB --
 
 /// Parallel SpMV over a [`Hyb`] matrix.
@@ -331,6 +448,24 @@ pub(crate) fn hyb_spmv_into(h: &Hyb, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>
     ell_spmv_into(&h.ell, x, y, ctx);
     for idx in 0..h.coo.nnz() {
         y[h.coo.rows[idx] as usize] += h.coo.vals[idx] * x[h.coo.cols[idx] as usize];
+    }
+}
+
+/// Fused HYB SpMM: the regular ELL part runs the fused parallel kernel;
+/// the (typically tiny) COO overflow is applied serially after the join,
+/// k-wide per entry. The serial tail grows with k — which is why the
+/// tuner's SpMM search space prunes HYB on heavy-overflow matrices.
+pub(crate) fn hyb_spmm_into(h: &Hyb, x: &[f64], y: &mut [f64], k: usize, ctx: &ExecCtx<'_>) {
+    ell_spmm_into(&h.ell, x, y, k, ctx);
+    for idx in 0..h.coo.nnz() {
+        let row = h.coo.rows[idx] as usize;
+        let col = h.coo.cols[idx] as usize;
+        let v = h.coo.vals[idx];
+        let xrow = &x[col * k..(col + 1) * k];
+        let yrow = &mut y[row * k..(row + 1) * k];
+        for (yv, xv) in yrow.iter_mut().zip(xrow) {
+            *yv += v * xv;
+        }
     }
 }
 
@@ -375,6 +510,56 @@ pub(crate) fn sell_spmv_into(s: &Sell, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'
                 unsafe {
                     *yp.0.add(s.perm[lo + lane] as usize) = acc[lane];
                 }
+            }
+        }
+    });
+}
+
+/// Fused SELL-C-σ SpMM: `Y ← AX`, row-major `X`/`Y` of width `k`, under an
+/// explicit execution context. The work unit is a chunk of C rows; the
+/// accumulator panel is `C × SPMM_KBLOCK` so all C lanes advance together
+/// through each column block, then scatter k-wide rows to `Y` through the
+/// σ-window permutation.
+pub(crate) fn sell_spmm_into(s: &Sell, x: &[f64], y: &mut [f64], k: usize, ctx: &ExecCtx<'_>) {
+    assert_eq!(x.len(), s.ncols * k, "X must be ncols*k row-major");
+    assert_eq!(y.len(), s.nrows * k, "Y must be nrows*k row-major");
+    if k == 0 {
+        return;
+    }
+    let nchunks = s.nchunks();
+    let ctx = effective(ctx, nchunks, SERIAL_UNITS);
+    let yp = SendPtr(y.as_mut_ptr());
+    run_partitioned(&ctx, nchunks, &move |r| {
+        let c = s.chunk;
+        let mut acc = vec![0.0f64; c * SPMM_KBLOCK];
+        for ch in r {
+            let lo = ch * c;
+            let lanes = s.nrows.min(lo + c) - lo;
+            let base = s.chunk_ptrs[ch];
+            let width = (s.chunk_ptrs[ch + 1] - base) / c;
+            let mut u0 = 0usize;
+            while u0 < k {
+                let ub = (k - u0).min(SPMM_KBLOCK);
+                acc.iter_mut().for_each(|v| *v = 0.0);
+                for j in 0..width {
+                    let slot = base + j * c;
+                    for lane in 0..c {
+                        let v = s.vals[slot + lane];
+                        let xrow = &x[s.cids[slot + lane] as usize * k + u0..][..ub];
+                        let arow = &mut acc[lane * SPMM_KBLOCK..][..ub];
+                        for (a, xv) in arow.iter_mut().zip(xrow) {
+                            *a += v * xv;
+                        }
+                    }
+                }
+                // Chunk-disjoint sorted positions map to disjoint k-wide Y
+                // rows because the permutation is a bijection.
+                for lane in 0..lanes {
+                    let row = s.perm[lo + lane] as usize;
+                    let ys = unsafe { std::slice::from_raw_parts_mut(yp.0.add(row * k + u0), ub) };
+                    ys.copy_from_slice(&acc[lane * SPMM_KBLOCK..][..ub]);
+                }
+                u0 += ub;
             }
         }
     });
@@ -443,6 +628,70 @@ mod tests {
         for policy in Policy::paper_sweep() {
             assert_close(&spmm_parallel(&a, &x, k, 4, policy), &want);
         }
+    }
+
+    #[test]
+    fn fused_spmm_matches_csr_all_formats_and_policies() {
+        let a = test_matrix();
+        // k values straddle the SPMM_KBLOCK boundary (16) and a ragged tail.
+        for k in [1usize, 4, 16, 17, 33] {
+            let x = random_vector(a.ncols * k, 59);
+            let want = a.spmm(&x, k);
+            let e = Ell::from_csr(&a, 0);
+            let b = Bcsr::from_csr(&a, 4, 2);
+            let h = Hyb::from_csr(&a, 3);
+            let s = Sell::from_csr(&a, 8, 64);
+            for policy in Policy::paper_sweep() {
+                for threads in [1usize, 4] {
+                    let ctx = ExecCtx::pooled(threads, policy);
+                    let mut y = vec![f64::NAN; a.nrows * k];
+                    ell_spmm_into(&e, &x, &mut y, k, &ctx);
+                    assert_close(&y, &want);
+                    y.fill(f64::NAN);
+                    bcsr_spmm_into(&b, &x, &mut y, k, &ctx);
+                    assert_close(&y, &want);
+                    y.fill(f64::NAN);
+                    hyb_spmm_into(&h, &x, &mut y, k, &ctx);
+                    assert_close(&y, &want);
+                    y.fill(f64::NAN);
+                    sell_spmm_into(&s, &x, &mut y, k, &ctx);
+                    assert_close(&y, &want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_spmm_handles_empty_rows_and_overflow() {
+        // Empty rows must come out as zero k-rows, and HYB's COO overflow
+        // must be applied k-wide.
+        let mut coo = crate::sparse::Coo::new(300, 300);
+        for i in (0..300).step_by(5) {
+            coo.push(i, i, 1.5);
+            coo.push(i, (i + 7) % 300, -0.25);
+        }
+        for j in 0..80usize {
+            coo.push(10, (j * 3) % 300, 0.125); // hub row overflows width 4
+        }
+        let a = coo.to_csr();
+        let h = Hyb::from_csr(&a, 4);
+        assert!(h.coo.nnz() > 0, "overflow part must be exercised");
+        let k = 6;
+        let x = random_vector(a.ncols * k, 61);
+        let want = a.spmm(&x, k);
+        let ctx = ExecCtx::pooled(4, Policy::Dynamic(16));
+        let mut y = vec![f64::NAN; a.nrows * k];
+        hyb_spmm_into(&h, &x, &mut y, k, &ctx);
+        assert_close(&y, &want);
+        y.fill(f64::NAN);
+        ell_spmm_into(&Ell::from_csr(&a, 0), &x, &mut y, k, &ctx);
+        assert_close(&y, &want);
+        y.fill(f64::NAN);
+        sell_spmm_into(&Sell::from_csr(&a, 8, 32), &x, &mut y, k, &ctx);
+        assert_close(&y, &want);
+        y.fill(f64::NAN);
+        bcsr_spmm_into(&Bcsr::from_csr(&a, 8, 8), &x, &mut y, k, &ctx);
+        assert_close(&y, &want);
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! Format-erased kernel dispatch: the [`SpmvOp`] trait and the execution
-//! context it runs under.
+//! Format-erased kernel dispatch: the [`SpmvOp`] trait, the [`Workload`]
+//! it computes, and the execution context it runs under.
 //!
 //! Every storage format (CSR, ELL, BCSR, HYB, SELL-C-σ, …) implements one
 //! trait with `spmv_into` / `spmm_into` / `storage_bytes`; everything
@@ -8,10 +8,16 @@
 //! again. Adding a format is one `impl` plus a conversion arm in
 //! [`crate::tuner::exec::prepare`], not a five-site edit.
 //!
-//! [`ExecCtx`] carries the *how*: thread count, scheduling policy, and the
-//! execution backend — a persistent [`WorkerPool`] (the default; see
-//! [`crate::sched::pool`]) or spawn-per-call threads (the pre-pool
-//! behavior, kept for ablation benches).
+//! Three orthogonal dimensions describe one kernel call:
+//!
+//! * the *format* — erased behind [`SpmvOp`];
+//! * the [`Workload`] — *what* is computed: a single vector
+//!   ([`Workload::Spmv`]) or a k-wide batch ([`Workload::Spmm`]), each with
+//!   its own fused kernel per format;
+//! * the [`ExecCtx`] — *how* it executes: thread count, scheduling policy,
+//!   and the backend — a persistent [`WorkerPool`] (the default; see
+//!   [`crate::sched::pool`]) or spawn-per-call threads (the pre-pool
+//!   behavior, kept for ablation benches).
 
 use std::sync::Arc;
 
@@ -57,6 +63,93 @@ impl<'p> ExecCtx<'p> {
     }
 }
 
+/// *What* a kernel call computes: one vector or a k-wide batch.
+///
+/// The workload is a first-class dimension of the execution stack — the
+/// tuner searches per workload (an SpMM decision is trialed on the fused
+/// SpMM kernel at the serving batch width, never inferred from SpMV), the
+/// [`crate::tuner::TuningCache`] keys on it, and the batching server holds
+/// one tuned op per workload and routes each drained batch accordingly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Workload {
+    /// Single-vector multiply: `y ← Ax`.
+    Spmv,
+    /// Multi-vector multiply `Y ← AX` with row-major `X`/`Y` of width `k`.
+    Spmm {
+        /// Number of simultaneous vectors (the paper's k; batch width).
+        k: usize,
+    },
+}
+
+impl Workload {
+    /// Vector count of the workload (1 for SpMV).
+    pub fn k(&self) -> usize {
+        match self {
+            Workload::Spmv => 1,
+            Workload::Spmm { k } => *k,
+        }
+    }
+
+    /// Useful flops of one execution over a matrix with `nnz` nonzeros.
+    pub fn flops(&self, nnz: usize) -> f64 {
+        2.0 * nnz as f64 * self.k() as f64
+    }
+
+    /// Parses the [`Display`](std::fmt::Display) form back (cache files).
+    /// A zero width is rejected — a corrupted cache entry must fail
+    /// loading, not execute an empty batch at serve time.
+    pub fn parse(s: &str) -> Option<Workload> {
+        if s == "spmv" {
+            return Some(Workload::Spmv);
+        }
+        let k: usize = s.strip_prefix("spmm")?.parse().ok()?;
+        if k == 0 {
+            return None;
+        }
+        Some(Workload::Spmm { k })
+    }
+}
+
+impl std::fmt::Display for Workload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Workload::Spmv => write!(f, "spmv"),
+            Workload::Spmm { k } => write!(f, "spmm{k}"),
+        }
+    }
+}
+
+/// The always-correct SpMM fallback: `k` strided gather → SpMV → scatter
+/// passes over `op`. Every in-tree format overrides [`SpmvOp::spmm_into`]
+/// with a fused kernel; this path remains as the trait default for
+/// out-of-tree formats and as the ablation baseline `bench_spmm` measures
+/// the fused kernels against.
+pub fn spmm_via_spmv<T: SpmvOp + ?Sized>(
+    op: &T,
+    x: &[f64],
+    y: &mut [f64],
+    k: usize,
+    ctx: &ExecCtx<'_>,
+) {
+    assert_eq!(x.len(), op.ncols() * k, "X must be ncols*k row-major");
+    assert_eq!(y.len(), op.nrows() * k, "Y must be nrows*k row-major");
+    if k == 0 {
+        return;
+    }
+    let (m, n) = (op.nrows(), op.ncols());
+    let mut xu = vec![0.0f64; n];
+    let mut yu = vec![0.0f64; m];
+    for u in 0..k {
+        for i in 0..n {
+            xu[i] = x[i * k + u];
+        }
+        op.spmv_into(&xu, &mut yu, ctx);
+        for i in 0..m {
+            y[i * k + u] = yu[i];
+        }
+    }
+}
+
 /// A sparse matrix, erased down to what the execution layers need:
 /// multiply and account for storage.
 ///
@@ -79,29 +172,21 @@ pub trait SpmvOp: Send + Sync {
 
     /// SpMM: `Y ← AX` with row-major `X`/`Y` of width `k`.
     ///
-    /// The default runs `k` strided gather → SpMV → scatter passes, which
-    /// is always correct; formats with a fused multi-vector kernel (CSR)
-    /// override it. Callers batching heavily over a non-CSR op should
-    /// know the tuner's decision was measured on single-vector SpMV, not
-    /// this path — fused non-CSR SpMM kernels and SpMM-aware tuning are
-    /// tracked as ROADMAP open items.
+    /// Every in-tree format overrides this with a fused kernel (the matrix
+    /// is read once per k vectors, column-blocked over k so the X panel
+    /// stays cache-resident). The default falls back to [`spmm_via_spmv`] —
+    /// always correct, but it re-reads the matrix `k` times.
     fn spmm_into(&self, x: &[f64], y: &mut [f64], k: usize, ctx: &ExecCtx<'_>) {
-        assert_eq!(x.len(), self.ncols() * k, "X must be ncols*k row-major");
-        assert_eq!(y.len(), self.nrows() * k, "Y must be nrows*k row-major");
-        if k == 0 {
-            return;
-        }
-        let (m, n) = (self.nrows(), self.ncols());
-        let mut xu = vec![0.0f64; n];
-        let mut yu = vec![0.0f64; m];
-        for u in 0..k {
-            for i in 0..n {
-                xu[i] = x[i * k + u];
-            }
-            self.spmv_into(&xu, &mut yu, ctx);
-            for i in 0..m {
-                y[i * k + u] = yu[i];
-            }
+        spmm_via_spmv(self, x, y, k, ctx);
+    }
+
+    /// Runs one execution of `workload`: SpMV for [`Workload::Spmv`], SpMM
+    /// at the workload's width otherwise. `x`/`y` must be sized
+    /// `ncols·k` / `nrows·k`.
+    fn apply(&self, workload: Workload, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
+        match workload {
+            Workload::Spmv => self.spmv_into(x, y, ctx),
+            Workload::Spmm { k } => self.spmm_into(x, y, k, ctx),
         }
     }
 
@@ -157,6 +242,9 @@ impl SpmvOp for Ell {
     fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
         native::ell_spmv_into(self, x, y, ctx);
     }
+    fn spmm_into(&self, x: &[f64], y: &mut [f64], k: usize, ctx: &ExecCtx<'_>) {
+        native::ell_spmm_into(self, x, y, k, ctx);
+    }
 }
 
 impl SpmvOp for Bcsr {
@@ -174,6 +262,9 @@ impl SpmvOp for Bcsr {
     }
     fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
         native::bcsr_spmv_into(self, x, y, ctx);
+    }
+    fn spmm_into(&self, x: &[f64], y: &mut [f64], k: usize, ctx: &ExecCtx<'_>) {
+        native::bcsr_spmm_into(self, x, y, k, ctx);
     }
 }
 
@@ -193,6 +284,9 @@ impl SpmvOp for Hyb {
     fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
         native::hyb_spmv_into(self, x, y, ctx);
     }
+    fn spmm_into(&self, x: &[f64], y: &mut [f64], k: usize, ctx: &ExecCtx<'_>) {
+        native::hyb_spmm_into(self, x, y, k, ctx);
+    }
 }
 
 impl SpmvOp for Sell {
@@ -210,6 +304,9 @@ impl SpmvOp for Sell {
     }
     fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
         native::sell_spmv_into(self, x, y, ctx);
+    }
+    fn spmm_into(&self, x: &[f64], y: &mut [f64], k: usize, ctx: &ExecCtx<'_>) {
+        native::sell_spmm_into(self, x, y, k, ctx);
     }
 }
 
@@ -292,7 +389,7 @@ mod tests {
     }
 
     #[test]
-    fn default_spmm_matches_fused_csr_spmm() {
+    fn every_fused_spmm_matches_csr_and_the_fallback() {
         let a = matrix();
         let k = 5;
         let x = random_vector(a.ncols * k, 23);
@@ -301,7 +398,41 @@ mod tests {
         for op in all_ops(&a) {
             let got = op.spmm(&x, k, &ctx);
             assert_close(&got, &want);
+            // The gather/scatter fallback stays available (and correct) as
+            // the ablation baseline even though every format is fused now.
+            let mut y = vec![f64::NAN; a.nrows * k];
+            spmm_via_spmv(op.as_ref(), &x, &mut y, k, &ctx);
+            assert_close(&y, &want);
         }
+    }
+
+    #[test]
+    fn apply_dispatches_on_the_workload() {
+        let a = matrix();
+        let ctx = ExecCtx::serial();
+        let x1 = random_vector(a.ncols, 31);
+        let mut y1 = vec![f64::NAN; a.nrows];
+        (&a as &dyn SpmvOp).apply(Workload::Spmv, &x1, &mut y1, &ctx);
+        assert_close(&y1, &a.spmv(&x1));
+        let k = 3;
+        let xk = random_vector(a.ncols * k, 37);
+        let mut yk = vec![f64::NAN; a.nrows * k];
+        (&a as &dyn SpmvOp).apply(Workload::Spmm { k }, &xk, &mut yk, &ctx);
+        assert_close(&yk, &a.spmm(&xk, k));
+    }
+
+    #[test]
+    fn workload_helpers_and_string_roundtrip() {
+        assert_eq!(Workload::Spmv.k(), 1);
+        assert_eq!(Workload::Spmm { k: 16 }.k(), 16);
+        assert_eq!(Workload::Spmv.flops(100), 200.0);
+        assert_eq!(Workload::Spmm { k: 4 }.flops(100), 800.0);
+        for w in [Workload::Spmv, Workload::Spmm { k: 1 }, Workload::Spmm { k: 16 }] {
+            assert_eq!(Workload::parse(&w.to_string()), Some(w));
+        }
+        assert_eq!(Workload::parse("spmm0"), None, "zero width must be rejected");
+        assert_eq!(Workload::parse("spmm"), None);
+        assert_eq!(Workload::parse("gemm4"), None);
     }
 
     #[test]

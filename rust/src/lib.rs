@@ -15,10 +15,13 @@
 //! * [`kernels`] — the sparse kernels themselves, twice over: real,
 //!   multithreaded Rust implementations (executed and benchmarked on the
 //!   host), and instruction-stream/traffic models fed to the simulators to
-//!   regenerate the paper's figures. Execution is format-erased: every
-//!   storage format (CSR/ELL/BCSR/HYB/SELL-C-σ) implements
-//!   [`kernels::SpmvOp`] (`spmv_into`/`spmm_into`/`storage_bytes`), and
-//!   all parallel kernels run on a persistent
+//!   regenerate the paper's figures. Execution is format-erased and
+//!   workload-explicit: every storage format (CSR/ELL/BCSR/HYB/SELL-C-σ)
+//!   implements [`kernels::SpmvOp`] (`spmv_into`/`spmm_into`/
+//!   `storage_bytes`) with a fused SpMM kernel per format (the matrix is
+//!   read once per k vectors — the paper's §5 flop:byte argument), callers
+//!   name what they compute with a [`kernels::Workload`]
+//!   (`Spmv` | `Spmm { k }`), and all parallel kernels run on a persistent
 //!   [`sched::WorkerPool`] — parked workers woken by a generation-counter
 //!   barrier — instead of spawning threads per call, so the tuner, the
 //!   serving coordinator, and the benches share one set of warm threads.
@@ -26,9 +29,13 @@
 //!   coordinator loads Pallas/JAX kernels AOT-lowered to HLO text and runs
 //!   them through the PJRT CPU client, orchestrating the paper's experiment
 //!   sweeps.
-//! * [`tuner`] — per-matrix auto-tuning: a statistics-pruned search over
-//!   (format, schedule, threads), decided by empirical trials or the
-//!   analytic cost models, cached persistently by matrix fingerprint.
+//! * [`tuner`] — per-(matrix, workload) auto-tuning: a statistics-pruned
+//!   search over (format, schedule, threads), decided by empirical trials
+//!   on the workload's own kernel (SpMM trials run the fused kernel at
+//!   the serving batch width) or by the analytic cost models, cached
+//!   persistently by matrix fingerprint + workload — SpMV and SpMM
+//!   decisions for one matrix coexist, and the batching server routes
+//!   each batch to the decision tuned for its width.
 //!
 //! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.

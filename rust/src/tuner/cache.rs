@@ -13,20 +13,27 @@
 //! file lock, so the losing writer's newest entries can still be dropped
 //! (and simply get re-tuned on the next miss).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 
+use crate::kernels::Workload;
 use crate::sched::Policy;
 use crate::util::json::Json;
 
 use super::space::{parse_policy, Candidate, Format};
 
-/// File-format version written into every cache file.
-const CACHE_VERSION: usize = 1;
+/// File-format version written into every cache file. Version 2 added the
+/// workload dimension: keys carry a `-spmv`/`-spmmK` suffix and entries a
+/// `workload` field. Version-1 keys can never match a current lookup, so
+/// [`TuningCache::load`] discards stale-version files wholesale instead of
+/// carrying unreachable entries forever.
+const CACHE_VERSION: usize = 2;
 
-/// The configuration the tuner settled on for one matrix.
+/// The configuration the tuner settled on for one (matrix, workload).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TunedConfig {
+    /// Workload the decision was tuned for (SpMM carries the batch width).
+    pub workload: Workload,
     /// Chosen storage format.
     pub format: Format,
     /// Chosen scheduling policy.
@@ -48,6 +55,7 @@ impl TunedConfig {
     /// Serializes to a JSON object.
     pub fn to_json(&self) -> Json {
         Json::obj()
+            .set("workload", self.workload.to_string())
             .set("format", self.format.to_string())
             .set("policy", self.policy.to_string())
             .set("threads", self.threads)
@@ -55,8 +63,14 @@ impl TunedConfig {
             .set("source", self.source.as_str())
     }
 
-    /// Parses the [`TunedConfig::to_json`] form.
+    /// Parses the [`TunedConfig::to_json`] form. Entries written before
+    /// the workload dimension existed parse as SpMV decisions.
     pub fn from_json(j: &Json) -> anyhow::Result<TunedConfig> {
+        let workload = match j.get("workload").and_then(Json::as_str) {
+            Some(s) => Workload::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown workload {s:?}"))?,
+            None => Workload::Spmv,
+        };
         let format_s = j
             .get("format")
             .and_then(Json::as_str)
@@ -79,7 +93,7 @@ impl TunedConfig {
             .and_then(Json::as_str)
             .unwrap_or("unknown")
             .to_string();
-        Ok(TunedConfig { format, policy, threads: threads.max(1), gflops, source })
+        Ok(TunedConfig { workload, format, policy, threads: threads.max(1), gflops, source })
     }
 }
 
@@ -87,8 +101,8 @@ impl std::fmt::Display for TunedConfig {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} {} t{} ({:.2} GFlop/s, {})",
-            self.format, self.policy, self.threads, self.gflops, self.source
+            "{} {} t{} [{}] ({:.2} GFlop/s, {})",
+            self.format, self.policy, self.threads, self.workload, self.gflops, self.source
         )
     }
 }
@@ -98,6 +112,11 @@ impl std::fmt::Display for TunedConfig {
 pub struct TuningCache {
     path: Option<PathBuf>,
     entries: BTreeMap<String, TunedConfig>,
+    /// Keys dropped by [`TuningCache::invalidate_if_drifted`]: tombstones
+    /// that stop [`TuningCache::save`]'s merge-with-disk from resurrecting
+    /// a decision this process measured to be stale. A fresh re-tune
+    /// ([`TuningCache::insert`]) clears the tombstone.
+    invalidated: BTreeSet<String>,
     /// Lookups answered from the cache.
     pub hits: usize,
     /// Lookups that fell through to a search.
@@ -111,7 +130,13 @@ impl TuningCache {
     }
 
     /// Loads a cache from `path`; a missing file yields an empty cache
-    /// bound to that path (first `save` creates it).
+    /// bound to that path (first `save` creates it). A file written by an
+    /// *older* format version starts empty too — its keys could never
+    /// match a current lookup, so the entries would only be dead weight —
+    /// and is rewritten in the current format on the next save. A file
+    /// from a *newer* version errors instead of being silently emptied
+    /// (an old binary must not wipe a newer binary's cache), as does a
+    /// current-version file that fails to parse (corruption).
     pub fn load(path: &Path) -> anyhow::Result<TuningCache> {
         let mut cache = TuningCache { path: Some(path.to_path_buf()), ..TuningCache::default() };
         let text = match std::fs::read_to_string(path) {
@@ -119,7 +144,21 @@ impl TuningCache {
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(cache),
             Err(e) => return Err(anyhow::anyhow!("reading {path:?}: {e}")),
         };
-        cache.entries = parse_entries(&Json::parse(&text)?)?;
+        let j = Json::parse(&text)?;
+        // A missing/malformed version is corruption, not staleness — no
+        // version-less format ever existed, so error rather than quietly
+        // wiping the decisions on the next save.
+        let Some(version) = j.get("version").and_then(Json::as_usize) else {
+            anyhow::bail!("tuning cache {path:?} has a missing or malformed 'version' field");
+        };
+        if version < CACHE_VERSION {
+            return Ok(cache);
+        }
+        anyhow::ensure!(
+            version == CACHE_VERSION,
+            "tuning cache {path:?} was written by a newer version ({version} > {CACHE_VERSION})"
+        );
+        cache.entries = parse_entries(&j)?;
         Ok(cache)
     }
 
@@ -143,9 +182,42 @@ impl TuningCache {
         self.entries.get(key)
     }
 
-    /// Stores a decision.
+    /// Stores a decision (clearing any drift tombstone for the key).
     pub fn insert(&mut self, key: String, config: TunedConfig) {
+        self.invalidated.remove(&key);
         self.entries.insert(key, config);
+    }
+
+    /// Drops `key` when measured serving throughput has drifted more than
+    /// `tolerance` (a fraction in `[0, 1]`) below the decision's recorded
+    /// GFlop/s — the cache stores that number for exactly this comparison.
+    /// The next lookup then misses and re-tunes under current conditions;
+    /// the drop also survives [`TuningCache::save`]'s merge with the
+    /// on-disk state. Returns whether an entry was dropped. Non-positive
+    /// or missing throughputs never invalidate (a decision that served
+    /// zero batches has not been contradicted), and neither do
+    /// model-sourced decisions: their recorded GFlop/s is on the KNC
+    /// machine model's scale, not the host's, so a host measurement can
+    /// neither confirm nor contradict it.
+    pub fn invalidate_if_drifted(
+        &mut self,
+        key: &str,
+        measured_gflops: f64,
+        tolerance: f64,
+    ) -> bool {
+        let Some(entry) = self.entries.get(key) else { return false };
+        if entry.source != "trial" {
+            return false;
+        }
+        if entry.gflops <= 0.0 || measured_gflops <= 0.0 {
+            return false;
+        }
+        if measured_gflops >= entry.gflops * (1.0 - tolerance.clamp(0.0, 1.0)) {
+            return false;
+        }
+        self.entries.remove(key);
+        self.invalidated.insert(key.to_string());
+        true
     }
 
     /// The whole cache as JSON (the on-disk form).
@@ -175,9 +247,33 @@ impl TuningCache {
         }
         let mut merged = self.entries.clone();
         if let Ok(text) = std::fs::read_to_string(path) {
-            if let Ok(disk) = Json::parse(&text).and_then(|j| parse_entries(&j)) {
-                for (k, v) in disk {
-                    merged.entry(k).or_insert(v);
+            if let Ok(j) = Json::parse(&text) {
+                // Never clobber a newer binary's cache or a file whose
+                // version field is corrupted; older-version entries are
+                // deliberately dropped (their keys are unreachable under
+                // the current key format).
+                let Some(version) = j.get("version").and_then(Json::as_usize) else {
+                    anyhow::bail!(
+                        "refusing to overwrite {path:?}: missing or malformed 'version' field"
+                    );
+                };
+                anyhow::ensure!(
+                    version <= CACHE_VERSION,
+                    "refusing to overwrite {path:?}: written by a newer version \
+                     ({version} > {CACHE_VERSION})"
+                );
+                if version == CACHE_VERSION {
+                    if let Ok(disk) = parse_entries(&j) {
+                        for (k, v) in disk {
+                            // Drift tombstones win over the on-disk copy;
+                            // otherwise the merge would resurrect the
+                            // stale decision.
+                            if self.invalidated.contains(&k) {
+                                continue;
+                            }
+                            merged.entry(k).or_insert(v);
+                        }
+                    }
                 }
             }
         }
@@ -224,6 +320,7 @@ mod tests {
             (
                 "00aa".to_string(),
                 TunedConfig {
+                    workload: Workload::Spmv,
                     format: Format::Csr,
                     policy: Policy::Dynamic(64),
                     threads: 8,
@@ -234,6 +331,7 @@ mod tests {
             (
                 "00bb".to_string(),
                 TunedConfig {
+                    workload: Workload::Spmm { k: 16 },
                     format: Format::Bcsr { r: 8, c: 1 },
                     policy: Policy::Dynamic(16),
                     threads: 4,
@@ -244,6 +342,7 @@ mod tests {
             (
                 "00cc".to_string(),
                 TunedConfig {
+                    workload: Workload::Spmv,
                     format: Format::Hyb { width: 16 },
                     policy: Policy::StaticBlock,
                     threads: 1,
@@ -320,11 +419,94 @@ mod tests {
     fn rejects_bad_versions_and_shapes() {
         assert!(TuningCache::from_json(&Json::parse(r#"{"version": 9}"#).unwrap()).is_err());
         assert!(
-            TuningCache::from_json(&Json::parse(r#"{"version": 1, "entries": 3}"#).unwrap())
+            TuningCache::from_json(&Json::parse(r#"{"version": 2, "entries": 3}"#).unwrap())
                 .is_err()
         );
         let bad_format =
-            r#"{"version": 1, "entries": {"k": {"format": "zzz", "policy": "static", "threads": 1}}}"#;
+            r#"{"version": 2, "entries": {"k": {"format": "zzz", "policy": "static", "threads": 1}}}"#;
         assert!(TuningCache::from_json(&Json::parse(bad_format).unwrap()).is_err());
+        let bad_workload = r#"{"version": 2, "entries": {"k": {"workload": "spmm0",
+            "format": "csr", "policy": "static", "threads": 1}}}"#;
+        assert!(TuningCache::from_json(&Json::parse(bad_workload).unwrap()).is_err());
+    }
+
+    #[test]
+    fn current_version_entries_without_workload_parse_as_spmv() {
+        // Lenient field parsing within the current version: a hand-edited
+        // entry lacking the workload field reads as an SpMV decision.
+        let legacy = r#"{"version": 2, "entries":
+            {"k": {"format": "csr", "policy": "dynamic,64", "threads": 2}}}"#;
+        let mut c = TuningCache::from_json(&Json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(c.get("k").unwrap().workload, Workload::Spmv);
+    }
+
+    #[test]
+    fn stale_version_files_load_empty_and_are_rewritten() {
+        // A pre-workload (version 1) file: its keys lack the workload
+        // suffix and could never match a lookup again, so load discards it
+        // wholesale rather than carrying dead entries forever.
+        let dir = TempDir::new("tcache-stale");
+        let path = dir.path().join("cache.json");
+        let v1 = r#"{"version": 1, "entries":
+            {"oldkey": {"format": "csr", "policy": "dynamic,64", "threads": 2}}}"#;
+        std::fs::write(&path, v1).unwrap();
+        let mut c = TuningCache::load(&path).unwrap();
+        assert!(c.is_empty(), "stale-version entries must be dropped");
+        // Corruption of a *current*-version file still errors, as does a
+        // missing version field (no version-less format ever existed).
+        std::fs::write(&path, r#"{"version": 2, "entries": 3}"#).unwrap();
+        assert!(TuningCache::load(&path).is_err());
+        std::fs::write(&path, r#"{"entries": {}}"#).unwrap();
+        assert!(TuningCache::load(&path).is_err());
+        // A *newer*-version file errors on load AND refuses to be
+        // clobbered by save — an old binary must not wipe it.
+        std::fs::write(&path, r#"{"version": 3, "entries": {}}"#).unwrap();
+        assert!(TuningCache::load(&path).is_err());
+        assert!(c.save().is_err(), "save must not overwrite a newer-version file");
+        // Saving the (empty-loaded) cache rewrites the stale file in the
+        // current format, dropping the unreachable v1 entries.
+        std::fs::write(&path, v1).unwrap();
+        c.insert(sample_entries()[0].0.clone(), sample_entries()[0].1.clone());
+        c.save().unwrap();
+        let mut back = TuningCache::load(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        assert!(back.get("oldkey").is_none());
+    }
+
+    #[test]
+    fn drift_invalidation_drops_entries_and_survives_merge_on_save() {
+        let dir = TempDir::new("tcache-drift");
+        let path = dir.path().join("cache.json");
+        let entries = sample_entries();
+        let mut writer = TuningCache::load(&path).unwrap();
+        for (k, v) in &entries {
+            writer.insert(k.clone(), v.clone());
+        }
+        writer.save().unwrap();
+
+        let mut c = TuningCache::load(&path).unwrap();
+        // Within tolerance (recorded 3.5, measured 3.0, tolerance 20%).
+        assert!(!c.invalidate_if_drifted("00aa", 3.0, 0.2));
+        // Unknown key and unmeasured throughput never invalidate.
+        assert!(!c.invalidate_if_drifted("none", 1.0, 0.2));
+        assert!(!c.invalidate_if_drifted("00aa", 0.0, 0.2));
+        // Model-sourced decisions never invalidate: their recorded GFlop/s
+        // is KNC-model scale, incomparable to a host measurement ("00bb"
+        // has source "model" and gflops 2.25).
+        assert!(!c.invalidate_if_drifted("00bb", 0.1, 0.2));
+        assert_eq!(c.len(), 3);
+        // Genuine drift: 1.0 < 3.5 · 0.8.
+        assert!(c.invalidate_if_drifted("00aa", 1.0, 0.2));
+        assert!(c.get("00aa").is_none(), "dropped entry must miss");
+        // The merge-on-save must not resurrect the on-disk copy.
+        c.save().unwrap();
+        let mut back = TuningCache::load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert!(back.get("00aa").is_none());
+        assert!(back.get("00bb").is_some());
+        // Re-tuning the key stores (and persists) a fresh decision again.
+        c.insert("00aa".to_string(), entries[0].1.clone());
+        c.save().unwrap();
+        assert_eq!(TuningCache::load(&path).unwrap().len(), 3);
     }
 }

@@ -1,25 +1,31 @@
 //! Analytic candidate ranking — the fallback when empirical trials are
 //! disabled (e.g. tuning offline, or on a loaded host where timing is
-//! meaningless).
+//! meaningless), and the ordering heuristic the trialer uses to meet an
+//! incumbent early.
 //!
-//! Reuses the paper-calibrated machinery: the CSR profile comes from
-//! [`crate::kernels::spmv_model`] (`-O3` variant), BCSR from
-//! [`crate::kernels::blocked_model`], and ELL/HYB are derived from the CSR
-//! profile by scaling the instruction and stream-byte terms with the
-//! padding blowup. Per-candidate scheduling is injected by recomputing the
-//! load imbalance for the candidate's policy, and the thread count maps
-//! onto the KNC model's cores × contexts grid. Absolute seconds are for a
-//! KNC, not the host — only the *ranking* is consumed.
+//! Reuses the paper-calibrated machinery per [`Workload`]: the CSR SpMV
+//! profile comes from [`crate::kernels::spmv_model`] (`-O3` variant), the
+//! CSR SpMM profile from [`crate::kernels::spmm_model`] (the
+//! compiler-vectorized `Generic` variant — what our host kernels are),
+//! BCSR-under-SpMV from [`crate::kernels::blocked_model`], and the padded
+//! formats are derived from the CSR profile by scaling the instruction and
+//! stream-byte terms with the padding blowup. Per-candidate scheduling is
+//! injected by recomputing the load imbalance for the candidate's policy,
+//! and the thread count maps onto the KNC model's cores × contexts grid.
+//! Absolute seconds are for a KNC, not the host — only the *ranking* is
+//! consumed.
 
 use crate::arch::phi::WorkProfile;
 use crate::arch::PhiMachine;
 use crate::kernels::blocked_model::bcsr_profile;
+use crate::kernels::spmm_model::{spmm_profile, SpmmAnalysis, SpmmVariant};
 use crate::kernels::spmv_model::{spmv_profile, SpmvAnalysis, SpmvVariant};
+use crate::kernels::Workload;
 use crate::sched::{LoadBalance, StaticAssignment};
 use crate::sparse::ell::ELL_LANES;
 use crate::sparse::{Bcsr, Csr};
 
-use super::space::{Candidate, Format};
+use super::space::{estimate_block_density, hyb_overflow_tail, Candidate, Format};
 
 /// The analytic ranker.
 pub struct CostModel {
@@ -38,15 +44,89 @@ impl CostModel {
         CostModel::default()
     }
 
-    /// Ranks candidates by predicted time, ascending (best first).
+    /// Ranks SpMV candidates by predicted time, ascending (best first).
     pub fn rank(&self, a: &Csr, candidates: &[Candidate]) -> Vec<(Candidate, f64)> {
-        let analysis = SpmvAnalysis::compute(a, 61);
-        let base = spmv_profile(a, SpmvVariant::O3, &analysis);
+        self.rank_for(a, candidates, Workload::Spmv)
+    }
+
+    /// Ranks candidates for one workload by predicted time, ascending.
+    pub fn rank_for(
+        &self,
+        a: &Csr,
+        candidates: &[Candidate],
+        workload: Workload,
+    ) -> Vec<(Candidate, f64)> {
+        self.rank_impl(a, candidates, workload, false)
+    }
+
+    /// Candidate *ordering* for the trialer's early-termination budget:
+    /// same ranking machinery, but every format is profiled with the
+    /// conversion-free analytic approximations (BCSR via
+    /// [`estimate_block_density`] instead of the calibrated
+    /// `bcsr_profile`, which converts the whole matrix). The trialer
+    /// converts and really times the formats itself — it only needs a
+    /// good order, and ordering must not cost a conversion the trial
+    /// loop then repeats.
+    pub fn ordering(
+        &self,
+        a: &Csr,
+        candidates: &[Candidate],
+        workload: Workload,
+    ) -> Vec<Candidate> {
+        self.rank_impl(a, candidates, workload, true)
+            .into_iter()
+            .map(|(cand, _)| cand)
+            .collect()
+    }
+
+    fn rank_impl(
+        &self,
+        a: &Csr,
+        candidates: &[Candidate],
+        workload: Workload,
+        cheap: bool,
+    ) -> Vec<(Candidate, f64)> {
+        let base = match workload {
+            Workload::Spmv => {
+                let analysis = SpmvAnalysis::compute(a, 61);
+                spmv_profile(a, SpmvVariant::O3, &analysis)
+            }
+            Workload::Spmm { k } => {
+                let analysis = SpmmAnalysis::compute(a, 61, k.max(1));
+                spmm_profile(a, SpmmVariant::Generic, &analysis)
+            }
+        };
         let weights: Vec<u64> = (0..a.nrows).map(|i| a.row_nnz(i) as u64 + 4).collect();
+        // The format-dependent profile work is the expensive part (a BCSR
+        // profile converts the matrix, SELL sorts row lengths) and depends
+        // only on the format — compute it once per distinct format, not
+        // once per (format, policy, threads) candidate.
+        let mut profiles: Vec<(Format, WorkProfile)> = Vec::new();
         let mut out: Vec<(Candidate, f64)> = candidates
             .iter()
             .map(|&cand| {
-                let mut w = self.profile_for(a, &base, cand.format);
+                if !profiles.iter().any(|(f, _)| *f == cand.format) {
+                    let p = match workload {
+                        // The cheap (ordering-only) SpMV arm swaps the
+                        // conversion-backed BCSR profile for the density
+                        // scaling the SpMM arm already uses.
+                        Workload::Spmv => match cand.format {
+                            Format::Bcsr { r, c } if cheap => {
+                                let density = estimate_block_density(a, r, c);
+                                let pad =
+                                    if density > 0.0 { (1.0 / density).min(8.0) } else { 1.0 };
+                                let mut w = base;
+                                w.instructions *= pad;
+                                w.stream_read_bytes *= pad;
+                                w
+                            }
+                            _ => self.profile_for(a, &base, cand.format),
+                        },
+                        Workload::Spmm { k } => spmm_profile_for(a, &base, cand.format, k.max(1)),
+                    };
+                    profiles.push((cand.format, p));
+                }
+                let mut w = profiles.iter().find(|(f, _)| *f == cand.format).unwrap().1;
                 let assign = StaticAssignment::build(cand.policy, a.nrows, cand.threads.max(1));
                 w.imbalance = LoadBalance::compute(&assign, &weights).imbalance;
                 let (cores, contexts) = map_threads(cand.threads);
@@ -58,59 +138,107 @@ impl CostModel {
         out
     }
 
-    /// Predicted time for a single candidate (KNC seconds; ranking only).
+    /// Predicted SpMV time for a single candidate (KNC seconds; ranking
+    /// only).
     pub fn predict(&self, a: &Csr, candidate: Candidate) -> f64 {
         self.rank(a, &[candidate])[0].1
     }
 
+    /// Predicted time for a single candidate under one workload.
+    pub fn predict_for(&self, a: &Csr, candidate: Candidate, workload: Workload) -> f64 {
+        self.rank_for(a, &[candidate], workload)[0].1
+    }
+
     fn profile_for(&self, a: &Csr, base: &WorkProfile, format: Format) -> WorkProfile {
-        let nnz = a.nnz() as f64;
         match format {
             Format::Csr => *base,
-            Format::Ell => {
-                // Padding inflates both the streamed matrix bytes and the
-                // executed inner-loop iterations by the same factor. The
-                // padded size is computed analytically (same rounding as
-                // `Ell::from_csr`) — materializing the payload here could
-                // allocate nrows × max_row slots just to read one scalar.
-                let max_nnz = (0..a.nrows).map(|i| a.row_nnz(i)).max().unwrap_or(0);
-                let width = max_nnz.max(1).div_ceil(ELL_LANES) * ELL_LANES;
-                let padded = (a.nrows * width) as f64;
-                let pad = padded / nnz.max(1.0);
-                let mut w = *base;
-                w.instructions = base.instructions * pad;
-                w.stream_read_bytes = 12.0 * padded;
-                w
-            }
             Format::Bcsr { r, c } => bcsr_profile(a, &Bcsr::from_csr(a, r, c), 61),
-            Format::Sell { c, sigma } => {
-                // Same padding-scaling shape as ELL, but with SELL's much
-                // smaller per-chunk padded size, computed analytically
-                // (identical arithmetic to `Sell::from_csr`).
-                let padded = crate::sparse::Sell::padded_len_for(a, c, sigma) as f64;
-                let pad = padded / nnz.max(1.0);
+            _ => {
+                let info = pad_info(a, format).expect("padded formats have pad info");
                 let mut w = *base;
-                w.instructions = base.instructions * pad;
-                w.stream_read_bytes = 12.0 * padded;
+                // Padded part scaled by its fill, plus a scalar COO pass
+                // for HYB's overflow (~8 instructions and 16 streamed
+                // bytes per overflow entry; tail = 0 for ELL/SELL).
+                w.instructions = base.instructions * info.pad + 8.0 * info.tail as f64;
+                w.stream_read_bytes = 12.0 * info.padded + 16.0 * info.tail as f64;
                 w
             }
-            Format::Hyb { width } => {
-                // The overflow split happens at the raw width, but the
-                // stored ELL part is lane-rounded exactly like the real
-                // conversion (`Hyb::from_csr` → `Ell::from_csr`).
-                let stored_width = width.max(1).div_ceil(ELL_LANES) * ELL_LANES;
-                let padded = (a.nrows * stored_width) as f64;
-                let tail: usize =
-                    (0..a.nrows).map(|i| a.row_nnz(i).saturating_sub(width)).sum();
-                let covered = (nnz - tail as f64).max(1.0);
-                let pad = (padded / covered).min(8.0);
-                let mut w = *base;
-                // ELL part scaled by its own fill, plus a scalar COO pass
-                // (~8 instructions and 16 streamed bytes per overflow entry).
-                w.instructions = base.instructions * pad + 8.0 * tail as f64;
-                w.stream_read_bytes = 12.0 * padded + 16.0 * tail as f64;
-                w
-            }
+        }
+    }
+}
+
+/// Stored-slot accounting shared by both workload arms, so the SpMV and
+/// SpMM rankings can never drift apart on what padding costs: padded slot
+/// count, padding blowup relative to the nonzeros those slots cover, and
+/// (HYB only) the serial overflow tail. The padded sizes are computed
+/// analytically with the same rounding as the real conversions —
+/// materializing an ELL payload here could allocate `nrows × max_row`
+/// slots just to read one scalar. `None` for the unpadded CSR and for
+/// BCSR, whose accounting differs per workload.
+struct PadInfo {
+    /// Stored slots of the padded part.
+    padded: f64,
+    /// Padding blowup: `padded / covered` nonzeros (capped at 8 for HYB).
+    pad: f64,
+    /// HYB overflow entries (0 for ELL/SELL).
+    tail: usize,
+}
+
+fn pad_info(a: &Csr, format: Format) -> Option<PadInfo> {
+    let nnz = a.nnz() as f64;
+    match format {
+        Format::Ell => {
+            let max_nnz = (0..a.nrows).map(|i| a.row_nnz(i)).max().unwrap_or(0);
+            let width = max_nnz.max(1).div_ceil(ELL_LANES) * ELL_LANES;
+            let padded = (a.nrows * width) as f64;
+            Some(PadInfo { padded, pad: padded / nnz.max(1.0), tail: 0 })
+        }
+        Format::Sell { c, sigma } => {
+            let padded = crate::sparse::Sell::padded_len_for(a, c, sigma) as f64;
+            Some(PadInfo { padded, pad: padded / nnz.max(1.0), tail: 0 })
+        }
+        Format::Hyb { width } => {
+            // The overflow split happens at the raw width, but the stored
+            // ELL part is lane-rounded exactly like the real conversion
+            // (`Hyb::from_csr` → `Ell::from_csr`).
+            let stored_width = width.max(1).div_ceil(ELL_LANES) * ELL_LANES;
+            let padded = (a.nrows * stored_width) as f64;
+            let tail = hyb_overflow_tail(a, width);
+            let covered = (nnz - tail as f64).max(1.0);
+            Some(PadInfo { padded, pad: (padded / covered).min(8.0), tail })
+        }
+        Format::Csr | Format::Bcsr { .. } => None,
+    }
+}
+
+/// Format scaling of the SpMM base profile: padded formats execute (and
+/// stream) the padding's extra slots, each now `k` FMAs wide, so the
+/// [`pad_info`] blowup applies to both the instruction and the stream-byte
+/// terms; HYB additionally pays its serial COO tail k-wide. BCSR's blowup
+/// comes from [`estimate_block_density`] instead of a full conversion.
+fn spmm_profile_for(a: &Csr, base: &WorkProfile, format: Format, k: usize) -> WorkProfile {
+    match format {
+        Format::Csr => *base,
+        Format::Bcsr { r, c } => {
+            let density = estimate_block_density(a, r, c);
+            let pad = if density > 0.0 { (1.0 / density).min(8.0) } else { 1.0 };
+            let mut w = *base;
+            w.instructions = base.instructions * pad;
+            w.stream_read_bytes = base.stream_read_bytes * pad;
+            w
+        }
+        _ => {
+            let info = pad_info(a, format).expect("padded formats have pad info");
+            let mut w = *base;
+            // Serial k-wide COO pass for HYB's overflow: ~2 instructions
+            // per produced value plus per-entry overhead, and 16
+            // index/value bytes + one k-wide X row per overflow entry
+            // (tail = 0 for ELL/SELL).
+            w.instructions =
+                base.instructions * info.pad + (6.0 + 2.0 * k as f64) * info.tail as f64;
+            w.stream_read_bytes =
+                base.stream_read_bytes * info.pad + (16.0 + 8.0 * k as f64) * info.tail as f64;
+            w
         }
     }
 }
@@ -205,6 +333,79 @@ mod tests {
         let t1 = m.predict(&a, cand(Format::Csr, 1));
         let t8 = m.predict(&a, cand(Format::Csr, 8));
         assert!(t8 < t1, "8 threads {t8} vs serial {t1}");
+    }
+
+    #[test]
+    fn spmm_rank_is_sorted_finite_and_padding_aware() {
+        let a = powerlaw(&PowerLawSpec {
+            n: 2000,
+            nnz: 10_000,
+            row_alpha: 1.6,
+            col_alpha: 1.4,
+            max_row: 400,
+            seed: 3,
+        });
+        let m = CostModel::new();
+        let w = Workload::Spmm { k: 16 };
+        let ranked = m.rank_for(
+            &a,
+            &[
+                cand(Format::Csr, 8),
+                cand(Format::Ell, 8),
+                cand(Format::Sell { c: 8, sigma: 256 }, 8),
+            ],
+            w,
+        );
+        assert_eq!(ranked.len(), 3);
+        for pair in ranked.windows(2) {
+            assert!(pair[0].1 <= pair[1].1, "must be ascending");
+        }
+        for (_, t) in &ranked {
+            assert!(t.is_finite() && *t > 0.0);
+        }
+        // Padding penalties carry over to the SpMM profiles.
+        let csr = m.predict_for(&a, cand(Format::Csr, 8), w);
+        let ell = m.predict_for(&a, cand(Format::Ell, 8), w);
+        assert!(ell > csr, "ELL {ell} must lose to CSR {csr} under heavy padding");
+    }
+
+    #[test]
+    fn ordering_is_a_permutation_of_the_candidates() {
+        let a = stencil_2d(30, 30);
+        let cands = [
+            cand(Format::Csr, 4),
+            cand(Format::Bcsr { r: 8, c: 1 }, 4),
+            cand(Format::Ell, 1),
+        ];
+        for w in [Workload::Spmv, Workload::Spmm { k: 8 }] {
+            let ordered = CostModel::new().ordering(&a, &cands, w);
+            assert_eq!(ordered.len(), cands.len());
+            for c in &cands {
+                assert!(ordered.contains(c), "{c} missing from ordering under {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn hyb_serial_tail_penalized_under_wide_spmm() {
+        // Hub-heavy rows overflow HYB's ELL width; the serial COO tail is
+        // charged k-wide, so HYB must fall behind CSR as k grows.
+        let a = powerlaw(&PowerLawSpec {
+            n: 2000,
+            nnz: 10_000,
+            row_alpha: 1.6,
+            col_alpha: 1.4,
+            max_row: 400,
+            seed: 3,
+        });
+        let m = CostModel::new();
+        let hyb = cand(Format::Hyb { width: 8 }, 8);
+        let csr = cand(Format::Csr, 8);
+        let w = Workload::Spmm { k: 32 };
+        assert!(
+            m.predict_for(&a, hyb, w) > m.predict_for(&a, csr, w),
+            "k=32 HYB must lose to CSR on an overflow-heavy matrix"
+        );
     }
 
     #[test]

@@ -70,6 +70,20 @@ impl<'a> Prepared<'a> {
         self.op.spmv_into(x, y, &self.ctx());
     }
 
+    /// Runs one fused SpMM: `Y ← AX` (row-major, width `k`) under the
+    /// candidate's schedule.
+    pub fn spmm(&self, x: &[f64], k: usize) -> Vec<f64> {
+        self.op.spmm(x, k, &self.ctx())
+    }
+
+    /// SpMM into a caller-provided buffer. (The batching server routes
+    /// through [`prepare_owned`] + [`SpmvOp::spmm_into`] directly; this is
+    /// the no-allocation convenience for library callers holding a
+    /// `Prepared`.)
+    pub fn spmm_into(&self, x: &[f64], y: &mut [f64], k: usize) {
+        self.op.spmm_into(x, y, k, &self.ctx());
+    }
+
     /// Bytes of the converted representation.
     pub fn storage_bytes(&self) -> usize {
         self.op.storage_bytes()
@@ -112,6 +126,31 @@ mod tests {
                         assert!((u - v).abs() < 1e-10, "{format} {policy} t{threads}");
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn prepared_spmm_matches_the_oracle() {
+        let a = matrix();
+        let k = 4;
+        let x = random_vector(a.ncols * k, 95);
+        let want = a.spmm(&x, k);
+        for format in [
+            Format::Csr,
+            Format::Ell,
+            Format::Bcsr { r: 4, c: 8 },
+            Format::Hyb { width: 4 },
+            Format::Sell { c: 8, sigma: 64 },
+        ] {
+            let p = Prepared::new(
+                &a,
+                Candidate { format, policy: Policy::Dynamic(32), threads: 4 },
+            );
+            let got = p.spmm(&x, k);
+            assert_eq!(got.len(), want.len());
+            for (u, v) in got.iter().zip(&want) {
+                assert!((u - v).abs() < 1e-10, "{format}");
             }
         }
     }

@@ -1,25 +1,32 @@
-//! Auto-tuning: per-matrix selection of format, schedule and thread count.
+//! Auto-tuning: per-(matrix, workload) selection of format, schedule and
+//! thread count.
 //!
 //! The paper's central practical finding is that the best SpMV
 //! configuration — storage format, OpenMP scheduling policy and chunk,
 //! thread count — varies per matrix, and its experiments sweep these by
 //! hand. A serving system cannot: this subsystem makes the selection
-//! automatic and caches it.
+//! automatic and caches it. The [`crate::kernels::Workload`] is a search
+//! dimension of its own: an SpMM decision is trialed on the fused SpMM
+//! kernels at the serving batch width (§5 shows the winners differ — the
+//! matrix is read once per k vectors, so padding and gather costs weigh
+//! differently), and SpMV and SpMM decisions for one matrix coexist in
+//! the cache under distinct keys.
 //!
 //! # Architecture
 //!
 //! ```text
-//!             MatrixStats ──► fingerprint ──► TuningCache (JSON, persistent)
+//!   (MatrixStats, Workload) ──► key ──► TuningCache (JSON, persistent)
 //!                  │                               │ hit: done
 //!                  ▼                               ▼ miss
-//!  [space]   SearchSpace::enumerate ── stats-pruned candidates
-//!                  │
+//!  [space]   SearchSpace::enumerate_for ── stats- and workload-pruned
+//!                  │                        candidates
 //!        trials on ▼          trials off
 //!  [trial]   Trialer ─ time      [cost] CostModel ─ rank with the
 //!            each candidate             paper-calibrated KNC models
+//!            on the workload            (spmv or spmm profiles)
 //!                  └──────────┬──────────┘
 //!                             ▼
-//!                        TunedConfig ──► [exec] Prepared ──► spmv
+//!                        TunedConfig ──► [exec] Prepared ──► spmv/spmm
 //! ```
 //!
 //! * [`space`] — the candidate space: formats ({CSR, ELL, BCSR r×c, HYB,
@@ -43,8 +50,10 @@
 //! # Adding a candidate format
 //!
 //! 1. Implement [`crate::kernels::SpmvOp`] for the new payload type (add a
-//!    parallel kernel to `kernels::native` if the format only has a serial
-//!    reference `spmv`).
+//!    parallel SpMV kernel *and* a fused SpMM override to
+//!    `kernels::native` — without the override the format falls back to k
+//!    gather/SpMV/scatter passes and will trial poorly for SpMM
+//!    workloads).
 //! 2. Add a variant to [`space::Format`] (+ `Display`/`parse` arms — the
 //!    cache round-trips through those strings) and a conversion arm in
 //!    [`exec::prepare`]/[`exec::prepare_owned`].
@@ -67,12 +76,13 @@ pub use exec::{prepare, prepare_owned, Prepared};
 pub use space::{Candidate, Format, SearchSpace, SpaceConfig};
 pub use trial::{TrialResult, Trialer};
 
+pub use crate::kernels::Workload;
 use crate::sparse::stats::row_length_cv;
 use crate::sparse::{Csr, MatrixStats};
 
-/// Cache key for one matrix under one tuner configuration.
+/// Cache key for one matrix under one tuner configuration and workload.
 ///
-/// Three components, because entries must only be shared when the search
+/// Four components, because entries must only be shared when the search
 /// would have been identical:
 /// * the [`MatrixStats::fingerprint_hex`] shape statistics;
 /// * the structural metrics the pruner consumes (row-length CV, 8×8 block
@@ -81,12 +91,19 @@ use crate::sparse::{Csr, MatrixStats};
 /// * the decision procedure itself (trials vs. model, and the search-space
 ///   shape), so a `model_only` or `quick()` decision is never served to a
 ///   full-space trials tuner. Warmup/measure counts are deliberately
-///   excluded — they change timing precision, not the space searched.
+///   excluded — they change timing precision, not the space searched;
+/// * the [`Workload`] (visible as the key's suffix), so a matrix's SpMV
+///   and SpMM decisions coexist instead of shadowing each other.
 ///
 /// The structural scans are O(nnz) and also run inside `enumerate` on a
 /// miss; that duplication is accepted — a hit still costs far less than
 /// the search, and a caller's subsequent SpMV is O(nnz) anyway.
-fn cache_key(a: &Csr, stats: &MatrixStats, config: &TunerConfig) -> String {
+fn cache_key(
+    a: &Csr,
+    stats: &MatrixStats,
+    config: &TunerConfig,
+    workload: Workload,
+) -> String {
     fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
         for &b in bytes {
             h = (h ^ b as u64).wrapping_mul(0x100000001b3);
@@ -120,10 +137,11 @@ fn cache_key(a: &Csr, stats: &MatrixStats, config: &TunerConfig) -> String {
         s.bcsr_min_density,
         s.hyb_min_width_ratio,
         s.sell_max_pad,
+        s.hyb_spmm_tail_budget,
     ] {
         h = fnv(h, &bits.to_bits().to_le_bytes());
     }
-    format!("{}-{h:016x}", stats.fingerprint_hex())
+    format!("{}-{h:016x}-{workload}", stats.fingerprint_hex())
 }
 
 /// Tuner knobs.
@@ -189,17 +207,47 @@ impl Tuner {
         Tuner::new(TunerConfig::quick(), TuningCache::in_memory())
     }
 
-    /// Selects a configuration for `a`: answers from the cache when the
-    /// fingerprint is known, otherwise searches (trials or cost model),
-    /// stores the decision and persists the cache.
+    /// Selects an SpMV configuration for `a`: answers from the cache when
+    /// the fingerprint is known, otherwise searches (trials or cost
+    /// model), stores the decision and persists the cache.
     pub fn tune(&mut self, name: &str, a: &Csr) -> crate::Result<TunedConfig> {
+        self.tune_workload(name, a, Workload::Spmv)
+    }
+
+    /// [`Tuner::tune`] for an explicit workload: an SpMM search trials the
+    /// fused SpMM kernels at the workload's batch width, and its decision
+    /// is cached under a key distinct from the SpMV decision's.
+    pub fn tune_workload(
+        &mut self,
+        name: &str,
+        a: &Csr,
+        workload: Workload,
+    ) -> crate::Result<TunedConfig> {
         let stats = MatrixStats::compute(name, a);
-        self.tune_with_stats(a, &stats)
+        self.tune_with_stats_for(a, &stats, workload)
     }
 
     /// [`Tuner::tune`] with precomputed statistics.
     pub fn tune_with_stats(&mut self, a: &Csr, stats: &MatrixStats) -> crate::Result<TunedConfig> {
-        let key = cache_key(a, stats, &self.config);
+        self.tune_with_stats_for(a, stats, Workload::Spmv)
+    }
+
+    /// The cache key [`Tuner::tune_workload`] files decisions under —
+    /// callers measuring live throughput hand it to
+    /// [`TuningCache::invalidate_if_drifted`].
+    pub fn key(&self, name: &str, a: &Csr, workload: Workload) -> String {
+        let stats = MatrixStats::compute(name, a);
+        cache_key(a, &stats, &self.config, workload)
+    }
+
+    /// [`Tuner::tune_workload`] with precomputed statistics.
+    pub fn tune_with_stats_for(
+        &mut self,
+        a: &Csr,
+        stats: &MatrixStats,
+        workload: Workload,
+    ) -> crate::Result<TunedConfig> {
+        let key = cache_key(a, stats, &self.config, workload);
         if let Some(found) = self.cache.get(&key) {
             let found = found.clone();
             if self.config.verbose {
@@ -207,7 +255,7 @@ impl Tuner {
             }
             return Ok(found);
         }
-        let space = space::enumerate(a, stats, &self.config.space);
+        let space = space::enumerate_for(a, stats, &self.config.space, workload);
         anyhow::ensure!(
             !space.candidates.is_empty(),
             "search space empty for {} ({} pruned)",
@@ -221,9 +269,11 @@ impl Tuner {
         }
         let chosen = if self.config.trials {
             let best = Trialer::new(self.config.warmup, self.config.measure)
+                .with_workload(workload)
                 .best(a, &space.candidates)
                 .expect("non-empty candidate list");
             TunedConfig {
+                workload,
                 format: best.candidate.format,
                 policy: best.candidate.policy,
                 threads: best.candidate.threads,
@@ -231,13 +281,14 @@ impl Tuner {
                 source: "trial".to_string(),
             }
         } else {
-            let ranked = CostModel::new().rank(a, &space.candidates);
+            let ranked = CostModel::new().rank_for(a, &space.candidates, workload);
             let (cand, secs) = ranked[0];
             TunedConfig {
+                workload,
                 format: cand.format,
                 policy: cand.policy,
                 threads: cand.threads,
-                gflops: 2.0 * a.nnz() as f64 / secs.max(1e-12) / 1e9,
+                gflops: workload.flops(a.nnz()) / secs.max(1e-12) / 1e9,
                 source: "model".to_string(),
             }
         };
@@ -347,5 +398,36 @@ mod tests {
         let (config, y) = tune_and_run(&a, &x).unwrap();
         assert!(config.threads >= 1);
         assert_close(&y, &a.spmv(&x));
+    }
+
+    #[test]
+    fn spmv_and_spmm_decisions_coexist_under_distinct_keys() {
+        let a = matrix();
+        let mut tuner = Tuner::quick();
+        let spmv = tuner.tune("m", &a).unwrap();
+        let spmm = tuner.tune_workload("m", &a, Workload::Spmm { k: 8 }).unwrap();
+        assert_eq!(spmv.workload, Workload::Spmv);
+        assert_eq!(spmm.workload, Workload::Spmm { k: 8 });
+        assert_eq!(tuner.cache.misses, 2, "each workload searches once");
+        assert_ne!(
+            tuner.key("m", &a, Workload::Spmv),
+            tuner.key("m", &a, Workload::Spmm { k: 8 }),
+            "workloads must not shadow each other"
+        );
+        // Both decisions answer from the cache on repeat, verbatim.
+        assert_eq!(tuner.tune("m", &a).unwrap(), spmv);
+        assert_eq!(tuner.tune_workload("m", &a, Workload::Spmm { k: 8 }).unwrap(), spmm);
+        assert_eq!((tuner.cache.hits, tuner.cache.misses), (2, 2));
+    }
+
+    #[test]
+    fn tuned_spmm_decision_computes_the_right_batch() {
+        let a = matrix();
+        let k = 5;
+        let x = random_vector(a.ncols * k, 11);
+        let mut tuner = Tuner::quick();
+        let decision = tuner.tune_workload("m", &a, Workload::Spmm { k }).unwrap();
+        let y = Prepared::new(&a, decision.candidate()).spmm(&x, k);
+        assert_close(&y, &a.spmm(&x, k));
     }
 }

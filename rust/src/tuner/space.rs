@@ -17,7 +17,15 @@
 //!   sort of the row lengths, per-chunk maxima) exceeds the break-even.
 //! * `static` scheduling is dropped when row lengths are skewed (§4.2:
 //!   dynamic,32/64 wins on irregular instances).
+//!
+//! The space is enumerated per [`Workload`]: most heuristics are shared
+//! (padding blowup is a *relative* overhead, identical under SpMV and
+//! SpMM), but HYB's COO overflow runs serially after the parallel ELL
+//! part, and that serial tail scales with the batch width k — so
+//! [`enumerate_for`] prunes HYB from SpMM spaces on heavy-overflow
+//! matrices that are perfectly fine SpMV candidates.
 
+use crate::kernels::Workload;
 use crate::sched::Policy;
 use crate::sparse::stats::row_length_cv;
 use crate::sparse::{Csr, MatrixStats};
@@ -154,6 +162,12 @@ pub struct SpaceConfig {
     /// Skip a SELL shape whose padded/nnz blowup exceeds this (computed
     /// analytically via [`crate::sparse::Sell::padded_len_for`]).
     pub sell_max_pad: f64,
+    /// Skip HYB when `k × overflow_fraction` exceeds this: the COO
+    /// overflow is a serial tail whose cost scales with the SpMM batch
+    /// width while the parallel ELL part speeds up (Amdahl). At k = 1
+    /// the product is the overflow fraction itself, so SpMV spaces are
+    /// unaffected by the default budget.
+    pub hyb_spmm_tail_budget: f64,
 }
 
 impl Default for SpaceConfig {
@@ -181,6 +195,7 @@ impl Default for SpaceConfig {
             // per-chunk bookkeeping. σ trades padding against locality.
             sell_shapes: vec![(8, 256), (32, 1024)],
             sell_max_pad: 1.5,
+            hyb_spmm_tail_budget: 1.0,
         }
     }
 }
@@ -214,6 +229,15 @@ pub struct SearchSpace {
     pub pruned: Vec<String>,
 }
 
+/// Nonzeros that overflow HYB's ELL part at the given split width — the
+/// size of the serial COO tail, computed from row lengths alone. Shared by
+/// the pruner and both cost-model arms so the heuristics can never drift
+/// apart on what "the tail" means (the split happens at the raw width;
+/// lane rounding only affects the stored ELL part).
+pub fn hyb_overflow_tail(a: &Csr, width: usize) -> usize {
+    (0..a.nrows).map(|i| a.row_nnz(i).saturating_sub(width)).sum()
+}
+
 /// Exact block-fill ratio of an `r × c` blocking without materializing the
 /// payloads — the same touched-block scan as [`crate::sparse::Bcsr`] minus
 /// the value arrays.
@@ -242,8 +266,19 @@ pub fn estimate_block_density(a: &Csr, r: usize, c: usize) -> f64 {
     }
 }
 
-/// Enumerates the pruned search space for one matrix.
+/// Enumerates the pruned SpMV search space for one matrix
+/// ([`enumerate_for`] with [`Workload::Spmv`]).
 pub fn enumerate(a: &Csr, stats: &MatrixStats, cfg: &SpaceConfig) -> SearchSpace {
+    enumerate_for(a, stats, cfg, Workload::Spmv)
+}
+
+/// Enumerates the pruned search space for one matrix under one workload.
+pub fn enumerate_for(
+    a: &Csr,
+    stats: &MatrixStats,
+    cfg: &SpaceConfig,
+    workload: Workload,
+) -> SearchSpace {
     let mut formats: Vec<Format> = vec![Format::Csr];
     let mut pruned: Vec<String> = Vec::new();
 
@@ -271,7 +306,21 @@ pub fn enumerate(a: &Csr, stats: &MatrixStats, cfg: &SpaceConfig) -> SearchSpace
     }
     if ratio > cfg.hyb_min_width_ratio && stats.nnz > 0 {
         let width = (mean.ceil() as usize).max(1).div_ceil(8) * 8;
-        formats.push(Format::Hyb { width });
+        // The overflow beyond `width` is a serial pass whose cost scales
+        // with the workload's k while the ELL part parallelizes — the
+        // Amdahl tail that makes HYB a poor SpMM candidate on matrices it
+        // serves fine as SpMV.
+        let tail_frac = hyb_overflow_tail(a, width) as f64 / stats.nnz.max(1) as f64;
+        if workload.k() as f64 * tail_frac <= cfg.hyb_spmm_tail_budget {
+            formats.push(Format::Hyb { width });
+        } else {
+            pruned.push(format!(
+                "hyb{width}: serial overflow tail {:.1}% × k={} exceeds budget {:.2}",
+                100.0 * tail_frac,
+                workload.k(),
+                cfg.hyb_spmm_tail_budget
+            ));
+        }
     } else {
         pruned.push(format!(
             "hyb: no heavy tail (max/mean row ratio {ratio:.2} ≤ {:.2})",
@@ -429,6 +478,34 @@ mod tests {
             "a lone giant hub must prune SELL"
         );
         assert!(s.pruned.iter().any(|p| p.starts_with("sell")));
+    }
+
+    #[test]
+    fn hyb_survives_spmv_but_is_pruned_from_wide_spmm_spaces() {
+        // Hub-heavy web graph: a real overflow tail. At k = 1 the tail is
+        // a few percent of serial work (fine); at k = 16 it dominates.
+        let a = powerlaw(&PowerLawSpec {
+            n: 3000,
+            nnz: 15_000,
+            row_alpha: 1.6,
+            col_alpha: 1.4,
+            max_row: 400,
+            seed: 21,
+        });
+        let stats = MatrixStats::compute("t", &a);
+        let cfg = SpaceConfig::default();
+        let spmv = enumerate_for(&a, &stats, &cfg, Workload::Spmv);
+        assert!(
+            formats_of(&spmv).iter().any(|f| matches!(f, Format::Hyb { .. })),
+            "SpMV space must keep HYB (pruned: {:?})",
+            spmv.pruned
+        );
+        let spmm = enumerate_for(&a, &stats, &cfg, Workload::Spmm { k: 16 });
+        assert!(
+            !formats_of(&spmm).iter().any(|f| matches!(f, Format::Hyb { .. })),
+            "k=16 must prune HYB's serial overflow tail"
+        );
+        assert!(spmm.pruned.iter().any(|p| p.starts_with("hyb") && p.contains("k=16")));
     }
 
     #[test]

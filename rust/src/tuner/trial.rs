@@ -3,31 +3,57 @@
 //!
 //! Trials are deliberately much shorter than the paper's measurement
 //! protocol (70 runs) — tuning happens on the serving path, so the budget
-//! per candidate is a handful of SpMVs and the statistic is the *minimum*,
-//! which is robust to scheduling noise at small sample sizes. Each distinct
-//! format is converted exactly once and reused across every (policy,
-//! threads) combination that names it.
+//! per candidate is a handful of kernel runs and the statistic is the
+//! *minimum*, which is robust to scheduling noise at small sample sizes.
+//! Each distinct format is converted exactly once and reused across every
+//! (policy, threads) combination that names it.
+//!
+//! Two levers keep the budget tight:
+//!
+//! * candidates are timed on the *workload being tuned* — an SpMM decision
+//!   is measured on the fused SpMM kernel at the configured batch width,
+//!   never extrapolated from SpMV timings;
+//! * adaptive early termination — candidates are trialed in the
+//!   [`CostModel`]'s predicted order (so the incumbent is strong early),
+//!   and a candidate's timing loop stops once its best observation cannot
+//!   plausibly catch the incumbent (the min statistic only improves with
+//!   more samples, and timing noise adds time rather than removing it, so
+//!   a [`Trialer::margin`]-wide gap after [`MIN_PROBE`] probes is final).
 
 use std::time::Instant;
 
 use crate::kernels::op::{ExecCtx, SpmvOp};
+use crate::kernels::Workload;
 use crate::sparse::gen::random_vector;
 use crate::sparse::Csr;
 
+use super::cost::CostModel;
 use super::exec::prepare;
 use super::space::{Candidate, Format};
+
+/// Measured iterations before early termination may trigger: one probe can
+/// catch a cold cache or a scheduler hiccup, two in a row cannot both be
+/// flukes in the same direction.
+pub const MIN_PROBE: usize = 2;
+
+/// Default early-termination margin: a candidate more than 30% behind the
+/// incumbent's best after [`MIN_PROBE`] probes is abandoned.
+pub const DEFAULT_TRIAL_MARGIN: f64 = 1.3;
 
 /// Timing of one candidate.
 #[derive(Debug, Clone)]
 pub struct TrialResult {
     /// The candidate measured.
     pub candidate: Candidate,
-    /// Best observed seconds per SpMV.
+    /// Best observed seconds per kernel run.
     pub secs: f64,
-    /// GFlop/s at `secs` (2·nnz flops).
+    /// GFlop/s at `secs` (`2·nnz·k` flops).
     pub gflops: f64,
     /// One-time format conversion cost (amortized over reuse).
     pub convert_secs: f64,
+    /// Measured iterations actually run (less than `measure` when the
+    /// early-termination budget cut the loop short).
+    pub iters: usize,
 }
 
 /// The trial driver: warmup then measured iterations per candidate.
@@ -37,29 +63,70 @@ pub struct Trialer {
     pub warmup: usize,
     /// Timed iterations per candidate (min is reported).
     pub measure: usize,
+    /// Workload every candidate is timed on.
+    pub workload: Workload,
+    /// Early-termination margin: once a candidate's best observation
+    /// exceeds `incumbent_best · margin` after [`MIN_PROBE`] probes, its
+    /// remaining iterations are skipped. `f64::INFINITY` disables the
+    /// cutoff (and the cost-model candidate ordering it relies on).
+    pub margin: f64,
 }
 
 impl Default for Trialer {
     fn default() -> Self {
-        Trialer { warmup: 2, measure: 8 }
+        Trialer {
+            warmup: 2,
+            measure: 8,
+            workload: Workload::Spmv,
+            margin: DEFAULT_TRIAL_MARGIN,
+        }
     }
 }
 
 impl Trialer {
-    /// Creates a trialer with explicit counts.
+    /// Creates an SpMV trialer with explicit counts.
     pub fn new(warmup: usize, measure: usize) -> Trialer {
-        Trialer { warmup, measure: measure.max(1) }
+        Trialer { warmup, measure: measure.max(1), ..Trialer::default() }
     }
 
-    /// Times every candidate (formats converted once each). Kernels run on
-    /// the persistent global [`crate::sched::WorkerPool`], so the timings
-    /// measure steady-state execution, not thread-spawn latency.
+    /// The same trialer timing `workload` instead.
+    pub fn with_workload(self, workload: Workload) -> Trialer {
+        Trialer { workload, ..self }
+    }
+
+    /// The same trialer with an explicit early-termination margin
+    /// (`f64::INFINITY` times every candidate fully, in the given order).
+    pub fn with_margin(self, margin: f64) -> Trialer {
+        Trialer { margin, ..self }
+    }
+
+    /// Times every candidate on the configured workload (formats converted
+    /// once each). Kernels run on the persistent global
+    /// [`crate::sched::WorkerPool`], so the timings measure steady-state
+    /// execution, not thread-spawn latency. With a finite margin the
+    /// candidates are trialed in the cost model's predicted order and
+    /// hopeless timing loops are cut short; every candidate still gets a
+    /// [`TrialResult`] (its `secs` is the min of the iterations it ran).
     pub fn run_all(&self, a: &Csr, candidates: &[Candidate]) -> Vec<TrialResult> {
-        let x = random_vector(a.ncols, 0x7e57_0001);
-        let mut y = vec![0.0f64; a.nrows];
+        let workload = match self.workload {
+            Workload::Spmm { k } => Workload::Spmm { k: k.max(1) },
+            w => w,
+        };
+        let k = workload.k();
+        let x = random_vector(a.ncols * k, 0x7e57_0001);
+        let mut y = vec![0.0f64; a.nrows * k];
+        let flops = workload.flops(a.nnz());
+        let ordered: Vec<Candidate> = if self.margin.is_finite() && candidates.len() > 1 {
+            // Conversion-free ordering: the trial loop below converts the
+            // formats itself, so the ordering pass must not convert too.
+            CostModel::new().ordering(a, candidates, workload)
+        } else {
+            candidates.to_vec()
+        };
         let mut prepared: Vec<(Format, Box<dyn SpmvOp + '_>, f64)> = Vec::new();
-        let mut out = Vec::with_capacity(candidates.len());
-        for &cand in candidates {
+        let mut out = Vec::with_capacity(ordered.len());
+        let mut incumbent = f64::INFINITY;
+        for &cand in &ordered {
             if !prepared.iter().any(|(f, _, _)| *f == cand.format) {
                 let t0 = Instant::now();
                 let op = prepare(a, cand.format);
@@ -69,21 +136,28 @@ impl Trialer {
                 prepared.iter().find(|(f, _, _)| *f == cand.format).unwrap();
             let ctx = ExecCtx::pooled(cand.threads, cand.policy);
             for _ in 0..self.warmup {
-                op.spmv_into(&x, &mut y, &ctx);
+                op.apply(workload, &x, &mut y, &ctx);
                 std::hint::black_box(&mut y);
             }
             let mut best = f64::INFINITY;
+            let mut iters = 0usize;
             for _ in 0..self.measure.max(1) {
                 let t0 = Instant::now();
-                op.spmv_into(&x, &mut y, &ctx);
+                op.apply(workload, &x, &mut y, &ctx);
                 std::hint::black_box(&mut y);
                 best = best.min(t0.elapsed().as_secs_f64());
+                iters += 1;
+                if iters >= MIN_PROBE && best > incumbent * self.margin {
+                    break;
+                }
             }
+            incumbent = incumbent.min(best);
             out.push(TrialResult {
                 candidate: cand,
                 secs: best,
-                gflops: 2.0 * a.nnz() as f64 / best.max(1e-12) / 1e9,
+                gflops: flops / best.max(1e-12) / 1e9,
                 convert_secs: *convert_secs,
+                iters,
             });
         }
         out
@@ -121,6 +195,7 @@ mod tests {
         assert!(best.secs.is_finite() && best.secs >= 0.0);
         for r in &all {
             assert!(r.secs >= 0.0 && r.gflops >= 0.0);
+            assert!(r.iters >= 1);
         }
     }
 
@@ -137,5 +212,66 @@ mod tests {
         let space = enumerate(&a, &stats, &SpaceConfig::quick());
         let results = Trialer::new(0, 1).run_all(&a, &space.candidates);
         assert_eq!(results.len(), space.candidates.len());
+        // Every input candidate appears exactly once, whatever the order.
+        for cand in &space.candidates {
+            assert_eq!(results.iter().filter(|r| r.candidate == *cand).count(), 1);
+        }
+    }
+
+    #[test]
+    fn spmm_trials_time_the_fused_kernel_at_the_batch_width() {
+        let a = stencil_2d(20, 20);
+        let sell = Format::Sell { c: 8, sigma: 64 };
+        let candidates = [
+            Candidate { format: Format::Csr, policy: Policy::Dynamic(64), threads: 1 },
+            Candidate { format: sell, policy: Policy::Dynamic(64), threads: 1 },
+        ];
+        let t = Trialer::new(0, 2).with_workload(Workload::Spmm { k: 4 });
+        let results = t.run_all(&a, &candidates);
+        assert_eq!(results.len(), 2);
+        for r in &results {
+            assert!(r.secs.is_finite() && r.secs >= 0.0);
+            // GFlop/s is computed over 2·nnz·k flops, so it must be
+            // consistent with the recorded seconds.
+            let implied = Workload::Spmm { k: 4 }.flops(a.nnz()) / r.secs.max(1e-12) / 1e9;
+            assert!((implied - r.gflops).abs() <= 1e-9 * implied.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn zero_margin_cuts_every_later_candidate_at_min_probe() {
+        let a = stencil_2d(25, 25);
+        let candidates = [
+            Candidate { format: Format::Csr, policy: Policy::Dynamic(64), threads: 1 },
+            Candidate { format: Format::Csr, policy: Policy::Dynamic(16), threads: 1 },
+            Candidate { format: Format::Ell, policy: Policy::Dynamic(64), threads: 1 },
+        ];
+        let measure = 6;
+        let results = Trialer::new(0, measure).with_margin(0.0).run_all(&a, &candidates);
+        assert_eq!(results.len(), 3);
+        // The first trialed candidate faces an infinite incumbent and runs
+        // fully; every later one is strictly worse than incumbent·0 and
+        // stops right at the probe floor.
+        assert_eq!(results[0].iters, measure);
+        for r in &results[1..] {
+            assert_eq!(r.iters, MIN_PROBE, "{}", r.candidate);
+        }
+    }
+
+    #[test]
+    fn infinite_margin_times_every_iteration_in_given_order() {
+        let a = stencil_2d(25, 25);
+        let candidates = [
+            Candidate { format: Format::Ell, policy: Policy::Dynamic(64), threads: 1 },
+            Candidate { format: Format::Csr, policy: Policy::Dynamic(64), threads: 1 },
+        ];
+        let measure = 3;
+        let results =
+            Trialer::new(0, measure).with_margin(f64::INFINITY).run_all(&a, &candidates);
+        assert_eq!(results.len(), 2);
+        for (r, cand) in results.iter().zip(&candidates) {
+            assert_eq!(r.candidate, *cand, "disabled budget must preserve order");
+            assert_eq!(r.iters, measure);
+        }
     }
 }

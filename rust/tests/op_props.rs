@@ -1,11 +1,14 @@
 //! Property tests for the format-erased execution stack: every [`SpmvOp`]
 //! implementation (including SELL-C-σ across several (C, σ) shapes) must
 //! match the serial CSR oracle on arbitrary matrices and on the paper's
-//! generator suite, and the persistent [`WorkerPool`] must be reusable
-//! across calls without leaking threads.
+//! generator suite — for SpMV and for the fused SpMM kernels against the
+//! k-independent-passes oracle — and the persistent [`WorkerPool`] must
+//! be reusable across calls without leaking threads.
 
 use phi_spmv::kernels::{ExecCtx, SpmvOp};
 use phi_spmv::sched::{Policy, WorkerPool};
+use phi_spmv::sparse::gen::banded::{banded_runs, BandedSpec};
+use phi_spmv::sparse::gen::powerlaw::{powerlaw, PowerLawSpec};
 use phi_spmv::sparse::gen::{paper_suite, random_vector, randomize_values};
 use phi_spmv::sparse::{Bcsr, Csr, Ell, Hyb, Sell};
 use phi_spmv::util::prop::{arb, check};
@@ -82,6 +85,84 @@ fn every_op_spmm_matches_the_serial_oracle() {
             for op in all_ops(a) {
                 let got = op.spmm(x, *k, &ctx);
                 assert_close(&got, &want, &format!("{} k={k}", op.format_name()))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The SpMM oracle the fused kernels must match: `k` *independent* CSR
+/// SpMV passes, one per column of the row-major X/Y panels. (UFCS: with
+/// SpmvOp imported, the blanket `&T` impl would shadow the inherent
+/// one-argument `Csr::spmv`.)
+fn spmm_oracle(a: &Csr, x: &[f64], k: usize) -> Vec<f64> {
+    let mut y = vec![0.0f64; a.nrows * k];
+    let mut xu = vec![0.0f64; a.ncols];
+    for u in 0..k {
+        for i in 0..a.ncols {
+            xu[i] = x[i * k + u];
+        }
+        let yu = Csr::spmv(a, &xu);
+        for i in 0..a.nrows {
+            y[i * k + u] = yu[i];
+        }
+    }
+    y
+}
+
+#[test]
+fn every_fused_spmm_matches_k_independent_spmv_passes() {
+    // Pattern classes with different failure modes: ragged random rows
+    // (empty rows, rectangular shapes), a hub-heavy power-law web graph
+    // (HYB overflow, SELL σ-windows), and a banded run-structured matrix
+    // (BCSR's aligned blocks). k straddles the kernels' 16-wide column
+    // blocking.
+    let web = powerlaw(&PowerLawSpec {
+        n: 900,
+        nnz: 5_400,
+        row_alpha: 1.6,
+        col_alpha: 1.4,
+        max_row: 120,
+        seed: 13,
+    });
+    let band = banded_runs(&BandedSpec {
+        n: 700,
+        mean_row: 10.0,
+        run: 8,
+        locality: 0.05,
+        seed: 17,
+    });
+    let ctx = ExecCtx::pooled(4, Policy::Dynamic(32));
+    for (tag, a) in [("powerlaw", web), ("banded", band)] {
+        for k in [1usize, 4, 17] {
+            let x = random_vector(a.ncols * k, 31 + k as u64);
+            let want = spmm_oracle(&a, &x, k);
+            for op in all_ops(&a) {
+                let got = op.spmm(&x, k, &ctx);
+                assert_close(&got, &want, &format!("{tag} {} k={k}", op.format_name()))
+                    .unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_spmm_matches_the_oracle_on_ragged_random_matrices() {
+    check(
+        "op-fused-spmm-oracle",
+        |rng| {
+            let a = arb::csr(rng, 90, 9);
+            let k = [1usize, 4, 17][rng.usize_below(3)];
+            let x = arb::vector(rng, a.ncols * k);
+            (a, k, x)
+        },
+        |(a, k, x)| {
+            let want = spmm_oracle(a, x, *k);
+            for ctx in [ExecCtx::serial(), ExecCtx::pooled(4, Policy::Dynamic(16))] {
+                for op in all_ops(a) {
+                    let got = op.spmm(x, *k, &ctx);
+                    assert_close(&got, &want, &format!("{} k={k}", op.format_name()))?;
+                }
             }
             Ok(())
         },

@@ -4,8 +4,8 @@
 
 use phi_spmv::sched::Policy;
 use phi_spmv::sparse::MatrixStats;
-use phi_spmv::tuner::space::{enumerate, SpaceConfig};
-use phi_spmv::tuner::{Format, Prepared, TunedConfig, Tuner, TuningCache};
+use phi_spmv::tuner::space::{enumerate_for, SpaceConfig};
+use phi_spmv::tuner::{Format, Prepared, TunedConfig, Tuner, TuningCache, Workload};
 use phi_spmv::util::prop::{arb, check};
 
 fn assert_close(got: &[f64], want: &[f64]) -> Result<(), String> {
@@ -39,26 +39,78 @@ fn tuned_config_always_matches_serial_oracle() {
 
 #[test]
 fn every_surviving_candidate_matches_serial_oracle() {
-    // Stronger than the tuned pick: whatever the pruner lets through must
-    // be numerically safe, so the trialer can never "win" with a wrong
-    // kernel.
+    // Stronger than the tuned pick: whatever the pruner lets through —
+    // under either workload — must be numerically safe, so the trialer
+    // can never "win" with a wrong kernel.
     check(
         "space-oracle",
         |rng| {
             let a = arb::square_csr(rng, 80, 8);
+            let k = 1 + rng.usize_below(5);
             let x = arb::vector(rng, a.ncols);
-            (a, x)
+            let xk = arb::vector(rng, a.ncols * k);
+            (a, k, x, xk)
         },
-        |(a, x)| {
+        |(a, k, x, xk)| {
             let stats = MatrixStats::compute("prop", a);
-            let space = enumerate(a, &stats, &SpaceConfig::quick());
-            if space.candidates.is_empty() {
+            let spmv_space = enumerate_for(a, &stats, &SpaceConfig::quick(), Workload::Spmv);
+            if spmv_space.candidates.is_empty() {
                 return Err("space must never be empty (CSR is always in)".to_string());
             }
             let want = a.spmv(x);
-            for cand in &space.candidates {
+            for cand in &spmv_space.candidates {
                 let y = Prepared::new(a, *cand).spmv(x);
                 assert_close(&y, &want).map_err(|e| format!("{cand}: {e}"))?;
+            }
+            let workload = Workload::Spmm { k: *k };
+            let spmm_space = enumerate_for(a, &stats, &SpaceConfig::quick(), workload);
+            if spmm_space.candidates.is_empty() {
+                return Err("spmm space must never be empty (CSR is always in)".to_string());
+            }
+            let want_k = a.spmm(xk, *k);
+            for cand in &spmm_space.candidates {
+                let y = Prepared::new(a, *cand).spmm(xk, *k);
+                assert_close(&y, &want_k).map_err(|e| format!("{cand} k={k}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn spmm_decisions_never_shadow_spmv_decisions() {
+    check(
+        "workload-keys-disjoint",
+        |rng| {
+            let a = arb::csr(rng, 90, 8);
+            let k = 2 + rng.usize_below(15);
+            (a, k)
+        },
+        |(a, k)| {
+            let mut tuner = Tuner::quick();
+            let spmv = tuner.tune("m", a).map_err(|e| e.to_string())?;
+            let spmm = tuner
+                .tune_workload("m", a, Workload::Spmm { k: *k })
+                .map_err(|e| e.to_string())?;
+            if spmv.workload != Workload::Spmv {
+                return Err(format!("spmv decision tagged {}", spmv.workload));
+            }
+            if spmm.workload != (Workload::Spmm { k: *k }) {
+                return Err(format!("spmm decision tagged {}", spmm.workload));
+            }
+            if tuner.cache.misses != 2 {
+                return Err(format!("expected 2 misses, got {}", tuner.cache.misses));
+            }
+            // Re-asking returns both verbatim from the cache.
+            let spmv2 = tuner.tune("m", a).map_err(|e| e.to_string())?;
+            let spmm2 = tuner
+                .tune_workload("m", a, Workload::Spmm { k: *k })
+                .map_err(|e| e.to_string())?;
+            if spmv2 != spmv || spmm2 != spmm {
+                return Err("cached decisions changed".to_string());
+            }
+            if tuner.cache.hits != 2 {
+                return Err(format!("expected 2 hits, got {}", tuner.cache.hits));
             }
             Ok(())
         },
@@ -94,6 +146,11 @@ fn tuning_cache_roundtrips_deterministically_through_json() {
             let n = 1 + rng.usize_below(8);
             let mut cache = TuningCache::in_memory();
             for _ in 0..n {
+                let workload = if rng.bool(0.5) {
+                    Workload::Spmv
+                } else {
+                    Workload::Spmm { k: 1 + rng.usize_below(32) }
+                };
                 let format = match rng.usize_below(5) {
                     0 => Format::Csr,
                     1 => Format::Ell,
@@ -113,6 +170,7 @@ fn tuning_cache_roundtrips_deterministically_through_json() {
                 cache.insert(
                     format!("{:016x}", rng.next_u64()),
                     TunedConfig {
+                        workload,
                         format,
                         policy,
                         threads: 1 + rng.usize_below(64),
