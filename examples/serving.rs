@@ -63,7 +63,8 @@ fn run(
     let stats = server.shutdown();
     println!(
         "{label:<14} {requests} reqs in {wall:.2}s = {:.0} req/s | mean batch {:.2} | \
-         P50 {:.2} ms  P95 {:.2} ms  P99 {:.2} ms | spmv {:.2} GF [{}] | spmm {:.2} GF [{} {}]",
+         P50 {:.2} ms  P95 {:.2} ms  P99 {:.2} ms | spmv {:.2} GF [{} {}] | \
+         spmm {:.2} GF [{} {} {}]",
         requests as f64 / wall,
         batch_sum as f64 / requests as f64,
         percentile(&latencies, 0.50).as_secs_f64() * 1e3,
@@ -71,8 +72,10 @@ fn run(
         percentile(&latencies, 0.99).as_secs_f64() * 1e3,
         stats.spmv.gflops(),
         stats.spmv.format,
+        stats.spmv.ordering,
         stats.spmm.gflops(),
         stats.spmm.format,
+        stats.spmm.ordering,
         stats.spmm.workload,
     );
     Ok(stats)

@@ -1,19 +1,47 @@
 //! Tuned configuration vs. the default CSR dynamic,64 baseline across the
 //! generator suite — the payoff measurement for the tuner subsystem.
 //!
-//! For each matrix class we report the default, the tuned pick, and the
-//! best/worst candidates the search saw, so the table shows both the win
-//! over the default and that the tuner never lands on a loser.
+//! For each matrix class we report the default, the tuned pick (full
+//! search space, ordering axis included), the tuned pick with the
+//! ordering axis pinned to natural order, and the best/worst candidates
+//! the search saw — so the table shows the win over the default, what the
+//! RCM axis adds on matrices whose pattern strays from the diagonal (a
+//! scrambled band rides along as the showcase), and that the tuner never
+//! lands on a loser. The same numbers are written to
+//! `BENCH_autotune.json`.
 //!
 //! `cargo bench --bench bench_autotune [-- --scale 0.05]`
 
 use phi_spmv::sched::Policy;
-use phi_spmv::sparse::gen::{paper_suite, random_vector, randomize_values};
-use phi_spmv::sparse::MatrixStats;
+use phi_spmv::sparse::gen::banded::{banded_runs, BandedSpec};
+use phi_spmv::sparse::gen::{paper_suite, random_vector, randomize_values, Rng};
+use phi_spmv::sparse::ordering::apply_symmetric_permutation;
+use phi_spmv::sparse::{Csr, MatrixStats};
 use phi_spmv::tuner::space::{enumerate, SpaceConfig};
-use phi_spmv::tuner::{Trialer, Tuner, TunerConfig, TuningCache};
+use phi_spmv::tuner::{Ordering, Prepared, Trialer, Tuner, TunerConfig, TuningCache};
 use phi_spmv::util::bench::Bencher;
 use phi_spmv::util::cli::Args;
+use phi_spmv::util::json::Json;
+
+/// Tunes `a` under `space`, re-measures the pick with the baseline
+/// protocol, and returns (decision, GFlop/s, milliseconds spent in the
+/// tune itself — the search cost only, not the re-measurement).
+fn tune_and_measure(
+    name: &str,
+    a: &Csr,
+    x: &[f64],
+    space: SpaceConfig,
+    bencher: &Bencher,
+) -> (phi_spmv::tuner::TunedConfig, f64, f64) {
+    let config = TunerConfig { space, ..TunerConfig::default() };
+    let mut tuner = Tuner::new(config, TuningCache::in_memory());
+    let t0 = std::time::Instant::now();
+    let decision = tuner.tune(name, a).expect("tuning failed");
+    let tune_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let prepared = Prepared::new(a, decision.candidate());
+    let gflops = bencher.run("tuned", || prepared.spmv(x)).gflops(2.0 * a.nnz() as f64);
+    (decision, gflops, tune_ms)
+}
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
@@ -22,68 +50,124 @@ fn main() {
     let bencher = Bencher::quick();
     let suite = paper_suite();
 
+    // Quad mesh, scattered circuit, power-law web, FEM, 2D stencil — plus
+    // a banded matrix scrambled by a random symmetric permutation, the
+    // §4.4 case the ordering axis exists for.
+    let mut cases: Vec<(String, Csr)> = [0usize, 2, 7, 11, 19]
+        .iter()
+        .map(|&idx| {
+            let entry = &suite[idx];
+            let mut a = entry.generate_scaled(scale);
+            randomize_values(&mut a, entry.id as u64);
+            (entry.name.to_string(), a)
+        })
+        .collect();
+    {
+        let n = ((40_000.0 * scale) as usize).max(500);
+        let a = banded_runs(&BandedSpec {
+            n,
+            mean_row: 10.0,
+            run: 4,
+            locality: 0.01,
+            seed: 31,
+        });
+        let mut rng = Rng::new(32);
+        let mut shuffle: Vec<u32> = (0..n as u32).collect();
+        for i in (1..n).rev() {
+            let j = rng.usize_below(i + 1);
+            shuffle.swap(i, j);
+        }
+        cases.push(("scrambled-band".to_string(), apply_symmetric_permutation(&a, &shuffle)));
+    }
+
     println!(
-        "{:<16} {:>6} {:>9} | {:>12} {:>12} {:>12} {:>12} | {:<22} {:>6}",
-        "matrix", "cands", "tune_ms", "default", "tuned", "best_cand", "worst_cand", "decision",
-        "ok"
+        "{:<16} {:>6} {:>9} | {:>12} {:>12} {:>12} {:>12} {:>12} | {:<28} {:>6}",
+        "matrix", "cands", "tune_ms", "default", "tuned", "tuned_nat", "best_cand", "worst_cand",
+        "decision", "ok"
     );
 
-    // Quad mesh, scattered circuit, power-law web, FEM, 2D stencil.
-    for idx in [0usize, 2, 7, 11, 19] {
-        let entry = &suite[idx];
-        let mut a = entry.generate_scaled(scale);
-        randomize_values(&mut a, entry.id as u64);
+    let mut matrices: Vec<Json> = Vec::new();
+    for (name, a) in &cases {
         let x = random_vector(a.ncols, 61);
         let flops = 2.0 * a.nnz() as f64;
 
         // Baseline: the configuration every experiment in the paper
         // defaults to (CSR, dynamic,64, all threads).
         let baseline = bencher.run("default", || {
-            phi_spmv::kernels::spmv_parallel(&a, &x, threads, Policy::Dynamic(64))
+            phi_spmv::kernels::spmv_parallel(a, &x, threads, Policy::Dynamic(64))
         });
 
-        // The tuner's decision (its own short trials, in-memory cache).
-        let mut tuner = Tuner::new(TunerConfig::default(), TuningCache::in_memory());
-        let t0 = std::time::Instant::now();
-        let decision = tuner.tune(entry.name, &a).expect("tuning failed");
-        let tune_ms = t0.elapsed().as_secs_f64() * 1e3;
-
-        // Re-measure the tuned pick with the same protocol as the baseline.
-        let prepared = phi_spmv::tuner::Prepared::new(&a, decision.candidate());
-        let tuned = bencher.run("tuned", || prepared.spmv(&x));
+        // The tuner's decision over the full space (its own short trials,
+        // in-memory cache), with the search cost timed on its own...
+        let (decision, tuned_gflops, tune_ms) =
+            tune_and_measure(name, a, &x, SpaceConfig::default(), &bencher);
+        // ...and the same search with the ordering axis pinned to natural
+        // order — what the tuner would have picked before RCM was a
+        // search dimension.
+        let natural_space =
+            SpaceConfig { orderings: vec![Ordering::Natural], ..SpaceConfig::default() };
+        let (natural_decision, natural_gflops, _) =
+            tune_and_measure(name, a, &x, natural_space, &bencher);
 
         // Sweep the whole candidate space once more to locate the
         // best/worst envelope the search chose from. The envelope must
         // fully time every candidate, so the early-termination budget is
         // disabled (an infinite margin also preserves the given order).
-        let stats = MatrixStats::compute(entry.name, &a);
-        let space = enumerate(&a, &stats, &SpaceConfig::default());
+        let stats = MatrixStats::compute(name, a);
+        let space = enumerate(a, &stats, &SpaceConfig::default());
         let results =
-            Trialer::default().with_margin(f64::INFINITY).run_all(&a, &space.candidates);
+            Trialer::default().with_margin(f64::INFINITY).run_all(a, &space.candidates);
         let best = results.iter().map(|r| r.gflops).fold(0.0f64, f64::max);
         let worst = results.iter().map(|r| r.gflops).fold(f64::INFINITY, f64::min);
 
         // Acceptance: the tuned config must never be slower than the worst
         // candidate in its own space (10% timing-noise allowance).
-        let tuned_gflops = tuned.gflops(flops);
         let ok = tuned_gflops >= worst * 0.9;
         if !ok {
             eprintln!(
-                "WARN {}: tuned {tuned_gflops:.3} GFlop/s below worst candidate {worst:.3}",
-                entry.name
+                "WARN {name}: tuned {tuned_gflops:.3} GFlop/s below worst candidate {worst:.3}"
             );
         }
         println!(
-            "{:<16} {:>6} {:>9.1} | {:>9.3} GF {:>9.3} GF {:>9.3} GF {:>9.3} GF | {:<22} {:>6}",
-            entry.name,
+            "{:<16} {:>6} {:>9.1} | {:>9.3} GF {:>9.3} GF {:>9.3} GF {:>9.3} GF {:>9.3} GF | {:<28} {:>6}",
+            name,
             space.candidates.len(),
             tune_ms,
             baseline.gflops(flops),
             tuned_gflops,
+            natural_gflops,
             best,
             worst,
-            format!("{} {} t{}", decision.format, decision.policy, decision.threads),
+            format!(
+                "{} {} {} t{}",
+                decision.format, decision.ordering, decision.policy, decision.threads
+            ),
             ok
         );
+        matrices.push(
+            Json::obj()
+                .set("name", name.as_str())
+                .set("nrows", a.nrows)
+                .set("nnz", a.nnz())
+                .set("candidates", space.candidates.len())
+                .set("tune_ms", tune_ms)
+                .set("default_gflops", baseline.gflops(flops))
+                .set("tuned_gflops", tuned_gflops)
+                .set("tuned_natural_gflops", natural_gflops)
+                .set("best_candidate_gflops", best)
+                .set("worst_candidate_gflops", worst)
+                .set("decision", decision.to_json())
+                .set("decision_natural", natural_decision.to_json())
+                .set("ok", ok),
+        );
     }
+
+    let report = Json::obj()
+        .set("bench", "autotune")
+        .set("threads", threads)
+        .set("scale", scale)
+        .set("matrices", matrices);
+    let path = "BENCH_autotune.json";
+    std::fs::write(path, report.to_pretty()).expect("writing BENCH_autotune.json");
+    println!("\nwrote {path}");
 }

@@ -30,7 +30,7 @@ use std::time::{Duration, Instant};
 use crate::kernels::op::{ExecCtx, Workload};
 use crate::sched::Policy;
 use crate::sparse::Csr;
-use crate::tuner::{exec::prepare_owned, Format, TunedConfig};
+use crate::tuner::{exec::prepare_owned_with, Format, Ordering, TunedConfig};
 
 /// One execution path of the server: the format/schedule/threads triple a
 /// workload runs under, plus the workload that triple was tuned for (so
@@ -40,6 +40,11 @@ pub struct PathSpec {
     /// Storage format the path converts to (once, at startup) and
     /// executes in.
     pub format: Format,
+    /// Row/column ordering the payload is stored under (an RCM path is
+    /// reordered once at startup and served through a
+    /// [`crate::tuner::PermutedOp`], so clients still submit and receive
+    /// natural-order vectors).
+    pub ordering: Ordering,
     /// Scheduling policy for the path's kernel.
     pub policy: Policy,
     /// Worker threads for the path's kernel.
@@ -57,6 +62,7 @@ impl PathSpec {
         let cand = decision.candidate();
         PathSpec {
             format: cand.format,
+            ordering: cand.ordering,
             policy: cand.policy,
             threads: cand.threads.max(1),
             workload: decision.workload,
@@ -68,6 +74,7 @@ impl Default for PathSpec {
     fn default() -> Self {
         PathSpec {
             format: Format::Csr,
+            ordering: Ordering::Natural,
             policy: Policy::Dynamic(64),
             threads: 1,
             workload: Workload::Spmv,
@@ -190,6 +197,10 @@ pub struct PathStats {
     pub compute_s: f64,
     /// Storage format the path actually executed in.
     pub format: String,
+    /// Ordering the path's payload is stored under (`"rcm"` means the
+    /// matrix was reordered at startup and every call permutes through
+    /// the wrapper).
+    pub ordering: String,
     /// Workload the executing configuration was tuned for (`"spmv"` on a
     /// batch path means batches reused a single-vector decision).
     pub workload: String,
@@ -283,12 +294,14 @@ fn serve_loop(a: Arc<Csr>, config: ServerConfig, rx: mpsc::Receiver<Msg>) -> Ser
     // format-erased op (CSR shares the Arc, no copy). When the batch path
     // names the same format as the SpMV path — or is absent — the payload
     // is shared instead of converted twice.
-    let spmv_op = prepare_owned(&a, config.spmv.format);
+    let spmv_op = prepare_owned_with(&a, config.spmv.format, config.spmv.ordering);
     let batch_spec = config.spmm.clone().unwrap_or_else(|| config.spmv.clone());
-    let batch_op: Option<Box<dyn SpmvOp>> = if batch_spec.format == config.spmv.format {
+    let batch_op: Option<Box<dyn SpmvOp>> = if batch_spec.format == config.spmv.format
+        && batch_spec.ordering == config.spmv.ordering
+    {
         None
     } else {
-        Some(prepare_owned(&a, batch_spec.format))
+        Some(prepare_owned_with(&a, batch_spec.format, batch_spec.ordering))
     };
     let ctx_for = |spec: &PathSpec| {
         if config.pooled {
@@ -302,11 +315,13 @@ fn serve_loop(a: Arc<Csr>, config: ServerConfig, rx: mpsc::Receiver<Msg>) -> Ser
     let mut stats = ServerStats {
         spmv: PathStats {
             format: config.spmv.format.to_string(),
+            ordering: config.spmv.ordering.to_string(),
             workload: config.spmv.workload.to_string(),
             ..PathStats::default()
         },
         spmm: PathStats {
             format: batch_spec.format.to_string(),
+            ordering: batch_spec.ordering.to_string(),
             workload: batch_spec.workload.to_string(),
             ..PathStats::default()
         },
@@ -512,6 +527,7 @@ mod tests {
             let decision = TunedConfig {
                 workload: Workload::Spmv,
                 format,
+                ordering: Ordering::Natural,
                 policy: Policy::Dynamic(32),
                 threads: 2,
                 gflops: 0.0,
@@ -540,6 +556,7 @@ mod tests {
         let spmv = TunedConfig {
             workload: Workload::Spmv,
             format: Format::Csr,
+            ordering: Ordering::Natural,
             policy: Policy::Dynamic(64),
             threads: 1,
             gflops: 0.0,
@@ -548,6 +565,7 @@ mod tests {
         let spmm = TunedConfig {
             workload: Workload::Spmm { k: 8 },
             format: Format::Sell { c: 8, sigma: 64 },
+            ordering: Ordering::Rcm,
             policy: Policy::Dynamic(16),
             threads: 2,
             gflops: 0.0,
@@ -578,8 +596,10 @@ mod tests {
         assert!(fused, "the 50 ms window must fuse at least one batch");
         let stats = server.shutdown();
         assert_eq!(stats.spmm.format, "sell8-64");
+        assert_eq!(stats.spmm.ordering, "rcm", "the batch path's reordering must be recorded");
         assert_eq!(stats.spmm.workload, "spmm8");
         assert_eq!(stats.spmv.format, "csr", "single-request path unchanged");
+        assert_eq!(stats.spmv.ordering, "natural");
         assert!(stats.spmm.batches >= 1);
         // A follow-up lone request exercises the SpMV path of the same
         // server instance.

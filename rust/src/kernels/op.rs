@@ -156,6 +156,30 @@ pub fn spmm_via_spmv<T: SpmvOp + ?Sized>(
 /// `spmv_into`/`spmm_into` must tolerate any `ExecCtx` (they clamp thread
 /// counts and fall back to serial under their own size thresholds) and
 /// must fully overwrite `y`.
+///
+/// ```
+/// use phi_spmv::kernels::{ExecCtx, SpmvOp, Workload};
+/// use phi_spmv::sparse::{Coo, Ell};
+///
+/// // A small synthetic matrix: [[2, 0], [1, 3]].
+/// let mut coo = Coo::new(2, 2);
+/// coo.push(0, 0, 2.0);
+/// coo.push(1, 0, 1.0);
+/// coo.push(1, 1, 3.0);
+/// let a = coo.to_csr();
+///
+/// // Any format behind the same erased trait computes the same answer.
+/// let ops: Vec<Box<dyn SpmvOp>> = vec![Box::new(a.clone()), Box::new(Ell::from_csr(&a, 0))];
+/// for op in &ops {
+///     let y = op.spmv(&[1.0, 10.0], &ExecCtx::serial());
+///     assert_eq!(y, vec![2.0, 31.0]);
+///
+///     // The workload-dispatched form runs SpMM at width k the same way.
+///     let mut yk = vec![0.0; 4];
+///     op.apply(Workload::Spmm { k: 2 }, &[1.0, 0.0, 10.0, -1.0], &mut yk, &ExecCtx::serial());
+///     assert_eq!(yk, vec![2.0, 0.0, 31.0, -3.0]);
+/// }
+/// ```
 pub trait SpmvOp: Send + Sync {
     /// Logical row count (`y` length for SpMV).
     fn nrows(&self) -> usize;

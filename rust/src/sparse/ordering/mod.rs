@@ -2,7 +2,26 @@
 //!
 //! The paper permutes matrices with reverse Cuthill-McKee to densify
 //! nonzeros around the diagonal, improving UCLD and reducing the number of
-//! input-vector cachelines each core must fetch.
+//! input-vector cachelines each core must fetch — the lever that matters
+//! on a latency-bound machine.
+//!
+//! Ordering is not only an offline experiment ([`rcm()`] feeds the `fig8`
+//! paper figure): it is a first-class axis of the auto-tuner's search
+//! space ([`crate::tuner::space::Ordering`]). An RCM candidate permutes
+//! the matrix once at preparation time and is served through a
+//! [`crate::tuner::exec::PermutedOp`], which uses the [`permute`] helpers
+//! ([`permute::permute_panel`] / [`permute::unpermute_panel`]) to gather
+//! the input vector — or the row-major SpMM panel — into permuted order
+//! and scatter the result back, so callers keep natural-order semantics
+//! while the kernel enjoys the banded pattern.
+//!
+//! * [`mod@rcm`] — the ordering itself: BFS from a pseudo-peripheral vertex,
+//!   degree-sorted neighbour visitation, reversed (`perm[new] = old`).
+//! * [`permute`] — applying a symmetric permutation to matrices
+//!   ([`apply_symmetric_permutation`], `B = P A Pᵀ`) and to dense
+//!   vectors/panels, plus validity/inversion utilities.
+//! * [`bfs`] — level structures and the pseudo-peripheral vertex search
+//!   RCM starts from.
 
 pub mod bfs;
 pub mod permute;

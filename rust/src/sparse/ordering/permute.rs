@@ -57,6 +57,29 @@ pub fn unpermute_vector(y: &[f64], perm: &[u32]) -> Vec<f64> {
     out
 }
 
+/// [`permute_vector`] for a row-major `n × k` panel (the SpMM input
+/// layout): panel row `new` of the result is panel row `perm[new]` of `x`.
+/// `k = 1` is exactly the vector case.
+pub fn permute_panel(x: &[f64], perm: &[u32], k: usize) -> Vec<f64> {
+    assert_eq!(x.len(), perm.len() * k, "panel must be perm.len() × k row-major");
+    let mut out = vec![0.0; x.len()];
+    for (new, &old) in perm.iter().enumerate() {
+        out[new * k..(new + 1) * k].copy_from_slice(&x[old as usize * k..][..k]);
+    }
+    out
+}
+
+/// [`unpermute_vector`] for a row-major `n × k` panel, writing into a
+/// caller-provided buffer (the serving hot path fully overwrites `out`):
+/// panel row `perm[new]` of `out` is panel row `new` of `y`.
+pub fn unpermute_panel(y: &[f64], perm: &[u32], k: usize, out: &mut [f64]) {
+    assert_eq!(y.len(), perm.len() * k, "panel must be perm.len() × k row-major");
+    assert_eq!(out.len(), y.len());
+    for (new, &old) in perm.iter().enumerate() {
+        out[old as usize * k..][..k].copy_from_slice(&y[new * k..(new + 1) * k]);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,5 +126,21 @@ mod tests {
         let a = crate::sparse::Csr::identity(5);
         let perm: Vec<u32> = (0..5).collect();
         assert_eq!(apply_symmetric_permutation(&a, &perm), a);
+    }
+
+    #[test]
+    fn panel_helpers_roundtrip_and_match_vector_case() {
+        let perm = [2u32, 0, 3, 1];
+        let x = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(permute_panel(&x, &perm, 1), permute_vector(&x, &perm));
+
+        // k = 3 panel: permute then un-permute is the identity.
+        let panel: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        let p = permute_panel(&panel, &perm, 3);
+        // Row `new` of the permuted panel is row `perm[new]` of the input.
+        assert_eq!(&p[0..3], &panel[6..9], "row 0 comes from old row 2");
+        let mut back = vec![f64::NAN; 12];
+        unpermute_panel(&p, &perm, 3, &mut back);
+        assert_eq!(back, panel);
     }
 }

@@ -20,14 +20,17 @@ use crate::kernels::Workload;
 use crate::sched::Policy;
 use crate::util::json::Json;
 
-use super::space::{parse_policy, Candidate, Format};
+use super::space::{parse_policy, Candidate, Format, Ordering};
 
 /// File-format version written into every cache file. Version 2 added the
-/// workload dimension: keys carry a `-spmv`/`-spmmK` suffix and entries a
-/// `workload` field. Version-1 keys can never match a current lookup, so
-/// [`TuningCache::load`] discards stale-version files wholesale instead of
-/// carrying unreachable entries forever.
-const CACHE_VERSION: usize = 2;
+/// workload dimension (workload-suffixed keys, a `workload` entry field);
+/// version 3 added the ordering axis: the key hash covers the ordering
+/// search knobs and entries carry an `ordering` field, so a version-2
+/// decision — searched without RCM candidates — must not answer a
+/// version-3 lookup. Stale-version keys can never match a current lookup,
+/// so [`TuningCache::load`] discards stale-version files wholesale instead
+/// of carrying unreachable entries forever.
+const CACHE_VERSION: usize = 3;
 
 /// The configuration the tuner settled on for one (matrix, workload).
 #[derive(Debug, Clone, PartialEq)]
@@ -36,6 +39,8 @@ pub struct TunedConfig {
     pub workload: Workload,
     /// Chosen storage format.
     pub format: Format,
+    /// Chosen row/column ordering.
+    pub ordering: Ordering,
     /// Chosen scheduling policy.
     pub policy: Policy,
     /// Chosen thread count.
@@ -49,7 +54,12 @@ pub struct TunedConfig {
 impl TunedConfig {
     /// The candidate this config executes.
     pub fn candidate(&self) -> Candidate {
-        Candidate { format: self.format, policy: self.policy, threads: self.threads }
+        Candidate {
+            format: self.format,
+            ordering: self.ordering,
+            policy: self.policy,
+            threads: self.threads,
+        }
     }
 
     /// Serializes to a JSON object.
@@ -57,19 +67,26 @@ impl TunedConfig {
         Json::obj()
             .set("workload", self.workload.to_string())
             .set("format", self.format.to_string())
+            .set("ordering", self.ordering.to_string())
             .set("policy", self.policy.to_string())
             .set("threads", self.threads)
             .set("gflops", self.gflops)
             .set("source", self.source.as_str())
     }
 
-    /// Parses the [`TunedConfig::to_json`] form. Entries written before
-    /// the workload dimension existed parse as SpMV decisions.
+    /// Parses the [`TunedConfig::to_json`] form. A hand-edited entry
+    /// lacking the workload or ordering field parses as SpMV / natural
+    /// order.
     pub fn from_json(j: &Json) -> anyhow::Result<TunedConfig> {
         let workload = match j.get("workload").and_then(Json::as_str) {
             Some(s) => Workload::parse(s)
                 .ok_or_else(|| anyhow::anyhow!("unknown workload {s:?}"))?,
             None => Workload::Spmv,
+        };
+        let ordering = match j.get("ordering").and_then(Json::as_str) {
+            Some(s) => Ordering::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown ordering {s:?}"))?,
+            None => Ordering::Natural,
         };
         let format_s = j
             .get("format")
@@ -93,7 +110,15 @@ impl TunedConfig {
             .and_then(Json::as_str)
             .unwrap_or("unknown")
             .to_string();
-        Ok(TunedConfig { workload, format, policy, threads: threads.max(1), gflops, source })
+        Ok(TunedConfig {
+            workload,
+            format,
+            ordering,
+            policy,
+            threads: threads.max(1),
+            gflops,
+            source,
+        })
     }
 }
 
@@ -101,8 +126,14 @@ impl std::fmt::Display for TunedConfig {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} {} t{} [{}] ({:.2} GFlop/s, {})",
-            self.format, self.policy, self.threads, self.workload, self.gflops, self.source
+            "{} {} {} t{} [{}] ({:.2} GFlop/s, {})",
+            self.format,
+            self.ordering,
+            self.policy,
+            self.threads,
+            self.workload,
+            self.gflops,
+            self.source
         )
     }
 }
@@ -322,6 +353,7 @@ mod tests {
                 TunedConfig {
                     workload: Workload::Spmv,
                     format: Format::Csr,
+                    ordering: Ordering::Natural,
                     policy: Policy::Dynamic(64),
                     threads: 8,
                     gflops: 3.5,
@@ -333,6 +365,7 @@ mod tests {
                 TunedConfig {
                     workload: Workload::Spmm { k: 16 },
                     format: Format::Bcsr { r: 8, c: 1 },
+                    ordering: Ordering::Rcm,
                     policy: Policy::Dynamic(16),
                     threads: 4,
                     gflops: 2.25,
@@ -344,6 +377,7 @@ mod tests {
                 TunedConfig {
                     workload: Workload::Spmv,
                     format: Format::Hyb { width: 16 },
+                    ordering: Ordering::Natural,
                     policy: Policy::StaticBlock,
                     threads: 1,
                     gflops: 0.5,
@@ -419,58 +453,69 @@ mod tests {
     fn rejects_bad_versions_and_shapes() {
         assert!(TuningCache::from_json(&Json::parse(r#"{"version": 9}"#).unwrap()).is_err());
         assert!(
-            TuningCache::from_json(&Json::parse(r#"{"version": 2, "entries": 3}"#).unwrap())
+            TuningCache::from_json(&Json::parse(r#"{"version": 3, "entries": 3}"#).unwrap())
                 .is_err()
         );
         let bad_format =
-            r#"{"version": 2, "entries": {"k": {"format": "zzz", "policy": "static", "threads": 1}}}"#;
+            r#"{"version": 3, "entries": {"k": {"format": "zzz", "policy": "static", "threads": 1}}}"#;
         assert!(TuningCache::from_json(&Json::parse(bad_format).unwrap()).is_err());
-        let bad_workload = r#"{"version": 2, "entries": {"k": {"workload": "spmm0",
+        let bad_workload = r#"{"version": 3, "entries": {"k": {"workload": "spmm0",
             "format": "csr", "policy": "static", "threads": 1}}}"#;
         assert!(TuningCache::from_json(&Json::parse(bad_workload).unwrap()).is_err());
+        let bad_ordering = r#"{"version": 3, "entries": {"k": {"ordering": "sorted",
+            "format": "csr", "policy": "static", "threads": 1}}}"#;
+        assert!(TuningCache::from_json(&Json::parse(bad_ordering).unwrap()).is_err());
     }
 
     #[test]
-    fn current_version_entries_without_workload_parse_as_spmv() {
+    fn current_version_entries_without_optional_fields_use_defaults() {
         // Lenient field parsing within the current version: a hand-edited
-        // entry lacking the workload field reads as an SpMV decision.
-        let legacy = r#"{"version": 2, "entries":
+        // entry lacking the workload/ordering fields reads as a
+        // natural-order SpMV decision.
+        let legacy = r#"{"version": 3, "entries":
             {"k": {"format": "csr", "policy": "dynamic,64", "threads": 2}}}"#;
         let mut c = TuningCache::from_json(&Json::parse(legacy).unwrap()).unwrap();
         assert_eq!(c.get("k").unwrap().workload, Workload::Spmv);
+        assert_eq!(c.get("k").unwrap().ordering, Ordering::Natural);
     }
 
     #[test]
     fn stale_version_files_load_empty_and_are_rewritten() {
-        // A pre-workload (version 1) file: its keys lack the workload
-        // suffix and could never match a lookup again, so load discards it
-        // wholesale rather than carrying dead entries forever.
+        // A pre-ordering (version 2) file: its key hashes predate the
+        // ordering axis and could never match a lookup again, so load
+        // discards it wholesale rather than carrying dead entries forever.
+        // Same for a pre-workload (version 1) file.
         let dir = TempDir::new("tcache-stale");
         let path = dir.path().join("cache.json");
+        let v2 = r#"{"version": 2, "entries":
+            {"oldkey-spmv": {"workload": "spmv", "format": "csr",
+             "policy": "dynamic,64", "threads": 2}}}"#;
+        std::fs::write(&path, v2).unwrap();
+        let mut c = TuningCache::load(&path).unwrap();
+        assert!(c.is_empty(), "stale-version entries must be dropped");
         let v1 = r#"{"version": 1, "entries":
             {"oldkey": {"format": "csr", "policy": "dynamic,64", "threads": 2}}}"#;
         std::fs::write(&path, v1).unwrap();
-        let mut c = TuningCache::load(&path).unwrap();
-        assert!(c.is_empty(), "stale-version entries must be dropped");
+        assert!(TuningCache::load(&path).unwrap().is_empty());
         // Corruption of a *current*-version file still errors, as does a
         // missing version field (no version-less format ever existed).
-        std::fs::write(&path, r#"{"version": 2, "entries": 3}"#).unwrap();
+        std::fs::write(&path, r#"{"version": 3, "entries": 3}"#).unwrap();
         assert!(TuningCache::load(&path).is_err());
         std::fs::write(&path, r#"{"entries": {}}"#).unwrap();
         assert!(TuningCache::load(&path).is_err());
         // A *newer*-version file errors on load AND refuses to be
         // clobbered by save — an old binary must not wipe it.
-        std::fs::write(&path, r#"{"version": 3, "entries": {}}"#).unwrap();
+        std::fs::write(&path, r#"{"version": 4, "entries": {}}"#).unwrap();
         assert!(TuningCache::load(&path).is_err());
         assert!(c.save().is_err(), "save must not overwrite a newer-version file");
         // Saving the (empty-loaded) cache rewrites the stale file in the
-        // current format, dropping the unreachable v1 entries.
-        std::fs::write(&path, v1).unwrap();
+        // current format, dropping the unreachable v2 entries.
+        std::fs::write(&path, v2).unwrap();
         c.insert(sample_entries()[0].0.clone(), sample_entries()[0].1.clone());
         c.save().unwrap();
         let mut back = TuningCache::load(&path).unwrap();
         assert_eq!(back.len(), 1);
-        assert!(back.get("oldkey").is_none());
+        assert!(back.get("oldkey-spmv").is_none());
     }
 
     #[test]

@@ -14,6 +14,15 @@
 //! and the thread count maps onto the KNC model's cores × contexts grid.
 //! Absolute seconds are for a KNC, not the host — only the *ranking* is
 //! consumed.
+//!
+//! The [`Ordering`] axis is ranked on *post-reorder* estimates: when any
+//! candidate asks for RCM, the permuted matrix `P A Pᵀ` is materialized
+//! once and the same gather/traffic analysis runs on it, so the model sees
+//! exactly the cacheline locality the reorder buys (§4.4). RCM candidates
+//! are then charged the per-call cost the [`crate::tuner::exec::PermutedOp`]
+//! wrapper really pays — one gather of the input panel and one scatter of
+//! the output panel per execution — so a matrix whose pattern barely
+//! improves is never reordered for free.
 
 use crate::arch::phi::WorkProfile;
 use crate::arch::PhiMachine;
@@ -23,9 +32,10 @@ use crate::kernels::spmv_model::{spmv_profile, SpmvAnalysis, SpmvVariant};
 use crate::kernels::Workload;
 use crate::sched::{LoadBalance, StaticAssignment};
 use crate::sparse::ell::ELL_LANES;
+use crate::sparse::ordering::{apply_symmetric_permutation, rcm};
 use crate::sparse::{Bcsr, Csr};
 
-use super::space::{estimate_block_density, hyb_overflow_tail, Candidate, Format};
+use super::space::{estimate_block_density, hyb_overflow_tail, Candidate, Format, Ordering};
 
 /// The analytic ranker.
 pub struct CostModel {
@@ -63,10 +73,12 @@ impl CostModel {
     /// same ranking machinery, but every format is profiled with the
     /// conversion-free analytic approximations (BCSR via
     /// [`estimate_block_density`] instead of the calibrated
-    /// `bcsr_profile`, which converts the whole matrix). The trialer
-    /// converts and really times the formats itself — it only needs a
-    /// good order, and ordering must not cost a conversion the trial
-    /// loop then repeats.
+    /// `bcsr_profile`, which converts the whole matrix; RCM via the
+    /// natural-order base plus the per-call permutation charge, instead
+    /// of materializing `P A Pᵀ`). The trialer converts, reorders and
+    /// really times the candidates itself — it only needs a good order,
+    /// and ordering must not cost a conversion or reorder the trial loop
+    /// then repeats.
     pub fn ordering(
         &self,
         a: &Csr,
@@ -86,49 +98,78 @@ impl CostModel {
         workload: Workload,
         cheap: bool,
     ) -> Vec<(Candidate, f64)> {
-        let base = match workload {
-            Workload::Spmv => {
-                let analysis = SpmvAnalysis::compute(a, 61);
-                spmv_profile(a, SpmvVariant::O3, &analysis)
-            }
-            Workload::Spmm { k } => {
-                let analysis = SpmmAnalysis::compute(a, 61, k.max(1));
-                spmm_profile(a, SpmmVariant::Generic, &analysis)
-            }
-        };
-        let weights: Vec<u64> = (0..a.nrows).map(|i| a.row_nnz(i) as u64 + 4).collect();
+        let base = base_profile(a, workload);
+        let weights = row_weights(a);
+        // Post-reorder inputs, computed once when any candidate asks for
+        // RCM: running the same gather/traffic analysis on the permuted
+        // matrix *is* the post-reorder bandwidth estimate — the model sees
+        // the locality the reorder actually produces, not a guess. The
+        // cheap (trialer-ordering) mode skips this: the trial loop
+        // materializes the reorder itself and must not pay for it twice,
+        // so there RCM candidates reuse the natural base and are ranked by
+        // their per-call permutation charge alone.
+        let rcm_inputs: Option<(Csr, WorkProfile, Vec<u64>)> = (!cheap
+            && candidates.iter().any(|c| c.ordering == Ordering::Rcm))
+        .then(|| {
+            let perm = rcm(a);
+            let b = apply_symmetric_permutation(a, &perm);
+            let rcm_base = base_profile(&b, workload);
+            let rcm_weights = row_weights(&b);
+            (b, rcm_base, rcm_weights)
+        });
         // The format-dependent profile work is the expensive part (a BCSR
         // profile converts the matrix, SELL sorts row lengths) and depends
-        // only on the format — compute it once per distinct format, not
-        // once per (format, policy, threads) candidate.
-        let mut profiles: Vec<(Format, WorkProfile)> = Vec::new();
+        // only on (format, ordering) — compute it once per distinct pair,
+        // not once per (format, ordering, policy, threads) candidate.
+        let mut profiles: Vec<((Format, Ordering), WorkProfile)> = Vec::new();
         let mut out: Vec<(Candidate, f64)> = candidates
             .iter()
             .map(|&cand| {
-                if !profiles.iter().any(|(f, _)| *f == cand.format) {
+                let (aa, obase, oweights): (&Csr, &WorkProfile, &[u64]) = match cand.ordering {
+                    Ordering::Natural => (a, &base, weights.as_slice()),
+                    Ordering::Rcm => match rcm_inputs.as_ref() {
+                        Some((b, rb, rw)) => (b, rb, rw.as_slice()),
+                        // Cheap mode: natural base + the overhead charge
+                        // below — good enough to order candidates, and the
+                        // trialer times the real reordered kernel anyway.
+                        None => (a, &base, weights.as_slice()),
+                    },
+                };
+                let key = (cand.format, cand.ordering);
+                if !profiles.iter().any(|(k2, _)| *k2 == key) {
                     let p = match workload {
                         // The cheap (ordering-only) SpMV arm swaps the
                         // conversion-backed BCSR profile for the density
                         // scaling the SpMM arm already uses.
                         Workload::Spmv => match cand.format {
                             Format::Bcsr { r, c } if cheap => {
-                                let density = estimate_block_density(a, r, c);
+                                let density = estimate_block_density(aa, r, c);
                                 let pad =
                                     if density > 0.0 { (1.0 / density).min(8.0) } else { 1.0 };
-                                let mut w = base;
+                                let mut w = *obase;
                                 w.instructions *= pad;
                                 w.stream_read_bytes *= pad;
                                 w
                             }
-                            _ => self.profile_for(a, &base, cand.format),
+                            _ => self.profile_for(aa, obase, cand.format),
                         },
-                        Workload::Spmm { k } => spmm_profile_for(a, &base, cand.format, k.max(1)),
+                        Workload::Spmm { k } => spmm_profile_for(aa, obase, cand.format, k.max(1)),
                     };
-                    profiles.push((cand.format, p));
+                    profiles.push((key, p));
                 }
-                let mut w = profiles.iter().find(|(f, _)| *f == cand.format).unwrap().1;
-                let assign = StaticAssignment::build(cand.policy, a.nrows, cand.threads.max(1));
-                w.imbalance = LoadBalance::compute(&assign, &weights).imbalance;
+                let mut w = profiles.iter().find(|(k2, _)| *k2 == key).unwrap().1;
+                if cand.ordering == Ordering::Rcm {
+                    // What the PermutedOp wrapper pays per call: gather the
+                    // x panel into permuted order and scatter the y panel
+                    // back (~2 instructions per moved double, 8 B read +
+                    // 8 B written each for both panels).
+                    let moved = (a.nrows * workload.k()) as f64;
+                    w.instructions += 4.0 * moved;
+                    w.stream_read_bytes += 16.0 * moved;
+                    w.write_bytes += 16.0 * moved;
+                }
+                let assign = StaticAssignment::build(cand.policy, aa.nrows, cand.threads.max(1));
+                w.imbalance = LoadBalance::compute(&assign, oweights).imbalance;
                 let (cores, contexts) = map_threads(cand.threads);
                 let est = self.machine.estimate(cores, contexts, &w);
                 (cand, est.time_s)
@@ -165,6 +206,27 @@ impl CostModel {
             }
         }
     }
+}
+
+/// The CSR base profile for one workload — the paper-calibrated analysis
+/// the format scalings derive from. Run on the natural matrix and, for
+/// RCM candidates, on the permuted one.
+fn base_profile(a: &Csr, workload: Workload) -> WorkProfile {
+    match workload {
+        Workload::Spmv => {
+            let analysis = SpmvAnalysis::compute(a, 61);
+            spmv_profile(a, SpmvVariant::O3, &analysis)
+        }
+        Workload::Spmm { k } => {
+            let analysis = SpmmAnalysis::compute(a, 61, k.max(1));
+            spmm_profile(a, SpmmVariant::Generic, &analysis)
+        }
+    }
+}
+
+/// Row weights for the imbalance recomputation (nnz plus loop overhead).
+fn row_weights(a: &Csr) -> Vec<u64> {
+    (0..a.nrows).map(|i| a.row_nnz(i) as u64 + 4).collect()
 }
 
 /// Stored-slot accounting shared by both workload arms, so the SpMV and
@@ -257,7 +319,7 @@ mod tests {
     use crate::sparse::gen::stencil::stencil_2d;
 
     fn cand(format: Format, threads: usize) -> Candidate {
-        Candidate { format, policy: Policy::Dynamic(64), threads }
+        Candidate { format, ordering: Ordering::Natural, policy: Policy::Dynamic(64), threads }
     }
 
     #[test]
@@ -370,6 +432,45 @@ mod tests {
     }
 
     #[test]
+    fn rcm_predicted_faster_on_scrambled_band_slower_on_intact_band() {
+        // A banded matrix scrambled by a random symmetric permutation:
+        // the post-reorder analysis must see the recovered locality and
+        // rank the RCM candidate ahead of natural order.
+        let a = crate::sparse::gen::banded::banded_runs(&crate::sparse::gen::banded::BandedSpec {
+            n: 1500,
+            mean_row: 10.0,
+            run: 4,
+            locality: 0.01,
+            seed: 11,
+        });
+        let mut rng = crate::sparse::gen::Rng::new(23);
+        let mut shuffle: Vec<u32> = (0..a.nrows as u32).collect();
+        for i in (1..a.nrows).rev() {
+            let j = rng.usize_below(i + 1);
+            shuffle.swap(i, j);
+        }
+        let scrambled = apply_symmetric_permutation(&a, &shuffle);
+        let m = CostModel::new();
+        let rcm_cand = Candidate { ordering: Ordering::Rcm, ..cand(Format::Csr, 8) };
+        for w in [Workload::Spmv, Workload::Spmm { k: 8 }] {
+            let natural = m.predict_for(&scrambled, cand(Format::Csr, 8), w);
+            let reordered = m.predict_for(&scrambled, rcm_cand, w);
+            assert!(
+                reordered < natural,
+                "{w}: rcm {reordered} must beat natural {natural} on a scrambled band"
+            );
+            // On the intact band RCM has nothing to recover, so the
+            // per-call permutation overhead must keep natural ahead.
+            let natural = m.predict_for(&a, cand(Format::Csr, 8), w);
+            let reordered = m.predict_for(&a, rcm_cand, w);
+            assert!(
+                reordered > natural,
+                "{w}: rcm {reordered} must pay overhead vs natural {natural} on an intact band"
+            );
+        }
+    }
+
+    #[test]
     fn ordering_is_a_permutation_of_the_candidates() {
         let a = stencil_2d(30, 30);
         let cands = [
@@ -421,11 +522,21 @@ mod tests {
         let m = CostModel::new();
         let dynamic = m.predict(
             &a,
-            Candidate { format: Format::Csr, policy: Policy::Dynamic(16), threads: 8 },
+            Candidate {
+                format: Format::Csr,
+                ordering: Ordering::Natural,
+                policy: Policy::Dynamic(16),
+                threads: 8,
+            },
         );
         let stat = m.predict(
             &a,
-            Candidate { format: Format::Csr, policy: Policy::StaticBlock, threads: 8 },
+            Candidate {
+                format: Format::Csr,
+                ordering: Ordering::Natural,
+                policy: Policy::StaticBlock,
+                threads: 8,
+            },
         );
         assert!(stat >= dynamic, "static {stat} vs dynamic {dynamic}");
     }

@@ -1,22 +1,116 @@
-//! Execution of a chosen candidate: one-time format conversion into a
-//! format-erased [`SpmvOp`].
+//! Execution of a chosen candidate: one-time format conversion (and, for
+//! RCM candidates, one-time reordering) into a format-erased [`SpmvOp`].
 //!
 //! Conversion is the expensive half of trying a candidate, so the payload
 //! (a `Box<dyn SpmvOp>`) is independent of schedule and thread count — the
-//! trialer converts each distinct format once and sweeps schedules over
-//! it. Dispatch-by-format lives *behind* the trait now: this module only
-//! knows how to construct each format, never how to run it.
+//! trialer converts each distinct (format, ordering) once and sweeps
+//! schedules over it. Dispatch-by-format lives *behind* the trait now:
+//! this module only knows how to construct each format, never how to run
+//! it.
+//!
+//! The [`Ordering`] axis is handled the same way: an
+//! [`Ordering::Rcm`] candidate computes the reverse Cuthill-McKee
+//! permutation once, materializes `P A Pᵀ`, converts *that* matrix to the
+//! candidate's format, and wraps the result in a [`PermutedOp`] — a
+//! [`SpmvOp`] that permutes the input vector (or row-major SpMM panel) on
+//! the way in and inverse-permutes the output on the way out. Callers —
+//! the trialer, the serving coordinator, library users holding a
+//! [`Prepared`] — keep natural-order semantics and never see the
+//! permutation; only the one-time conversion and the per-call
+//! gather/scatter differ, and both are exactly what the trialer times.
 
 use std::sync::Arc;
 
 use crate::kernels::op::{ExecCtx, SpmvOp};
+use crate::sparse::ordering::permute::{permute_panel, unpermute_panel};
+use crate::sparse::ordering::rcm;
 use crate::sparse::{Bcsr, Csr, Ell, Hyb, Sell};
 
-use super::space::{Candidate, Format};
+use super::space::{Candidate, Format, Ordering};
 
-/// Converts `a` into `format`'s executable op. CSR runs straight off the
-/// borrowed base matrix (no copy); every other format materializes its
-/// payload.
+/// A reordered payload behind natural-order semantics: holds a payload
+/// built from `P A Pᵀ` plus the permutation `perm[new] = old`, permutes
+/// `x` before the inner kernel and inverse-permutes `y` after it, so the
+/// wrapped op is indistinguishable from the natural-order matrix — at the
+/// cost of one gather and one scatter of the dense vectors per call
+/// (which trial timings therefore include).
+pub struct PermutedOp<'a> {
+    inner: Box<dyn SpmvOp + 'a>,
+    perm: Vec<u32>,
+}
+
+impl<'a> PermutedOp<'a> {
+    /// Wraps `inner` (already built from the permuted matrix) with the
+    /// permutation that produced it. `inner` must be square with
+    /// `perm.len()` rows — a symmetric permutation has no meaning
+    /// otherwise.
+    pub fn new(inner: Box<dyn SpmvOp + 'a>, perm: Vec<u32>) -> PermutedOp<'a> {
+        assert_eq!(inner.nrows(), inner.ncols(), "PermutedOp needs a square payload");
+        assert_eq!(perm.len(), inner.nrows(), "permutation length must match the matrix");
+        PermutedOp { inner, perm }
+    }
+
+    /// The stored permutation (`perm[new] = old`).
+    pub fn perm(&self) -> &[u32] {
+        &self.perm
+    }
+}
+
+impl SpmvOp for PermutedOp<'_> {
+    fn nrows(&self) -> usize {
+        self.inner.nrows()
+    }
+    fn ncols(&self) -> usize {
+        self.inner.ncols()
+    }
+    fn storage_bytes(&self) -> usize {
+        self.inner.storage_bytes() + 4 * self.perm.len()
+    }
+    fn format_name(&self) -> String {
+        format!("rcm:{}", self.inner.format_name())
+    }
+    fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
+        let px = permute_panel(x, &self.perm, 1);
+        let mut py = vec![0.0f64; y.len()];
+        self.inner.spmv_into(&px, &mut py, ctx);
+        unpermute_panel(&py, &self.perm, 1, y);
+    }
+    fn spmm_into(&self, x: &[f64], y: &mut [f64], k: usize, ctx: &ExecCtx<'_>) {
+        if k == 0 {
+            return;
+        }
+        let px = permute_panel(x, &self.perm, k);
+        let mut py = vec![0.0f64; y.len()];
+        self.inner.spmm_into(&px, &mut py, k, ctx);
+        unpermute_panel(&py, &self.perm, k, y);
+    }
+}
+
+/// Converts an owned (typically freshly permuted) matrix into `format`'s
+/// executable op.
+fn convert_owned(b: Csr, format: Format) -> Box<dyn SpmvOp> {
+    match format {
+        Format::Csr => Box::new(b),
+        Format::Ell => Box::new(Ell::from_csr(&b, 0)),
+        Format::Bcsr { r, c } => Box::new(Bcsr::from_csr(&b, r, c)),
+        Format::Hyb { width } => Box::new(Hyb::from_csr(&b, width)),
+        Format::Sell { c, sigma } => Box::new(Sell::from_csr(&b, c, sigma)),
+    }
+}
+
+/// Builds the RCM permutation for `a`, materializes `P A Pᵀ` and wraps
+/// `format`'s conversion of it in a [`PermutedOp`]. (The trialer instead
+/// permutes once and wraps [`prepare`] of the permuted matrix per format
+/// via [`PermutedOp::new`], so one reorder covers every trialed format.)
+pub fn prepare_rcm(a: &Csr, format: Format) -> Box<dyn SpmvOp> {
+    let perm = rcm(a);
+    let b = crate::sparse::ordering::apply_symmetric_permutation(a, &perm);
+    Box::new(PermutedOp::new(convert_owned(b, format), perm))
+}
+
+/// Converts `a` into `format`'s executable op in natural order. CSR runs
+/// straight off the borrowed base matrix (no copy); every other format
+/// materializes its payload.
 pub fn prepare(a: &Csr, format: Format) -> Box<dyn SpmvOp + '_> {
     match format {
         Format::Csr => Box::new(a),
@@ -24,6 +118,15 @@ pub fn prepare(a: &Csr, format: Format) -> Box<dyn SpmvOp + '_> {
         Format::Bcsr { r, c } => Box::new(Bcsr::from_csr(a, r, c)),
         Format::Hyb { width } => Box::new(Hyb::from_csr(a, width)),
         Format::Sell { c, sigma } => Box::new(Sell::from_csr(a, c, sigma)),
+    }
+}
+
+/// [`prepare`] with an explicit [`Ordering`]: [`Ordering::Rcm`] reorders
+/// once and serves through a [`PermutedOp`] (see [`prepare_rcm`]).
+pub fn prepare_with(a: &Csr, format: Format, ordering: Ordering) -> Box<dyn SpmvOp + '_> {
+    match ordering {
+        Ordering::Natural => prepare(a, format),
+        Ordering::Rcm => prepare_rcm(a, format),
     }
 }
 
@@ -40,19 +143,31 @@ pub fn prepare_owned(a: &Arc<Csr>, format: Format) -> Box<dyn SpmvOp> {
     }
 }
 
+/// [`prepare_owned`] with an explicit [`Ordering`] — what the serving
+/// coordinator calls for each tuned path. An RCM payload is materialized
+/// from the permuted matrix, so it is `'static` regardless of format.
+pub fn prepare_owned_with(a: &Arc<Csr>, format: Format, ordering: Ordering) -> Box<dyn SpmvOp> {
+    match ordering {
+        Ordering::Natural => prepare_owned(a, format),
+        Ordering::Rcm => prepare_rcm(a, format),
+    }
+}
+
 /// A matrix bound to one candidate: payload + schedule, the thing the
 /// tuner hands back for repeated execution.
 pub struct Prepared<'a> {
     /// The candidate this preparation executes.
     pub candidate: Candidate,
-    /// Converted format-erased payload.
+    /// Converted format-erased payload (a [`PermutedOp`] for RCM
+    /// candidates).
     pub op: Box<dyn SpmvOp + 'a>,
 }
 
 impl<'a> Prepared<'a> {
-    /// Converts `a` for `candidate`.
+    /// Converts `a` for `candidate` (reordering first when the candidate
+    /// says so).
     pub fn new(a: &'a Csr, candidate: Candidate) -> Prepared<'a> {
-        Prepared { candidate, op: prepare(a, candidate.format) }
+        Prepared { candidate, op: prepare_with(a, candidate.format, candidate.ordering) }
     }
 
     /// The execution context the candidate implies (pooled workers).
@@ -77,8 +192,8 @@ impl<'a> Prepared<'a> {
     }
 
     /// SpMM into a caller-provided buffer. (The batching server routes
-    /// through [`prepare_owned`] + [`SpmvOp::spmm_into`] directly; this is
-    /// the no-allocation convenience for library callers holding a
+    /// through [`prepare_owned_with`] + [`SpmvOp::spmm_into`] directly;
+    /// this is the no-allocation convenience for library callers holding a
     /// `Prepared`.)
     pub fn spmm_into(&self, x: &[f64], y: &mut [f64], k: usize) {
         self.op.spmm_into(x, y, k, &self.ctx());
@@ -103,6 +218,12 @@ mod tests {
         a
     }
 
+    fn square_matrix() -> Csr {
+        let mut a = stencil_2d(30, 30);
+        randomize_values(&mut a, 92);
+        a
+    }
+
     #[test]
     fn every_format_matches_the_oracle() {
         let a = matrix();
@@ -119,7 +240,10 @@ mod tests {
         ] {
             for policy in [Policy::StaticBlock, Policy::Dynamic(32)] {
                 for threads in [1usize, 4] {
-                    let p = Prepared::new(&a, Candidate { format, policy, threads });
+                    let p = Prepared::new(
+                        &a,
+                        Candidate { format, ordering: Ordering::Natural, policy, threads },
+                    );
                     let got = p.spmv(&x);
                     assert_eq!(got.len(), want.len());
                     for (u, v) in got.iter().zip(&want) {
@@ -128,6 +252,70 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn every_format_matches_the_oracle_under_rcm() {
+        // The permutation must be invisible: whatever format the RCM
+        // payload is stored in, callers get natural-order results.
+        let a = square_matrix();
+        let x = random_vector(a.ncols, 94);
+        let want = a.spmv(&x);
+        let k = 3;
+        let xk = random_vector(a.ncols * k, 96);
+        let want_k = a.spmm(&xk, k);
+        for format in [
+            Format::Csr,
+            Format::Ell,
+            Format::Bcsr { r: 4, c: 8 },
+            Format::Hyb { width: 4 },
+            Format::Sell { c: 8, sigma: 64 },
+        ] {
+            let p = Prepared::new(
+                &a,
+                Candidate {
+                    format,
+                    ordering: Ordering::Rcm,
+                    policy: Policy::Dynamic(32),
+                    threads: 4,
+                },
+            );
+            assert_eq!(p.op.format_name(), format!("rcm:{}", prepare(&a, format).format_name()));
+            for (u, v) in p.spmv(&x).iter().zip(&want) {
+                assert!((u - v).abs() < 1e-10, "{format} spmv");
+            }
+            for (u, v) in p.spmm(&xk, k).iter().zip(&want_k) {
+                assert!((u - v).abs() < 1e-10, "{format} spmm");
+            }
+        }
+    }
+
+    #[test]
+    fn permuted_op_accounts_for_its_permutation() {
+        let a = square_matrix();
+        let natural = Prepared::new(
+            &a,
+            Candidate {
+                format: Format::Csr,
+                ordering: Ordering::Natural,
+                policy: Policy::Dynamic(64),
+                threads: 1,
+            },
+        );
+        let reordered = Prepared::new(
+            &a,
+            Candidate {
+                format: Format::Csr,
+                ordering: Ordering::Rcm,
+                policy: Policy::Dynamic(64),
+                threads: 1,
+            },
+        );
+        // Same nonzeros either way; the wrapper adds exactly the stored
+        // permutation (4 bytes per row) on top of the payload.
+        assert_eq!(reordered.storage_bytes(), natural.storage_bytes() + 4 * a.nrows);
+        assert_eq!(reordered.op.format_name(), "rcm:csr");
+        assert_eq!((reordered.op.nrows(), reordered.op.ncols()), (a.nrows, a.ncols));
     }
 
     #[test]
@@ -145,7 +333,12 @@ mod tests {
         ] {
             let p = Prepared::new(
                 &a,
-                Candidate { format, policy: Policy::Dynamic(32), threads: 4 },
+                Candidate {
+                    format,
+                    ordering: Ordering::Natural,
+                    policy: Policy::Dynamic(32),
+                    threads: 4,
+                },
             );
             let got = p.spmm(&x, k);
             assert_eq!(got.len(), want.len());
@@ -158,24 +351,17 @@ mod tests {
     #[test]
     fn storage_bytes_positive_and_format_dependent() {
         let a = matrix();
-        let csr = Prepared::new(
-            &a,
-            Candidate { format: Format::Csr, policy: Policy::Dynamic(64), threads: 1 },
-        );
-        let ell = Prepared::new(
-            &a,
-            Candidate { format: Format::Ell, policy: Policy::Dynamic(64), threads: 1 },
-        );
+        let cand = |format| Candidate {
+            format,
+            ordering: Ordering::Natural,
+            policy: Policy::Dynamic(64),
+            threads: 1,
+        };
+        let csr = Prepared::new(&a, cand(Format::Csr));
+        let ell = Prepared::new(&a, cand(Format::Ell));
         assert_eq!(csr.storage_bytes(), a.storage_bytes());
         assert!(ell.storage_bytes() >= a.nnz() * 12, "ELL stores at least the nonzeros");
-        let sell = Prepared::new(
-            &a,
-            Candidate {
-                format: Format::Sell { c: 8, sigma: 256 },
-                policy: Policy::Dynamic(64),
-                threads: 1,
-            },
-        );
+        let sell = Prepared::new(&a, cand(Format::Sell { c: 8, sigma: 256 }));
         assert!(
             sell.storage_bytes() <= ell.storage_bytes() + 4 * a.nrows + 8 * (a.nrows + 1),
             "SELL must never pad beyond ELL (plus its perm/pointer overhead)"
@@ -195,6 +381,19 @@ mod tests {
         let handle = std::thread::spawn(move || op.spmv(&x, &ExecCtx::serial()));
         let got = handle.join().unwrap();
         for (u, v) in got.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn prepared_owned_with_rcm_is_static_too() {
+        let a = Arc::new(square_matrix());
+        let x = random_vector(a.ncols, 97);
+        let want = Csr::spmv(&a, &x);
+        let op = prepare_owned_with(&a, Format::Sell { c: 8, sigma: 64 }, Ordering::Rcm);
+        assert_eq!(op.format_name(), "rcm:sell8-64");
+        let handle = std::thread::spawn(move || op.spmv(&x, &ExecCtx::serial()));
+        for (u, v) in handle.join().unwrap().iter().zip(&want) {
             assert!((u - v).abs() < 1e-10);
         }
     }

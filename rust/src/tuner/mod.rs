@@ -30,22 +30,29 @@
 //! ```
 //!
 //! * [`space`] — the candidate space: formats ({CSR, ELL, BCSR r×c, HYB,
-//!   SELL-C-σ}) × [`crate::sched::Policy`] × thread counts, pruned up
-//!   front by [`crate::sparse::MatrixStats`]-driven heuristics (padding
-//!   blowup rules out ELL and SELL shapes, block fill rules out BCSR
-//!   shapes, row-length skew rules out static scheduling).
+//!   SELL-C-σ}) × [`space::Ordering`] ({natural, RCM}) ×
+//!   [`crate::sched::Policy`] × thread counts, pruned up front by
+//!   [`crate::sparse::MatrixStats`]-driven heuristics (padding blowup
+//!   rules out ELL and SELL shapes, block fill rules out BCSR shapes,
+//!   row-length skew rules out static scheduling, and a small diagonal
+//!   spread rules out RCM reordering — an already-banded matrix has
+//!   nothing to gain from §4.4's bandwidth reduction).
 //! * [`trial`] — the empirical path: short warmup+measure timings of each
 //!   candidate through the real [`crate::kernels::native`] kernels on the
 //!   persistent [`crate::sched::WorkerPool`] (no thread-spawn noise in the
-//!   timings); each distinct format is converted once.
+//!   timings); each distinct (format, ordering) is converted once, and
+//!   RCM candidates are timed through their permutation wrapper so the
+//!   measurement matches steady-state serving.
 //! * [`cost`] — the analytic fallback when trials are disabled: ranks
 //!   candidates with the [`crate::arch::phi`] machine model fed by the
 //!   [`crate::kernels`] work-profile builders.
 //! * [`cache`] — [`TunedConfig`] + [`TuningCache`]: decisions keyed by the
 //!   stats fingerprint, persisted as JSON via [`crate::util::json`].
-//! * [`exec`] — [`exec::prepare`]/[`Prepared`]: the chosen format
+//! * [`exec`] — [`exec::prepare_with`]/[`Prepared`]: the chosen format
 //!   materialized as a format-erased [`crate::kernels::SpmvOp`]; nothing
-//!   above this line matches on formats again.
+//!   above this line matches on formats again. An RCM decision reorders
+//!   once and is served through an [`exec::PermutedOp`], so callers keep
+//!   natural-order semantics whatever the stored ordering.
 //!
 //! # Adding a candidate format
 //!
@@ -72,12 +79,12 @@ pub mod trial;
 
 pub use cache::{TunedConfig, TuningCache};
 pub use cost::CostModel;
-pub use exec::{prepare, prepare_owned, Prepared};
-pub use space::{Candidate, Format, SearchSpace, SpaceConfig};
+pub use exec::{prepare, prepare_owned, prepare_owned_with, prepare_with, PermutedOp, Prepared};
+pub use space::{Candidate, Format, Ordering, SearchSpace, SpaceConfig};
 pub use trial::{TrialResult, Trialer};
 
 pub use crate::kernels::Workload;
-use crate::sparse::stats::row_length_cv;
+use crate::sparse::stats::{mean_diag_distance, row_length_cv};
 use crate::sparse::{Csr, MatrixStats};
 
 /// Cache key for one matrix under one tuner configuration and workload.
@@ -86,8 +93,9 @@ use crate::sparse::{Csr, MatrixStats};
 /// would have been identical:
 /// * the [`MatrixStats::fingerprint_hex`] shape statistics;
 /// * the structural metrics the pruner consumes (row-length CV, 8×8 block
-///   fill) — Table 1 statistics alone cannot distinguish, say, aligned
-///   dense blocks from the same counts scattered;
+///   fill, mean diagonal spread) — Table 1 statistics alone cannot
+///   distinguish, say, aligned dense blocks from the same counts
+///   scattered, or a banded pattern from its own random scramble;
 /// * the decision procedure itself (trials vs. model, and the search-space
 ///   shape), so a `model_only` or `quick()` decision is never served to a
 ///   full-space trials tuner. Warmup/measure counts are deliberately
@@ -112,9 +120,14 @@ fn cache_key(
     }
     let cv = row_length_cv(a);
     let fill = space::estimate_block_density(a, 8, 8);
+    // Diagonal spread drives the RCM prune; two matrices with identical
+    // row-length statistics but different bandwidth must not share a key
+    // (one wants the reorder, the other does not).
+    let spread = mean_diag_distance(a) / a.nrows.max(1) as f64;
     let mut h = 0xcbf29ce484222325u64;
     h = fnv(h, &cv.to_bits().to_le_bytes());
     h = fnv(h, &fill.to_bits().to_le_bytes());
+    h = fnv(h, &spread.to_bits().to_le_bytes());
     h = fnv(h, &[config.trials as u8]);
     let s = &config.space;
     for &t in &s.threads {
@@ -131,6 +144,9 @@ fn cache_key(
         h = fnv(h, &(c as u64).to_le_bytes());
         h = fnv(h, &(sigma as u64).to_le_bytes());
     }
+    for o in &s.orderings {
+        h = fnv(h, o.to_string().as_bytes());
+    }
     for bits in [
         s.ell_max_width_ratio,
         s.ell_max_cv,
@@ -138,6 +154,7 @@ fn cache_key(
         s.hyb_min_width_ratio,
         s.sell_max_pad,
         s.hyb_spmm_tail_budget,
+        s.rcm_min_diag_ratio,
     ] {
         h = fnv(h, &bits.to_bits().to_le_bytes());
     }
@@ -210,6 +227,25 @@ impl Tuner {
     /// Selects an SpMV configuration for `a`: answers from the cache when
     /// the fingerprint is known, otherwise searches (trials or cost
     /// model), stores the decision and persists the cache.
+    ///
+    /// ```
+    /// # fn main() -> anyhow::Result<()> {
+    /// use phi_spmv::tuner::Tuner;
+    ///
+    /// let a = phi_spmv::sparse::gen::stencil::stencil_2d(8, 8);
+    /// let mut tuner = Tuner::quick();
+    /// let decision = tuner.tune("demo", &a)?;
+    /// assert!(decision.threads >= 1);
+    ///
+    /// // Executing the decision reproduces the serial CSR oracle.
+    /// let x = vec![1.0; a.ncols];
+    /// let y = phi_spmv::tuner::Prepared::new(&a, decision.candidate()).spmv(&x);
+    /// for (got, want) in y.iter().zip(a.spmv(&x)) {
+    ///     assert!((got - want).abs() < 1e-10);
+    /// }
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn tune(&mut self, name: &str, a: &Csr) -> crate::Result<TunedConfig> {
         self.tune_workload(name, a, Workload::Spmv)
     }
@@ -217,6 +253,24 @@ impl Tuner {
     /// [`Tuner::tune`] for an explicit workload: an SpMM search trials the
     /// fused SpMM kernels at the workload's batch width, and its decision
     /// is cached under a key distinct from the SpMV decision's.
+    ///
+    /// ```
+    /// # fn main() -> anyhow::Result<()> {
+    /// use phi_spmv::tuner::{Tuner, Workload};
+    ///
+    /// let a = phi_spmv::sparse::gen::stencil::stencil_2d(8, 8);
+    /// let (k, x) = (4, vec![0.5; a.ncols * 4]);
+    /// let mut tuner = Tuner::quick();
+    /// let decision = tuner.tune_workload("demo", &a, Workload::Spmm { k })?;
+    /// assert_eq!(decision.workload, Workload::Spmm { k });
+    ///
+    /// let y = phi_spmv::tuner::Prepared::new(&a, decision.candidate()).spmm(&x, k);
+    /// for (got, want) in y.iter().zip(a.spmm(&x, k)) {
+    ///     assert!((got - want).abs() < 1e-10);
+    /// }
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn tune_workload(
         &mut self,
         name: &str,
@@ -275,6 +329,7 @@ impl Tuner {
             TunedConfig {
                 workload,
                 format: best.candidate.format,
+                ordering: best.candidate.ordering,
                 policy: best.candidate.policy,
                 threads: best.candidate.threads,
                 gflops: best.gflops,
@@ -286,6 +341,7 @@ impl Tuner {
             TunedConfig {
                 workload,
                 format: cand.format,
+                ordering: cand.ordering,
                 policy: cand.policy,
                 threads: cand.threads,
                 gflops: workload.flops(a.nnz()) / secs.max(1e-12) / 1e9,

@@ -1,5 +1,5 @@
-//! The tuner's search space: candidate (format, schedule, threads)
-//! triples, pruned up front by matrix-statistics heuristics.
+//! The tuner's search space: candidate (format, ordering, schedule,
+//! threads) tuples, pruned up front by matrix-statistics heuristics.
 //!
 //! Pruning encodes the paper's own findings so the empirical search never
 //! wastes trials on configurations the pattern already rules out:
@@ -17,6 +17,12 @@
 //!   sort of the row lengths, per-chunk maxima) exceeds the break-even.
 //! * `static` scheduling is dropped when row lengths are skewed (§4.2:
 //!   dynamic,32/64 wins on irregular instances).
+//! * RCM reordering (§4.4) densifies nonzeros around the diagonal, cutting
+//!   the input-vector cachelines each core must fetch — but it only pays
+//!   on matrices whose nonzeros actually stray from the diagonal. The
+//!   [`Ordering`] axis is pruned analytically: RCM candidates are skipped
+//!   when the mean |i − j| diagonal spread says the matrix is already
+//!   diagonal-dense (or when the matrix is not square, which RCM requires).
 //!
 //! The space is enumerated per [`Workload`]: most heuristics are shared
 //! (padding blowup is a *relative* overhead, identical under SpMV and
@@ -27,8 +33,41 @@
 
 use crate::kernels::Workload;
 use crate::sched::Policy;
-use crate::sparse::stats::row_length_cv;
+use crate::sparse::stats::{mean_diag_distance, row_length_cv};
 use crate::sparse::{Csr, MatrixStats};
+
+/// Row/column ordering a candidate executes under — a pattern transform
+/// the tuner owns, orthogonal to the storage format (§4.4).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub enum Ordering {
+    /// The matrix as given by the caller.
+    #[default]
+    Natural,
+    /// Reverse Cuthill-McKee: `P A Pᵀ` with [`crate::sparse::ordering::rcm()`],
+    /// served through a [`crate::tuner::exec::PermutedOp`] so callers keep
+    /// natural-order semantics.
+    Rcm,
+}
+
+impl std::fmt::Display for Ordering {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Ordering::Natural => write!(f, "natural"),
+            Ordering::Rcm => write!(f, "rcm"),
+        }
+    }
+}
+
+impl Ordering {
+    /// Parses the [`Display`](std::fmt::Display) form back (cache files).
+    pub fn parse(s: &str) -> Option<Ordering> {
+        match s {
+            "natural" => Some(Ordering::Natural),
+            "rcm" => Some(Ordering::Rcm),
+            _ => None,
+        }
+    }
+}
 
 /// A candidate storage format.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -127,6 +166,8 @@ pub fn parse_policy(s: &str) -> Option<Policy> {
 pub struct Candidate {
     /// Storage format.
     pub format: Format,
+    /// Row/column ordering the payload is converted under.
+    pub ordering: Ordering,
     /// Scheduling policy (applied over the format's own work units:
     /// rows for CSR/ELL/HYB, block rows for BCSR, chunks for SELL).
     pub policy: Policy,
@@ -136,7 +177,7 @@ pub struct Candidate {
 
 impl std::fmt::Display for Candidate {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{} {} t{}", self.format, self.policy, self.threads)
+        write!(f, "{} {} {} t{}", self.format, self.ordering, self.policy, self.threads)
     }
 }
 
@@ -168,6 +209,13 @@ pub struct SpaceConfig {
     /// the product is the overflow fraction itself, so SpMV spaces are
     /// unaffected by the default budget.
     pub hyb_spmm_tail_budget: f64,
+    /// Orderings to consider ([`Ordering::Natural`] is always kept).
+    pub orderings: Vec<Ordering>,
+    /// Consider RCM only when the mean diagonal spread
+    /// ([`mean_diag_distance`]` / nrows`) exceeds this: below it the
+    /// nonzeros already hug the diagonal and a reorder can only add
+    /// per-call permutation overhead.
+    pub rcm_min_diag_ratio: f64,
 }
 
 impl Default for SpaceConfig {
@@ -196,6 +244,8 @@ impl Default for SpaceConfig {
             sell_shapes: vec![(8, 256), (32, 1024)],
             sell_max_pad: 1.5,
             hyb_spmm_tail_budget: 1.0,
+            orderings: vec![Ordering::Natural, Ordering::Rcm],
+            rcm_min_diag_ratio: 0.05,
         }
     }
 }
@@ -341,6 +391,27 @@ pub fn enumerate_for(
         }
     }
 
+    let mut orderings = vec![Ordering::Natural];
+    if cfg.orderings.contains(&Ordering::Rcm) {
+        // RCM needs a square symmetrizable pattern; the payoff (§4.4) is
+        // densifying nonzeros around the diagonal, so a matrix whose
+        // nonzeros already hug the diagonal has nothing to gain and would
+        // only pay the per-call vector permutation.
+        if a.nrows != a.ncols {
+            pruned.push("rcm: matrix is not square".to_string());
+        } else {
+            let spread = mean_diag_distance(a) / a.nrows.max(1) as f64;
+            if spread > cfg.rcm_min_diag_ratio {
+                orderings.push(Ordering::Rcm);
+            } else {
+                pruned.push(format!(
+                    "rcm: diagonal spread {spread:.3} already below {:.3}",
+                    cfg.rcm_min_diag_ratio
+                ));
+            }
+        }
+    }
+
     let mut policies = cfg.policies.clone();
     if cv > 1.0 {
         policies.retain(|p| !matches!(p, Policy::StaticBlock));
@@ -358,19 +429,21 @@ pub fn enumerate_for(
     threads.dedup();
 
     let mut candidates = Vec::new();
-    for &format in &formats {
-        let mut serial_seen = false;
-        for &policy in &policies {
-            for &t in &threads {
-                // All policies collapse to the same serial loop at t = 1:
-                // keep one serial candidate per format.
-                if t == 1 {
-                    if serial_seen {
-                        continue;
+    for &ordering in &orderings {
+        for &format in &formats {
+            let mut serial_seen = false;
+            for &policy in &policies {
+                for &t in &threads {
+                    // All policies collapse to the same serial loop at t = 1:
+                    // keep one serial candidate per (format, ordering).
+                    if t == 1 {
+                        if serial_seen {
+                            continue;
+                        }
+                        serial_seen = true;
                     }
-                    serial_seen = true;
+                    candidates.push(Candidate { format, ordering, policy, threads: t });
                 }
-                candidates.push(Candidate { format, policy, threads: t });
             }
         }
     }
@@ -530,17 +603,66 @@ mod tests {
     }
 
     #[test]
-    fn serial_candidates_deduped_per_format() {
+    fn serial_candidates_deduped_per_format_and_ordering() {
         let a = stencil_2d(30, 30);
         let s = space_for(&a);
         for fmt in formats_of(&s) {
-            let serial = s
-                .candidates
-                .iter()
-                .filter(|c| c.format == fmt && c.threads == 1)
-                .count();
-            assert!(serial <= 1, "{fmt}: {serial} serial candidates");
+            for ordering in [Ordering::Natural, Ordering::Rcm] {
+                let serial = s
+                    .candidates
+                    .iter()
+                    .filter(|c| c.format == fmt && c.ordering == ordering && c.threads == 1)
+                    .count();
+                assert!(serial <= 1, "{fmt} {ordering}: {serial} serial candidates");
+            }
         }
+    }
+
+    #[test]
+    fn rcm_pruned_on_diagonal_dense_kept_on_scrambled() {
+        // A stencil's nonzeros hug the diagonal: reordering can only add
+        // per-call permutation overhead, so the axis is pruned outright.
+        let a = stencil_2d(30, 30);
+        let s = space_for(&a);
+        assert!(
+            s.candidates.iter().all(|c| c.ordering == Ordering::Natural),
+            "diagonal-dense matrix must not search RCM"
+        );
+        assert!(s.pruned.iter().any(|p| p.starts_with("rcm:")), "pruned: {:?}", s.pruned);
+
+        // The same pattern scrambled by a random symmetric permutation has
+        // a large diagonal spread — exactly what RCM undoes.
+        let mut rng = crate::sparse::gen::Rng::new(17);
+        let mut shuffle: Vec<u32> = (0..a.nrows as u32).collect();
+        for i in (1..a.nrows).rev() {
+            let j = rng.usize_below(i + 1);
+            shuffle.swap(i, j);
+        }
+        let scrambled = crate::sparse::ordering::apply_symmetric_permutation(&a, &shuffle);
+        let s = space_for(&scrambled);
+        assert!(
+            s.candidates.iter().any(|c| c.ordering == Ordering::Rcm),
+            "scrambled matrix must keep RCM candidates (pruned: {:?})",
+            s.pruned
+        );
+        assert!(
+            s.candidates.iter().any(|c| c.ordering == Ordering::Natural),
+            "natural ordering always stays in the space"
+        );
+    }
+
+    #[test]
+    fn rcm_pruned_on_non_square() {
+        // A wide rectangular pattern with large |i − j| spread: the spread
+        // alone would keep RCM, so the square check must prune it.
+        let mut coo = Coo::new(16, 64);
+        for i in 0..16usize {
+            coo.push(i, 63 - i, 1.0);
+            coo.push(i, i, 1.0);
+        }
+        let s = space_for(&coo.to_csr());
+        assert!(s.candidates.iter().all(|c| c.ordering == Ordering::Natural));
+        assert!(s.pruned.iter().any(|p| p.contains("not square")));
     }
 
     #[test]
@@ -565,6 +687,10 @@ mod tests {
             assert_eq!(parse_policy(&p.to_string()), Some(p));
         }
         assert_eq!(parse_policy("banana,3"), None);
+        for o in [Ordering::Natural, Ordering::Rcm] {
+            assert_eq!(Ordering::parse(&o.to_string()), Some(o));
+        }
+        assert_eq!(Ordering::parse("sorted"), None);
     }
 
     #[test]

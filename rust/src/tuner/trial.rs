@@ -5,8 +5,11 @@
 //! protocol (70 runs) — tuning happens on the serving path, so the budget
 //! per candidate is a handful of kernel runs and the statistic is the
 //! *minimum*, which is robust to scheduling noise at small sample sizes.
-//! Each distinct format is converted exactly once and reused across every
-//! (policy, threads) combination that names it.
+//! Each distinct (format, ordering) is converted exactly once and reused
+//! across every (policy, threads) combination that names it; RCM
+//! candidates share one reorder across all their formats, and their timed
+//! iterations run through the [`PermutedOp`] wrapper so the per-call
+//! vector permutation shows up in the measurement.
 //!
 //! Two levers keep the budget tight:
 //!
@@ -25,11 +28,12 @@ use std::time::Instant;
 use crate::kernels::op::{ExecCtx, SpmvOp};
 use crate::kernels::Workload;
 use crate::sparse::gen::random_vector;
+use crate::sparse::ordering::{apply_symmetric_permutation, rcm};
 use crate::sparse::Csr;
 
 use super::cost::CostModel;
-use super::exec::prepare;
-use super::space::{Candidate, Format};
+use super::exec::{prepare, PermutedOp};
+use super::space::{Candidate, Format, Ordering};
 
 /// Measured iterations before early termination may trigger: one probe can
 /// catch a cold cache or a scheduler hiccup, two in a row cannot both be
@@ -123,17 +127,38 @@ impl Trialer {
         } else {
             candidates.to_vec()
         };
-        let mut prepared: Vec<(Format, Box<dyn SpmvOp + '_>, f64)> = Vec::new();
+        // The RCM permutation (and the permuted matrix) is computed once
+        // and shared by every RCM candidate, whatever its format — the
+        // per-candidate one-time cost is then just the format conversion,
+        // exactly like the natural-order side. The timed loop runs the
+        // wrapped PermutedOp, so every measured iteration *includes* the
+        // per-call vector gather/scatter a served request would pay:
+        // trial timings reflect steady-state serving, not a bare kernel.
+        let permuted: Option<(Vec<u32>, Csr)> =
+            ordered.iter().any(|c| c.ordering == Ordering::Rcm).then(|| {
+                let perm = rcm(a);
+                let b = apply_symmetric_permutation(a, &perm);
+                (perm, b)
+            });
+        let mut prepared: Vec<(Format, Ordering, Box<dyn SpmvOp + '_>, f64)> = Vec::new();
         let mut out = Vec::with_capacity(ordered.len());
         let mut incumbent = f64::INFINITY;
         for &cand in &ordered {
-            if !prepared.iter().any(|(f, _, _)| *f == cand.format) {
+            if !prepared.iter().any(|(f, o, _, _)| *f == cand.format && *o == cand.ordering) {
                 let t0 = Instant::now();
-                let op = prepare(a, cand.format);
-                prepared.push((cand.format, op, t0.elapsed().as_secs_f64()));
+                let op: Box<dyn SpmvOp + '_> = match cand.ordering {
+                    Ordering::Natural => prepare(a, cand.format),
+                    Ordering::Rcm => {
+                        let (perm, b) = permuted.as_ref().expect("permuted matrix prepared");
+                        Box::new(PermutedOp::new(prepare(b, cand.format), perm.clone()))
+                    }
+                };
+                prepared.push((cand.format, cand.ordering, op, t0.elapsed().as_secs_f64()));
             }
-            let (_, op, convert_secs) =
-                prepared.iter().find(|(f, _, _)| *f == cand.format).unwrap();
+            let (_, _, op, convert_secs) = prepared
+                .iter()
+                .find(|(f, o, _, _)| *f == cand.format && *o == cand.ordering)
+                .unwrap();
             let ctx = ExecCtx::pooled(cand.threads, cand.policy);
             for _ in 0..self.warmup {
                 op.apply(workload, &x, &mut y, &ctx);
@@ -184,8 +209,18 @@ mod tests {
     fn best_is_min_of_run_all() {
         let a = stencil_2d(25, 25);
         let candidates = [
-            Candidate { format: Format::Csr, policy: Policy::Dynamic(64), threads: 1 },
-            Candidate { format: Format::Ell, policy: Policy::Dynamic(64), threads: 1 },
+            Candidate {
+                format: Format::Csr,
+                ordering: Ordering::Natural,
+                policy: Policy::Dynamic(64),
+                threads: 1,
+            },
+            Candidate {
+                format: Format::Ell,
+                ordering: Ordering::Natural,
+                policy: Policy::Dynamic(64),
+                threads: 1,
+            },
         ];
         let t = Trialer::new(1, 3);
         let all = t.run_all(&a, &candidates);
@@ -197,6 +232,39 @@ mod tests {
             assert!(r.secs >= 0.0 && r.gflops >= 0.0);
             assert!(r.iters >= 1);
         }
+    }
+
+    #[test]
+    fn rcm_candidates_trial_alongside_natural_ones() {
+        let a = stencil_2d(20, 20);
+        let candidates = [
+            Candidate {
+                format: Format::Csr,
+                ordering: Ordering::Natural,
+                policy: Policy::Dynamic(64),
+                threads: 1,
+            },
+            Candidate {
+                format: Format::Csr,
+                ordering: Ordering::Rcm,
+                policy: Policy::Dynamic(64),
+                threads: 1,
+            },
+            Candidate {
+                format: Format::Ell,
+                ordering: Ordering::Rcm,
+                policy: Policy::Dynamic(64),
+                threads: 1,
+            },
+        ];
+        let t = Trialer::new(0, 2).with_margin(f64::INFINITY);
+        let results = t.run_all(&a, &candidates);
+        assert_eq!(results.len(), 3);
+        for r in &results {
+            assert!(r.secs.is_finite() && r.secs >= 0.0, "{}", r.candidate);
+        }
+        let best = t.best(&a, &candidates).unwrap();
+        assert!(candidates.contains(&best.candidate));
     }
 
     #[test]
@@ -223,8 +291,18 @@ mod tests {
         let a = stencil_2d(20, 20);
         let sell = Format::Sell { c: 8, sigma: 64 };
         let candidates = [
-            Candidate { format: Format::Csr, policy: Policy::Dynamic(64), threads: 1 },
-            Candidate { format: sell, policy: Policy::Dynamic(64), threads: 1 },
+            Candidate {
+                format: Format::Csr,
+                ordering: Ordering::Natural,
+                policy: Policy::Dynamic(64),
+                threads: 1,
+            },
+            Candidate {
+                format: sell,
+                ordering: Ordering::Natural,
+                policy: Policy::Dynamic(64),
+                threads: 1,
+            },
         ];
         let t = Trialer::new(0, 2).with_workload(Workload::Spmm { k: 4 });
         let results = t.run_all(&a, &candidates);
@@ -242,9 +320,24 @@ mod tests {
     fn zero_margin_cuts_every_later_candidate_at_min_probe() {
         let a = stencil_2d(25, 25);
         let candidates = [
-            Candidate { format: Format::Csr, policy: Policy::Dynamic(64), threads: 1 },
-            Candidate { format: Format::Csr, policy: Policy::Dynamic(16), threads: 1 },
-            Candidate { format: Format::Ell, policy: Policy::Dynamic(64), threads: 1 },
+            Candidate {
+                format: Format::Csr,
+                ordering: Ordering::Natural,
+                policy: Policy::Dynamic(64),
+                threads: 1,
+            },
+            Candidate {
+                format: Format::Csr,
+                ordering: Ordering::Natural,
+                policy: Policy::Dynamic(16),
+                threads: 1,
+            },
+            Candidate {
+                format: Format::Ell,
+                ordering: Ordering::Natural,
+                policy: Policy::Dynamic(64),
+                threads: 1,
+            },
         ];
         let measure = 6;
         let results = Trialer::new(0, measure).with_margin(0.0).run_all(&a, &candidates);
@@ -262,8 +355,18 @@ mod tests {
     fn infinite_margin_times_every_iteration_in_given_order() {
         let a = stencil_2d(25, 25);
         let candidates = [
-            Candidate { format: Format::Ell, policy: Policy::Dynamic(64), threads: 1 },
-            Candidate { format: Format::Csr, policy: Policy::Dynamic(64), threads: 1 },
+            Candidate {
+                format: Format::Ell,
+                ordering: Ordering::Natural,
+                policy: Policy::Dynamic(64),
+                threads: 1,
+            },
+            Candidate {
+                format: Format::Csr,
+                ordering: Ordering::Natural,
+                policy: Policy::Dynamic(64),
+                threads: 1,
+            },
         ];
         let measure = 3;
         let results =

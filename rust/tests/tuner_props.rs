@@ -3,9 +3,12 @@
 //! persistent cache must round-trip deterministically.
 
 use phi_spmv::sched::Policy;
-use phi_spmv::sparse::MatrixStats;
+use phi_spmv::sparse::ordering::apply_symmetric_permutation;
+use phi_spmv::sparse::{Coo, MatrixStats};
 use phi_spmv::tuner::space::{enumerate_for, SpaceConfig};
-use phi_spmv::tuner::{Format, Prepared, TunedConfig, Tuner, TuningCache, Workload};
+use phi_spmv::tuner::{
+    Format, Ordering, Prepared, TunedConfig, Tuner, TunerConfig, TuningCache, Workload,
+};
 use phi_spmv::util::prop::{arb, check};
 
 fn assert_close(got: &[f64], want: &[f64]) -> Result<(), String> {
@@ -118,6 +121,78 @@ fn spmm_decisions_never_shadow_spmv_decisions() {
 }
 
 #[test]
+fn scrambled_band_tunes_to_rcm_and_permuted_op_matches_the_oracle() {
+    // The §4.4 property: a banded matrix scrambled by a random symmetric
+    // permutation must tune to `Ordering::Rcm` under the deterministic
+    // model-only path (the post-reorder analysis sees the recovered
+    // locality), and the decision's PermutedOp must be transparent — its
+    // output matches the natural-order oracle for both workloads.
+    check(
+        "rcm-axis",
+        |rng| {
+            // A dense band: each row touches a contiguous window around
+            // the diagonal.
+            let n = 300 + rng.usize_below(300);
+            let half = 4 + rng.usize_below(4);
+            let mut coo = Coo::new(n, n);
+            for i in 0..n {
+                coo.push(i, i, 4.0);
+                for j in i.saturating_sub(half)..(i + half + 1).min(n) {
+                    if j != i && rng.bool(0.85) {
+                        coo.push(i, j, rng.f64_range(-1.0, 1.0));
+                    }
+                }
+            }
+            let a = coo.to_csr();
+            let mut shuffle: Vec<u32> = (0..n as u32).collect();
+            for i in (1..n).rev() {
+                let j = rng.usize_below(i + 1);
+                shuffle.swap(i, j);
+            }
+            let scrambled = apply_symmetric_permutation(&a, &shuffle);
+            let k = 2 + rng.usize_below(6);
+            let x = arb::vector(rng, n);
+            let xk = arb::vector(rng, n * k);
+            (scrambled, k, x, xk)
+        },
+        |(a, k, x, xk)| {
+            let mut tuner = Tuner::new(TunerConfig::model_only(), TuningCache::in_memory());
+            let spmv = tuner.tune("scrambled-band", a).map_err(|e| e.to_string())?;
+            if spmv.ordering != Ordering::Rcm {
+                return Err(format!("spmv decision kept natural order: {spmv}"));
+            }
+            let workload = Workload::Spmm { k: *k };
+            let spmm = tuner
+                .tune_workload("scrambled-band", a, workload)
+                .map_err(|e| e.to_string())?;
+            if spmm.ordering != Ordering::Rcm {
+                return Err(format!("spmm decision kept natural order: {spmm}"));
+            }
+            // Natural-order semantics all the way through the wrapper.
+            assert_close(&Prepared::new(a, spmv.candidate()).spmv(x), &a.spmv(x))
+                .map_err(|e| format!("spmv via {spmv}: {e}"))?;
+            assert_close(&Prepared::new(a, spmm.candidate()).spmm(xk, *k), &a.spmm(xk, *k))
+                .map_err(|e| format!("spmm via {spmm}: {e}"))?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn already_banded_matrix_keeps_natural_order() {
+    // The prune half of the acceptance: a matrix whose nonzeros already
+    // hug the diagonal never searches (and so never selects) RCM.
+    let a = phi_spmv::sparse::gen::stencil::stencil_2d(25, 24);
+    for config in [TunerConfig::model_only(), TunerConfig::quick()] {
+        let mut tuner = Tuner::new(config, TuningCache::in_memory());
+        let spmv = tuner.tune("stencil", &a).unwrap();
+        assert_eq!(spmv.ordering, Ordering::Natural, "{spmv}");
+        let spmm = tuner.tune_workload("stencil", &a, Workload::Spmm { k: 8 }).unwrap();
+        assert_eq!(spmm.ordering, Ordering::Natural, "{spmm}");
+    }
+}
+
+#[test]
 fn cached_decision_is_returned_verbatim() {
     check(
         "cache-stability",
@@ -172,6 +247,7 @@ fn tuning_cache_roundtrips_deterministically_through_json() {
                     TunedConfig {
                         workload,
                         format,
+                        ordering: if rng.bool(0.5) { Ordering::Natural } else { Ordering::Rcm },
                         policy,
                         threads: 1 + rng.usize_below(64),
                         gflops: (rng.usize_below(10_000) as f64) / 64.0,
