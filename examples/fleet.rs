@@ -1,0 +1,218 @@
+//! Multi-tenant serving fleet — many matrices, one memory budget, and a
+//! maintenance thread that keeps the serving decisions honest.
+//!
+//! ```text
+//! cargo run --release --example fleet [-- --requests 600 --entries 9]
+//! ```
+//!
+//! Registers a mixed population of generated matrices (stencils, a
+//! banded run matrix, power-law item graphs) under a byte budget sized
+//! to hold only about half of them, so registration and traffic force
+//! LRU evictions and re-materializations. Mixed SpMV/SpMM traffic then
+//! skews toward a few hot entries — floods drive fused batches and walk
+//! the adaptive batch width up the tuned ladder, trickles walk it back
+//! down. Finally one entry's recorded GFlop/s is inflated (the
+//! drift-injection hook) so the background re-tuner must confirm the
+//! drift, re-tune off the serving path and hot-swap the fresh payload
+//! in. Every fleet event (registrations with decisions, evictions,
+//! re-materializations, width moves, the re-tune) is printed as it
+//! drains.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use phi_spmv::fleet::{BatchConfig, Fleet, FleetConfig, RetuneConfig};
+use phi_spmv::kernels::Workload;
+use phi_spmv::sparse::gen::banded::{banded_runs, BandedSpec};
+use phi_spmv::sparse::gen::powerlaw::{powerlaw, PowerLawSpec};
+use phi_spmv::sparse::gen::stencil::stencil_2d;
+use phi_spmv::sparse::gen::{random_vector, randomize_values, Rng};
+use phi_spmv::sparse::Csr;
+use phi_spmv::tuner::{Tuner, TunerConfig, TuningCache};
+use phi_spmv::util::cli::Args;
+
+fn population(entries: usize) -> Vec<(String, Arc<Csr>)> {
+    let mut mats: Vec<(String, Arc<Csr>)> = Vec::new();
+    for i in 0..entries {
+        let (id, mut a) = match i % 3 {
+            0 => {
+                let n = 40 + 6 * i;
+                (format!("stencil{n}x{n}"), stencil_2d(n, n))
+            }
+            1 => {
+                let n = 2_000 + 400 * i;
+                let spec = BandedSpec {
+                    n,
+                    mean_row: 9.0,
+                    run: 4,
+                    locality: 0.05,
+                    seed: 20 + i as u64,
+                };
+                (format!("banded{n}"), banded_runs(&spec))
+            }
+            _ => {
+                let n = 3_000 + 500 * i;
+                let spec = PowerLawSpec {
+                    n,
+                    nnz: 12 * n,
+                    row_alpha: 1.7,
+                    col_alpha: 1.5,
+                    max_row: 48,
+                    seed: 30 + i as u64,
+                };
+                (format!("powerlaw{n}"), powerlaw(&spec))
+            }
+        };
+        randomize_values(&mut a, 100 + i as u64);
+        mats.push((id, Arc::new(a)));
+    }
+    mats
+}
+
+fn drain_and_print(fleet: &Fleet) {
+    for event in fleet.drain_events() {
+        println!("  · {event}");
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let requests = args.get("requests", 600usize);
+    let entries = args.get("entries", 9usize).max(2);
+
+    let mats = population(entries);
+    let total_bytes: usize = mats.iter().map(|(_, a)| a.storage_bytes()).sum();
+    let budget = total_bytes / 2;
+    println!(
+        "fleet: {entries} matrices, {} nnz total, {} B if all warm, budget {} B",
+        mats.iter().map(|(_, a)| a.nnz()).sum::<usize>(),
+        total_bytes,
+        budget,
+    );
+
+    // Quick-space trials keep registration snappy; the 24 h TTL is the
+    // cache-decay half of online re-tuning (inert in a demo run, but it
+    // shows where the knob lives).
+    let tuner = Tuner::new(
+        TunerConfig::quick(),
+        TuningCache::in_memory().with_max_age(Duration::from_secs(24 * 3600)),
+    );
+    let fleet = Fleet::new(
+        FleetConfig {
+            memory_budget_bytes: budget,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            retune: RetuneConfig {
+                interval: Duration::from_millis(50),
+                ..RetuneConfig::default()
+            },
+            batch: BatchConfig { min_samples: 12, ..BatchConfig::default() },
+            ..FleetConfig::default()
+        },
+        tuner,
+    );
+
+    println!("— registration (tuning spmv + spmm per matrix, evicting to budget) —");
+    for (id, a) in &mats {
+        fleet.register(id, a.clone())?;
+    }
+    drain_and_print(&fleet);
+    println!(
+        "warm payloads: {} B of {budget} B budget; {} entries registered",
+        fleet.storage_bytes(),
+        fleet.ids().len(),
+    );
+
+    // Mixed traffic: 70% of requests flood three hot entries (bursts →
+    // fused batches → the width ladder climbs), the rest trickle across
+    // the whole population (cold entries re-materialize on demand).
+    println!("— mixed traffic ({requests} requests, skewed 70/30) —");
+    let hot: Vec<&str> = mats.iter().take(3).map(|(id, _)| id.as_str()).collect();
+    let mut rng = Rng::new(4711);
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut served = 0usize;
+    for r in 0..requests {
+        let (id, a) = if rng.bool(0.7) {
+            let id = hot[r % hot.len()];
+            let a = &mats.iter().find(|(i, _)| i == id).unwrap().1;
+            (id, a)
+        } else {
+            let (id, a) = &mats[rng.usize_below(mats.len())];
+            (id.as_str(), a)
+        };
+        let x = random_vector(a.ncols, 5_000 + r as u64);
+        pending.push(fleet.submit(id, x)?);
+        // Bursts: drain every 16 submissions so hot floods fuse.
+        if pending.len() >= 16 {
+            served += pending.len();
+            for rx in pending.drain(..) {
+                rx.recv()?;
+            }
+        }
+    }
+    served += pending.len();
+    for rx in pending.drain(..) {
+        rx.recv()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    fleet.maintain_now();
+    println!("{served} requests in {wall:.2}s = {:.0} req/s", served as f64 / wall);
+    drain_and_print(&fleet);
+
+    // Drift injection: inflate one hot entry's recorded throughput so
+    // the background thread must re-tune and hot-swap it under load.
+    let victim = hot[0];
+    println!("— drift injection on {victim} (recorded GFlop/s × 10⁶) —");
+    fleet.skew_recorded_gflops(victim, Workload::Spmv, 1e6)?;
+    // The adaptive ladder may have moved the batch width off its initial
+    // rung, so skew the SpMM decision at whatever width is serving now.
+    if let Some((_, spmm_decision)) = fleet.decisions(victim) {
+        fleet.skew_recorded_gflops(victim, spmm_decision.workload, 1e6)?;
+    }
+    let victim_a = mats.iter().find(|(id, _)| id == victim).unwrap().1.clone();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while fleet.stats().retunes == 0 && Instant::now() < deadline {
+        for s in 0..8u64 {
+            fleet.call(victim, random_vector(victim_a.ncols, 9_000 + s))?;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    drain_and_print(&fleet);
+
+    let stats = fleet.shutdown();
+    println!("— final fleet report —");
+    println!(
+        "{:<16} {:>5} {:>10} {:>9} {:>22} {:>22}",
+        "entry", "warm", "bytes", "served", "spmv GF [cfg]", "spmm GF [cfg]"
+    );
+    for e in &stats.entries {
+        println!(
+            "{:<16} {:>5} {:>10} {:>9} {:>14.2} [{} {}] {:>8.2} [{} {}]",
+            e.id,
+            if e.warm { "yes" } else { "no" },
+            e.storage_bytes,
+            e.spmv.served + e.spmm.served,
+            e.spmv.gflops(),
+            e.spmv.format,
+            e.spmv.ordering,
+            e.spmm.gflops(),
+            e.spmm.format,
+            e.spmm.workload,
+        );
+    }
+    println!(
+        "aggregate {:.2} GFlop/s over {} batches | evictions {} | rematerializations {} | \
+         retunes {} | width changes {}",
+        stats.gflops(),
+        stats.batches(),
+        stats.evictions,
+        stats.rematerializations,
+        stats.retunes,
+        stats.width_changes,
+    );
+    anyhow::ensure!(stats.evictions > 0, "the budget was sized to force evictions");
+    anyhow::ensure!(stats.retunes > 0, "the injected drift must have been re-tuned");
+    println!("fleet OK");
+    Ok(())
+}

@@ -1,0 +1,150 @@
+//! Fleet benchmark: aggregate throughput and tail latency as the number
+//! of registered matrices grows under a *fixed* memory budget — the
+//! price of multi-tenancy (`BENCH_fleet.json`).
+//!
+//! At low entry counts every payload stays warm and requests go straight
+//! to a running engine; past the budget the fleet starts evicting, and
+//! the traffic pays re-materialization (payload re-preparation) on cold
+//! hits. The JSON reports, per entry count: aggregate GFlop/s over all
+//! paths, client p50/p99 latency, and the eviction/re-materialization
+//! counts that explain them.
+//!
+//! `cargo bench --bench bench_fleet [-- --requests 400 --scale 1.0]`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use phi_spmv::coordinator::server::percentile;
+use phi_spmv::fleet::{BatchConfig, Fleet, FleetConfig, RetuneConfig};
+use phi_spmv::sparse::gen::powerlaw::{powerlaw, PowerLawSpec};
+use phi_spmv::sparse::gen::{random_vector, randomize_values, Rng};
+use phi_spmv::sparse::Csr;
+use phi_spmv::tuner::Tuner;
+use phi_spmv::util::cli::Args;
+use phi_spmv::util::json::Json;
+
+fn matrices(count: usize, scale: f64) -> Vec<(String, Arc<Csr>)> {
+    (0..count)
+        .map(|i| {
+            let n = ((6_000.0 + 800.0 * i as f64) * scale).max(200.0) as usize;
+            let spec = PowerLawSpec {
+                n,
+                nnz: 10 * n,
+                row_alpha: 1.7,
+                col_alpha: 1.5,
+                max_row: 48,
+                seed: 60 + i as u64,
+            };
+            let mut a = powerlaw(&spec);
+            randomize_values(&mut a, 70 + i as u64);
+            (format!("m{i}"), Arc::new(a))
+        })
+        .collect()
+}
+
+struct Run {
+    gflops: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    evictions: usize,
+    rematerializations: usize,
+    warm_bytes: usize,
+}
+
+fn run_fleet(entry_count: usize, scale: f64, requests: usize, budget: usize) -> Run {
+    let mats = matrices(entry_count, scale);
+    let fleet = Fleet::new(
+        FleetConfig {
+            memory_budget_bytes: budget,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            // Pure serving measurement: no background thread, no width
+            // walk — the single-server bench already covers those axes.
+            retune: RetuneConfig { enabled: false, ..RetuneConfig::default() },
+            batch: BatchConfig { min_samples: usize::MAX, ..BatchConfig::default() },
+            ..FleetConfig::default()
+        },
+        Tuner::quick(),
+    );
+    for (id, a) in &mats {
+        fleet.register(id, a.clone()).expect("register");
+    }
+    // Round-robin-with-skew traffic in bursts of 8, so batches fuse.
+    let mut rng = Rng::new(99);
+    let mut latencies: Vec<Duration> = Vec::with_capacity(requests);
+    let mut pending = Vec::new();
+    for r in 0..requests {
+        let idx = if rng.bool(0.6) { r % 2 } else { rng.usize_below(mats.len()) };
+        let (id, a) = &mats[idx];
+        let x = random_vector(a.ncols, 1_000 + r as u64);
+        pending.push(fleet.submit(id, x).expect("submit"));
+        if pending.len() >= 8 {
+            for rx in pending.drain(..) {
+                latencies.push(rx.recv().expect("response").latency);
+            }
+        }
+    }
+    for rx in pending.drain(..) {
+        latencies.push(rx.recv().expect("response").latency);
+    }
+    latencies.sort();
+    let warm_bytes = fleet.storage_bytes();
+    let stats = fleet.shutdown();
+    Run {
+        gflops: stats.gflops(),
+        p50_ms: percentile(&latencies, 0.50).as_secs_f64() * 1e3,
+        p99_ms: percentile(&latencies, 0.99).as_secs_f64() * 1e3,
+        evictions: stats.evictions,
+        rematerializations: stats.rematerializations,
+        warm_bytes,
+    }
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let requests = args.get("requests", 400usize);
+    let scale = args.get("scale", 1.0f64);
+    let counts = [2usize, 4, 8];
+
+    // Fix the budget to what the 2-entry population needs, so growing
+    // the entry count squeezes the same budget harder.
+    let base: usize = matrices(2, scale).iter().map(|(_, a)| a.storage_bytes()).sum();
+    let budget = base + base / 2;
+    println!("fleet bench: budget {budget} B, {requests} requests per entry count");
+    println!(
+        "{:<8} {:>10} {:>10} {:>10} {:>10} {:>8} {:>8}",
+        "entries", "GFlop/s", "p50 ms", "p99 ms", "warm B", "evict", "remat"
+    );
+
+    let mut by_count = Json::obj();
+    for &count in &counts {
+        let t0 = Instant::now();
+        let run = run_fleet(count, scale, requests, budget);
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{count:<8} {:>10.3} {:>10.3} {:>10.3} {:>10} {:>8} {:>8}   ({wall:.1}s)",
+            run.gflops, run.p50_ms, run.p99_ms, run.warm_bytes, run.evictions,
+            run.rematerializations
+        );
+        by_count = by_count.set(
+            &count.to_string(),
+            Json::obj()
+                .set("gflops", run.gflops)
+                .set("p50_ms", run.p50_ms)
+                .set("p99_ms", run.p99_ms)
+                .set("warm_bytes", run.warm_bytes)
+                .set("evictions", run.evictions)
+                .set("rematerializations", run.rematerializations),
+        );
+    }
+
+    let report = Json::obj()
+        .set("bench", "fleet")
+        .set("budget_bytes", budget)
+        .set("requests_per_count", requests)
+        .set("scale", scale)
+        .set("by_entry_count", by_count);
+    let path = "BENCH_fleet.json";
+    std::fs::write(path, report.to_pretty()).expect("writing BENCH_fleet.json");
+    println!("wrote {path}");
+}

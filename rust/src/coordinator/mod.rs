@@ -9,12 +9,14 @@
 //! module; `examples/paper_figures.rs` regenerates everything at once.
 
 pub mod experiments;
+pub mod path;
 pub mod report;
 pub mod server;
 
 pub use experiments::{Ctx, Experiment};
+pub use path::{Engine, Path, PathSpec, PathStats, PathWindow, Response, SpmvClient};
 pub use report::Report;
-pub use server::{PathSpec, PathStats, ServerConfig, ServerStats, SpmvClient, SpmvServer};
+pub use server::{percentile, ServerConfig, ServerStats, SpmvServer};
 
 /// All experiment ids, in paper order.
 pub const ALL_EXPERIMENTS: &[&str] = &[

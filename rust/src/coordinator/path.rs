@@ -1,0 +1,609 @@
+//! The reusable serving unit under both [`super::server::SpmvServer`] and
+//! the [`crate::fleet`]: one hot-swappable execution [`Path`] per
+//! (matrix, workload), and the [`Engine`] that drains a request queue
+//! into dynamic batches and routes each batch to a path.
+//!
+//! A [`Path`] owns what one workload of one matrix executes with — the
+//! [`PathSpec`] (format, ordering, schedule, threads) and the prepared
+//! format-erased payload — behind a lock, so a background re-tuner can
+//! [`Path::swap`] in a freshly tuned payload while requests are in
+//! flight: the serving thread picks up the replacement at the next batch
+//! boundary and no request ever observes a half-configured path. Each
+//! path counts its own work (batches, served requests, flops, busy
+//! seconds) in counters no other path shares, which is what makes
+//! per-path and aggregate GFlop/s reports additive even when two paths
+//! share one payload `Arc`. On top of the cumulative counters every path
+//! keeps a [`PathWindow`] — the same counters since the last swap/reset —
+//! which is the measurement the fleet's drift detector compares against a
+//! decision's promised GFlop/s.
+//!
+//! The [`Engine`] is the extracted core of the old `SpmvServer` loop:
+//! a bounded queue, a batcher that waits up to `max_wait` for up to
+//! `max_batch` requests, and the k-based routing (a lone request runs the
+//! SpMV path, a fused batch the SpMM path). `max_batch` is an atomic the
+//! owner may retarget while serving — the lever the fleet's
+//! arrival-rate-adaptive batching pulls.
+
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::kernels::op::{ExecCtx, SpmvOp, Workload};
+use crate::sched::Policy;
+use crate::sparse::Csr;
+use crate::tuner::{Format, Ordering, TunedConfig};
+
+use super::server::ServerConfig;
+
+/// One execution path of a server: the format/schedule/threads triple a
+/// workload runs under, plus the workload that triple was tuned for (so
+/// stats and logs can say "this batch path reuses an SpMV decision").
+#[derive(Debug, Clone)]
+pub struct PathSpec {
+    /// Storage format the path converts to (once, at startup) and
+    /// executes in.
+    pub format: Format,
+    /// Row/column ordering the payload is stored under (an RCM path is
+    /// reordered once at startup and served through a
+    /// [`crate::tuner::PermutedOp`], so clients still submit and receive
+    /// natural-order vectors).
+    pub ordering: Ordering,
+    /// Scheduling policy for the path's kernel.
+    pub policy: Policy,
+    /// Worker threads for the path's kernel.
+    pub threads: usize,
+    /// Workload this path's configuration was tuned/chosen for.
+    pub workload: Workload,
+}
+
+impl PathSpec {
+    /// The path a tuned decision implies (carrying the decision's
+    /// workload, so reports show what the configuration was tuned for).
+    /// The (format, policy, threads) triple comes from
+    /// [`TunedConfig::candidate`] — the one place that mapping lives.
+    pub fn from_decision(decision: &TunedConfig) -> PathSpec {
+        let cand = decision.candidate();
+        PathSpec {
+            format: cand.format,
+            ordering: cand.ordering,
+            policy: cand.policy,
+            threads: cand.threads.max(1),
+            workload: decision.workload,
+        }
+    }
+}
+
+impl Default for PathSpec {
+    fn default() -> Self {
+        PathSpec {
+            format: Format::Csr,
+            ordering: Ordering::Natural,
+            policy: Policy::Dynamic(64),
+            threads: 1,
+            workload: Workload::Spmv,
+        }
+    }
+}
+
+/// Execution statistics of one path, snapshotted from its own counters —
+/// two paths never share a counter, so summing path stats can never
+/// double-count work (even when the paths share a payload `Arc`).
+#[derive(Debug, Clone, Default)]
+pub struct PathStats {
+    /// Batches this path executed.
+    pub batches: usize,
+    /// Requests those batches served.
+    pub served: usize,
+    /// Total flops executed on this path.
+    pub flops: f64,
+    /// Busy time in this path's kernel.
+    pub compute_s: f64,
+    /// Storage format the path actually executed in.
+    pub format: String,
+    /// Ordering the path's payload is stored under (`"rcm"` means the
+    /// matrix was reordered at startup and every call permutes through
+    /// the wrapper).
+    pub ordering: String,
+    /// Workload the executing configuration was tuned for (`"spmv"` on a
+    /// batch path means batches reused a single-vector decision).
+    pub workload: String,
+}
+
+impl PathStats {
+    /// Measured kernel throughput; 0 when the path never ran.
+    pub fn gflops(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.flops / self.compute_s.max(1e-12) / 1e9
+        }
+    }
+
+    /// Folds `other`'s counters into `self` (the fleet uses this to carry
+    /// an entry's totals across evict/re-materialize cycles). The
+    /// descriptive strings adopt `other`'s when it has any — the most
+    /// recently absorbed configuration describes the merged stats.
+    pub fn absorb(&mut self, other: &PathStats) {
+        self.batches += other.batches;
+        self.served += other.served;
+        self.flops += other.flops;
+        self.compute_s += other.compute_s;
+        if !other.format.is_empty() {
+            self.format = other.format.clone();
+            self.ordering = other.ordering.clone();
+            self.workload = other.workload.clone();
+        }
+    }
+}
+
+/// A path's counters since its last [`Path::swap`] (or
+/// [`Path::take_window`]): the measurement a drift detector compares
+/// against the serving decision's promised GFlop/s. Windowed rather than
+/// cumulative so a hot-swapped path is judged only on what the *new*
+/// payload served.
+#[derive(Debug, Clone, Default)]
+pub struct PathWindow {
+    /// Batches executed in the window.
+    pub batches: usize,
+    /// Requests served in the window.
+    pub served: usize,
+    /// Flops executed in the window.
+    pub flops: f64,
+    /// Busy kernel seconds in the window.
+    pub compute_s: f64,
+}
+
+impl PathWindow {
+    /// Measured throughput over the window; 0 when it is empty.
+    pub fn gflops(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.flops / self.compute_s.max(1e-12) / 1e9
+        }
+    }
+
+    /// Mean requests per batch in the window; 0 when it is empty.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served as f64 / self.batches as f64
+        }
+    }
+}
+
+/// What a path executes with; replaced atomically by [`Path::swap`].
+struct PathState {
+    spec: PathSpec,
+    op: Arc<dyn SpmvOp>,
+}
+
+#[derive(Default)]
+struct PathCounters {
+    batches: usize,
+    served: usize,
+    flops: f64,
+    compute_s: f64,
+    swaps: usize,
+    window: PathWindow,
+}
+
+/// One hot-swappable execution path: spec + prepared payload + private
+/// counters. Shared (`Arc<Path>`) between the serving thread that
+/// executes batches and the maintenance thread that swaps payloads and
+/// reads windows.
+pub struct Path {
+    nnz: usize,
+    pooled: bool,
+    state: RwLock<PathState>,
+    counters: Mutex<PathCounters>,
+}
+
+impl Path {
+    /// A path over a prepared payload. `nnz` is the matrix's nonzero
+    /// count (for flop accounting); `pooled` selects the persistent
+    /// [`crate::sched::WorkerPool`] backend over spawn-per-call.
+    pub fn new(spec: PathSpec, op: Arc<dyn SpmvOp>, nnz: usize, pooled: bool) -> Path {
+        Path {
+            nnz,
+            pooled,
+            state: RwLock::new(PathState { spec, op }),
+            counters: Mutex::new(PathCounters::default()),
+        }
+    }
+
+    /// The currently serving spec.
+    pub fn spec(&self) -> PathSpec {
+        self.state.read().unwrap().spec.clone()
+    }
+
+    /// The currently serving payload (shared, not copied) — lets an
+    /// engine detect that two of its paths serve one payload.
+    pub fn payload(&self) -> Arc<dyn SpmvOp> {
+        self.state.read().unwrap().op.clone()
+    }
+
+    /// Bytes of the currently serving payload.
+    pub fn storage_bytes(&self) -> usize {
+        self.state.read().unwrap().op.storage_bytes()
+    }
+
+    /// Executes one batch on this path: SpMM at width `k` when `k > 1`,
+    /// SpMV otherwise, under the path's schedule. Updates the cumulative
+    /// and windowed counters. `x`/`y` are row-major `ncols·k` / `nrows·k`.
+    pub fn execute(&self, x: &[f64], y: &mut [f64], k: usize) {
+        let state = self.state.read().unwrap();
+        let ctx = if self.pooled {
+            ExecCtx::pooled(state.spec.threads, state.spec.policy)
+        } else {
+            ExecCtx::spawning(state.spec.threads, state.spec.policy)
+        };
+        let t0 = Instant::now();
+        if k > 1 {
+            state.op.spmm_into(x, y, k, &ctx);
+        } else {
+            state.op.spmv_into(x, y, &ctx);
+        }
+        let compute = t0.elapsed().as_secs_f64();
+        drop(state);
+        let flops = 2.0 * self.nnz as f64 * k as f64;
+        let mut c = self.counters.lock().unwrap();
+        c.batches += 1;
+        c.served += k;
+        c.flops += flops;
+        c.compute_s += compute;
+        c.window.batches += 1;
+        c.window.served += k;
+        c.window.flops += flops;
+        c.window.compute_s += compute;
+    }
+
+    /// Replaces the serving spec and payload without dropping in-flight
+    /// requests: the write lock waits for the batch currently executing,
+    /// and the next batch runs the replacement. Resets the drift window
+    /// (the old payload's measurements must not be held against the new
+    /// one); cumulative counters keep accumulating across the swap.
+    pub fn swap(&self, spec: PathSpec, op: Arc<dyn SpmvOp>) {
+        let mut state = self.state.write().unwrap();
+        state.spec = spec;
+        state.op = op;
+        drop(state);
+        let mut c = self.counters.lock().unwrap();
+        c.swaps += 1;
+        c.window = PathWindow::default();
+    }
+
+    /// How many times [`Path::swap`] replaced the payload.
+    pub fn swaps(&self) -> usize {
+        self.counters.lock().unwrap().swaps
+    }
+
+    /// Snapshot of the cumulative counters, described by the current spec.
+    pub fn stats(&self) -> PathStats {
+        let (format, ordering, workload) = {
+            let s = self.state.read().unwrap();
+            (
+                s.spec.format.to_string(),
+                s.spec.ordering.to_string(),
+                s.spec.workload.to_string(),
+            )
+        };
+        let c = self.counters.lock().unwrap();
+        PathStats {
+            batches: c.batches,
+            served: c.served,
+            flops: c.flops,
+            compute_s: c.compute_s,
+            format,
+            ordering,
+            workload,
+        }
+    }
+
+    /// Snapshot of the drift window without resetting it — lets a
+    /// maintenance pass check whether the window holds enough evidence
+    /// to judge before consuming it, so thin windows keep accumulating
+    /// across passes instead of being discarded unjudged.
+    pub fn window(&self) -> PathWindow {
+        self.counters.lock().unwrap().window.clone()
+    }
+
+    /// Takes (snapshot + reset) the drift window, so each judgment
+    /// covers only the traffic since the previous one.
+    pub fn take_window(&self) -> PathWindow {
+        let mut c = self.counters.lock().unwrap();
+        std::mem::take(&mut c.window)
+    }
+}
+
+/// Message to the engine loop: a request or an orderly stop.
+enum Msg {
+    Req(Request),
+    Stop,
+}
+
+/// One in-flight request: the input vector and a completion channel.
+struct Request {
+    x: Vec<f64>,
+    enqueued: Instant,
+    reply: mpsc::Sender<Response>,
+}
+
+/// A served response.
+#[derive(Debug)]
+pub struct Response {
+    /// The result vector `Ax`.
+    pub y: Vec<f64>,
+    /// Queue + batch + compute latency for this request.
+    pub latency: Duration,
+    /// Number of requests in the batch that served this one.
+    pub batch_size: usize,
+}
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct SpmvClient {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl SpmvClient {
+    /// Submits a request; returns a receiver for the response.
+    pub fn submit(&self, x: Vec<f64>) -> anyhow::Result<mpsc::Receiver<Response>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Req(Request { x, enqueued: Instant::now(), reply: reply_tx }))
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(reply_rx)
+    }
+
+    /// Submits and waits.
+    pub fn call(&self, x: Vec<f64>) -> anyhow::Result<Response> {
+        Ok(self.submit(x)?.recv()?)
+    }
+}
+
+/// The serving core: a queue, a batcher, and one path per workload.
+/// [`super::server::SpmvServer`] wraps exactly one engine; the fleet
+/// instantiates one per warm registered matrix.
+pub struct Engine {
+    client: SpmvClient,
+    worker: Option<std::thread::JoinHandle<()>>,
+    spmv: Arc<Path>,
+    spmm: Arc<Path>,
+    max_batch: Arc<AtomicUsize>,
+}
+
+impl Engine {
+    /// Prepares both paths from `config` and spawns the serving loop.
+    /// When the batch spec names the same (format, ordering) as the SpMV
+    /// spec — or is absent — both paths share one payload `Arc` instead
+    /// of converting twice (their counters stay distinct regardless).
+    pub fn start(a: Arc<Csr>, config: ServerConfig) -> Engine {
+        use crate::tuner::exec::prepare_owned_with;
+        let spmv_spec = config.spmv.clone();
+        let batch_spec = config.spmm.clone().unwrap_or_else(|| config.spmv.clone());
+        let spmv_op: Arc<dyn SpmvOp> =
+            Arc::from(prepare_owned_with(&a, spmv_spec.format, spmv_spec.ordering));
+        let spmm_op: Arc<dyn SpmvOp> = if batch_spec.format == spmv_spec.format
+            && batch_spec.ordering == spmv_spec.ordering
+        {
+            spmv_op.clone()
+        } else {
+            Arc::from(prepare_owned_with(&a, batch_spec.format, batch_spec.ordering))
+        };
+        let nnz = a.nnz();
+        let spmv = Arc::new(Path::new(spmv_spec, spmv_op, nnz, config.pooled));
+        let spmm = Arc::new(Path::new(batch_spec, spmm_op, nnz, config.pooled));
+        let max_batch = Arc::new(AtomicUsize::new(config.max_batch.max(1)));
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let worker = {
+            let (a, spmv, spmm) = (a.clone(), spmv.clone(), spmm.clone());
+            let (max_batch, max_wait) = (max_batch.clone(), config.max_wait);
+            std::thread::spawn(move || engine_loop(&a, &spmv, &spmm, &max_batch, max_wait, &rx))
+        };
+        Engine { client: SpmvClient { tx }, worker: Some(worker), spmv, spmm, max_batch }
+    }
+
+    /// A client handle (cloneable across threads).
+    pub fn client(&self) -> SpmvClient {
+        self.client.clone()
+    }
+
+    /// The single-request path.
+    pub fn spmv_path(&self) -> &Arc<Path> {
+        &self.spmv
+    }
+
+    /// The fused-batch path.
+    pub fn spmm_path(&self) -> &Arc<Path> {
+        &self.spmm
+    }
+
+    /// The current batch-width cap.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch.load(AtomicOrdering::Relaxed)
+    }
+
+    /// Retargets the batch-width cap while serving; the loop reads it at
+    /// every batch start, so the change applies to the next batch.
+    pub fn set_max_batch(&self, k: usize) {
+        self.max_batch.store(k.max(1), AtomicOrdering::Relaxed);
+    }
+
+    /// Bytes of the prepared payloads, counting a payload the two paths
+    /// share exactly once.
+    pub fn storage_bytes(&self) -> usize {
+        let a = self.spmv.payload();
+        let b = self.spmm.payload();
+        // Thin-pointer identity: one shared payload must not be billed
+        // twice against a memory budget.
+        if Arc::as_ptr(&a).cast::<u8>() == Arc::as_ptr(&b).cast::<u8>() {
+            a.storage_bytes()
+        } else {
+            a.storage_bytes() + b.storage_bytes()
+        }
+    }
+
+    /// Stops the loop (after the queue drains) and returns both paths'
+    /// final stats. Outstanding client clones become inert.
+    pub fn shutdown(mut self) -> (PathStats, PathStats) {
+        let _ = self.client.tx.send(Msg::Stop);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        (self.spmv.stats(), self.spmm.stats())
+    }
+}
+
+/// The batching loop: block for a first request, wait up to `max_wait`
+/// for up to `max_batch` more, pack them into a row-major panel, and
+/// route the batch by its width — a lone request to the SpMV path, a
+/// fused batch to the SpMM path.
+fn engine_loop(
+    a: &Csr,
+    spmv: &Path,
+    spmm: &Path,
+    max_batch: &AtomicUsize,
+    max_wait: Duration,
+    rx: &mpsc::Receiver<Msg>,
+) {
+    loop {
+        let first = match rx.recv() {
+            Ok(Msg::Req(r)) => r,
+            Ok(Msg::Stop) | Err(_) => return,
+        };
+        let deadline = Instant::now() + max_wait;
+        // Re-read per batch: the owner may retune the width while serving.
+        let cap = max_batch.load(AtomicOrdering::Relaxed).max(1);
+        let mut batch = vec![first];
+        let mut stopping = false;
+        while batch.len() < cap {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Req(r)) => batch.push(r),
+                Ok(Msg::Stop) => {
+                    stopping = true;
+                    break;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Pack the batch into a row-major X (ncols × k).
+        let k = batch.len();
+        let mut x = vec![0.0f64; a.ncols * k];
+        for (u, req) in batch.iter().enumerate() {
+            assert_eq!(req.x.len(), a.ncols, "request length mismatch");
+            for i in 0..a.ncols {
+                x[i * k + u] = req.x[i];
+            }
+        }
+        let mut y = vec![0.0f64; a.nrows * k];
+        let path = if k > 1 { spmm } else { spmv };
+        path.execute(&x, &mut y, k);
+
+        for (u, req) in batch.into_iter().enumerate() {
+            let yi: Vec<f64> = (0..a.nrows).map(|i| y[i * k + u]).collect();
+            let _ = req.reply.send(Response {
+                y: yi,
+                latency: req.enqueued.elapsed(),
+                batch_size: k,
+            });
+        }
+        if stopping {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::stencil::stencil_2d;
+    use crate::sparse::gen::{random_vector, randomize_values};
+
+    fn matrix() -> Arc<Csr> {
+        let mut a = stencil_2d(24, 24);
+        randomize_values(&mut a, 31);
+        Arc::new(a)
+    }
+
+    fn path_over(a: &Arc<Csr>, format: Format) -> Path {
+        use crate::tuner::exec::prepare_owned_with;
+        let spec = PathSpec { format, ..PathSpec::default() };
+        let op: Arc<dyn SpmvOp> = Arc::from(prepare_owned_with(a, format, Ordering::Natural));
+        Path::new(spec, op, a.nnz(), true)
+    }
+
+    #[test]
+    fn execute_counts_in_both_cumulative_and_window() {
+        let a = matrix();
+        let path = path_over(&a, Format::Csr);
+        let x = random_vector(a.ncols, 3);
+        let mut y = vec![0.0; a.nrows];
+        path.execute(&x, &mut y, 1);
+        for (u, v) in y.iter().zip(Csr::spmv(&a, &x)) {
+            assert!((u - v).abs() < 1e-10);
+        }
+        let stats = path.stats();
+        assert_eq!((stats.batches, stats.served), (1, 1));
+        assert!(stats.flops > 0.0);
+        let window = path.take_window();
+        assert_eq!(window.batches, 1);
+        assert!(window.gflops() >= 0.0);
+        // Taking the window resets it; cumulative counters survive.
+        assert_eq!(path.take_window().batches, 0);
+        assert_eq!(path.stats().batches, 1);
+    }
+
+    #[test]
+    fn swap_replaces_payload_and_resets_the_window_only() {
+        let a = matrix();
+        let path = path_over(&a, Format::Csr);
+        let x = random_vector(a.ncols, 5);
+        let mut y = vec![0.0; a.nrows];
+        path.execute(&x, &mut y, 1);
+        assert_eq!(path.swaps(), 0);
+
+        use crate::tuner::exec::prepare_owned_with;
+        let op: Arc<dyn SpmvOp> = Arc::from(prepare_owned_with(&a, Format::Ell, Ordering::Natural));
+        path.swap(PathSpec { format: Format::Ell, ..PathSpec::default() }, op);
+        assert_eq!(path.swaps(), 1);
+        assert_eq!(path.take_window().batches, 0, "swap must reset the drift window");
+        assert_eq!(path.stats().batches, 1, "cumulative counters survive the swap");
+        assert_eq!(path.stats().format, "ell", "stats describe the serving spec");
+
+        // The swapped payload still computes the right answer.
+        let mut y2 = vec![0.0; a.nrows];
+        path.execute(&x, &mut y2, 1);
+        for (u, v) in y2.iter().zip(&y) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn engine_shares_payload_and_retargets_width() {
+        let a = matrix();
+        let engine = Engine::start(a.clone(), ServerConfig::default());
+        assert_eq!(engine.max_batch(), 16);
+        // No batch spec configured: one payload, billed once.
+        assert_eq!(engine.storage_bytes(), a.storage_bytes());
+        engine.set_max_batch(4);
+        assert_eq!(engine.max_batch(), 4);
+        let client = engine.client();
+        let x = random_vector(a.ncols, 9);
+        let want = Csr::spmv(&a, &x);
+        let resp = client.call(x).unwrap();
+        for (u, v) in resp.y.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-10);
+        }
+        let (spmv, spmm) = engine.shutdown();
+        assert_eq!(spmv.served, 1);
+        assert_eq!(spmm.served, 0);
+    }
+}

@@ -4,83 +4,35 @@
 //! The paper motivates SpMM with "throughput oriented server-side code …
 //! such as product/friend recommendation" (§1, §5): individual requests
 //! are single-vector multiplies, but batching k of them into one SpMM
-//! multiplies the flop:byte ratio. This module is that server: a bounded
-//! queue, a batcher that waits up to `max_wait` for up to `max_batch`
-//! requests, and a worker that routes each drained batch by its
-//! [`Workload`] — a lone request runs on the SpMV-tuned op, a fused batch
-//! on the SpMM-tuned op ([`ServerConfig::spmm`]), each with its own
-//! format, schedule and thread count. Per-workload execution statistics
-//! come back in [`ServerStats::spmv`]/[`ServerStats::spmm`], whose
-//! measured GFlop/s feed the tuning cache's drift invalidation
+//! multiplies the flop:byte ratio. This module is the single-matrix
+//! server: [`SpmvServer`] is a thin facade over the reusable
+//! [`Engine`](super::path::Engine) — a bounded queue, a batcher that
+//! waits up to `max_wait` for up to `max_batch` requests, and a worker
+//! that routes each drained batch by its [`Workload`] — a lone request
+//! runs the SpMV-tuned [`Path`](super::path::Path), a fused batch the
+//! SpMM-tuned one ([`ServerConfig::spmm`]), each with its own format,
+//! schedule and thread count. The multi-matrix [`crate::fleet`]
+//! instantiates the same engine per registered matrix.
+//!
+//! Per-workload execution statistics come back in
+//! [`ServerStats::spmv`]/[`ServerStats::spmm`]; the aggregate counters
+//! are *derived* from those per-path counters in exactly one place
+//! ([`ServerStats::from_paths`]), so per-path and aggregate GFlop/s can
+//! never double-count a batch — even when both paths share one payload.
+//! The measured GFlop/s feed the tuning cache's drift invalidation
 //! ([`crate::tuner::TuningCache::invalidate_if_drifted`]). Kernels run on
 //! the persistent [`crate::sched::WorkerPool`] unless
 //! [`ServerConfig::pooled`] opts into the spawn-per-call ablation
 //! baseline.
 
-use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::Duration;
 
-/// Message to the serve loop: a request or an orderly stop.
-enum Msg {
-    Req(Request),
-    Stop,
-}
-use std::time::{Duration, Instant};
-
-use crate::kernels::op::{ExecCtx, Workload};
-use crate::sched::Policy;
+use crate::kernels::op::Workload;
 use crate::sparse::Csr;
-use crate::tuner::{exec::prepare_owned_with, Format, Ordering, TunedConfig};
+use crate::tuner::TunedConfig;
 
-/// One execution path of the server: the format/schedule/threads triple a
-/// workload runs under, plus the workload that triple was tuned for (so
-/// stats and logs can say "this batch path reuses an SpMV decision").
-#[derive(Debug, Clone)]
-pub struct PathSpec {
-    /// Storage format the path converts to (once, at startup) and
-    /// executes in.
-    pub format: Format,
-    /// Row/column ordering the payload is stored under (an RCM path is
-    /// reordered once at startup and served through a
-    /// [`crate::tuner::PermutedOp`], so clients still submit and receive
-    /// natural-order vectors).
-    pub ordering: Ordering,
-    /// Scheduling policy for the path's kernel.
-    pub policy: Policy,
-    /// Worker threads for the path's kernel.
-    pub threads: usize,
-    /// Workload this path's configuration was tuned/chosen for.
-    pub workload: Workload,
-}
-
-impl PathSpec {
-    /// The path a tuned decision implies (carrying the decision's
-    /// workload, so reports show what the configuration was tuned for).
-    /// The (format, policy, threads) triple comes from
-    /// [`TunedConfig::candidate`] — the one place that mapping lives.
-    pub fn from_decision(decision: &TunedConfig) -> PathSpec {
-        let cand = decision.candidate();
-        PathSpec {
-            format: cand.format,
-            ordering: cand.ordering,
-            policy: cand.policy,
-            threads: cand.threads.max(1),
-            workload: decision.workload,
-        }
-    }
-}
-
-impl Default for PathSpec {
-    fn default() -> Self {
-        PathSpec {
-            format: Format::Csr,
-            ordering: Ordering::Natural,
-            policy: Policy::Dynamic(64),
-            threads: 1,
-            workload: Workload::Spmv,
-        }
-    }
-}
+pub use super::path::{Engine, Path, PathSpec, PathStats, PathWindow, Response, SpmvClient};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -138,86 +90,15 @@ impl ServerConfig {
     }
 }
 
-/// One in-flight request: the input vector and a completion channel.
-struct Request {
-    x: Vec<f64>,
-    enqueued: Instant,
-    reply: mpsc::Sender<Response>,
-}
-
-/// A served response.
-#[derive(Debug)]
-pub struct Response {
-    /// The result vector `Ax`.
-    pub y: Vec<f64>,
-    /// Queue + batch + compute latency for this request.
-    pub latency: Duration,
-    /// Number of requests in the batch that served this one.
-    pub batch_size: usize,
-}
-
-/// Handle for submitting requests.
-#[derive(Clone)]
-pub struct SpmvClient {
-    tx: mpsc::Sender<Msg>,
-}
-
-impl SpmvClient {
-    /// Submits a request; returns a receiver for the response.
-    pub fn submit(&self, x: Vec<f64>) -> anyhow::Result<mpsc::Receiver<Response>> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Req(Request { x, enqueued: Instant::now(), reply: reply_tx }))
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        Ok(reply_rx)
-    }
-
-    /// Submits and waits.
-    pub fn call(&self, x: Vec<f64>) -> anyhow::Result<Response> {
-        Ok(self.submit(x)?.recv()?)
-    }
-}
-
-/// The running server; dropping joins the worker.
+/// The running server; a facade over one [`Engine`].
 pub struct SpmvServer {
-    client: SpmvClient,
-    worker: Option<std::thread::JoinHandle<ServerStats>>,
+    engine: Option<Engine>,
 }
 
-/// Execution statistics of one workload path.
-#[derive(Debug, Clone, Default)]
-pub struct PathStats {
-    /// Batches this path executed.
-    pub batches: usize,
-    /// Requests those batches served.
-    pub served: usize,
-    /// Total flops executed on this path.
-    pub flops: f64,
-    /// Busy time in this path's kernel.
-    pub compute_s: f64,
-    /// Storage format the path actually executed in.
-    pub format: String,
-    /// Ordering the path's payload is stored under (`"rcm"` means the
-    /// matrix was reordered at startup and every call permutes through
-    /// the wrapper).
-    pub ordering: String,
-    /// Workload the executing configuration was tuned for (`"spmv"` on a
-    /// batch path means batches reused a single-vector decision).
-    pub workload: String,
-}
-
-impl PathStats {
-    /// Measured kernel throughput; 0 when the path never ran.
-    pub fn gflops(&self) -> f64 {
-        if self.batches == 0 {
-            0.0
-        } else {
-            self.flops / self.compute_s.max(1e-12) / 1e9
-        }
-    }
-}
-
-/// Aggregate statistics reported at shutdown.
+/// Aggregate statistics reported at shutdown. The aggregate counters are
+/// the sums of the two paths' private counters (see
+/// [`ServerStats::from_paths`]) — never incremented independently, so
+/// they cannot drift from or double-count the per-path numbers.
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
     /// Requests served (all paths).
@@ -229,13 +110,29 @@ pub struct ServerStats {
     /// Busy time in the batch kernels.
     pub compute_s: f64,
     /// Single-request (k = 1) executions; `spmv.format` is the executed
-    /// format's [`Format`] display string (e.g. `"csr"`, `"sell8-256"`).
+    /// format's [`crate::tuner::Format`] display string (e.g. `"csr"`,
+    /// `"sell8-256"`).
     pub spmv: PathStats,
     /// Fused-batch (k > 1) executions.
     pub spmm: PathStats,
 }
 
 impl ServerStats {
+    /// Builds the aggregate from the two paths' counters — the only
+    /// place the aggregate fields are written, which is what the
+    /// "per-path and aggregate from distinct counters" invariant hangs
+    /// on: `flops == spmv.flops + spmm.flops` by construction.
+    pub fn from_paths(spmv: PathStats, spmm: PathStats) -> ServerStats {
+        ServerStats {
+            served: spmv.served + spmm.served,
+            batches: spmv.batches + spmm.batches,
+            flops: spmv.flops + spmm.flops,
+            compute_s: spmv.compute_s + spmm.compute_s,
+            spmv,
+            spmm,
+        }
+    }
+
     /// Mean requests per batch.
     pub fn mean_batch(&self) -> f64 {
         if self.batches == 0 {
@@ -244,14 +141,21 @@ impl ServerStats {
             self.served as f64 / self.batches as f64
         }
     }
+
+    /// Aggregate kernel throughput over both paths; 0 when nothing ran.
+    pub fn gflops(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.flops / self.compute_s.max(1e-12) / 1e9
+        }
+    }
 }
 
 impl SpmvServer {
     /// Starts a server over matrix `a`.
     pub fn start(a: Arc<Csr>, config: ServerConfig) -> SpmvServer {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let worker = std::thread::spawn(move || serve_loop(a, config, rx));
-        SpmvServer { client: SpmvClient { tx }, worker: Some(worker) }
+        SpmvServer { engine: Some(Engine::start(a, config)) }
     }
 
     /// Tunes the matrix for *both* workloads — SpMV, and SpMM at the
@@ -274,130 +178,18 @@ impl SpmvServer {
 
     /// A client handle (cloneable across threads).
     pub fn client(&self) -> SpmvClient {
-        self.client.clone()
+        self.engine.as_ref().expect("server running").client()
     }
 
     /// Stops the server (after the queue drains) and returns stats.
     /// Outstanding client clones become inert once the loop exits.
     pub fn shutdown(mut self) -> ServerStats {
-        let _ = self.client.tx.send(Msg::Stop);
-        self.worker.take().map(|w| w.join().unwrap_or_default()).unwrap_or_default()
-    }
-}
-
-fn serve_loop(a: Arc<Csr>, config: ServerConfig, rx: mpsc::Receiver<Msg>) -> ServerStats {
-    // Imported at function scope on purpose: with the trait visible
-    // file-wide, the blanket `impl SpmvOp for Arc<T>` would shadow
-    // `Csr::spmv` for the tests' `Arc<Csr>` receivers.
-    use crate::kernels::op::SpmvOp;
-    // One-time conversion per path; every batch then runs through a
-    // format-erased op (CSR shares the Arc, no copy). When the batch path
-    // names the same format as the SpMV path — or is absent — the payload
-    // is shared instead of converted twice.
-    let spmv_op = prepare_owned_with(&a, config.spmv.format, config.spmv.ordering);
-    let batch_spec = config.spmm.clone().unwrap_or_else(|| config.spmv.clone());
-    let batch_op: Option<Box<dyn SpmvOp>> = if batch_spec.format == config.spmv.format
-        && batch_spec.ordering == config.spmv.ordering
-    {
-        None
-    } else {
-        Some(prepare_owned_with(&a, batch_spec.format, batch_spec.ordering))
-    };
-    let ctx_for = |spec: &PathSpec| {
-        if config.pooled {
-            ExecCtx::pooled(spec.threads, spec.policy)
-        } else {
-            ExecCtx::spawning(spec.threads, spec.policy)
-        }
-    };
-    let spmv_ctx = ctx_for(&config.spmv);
-    let batch_ctx = ctx_for(&batch_spec);
-    let mut stats = ServerStats {
-        spmv: PathStats {
-            format: config.spmv.format.to_string(),
-            ordering: config.spmv.ordering.to_string(),
-            workload: config.spmv.workload.to_string(),
-            ..PathStats::default()
-        },
-        spmm: PathStats {
-            format: batch_spec.format.to_string(),
-            ordering: batch_spec.ordering.to_string(),
-            workload: batch_spec.workload.to_string(),
-            ..PathStats::default()
-        },
-        ..ServerStats::default()
-    };
-    let max_batch = config.max_batch.max(1);
-    let mut stopping = false;
-    loop {
-        // Block for the first request of the batch.
-        let first = match rx.recv() {
-            Ok(Msg::Req(r)) => r,
-            Ok(Msg::Stop) | Err(_) => return stats,
-        };
-        let deadline = Instant::now() + config.max_wait;
-        let mut batch = vec![first];
-        while batch.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
+        match self.engine.take() {
+            Some(engine) => {
+                let (spmv, spmm) = engine.shutdown();
+                ServerStats::from_paths(spmv, spmm)
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Msg::Req(r)) => batch.push(r),
-                Ok(Msg::Stop) => {
-                    stopping = true;
-                    break;
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-        }
-
-        // Pack the batch into a row-major X (ncols × k).
-        let k = batch.len();
-        let mut x = vec![0.0f64; a.ncols * k];
-        for (u, req) in batch.iter().enumerate() {
-            assert_eq!(req.x.len(), a.ncols, "request length mismatch");
-            for i in 0..a.ncols {
-                x[i * k + u] = req.x[i];
-            }
-        }
-        let mut y = vec![0.0f64; a.nrows * k];
-        // Route by the drained batch's workload: a lone request runs the
-        // SpMV-tuned path, a fused batch the SpMM-tuned one.
-        let (op, ctx): (&dyn SpmvOp, &ExecCtx<'_>) = if k > 1 {
-            (batch_op.as_deref().unwrap_or(&spmv_op), &batch_ctx)
-        } else {
-            (&spmv_op, &spmv_ctx)
-        };
-        let t0 = Instant::now();
-        if k > 1 {
-            op.spmm_into(&x, &mut y, k, ctx);
-        } else {
-            op.spmv_into(&x, &mut y, ctx);
-        }
-        let compute = t0.elapsed().as_secs_f64();
-        let flops = 2.0 * a.nnz() as f64 * k as f64;
-        let path = if k > 1 { &mut stats.spmm } else { &mut stats.spmv };
-        path.compute_s += compute;
-        path.flops += flops;
-        path.batches += 1;
-        path.served += k;
-        stats.compute_s += compute;
-        stats.flops += flops;
-        stats.batches += 1;
-
-        for (u, req) in batch.into_iter().enumerate() {
-            let yi: Vec<f64> = (0..a.nrows).map(|i| y[i * k + u]).collect();
-            let _ = req.reply.send(Response {
-                y: yi,
-                latency: req.enqueued.elapsed(),
-                batch_size: k,
-            });
-            stats.served += 1;
-        }
-        if stopping {
-            return stats;
+            None => ServerStats::default(),
         }
     }
 }
@@ -415,8 +207,10 @@ pub fn percentile(sorted_latencies: &[Duration], p: f64) -> Duration {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sched::Policy;
     use crate::sparse::gen::stencil::stencil_2d;
     use crate::sparse::gen::{random_vector, randomize_values};
+    use crate::tuner::{Format, Ordering};
 
     fn matrix() -> Arc<Csr> {
         let mut a = stencil_2d(30, 30);
@@ -518,6 +312,48 @@ mod tests {
     }
 
     #[test]
+    fn aggregate_stats_are_the_sum_of_distinct_path_counters() {
+        // The double-counting regression this pins: with both paths
+        // serving one shared payload (spmm: None), the aggregate must
+        // still be exactly the sum of the two paths' private counters —
+        // not an independently incremented number that could count a
+        // shared-payload batch under both paths.
+        let a = matrix();
+        let server = SpmvServer::start(
+            a.clone(),
+            ServerConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(40),
+                ..ServerConfig::default()
+            },
+        );
+        let client = server.client();
+        // Concurrent burst (lands fused on the SpMM path) …
+        let rxs: Vec<_> =
+            (0..8).map(|s| client.submit(random_vector(a.ncols, 700 + s)).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        // … then sequential lone requests (SpMV path).
+        for s in 0..3u64 {
+            client.call(random_vector(a.ncols, 800 + s)).unwrap();
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 11);
+        assert_eq!(stats.served, stats.spmv.served + stats.spmm.served);
+        assert_eq!(stats.batches, stats.spmv.batches + stats.spmm.batches);
+        assert_eq!(stats.flops, stats.spmv.flops + stats.spmm.flops);
+        assert_eq!(stats.compute_s, stats.spmv.compute_s + stats.spmm.compute_s);
+        assert!(stats.spmv.batches >= 3, "sequential calls serve alone");
+        // Aggregate throughput is derived from those same counters.
+        assert_eq!(stats.gflops(), stats.flops / stats.compute_s.max(1e-12) / 1e9);
+        // Total flops is exactly 2·nnz per served request (k-wide batches
+        // count k times the single-request flops — no more, no less).
+        let per_request = 2.0 * a.nnz() as f64;
+        assert_eq!(stats.flops, per_request * stats.served as f64);
+    }
+
+    #[test]
     fn non_csr_decision_is_executed_in_that_format() {
         // The regression this field exists for: a tuned non-CSR format
         // used to be silently dropped and served as CSR.
@@ -532,6 +368,7 @@ mod tests {
                 threads: 2,
                 gflops: 0.0,
                 source: "trial".to_string(),
+                tuned_at: 0,
             };
             let server = SpmvServer::start(a.clone(), ServerConfig::tuned(&decision));
             let client = server.client();
@@ -561,6 +398,7 @@ mod tests {
             threads: 1,
             gflops: 0.0,
             source: "trial".to_string(),
+            tuned_at: 0,
         };
         let spmm = TunedConfig {
             workload: Workload::Spmm { k: 8 },
@@ -570,6 +408,7 @@ mod tests {
             threads: 2,
             gflops: 0.0,
             source: "trial".to_string(),
+            tuned_at: 0,
         };
         let config = ServerConfig {
             max_wait: Duration::from_millis(50),

@@ -1,0 +1,229 @@
+//! Arrival-rate-adaptive SpMM batch width.
+//!
+//! The paper's §5 argument for SpMM is that fusing k requests into one
+//! multi-vector multiply divides the matrix traffic by k — but only when
+//! k requests actually arrive inside the batching window. A width tuned
+//! for peak load makes a lightly-loaded server hold every lone request
+//! for the full `max_wait` (the batcher keeps waiting for peers that
+//! never come), and a width tuned for idle wastes the fusion opportunity
+//! under load. So the width follows the offered load: an
+//! [`ArrivalTracker`] keeps an exponential moving average of each entry's
+//! inter-arrival gap, [`expected_arrivals`] converts the implied rate
+//! into "requests expected inside one batching window", and
+//! [`pick_width`] maps that onto a small ladder of candidate widths with
+//! hysteresis so the width steps, not flaps. The fleet re-tunes the SpMM
+//! decision at each newly chosen rung through
+//! [`crate::tuner::Tuner::tune_workload`] — after the first visit to a
+//! rung that is a cache hit, so walking the ladder is cheap.
+
+use std::time::{Duration, Instant};
+
+/// Knobs of the adaptive width.
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Candidate widths, ascending (entries are treated as ≥ 1). The
+    /// fleet tunes an SpMM decision per rung it actually visits.
+    pub ladder: Vec<usize>,
+    /// Hysteresis factor (≥ 1) for downshifts: the width only drops when
+    /// even an estimate inflated by this factor no longer justifies the
+    /// current rung, so load hovering at a rung boundary cannot flap the
+    /// width (upshifts apply immediately — under rising load the cost of
+    /// hesitating is latency for every queued request).
+    pub hysteresis: f64,
+    /// Inter-arrival samples required before the width may move at all —
+    /// an EMA over fewer gaps is mostly noise.
+    pub min_samples: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { ladder: vec![1, 4, 8, 16], hysteresis: 1.25, min_samples: 8 }
+    }
+}
+
+/// Exponential moving average of one entry's inter-arrival gap.
+///
+/// `record` stamps wall-clock arrivals on the serving path (one `Instant`
+/// read and a few multiplies); `record_gap` is the clock-free form the
+/// unit tests drive. The reported rate is capped by the time since the
+/// last arrival, so an entry that goes quiet decays toward "slow" instead
+/// of reporting its last busy rate forever.
+#[derive(Debug, Clone, Default)]
+pub struct ArrivalTracker {
+    last: Option<Instant>,
+    ema_gap_s: Option<f64>,
+    samples: usize,
+}
+
+impl ArrivalTracker {
+    /// EMA weight of the newest gap. High enough to follow a load shift
+    /// within ~a dozen arrivals, low enough to absorb one stray gap.
+    const ALPHA: f64 = 0.2;
+
+    /// Records an arrival now.
+    pub fn record(&mut self) {
+        let now = Instant::now();
+        if let Some(last) = self.last {
+            self.record_gap(now.saturating_duration_since(last).as_secs_f64());
+        }
+        self.last = Some(now);
+    }
+
+    /// Folds one observed inter-arrival gap (seconds) into the average.
+    pub fn record_gap(&mut self, gap_s: f64) {
+        let gap = gap_s.max(0.0);
+        self.ema_gap_s = Some(match self.ema_gap_s {
+            Some(ema) => Self::ALPHA * gap + (1.0 - Self::ALPHA) * ema,
+            None => gap,
+        });
+        self.samples += 1;
+    }
+
+    /// Gaps folded in so far.
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+
+    /// Estimated arrival rate in requests/second; `None` before the first
+    /// gap. The estimate is bounded above by `1 / time-since-last-arrival`
+    /// so idleness pulls it down even with no new arrivals to average in.
+    pub fn rate_hz(&self) -> Option<f64> {
+        let ema = self.ema_gap_s?;
+        let idle = match self.last {
+            Some(last) => last.elapsed().as_secs_f64(),
+            None => 0.0,
+        };
+        Some(1.0 / ema.max(idle).max(1e-9))
+    }
+}
+
+/// Requests expected to arrive inside one batching window at `rate_hz` —
+/// the quantity the ladder is indexed by: a batch can only fuse what the
+/// window catches.
+pub fn expected_arrivals(rate_hz: f64, window: Duration) -> f64 {
+    rate_hz * window.as_secs_f64()
+}
+
+/// Picks the serving width: the widest ladder rung the expected
+/// per-window arrivals fill, with downshift hysteresis against flapping.
+/// Returns `current` when no move is justified.
+pub fn pick_width(config: &BatchConfig, expected: f64, current: usize) -> usize {
+    if config.ladder.is_empty() {
+        // No rungs to move between: adaptation is effectively disabled.
+        return current;
+    }
+    let rung = |t: f64| -> usize {
+        let mut best = config.ladder.iter().copied().min().unwrap_or(1).max(1);
+        for r in config.ladder.iter().map(|&r| r.max(1)) {
+            if r as f64 <= t && r > best {
+                best = r;
+            }
+        }
+        best
+    };
+    let raw = rung(expected);
+    if raw > current {
+        // Rising load: move immediately — every deferred upshift is a
+        // window's worth of requests served at the narrow width.
+        return raw;
+    }
+    // Falling load: only drop once even the optimistic (inflated)
+    // estimate no longer justifies the current rung.
+    let optimistic = rung(expected * config.hysteresis.max(1.0));
+    if optimistic < current {
+        optimistic
+    } else {
+        current
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracker_ema_follows_the_gap_stream() {
+        let mut t = ArrivalTracker::default();
+        assert_eq!(t.rate_hz(), None, "no gaps, no estimate");
+        t.record_gap(0.01);
+        assert_eq!(t.samples(), 1);
+        let r = t.rate_hz().unwrap();
+        assert!((r - 100.0).abs() < 1.0, "single 10 ms gap ≈ 100 Hz, got {r}");
+        // A burst of 1 ms gaps pulls the average toward 1000 Hz…
+        for _ in 0..50 {
+            t.record_gap(0.001);
+        }
+        let fast = t.rate_hz().unwrap();
+        assert!(fast > 500.0, "burst must raise the estimate, got {fast}");
+        // …and a slow stream pulls it back down.
+        for _ in 0..50 {
+            t.record_gap(0.1);
+        }
+        let slow = t.rate_hz().unwrap();
+        assert!(slow < 20.0, "slow stream must lower the estimate, got {slow}");
+    }
+
+    #[test]
+    fn tracker_wall_clock_form_counts_samples() {
+        let mut t = ArrivalTracker::default();
+        t.record();
+        assert_eq!(t.samples(), 0, "first arrival has no gap yet");
+        t.record();
+        t.record();
+        assert_eq!(t.samples(), 2);
+        assert!(t.rate_hz().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn expected_arrivals_scales_rate_by_window() {
+        let e = expected_arrivals(2000.0, Duration::from_millis(2));
+        assert!((e - 4.0).abs() < 1e-9);
+        assert_eq!(expected_arrivals(0.0, Duration::from_millis(2)), 0.0);
+    }
+
+    #[test]
+    fn pick_width_climbs_immediately_and_descends_with_hysteresis() {
+        let cfg = BatchConfig::default(); // ladder [1,4,8,16], hysteresis 1.25
+        // Rising load upshifts to the widest justified rung at once.
+        assert_eq!(pick_width(&cfg, 9.0, 1), 8);
+        assert_eq!(pick_width(&cfg, 100.0, 4), 16);
+        // Expected below every rung floors at the smallest.
+        assert_eq!(pick_width(&cfg, 0.2, 1), 1);
+        // Falling load: at expected 7 the raw rung is 4, but 7·1.25 ≥ 8
+        // still justifies the current 8 — hold.
+        assert_eq!(pick_width(&cfg, 7.0, 8), 8);
+        // Only once the inflated estimate drops below the rung does the
+        // width follow: 6·1.25 = 7.5 < 8.
+        assert_eq!(pick_width(&cfg, 6.0, 8), 4);
+        // Collapse to 1 under near-idle load.
+        assert_eq!(pick_width(&cfg, 0.1, 16), 1);
+    }
+
+    #[test]
+    fn pick_width_is_stable_across_a_boundary_oscillation() {
+        let cfg = BatchConfig::default();
+        // Load oscillating just under/over the 8-rung boundary: the width
+        // settles at 8 and stays — no flapping.
+        let mut k = 4;
+        for &e in [7.5, 8.2, 7.6, 8.1, 7.4, 8.3].iter().cycle().take(30) {
+            k = pick_width(&cfg, e, k);
+            if k == 8 {
+                break;
+            }
+        }
+        assert_eq!(k, 8);
+        for &e in [7.5, 8.2, 7.6, 8.1, 7.4, 8.3].iter().cycle().take(30) {
+            k = pick_width(&cfg, e, k);
+            assert_eq!(k, 8, "width must not flap around the boundary (expected {e})");
+        }
+    }
+
+    #[test]
+    fn pick_width_sanitizes_degenerate_ladders() {
+        let cfg = BatchConfig { ladder: vec![0, 3], ..BatchConfig::default() };
+        assert_eq!(pick_width(&cfg, 0.0, 1), 1, "zero rungs are treated as 1");
+        assert_eq!(pick_width(&cfg, 5.0, 1), 3);
+        let empty = BatchConfig { ladder: vec![], ..BatchConfig::default() };
+        assert_eq!(pick_width(&empty, 100.0, 2), 2, "empty ladder never moves the width");
+    }
+}

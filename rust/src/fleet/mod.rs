@@ -1,0 +1,54 @@
+//! Multi-tenant serving fleet: many matrices behind one memory budget,
+//! kept optimal online.
+//!
+//! The single-matrix [`crate::coordinator::SpmvServer`] reproduces the
+//! paper's serving story — batched SpMV/SpMM at saturated bandwidth —
+//! for one operand. Production sparse serving (the ROADMAP's
+//! heavy-traffic north star; cf. DBCSR-style multi-operand libraries)
+//! needs a layer above it: many registered matrices, a bounded memory
+//! footprint, and decisions that track a live, shifting workload instead
+//! of being frozen at boot. That layer is this subsystem:
+//!
+//! ```text
+//!   register(id, A) ──► Tuner (spmv + spmm@k) ──► TunedConfig pair
+//!        │                                              │
+//!        ▼                                              ▼
+//!  [registry]  Fleet ── BTreeMap<id, entry> ── Engine per warm entry
+//!        │        LRU-evicts prepared payloads to the byte budget;
+//!        │        cold entries keep decisions, re-materialize on demand
+//!        ▼
+//!  [retune]   maintenance thread ── PathWindow GFlop/s vs promised
+//!        │        ──► invalidate_if_drifted ──► re-tune off-path
+//!        │        ──► Path::swap (hot, no dropped requests)
+//!        ▼
+//!  [batch]    ArrivalTracker (EMA gap) ──► expected arrivals/window
+//!                 ──► pick_width over the tuned ladder (hysteresis)
+//!                 ──► re-tune spmm@k' + swap + retarget max_batch
+//! ```
+//!
+//! * [`registry`] — [`Fleet`]: registration (tune both workloads, warm an
+//!   [`crate::coordinator::Engine`]), the
+//!   [`crate::kernels::SpmvOp::storage_bytes`]-accounted budget with LRU
+//!   eviction, re-materialization, events, and fleet-wide stats whose
+//!   aggregates are sums of per-path counters (never double-counted).
+//! * [`retune`] — the drift policy ([`retune::drifted`]) and the
+//!   maintenance thread's knobs: this is the server-owned background
+//!   re-tune that replaces the old shutdown-time drift hook.
+//! * [`batch`] — arrival-rate-adaptive SpMM width: an EMA
+//!   [`batch::ArrivalTracker`] per entry and the hysteresis ladder walk
+//!   ([`batch::pick_width`]), so k follows the offered load instead of a
+//!   static `max_batch`.
+//!
+//! The serving data plane is untouched by all of this: requests flow
+//! through the same [`crate::coordinator::path::Path`] units the
+//! single-matrix server uses, and maintenance only ever touches a path
+//! through [`crate::coordinator::path::Path::swap`], which the serving
+//! loop observes at a batch boundary.
+
+pub mod batch;
+pub mod registry;
+pub mod retune;
+
+pub use batch::{ArrivalTracker, BatchConfig};
+pub use registry::{EntryReport, Fleet, FleetConfig, FleetEvent, FleetStats};
+pub use retune::RetuneConfig;

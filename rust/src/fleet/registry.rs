@@ -1,0 +1,979 @@
+//! The multi-tenant registry: many matrices, one memory budget, LRU
+//! eviction of prepared payloads, and the maintenance thread that keeps
+//! every warm entry's serving decisions honest.
+//!
+//! [`Fleet::register`] tunes both workloads for a matrix (SpMV, and SpMM
+//! at the configured initial width) and boots a per-entry
+//! [`Engine`] — the same batching core [`crate::coordinator::SpmvServer`]
+//! wraps for a single matrix. Prepared payloads are accounted with
+//! [`crate::kernels::SpmvOp::storage_bytes`] against
+//! [`FleetConfig::memory_budget_bytes`]; when the warm set overflows, the
+//! least-recently-used entry is evicted — its engine drains and stops,
+//! its payloads drop, but its [`TunedConfig`]s (and the tuner's cache)
+//! survive, so the next request *re-materializes* the entry by
+//! re-preparing payloads without re-searching. The maintenance thread
+//! (see [`super::retune`]) watches each warm path's measured GFlop/s
+//! against its decision's recorded figure, re-tunes confirmed drift off
+//! the serving path and hot-swaps the result in, and walks the SpMM
+//! batch width along [`super::batch`]'s tuned ladder as each entry's
+//! arrival rate moves.
+
+use std::collections::btree_map::Entry as MapEntry;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::path::{Engine, Path, PathSpec, PathStats, Response};
+use crate::coordinator::server::ServerConfig;
+use crate::kernels::op::SpmvOp;
+use crate::kernels::Workload;
+use crate::sparse::{Csr, MatrixStats};
+use crate::tuner::exec::prepare_owned_with;
+use crate::tuner::{TunedConfig, Tuner};
+
+use super::batch::{expected_arrivals, pick_width, ArrivalTracker, BatchConfig};
+use super::retune::{drifted, RetuneConfig};
+
+/// Fleet-wide knobs.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Budget for all warm entries' prepared payloads, in bytes
+    /// (payloads shared between an entry's two paths are billed once).
+    /// 0 disables eviction. The entry being served is never evicted to
+    /// make room, so one oversized matrix can transiently exceed the
+    /// budget by itself.
+    pub memory_budget_bytes: usize,
+    /// Initial SpMM batch width each entry is tuned and served at (the
+    /// adaptive ladder moves it afterwards).
+    pub max_batch: usize,
+    /// Batching window of every entry's engine.
+    pub max_wait: Duration,
+    /// Execute on the persistent global worker pool (default) instead of
+    /// spawning threads per batch.
+    pub pooled: bool,
+    /// Background re-tuning knobs.
+    pub retune: RetuneConfig,
+    /// Arrival-rate-adaptive batch-width knobs.
+    pub batch: BatchConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            memory_budget_bytes: 0,
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            pooled: true,
+            retune: RetuneConfig::default(),
+            batch: BatchConfig::default(),
+        }
+    }
+}
+
+/// Something observable happened to the fleet; drained with
+/// [`Fleet::drain_events`] for logs, examples and tests.
+#[derive(Debug, Clone)]
+pub enum FleetEvent {
+    /// A matrix was registered, tuned and warmed.
+    Registered {
+        /// Entry id.
+        id: String,
+        /// Prepared payload bytes.
+        bytes: usize,
+        /// The SpMV decision serving the entry.
+        spmv: String,
+        /// The SpMM decision serving the entry.
+        spmm: String,
+    },
+    /// A warm entry's payloads were dropped to fit the memory budget.
+    Evicted {
+        /// Entry id.
+        id: String,
+        /// Payload bytes freed.
+        bytes: usize,
+    },
+    /// A cold entry re-prepared its payloads (no re-search) on demand.
+    Rematerialized {
+        /// Entry id.
+        id: String,
+        /// Prepared payload bytes.
+        bytes: usize,
+    },
+    /// A drifted path was re-tuned and hot-swapped by maintenance.
+    Retuned {
+        /// Entry id.
+        id: String,
+        /// Workload of the drifted path (`"spmv"` / `"spmm16"`).
+        workload: String,
+        /// GFlop/s the window measured.
+        measured_gflops: f64,
+        /// GFlop/s the old decision had promised.
+        promised_gflops: f64,
+        /// The replacement decision now serving.
+        to: String,
+    },
+    /// The adaptive batch width moved to a new ladder rung.
+    WidthChanged {
+        /// Entry id.
+        id: String,
+        /// Previous width.
+        from: usize,
+        /// New width.
+        to: usize,
+    },
+}
+
+impl std::fmt::Display for FleetEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FleetEvent::Registered { id, bytes, spmv, spmm } => {
+                write!(f, "registered {id} ({bytes} B): spmv {spmv} | spmm {spmm}")
+            }
+            FleetEvent::Evicted { id, bytes } => write!(f, "evicted {id} (freed {bytes} B)"),
+            FleetEvent::Rematerialized { id, bytes } => {
+                write!(f, "rematerialized {id} ({bytes} B)")
+            }
+            FleetEvent::Retuned { id, workload, measured_gflops, promised_gflops, to } => {
+                write!(
+                    f,
+                    "retuned {id} [{workload}]: measured {measured_gflops:.2} GF vs promised \
+                     {promised_gflops:.2} GF → {to}"
+                )
+            }
+            FleetEvent::WidthChanged { id, from, to } => {
+                write!(f, "width {id}: {from} → {to}")
+            }
+        }
+    }
+}
+
+/// Per-entry slice of [`FleetStats`]: cumulative path stats across every
+/// warm period (evict/re-materialize cycles included).
+#[derive(Debug, Clone)]
+pub struct EntryReport {
+    /// Entry id.
+    pub id: String,
+    /// Whether the entry currently holds prepared payloads.
+    pub warm: bool,
+    /// Prepared payload bytes right now (0 when cold).
+    pub storage_bytes: usize,
+    /// Single-request path stats.
+    pub spmv: PathStats,
+    /// Fused-batch path stats.
+    pub spmm: PathStats,
+}
+
+/// Fleet-wide statistics. Aggregates are sums over the entries' per-path
+/// counters — each path counts only its own work, so the fleet total can
+/// never double-count a batch (see
+/// [`crate::coordinator::ServerStats::from_paths`] for the same invariant
+/// one level down).
+#[derive(Debug, Clone)]
+pub struct FleetStats {
+    /// One report per registered entry.
+    pub entries: Vec<EntryReport>,
+    /// Budget evictions so far.
+    pub evictions: usize,
+    /// Cold entries re-prepared on demand.
+    pub rematerializations: usize,
+    /// Drift-triggered re-tune + hot-swap cycles.
+    pub retunes: usize,
+    /// Adaptive batch-width moves.
+    pub width_changes: usize,
+}
+
+impl FleetStats {
+    /// Requests served across all entries and paths.
+    pub fn served(&self) -> usize {
+        self.entries.iter().map(|e| e.spmv.served + e.spmm.served).sum()
+    }
+
+    /// Batches executed across all entries and paths.
+    pub fn batches(&self) -> usize {
+        self.entries.iter().map(|e| e.spmv.batches + e.spmm.batches).sum()
+    }
+
+    /// Flops executed across all entries and paths.
+    pub fn flops(&self) -> f64 {
+        self.entries.iter().map(|e| e.spmv.flops + e.spmm.flops).sum()
+    }
+
+    /// Busy kernel seconds across all entries and paths.
+    pub fn compute_s(&self) -> f64 {
+        self.entries.iter().map(|e| e.spmv.compute_s + e.spmm.compute_s).sum()
+    }
+
+    /// Aggregate kernel throughput; 0 when nothing ran.
+    pub fn gflops(&self) -> f64 {
+        if self.batches() == 0 {
+            0.0
+        } else {
+            self.flops() / self.compute_s().max(1e-12) / 1e9
+        }
+    }
+}
+
+/// A warm entry: a running engine plus the decisions it serves with.
+struct WarmEntry {
+    engine: Engine,
+    spmv: TunedConfig,
+    spmm: TunedConfig,
+}
+
+/// Registry state of one entry. Cold entries keep their decisions (and
+/// the adapted batch width), so re-materializing is a payload
+/// preparation, never a re-search.
+enum EntryState {
+    Warm(WarmEntry),
+    Cold { spmv: TunedConfig, spmm: TunedConfig, k: usize },
+}
+
+struct FleetEntry {
+    id: String,
+    a: Arc<Csr>,
+    state: Mutex<EntryState>,
+    tracker: Mutex<ArrivalTracker>,
+    /// Path stats accumulated over previous warm periods
+    /// (spmv, spmm) — folded in at eviction so totals survive cycles.
+    retired: Mutex<(PathStats, PathStats)>,
+    /// LRU stamp from the fleet's logical clock.
+    last_used: AtomicU64,
+}
+
+struct FleetInner {
+    config: FleetConfig,
+    tuner: Mutex<Tuner>,
+    entries: Mutex<BTreeMap<String, Arc<FleetEntry>>>,
+    clock: AtomicU64,
+    stop: AtomicBool,
+    events: Mutex<Vec<FleetEvent>>,
+    evictions: AtomicUsize,
+    rematerializations: AtomicUsize,
+    retunes: AtomicUsize,
+    width_changes: AtomicUsize,
+}
+
+/// The multi-tenant serving fleet. See the module docs above for the
+/// entry life cycle and [`crate::fleet`] for the subsystem overview.
+pub struct Fleet {
+    inner: Arc<FleetInner>,
+    maintenance: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Fleet {
+    /// Creates a fleet over `tuner` (which owns the decision cache —
+    /// hand it a [`crate::tuner::TuningCache::load`]ed cache for
+    /// cross-process reuse, and a
+    /// [`crate::tuner::TuningCache::with_max_age`] TTL for automatic
+    /// decay). Spawns the background maintenance thread unless
+    /// `config.retune.enabled` is off.
+    pub fn new(config: FleetConfig, tuner: Tuner) -> Fleet {
+        let start_thread = config.retune.enabled;
+        let inner = Arc::new(FleetInner {
+            config,
+            tuner: Mutex::new(tuner),
+            entries: Mutex::new(BTreeMap::new()),
+            clock: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            events: Mutex::new(Vec::new()),
+            evictions: AtomicUsize::new(0),
+            rematerializations: AtomicUsize::new(0),
+            retunes: AtomicUsize::new(0),
+            width_changes: AtomicUsize::new(0),
+        });
+        let maintenance = if start_thread {
+            let inner = inner.clone();
+            Some(std::thread::spawn(move || maintenance_loop(&inner)))
+        } else {
+            None
+        };
+        Fleet { inner, maintenance }
+    }
+
+    /// Registers a matrix under `id`: tunes both workloads (answering
+    /// from the tuner's cache when the fingerprint is known), warms the
+    /// entry, and evicts least-recently-used peers if the budget
+    /// overflows. Errors on a duplicate id.
+    pub fn register(&self, id: &str, a: Arc<Csr>) -> anyhow::Result<()> {
+        anyhow::ensure!(!id.is_empty(), "fleet entry id must be non-empty");
+        let (spmv, spmm) = {
+            // One O(nnz) statistics pass shared by both workload tunes —
+            // on a cache-answered registration the stats pass would
+            // otherwise dominate.
+            let stats = MatrixStats::compute(id, &a);
+            let mut tuner = self.inner.tuner.lock().unwrap();
+            let spmv = tuner.tune_with_stats_for(&a, &stats, Workload::Spmv)?;
+            let k = self.inner.config.max_batch.max(1);
+            let spmm = tuner.tune_with_stats_for(&a, &stats, Workload::Spmm { k })?;
+            (spmv, spmm)
+        };
+        let k = spmm.workload.k().max(1);
+        let entry = Arc::new(FleetEntry {
+            id: id.to_string(),
+            a,
+            state: Mutex::new(EntryState::Cold { spmv: spmv.clone(), spmm: spmm.clone(), k }),
+            tracker: Mutex::new(ArrivalTracker::default()),
+            retired: Mutex::new((PathStats::default(), PathStats::default())),
+            last_used: AtomicU64::new(0),
+        });
+        self.inner.touch(&entry);
+        {
+            // The single authoritative duplicate gate; a duplicate
+            // register pays a (cache-answered) tune before failing here,
+            // which beats a second racy pre-check.
+            let mut entries = self.inner.entries.lock().unwrap();
+            match entries.entry(id.to_string()) {
+                MapEntry::Vacant(v) => {
+                    v.insert(entry.clone());
+                }
+                MapEntry::Occupied(_) => {
+                    anyhow::bail!("fleet entry {id:?} is already registered")
+                }
+            }
+        }
+        let (_, bytes) = self.inner.warm(&entry);
+        self.inner.push_event(FleetEvent::Registered {
+            id: id.to_string(),
+            bytes,
+            spmv: spmv.to_string(),
+            spmm: spmm.to_string(),
+        });
+        self.inner.enforce_budget(id);
+        Ok(())
+    }
+
+    /// Submits a request to `id`'s entry; returns a receiver for the
+    /// response. A cold entry is re-materialized first (payloads
+    /// re-prepared from its kept decisions — no re-search), which may
+    /// evict the least-recently-used peers.
+    pub fn submit(&self, id: &str, x: Vec<f64>) -> anyhow::Result<mpsc::Receiver<Response>> {
+        let entry = self.inner.entry(id)?;
+        self.inner.touch(&entry);
+        entry.tracker.lock().unwrap().record();
+        let (rx, was_cold, bytes) = self.inner.submit_to(&entry, x);
+        if was_cold {
+            self.inner.rematerializations.fetch_add(1, AtomicOrdering::Relaxed);
+            self.inner.push_event(FleetEvent::Rematerialized { id: entry.id.clone(), bytes });
+            self.inner.enforce_budget(&entry.id);
+        }
+        rx
+    }
+
+    /// Submits and waits.
+    pub fn call(&self, id: &str, x: Vec<f64>) -> anyhow::Result<Response> {
+        Ok(self.submit(id, x)?.recv()?)
+    }
+
+    /// Runs one maintenance pass synchronously — drift checks and width
+    /// adaptation for every warm entry. The background thread calls the
+    /// same pass on its interval; tests and examples call this for
+    /// deterministic timing.
+    pub fn maintain_now(&self) {
+        self.inner.maintain_now();
+    }
+
+    /// Registered ids, sorted.
+    pub fn ids(&self) -> Vec<String> {
+        self.inner.entries.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Whether `id` currently holds prepared payloads.
+    pub fn is_warm(&self, id: &str) -> Option<bool> {
+        let entry = self.inner.entry(id).ok()?;
+        let state = entry.state.lock().unwrap();
+        Some(matches!(&*state, EntryState::Warm(_)))
+    }
+
+    /// Prepared payload bytes across all warm entries (shared payloads
+    /// billed once per entry).
+    pub fn storage_bytes(&self) -> usize {
+        let entries: Vec<Arc<FleetEntry>> =
+            self.inner.entries.lock().unwrap().values().cloned().collect();
+        entries
+            .iter()
+            .map(|e| {
+                let state = e.state.lock().unwrap();
+                match &*state {
+                    EntryState::Warm(w) => w.engine.storage_bytes(),
+                    EntryState::Cold { .. } => 0,
+                }
+            })
+            .sum()
+    }
+
+    /// The decisions currently serving (or kept by) `id`: (SpMV, SpMM).
+    pub fn decisions(&self, id: &str) -> Option<(TunedConfig, TunedConfig)> {
+        let entry = self.inner.entry(id).ok()?;
+        let state = entry.state.lock().unwrap();
+        Some(match &*state {
+            EntryState::Warm(w) => (w.spmv.clone(), w.spmm.clone()),
+            EntryState::Cold { spmv, spmm, .. } => (spmv.clone(), spmm.clone()),
+        })
+    }
+
+    /// `id`'s current batch-width cap (the adaptive ladder's position).
+    pub fn current_max_batch(&self, id: &str) -> Option<usize> {
+        let entry = self.inner.entry(id).ok()?;
+        let state = entry.state.lock().unwrap();
+        Some(match &*state {
+            EntryState::Warm(w) => w.engine.max_batch(),
+            EntryState::Cold { k, .. } => *k,
+        })
+    }
+
+    /// Hot-swap counts of `id`'s (SpMV, SpMM) paths in the current warm
+    /// period; `None` when the entry is cold or unknown.
+    pub fn path_swaps(&self, id: &str) -> Option<(usize, usize)> {
+        let entry = self.inner.entry(id).ok()?;
+        let state = entry.state.lock().unwrap();
+        match &*state {
+            EntryState::Warm(w) => {
+                Some((w.engine.spmv_path().swaps(), w.engine.spmm_path().swaps()))
+            }
+            EntryState::Cold { .. } => None,
+        }
+    }
+
+    /// Takes every event recorded since the last drain, oldest first.
+    pub fn drain_events(&self) -> Vec<FleetEvent> {
+        std::mem::take(&mut *self.inner.events.lock().unwrap())
+    }
+
+    /// The shared tuner's cache counters: (hits, misses).
+    pub fn tuner_counters(&self) -> (usize, usize) {
+        let tuner = self.inner.tuner.lock().unwrap();
+        (tuner.cache.hits, tuner.cache.misses)
+    }
+
+    /// Test/demo hook: multiplies the recorded GFlop/s of `id`'s
+    /// decision for `workload` — in the serving copy *and* the tuner's
+    /// cache — by `factor`. With `factor ≫ 1` the next maintenance pass
+    /// sees the serving measurement far below the inflated promise and
+    /// must invalidate, re-tune and hot-swap: deterministic drift
+    /// injection for tests and `examples/fleet.rs`.
+    pub fn skew_recorded_gflops(
+        &self,
+        id: &str,
+        workload: Workload,
+        factor: f64,
+    ) -> anyhow::Result<()> {
+        let entry = self.inner.entry(id)?;
+        {
+            let mut tuner = self.inner.tuner.lock().unwrap();
+            let key = tuner.key(id, &entry.a, workload);
+            if let Some(found) = tuner.cache.get(&key) {
+                let mut skewed = found.clone();
+                skewed.gflops *= factor;
+                tuner.cache.insert(key, skewed);
+            }
+        }
+        let mut state = entry.state.lock().unwrap();
+        match &mut *state {
+            EntryState::Warm(w) => {
+                if w.spmv.workload == workload {
+                    w.spmv.gflops *= factor;
+                }
+                if w.spmm.workload == workload {
+                    w.spmm.gflops *= factor;
+                }
+            }
+            EntryState::Cold { spmv, spmm, .. } => {
+                if spmv.workload == workload {
+                    spmv.gflops *= factor;
+                }
+                if spmm.workload == workload {
+                    spmm.gflops *= factor;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-entry and aggregate statistics (cumulative across warm
+    /// periods; live engines included).
+    pub fn stats(&self) -> FleetStats {
+        let entries: Vec<Arc<FleetEntry>> =
+            self.inner.entries.lock().unwrap().values().cloned().collect();
+        let mut reports = Vec::with_capacity(entries.len());
+        for e in &entries {
+            let (mut spmv, mut spmm) = e.retired.lock().unwrap().clone();
+            let (warm, storage_bytes) = {
+                let state = e.state.lock().unwrap();
+                match &*state {
+                    EntryState::Warm(w) => {
+                        spmv.absorb(&w.engine.spmv_path().stats());
+                        spmm.absorb(&w.engine.spmm_path().stats());
+                        (true, w.engine.storage_bytes())
+                    }
+                    EntryState::Cold { .. } => (false, 0),
+                }
+            };
+            reports.push(EntryReport { id: e.id.clone(), warm, storage_bytes, spmv, spmm });
+        }
+        FleetStats {
+            entries: reports,
+            evictions: self.inner.evictions.load(AtomicOrdering::Relaxed),
+            rematerializations: self.inner.rematerializations.load(AtomicOrdering::Relaxed),
+            retunes: self.inner.retunes.load(AtomicOrdering::Relaxed),
+            width_changes: self.inner.width_changes.load(AtomicOrdering::Relaxed),
+        }
+    }
+
+    /// Stops the maintenance thread, drains and stops every warm engine,
+    /// and returns the final statistics.
+    pub fn shutdown(mut self) -> FleetStats {
+        self.stop_maintenance();
+        let entries: Vec<Arc<FleetEntry>> =
+            self.inner.entries.lock().unwrap().values().cloned().collect();
+        for e in &entries {
+            self.inner.cool(e);
+        }
+        self.stats()
+    }
+
+    fn stop_maintenance(&mut self) {
+        self.inner.stop.store(true, AtomicOrdering::Relaxed);
+        if let Some(handle) = self.maintenance.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        // The maintenance thread holds an `Arc<FleetInner>`; without this
+        // join a dropped-but-not-shut-down fleet would leak a thread that
+        // spins on its interval forever.
+        self.stop_maintenance();
+    }
+}
+
+impl FleetInner {
+    fn entry(&self, id: &str) -> anyhow::Result<Arc<FleetEntry>> {
+        self.entries
+            .lock()
+            .unwrap()
+            .get(id)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("unknown fleet entry {id:?}"))
+    }
+
+    /// Stamps the entry with the logical clock (LRU recency).
+    fn touch(&self, entry: &FleetEntry) {
+        let stamp = self.clock.fetch_add(1, AtomicOrdering::Relaxed) + 1;
+        entry.last_used.store(stamp, AtomicOrdering::Relaxed);
+    }
+
+    fn push_event(&self, event: FleetEvent) {
+        self.events.lock().unwrap().push(event);
+    }
+
+    /// Ensures the entry behind the already-held state lock is warm.
+    /// Returns (whether this call materialized it, payload bytes).
+    fn ensure_warm_locked(&self, entry: &FleetEntry, state: &mut EntryState) -> (bool, usize) {
+        if let EntryState::Warm(w) = &*state {
+            return (false, w.engine.storage_bytes());
+        }
+        let EntryState::Cold { spmv, spmm, k } = &*state else {
+            unreachable!("EntryState has exactly two variants");
+        };
+        let (spmv_d, spmm_d, k) = (spmv.clone(), spmm.clone(), *k);
+        let mut config = ServerConfig::tuned_pair(&spmv_d, &spmm_d);
+        config.max_batch = k.max(1);
+        config.max_wait = self.config.max_wait;
+        config.pooled = self.config.pooled;
+        let engine = Engine::start(entry.a.clone(), config);
+        let bytes = engine.storage_bytes();
+        *state = EntryState::Warm(WarmEntry { engine, spmv: spmv_d, spmm: spmm_d });
+        (true, bytes)
+    }
+
+    /// Ensures the entry is warm (the registration path).
+    fn warm(&self, entry: &FleetEntry) -> (bool, usize) {
+        let mut state = entry.state.lock().unwrap();
+        self.ensure_warm_locked(entry, &mut state)
+    }
+
+    /// Warms if needed and enqueues the request *while holding the state
+    /// lock* — serialized against [`FleetInner::cool`], so a concurrent
+    /// eviction can never refuse or drop a request to a registered
+    /// entry: every message enqueued before the engine's stop marker is
+    /// served before its loop exits. Returns (submission, whether the
+    /// entry was re-materialized, payload bytes).
+    fn submit_to(
+        &self,
+        entry: &FleetEntry,
+        x: Vec<f64>,
+    ) -> (anyhow::Result<mpsc::Receiver<Response>>, bool, usize) {
+        let mut state = entry.state.lock().unwrap();
+        let (was_cold, bytes) = self.ensure_warm_locked(entry, &mut state);
+        let EntryState::Warm(w) = &*state else {
+            unreachable!("ensure_warm_locked leaves the entry warm");
+        };
+        (w.engine.client().submit(x), was_cold, bytes)
+    }
+
+    /// Drops a warm entry's engine and payloads, folding its stats into
+    /// the retired accumulators. Returns the freed bytes, or `None` if
+    /// the entry was already cold.
+    fn cool(&self, entry: &FleetEntry) -> Option<usize> {
+        let mut state = entry.state.lock().unwrap();
+        let (spmv_d, spmm_d, k) = match &*state {
+            EntryState::Warm(w) => (w.spmv.clone(), w.spmm.clone(), w.engine.max_batch()),
+            EntryState::Cold { .. } => return None,
+        };
+        let old = std::mem::replace(
+            &mut *state,
+            EntryState::Cold { spmv: spmv_d, spmm: spmm_d, k },
+        );
+        let EntryState::Warm(w) = old else {
+            unreachable!("matched Warm above");
+        };
+        let bytes = w.engine.storage_bytes();
+        let (path_spmv, path_spmm) = w.engine.shutdown();
+        let mut retired = entry.retired.lock().unwrap();
+        retired.0.absorb(&path_spmv);
+        retired.1.absorb(&path_spmm);
+        Some(bytes)
+    }
+
+    /// Budget eviction: while the warm set exceeds the budget, evict the
+    /// least-recently-used warm entry other than `protect` (the entry
+    /// being served right now must not be evicted to make room for
+    /// itself).
+    fn enforce_budget(&self, protect: &str) {
+        let budget = self.config.memory_budget_bytes;
+        if budget == 0 {
+            return;
+        }
+        loop {
+            let entries: Vec<Arc<FleetEntry>> =
+                self.entries.lock().unwrap().values().cloned().collect();
+            let mut total = 0usize;
+            let mut victim: Option<(u64, Arc<FleetEntry>)> = None;
+            for e in &entries {
+                let warm_bytes = {
+                    let state = e.state.lock().unwrap();
+                    match &*state {
+                        EntryState::Warm(w) => Some(w.engine.storage_bytes()),
+                        EntryState::Cold { .. } => None,
+                    }
+                };
+                if let Some(bytes) = warm_bytes {
+                    total += bytes;
+                    if e.id != protect {
+                        let stamp = e.last_used.load(AtomicOrdering::Relaxed);
+                        let older = match &victim {
+                            None => true,
+                            Some((oldest, _)) => stamp < *oldest,
+                        };
+                        if older {
+                            victim = Some((stamp, e.clone()));
+                        }
+                    }
+                }
+            }
+            if total <= budget {
+                return;
+            }
+            let Some((_, victim)) = victim else {
+                // Only the protected entry is warm: tolerate the overage
+                // rather than evicting the matrix being served.
+                return;
+            };
+            if let Some(bytes) = self.cool(&victim) {
+                self.evictions.fetch_add(1, AtomicOrdering::Relaxed);
+                self.push_event(FleetEvent::Evicted { id: victim.id.clone(), bytes });
+            }
+        }
+    }
+
+    /// One maintenance pass over every entry.
+    fn maintain_now(&self) {
+        let entries: Vec<Arc<FleetEntry>> =
+            self.entries.lock().unwrap().values().cloned().collect();
+        for entry in &entries {
+            self.maintain_entry(entry);
+        }
+    }
+
+    fn maintain_entry(&self, entry: &FleetEntry) {
+        // Snapshot what the warm entry serves with; cold entries have
+        // nothing to maintain (their decisions age out via the cache TTL).
+        let snapshot = {
+            let state = entry.state.lock().unwrap();
+            match &*state {
+                EntryState::Warm(w) => Some((
+                    w.engine.spmv_path().clone(),
+                    w.engine.spmm_path().clone(),
+                    w.spmv.clone(),
+                    w.spmm.clone(),
+                    w.engine.max_batch(),
+                )),
+                EntryState::Cold { .. } => None,
+            }
+        };
+        let Some((spmv_path, spmm_path, spmv_d, spmm_d, current_k)) = snapshot else {
+            return;
+        };
+        self.check_drift(entry, &spmv_path, &spmv_d, true);
+        self.check_drift(entry, &spmm_path, &spmm_d, false);
+        self.adapt_width(entry, current_k);
+    }
+
+    /// Judges one path's window against its decision; on confirmed drift,
+    /// invalidates the cache entry, re-tunes on this (maintenance)
+    /// thread while the old payload keeps serving, and hot-swaps the
+    /// fresh preparation in.
+    fn check_drift(
+        &self,
+        entry: &FleetEntry,
+        path: &Arc<Path>,
+        decision: &TunedConfig,
+        is_spmv: bool,
+    ) {
+        // Thin evidence accumulates across passes: a low-traffic entry
+        // may see only a batch or two per interval, and consuming those
+        // observations unjudged would make its drift undetectable
+        // forever. Judge — and reset — only once the window is judgeable.
+        if path.window().batches < self.config.retune.min_window_batches.max(1) {
+            return;
+        }
+        let window = path.take_window();
+        if !drifted(decision, &window, &self.config.retune) {
+            return;
+        }
+        let fresh = {
+            let mut tuner = self.tuner.lock().unwrap();
+            let key = tuner.key(&entry.id, &entry.a, decision.workload);
+            tuner.cache.invalidate_if_drifted(&key, window.gflops(), self.config.retune.tolerance);
+            let _ = tuner.cache.save();
+            tuner.tune_workload(&entry.id, &entry.a, decision.workload)
+        };
+        let Ok(fresh) = fresh else { return };
+        let op: Arc<dyn SpmvOp> =
+            Arc::from(prepare_owned_with(&entry.a, fresh.format, fresh.ordering));
+        // Install only if this engine still owns the inspected path — the
+        // entry may have been evicted and re-materialized while the
+        // search ran. A missed install is not lost work: the fresh
+        // decision is in the cache, so the next pass re-detects the
+        // still-stale serving copy and installs on a cache hit.
+        let installed = {
+            let mut state = entry.state.lock().unwrap();
+            match &mut *state {
+                EntryState::Warm(w) => {
+                    let owner =
+                        if is_spmv { w.engine.spmv_path() } else { w.engine.spmm_path() };
+                    if Arc::ptr_eq(owner, path) {
+                        path.swap(PathSpec::from_decision(&fresh), op);
+                        if is_spmv {
+                            w.spmv = fresh.clone();
+                        } else {
+                            w.spmm = fresh.clone();
+                        }
+                        true
+                    } else {
+                        false
+                    }
+                }
+                EntryState::Cold { .. } => false,
+            }
+        };
+        if !installed {
+            return;
+        }
+        // The fresh payload may be a different (larger) format than the
+        // one it replaced; the budget must hold across hot swaps too.
+        self.enforce_budget(&entry.id);
+        self.retunes.fetch_add(1, AtomicOrdering::Relaxed);
+        self.push_event(FleetEvent::Retuned {
+            id: entry.id.clone(),
+            workload: decision.workload.to_string(),
+            measured_gflops: window.gflops(),
+            promised_gflops: decision.gflops,
+            to: fresh.to_string(),
+        });
+    }
+
+    /// Moves the entry's batch width along the tuned ladder when the
+    /// offered load says so; a new rung > 1 gets an SpMM decision tuned
+    /// at exactly that width (a cache hit once the rung has been
+    /// visited) hot-swapped onto the batch path.
+    fn adapt_width(&self, entry: &FleetEntry, current_k: usize) {
+        let cfg = &self.config.batch;
+        let (rate, samples) = {
+            let tracker = entry.tracker.lock().unwrap();
+            (tracker.rate_hz(), tracker.samples())
+        };
+        if samples < cfg.min_samples {
+            return;
+        }
+        let Some(rate) = rate else { return };
+        let expected = expected_arrivals(rate, self.config.max_wait);
+        let new_k = pick_width(cfg, expected, current_k);
+        if new_k == current_k {
+            return;
+        }
+        // Width 1 never routes to the SpMM path, so only wider rungs need
+        // a freshly tuned decision.
+        let fresh = if new_k > 1 {
+            let mut tuner = self.tuner.lock().unwrap();
+            match tuner.tune_workload(&entry.id, &entry.a, Workload::Spmm { k: new_k }) {
+                Ok(decision) => Some(decision),
+                Err(_) => return,
+            }
+        } else {
+            None
+        };
+        let prepared = fresh.as_ref().map(|d| {
+            let op: Arc<dyn SpmvOp> =
+                Arc::from(prepare_owned_with(&entry.a, d.format, d.ordering));
+            op
+        });
+        {
+            let mut state = entry.state.lock().unwrap();
+            let EntryState::Warm(w) = &mut *state else { return };
+            if w.engine.max_batch() != current_k {
+                // Raced an evict/re-materialize cycle; the next pass
+                // re-evaluates from the fresh state.
+                return;
+            }
+            if let (Some(decision), Some(op)) = (fresh, prepared) {
+                w.engine.spmm_path().swap(PathSpec::from_decision(&decision), op);
+                w.spmm = decision;
+            }
+            w.engine.set_max_batch(new_k);
+        }
+        // The rung's decision may have brought a larger payload format.
+        self.enforce_budget(&entry.id);
+        self.width_changes.fetch_add(1, AtomicOrdering::Relaxed);
+        self.push_event(FleetEvent::WidthChanged {
+            id: entry.id.clone(),
+            from: current_k,
+            to: new_k,
+        });
+    }
+}
+
+/// The background maintenance driver: sleep the interval (in small
+/// slices, so shutdown is prompt), then run one pass.
+fn maintenance_loop(inner: &FleetInner) {
+    while !inner.stop.load(AtomicOrdering::Relaxed) {
+        let interval = inner.config.retune.interval.max(Duration::from_millis(1));
+        let slice = interval.min(Duration::from_millis(10));
+        let mut slept = Duration::ZERO;
+        while slept < interval {
+            if inner.stop.load(AtomicOrdering::Relaxed) {
+                return;
+            }
+            std::thread::sleep(slice);
+            slept += slice;
+        }
+        inner.maintain_now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::stencil::stencil_2d;
+    use crate::sparse::gen::{random_vector, randomize_values};
+
+    fn matrix(seed: u64, n: usize) -> Arc<Csr> {
+        let mut a = stencil_2d(n, n);
+        randomize_values(&mut a, seed);
+        Arc::new(a)
+    }
+
+    fn quiet_config() -> FleetConfig {
+        FleetConfig {
+            retune: RetuneConfig { enabled: false, ..RetuneConfig::default() },
+            ..FleetConfig::default()
+        }
+    }
+
+    #[test]
+    fn register_serve_and_duplicate_rejection() {
+        let fleet = Fleet::new(quiet_config(), Tuner::quick());
+        let a = matrix(1, 20);
+        fleet.register("m", a.clone()).unwrap();
+        assert!(fleet.register("m", a.clone()).is_err(), "duplicate id must be rejected");
+        assert!(fleet.register("", a.clone()).is_err(), "empty id must be rejected");
+        assert!(fleet.call("unknown", vec![0.0; a.ncols]).is_err());
+        assert_eq!(fleet.ids(), vec!["m".to_string()]);
+        assert_eq!(fleet.is_warm("m"), Some(true));
+
+        let x = random_vector(a.ncols, 7);
+        let want = Csr::spmv(&a, &x);
+        let resp = fleet.call("m", x).unwrap();
+        for (u, v) in resp.y.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-10);
+        }
+        let events = fleet.drain_events();
+        assert!(matches!(events.first(), Some(FleetEvent::Registered { .. })));
+        let stats = fleet.shutdown();
+        assert_eq!(stats.served(), 1);
+        assert_eq!(stats.evictions, 0);
+    }
+
+    #[test]
+    fn budget_evicts_lru_and_rematerializes_without_research() {
+        let a = matrix(2, 24);
+        let b = matrix(3, 24);
+        let c = matrix(4, 24);
+        // Budget for roughly two of the three (CSR-sized) entries.
+        let budget = 2 * a.storage_bytes() + a.storage_bytes() / 2;
+        let tuner = Tuner::new(
+            crate::tuner::TunerConfig::model_only(),
+            crate::tuner::TuningCache::in_memory(),
+        );
+        let fleet =
+            Fleet::new(FleetConfig { memory_budget_bytes: budget, ..quiet_config() }, tuner);
+        fleet.register("a", a.clone()).unwrap();
+        fleet.register("b", b.clone()).unwrap();
+        fleet.register("c", c.clone()).unwrap();
+        // Oldest registration is the LRU victim.
+        assert_eq!(fleet.is_warm("a"), Some(false), "LRU entry must be evicted");
+        assert_eq!(fleet.is_warm("b"), Some(true));
+        assert_eq!(fleet.is_warm("c"), Some(true));
+        assert!(fleet.storage_bytes() <= budget);
+
+        // Serving the cold entry re-materializes it (and evicts the new
+        // LRU, "b") without touching the search: misses stay put.
+        let (_, misses_before) = fleet.tuner_counters();
+        let x = random_vector(a.ncols, 9);
+        let want = Csr::spmv(&a, &x);
+        let resp = fleet.call("a", x).unwrap();
+        for (u, v) in resp.y.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-10);
+        }
+        let (_, misses_after) = fleet.tuner_counters();
+        assert_eq!(misses_after, misses_before, "re-materialization must not re-search");
+        assert_eq!(fleet.is_warm("a"), Some(true));
+        assert_eq!(fleet.is_warm("b"), Some(false), "next LRU must make room");
+        assert!(fleet.storage_bytes() <= budget);
+
+        let stats = fleet.shutdown();
+        assert!(stats.evictions >= 2);
+        assert_eq!(stats.rematerializations, 1);
+        assert_eq!(stats.served(), 1);
+        // The aggregate is the sum of the per-entry path counters.
+        let sum: f64 =
+            stats.entries.iter().map(|e| e.spmv.flops + e.spmm.flops).sum();
+        assert_eq!(stats.flops(), sum);
+    }
+
+    #[test]
+    fn unlimited_budget_never_evicts() {
+        let fleet = Fleet::new(quiet_config(), Tuner::quick());
+        for (i, seed) in [(0usize, 10u64), (1, 11), (2, 12)] {
+            fleet.register(&format!("m{i}"), matrix(seed, 16)).unwrap();
+        }
+        for i in 0..3 {
+            assert_eq!(fleet.is_warm(&format!("m{i}")), Some(true));
+        }
+        let stats = fleet.shutdown();
+        assert_eq!(stats.evictions, 0);
+    }
+}

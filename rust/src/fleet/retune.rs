@@ -1,0 +1,140 @@
+//! Background re-tuning policy: when does a serving path's measured
+//! throughput contradict its tuned decision hard enough to re-tune?
+//!
+//! This closes the loop PR 3 opened: the tuning cache stores each
+//! decision's GFlop/s for exactly this comparison and
+//! [`crate::tuner::TuningCache::invalidate_if_drifted`] drops entries the
+//! measurements contradict — but until now the comparison only ran in a
+//! shutdown-time hook. The fleet's maintenance thread runs [`drifted`]
+//! against every warm path's [`PathWindow`] each pass; a confirmed drift
+//! invalidates the cache entry, re-tunes *off* the serving path (the
+//! search runs on the maintenance thread while the old payload keeps
+//! serving), and hot-swaps the freshly prepared payload in via
+//! [`crate::coordinator::path::Path::swap`].
+//!
+//! The gates mirror the ones the serving example grew by hand, because
+//! each guards a real false positive:
+//!
+//! * model-sourced decisions never drift — their recorded GFlop/s is on
+//!   the KNC machine model's scale, incomparable to a host measurement;
+//! * a thin window proves nothing — a couple of batches can be one cold
+//!   cache or one scheduler hiccup;
+//! * an SpMM figure was trialed at full width k, and fused throughput
+//!   falls with narrower batches — comparing from far below full width
+//!   would invalidate a healthy decision on every lightly-loaded pass.
+
+use std::time::Duration;
+
+use crate::coordinator::path::PathWindow;
+use crate::kernels::Workload;
+use crate::tuner::TunedConfig;
+
+/// Knobs of the maintenance thread.
+#[derive(Debug, Clone)]
+pub struct RetuneConfig {
+    /// Run the background maintenance thread at all. `false` still
+    /// allows explicit [`crate::fleet::Fleet::maintain_now`] passes.
+    pub enabled: bool,
+    /// Pause between maintenance passes.
+    pub interval: Duration,
+    /// Drift tolerance: re-tune once the window's measured GFlop/s falls
+    /// below `(1 − tolerance) ×` the decision's recorded figure. Matches
+    /// the semantics of
+    /// [`crate::tuner::TuningCache::invalidate_if_drifted`].
+    pub tolerance: f64,
+    /// Minimum batches a window must hold before it counts as evidence.
+    pub min_window_batches: usize,
+    /// For SpMM paths only: minimum mean batch width in the window, as a
+    /// fraction of the decision's tuned k, before the comparison runs.
+    pub min_width_fraction: f64,
+}
+
+impl Default for RetuneConfig {
+    fn default() -> Self {
+        RetuneConfig {
+            enabled: true,
+            interval: Duration::from_millis(200),
+            tolerance: 0.5,
+            min_window_batches: 3,
+            min_width_fraction: 0.75,
+        }
+    }
+}
+
+/// Whether `window` contradicts `decision` hard enough to re-tune.
+pub fn drifted(decision: &TunedConfig, window: &PathWindow, config: &RetuneConfig) -> bool {
+    if decision.source != "trial" || decision.gflops <= 0.0 {
+        return false;
+    }
+    if window.batches < config.min_window_batches.max(1) {
+        return false;
+    }
+    let measured = window.gflops();
+    if measured <= 0.0 {
+        return false;
+    }
+    if let Workload::Spmm { k } = decision.workload {
+        if window.mean_batch() < k as f64 * config.min_width_fraction {
+            return false;
+        }
+    }
+    measured < decision.gflops * (1.0 - config.tolerance.clamp(0.0, 1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::Policy;
+    use crate::tuner::{Format, Ordering};
+
+    fn decision(workload: Workload, gflops: f64, source: &str) -> TunedConfig {
+        TunedConfig {
+            workload,
+            format: Format::Csr,
+            ordering: Ordering::Natural,
+            policy: Policy::Dynamic(64),
+            threads: 2,
+            gflops,
+            source: source.to_string(),
+            tuned_at: 0,
+        }
+    }
+
+    fn window(batches: usize, served: usize, gflops: f64) -> PathWindow {
+        // compute_s chosen so window.gflops() == gflops exactly.
+        let flops = gflops * 1e9;
+        PathWindow { batches, served, flops, compute_s: 1.0 }
+    }
+
+    #[test]
+    fn drift_requires_trial_source_evidence_and_a_real_gap() {
+        let cfg = RetuneConfig::default(); // tolerance 0.5, min 3 batches
+        let d = decision(Workload::Spmv, 4.0, "trial");
+        // Genuine drift: measured 1.0 < 4.0 · 0.5.
+        assert!(drifted(&d, &window(10, 10, 1.0), &cfg));
+        // Within tolerance.
+        assert!(!drifted(&d, &window(10, 10, 2.5), &cfg));
+        // Thin window proves nothing.
+        assert!(!drifted(&d, &window(2, 2, 1.0), &cfg));
+        // Unmeasured window proves nothing.
+        assert!(!drifted(&d, &window(10, 10, 0.0), &cfg));
+        // Model-scale figures are incomparable to host measurements.
+        assert!(!drifted(&decision(Workload::Spmv, 4.0, "model"), &window(10, 10, 1.0), &cfg));
+        // A decision with no recorded figure cannot be contradicted.
+        assert!(!drifted(&decision(Workload::Spmv, 0.0, "trial"), &window(10, 10, 1.0), &cfg));
+    }
+
+    #[test]
+    fn spmm_drift_gates_on_the_served_width() {
+        let cfg = RetuneConfig::default(); // min_width_fraction 0.75
+        let d = decision(Workload::Spmm { k: 16 }, 8.0, "trial");
+        // 10 batches × mean width 4 ≪ 0.75 · 16: the promised figure was
+        // trialed at k = 16, so narrow serving cannot contradict it.
+        assert!(!drifted(&d, &window(10, 40, 1.0), &cfg));
+        // Mean width 15 ≥ 12: the comparison runs, and 1.0 < 8.0 · 0.5.
+        assert!(drifted(&d, &window(10, 150, 1.0), &cfg));
+        // SpMV paths have no width gate.
+        let dv = decision(Workload::Spmv, 8.0, "trial");
+        assert!(drifted(&dv, &window(10, 10, 1.0), &cfg));
+    }
+}

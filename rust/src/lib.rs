@@ -35,7 +35,16 @@
 //!   the serving batch width) or by the analytic cost models, cached
 //!   persistently by matrix fingerprint + workload — SpMV and SpMM
 //!   decisions for one matrix coexist, and the batching server routes
-//!   each batch to the decision tuned for its width.
+//!   each batch to the decision tuned for its width. Cache entries decay
+//!   two ways: drift invalidation when serving measurements contradict
+//!   them, and an optional age TTL.
+//! * [`fleet`] — the multi-tenant layer above the single-matrix server:
+//!   register many matrices, serve each through the same hot-swappable
+//!   [`coordinator::path::Path`] units under a `storage_bytes`-accounted
+//!   memory budget with LRU eviction, re-tune drifted decisions on a
+//!   background maintenance thread (hot-swapping payloads without
+//!   dropping requests), and adapt each entry's SpMM batch width to its
+//!   measured arrival rate along a tuned ladder.
 //!
 //! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -43,6 +52,7 @@
 pub mod analysis;
 pub mod arch;
 pub mod coordinator;
+pub mod fleet;
 pub mod kernels;
 pub mod runtime;
 pub mod sched;

@@ -12,9 +12,17 @@
 //! makes sequential sharing lossless; truly simultaneous saves have no
 //! file lock, so the losing writer's newest entries can still be dropped
 //! (and simply get re-tuned on the next miss).
+//!
+//! Decisions age out two ways: actively, when serving measurements
+//! contradict the recorded GFlop/s
+//! ([`TuningCache::invalidate_if_drifted`], with merge-surviving
+//! tombstones), and passively, when a [`TuningCache::with_max_age`] TTL
+//! says the [`TunedConfig::tuned_at`] stamp is too old to still trust —
+//! expired entries look up as absent and are pruned on save.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 use crate::kernels::Workload;
 use crate::sched::Policy;
@@ -32,8 +40,16 @@ use super::space::{parse_policy, Candidate, Format, Ordering};
 /// of carrying unreachable entries forever.
 const CACHE_VERSION: usize = 3;
 
+/// Unix-epoch seconds now — the stamp [`TunedConfig::tuned_at`] carries.
+pub fn now_epoch() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
 /// The configuration the tuner settled on for one (matrix, workload).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct TunedConfig {
     /// Workload the decision was tuned for (SpMM carries the batch width).
     pub workload: Workload,
@@ -49,6 +65,27 @@ pub struct TunedConfig {
     pub gflops: f64,
     /// `"trial"` or `"model"`.
     pub source: String,
+    /// Unix-epoch seconds when the decision was made ([`now_epoch`]; 0
+    /// when unknown, e.g. a hand-edited entry). Consumed by the cache's
+    /// age decay ([`TuningCache::with_max_age`]).
+    pub tuned_at: u64,
+}
+
+/// Decision identity: what the tuner chose and on what evidence.
+/// `tuned_at` is deliberately excluded — it is provenance, not identity,
+/// and two searches settling on the same configuration in different
+/// seconds must still compare equal (the cache-stability tests rely on
+/// this).
+impl PartialEq for TunedConfig {
+    fn eq(&self, other: &Self) -> bool {
+        self.workload == other.workload
+            && self.format == other.format
+            && self.ordering == other.ordering
+            && self.policy == other.policy
+            && self.threads == other.threads
+            && self.gflops == other.gflops
+            && self.source == other.source
+    }
 }
 
 impl TunedConfig {
@@ -72,6 +109,7 @@ impl TunedConfig {
             .set("threads", self.threads)
             .set("gflops", self.gflops)
             .set("source", self.source.as_str())
+            .set("tuned_at", self.tuned_at)
     }
 
     /// Parses the [`TunedConfig::to_json`] form. A hand-edited entry
@@ -110,6 +148,9 @@ impl TunedConfig {
             .and_then(Json::as_str)
             .unwrap_or("unknown")
             .to_string();
+        // A stampless (hand-edited) entry reads as infinitely old: under a
+        // TTL it expires immediately, without one it lives forever.
+        let tuned_at = j.get("tuned_at").and_then(Json::as_usize).unwrap_or(0) as u64;
         Ok(TunedConfig {
             workload,
             format,
@@ -118,6 +159,7 @@ impl TunedConfig {
             threads: threads.max(1),
             gflops,
             source,
+            tuned_at,
         })
     }
 }
@@ -148,6 +190,10 @@ pub struct TuningCache {
     /// a decision this process measured to be stale. A fresh re-tune
     /// ([`TuningCache::insert`]) clears the tombstone.
     invalidated: BTreeSet<String>,
+    /// Maximum decision age: entries whose [`TunedConfig::tuned_at`] is
+    /// further in the past look up as absent (and are pruned from the
+    /// file on save). `None` — the default — disables decay.
+    max_age: Option<Duration>,
     /// Lookups answered from the cache.
     pub hits: usize,
     /// Lookups that fell through to a search.
@@ -193,7 +239,34 @@ impl TuningCache {
         Ok(cache)
     }
 
-    /// Number of stored decisions.
+    /// The same cache with an age limit: a decision older than `max_age`
+    /// is expired — [`TuningCache::get`] misses on it (so the caller
+    /// re-tunes under current conditions) and [`TuningCache::save`] prunes
+    /// it from the file, ours and on-disk copies alike. This is the
+    /// passive half of online re-tuning: drift invalidation catches
+    /// decisions the measurements contradict, the TTL retires decisions
+    /// too old for anyone to still vouch for.
+    pub fn with_max_age(mut self, max_age: Duration) -> TuningCache {
+        self.max_age = Some(max_age);
+        self
+    }
+
+    /// The configured age limit, if any.
+    pub fn max_age(&self) -> Option<Duration> {
+        self.max_age
+    }
+
+    /// Whether `entry` is past the configured age limit (never, without
+    /// one). A stampless entry (`tuned_at == 0`) counts as infinitely old.
+    fn expired(&self, entry: &TunedConfig) -> bool {
+        match self.max_age {
+            Some(max_age) => now_epoch().saturating_sub(entry.tuned_at) > max_age.as_secs(),
+            None => false,
+        }
+    }
+
+    /// Number of stored decisions (expired ones included until a lookup
+    /// or save retires them).
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -203,12 +276,18 @@ impl TuningCache {
         self.entries.is_empty()
     }
 
-    /// Looks up a fingerprint, counting the hit/miss.
+    /// Looks up a fingerprint, counting the hit/miss. An expired entry is
+    /// absent: the lookup misses and drops the local copy, so the
+    /// caller's re-tune-and-insert stores a fresh decision (the on-disk
+    /// copy is pruned on the next save).
     pub fn get(&mut self, key: &str) -> Option<&TunedConfig> {
-        if self.entries.contains_key(key) {
+        let live = self.entries.get(key).is_some_and(|e| !self.expired(e));
+        if live {
             self.hits += 1;
         } else {
             self.misses += 1;
+            self.entries.remove(key);
+            return None;
         }
         self.entries.get(key)
     }
@@ -266,9 +345,12 @@ impl TuningCache {
     /// The written set is this cache's entries merged over whatever is on
     /// disk (ours win on key conflicts), and the file is swapped in via a
     /// temp file + rename, so readers never see a half-written file and
-    /// sequential sharing is lossless. There is no file lock: two saves
-    /// racing in the same instant can still lose the slower writer's
-    /// newest entries (they are re-tuned on the next miss).
+    /// sequential sharing is lossless. Under an age limit
+    /// ([`TuningCache::with_max_age`]) expired entries are pruned from
+    /// both sides of the merge, so a decayed decision leaves the file
+    /// instead of haunting it. There is no file lock: two saves racing in
+    /// the same instant can still lose the slower writer's newest entries
+    /// (they are re-tuned on the next miss).
     pub fn save(&self) -> anyhow::Result<()> {
         let Some(path) = &self.path else { return Ok(()) };
         if let Some(dir) = path.parent() {
@@ -276,7 +358,12 @@ impl TuningCache {
                 std::fs::create_dir_all(dir)?;
             }
         }
-        let mut merged = self.entries.clone();
+        let mut merged: BTreeMap<String, TunedConfig> = self
+            .entries
+            .iter()
+            .filter(|(_, v)| !self.expired(v))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
         if let Ok(text) = std::fs::read_to_string(path) {
             if let Ok(j) = Json::parse(&text) {
                 // Never clobber a newer binary's cache or a file whose
@@ -298,8 +385,10 @@ impl TuningCache {
                         for (k, v) in disk {
                             // Drift tombstones win over the on-disk copy;
                             // otherwise the merge would resurrect the
-                            // stale decision.
-                            if self.invalidated.contains(&k) {
+                            // stale decision. Expired disk entries are
+                            // likewise left out — this is where the TTL's
+                            // prune-on-save happens.
+                            if self.invalidated.contains(&k) || self.expired(&v) {
                                 continue;
                             }
                             merged.entry(k).or_insert(v);
@@ -358,6 +447,7 @@ mod tests {
                     threads: 8,
                     gflops: 3.5,
                     source: "trial".to_string(),
+                    tuned_at: 1_700_000_000,
                 },
             ),
             (
@@ -370,6 +460,7 @@ mod tests {
                     threads: 4,
                     gflops: 2.25,
                     source: "model".to_string(),
+                    tuned_at: 1_700_000_001,
                 },
             ),
             (
@@ -382,6 +473,7 @@ mod tests {
                     threads: 1,
                     gflops: 0.5,
                     source: "trial".to_string(),
+                    tuned_at: 1_700_000_002,
                 },
             ),
         ]
@@ -553,5 +645,70 @@ mod tests {
         c.insert("00aa".to_string(), entries[0].1.clone());
         c.save().unwrap();
         assert_eq!(TuningCache::load(&path).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn ttl_expires_old_entries_and_prunes_them_on_save() {
+        let dir = TempDir::new("tcache-ttl");
+        let path = dir.path().join("cache.json");
+        let now = now_epoch();
+        let old =
+            TunedConfig { tuned_at: now.saturating_sub(1_000), ..sample_entries()[0].1.clone() };
+        let fresh = TunedConfig { tuned_at: now, ..sample_entries()[2].1.clone() };
+        let mut writer = TuningCache::load(&path).unwrap();
+        writer.insert("old".to_string(), old.clone());
+        writer.insert("fresh".to_string(), fresh.clone());
+        writer.save().unwrap();
+
+        // Without an age limit both answer.
+        let mut ageless = TuningCache::load(&path).unwrap();
+        assert!(ageless.get("old").is_some());
+        assert!(ageless.get("fresh").is_some());
+
+        // Under a 100 s limit the 1000 s-old entry is absent (a miss, so
+        // the caller re-tunes) while the fresh one still hits.
+        let mut aged = TuningCache::load(&path).unwrap().with_max_age(Duration::from_secs(100));
+        assert_eq!(aged.max_age(), Some(Duration::from_secs(100)));
+        assert!(aged.get("old").is_none(), "expired entry must look up as absent");
+        assert!(aged.get("fresh").is_some());
+        assert_eq!((aged.hits, aged.misses), (1, 1));
+
+        // Saving prunes the expired entry from the file — including the
+        // on-disk copy the merge would otherwise resurrect.
+        aged.save().unwrap();
+        let mut back = TuningCache::load(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        assert!(back.get("old").is_none());
+        assert!(back.get("fresh").is_some());
+
+        // A re-tune after the expiry re-inserts under the same key and
+        // persists: decay yields a fresh decision, not a dead key.
+        let renewed = TunedConfig { tuned_at: now_epoch(), ..old.clone() };
+        aged.insert("old".to_string(), renewed.clone());
+        aged.save().unwrap();
+        assert_eq!(TuningCache::load(&path).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn ttl_treats_stampless_entries_as_infinitely_old() {
+        let mut c = TuningCache::in_memory().with_max_age(Duration::from_secs(3600));
+        let stampless = TunedConfig { tuned_at: 0, ..sample_entries()[0].1.clone() };
+        c.insert("k".to_string(), stampless);
+        assert!(c.get("k").is_none(), "no stamp, no trust under a TTL");
+        // Without a TTL the same entry lives forever (the pre-decay
+        // behavior every existing cache file relies on).
+        let mut c = TuningCache::in_memory();
+        c.insert("k".to_string(), TunedConfig { tuned_at: 0, ..sample_entries()[0].1.clone() });
+        assert!(c.get("k").is_some());
+    }
+
+    #[test]
+    fn tuned_at_is_provenance_not_identity() {
+        let a = sample_entries()[0].1.clone();
+        let b = TunedConfig { tuned_at: a.tuned_at + 5, ..a.clone() };
+        assert_eq!(a, b, "equality must ignore the stamp");
+        // …but the stamp round-trips through the JSON form.
+        let back = TunedConfig::from_json(&b.to_json()).unwrap();
+        assert_eq!(back.tuned_at, b.tuned_at);
     }
 }

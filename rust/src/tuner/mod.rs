@@ -77,7 +77,7 @@ pub mod exec;
 pub mod space;
 pub mod trial;
 
-pub use cache::{TunedConfig, TuningCache};
+pub use cache::{now_epoch, TunedConfig, TuningCache};
 pub use cost::CostModel;
 pub use exec::{prepare, prepare_owned, prepare_owned_with, prepare_with, PermutedOp, Prepared};
 pub use space::{Candidate, Format, Ordering, SearchSpace, SpaceConfig};
@@ -334,6 +334,7 @@ impl Tuner {
                 threads: best.candidate.threads,
                 gflops: best.gflops,
                 source: "trial".to_string(),
+                tuned_at: cache::now_epoch(),
             }
         } else {
             let ranked = CostModel::new().rank_for(a, &space.candidates, workload);
@@ -346,6 +347,7 @@ impl Tuner {
                 threads: cand.threads,
                 gflops: workload.flops(a.nnz()) / secs.max(1e-12) / 1e9,
                 source: "model".to_string(),
+                tuned_at: cache::now_epoch(),
             }
         };
         if self.config.verbose {

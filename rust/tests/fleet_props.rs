@@ -1,0 +1,252 @@
+//! Integration tests for the multi-tenant fleet: budget-forced LRU
+//! eviction with correct answers after re-materialization, background
+//! drift re-tuning with hot swaps invisible to concurrent clients, and
+//! arrival-rate-adaptive batch width.
+
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use phi_spmv::fleet::{BatchConfig, Fleet, FleetConfig, FleetEvent, RetuneConfig};
+use phi_spmv::kernels::Workload;
+use phi_spmv::sparse::gen::stencil::stencil_2d;
+use phi_spmv::sparse::gen::{random_vector, randomize_values};
+use phi_spmv::sparse::Csr;
+use phi_spmv::tuner::Tuner;
+
+fn matrix(seed: u64, n: usize) -> Arc<Csr> {
+    let mut a = stencil_2d(n, n);
+    randomize_values(&mut a, seed);
+    Arc::new(a)
+}
+
+fn assert_close(got: &[f64], want: &[f64], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}");
+    for (i, (u, v)) in got.iter().zip(want).enumerate() {
+        assert!((u - v).abs() < 1e-9 * (1.0 + v.abs()), "{tag}: idx {i}: {u} vs {v}");
+    }
+}
+
+/// The acceptance scenario in one piece: ≥ 8 registered matrices under a
+/// budget that forces eviction, every answer correct across
+/// evict/re-materialize cycles, and a drift-injected entry re-tuned and
+/// hot-swapped *by the background maintenance thread* while concurrent
+/// clients observe only natural-order-correct results.
+#[test]
+fn fleet_serves_eight_matrices_under_eviction_and_survives_a_hot_swap() {
+    // Distinct sizes → distinct fingerprints → one tuned decision pair
+    // per matrix.
+    let mats: Vec<(String, Arc<Csr>)> =
+        (0..8).map(|i| (format!("m{i}"), matrix(40 + i as u64, 20 + i))).collect();
+    let total_csr: usize = mats.iter().map(|(_, a)| a.storage_bytes()).sum();
+    let budget = total_csr / 2;
+    let config = FleetConfig {
+        memory_budget_bytes: budget,
+        max_batch: 16,
+        max_wait: Duration::from_millis(2),
+        retune: RetuneConfig {
+            enabled: true,
+            interval: Duration::from_millis(25),
+            ..RetuneConfig::default()
+        },
+        // Width adaptation is exercised by its own test; freeze it here
+        // so the drift assertions race nothing.
+        batch: BatchConfig { min_samples: usize::MAX, ..BatchConfig::default() },
+        ..FleetConfig::default()
+    };
+    let fleet = Fleet::new(config, Tuner::quick());
+    for (id, a) in &mats {
+        fleet.register(id, a.clone()).unwrap();
+    }
+
+    // The budget must actually have bitten, and the warm set must fit it.
+    let early = fleet.stats();
+    assert!(early.evictions >= 2, "a half-size budget must evict (got {})", early.evictions);
+    assert!(fleet.storage_bytes() <= budget);
+
+    // Every entry answers correctly — the evicted ones re-materialize
+    // from their kept decisions without a re-search.
+    let (_, misses_before) = fleet.tuner_counters();
+    for (s, (id, a)) in mats.iter().enumerate() {
+        let x = random_vector(a.ncols, 500 + s as u64);
+        let want = Csr::spmv(a, &x);
+        let resp = fleet.call(id, x).unwrap();
+        assert_close(&resp.y, &want, id);
+    }
+    let (_, misses_after) = fleet.tuner_counters();
+    assert_eq!(misses_after, misses_before, "re-materialization must never re-search");
+    let stats = fleet.stats();
+    assert!(stats.rematerializations >= 2, "cold entries must have come back on demand");
+
+    // Drift injection: inflate the recorded GFlop/s of one entry's
+    // decisions by 10^6 — every future window now contradicts them.
+    let hot = "m3";
+    let hot_a = mats.iter().find(|(id, _)| id == hot).unwrap().1.clone();
+    fleet.skew_recorded_gflops(hot, Workload::Spmv, 1e6).unwrap();
+    fleet.skew_recorded_gflops(hot, Workload::Spmm { k: 16 }, 1e6).unwrap();
+
+    // Concurrent clients across several entries — including the one the
+    // background thread will hot-swap under them — check every response
+    // against the serial oracle.
+    let wrong = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for (t, (id, a)) in mats.iter().enumerate().take(4) {
+            let fleet = &fleet;
+            let wrong = &wrong;
+            let calls = if id == hot { 120usize } else { 40 };
+            scope.spawn(move || {
+                for s in 0..calls {
+                    let x = random_vector(a.ncols, 9_000 + (t * 1_000 + s) as u64);
+                    let want = Csr::spmv(a, &x);
+                    let resp = fleet.call(id, x).unwrap();
+                    for (u, v) in resp.y.iter().zip(&want) {
+                        if (u - v).abs() >= 1e-9 * (1.0 + v.abs()) {
+                            wrong.fetch_add(1, AtomicOrdering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(wrong.load(AtomicOrdering::Relaxed), 0, "no client may ever see a wrong answer");
+
+    // The background thread must confirm the drift and hot-swap a fresh
+    // decision in; keep feeding the window evidence until it does.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while fleet.stats().retunes == 0 && Instant::now() < deadline {
+        for s in 0..5u64 {
+            let x = random_vector(hot_a.ncols, 77_000 + s);
+            let want = Csr::spmv(&hot_a, &x);
+            let resp = fleet.call(hot, x).unwrap();
+            assert_close(&resp.y, &want, "hot entry during drift window");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let stats = fleet.stats();
+    assert!(stats.retunes >= 1, "background thread must re-tune the drift-injected entry");
+    let events = fleet.drain_events();
+    let retuned: Vec<_> = events
+        .iter()
+        .filter(|e| matches!(e, FleetEvent::Retuned { id, .. } if id == hot))
+        .collect();
+    assert!(!retuned.is_empty(), "a Retuned event must name the injected entry");
+
+    // And the entry still answers correctly after the swap.
+    let x = random_vector(hot_a.ncols, 123_456);
+    let want = Csr::spmv(&hot_a, &x);
+    let resp = fleet.call(hot, x).unwrap();
+    assert_close(&resp.y, &want, "hot entry after the swap");
+
+    let final_stats = fleet.shutdown();
+    assert_eq!(final_stats.entries.len(), 8);
+    // Fleet aggregates are sums of the per-entry path counters.
+    let flops_sum: f64 =
+        final_stats.entries.iter().map(|e| e.spmv.flops + e.spmm.flops).sum();
+    assert_eq!(final_stats.flops(), flops_sum);
+    assert!(final_stats.served() > 0);
+}
+
+#[test]
+fn adaptive_width_walks_the_ladder_with_the_offered_load() {
+    let a = matrix(7, 28);
+    let config = FleetConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(4),
+        // Manual maintenance only: the test decides when adaptation runs.
+        retune: RetuneConfig { enabled: false, ..RetuneConfig::default() },
+        batch: BatchConfig { ladder: vec![1, 4, 8, 16], min_samples: 8, hysteresis: 1.25 },
+        ..FleetConfig::default()
+    };
+    let fleet = Fleet::new(config, Tuner::quick());
+    fleet.register("m", a.clone()).unwrap();
+    assert_eq!(fleet.current_max_batch("m"), Some(4));
+
+    // Flood: back-to-back submissions drive the arrival EMA to a rate
+    // whose per-window expectation fills the top rung. Adapt *while the
+    // stream is hot* — the rate estimate is bounded by the time since
+    // the last arrival, so draining first would read as idleness.
+    let rxs: Vec<_> = (0..200)
+        .map(|s| fleet.submit("m", random_vector(a.ncols, 3_000 + s as u64)).unwrap())
+        .collect();
+    fleet.maintain_now();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    assert_eq!(fleet.current_max_batch("m"), Some(16), "flood must upshift to the top rung");
+    let (_, spmm_decision) = fleet.decisions("m").unwrap();
+    assert_eq!(
+        spmm_decision.workload,
+        Workload::Spmm { k: 16 },
+        "the batch path must serve a decision tuned at the new width"
+    );
+    let swaps = fleet.path_swaps("m").unwrap();
+    assert!(swaps.1 >= 1, "upshift must hot-swap the SpMM path");
+    let events = fleet.drain_events();
+    assert!(
+        events.iter().any(|e| matches!(
+            e,
+            FleetEvent::WidthChanged { id, to: 16, .. } if id == "m"
+        )),
+        "a WidthChanged event must record the move"
+    );
+
+    // Trickle: slow sequential traffic pulls the estimate down and the
+    // width follows — through the hysteresis, all the way to 1.
+    for s in 0..12u64 {
+        let x = random_vector(a.ncols, 5_000 + s);
+        let want = Csr::spmv(&a, &x);
+        let resp = fleet.call("m", x).unwrap();
+        assert_close(&resp.y, &want, "trickle");
+        std::thread::sleep(Duration::from_millis(15));
+    }
+    fleet.maintain_now();
+    assert_eq!(fleet.current_max_batch("m"), Some(1), "near-idle load must downshift");
+
+    // Correctness is untouched by the walking width.
+    let x = random_vector(a.ncols, 6_000);
+    let want = Csr::spmv(&a, &x);
+    let resp = fleet.call("m", x).unwrap();
+    assert_close(&resp.y, &want, "after downshift");
+    fleet.shutdown();
+}
+
+#[test]
+fn adapted_width_survives_eviction_and_rematerialization() {
+    let a = matrix(8, 24);
+    let b = matrix(9, 26);
+    let budget = a.storage_bytes() + b.storage_bytes();
+    let config = FleetConfig {
+        // Budget fits roughly one entry once payload overheads land, so
+        // registering "b" evicts "a".
+        memory_budget_bytes: budget / 2,
+        max_batch: 4,
+        retune: RetuneConfig { enabled: false, ..RetuneConfig::default() },
+        batch: BatchConfig { ladder: vec![1, 4, 8, 16], min_samples: 8, hysteresis: 1.25 },
+        ..FleetConfig::default()
+    };
+    let fleet = Fleet::new(config, Tuner::quick());
+    fleet.register("a", a.clone()).unwrap();
+
+    // Upshift "a" (adapting mid-stream, before idleness caps the rate
+    // estimate), then force it cold by registering "b".
+    let rxs: Vec<_> = (0..100)
+        .map(|s| fleet.submit("a", random_vector(a.ncols, 4_000 + s as u64)).unwrap())
+        .collect();
+    fleet.maintain_now();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    assert_eq!(fleet.current_max_batch("a"), Some(16));
+    fleet.register("b", b.clone()).unwrap();
+    assert_eq!(fleet.is_warm("a"), Some(false), "registering b must evict the LRU entry");
+    // The cold entry remembers its adapted width…
+    assert_eq!(fleet.current_max_batch("a"), Some(16));
+
+    // …and serves with it after re-materializing.
+    let x = random_vector(a.ncols, 4_242);
+    let want = Csr::spmv(&a, &x);
+    let resp = fleet.call("a", x).unwrap();
+    assert_close(&resp.y, &want, "rematerialized");
+    assert_eq!(fleet.current_max_batch("a"), Some(16));
+    fleet.shutdown();
+}

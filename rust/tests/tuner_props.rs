@@ -252,6 +252,7 @@ fn tuning_cache_roundtrips_deterministically_through_json() {
                         threads: 1 + rng.usize_below(64),
                         gflops: (rng.usize_below(10_000) as f64) / 64.0,
                         source: if rng.bool(0.5) { "trial".into() } else { "model".into() },
+                        tuned_at: rng.next_u64() % 2_000_000_000,
                     },
                 );
             }
