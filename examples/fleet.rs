@@ -23,11 +23,15 @@ use std::time::{Duration, Instant};
 
 use phi_spmv::fleet::{BatchConfig, Fleet, FleetConfig, RetuneConfig};
 use phi_spmv::kernels::Workload;
+use phi_spmv::sched::WorkerPool;
 use phi_spmv::sparse::gen::banded::{banded_runs, BandedSpec};
 use phi_spmv::sparse::gen::powerlaw::{powerlaw, PowerLawSpec};
 use phi_spmv::sparse::gen::stencil::stencil_2d;
 use phi_spmv::sparse::gen::{random_vector, randomize_values, Rng};
 use phi_spmv::sparse::Csr;
+use phi_spmv::telemetry::{
+    names, prometheus_text, validate_prometheus, Telemetry, TelemetrySnapshot,
+};
 use phi_spmv::tuner::{Tuner, TunerConfig, TuningCache};
 use phi_spmv::util::cli::Args;
 
@@ -97,6 +101,10 @@ fn main() -> anyhow::Result<()> {
         TunerConfig::quick(),
         TuningCache::in_memory().with_max_age(Duration::from_secs(24 * 3600)),
     );
+    // One telemetry instance shared by every entry's engine, the tuner,
+    // and the fleet's own event journal — the closing report and the
+    // exported snapshot cover the whole fleet.
+    let telemetry = Telemetry::new();
     let fleet = Fleet::new(
         FleetConfig {
             memory_budget_bytes: budget,
@@ -107,6 +115,7 @@ fn main() -> anyhow::Result<()> {
                 ..RetuneConfig::default()
             },
             batch: BatchConfig { min_samples: 12, ..BatchConfig::default() },
+            telemetry: telemetry.clone(),
             ..FleetConfig::default()
         },
         tuner,
@@ -213,6 +222,58 @@ fn main() -> anyhow::Result<()> {
     );
     anyhow::ensure!(stats.evictions > 0, "the budget was sized to force evictions");
     anyhow::ensure!(stats.retunes > 0, "the injected drift must have been re-tuned");
+
+    // Closing telemetry report: latency attribution across every entry,
+    // the shared pool's utilization, and the event journal's accounting.
+    println!("— telemetry —");
+    let lat = telemetry.metrics.histogram(names::REQUEST_LATENCY);
+    let queue_s = telemetry.metrics.histogram(names::PHASE_QUEUE).sum_s();
+    let barrier_s = telemetry.metrics.histogram(names::PHASE_BARRIER).sum_s();
+    let kernel_s = telemetry.metrics.histogram(names::PHASE_KERNEL).sum_s();
+    let attributed = (queue_s + barrier_s + kernel_s).max(1e-12);
+    println!(
+        "requests {} | latency p50 {:.2} ms  p99 {:.2} ms | phases: queue {:.1}%  barrier \
+         {:.1}%  kernel {:.1}%",
+        lat.count(),
+        lat.quantile(0.50) * 1e3,
+        lat.quantile(0.99) * 1e3,
+        100.0 * queue_s / attributed,
+        100.0 * barrier_s / attributed,
+        100.0 * kernel_s / attributed,
+    );
+    let probe = WorkerPool::global().probe();
+    println!(
+        "pool: {} workers over {} generations | utilization {:.1}% | imbalance {:.2}",
+        probe.workers,
+        probe.generations,
+        100.0 * probe.utilization(),
+        probe.imbalance(),
+    );
+    let mut kinds = telemetry.journal.counts();
+    kinds.sort_by(|u, v| v.1.cmp(&u.1).then(u.0.cmp(v.0)));
+    let top: Vec<String> =
+        kinds.iter().take(6).map(|(kind, n)| format!("{kind} {n}")).collect();
+    println!(
+        "events: {} published, {} dropped (cap {}) | top kinds: {}",
+        telemetry.journal.published(),
+        telemetry.journal.dropped(),
+        telemetry.journal.capacity(),
+        top.join(", "),
+    );
+
+    // Export both forms and prove them well-formed before claiming OK.
+    let snap = TelemetrySnapshot::capture(&telemetry);
+    let back = TelemetrySnapshot::parse(&snap.to_pretty())?;
+    anyhow::ensure!(
+        back.json.to_string() == snap.json.to_string(),
+        "telemetry snapshot must round-trip through its own parser"
+    );
+    snap.write("TELEMETRY_fleet.json")?;
+    let prom = prometheus_text(&telemetry, Some(&probe));
+    let samples = validate_prometheus(&prom)?;
+    anyhow::ensure!(samples > 20, "fleet exposition suspiciously small: {samples} samples");
+    std::fs::write("TELEMETRY_fleet.prom", &prom)?;
+    println!("wrote TELEMETRY_fleet.json and TELEMETRY_fleet.prom ({samples} samples)");
     println!("fleet OK");
     Ok(())
 }

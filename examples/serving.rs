@@ -23,8 +23,10 @@ use std::time::Duration;
 
 use phi_spmv::coordinator::server::{percentile, PathSpec, ServerConfig, ServerStats, SpmvServer};
 use phi_spmv::kernels::Workload;
+use phi_spmv::sched::WorkerPool;
 use phi_spmv::sparse::gen::powerlaw::{powerlaw, PowerLawSpec};
 use phi_spmv::sparse::gen::{randomize_values, Rng};
+use phi_spmv::telemetry::{names, Telemetry, TelemetrySnapshot};
 use phi_spmv::tuner::{Tuner, TunerConfig, TuningCache};
 use phi_spmv::util::cli::Args;
 
@@ -104,6 +106,9 @@ fn main() -> anyhow::Result<()> {
         a.nnz()
     );
 
+    // One shared telemetry instance across all three runs, so the
+    // closing report attributes the whole example's latency.
+    let telemetry = Telemetry::new();
     let with_threads = PathSpec { threads, ..PathSpec::default() };
     run(
         "batched k≤16",
@@ -112,6 +117,7 @@ fn main() -> anyhow::Result<()> {
             max_batch: 16,
             max_wait: Duration::from_millis(2),
             spmv: with_threads.clone(),
+            telemetry: telemetry.clone(),
             ..ServerConfig::default()
         },
         requests,
@@ -124,6 +130,7 @@ fn main() -> anyhow::Result<()> {
             max_batch: 1,
             max_wait: Duration::ZERO,
             spmv: with_threads,
+            telemetry: telemetry.clone(),
             ..ServerConfig::default()
         },
         requests,
@@ -145,7 +152,10 @@ fn main() -> anyhow::Result<()> {
     let stats = run(
         "tuned pair",
         &a,
-        ServerConfig::tuned_pair(&spmv_decision, &spmm_decision),
+        ServerConfig {
+            telemetry: telemetry.clone(),
+            ..ServerConfig::tuned_pair(&spmv_decision, &spmm_decision)
+        },
         requests,
         rate,
     )?;
@@ -193,6 +203,56 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
+    // Closing telemetry report: the histograms the engines recorded into
+    // the shared instance explain where every request's latency went.
+    println!("— telemetry (all three runs) —");
+    let lat = telemetry.metrics.histogram(names::REQUEST_LATENCY);
+    println!(
+        "requests {} | batches {} | latency mean {:.2} ms  p50 {:.2}  p90 {:.2}  p99 {:.2}  \
+         p999 {:.2}",
+        telemetry.metrics.counter(names::REQUESTS_SERVED).get(),
+        telemetry.metrics.counter(names::BATCHES_EXECUTED).get(),
+        lat.mean_s() * 1e3,
+        lat.quantile(0.50) * 1e3,
+        lat.quantile(0.90) * 1e3,
+        lat.quantile(0.99) * 1e3,
+        lat.quantile(0.999) * 1e3,
+    );
+    let queue_s = telemetry.metrics.histogram(names::PHASE_QUEUE).sum_s();
+    let barrier_s = telemetry.metrics.histogram(names::PHASE_BARRIER).sum_s();
+    let kernel_s = telemetry.metrics.histogram(names::PHASE_KERNEL).sum_s();
+    let attributed = queue_s + barrier_s + kernel_s;
+    let wall = lat.sum_s();
+    println!(
+        "phase attribution: queue {:.1}%  barrier {:.1}%  kernel {:.1}% of {attributed:.3} s \
+         ({:.1}% of the {wall:.3} s wall latency)",
+        100.0 * queue_s / attributed.max(1e-12),
+        100.0 * barrier_s / attributed.max(1e-12),
+        100.0 * kernel_s / attributed.max(1e-12),
+        100.0 * attributed / wall.max(1e-12),
+    );
+    anyhow::ensure!(
+        (wall - attributed).abs() <= (0.10 * wall).max(5e-3),
+        "phase spans must sum to the wall latency: attributed {attributed:.3} s vs {wall:.3} s"
+    );
+    let probe = WorkerPool::global().probe();
+    println!(
+        "pool: {} workers over {} generations | utilization {:.1}% | imbalance {:.2} | \
+         caller busy {:.3} s",
+        probe.workers,
+        probe.generations,
+        100.0 * probe.utilization(),
+        probe.imbalance(),
+        probe.caller_busy_s,
+    );
+    let snap = TelemetrySnapshot::capture(&telemetry);
+    let back = TelemetrySnapshot::parse(&snap.to_pretty())?;
+    anyhow::ensure!(
+        back.json.to_string() == snap.json.to_string(),
+        "telemetry snapshot must round-trip through its own parser"
+    );
+    snap.write("TELEMETRY_serving.json")?;
+    println!("wrote TELEMETRY_serving.json");
     println!("serving OK");
     Ok(())
 }

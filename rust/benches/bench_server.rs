@@ -23,6 +23,7 @@ use phi_spmv::coordinator::server::{percentile, PathSpec, ServerConfig, SpmvServ
 use phi_spmv::sparse::gen::powerlaw::{powerlaw, PowerLawSpec};
 use phi_spmv::sparse::gen::{random_vector, randomize_values};
 use phi_spmv::sparse::Csr;
+use phi_spmv::telemetry::{Telemetry, TelemetrySnapshot};
 use phi_spmv::util::cli::Args;
 use phi_spmv::util::json::Json;
 
@@ -97,6 +98,10 @@ fn main() {
         "backend", "phase", "p50 ms", "p99 ms", "GFlop/s", "mean batch"
     );
 
+    // One telemetry instance across all four phases: the bench's snapshot
+    // artifact records the whole run's latency histograms and counters
+    // next to BENCH_server.json.
+    let telemetry = Telemetry::new();
     let mut modes = Json::obj();
     let mut results = Vec::new();
     for (label, pooled) in [("pooled", true), ("spawn_per_call", false)] {
@@ -108,6 +113,7 @@ fn main() {
                 max_wait: Duration::ZERO,
                 spmv: spmv.clone(),
                 pooled,
+                telemetry: telemetry.clone(),
                 ..ServerConfig::default()
             },
             requests,
@@ -120,6 +126,7 @@ fn main() {
                 max_wait: Duration::from_millis(2),
                 spmv,
                 pooled,
+                telemetry: telemetry.clone(),
                 ..ServerConfig::default()
             },
             requests,
@@ -159,4 +166,9 @@ fn main() {
     let path = "BENCH_server.json";
     std::fs::write(path, report.to_pretty()).expect("writing BENCH_server.json");
     println!("wrote {path}");
+
+    let snap = TelemetrySnapshot::capture(&telemetry);
+    TelemetrySnapshot::parse(&snap.to_pretty()).expect("snapshot must round-trip");
+    snap.write("TELEMETRY_server.json").expect("writing TELEMETRY_server.json");
+    println!("wrote TELEMETRY_server.json");
 }

@@ -31,6 +31,8 @@ use std::time::{Duration, Instant};
 use crate::kernels::op::{ExecCtx, SpmvOp, Workload};
 use crate::sched::Policy;
 use crate::sparse::Csr;
+use crate::telemetry::metrics::Counter;
+use crate::telemetry::{names, Phases, ServeTimers, Telemetry};
 use crate::tuner::{Format, Ordering, TunedConfig};
 
 use super::server::ServerConfig;
@@ -98,6 +100,20 @@ pub struct PathStats {
     pub flops: f64,
     /// Busy time in this path's kernel.
     pub compute_s: f64,
+    /// Request-seconds spent in the queue phase (enqueue → batch-drain),
+    /// summed over every request this path served. Divide by `served`
+    /// for the mean per-request queue time.
+    pub queue_s: f64,
+    /// Request-seconds in the barrier phase (batch-drain → kernel-start:
+    /// panel packing + path-lock handshake). Every request of a k-wide
+    /// batch pays the batch's full barrier, so this accumulates
+    /// `k × barrier` per batch.
+    pub barrier_s: f64,
+    /// Request-seconds in the kernel phase (kernel-start → kernel-end,
+    /// including the pool wakeup). Accumulates `k × kernel` per batch —
+    /// unlike [`PathStats::compute_s`], which counts each batch's kernel
+    /// time once (wall busy time, the GFlop/s denominator).
+    pub kernel_s: f64,
     /// Storage format the path actually executed in.
     pub format: String,
     /// Ordering the path's payload is stored under (`"rcm"` means the
@@ -128,6 +144,9 @@ impl PathStats {
         self.served += other.served;
         self.flops += other.flops;
         self.compute_s += other.compute_s;
+        self.queue_s += other.queue_s;
+        self.barrier_s += other.barrier_s;
+        self.kernel_s += other.kernel_s;
         if !other.format.is_empty() {
             self.format = other.format.clone();
             self.ordering = other.ordering.clone();
@@ -185,6 +204,7 @@ struct PathCounters {
     served: usize,
     flops: f64,
     compute_s: f64,
+    phases: Phases,
     swaps: usize,
     window: PathWindow,
 }
@@ -233,6 +253,24 @@ impl Path {
     /// SpMV otherwise, under the path's schedule. Updates the cumulative
     /// and windowed counters. `x`/`y` are row-major `ncols·k` / `nrows·k`.
     pub fn execute(&self, x: &[f64], y: &mut [f64], k: usize) {
+        self.execute_spanned(x, y, k, 0.0, Instant::now());
+    }
+
+    /// [`Path::execute`] with phase attribution: `drained` is the instant
+    /// the batch was drained from the queue (the barrier phase runs from
+    /// there to kernel start) and `queue_s_total` the summed per-request
+    /// queue time of the batch. Returns the batch-level spans — `queue_s`
+    /// echoes `queue_s_total`; `barrier_s`/`kernel_s` are the batch's
+    /// shared scalars, which every rider of the batch pays in full (the
+    /// cumulative counters therefore accumulate `k ×` each).
+    pub fn execute_spanned(
+        &self,
+        x: &[f64],
+        y: &mut [f64],
+        k: usize,
+        queue_s_total: f64,
+        drained: Instant,
+    ) -> Phases {
         let state = self.state.read().unwrap();
         let ctx = if self.pooled {
             ExecCtx::pooled(state.spec.threads, state.spec.policy)
@@ -240,6 +278,7 @@ impl Path {
             ExecCtx::spawning(state.spec.threads, state.spec.policy)
         };
         let t0 = Instant::now();
+        let barrier = t0.saturating_duration_since(drained).as_secs_f64();
         if k > 1 {
             state.op.spmm_into(x, y, k, &ctx);
         } else {
@@ -253,10 +292,15 @@ impl Path {
         c.served += k;
         c.flops += flops;
         c.compute_s += compute;
+        c.phases.queue_s += queue_s_total;
+        c.phases.barrier_s += barrier * k as f64;
+        c.phases.kernel_s += compute * k as f64;
         c.window.batches += 1;
         c.window.served += k;
         c.window.flops += flops;
         c.window.compute_s += compute;
+        drop(c);
+        Phases { queue_s: queue_s_total, barrier_s: barrier, kernel_s: compute }
     }
 
     /// Replaces the serving spec and payload without dropping in-flight
@@ -295,6 +339,9 @@ impl Path {
             served: c.served,
             flops: c.flops,
             compute_s: c.compute_s,
+            queue_s: c.phases.queue_s,
+            barrier_s: c.phases.barrier_s,
+            kernel_s: c.phases.kernel_s,
             format,
             ordering,
             workload,
@@ -335,8 +382,13 @@ struct Request {
 pub struct Response {
     /// The result vector `Ax`.
     pub y: Vec<f64>,
-    /// Queue + batch + compute latency for this request.
+    /// End-to-end latency of this request: enqueue → kernel-end. By
+    /// construction `phases.total_s()` accounts for (almost) all of it —
+    /// the phase spans partition this same interval.
     pub latency: Duration,
+    /// Where that latency went: this request's queue time plus the
+    /// barrier and kernel spans of the batch that served it.
+    pub phases: Phases,
     /// Number of requests in the batch that served this one.
     pub batch_size: usize,
 }
@@ -372,6 +424,27 @@ pub struct Engine {
     spmv: Arc<Path>,
     spmm: Arc<Path>,
     max_batch: Arc<AtomicUsize>,
+    telemetry: Arc<Telemetry>,
+}
+
+/// The engine loop's cached telemetry handles: histograms for latency /
+/// phases / batch width plus the served/executed counters, all resolved
+/// once at engine start so the per-request cost is a handful of atomic
+/// increments.
+struct EngineTelemetry {
+    timers: ServeTimers,
+    requests: Arc<Counter>,
+    batches: Arc<Counter>,
+}
+
+impl EngineTelemetry {
+    fn new(t: &Telemetry) -> EngineTelemetry {
+        EngineTelemetry {
+            timers: ServeTimers::new(t),
+            requests: t.metrics.counter(names::REQUESTS_SERVED),
+            batches: t.metrics.counter(names::BATCHES_EXECUTED),
+        }
+    }
 }
 
 impl Engine {
@@ -396,13 +469,23 @@ impl Engine {
         let spmv = Arc::new(Path::new(spmv_spec, spmv_op, nnz, config.pooled));
         let spmm = Arc::new(Path::new(batch_spec, spmm_op, nnz, config.pooled));
         let max_batch = Arc::new(AtomicUsize::new(config.max_batch.max(1)));
+        let telemetry = config.telemetry.clone();
         let (tx, rx) = mpsc::channel::<Msg>();
         let worker = {
             let (a, spmv, spmm) = (a.clone(), spmv.clone(), spmm.clone());
             let (max_batch, max_wait) = (max_batch.clone(), config.max_wait);
-            std::thread::spawn(move || engine_loop(&a, &spmv, &spmm, &max_batch, max_wait, &rx))
+            let telem = EngineTelemetry::new(&telemetry);
+            std::thread::spawn(move || {
+                engine_loop(&a, &spmv, &spmm, &max_batch, max_wait, &rx, &telem)
+            })
         };
-        Engine { client: SpmvClient { tx }, worker: Some(worker), spmv, spmm, max_batch }
+        Engine { client: SpmvClient { tx }, worker: Some(worker), spmv, spmm, max_batch, telemetry }
+    }
+
+    /// The telemetry instance this engine records into (the one its
+    /// [`ServerConfig`] carried) — exporters snapshot from here.
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
     }
 
     /// A client handle (cloneable across threads).
@@ -467,6 +550,7 @@ fn engine_loop(
     max_batch: &AtomicUsize,
     max_wait: Duration,
     rx: &mpsc::Receiver<Msg>,
+    telem: &EngineTelemetry,
 ) {
     loop {
         let first = match rx.recv() {
@@ -494,6 +578,14 @@ fn engine_loop(
             }
         }
 
+        // The batch is drained: everything before this instant is queue
+        // time, everything from here to kernel start is barrier time.
+        let drained = Instant::now();
+        let queue_s: Vec<f64> = batch
+            .iter()
+            .map(|req| drained.saturating_duration_since(req.enqueued).as_secs_f64())
+            .collect();
+
         // Pack the batch into a row-major X (ncols × k).
         let k = batch.len();
         let mut x = vec![0.0f64; a.ncols * k];
@@ -505,15 +597,22 @@ fn engine_loop(
         }
         let mut y = vec![0.0f64; a.nrows * k];
         let path = if k > 1 { spmm } else { spmv };
-        path.execute(&x, &mut y, k);
+        let spans = path.execute_spanned(&x, &mut y, k, queue_s.iter().sum(), drained);
+        let done = Instant::now();
+        telem.batches.inc();
+        telem.timers.batch_width.record(k as f64);
 
         for (u, req) in batch.into_iter().enumerate() {
+            let phases = Phases {
+                queue_s: queue_s[u],
+                barrier_s: spans.barrier_s,
+                kernel_s: spans.kernel_s,
+            };
+            let latency = done.saturating_duration_since(req.enqueued);
+            telem.timers.record(latency, &phases);
+            telem.requests.inc();
             let yi: Vec<f64> = (0..a.nrows).map(|i| y[i * k + u]).collect();
-            let _ = req.reply.send(Response {
-                y: yi,
-                latency: req.enqueued.elapsed(),
-                batch_size: k,
-            });
+            let _ = req.reply.send(Response { y: yi, latency, phases, batch_size: k });
         }
         if stopping {
             return;

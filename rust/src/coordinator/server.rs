@@ -30,6 +30,7 @@ use std::time::Duration;
 
 use crate::kernels::op::Workload;
 use crate::sparse::Csr;
+use crate::telemetry::Telemetry;
 use crate::tuner::TunedConfig;
 
 pub use super::path::{Engine, Path, PathSpec, PathStats, PathWindow, Response, SpmvClient};
@@ -51,6 +52,12 @@ pub struct ServerConfig {
     /// spawning threads per batch (the ablation baseline `bench_server`
     /// measures against).
     pub pooled: bool,
+    /// Telemetry instance the engine records request latency, phase
+    /// spans, and serving counters into. Defaults to a *fresh* instance
+    /// per server so concurrent servers (and tests) never share
+    /// histograms; pass a shared instance (e.g.
+    /// [`Telemetry::global`]) to aggregate across components.
+    pub telemetry: Arc<Telemetry>,
 }
 
 impl Default for ServerConfig {
@@ -61,6 +68,7 @@ impl Default for ServerConfig {
             spmv: PathSpec::default(),
             spmm: None,
             pooled: true,
+            telemetry: Telemetry::new(),
         }
     }
 }
@@ -179,6 +187,13 @@ impl SpmvServer {
     /// A client handle (cloneable across threads).
     pub fn client(&self) -> SpmvClient {
         self.engine.as_ref().expect("server running").client()
+    }
+
+    /// The telemetry instance this server records into — snapshot or
+    /// export it while serving, or after shutdown via a clone taken
+    /// before.
+    pub fn telemetry(&self) -> Arc<Telemetry> {
+        self.engine.as_ref().expect("server running").telemetry().clone()
     }
 
     /// Stops the server (after the queue drains) and returns stats.

@@ -29,11 +29,12 @@ use crate::coordinator::server::ServerConfig;
 use crate::kernels::op::SpmvOp;
 use crate::kernels::Workload;
 use crate::sparse::{Csr, MatrixStats};
+use crate::telemetry::{names, EventKind, Subscriber, Telemetry};
 use crate::tuner::exec::prepare_owned_with;
 use crate::tuner::{TunedConfig, Tuner};
 
 use super::batch::{expected_arrivals, pick_width, ArrivalTracker, BatchConfig};
-use super::retune::{drifted, RetuneConfig};
+use super::retune::{judge, RetuneConfig};
 
 /// Fleet-wide knobs.
 #[derive(Debug, Clone)]
@@ -56,6 +57,12 @@ pub struct FleetConfig {
     pub retune: RetuneConfig,
     /// Arrival-rate-adaptive batch-width knobs.
     pub batch: BatchConfig,
+    /// Telemetry instance the whole fleet records into: every entry's
+    /// engine (latency/phase histograms), the maintenance thread's
+    /// journal events, and — via [`Fleet::new`] attaching it to the
+    /// tuner — search/decision events. Defaults to a *fresh* instance
+    /// per fleet so concurrent fleets (and tests) stay isolated.
+    pub telemetry: Arc<Telemetry>,
 }
 
 impl Default for FleetConfig {
@@ -67,12 +74,19 @@ impl Default for FleetConfig {
             pooled: true,
             retune: RetuneConfig::default(),
             batch: BatchConfig::default(),
+            telemetry: Telemetry::new(),
         }
     }
 }
 
 /// Something observable happened to the fleet; drained with
 /// [`Fleet::drain_events`] for logs, examples and tests.
+///
+/// This is the compatibility view: the fleet's source of truth is the
+/// bounded [`crate::telemetry::EventJournal`] of [`EventKind`]s on its
+/// telemetry instance (richer evidence fields, tuner events included);
+/// `drain_events` projects the fleet-lifecycle subset back into this
+/// enum via [`FleetEvent::from_kind`].
 #[derive(Debug, Clone)]
 pub enum FleetEvent {
     /// A matrix was registered, tuned and warmed.
@@ -124,6 +138,46 @@ pub enum FleetEvent {
     },
 }
 
+impl FleetEvent {
+    /// Projects a journal event into the fleet-lifecycle view; `None`
+    /// for kinds this enum does not model (tuner events, drift
+    /// confirmations, width-ladder hot-swaps).
+    pub fn from_kind(kind: &EventKind) -> Option<FleetEvent> {
+        Some(match kind {
+            EventKind::Registered { id, bytes, spmv, spmm } => FleetEvent::Registered {
+                id: id.clone(),
+                bytes: *bytes,
+                spmv: spmv.clone(),
+                spmm: spmm.clone(),
+            },
+            EventKind::Evicted { id, bytes } => {
+                FleetEvent::Evicted { id: id.clone(), bytes: *bytes }
+            }
+            EventKind::Rematerialized { id, bytes } => {
+                FleetEvent::Rematerialized { id: id.clone(), bytes: *bytes }
+            }
+            EventKind::Retuned {
+                id,
+                workload,
+                measured_gflops,
+                promised_gflops,
+                to,
+                ..
+            } => FleetEvent::Retuned {
+                id: id.clone(),
+                workload: workload.clone(),
+                measured_gflops: *measured_gflops,
+                promised_gflops: *promised_gflops,
+                to: to.clone(),
+            },
+            EventKind::WidthChanged { id, from, to, .. } => {
+                FleetEvent::WidthChanged { id: id.clone(), from: *from, to: *to }
+            }
+            _ => return None,
+        })
+    }
+}
+
 impl std::fmt::Display for FleetEvent {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -158,6 +212,9 @@ pub struct EntryReport {
     pub warm: bool,
     /// Prepared payload bytes right now (0 when cold).
     pub storage_bytes: usize,
+    /// Drift-triggered re-tune + hot-swap cycles this entry absorbed
+    /// (across warm periods).
+    pub retunes: usize,
     /// Single-request path stats.
     pub spmv: PathStats,
     /// Fused-batch path stats.
@@ -181,6 +238,10 @@ pub struct FleetStats {
     pub retunes: usize,
     /// Adaptive batch-width moves.
     pub width_changes: usize,
+    /// Journal events evicted by drop-oldest before any reader saw the
+    /// full history (bounded-journal accounting; 0 means nothing was
+    /// lost).
+    pub events_dropped: u64,
 }
 
 impl FleetStats {
@@ -237,6 +298,8 @@ struct FleetEntry {
     /// Path stats accumulated over previous warm periods
     /// (spmv, spmm) — folded in at eviction so totals survive cycles.
     retired: Mutex<(PathStats, PathStats)>,
+    /// Re-tune + hot-swap cycles this entry absorbed.
+    retunes: AtomicUsize,
     /// LRU stamp from the fleet's logical clock.
     last_used: AtomicU64,
 }
@@ -247,7 +310,9 @@ struct FleetInner {
     entries: Mutex<BTreeMap<String, Arc<FleetEntry>>>,
     clock: AtomicU64,
     stop: AtomicBool,
-    events: Mutex<Vec<FleetEvent>>,
+    /// Cursor for [`Fleet::drain_events`] over the telemetry journal,
+    /// positioned at fleet creation.
+    drain_cursor: Mutex<Subscriber>,
     evictions: AtomicUsize,
     rematerializations: AtomicUsize,
     retunes: AtomicUsize,
@@ -268,15 +333,19 @@ impl Fleet {
     /// [`crate::tuner::TuningCache::with_max_age`] TTL for automatic
     /// decay). Spawns the background maintenance thread unless
     /// `config.retune.enabled` is off.
-    pub fn new(config: FleetConfig, tuner: Tuner) -> Fleet {
+    pub fn new(config: FleetConfig, mut tuner: Tuner) -> Fleet {
         let start_thread = config.retune.enabled;
+        // The tuner publishes its search/decision events to the fleet's
+        // journal — unless the caller already wired it elsewhere.
+        tuner.attach_telemetry(config.telemetry.clone());
+        let drain_cursor = Mutex::new(config.telemetry.journal.subscribe());
         let inner = Arc::new(FleetInner {
             config,
             tuner: Mutex::new(tuner),
             entries: Mutex::new(BTreeMap::new()),
             clock: AtomicU64::new(0),
             stop: AtomicBool::new(false),
-            events: Mutex::new(Vec::new()),
+            drain_cursor,
             evictions: AtomicUsize::new(0),
             rematerializations: AtomicUsize::new(0),
             retunes: AtomicUsize::new(0),
@@ -315,6 +384,7 @@ impl Fleet {
             state: Mutex::new(EntryState::Cold { spmv: spmv.clone(), spmm: spmm.clone(), k }),
             tracker: Mutex::new(ArrivalTracker::default()),
             retired: Mutex::new((PathStats::default(), PathStats::default())),
+            retunes: AtomicUsize::new(0),
             last_used: AtomicU64::new(0),
         });
         self.inner.touch(&entry);
@@ -333,7 +403,7 @@ impl Fleet {
             }
         }
         let (_, bytes) = self.inner.warm(&entry);
-        self.inner.push_event(FleetEvent::Registered {
+        self.inner.push_event(EventKind::Registered {
             id: id.to_string(),
             bytes,
             spmv: spmv.to_string(),
@@ -354,7 +424,7 @@ impl Fleet {
         let (rx, was_cold, bytes) = self.inner.submit_to(&entry, x);
         if was_cold {
             self.inner.rematerializations.fetch_add(1, AtomicOrdering::Relaxed);
-            self.inner.push_event(FleetEvent::Rematerialized { id: entry.id.clone(), bytes });
+            self.inner.push_event(EventKind::Rematerialized { id: entry.id.clone(), bytes });
             self.inner.enforce_budget(&entry.id);
         }
         rx
@@ -435,9 +505,23 @@ impl Fleet {
         }
     }
 
-    /// Takes every event recorded since the last drain, oldest first.
+    /// Takes every fleet-lifecycle event recorded since the last drain,
+    /// oldest first — the compatibility projection of the telemetry
+    /// journal (see [`FleetEvent::from_kind`]; richer kinds are in
+    /// [`Fleet::telemetry`]'s journal). Events evicted by the bounded
+    /// journal between drains are skipped; [`FleetStats::events_dropped`]
+    /// counts them.
     pub fn drain_events(&self) -> Vec<FleetEvent> {
-        std::mem::take(&mut *self.inner.events.lock().unwrap())
+        let mut cursor = self.inner.drain_cursor.lock().unwrap();
+        let (events, _missed) = cursor.poll(&self.inner.config.telemetry.journal);
+        events.iter().filter_map(|e| FleetEvent::from_kind(&e.kind)).collect()
+    }
+
+    /// The telemetry instance the fleet records into: engine latency and
+    /// phase histograms, fleet/tuner journal events, and the lifecycle
+    /// metric counters. Snapshot or export it at any point.
+    pub fn telemetry(&self) -> Arc<Telemetry> {
+        self.inner.config.telemetry.clone()
     }
 
     /// The shared tuner's cache counters: (hits, misses).
@@ -509,7 +593,14 @@ impl Fleet {
                     EntryState::Cold { .. } => (false, 0),
                 }
             };
-            reports.push(EntryReport { id: e.id.clone(), warm, storage_bytes, spmv, spmm });
+            reports.push(EntryReport {
+                id: e.id.clone(),
+                warm,
+                storage_bytes,
+                retunes: e.retunes.load(AtomicOrdering::Relaxed),
+                spmv,
+                spmm,
+            });
         }
         FleetStats {
             entries: reports,
@@ -517,6 +608,7 @@ impl Fleet {
             rematerializations: self.inner.rematerializations.load(AtomicOrdering::Relaxed),
             retunes: self.inner.retunes.load(AtomicOrdering::Relaxed),
             width_changes: self.inner.width_changes.load(AtomicOrdering::Relaxed),
+            events_dropped: self.inner.config.telemetry.journal.dropped(),
         }
     }
 
@@ -565,8 +657,22 @@ impl FleetInner {
         entry.last_used.store(stamp, AtomicOrdering::Relaxed);
     }
 
-    fn push_event(&self, event: FleetEvent) {
-        self.events.lock().unwrap().push(event);
+    /// Publishes to the fleet's journal and mirrors the lifecycle kinds
+    /// into their metric counters (so exporters see fleet activity even
+    /// after drop-oldest evicts the events themselves).
+    fn push_event(&self, kind: EventKind) {
+        let t = &self.config.telemetry;
+        let counter = match &kind {
+            EventKind::Evicted { .. } => Some(names::FLEET_EVICTIONS),
+            EventKind::Rematerialized { .. } => Some(names::FLEET_REMATERIALIZATIONS),
+            EventKind::Retuned { .. } => Some(names::FLEET_RETUNES),
+            EventKind::WidthChanged { .. } => Some(names::FLEET_WIDTH_CHANGES),
+            _ => None,
+        };
+        if let Some(name) = counter {
+            t.metrics.counter(name).inc();
+        }
+        t.publish(kind);
     }
 
     /// Ensures the entry behind the already-held state lock is warm.
@@ -583,6 +689,9 @@ impl FleetInner {
         config.max_batch = k.max(1);
         config.max_wait = self.config.max_wait;
         config.pooled = self.config.pooled;
+        // Every entry's engine records into the fleet's one instance, so
+        // the latency/phase histograms aggregate across the whole fleet.
+        config.telemetry = self.config.telemetry.clone();
         let engine = Engine::start(entry.a.clone(), config);
         let bytes = engine.storage_bytes();
         *state = EntryState::Warm(WarmEntry { engine, spmv: spmv_d, spmm: spmm_d });
@@ -684,7 +793,7 @@ impl FleetInner {
             };
             if let Some(bytes) = self.cool(&victim) {
                 self.evictions.fetch_add(1, AtomicOrdering::Relaxed);
-                self.push_event(FleetEvent::Evicted { id: victim.id.clone(), bytes });
+                self.push_event(EventKind::Evicted { id: victim.id.clone(), bytes });
             }
         }
     }
@@ -741,9 +850,22 @@ impl FleetInner {
             return;
         }
         let window = path.take_window();
-        if !drifted(decision, &window, &self.config.retune) {
+        let judgment = judge(decision, &window, &self.config.retune);
+        if !judgment.drifted {
             return;
         }
+        // Publish the confirmation — with the evidence it ran on — at the
+        // moment of judgment, not at install time: even if the re-tune
+        // fails or loses an ownership race below, the journal shows what
+        // contradicted the decision.
+        self.push_event(EventKind::DriftConfirmed {
+            id: entry.id.clone(),
+            workload: decision.workload.to_string(),
+            measured_gflops: judgment.measured_gflops,
+            promised_gflops: judgment.promised_gflops,
+            window_batches: judgment.window_batches,
+            window_mean_batch: judgment.window_mean_batch,
+        });
         let fresh = {
             let mut tuner = self.tuner.lock().unwrap();
             let key = tuner.key(&entry.id, &entry.a, decision.workload);
@@ -787,11 +909,14 @@ impl FleetInner {
         // one it replaced; the budget must hold across hot swaps too.
         self.enforce_budget(&entry.id);
         self.retunes.fetch_add(1, AtomicOrdering::Relaxed);
-        self.push_event(FleetEvent::Retuned {
+        entry.retunes.fetch_add(1, AtomicOrdering::Relaxed);
+        self.push_event(EventKind::Retuned {
             id: entry.id.clone(),
             workload: decision.workload.to_string(),
-            measured_gflops: window.gflops(),
-            promised_gflops: decision.gflops,
+            measured_gflops: judgment.measured_gflops,
+            promised_gflops: judgment.promised_gflops,
+            window_batches: judgment.window_batches,
+            window_mean_batch: judgment.window_mean_batch,
             to: fresh.to_string(),
         });
     }
@@ -831,6 +956,7 @@ impl FleetInner {
                 Arc::from(prepare_owned_with(&entry.a, d.format, d.ordering));
             op
         });
+        let mut swapped_to = None;
         {
             let mut state = entry.state.lock().unwrap();
             let EntryState::Warm(w) = &mut *state else { return };
@@ -841,6 +967,7 @@ impl FleetInner {
             }
             if let (Some(decision), Some(op)) = (fresh, prepared) {
                 w.engine.spmm_path().swap(PathSpec::from_decision(&decision), op);
+                swapped_to = Some((decision.workload.to_string(), decision.to_string()));
                 w.spmm = decision;
             }
             w.engine.set_max_batch(new_k);
@@ -848,11 +975,16 @@ impl FleetInner {
         // The rung's decision may have brought a larger payload format.
         self.enforce_budget(&entry.id);
         self.width_changes.fetch_add(1, AtomicOrdering::Relaxed);
-        self.push_event(FleetEvent::WidthChanged {
+        self.push_event(EventKind::WidthChanged {
             id: entry.id.clone(),
             from: current_k,
             to: new_k,
+            expected_arrivals: expected,
+            rate_samples: samples,
         });
+        if let Some((workload, to)) = swapped_to {
+            self.push_event(EventKind::HotSwap { id: entry.id.clone(), workload, to });
+        }
     }
 }
 
@@ -962,6 +1094,21 @@ mod tests {
         let sum: f64 =
             stats.entries.iter().map(|e| e.spmv.flops + e.spmm.flops).sum();
         assert_eq!(stats.flops(), sum);
+    }
+
+    #[test]
+    fn journal_backs_drain_events_and_counts() {
+        let fleet = Fleet::new(quiet_config(), Tuner::quick());
+        let a = matrix(6, 16);
+        fleet.register("j", a.clone()).unwrap();
+        let t = fleet.telemetry();
+        assert!(t.journal.published() >= 1);
+        assert!(t.journal.counts().iter().any(|(k, n)| *k == "registered" && *n == 1));
+        let events = fleet.drain_events();
+        assert!(matches!(events.first(), Some(FleetEvent::Registered { .. })));
+        assert!(fleet.drain_events().is_empty(), "drain must consume");
+        let stats = fleet.shutdown();
+        assert_eq!(stats.events_dropped, 0);
     }
 
     #[test]

@@ -61,24 +61,56 @@ impl Default for RetuneConfig {
     }
 }
 
-/// Whether `window` contradicts `decision` hard enough to re-tune.
-pub fn drifted(decision: &TunedConfig, window: &PathWindow, config: &RetuneConfig) -> bool {
+/// The evidence one drift judgment ran on — published verbatim to the
+/// telemetry journal when drift is confirmed, so a flapping re-tuner can
+/// be diagnosed from the event log alone.
+#[derive(Debug, Clone)]
+pub struct DriftJudgment {
+    /// Verdict: does the window contradict the decision hard enough to
+    /// re-tune?
+    pub drifted: bool,
+    /// GFlop/s the window measured.
+    pub measured_gflops: f64,
+    /// GFlop/s the decision had promised.
+    pub promised_gflops: f64,
+    /// Batches of evidence in the window.
+    pub window_batches: usize,
+    /// Mean requests per batch in the window.
+    pub window_mean_batch: f64,
+}
+
+/// Judges `window` against `decision`, returning the verdict *with* the
+/// evidence it was made on. [`drifted`] is the boolean shorthand.
+pub fn judge(decision: &TunedConfig, window: &PathWindow, config: &RetuneConfig) -> DriftJudgment {
+    let measured = window.gflops();
+    let mut judgment = DriftJudgment {
+        drifted: false,
+        measured_gflops: measured,
+        promised_gflops: decision.gflops,
+        window_batches: window.batches,
+        window_mean_batch: window.mean_batch(),
+    };
     if decision.source != "trial" || decision.gflops <= 0.0 {
-        return false;
+        return judgment;
     }
     if window.batches < config.min_window_batches.max(1) {
-        return false;
+        return judgment;
     }
-    let measured = window.gflops();
     if measured <= 0.0 {
-        return false;
+        return judgment;
     }
     if let Workload::Spmm { k } = decision.workload {
         if window.mean_batch() < k as f64 * config.min_width_fraction {
-            return false;
+            return judgment;
         }
     }
-    measured < decision.gflops * (1.0 - config.tolerance.clamp(0.0, 1.0))
+    judgment.drifted = measured < decision.gflops * (1.0 - config.tolerance.clamp(0.0, 1.0));
+    judgment
+}
+
+/// Whether `window` contradicts `decision` hard enough to re-tune.
+pub fn drifted(decision: &TunedConfig, window: &PathWindow, config: &RetuneConfig) -> bool {
+    judge(decision, window, config).drifted
 }
 
 #[cfg(test)]
@@ -122,6 +154,22 @@ mod tests {
         assert!(!drifted(&decision(Workload::Spmv, 4.0, "model"), &window(10, 10, 1.0), &cfg));
         // A decision with no recorded figure cannot be contradicted.
         assert!(!drifted(&decision(Workload::Spmv, 0.0, "trial"), &window(10, 10, 1.0), &cfg));
+    }
+
+    #[test]
+    fn judgment_carries_the_evidence_it_ran_on() {
+        let cfg = RetuneConfig::default();
+        let d = decision(Workload::Spmv, 4.0, "trial");
+        let j = judge(&d, &window(10, 10, 1.0), &cfg);
+        assert!(j.drifted);
+        assert!((j.measured_gflops - 1.0).abs() < 1e-9);
+        assert_eq!(j.promised_gflops, 4.0);
+        assert_eq!(j.window_batches, 10);
+        assert!((j.window_mean_batch - 1.0).abs() < 1e-9);
+        // The evidence is populated even when the verdict is "no".
+        let thin = judge(&d, &window(2, 2, 1.0), &cfg);
+        assert!(!thin.drifted);
+        assert_eq!(thin.window_batches, 2);
     }
 
     #[test]

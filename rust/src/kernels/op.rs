@@ -61,6 +61,12 @@ impl<'p> ExecCtx<'p> {
     pub fn on_pool(pool: &'p WorkerPool, threads: usize, policy: Policy) -> ExecCtx<'p> {
         ExecCtx { threads, policy, pool: Some(pool) }
     }
+
+    /// Utilization probe of the backing pool, if this context has one
+    /// (spawn-per-call and serial contexts have nothing to probe).
+    pub fn pool_probe(&self) -> Option<crate::sched::PoolProbe> {
+        self.pool.map(WorkerPool::probe)
+    }
 }
 
 /// *What* a kernel call computes: one vector or a k-wide batch.

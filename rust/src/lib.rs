@@ -38,6 +38,11 @@
 //!   each batch to the decision tuned for its width. Cache entries decay
 //!   two ways: drift invalidation when serving measurements contradict
 //!   them, and an optional age TTL.
+//! * [`telemetry`] — the observability layer the serving stack explains
+//!   itself through: lock-free counters/gauges/log-bucket latency
+//!   histograms, per-request queue/barrier/kernel phase spans, a
+//!   bounded sequence-numbered event journal absorbing fleet and tuner
+//!   decisions, and JSON-snapshot + Prometheus-text exporters.
 //! * [`fleet`] — the multi-tenant layer above the single-matrix server:
 //!   register many matrices, serve each through the same hot-swappable
 //!   [`coordinator::path::Path`] units under a `storage_bytes`-accounted
@@ -57,6 +62,7 @@ pub mod kernels;
 pub mod runtime;
 pub mod sched;
 pub mod sparse;
+pub mod telemetry;
 pub mod tuner;
 pub mod util;
 

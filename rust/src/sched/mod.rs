@@ -11,7 +11,7 @@ pub mod pool;
 
 pub use balance::LoadBalance;
 pub use policy::{ChunkIter, Policy, StaticAssignment};
-pub use pool::{run_spawned, WorkerPool};
+pub use pool::{run_spawned, PoolProbe, WorkerPool};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 

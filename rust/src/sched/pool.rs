@@ -17,8 +17,9 @@
 //! — is what makes the job pointer's lifetime sound and prevents a slow
 //! worker from claiming into the next call's counter.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 /// The job signature: called once per task index in `0..ntasks`.
 type Job = dyn Fn(usize) + Sync;
@@ -48,6 +49,19 @@ struct Shared {
     done_cv: Condvar,
     /// Next unclaimed task index of the current generation.
     claim: AtomicUsize,
+    /// Cumulative busy nanoseconds per worker (time inside the claim
+    /// loop, parked time excluded) — the raw material of the
+    /// utilization/imbalance probe.
+    busy_ns: Box<[AtomicU64]>,
+    /// Cumulative busy nanoseconds of calling threads (the caller is a
+    /// lane too).
+    caller_busy_ns: AtomicU64,
+    /// Pool-parallel generations executed.
+    generations_run: AtomicU64,
+    /// `run` calls that took the serial fast path (no workers woken).
+    serial_runs: AtomicU64,
+    /// Pool creation time (probe uptime baseline).
+    created: Instant,
 }
 
 /// A fixed set of parked worker threads executing submitted jobs.
@@ -82,11 +96,16 @@ impl WorkerPool {
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
             claim: AtomicUsize::new(0),
+            busy_ns: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            caller_busy_ns: AtomicU64::new(0),
+            generations_run: AtomicU64::new(0),
+            serial_runs: AtomicU64::new(0),
+            created: Instant::now(),
         });
         let handles = (0..workers)
-            .map(|_| {
+            .map(|idx| {
                 let shared = shared.clone();
-                std::thread::spawn(move || worker_loop(&shared))
+                std::thread::spawn(move || worker_loop(&shared, idx))
             })
             .collect();
         WorkerPool { shared, handles, run_gate: Mutex::new(()) }
@@ -125,12 +144,18 @@ impl WorkerPool {
             return;
         }
         if self.handles.is_empty() || ntasks == 1 {
+            let t0 = Instant::now();
             for t in 0..ntasks {
                 job(t);
             }
+            self.shared
+                .caller_busy_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            self.shared.serial_runs.fetch_add(1, Ordering::Relaxed);
             return;
         }
         let _gate = lock(&self.run_gate);
+        self.shared.generations_run.fetch_add(1, Ordering::Relaxed);
         // Safety: the pointee outlives this call, and the generation
         // barrier below guarantees no worker holds the reference after
         // `run` returns (each worker re-parks before decrementing would
@@ -150,6 +175,7 @@ impl WorkerPool {
         // the generation barrier below always runs — unwinding past it
         // would let a straggler worker claim into the *next* call's
         // counter and dereference a dead job pointer.
+        let caller_t0 = Instant::now();
         let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
             let t = self.shared.claim.fetch_add(1, Ordering::Relaxed);
             if t >= ntasks {
@@ -157,6 +183,9 @@ impl WorkerPool {
             }
             job(t);
         }));
+        self.shared
+            .caller_busy_ns
+            .fetch_add(caller_t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         let panicked_on_worker;
         {
             let mut ctrl = lock(&self.shared.ctrl);
@@ -172,6 +201,78 @@ impl WorkerPool {
         if panicked_on_worker {
             panic!("WorkerPool: a job panicked on a pool worker");
         }
+    }
+
+    /// A point-in-time utilization/imbalance probe — per-worker busy
+    /// clocks, the caller lane's busy clock, and run counts since the
+    /// pool was created. Lock-free reads; safe to call while kernels
+    /// run (a worker mid-generation simply hasn't banked its in-flight
+    /// busy time yet).
+    pub fn probe(&self) -> PoolProbe {
+        PoolProbe {
+            workers: self.handles.len(),
+            generations: self.shared.generations_run.load(Ordering::Relaxed),
+            serial_runs: self.shared.serial_runs.load(Ordering::Relaxed),
+            busy_s: self
+                .shared
+                .busy_ns
+                .iter()
+                .map(|ns| ns.load(Ordering::Relaxed) as f64 * 1e-9)
+                .collect(),
+            caller_busy_s: self.shared.caller_busy_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+            uptime_s: self.shared.created.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// Snapshot of a [`WorkerPool`]'s activity counters — the raw material
+/// for pool-utilization and barrier-imbalance metrics (read by the
+/// telemetry exporters; the scheduler itself depends on nothing above
+/// it).
+#[derive(Debug, Clone)]
+pub struct PoolProbe {
+    /// Parked worker threads in the pool (the caller adds one lane).
+    pub workers: usize,
+    /// Pool-parallel generations executed since creation.
+    pub generations: u64,
+    /// `run` calls that took the serial fast path.
+    pub serial_runs: u64,
+    /// Cumulative busy seconds per worker, in worker index order.
+    pub busy_s: Vec<f64>,
+    /// Cumulative busy seconds of calling threads.
+    pub caller_busy_s: f64,
+    /// Seconds since the pool was created.
+    pub uptime_s: f64,
+}
+
+impl PoolProbe {
+    /// Total worker busy seconds (caller lane excluded).
+    pub fn busy_total_s(&self) -> f64 {
+        self.busy_s.iter().sum()
+    }
+
+    /// Mean fraction of the pool's lifetime its workers spent busy
+    /// (0 for a zero-worker pool).
+    pub fn utilization(&self) -> f64 {
+        if self.workers == 0 || self.uptime_s <= 0.0 {
+            return 0.0;
+        }
+        (self.busy_total_s() / (self.workers as f64 * self.uptime_s)).clamp(0.0, 1.0)
+    }
+
+    /// Barrier imbalance: the busiest worker's busy time over the mean
+    /// (1.0 = perfectly even; grows as stragglers dominate; 0 when the
+    /// pool never ran). Each generation barriers on every worker, so a
+    /// persistently high ratio means the claim loop is feeding some
+    /// lanes much more work than others.
+    pub fn imbalance(&self) -> f64 {
+        let total = self.busy_total_s();
+        if self.workers == 0 || total <= 0.0 {
+            return 0.0;
+        }
+        let mean = total / self.workers as f64;
+        let max = self.busy_s.iter().cloned().fold(0.0f64, f64::max);
+        max / mean
     }
 }
 
@@ -190,7 +291,7 @@ impl Drop for WorkerPool {
     }
 }
 
-fn worker_loop(shared: &Shared) {
+fn worker_loop(shared: &Shared, idx: usize) {
     let mut seen = 0u64;
     loop {
         let (job, ntasks) = {
@@ -208,7 +309,9 @@ fn worker_loop(shared: &Shared) {
             (ctrl.job.expect("generation bumped without a job"), ctrl.ntasks)
         };
         // Claim-loop; a panicking job is contained so the barrier still
-        // completes and the pool survives for the next call.
+        // completes and the pool survives for the next call. The busy
+        // clock covers exactly the claim loop — parked time never counts.
+        let t0 = Instant::now();
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
             let t = shared.claim.fetch_add(1, Ordering::Relaxed);
             if t >= ntasks {
@@ -216,6 +319,7 @@ fn worker_loop(shared: &Shared) {
             }
             job(t);
         }));
+        shared.busy_ns[idx].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         let mut ctrl = lock(&shared.ctrl);
         if outcome.is_err() {
             ctrl.panicked = true;
@@ -276,6 +380,41 @@ mod tests {
         let pool = WorkerPool::new(0);
         assert_eq!(pool.workers(), 0);
         exact_coverage(&pool, 5);
+    }
+
+    #[test]
+    fn probe_accounts_generations_and_busy_time() {
+        let pool = WorkerPool::new(2);
+        let before = pool.probe();
+        assert_eq!(before.workers, 2);
+        assert_eq!(before.generations, 0);
+        pool.run(8, &|_| {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        pool.run(1, &|_| {}); // ntasks == 1 → serial fast path
+        let probe = pool.probe();
+        assert_eq!(probe.generations, 1);
+        assert_eq!(probe.serial_runs, 1);
+        assert_eq!(probe.busy_s.len(), 2);
+        assert!(probe.caller_busy_s > 0.0, "caller lane participates");
+        assert!(probe.uptime_s > 0.0);
+        let util = probe.utilization();
+        assert!((0.0..=1.0).contains(&util), "utilization {util} out of range");
+        if probe.busy_total_s() > 0.0 {
+            assert!(probe.imbalance() >= 1.0 - 1e-9);
+        }
+    }
+
+    #[test]
+    fn zero_worker_probe_is_degenerate_but_finite() {
+        let pool = WorkerPool::new(0);
+        pool.run(3, &|_| {});
+        let probe = pool.probe();
+        assert_eq!(probe.workers, 0);
+        assert_eq!(probe.serial_runs, 1);
+        assert_eq!(probe.utilization(), 0.0);
+        assert_eq!(probe.imbalance(), 0.0);
+        assert_eq!(probe.busy_total_s(), 0.0);
     }
 
     #[test]

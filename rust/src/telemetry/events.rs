@@ -1,0 +1,454 @@
+//! The structured event bus: one bounded, sequence-numbered journal
+//! absorbing fleet lifecycle events and tuner decisions.
+//!
+//! Every observable state change publishes an [`EventKind`] to the
+//! [`EventJournal`]; the journal stamps it with a monotonically
+//! increasing sequence number and keeps the most recent `capacity`
+//! events, dropping the oldest (and counting the drops) when full — a
+//! fleet that runs for a week cannot grow an unbounded event `Vec`
+//! anymore. Readers are cursor-based [`Subscriber`]s: each
+//! [`Subscriber::poll`] returns the events published since the reader's
+//! cursor plus how many it *missed* to drop-oldest eviction, so a slow
+//! reader knows its blind spot instead of silently skipping history.
+//!
+//! Event variants carry their decision evidence as typed fields (window
+//! sizes, measured vs. promised GFlop/s, arrival-rate samples), which is
+//! what makes re-tune flapping diagnosable after the fact — see the
+//! taxonomy table in `docs/ARCHITECTURE.md`.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+
+/// What happened — the typed payload of one journal entry.
+#[derive(Debug, Clone)]
+pub enum EventKind {
+    /// A matrix was registered with the fleet, tuned and warmed.
+    Registered {
+        /// Entry id.
+        id: String,
+        /// Prepared payload bytes.
+        bytes: usize,
+        /// The SpMV decision serving the entry.
+        spmv: String,
+        /// The SpMM decision serving the entry.
+        spmm: String,
+    },
+    /// A warm entry's payloads were dropped to fit the memory budget.
+    Evicted {
+        /// Entry id.
+        id: String,
+        /// Payload bytes freed.
+        bytes: usize,
+    },
+    /// A cold entry re-prepared its payloads (no re-search) on demand.
+    Rematerialized {
+        /// Entry id.
+        id: String,
+        /// Prepared payload bytes.
+        bytes: usize,
+    },
+    /// A serving window contradicted its decision's promised GFlop/s
+    /// hard enough to invalidate and re-tune. Carries the full evidence
+    /// the judgment was made on.
+    DriftConfirmed {
+        /// Entry id.
+        id: String,
+        /// Workload of the drifted path.
+        workload: String,
+        /// GFlop/s the window measured.
+        measured_gflops: f64,
+        /// GFlop/s the decision had promised.
+        promised_gflops: f64,
+        /// Batches of evidence in the window.
+        window_batches: usize,
+        /// Mean requests per batch in the window.
+        window_mean_batch: f64,
+    },
+    /// A drift-triggered re-tune completed and its fresh payload was
+    /// hot-swapped onto the serving path.
+    Retuned {
+        /// Entry id.
+        id: String,
+        /// Workload of the re-tuned path.
+        workload: String,
+        /// GFlop/s the window measured.
+        measured_gflops: f64,
+        /// GFlop/s the old decision had promised.
+        promised_gflops: f64,
+        /// Batches of evidence behind the judgment.
+        window_batches: usize,
+        /// Mean batch width of that evidence.
+        window_mean_batch: f64,
+        /// The replacement decision now serving.
+        to: String,
+    },
+    /// The adaptive batch width moved to a new ladder rung, with the
+    /// arrival evidence that drove the walk.
+    WidthChanged {
+        /// Entry id.
+        id: String,
+        /// Previous width.
+        from: usize,
+        /// New width.
+        to: usize,
+        /// Arrivals expected per batching window at the measured rate.
+        expected_arrivals: f64,
+        /// Inter-arrival samples behind the rate estimate.
+        rate_samples: usize,
+    },
+    /// A payload was hot-swapped outside the drift pipeline (the width
+    /// ladder re-tuning the batch path at a new rung).
+    HotSwap {
+        /// Entry id.
+        id: String,
+        /// Workload of the swapped path.
+        workload: String,
+        /// The decision now serving.
+        to: String,
+    },
+    /// The tuner missed its cache and opened a search.
+    SearchOpened {
+        /// Matrix name the search is for.
+        name: String,
+        /// Workload being tuned.
+        workload: String,
+        /// Candidates surviving the statistics pruner.
+        candidates: usize,
+        /// Candidates pruned before trials.
+        pruned: usize,
+    },
+    /// The statistics pruner removed a candidate class before trials.
+    CandidatePruned {
+        /// Matrix name the search is for.
+        name: String,
+        /// The pruner's reason string.
+        reason: String,
+    },
+    /// One candidate was timed during a search.
+    TrialTimed {
+        /// Matrix name the search is for.
+        name: String,
+        /// The candidate timed.
+        candidate: String,
+        /// Best observed GFlop/s.
+        gflops: f64,
+        /// Measured iterations actually run.
+        iters: usize,
+    },
+    /// A search concluded and its decision entered the cache.
+    DecisionCommitted {
+        /// Matrix name the decision is for.
+        name: String,
+        /// Workload tuned.
+        workload: String,
+        /// The chosen decision.
+        decision: String,
+        /// The decision's recorded GFlop/s.
+        gflops: f64,
+        /// `"trial"` or `"model"`.
+        source: String,
+    },
+    /// The tuner answered from its cache without searching.
+    CacheHit {
+        /// Matrix name the lookup was for.
+        name: String,
+        /// Workload looked up.
+        workload: String,
+        /// The cached decision served.
+        decision: String,
+    },
+}
+
+impl EventKind {
+    /// Stable snake_case name of the variant (journal accounting,
+    /// Prometheus labels, report grouping).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Registered { .. } => "registered",
+            EventKind::Evicted { .. } => "evicted",
+            EventKind::Rematerialized { .. } => "rematerialized",
+            EventKind::DriftConfirmed { .. } => "drift_confirmed",
+            EventKind::Retuned { .. } => "retuned",
+            EventKind::WidthChanged { .. } => "width_changed",
+            EventKind::HotSwap { .. } => "hot_swap",
+            EventKind::SearchOpened { .. } => "search_opened",
+            EventKind::CandidatePruned { .. } => "candidate_pruned",
+            EventKind::TrialTimed { .. } => "trial_timed",
+            EventKind::DecisionCommitted { .. } => "decision_committed",
+            EventKind::CacheHit { .. } => "cache_hit",
+        }
+    }
+}
+
+impl std::fmt::Display for EventKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EventKind::Registered { id, bytes, spmv, spmm } => {
+                write!(f, "registered {id} ({bytes} B): spmv {spmv} | spmm {spmm}")
+            }
+            EventKind::Evicted { id, bytes } => write!(f, "evicted {id} (freed {bytes} B)"),
+            EventKind::Rematerialized { id, bytes } => {
+                write!(f, "rematerialized {id} ({bytes} B)")
+            }
+            EventKind::DriftConfirmed {
+                id,
+                workload,
+                measured_gflops,
+                promised_gflops,
+                window_batches,
+                window_mean_batch,
+            } => write!(
+                f,
+                "drift confirmed {id} [{workload}]: measured {measured_gflops:.2} GF vs promised \
+                 {promised_gflops:.2} GF over {window_batches} batches (mean width \
+                 {window_mean_batch:.1})"
+            ),
+            EventKind::Retuned {
+                id,
+                workload,
+                measured_gflops,
+                promised_gflops,
+                window_batches,
+                to,
+                ..
+            } => write!(
+                f,
+                "retuned {id} [{workload}]: measured {measured_gflops:.2} GF vs promised \
+                 {promised_gflops:.2} GF ({window_batches}-batch window) → {to}"
+            ),
+            EventKind::WidthChanged { id, from, to, expected_arrivals, rate_samples } => {
+                write!(
+                    f,
+                    "width {id}: {from} → {to} (expected {expected_arrivals:.1} arrivals/window, \
+                     {rate_samples} samples)"
+                )
+            }
+            EventKind::HotSwap { id, workload, to } => {
+                write!(f, "hot-swap {id} [{workload}] → {to}")
+            }
+            EventKind::SearchOpened { name, workload, candidates, pruned } => {
+                write!(
+                    f,
+                    "search opened {name} [{workload}]: {candidates} candidates, {pruned} pruned"
+                )
+            }
+            EventKind::CandidatePruned { name, reason } => {
+                write!(f, "pruned {name}: {reason}")
+            }
+            EventKind::TrialTimed { name, candidate, gflops, iters } => {
+                write!(f, "trial {name}: {candidate} → {gflops:.2} GF ({iters} iters)")
+            }
+            EventKind::DecisionCommitted { name, workload, decision, gflops, source } => {
+                write!(
+                    f,
+                    "decision {name} [{workload}]: {decision} @ {gflops:.2} GF ({source})"
+                )
+            }
+            EventKind::CacheHit { name, workload, decision } => {
+                write!(f, "cache hit {name} [{workload}]: {decision}")
+            }
+        }
+    }
+}
+
+/// One journal entry: a sequence number and its payload.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Position in the journal's total order (0-based, gap-free across
+    /// drops — a missing number means the event was evicted, not lost in
+    /// transit).
+    pub seq: u64,
+    /// The payload.
+    pub kind: EventKind,
+}
+
+impl std::fmt::Display for Event {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "#{} {}", self.seq, self.kind)
+    }
+}
+
+struct JournalState {
+    buf: VecDeque<Event>,
+    next_seq: u64,
+    dropped: u64,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+/// The bounded drop-oldest event buffer. See the module docs.
+pub struct EventJournal {
+    capacity: usize,
+    state: Mutex<JournalState>,
+}
+
+impl std::fmt::Debug for EventJournal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.state.lock().unwrap();
+        f.debug_struct("EventJournal")
+            .field("capacity", &self.capacity)
+            .field("published", &s.next_seq)
+            .field("dropped", &s.dropped)
+            .finish()
+    }
+}
+
+impl EventJournal {
+    /// A journal retaining at most `capacity` events (min 1).
+    pub fn new(capacity: usize) -> EventJournal {
+        EventJournal {
+            capacity: capacity.max(1),
+            state: Mutex::new(JournalState {
+                buf: VecDeque::new(),
+                next_seq: 0,
+                dropped: 0,
+                counts: BTreeMap::new(),
+            }),
+        }
+    }
+
+    /// Maximum retained events.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Appends an event, evicting the oldest entry if the journal is
+    /// full. Returns the assigned sequence number.
+    pub fn publish(&self, kind: EventKind) -> u64 {
+        let mut s = self.state.lock().unwrap();
+        let seq = s.next_seq;
+        s.next_seq += 1;
+        *s.counts.entry(kind.name()).or_insert(0) += 1;
+        if s.buf.len() >= self.capacity {
+            s.buf.pop_front();
+            s.dropped += 1;
+        }
+        s.buf.push_back(Event { seq, kind });
+        seq
+    }
+
+    /// Events ever published (== the next sequence number).
+    pub fn published(&self) -> u64 {
+        self.state.lock().unwrap().next_seq
+    }
+
+    /// Events evicted by drop-oldest so far.
+    pub fn dropped(&self) -> u64 {
+        self.state.lock().unwrap().dropped
+    }
+
+    /// Events currently retained.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().buf.len()
+    }
+
+    /// Whether the journal holds no events.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lifetime publish counts per [`EventKind::name`], sorted by name
+    /// (drop-oldest never decrements these).
+    pub fn counts(&self) -> Vec<(&'static str, u64)> {
+        self.state.lock().unwrap().counts.iter().map(|(k, v)| (*k, *v)).collect()
+    }
+
+    /// The `n` most recent events, oldest first.
+    pub fn recent(&self, n: usize) -> Vec<Event> {
+        let s = self.state.lock().unwrap();
+        s.buf.iter().skip(s.buf.len().saturating_sub(n)).cloned().collect()
+    }
+
+    /// A reader positioned *after* everything already published: its
+    /// first poll sees only subsequent events.
+    pub fn subscribe(&self) -> Subscriber {
+        Subscriber { cursor: self.state.lock().unwrap().next_seq }
+    }
+
+    /// A reader positioned at the beginning of time: its first poll
+    /// sees every retained event and reports anything already evicted
+    /// as missed.
+    pub fn subscribe_from_start(&self) -> Subscriber {
+        Subscriber { cursor: 0 }
+    }
+
+    /// Retained events with `seq >= cursor`, plus how many events in
+    /// `cursor..` were already evicted.
+    fn since(&self, cursor: u64) -> (Vec<Event>, u64) {
+        let s = self.state.lock().unwrap();
+        let oldest = s.next_seq - s.buf.len() as u64;
+        let missed = oldest.saturating_sub(cursor);
+        let events =
+            s.buf.iter().filter(|e| e.seq >= cursor).cloned().collect();
+        (events, missed)
+    }
+}
+
+/// A cursor over one [`EventJournal`]. Cheap (a single `u64`); each
+/// reader owns its own, so readers never contend or steal each other's
+/// events.
+#[derive(Debug, Clone)]
+pub struct Subscriber {
+    cursor: u64,
+}
+
+impl Subscriber {
+    /// Returns every event published since the last poll (oldest first)
+    /// and the number of events this reader *missed* because drop-oldest
+    /// evicted them before it polled. Advances the cursor past both.
+    pub fn poll(&mut self, journal: &EventJournal) -> (Vec<Event>, u64) {
+        let (events, missed) = journal.since(self.cursor);
+        if let Some(last) = events.last() {
+            self.cursor = last.seq + 1;
+        } else {
+            self.cursor += missed;
+        }
+        (events, missed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(i: usize) -> EventKind {
+        EventKind::Evicted { id: format!("m{i}"), bytes: i }
+    }
+
+    #[test]
+    fn sequences_are_contiguous_and_counted() {
+        let j = EventJournal::new(16);
+        for i in 0..5 {
+            assert_eq!(j.publish(ev(i)), i as u64);
+        }
+        assert_eq!((j.published(), j.dropped(), j.len()), (5, 0, 5));
+        assert_eq!(j.counts(), vec![("evicted", 5)]);
+    }
+
+    #[test]
+    fn drop_oldest_keeps_the_tail_and_accounts_for_the_head() {
+        let j = EventJournal::new(4);
+        let mut sub = j.subscribe_from_start();
+        for i in 0..10 {
+            j.publish(ev(i));
+        }
+        assert_eq!(j.dropped(), 6);
+        let (events, missed) = sub.poll(&j);
+        assert_eq!(missed, 6, "evicted history is reported, not hidden");
+        let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        // A second poll sees nothing new and misses nothing.
+        let (events, missed) = sub.poll(&j);
+        assert!(events.is_empty() && missed == 0);
+    }
+
+    #[test]
+    fn late_subscriber_sees_only_new_events() {
+        let j = EventJournal::new(8);
+        j.publish(ev(0));
+        let mut sub = j.subscribe();
+        j.publish(ev(1));
+        let (events, missed) = sub.poll(&j);
+        assert_eq!((events.len(), missed), (1, 0));
+        assert_eq!(events[0].seq, 1);
+    }
+}

@@ -1,0 +1,310 @@
+//! Exporters: a point-in-time JSON [`TelemetrySnapshot`] and Prometheus
+//! text exposition.
+//!
+//! The snapshot is the machine-readable closing report examples and
+//! benches write next to their `BENCH_*.json` files (CI checks it
+//! round-trips through [`crate::util::json::Json::parse`]); the
+//! Prometheus text form is what a scrape endpoint would serve, validated
+//! line-by-line by [`validate_prometheus`] so CI catches a malformed
+//! exposition without needing a real Prometheus server.
+
+use std::path::Path;
+
+use crate::sched::PoolProbe;
+use crate::util::json::Json;
+
+use super::metrics::Metric;
+use super::Telemetry;
+
+/// Schema tag stamped into every snapshot (bump on breaking layout
+/// changes; [`TelemetrySnapshot::parse`] rejects other tags).
+pub const SNAPSHOT_SCHEMA: &str = "phi-telemetry-v1";
+
+/// A point-in-time capture of one [`Telemetry`] instance: every
+/// registered metric's value, the event journal's accounting, and
+/// (optionally) a worker-pool probe.
+#[derive(Debug, Clone)]
+pub struct TelemetrySnapshot {
+    /// The snapshot as a JSON document (see the module docs for layout).
+    pub json: Json,
+}
+
+impl TelemetrySnapshot {
+    /// Captures `t` plus the global worker pool's probe. Use
+    /// [`TelemetrySnapshot::capture_with_probe`] to probe a different
+    /// pool (or none).
+    pub fn capture(t: &Telemetry) -> TelemetrySnapshot {
+        Self::capture_with_probe(t, Some(&crate::sched::WorkerPool::global().probe()))
+    }
+
+    /// Captures `t` with an explicit pool probe (or none).
+    pub fn capture_with_probe(t: &Telemetry, probe: Option<&PoolProbe>) -> TelemetrySnapshot {
+        let mut counters = Json::obj();
+        let mut gauges = Json::obj();
+        let mut histograms = Json::obj();
+        for (name, metric) in t.metrics.list() {
+            match metric {
+                Metric::Counter(c) => counters = counters.set(&name, c.get()),
+                Metric::Gauge(g) => gauges = gauges.set(&name, g.get()),
+                Metric::Histogram(h) => {
+                    let detail = Json::obj()
+                        .set("count", h.count())
+                        .set("sum_s", h.sum_s())
+                        .set("mean_s", h.mean_s())
+                        .set("p50_s", h.quantile(0.5))
+                        .set("p90_s", h.quantile(0.9))
+                        .set("p99_s", h.quantile(0.99))
+                        .set("p999_s", h.quantile(0.999));
+                    histograms = histograms.set(&name, detail);
+                }
+            }
+        }
+        let mut counts = Json::obj();
+        for (kind, n) in t.journal.counts() {
+            counts = counts.set(kind, n);
+        }
+        let events = Json::obj()
+            .set("published", t.journal.published())
+            .set("dropped", t.journal.dropped())
+            .set("buffered", t.journal.len())
+            .set("capacity", t.journal.capacity())
+            .set("counts", counts);
+        let pool = match probe {
+            Some(p) => Json::obj()
+                .set("workers", p.workers)
+                .set("generations", p.generations)
+                .set("serial_runs", p.serial_runs)
+                .set("caller_busy_s", p.caller_busy_s)
+                .set("busy_s_total", p.busy_total_s())
+                .set("utilization", p.utilization())
+                .set("imbalance", p.imbalance())
+                .set("uptime_s", p.uptime_s),
+            None => Json::Null,
+        };
+        let json = Json::obj()
+            .set("schema", SNAPSHOT_SCHEMA)
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", histograms)
+            .set("events", events)
+            .set("pool", pool);
+        TelemetrySnapshot { json }
+    }
+
+    /// Pretty-printed JSON text.
+    pub fn to_pretty(&self) -> String {
+        self.json.to_pretty()
+    }
+
+    /// Writes the snapshot to `path` as pretty-printed JSON.
+    pub fn write(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        std::fs::write(path.as_ref(), self.to_pretty() + "\n")
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.as_ref().display()))
+    }
+
+    /// Parses a snapshot back from JSON text, verifying the schema tag
+    /// and the top-level sections — the round-trip CI asserts.
+    pub fn parse(text: &str) -> anyhow::Result<TelemetrySnapshot> {
+        let json = Json::parse(text)?;
+        let schema = json.get("schema").and_then(|s| s.as_str()).unwrap_or("");
+        anyhow::ensure!(
+            schema == SNAPSHOT_SCHEMA,
+            "unexpected snapshot schema {schema:?} (wanted {SNAPSHOT_SCHEMA:?})"
+        );
+        for section in ["counters", "gauges", "histograms", "events"] {
+            anyhow::ensure!(json.get(section).is_some(), "snapshot missing section {section:?}");
+        }
+        Ok(TelemetrySnapshot { json })
+    }
+}
+
+/// Sanitizes a metric name into the Prometheus charset and prefixes the
+/// crate namespace.
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 4);
+    out.push_str("phi_");
+    for ch in name.chars() {
+        if ch.is_ascii_alphanumeric() || ch == '_' || ch == ':' {
+            out.push(ch);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+/// Renders `t` (and an optional pool probe) in the Prometheus text
+/// exposition format: `# TYPE` comments, `_bucket{le=…}` series with a
+/// `+Inf` terminator, `_sum`/`_count` pairs.
+pub fn prometheus_text(t: &Telemetry, probe: Option<&PoolProbe>) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for (name, metric) in t.metrics.list() {
+        let n = prom_name(&name);
+        match metric {
+            Metric::Counter(c) => {
+                let _ = writeln!(out, "# TYPE {n} counter");
+                let _ = writeln!(out, "{n} {}", c.get());
+            }
+            Metric::Gauge(g) => {
+                let _ = writeln!(out, "# TYPE {n} gauge");
+                let _ = writeln!(out, "{n} {}", g.get());
+            }
+            Metric::Histogram(h) => {
+                let _ = writeln!(out, "# TYPE {n} histogram");
+                for (le, cum) in h.cumulative_buckets() {
+                    let _ = writeln!(out, "{n}_bucket{{le=\"{le:.9}\"}} {cum}");
+                }
+                let _ = writeln!(out, "{n}_bucket{{le=\"+Inf\"}} {}", h.count());
+                let _ = writeln!(out, "{n}_sum {}", h.sum_s());
+                let _ = writeln!(out, "{n}_count {}", h.count());
+            }
+        }
+    }
+    let _ = writeln!(out, "# TYPE phi_events_published_total counter");
+    let _ = writeln!(out, "phi_events_published_total {}", t.journal.published());
+    let _ = writeln!(out, "# TYPE phi_events_dropped_total counter");
+    let _ = writeln!(out, "phi_events_dropped_total {}", t.journal.dropped());
+    let _ = writeln!(out, "# TYPE phi_events_total counter");
+    for (kind, count) in t.journal.counts() {
+        let _ = writeln!(out, "phi_events_total{{kind=\"{kind}\"}} {count}");
+    }
+    if let Some(p) = probe {
+        let pool_gauges = [
+            ("phi_pool_workers", p.workers as f64),
+            ("phi_pool_generations", p.generations as f64),
+            ("phi_pool_utilization", p.utilization()),
+            ("phi_pool_imbalance", p.imbalance()),
+            ("phi_pool_busy_seconds_total", p.busy_total_s()),
+            ("phi_pool_caller_busy_seconds_total", p.caller_busy_s),
+            ("phi_pool_uptime_seconds", p.uptime_s),
+        ];
+        for (n, v) in pool_gauges {
+            let _ = writeln!(out, "# TYPE {n} gauge");
+            let _ = writeln!(out, "{n} {v}");
+        }
+    }
+    out
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_labels(s: &str) -> bool {
+    // `key="value"` pairs, comma-separated; values must not embed
+    // unescaped quotes (this exporter never emits any).
+    if s.is_empty() {
+        return true;
+    }
+    s.split(',').all(|pair| match pair.split_once('=') {
+        Some((k, v)) => {
+            valid_metric_name(k) && v.len() >= 2 && v.starts_with('"') && v.ends_with('"')
+        }
+        None => false,
+    })
+}
+
+/// Line-format validation of a Prometheus text exposition: every line
+/// must be blank, a well-formed `# TYPE`/`# HELP` comment, or a
+/// `name{labels} value` sample whose name fits the Prometheus charset
+/// and whose value parses as a float (`+Inf`/`-Inf`/`NaN` included).
+/// Returns the number of sample lines; errors name the first offending
+/// line. This is what the CI smoke job runs against the fleet example's
+/// exposition.
+pub fn validate_prometheus(text: &str) -> anyhow::Result<usize> {
+    let mut samples = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(comment) = line.strip_prefix('#') {
+            let rest = comment.trim_start();
+            let mut parts = rest.splitn(3, ' ');
+            let keyword = parts.next().unwrap_or("");
+            let name = parts.next().unwrap_or("");
+            let ok = match keyword {
+                "TYPE" => {
+                    let kind = parts.next().unwrap_or("");
+                    valid_metric_name(name)
+                        && matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped")
+                }
+                "HELP" => valid_metric_name(name),
+                _ => false,
+            };
+            anyhow::ensure!(ok, "line {}: malformed comment {line:?}", lineno + 1);
+            continue;
+        }
+        let (series, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| anyhow::anyhow!("line {}: no value in {line:?}", lineno + 1))?;
+        let value_ok = value.parse::<f64>().is_ok()
+            || matches!(value, "+Inf" | "-Inf" | "NaN");
+        anyhow::ensure!(value_ok, "line {}: bad value {value:?}", lineno + 1);
+        let name_ok = match series.split_once('{') {
+            Some((name, rest)) => {
+                valid_metric_name(name)
+                    && rest.ends_with('}')
+                    && valid_labels(&rest[..rest.len() - 1])
+            }
+            None => valid_metric_name(series),
+        };
+        anyhow::ensure!(name_ok, "line {}: bad series {series:?}", lineno + 1);
+        samples += 1;
+    }
+    Ok(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::EventKind;
+
+    fn populated() -> std::sync::Arc<Telemetry> {
+        let t = Telemetry::new();
+        t.metrics.counter("requests_served_total").add(7);
+        t.metrics.gauge("pool_utilization").set(0.5);
+        let h = t.metrics.histogram("request_latency_seconds");
+        for us in [50u64, 120, 900, 4000] {
+            h.record_ns(us * 1000);
+        }
+        t.journal.publish(EventKind::Evicted { id: "m".into(), bytes: 10 });
+        t
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_json_parse() {
+        let t = populated();
+        let snap = TelemetrySnapshot::capture_with_probe(&t, None);
+        let text = snap.to_pretty();
+        let back = TelemetrySnapshot::parse(&text).unwrap();
+        assert_eq!(back.json.to_string(), snap.json.to_string(), "parse∘print must be identity");
+        let count = back
+            .json
+            .get("histograms")
+            .and_then(|h| h.get("request_latency_seconds"))
+            .and_then(|h| h.get("count"))
+            .and_then(|c| c.as_usize());
+        assert_eq!(count, Some(4));
+        assert!(TelemetrySnapshot::parse("{\"schema\":\"nope\"}").is_err());
+    }
+
+    #[test]
+    fn exposition_validates_and_rejects_garbage() {
+        let t = populated();
+        let text = prometheus_text(&t, None);
+        let samples = validate_prometheus(&text).unwrap();
+        assert!(samples >= 8, "counters, gauge, histogram series, event counters:\n{text}");
+        assert!(text.contains("phi_request_latency_seconds_bucket{le=\"+Inf\"} 4"));
+        assert!(validate_prometheus("not a metric line").is_err());
+        assert!(validate_prometheus("bad-name 1").is_err());
+        assert!(validate_prometheus("name notanumber").is_err());
+        assert!(validate_prometheus("# TYPE x bogus").is_err());
+    }
+}

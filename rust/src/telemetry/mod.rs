@@ -1,0 +1,152 @@
+//! Observability layer: metrics, phase spans, a bounded event journal,
+//! and exporters.
+//!
+//! The paper's method is *measure, then explain* — its central claim
+//! (SpMV on the Phi is latency-bound, not bandwidth-bound) comes from
+//! instrumenting the machine until the attribution is forced. The
+//! serving stack makes the same demand of itself: it re-tunes, evicts,
+//! hot-swaps and re-batches at runtime, and this subsystem is what lets
+//! it explain those decisions after the fact.
+//!
+//! ```text
+//!   [metrics]  Counter / Gauge / Histogram ── lock-free, name-keyed
+//!        ▲         registry; handles cached by the hot path
+//!        │
+//!   [span]     Phases (queue/barrier/kernel) ── every request stamped
+//!        │         at enqueue → drain → kernel-start → kernel-end
+//!        │
+//!   [events]   EventKind ──► EventJournal (bounded, drop-oldest,
+//!        │         seq-numbered) ◄── Subscriber cursors
+//!        ▼
+//!   [export]   TelemetrySnapshot (JSON) + Prometheus text exposition
+//! ```
+//!
+//! * [`metrics`] — the instruments: exact-count lock-free counters and
+//!   gauges, fixed log-bucket latency histograms (mergeable,
+//!   p50/p90/p99/p999) cheap enough for the serving hot path.
+//! * [`span`] — [`span::Phases`]: per-request queue/barrier/kernel time
+//!   attribution, recorded by the engine loop and summed into
+//!   [`crate::coordinator::PathStats`].
+//! * [`events`] — the structured event bus: fleet lifecycle events and
+//!   tuner decisions (search opened, trial timed, decision committed,
+//!   drift confirmed, hot-swap) in one bounded journal with sequence
+//!   numbers and drop-oldest accounting.
+//! * [`export`] — [`export::TelemetrySnapshot`] JSON (written next to
+//!   `BENCH_*.json` by examples and benches) and Prometheus text
+//!   exposition with a line-format validator.
+//!
+//! Pool utilization and barrier imbalance come from
+//! [`crate::sched::WorkerPool::probe`] — the scheduler stays free of any
+//! telemetry dependency; exporters read the probe.
+//!
+//! # Instances
+//!
+//! A [`Telemetry`] is an explicit, shareable instance (`Arc`). Servers,
+//! fleets and tuners each default to a *fresh* instance so concurrent
+//! tests and tenants never cross-contaminate; wiring several components
+//! to one instance (as `examples/fleet.rs` does) is an explicit
+//! configuration choice. [`Telemetry::global`] offers a process-wide
+//! instance for callers that want exactly that.
+
+pub mod events;
+pub mod export;
+pub mod metrics;
+pub mod span;
+
+pub use events::{Event, EventJournal, EventKind, Subscriber};
+pub use export::{prometheus_text, validate_prometheus, TelemetrySnapshot};
+pub use metrics::{Counter, Gauge, Histogram, Metric, Metrics};
+pub use span::{Phases, ServeTimers};
+
+use std::sync::{Arc, OnceLock};
+
+/// Canonical metric names — one catalog, so dashboards and tests never
+/// chase string drift. See `docs/ARCHITECTURE.md` for the full metric
+/// table.
+pub mod names {
+    /// Histogram: end-to-end request latency (seconds).
+    pub const REQUEST_LATENCY: &str = "request_latency_seconds";
+    /// Histogram: per-request queue-phase time (seconds).
+    pub const PHASE_QUEUE: &str = "phase_queue_seconds";
+    /// Histogram: per-request barrier-phase time (seconds).
+    pub const PHASE_BARRIER: &str = "phase_barrier_seconds";
+    /// Histogram: per-request kernel-phase time (seconds).
+    pub const PHASE_KERNEL: &str = "phase_kernel_seconds";
+    /// Histogram: executed batch widths (k per batch).
+    pub const BATCH_WIDTH: &str = "batch_width";
+    /// Counter: requests served.
+    pub const REQUESTS_SERVED: &str = "requests_served_total";
+    /// Counter: batches executed.
+    pub const BATCHES_EXECUTED: &str = "batches_executed_total";
+    /// Counter: tuner cache hits.
+    pub const TUNER_CACHE_HITS: &str = "tuner_cache_hits_total";
+    /// Counter: tuner cache misses (searches opened).
+    pub const TUNER_CACHE_MISSES: &str = "tuner_cache_misses_total";
+    /// Counter: candidate trials timed.
+    pub const TUNER_TRIALS: &str = "tuner_trials_total";
+    /// Counter: fleet budget evictions.
+    pub const FLEET_EVICTIONS: &str = "fleet_evictions_total";
+    /// Counter: fleet re-materializations.
+    pub const FLEET_REMATERIALIZATIONS: &str = "fleet_rematerializations_total";
+    /// Counter: drift-triggered re-tune + hot-swap cycles.
+    pub const FLEET_RETUNES: &str = "fleet_retunes_total";
+    /// Counter: adaptive batch-width moves.
+    pub const FLEET_WIDTH_CHANGES: &str = "fleet_width_changes_total";
+}
+
+/// Default bounded capacity of a [`Telemetry`] instance's event journal.
+pub const DEFAULT_EVENT_CAPACITY: usize = 1024;
+
+/// One observability domain: a metric registry plus an event journal.
+/// Shared by `Arc`; see the module docs for instance scoping.
+pub struct Telemetry {
+    /// The metric registry.
+    pub metrics: Metrics,
+    /// The bounded event journal.
+    pub journal: EventJournal,
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry").field("journal", &self.journal).finish_non_exhaustive()
+    }
+}
+
+impl Telemetry {
+    /// A fresh instance with the default journal capacity.
+    pub fn new() -> Arc<Telemetry> {
+        Telemetry::with_event_capacity(DEFAULT_EVENT_CAPACITY)
+    }
+
+    /// A fresh instance retaining at most `capacity` journal events.
+    pub fn with_event_capacity(capacity: usize) -> Arc<Telemetry> {
+        Arc::new(Telemetry { metrics: Metrics::new(), journal: EventJournal::new(capacity) })
+    }
+
+    /// The process-wide shared instance, created on first use.
+    pub fn global() -> &'static Arc<Telemetry> {
+        static GLOBAL: OnceLock<Arc<Telemetry>> = OnceLock::new();
+        GLOBAL.get_or_init(Telemetry::new)
+    }
+
+    /// Publishes an event to this instance's journal (sugar that reads
+    /// well at call sites).
+    pub fn publish(&self, kind: EventKind) {
+        self.journal.publish(kind);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_is_a_singleton_and_instances_are_isolated() {
+        assert!(Arc::ptr_eq(Telemetry::global(), Telemetry::global()));
+        let (a, b) = (Telemetry::new(), Telemetry::new());
+        a.metrics.counter(names::REQUESTS_SERVED).add(3);
+        assert_eq!(b.metrics.counter(names::REQUESTS_SERVED).get(), 0);
+        a.publish(EventKind::Evicted { id: "x".into(), bytes: 1 });
+        assert_eq!(b.journal.published(), 0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Phase-attribution spans: where one request's latency actually went.
+//!
+//! Every request through the serving [`crate::coordinator::Engine`] is
+//! stamped at four points — enqueue, batch-drain, kernel-start,
+//! kernel-end — which partitions its end-to-end latency into three
+//! phases:
+//!
+//! * **queue** — enqueue → batch-drain: waiting for the batcher (the
+//!   `max_wait` window plus any backlog);
+//! * **barrier** — batch-drain → kernel-start: panel packing plus the
+//!   path-lock handshake;
+//! * **kernel** — kernel-start → kernel-end: the SpMV/SpMM execution
+//!   itself, including the worker-pool wakeup barrier.
+//!
+//! Every request of a k-wide fused batch shares the batch's barrier and
+//! kernel spans (the batch is one execution; each rider pays its full
+//! cost), while queue time is per-request — so for *every* request,
+//! `queue + barrier + kernel ≈ latency` regardless of fusion. That
+//! identity is asserted to within 10% by the serving test in
+//! `rust/tests/telemetry_props.rs`, and it is what lets a fleet under
+//! load answer "where did the p99 go" from histograms alone.
+
+use std::time::Duration;
+
+use super::metrics::Histogram;
+use super::{names, Telemetry};
+use std::sync::Arc;
+
+/// Per-phase time attribution of one request (or, summed, of a path's
+/// whole lifetime). All fields are seconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Phases {
+    /// Enqueue → batch-drain: time spent waiting in the request queue.
+    pub queue_s: f64,
+    /// Batch-drain → kernel-start: panel packing + path-lock handshake.
+    pub barrier_s: f64,
+    /// Kernel-start → kernel-end: the sparse kernel execution (including
+    /// the worker-pool wakeup).
+    pub kernel_s: f64,
+}
+
+impl Phases {
+    /// Sum of the three phases — ≈ the request's end-to-end latency.
+    pub fn total_s(&self) -> f64 {
+        self.queue_s + self.barrier_s + self.kernel_s
+    }
+
+    /// Element-wise addition (accumulating request attributions).
+    pub fn add(&mut self, other: &Phases) {
+        self.queue_s += other.queue_s;
+        self.barrier_s += other.barrier_s;
+        self.kernel_s += other.kernel_s;
+    }
+}
+
+/// The serving hot path's cached histogram handles: one latency
+/// histogram plus one per phase, resolved from the registry once at
+/// engine start so recording a request is four lock-free bucket
+/// increments.
+#[derive(Debug, Clone)]
+pub struct ServeTimers {
+    /// End-to-end request latency.
+    pub latency: Arc<Histogram>,
+    /// Queue-phase time per request.
+    pub queue: Arc<Histogram>,
+    /// Barrier-phase time per request.
+    pub barrier: Arc<Histogram>,
+    /// Kernel-phase time per request.
+    pub kernel: Arc<Histogram>,
+    /// Executed batch widths (k per batch).
+    pub batch_width: Arc<Histogram>,
+}
+
+impl ServeTimers {
+    /// Resolves (or creates) the serving histograms in `t`'s registry.
+    pub fn new(t: &Telemetry) -> ServeTimers {
+        ServeTimers {
+            latency: t.metrics.histogram(names::REQUEST_LATENCY),
+            queue: t.metrics.histogram(names::PHASE_QUEUE),
+            barrier: t.metrics.histogram(names::PHASE_BARRIER),
+            kernel: t.metrics.histogram(names::PHASE_KERNEL),
+            batch_width: t.metrics.histogram(names::BATCH_WIDTH),
+        }
+    }
+
+    /// Records one served request: its end-to-end latency and its
+    /// per-phase attribution.
+    pub fn record(&self, latency: Duration, phases: &Phases) {
+        self.latency.record_duration(latency);
+        self.queue.record(phases.queue_s);
+        self.barrier.record(phases.barrier_s);
+        self.kernel.record(phases.kernel_s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_sum_and_accumulate() {
+        let mut a = Phases { queue_s: 1.0, barrier_s: 0.5, kernel_s: 0.25 };
+        assert!((a.total_s() - 1.75).abs() < 1e-12);
+        a.add(&Phases { queue_s: 1.0, barrier_s: 1.0, kernel_s: 1.0 });
+        assert!((a.total_s() - 4.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timers_share_registry_histograms() {
+        let t = Telemetry::new();
+        let timers = ServeTimers::new(&t);
+        timers.record(
+            Duration::from_micros(100),
+            &Phases { queue_s: 40e-6, barrier_s: 10e-6, kernel_s: 50e-6 },
+        );
+        assert_eq!(t.metrics.histogram(names::REQUEST_LATENCY).count(), 1);
+        assert_eq!(t.metrics.histogram(names::PHASE_KERNEL).count(), 1);
+    }
+}

@@ -86,6 +86,8 @@ pub use trial::{TrialResult, Trialer};
 pub use crate::kernels::Workload;
 use crate::sparse::stats::{mean_diag_distance, row_length_cv};
 use crate::sparse::{Csr, MatrixStats};
+use crate::telemetry::{names, EventKind, Telemetry};
+use std::sync::Arc;
 
 /// Cache key for one matrix under one tuner configuration and workload.
 ///
@@ -206,12 +208,41 @@ pub struct Tuner {
     pub config: TunerConfig,
     /// Decision cache; inspect `hits`/`misses` for observability.
     pub cache: TuningCache,
+    /// Where search/decision events and cache counters go, when attached
+    /// (see [`Tuner::with_telemetry`]); `None` keeps the tuner silent.
+    telemetry: Option<Arc<Telemetry>>,
 }
 
 impl Tuner {
     /// Creates a tuner over an explicit cache.
     pub fn new(config: TunerConfig, cache: TuningCache) -> Tuner {
-        Tuner { config, cache }
+        Tuner { config, cache, telemetry: None }
+    }
+
+    /// Publishes this tuner's search/decision events (cache hit, search
+    /// opened, candidate pruned, trial timed, decision committed) to `t`.
+    pub fn with_telemetry(mut self, t: Arc<Telemetry>) -> Tuner {
+        self.telemetry = Some(t);
+        self
+    }
+
+    /// Attaches `t` only if no instance is attached yet — how the fleet
+    /// wires a caller-supplied tuner to its own journal without
+    /// overriding an explicit [`Tuner::with_telemetry`] choice.
+    pub fn attach_telemetry(&mut self, t: Arc<Telemetry>) {
+        self.telemetry.get_or_insert(t);
+    }
+
+    fn publish(&self, kind: EventKind) {
+        if let Some(t) = &self.telemetry {
+            t.publish(kind);
+        }
+    }
+
+    fn bump(&self, counter: &str, by: u64) {
+        if let Some(t) = &self.telemetry {
+            t.metrics.counter(counter).add(by);
+        }
     }
 
     /// Default config, in-memory cache.
@@ -307,9 +338,28 @@ impl Tuner {
             if self.config.verbose {
                 eprintln!("[tuner] cache hit {key} ({}): {found}", stats.name);
             }
+            self.bump(names::TUNER_CACHE_HITS, 1);
+            self.publish(EventKind::CacheHit {
+                name: stats.name.clone(),
+                workload: workload.to_string(),
+                decision: found.to_string(),
+            });
             return Ok(found);
         }
+        self.bump(names::TUNER_CACHE_MISSES, 1);
         let space = space::enumerate_for(a, stats, &self.config.space, workload);
+        self.publish(EventKind::SearchOpened {
+            name: stats.name.clone(),
+            workload: workload.to_string(),
+            candidates: space.candidates.len(),
+            pruned: space.pruned.len(),
+        });
+        for reason in &space.pruned {
+            self.publish(EventKind::CandidatePruned {
+                name: stats.name.clone(),
+                reason: reason.clone(),
+            });
+        }
         anyhow::ensure!(
             !space.candidates.is_empty(),
             "search space empty for {} ({} pruned)",
@@ -322,9 +372,28 @@ impl Tuner {
             }
         }
         let chosen = if self.config.trials {
-            let best = Trialer::new(self.config.warmup, self.config.measure)
+            // `run_all` instead of `best` so every candidate's timing is
+            // published, not just the winner's — the journal shows how
+            // close the race was.
+            let results = Trialer::new(self.config.warmup, self.config.measure)
                 .with_workload(workload)
-                .best(a, &space.candidates)
+                .run_all(a, &space.candidates);
+            self.bump(names::TUNER_TRIALS, results.len() as u64);
+            for r in &results {
+                self.publish(EventKind::TrialTimed {
+                    name: stats.name.clone(),
+                    candidate: format!(
+                        "{} {} {} t{}",
+                        r.candidate.format, r.candidate.ordering, r.candidate.policy,
+                        r.candidate.threads
+                    ),
+                    gflops: r.gflops,
+                    iters: r.iters,
+                });
+            }
+            let best = results
+                .into_iter()
+                .min_by(|u, v| u.secs.partial_cmp(&v.secs).unwrap_or(std::cmp::Ordering::Equal))
                 .expect("non-empty candidate list");
             TunedConfig {
                 workload,
@@ -357,6 +426,13 @@ impl Tuner {
                 space.candidates.len()
             );
         }
+        self.publish(EventKind::DecisionCommitted {
+            name: stats.name.clone(),
+            workload: workload.to_string(),
+            decision: chosen.to_string(),
+            gflops: chosen.gflops,
+            source: chosen.source.clone(),
+        });
         self.cache.insert(key, chosen.clone());
         self.cache.save()?;
         Ok(chosen)
@@ -476,6 +552,32 @@ mod tests {
         assert_eq!(tuner.tune("m", &a).unwrap(), spmv);
         assert_eq!(tuner.tune_workload("m", &a, Workload::Spmm { k: 8 }).unwrap(), spmm);
         assert_eq!((tuner.cache.hits, tuner.cache.misses), (2, 2));
+    }
+
+    #[test]
+    fn attached_telemetry_sees_search_and_hit_events() {
+        use crate::telemetry::{names, Telemetry};
+        let a = matrix();
+        let t = Telemetry::new();
+        let mut tuner = Tuner::quick().with_telemetry(t.clone());
+        tuner.tune("m", &a).unwrap();
+        let counts: std::collections::BTreeMap<&str, u64> =
+            t.journal.counts().into_iter().collect();
+        assert_eq!(counts.get("search_opened"), Some(&1));
+        assert!(counts.get("trial_timed").copied().unwrap_or(0) >= 1, "every trial is timed");
+        assert_eq!(counts.get("decision_committed"), Some(&1));
+        assert_eq!(t.metrics.counter(names::TUNER_CACHE_MISSES).get(), 1);
+        assert!(t.metrics.counter(names::TUNER_TRIALS).get() >= 1);
+
+        tuner.tune("m", &a).unwrap();
+        assert_eq!(t.metrics.counter(names::TUNER_CACHE_HITS).get(), 1);
+        assert!(t.journal.counts().iter().any(|(k, n)| *k == "cache_hit" && *n == 1));
+
+        // attach_telemetry must not override an explicit with_telemetry.
+        let t2 = Telemetry::new();
+        tuner.attach_telemetry(t2.clone());
+        tuner.tune("m", &a).unwrap();
+        assert_eq!(t2.journal.published(), 0);
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! Property tests for the telemetry layer: histogram quantiles against a
+//! sorted-vector oracle, exact counting under concurrent hammering,
+//! journal drop-oldest accounting, the serving phase-attribution
+//! identity (`queue + barrier + kernel ≈ latency`), and exporter
+//! round-trips.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use phi_spmv::coordinator::{ServerConfig, SpmvServer};
+use phi_spmv::sparse::gen::stencil::stencil_2d;
+use phi_spmv::sparse::gen::{random_vector, randomize_values};
+use phi_spmv::sparse::Csr;
+use phi_spmv::telemetry::metrics::Histogram;
+use phi_spmv::telemetry::{
+    names, prometheus_text, validate_prometheus, EventJournal, EventKind, Telemetry,
+    TelemetrySnapshot,
+};
+
+fn xorshift(state: &mut u64) -> u64 {
+    let mut x = *state;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *state = x;
+    x
+}
+
+fn matrix(seed: u64, n: usize) -> Arc<Csr> {
+    let mut a = stencil_2d(n, n);
+    randomize_values(&mut a, seed);
+    Arc::new(a)
+}
+
+/// Nearest-rank quantile of a sorted nanosecond sample — the oracle the
+/// histogram's bucketed estimate is checked against.
+fn oracle_ns(sorted: &[u64], q: f64) -> u64 {
+    let rank = ((q * sorted.len() as f64).ceil() as usize).max(1);
+    sorted[rank - 1]
+}
+
+#[test]
+fn histogram_quantiles_track_a_sorted_oracle() {
+    let mut state = 0x9e3779b97f4a7c15u64;
+    let uniform: Vec<u64> = (0..4000).map(|_| 1_000 + xorshift(&mut state) % 999_000).collect();
+    let log_spaced: Vec<u64> = (0..4000)
+        .map(|_| {
+            let octave = xorshift(&mut state) % 14;
+            let base = 100u64 << octave;
+            base + xorshift(&mut state) % base.max(1)
+        })
+        .collect();
+    let constant: Vec<u64> = vec![5_000; 2000];
+    let bimodal: Vec<u64> = (0..4000)
+        .map(|i| if i % 10 == 0 { 10_000_000 + xorshift(&mut state) % 1_000_000 } else { 50_000 })
+        .collect();
+    for (tag, sample) in
+        [("uniform", uniform), ("log", log_spaced), ("constant", constant), ("bimodal", bimodal)]
+    {
+        let h = Histogram::new();
+        for &ns in &sample {
+            h.record_ns(ns);
+        }
+        let mut sorted = sample.clone();
+        sorted.sort_unstable();
+        assert_eq!(h.count(), sample.len() as u64, "{tag}");
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let want = oracle_ns(&sorted, q) as f64 * 1e-9;
+            let got = h.quantile(q);
+            // The estimate is the holding bucket's upper bound: it must
+            // never undershoot the true quantile and overshoots by at
+            // most one sub-bucket width (≤ 25% relative).
+            assert!(got >= want * 0.999, "{tag} q{q}: {got} < oracle {want}");
+            assert!(got <= want * 1.26, "{tag} q{q}: {got} > 1.26 × oracle {want}");
+        }
+    }
+}
+
+#[test]
+fn concurrent_hammer_counts_exactly() {
+    let t = Telemetry::new();
+    let c = t.metrics.counter("hammer_total");
+    let h = t.metrics.histogram("hammer_seconds");
+    const THREADS: u64 = 8;
+    const PER: u64 = 5_000;
+    thread::scope(|s| {
+        for w in 0..THREADS {
+            let c = c.clone();
+            let h = h.clone();
+            s.spawn(move || {
+                for i in 0..PER {
+                    c.inc();
+                    // Unique-per-observation values so the expected sum
+                    // is computable exactly.
+                    h.record_ns(1_000 + (w * PER + i));
+                }
+            });
+        }
+    });
+    let n = THREADS * PER;
+    assert_eq!(c.get(), n, "counter must not lose increments under contention");
+    assert_eq!(h.count(), n, "histogram count must be exact under contention");
+    let expected_ns = n * 1_000 + (n - 1) * n / 2;
+    assert!(
+        (h.sum_s() - expected_ns as f64 * 1e-9).abs() < 1e-12,
+        "histogram sum must be exact: {} vs {}",
+        h.sum_s(),
+        expected_ns as f64 * 1e-9
+    );
+}
+
+#[test]
+fn concurrent_journal_publishes_are_totally_ordered() {
+    let t = Telemetry::with_event_capacity(64);
+    thread::scope(|s| {
+        for w in 0..4usize {
+            let t = &t;
+            s.spawn(move || {
+                for i in 0..200usize {
+                    t.publish(EventKind::Evicted { id: format!("w{w}e{i}"), bytes: i });
+                }
+            });
+        }
+    });
+    assert_eq!(t.journal.published(), 800);
+    assert_eq!(t.journal.dropped(), 800 - 64);
+    assert_eq!(t.journal.len(), 64);
+    assert_eq!(t.journal.counts(), vec![("evicted", 800)]);
+    let recent = t.journal.recent(64);
+    assert_eq!(recent.len(), 64);
+    for pair in recent.windows(2) {
+        assert_eq!(pair[1].seq, pair[0].seq + 1, "retained tail must be gap-free");
+    }
+    assert_eq!(recent.last().unwrap().seq, 799);
+}
+
+#[test]
+fn journal_drop_oldest_keeps_the_tail_and_reports_the_blind_spot() {
+    let j = EventJournal::new(8);
+    let mut sub = j.subscribe_from_start();
+    for i in 0..20usize {
+        j.publish(EventKind::Evicted { id: format!("m{i}"), bytes: i });
+    }
+    assert_eq!((j.published(), j.dropped(), j.len(), j.capacity()), (20, 12, 8, 8));
+    let (events, missed) = sub.poll(&j);
+    assert_eq!(missed, 12, "a slow reader must learn how much history it lost");
+    let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+    assert_eq!(seqs, (12..20).collect::<Vec<u64>>());
+    // Lifetime per-kind counts survive eviction.
+    assert_eq!(j.counts(), vec![("evicted", 20)]);
+    let (events, missed) = sub.poll(&j);
+    assert!(events.is_empty() && missed == 0, "a caught-up reader sees nothing twice");
+}
+
+#[test]
+fn serving_phase_spans_sum_to_request_latency() {
+    let a = matrix(42, 100);
+    let server = SpmvServer::start(
+        a.clone(),
+        ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            ..ServerConfig::default()
+        },
+    );
+    let telemetry = server.telemetry();
+    let client = server.client();
+    let mut wall = Vec::new();
+    let mut phase = Vec::new();
+    // Concurrent bursts (fused batches share barrier/kernel spans) …
+    for round in 0..5u64 {
+        let rxs: Vec<_> = (0..8)
+            .map(|s| client.submit(random_vector(a.ncols, round * 100 + s)).unwrap())
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            wall.push(resp.latency.as_secs_f64());
+            phase.push(resp.phases.total_s());
+        }
+    }
+    // … then sequential lone requests (the SpMV path).
+    for s in 0..10u64 {
+        let resp = client.call(random_vector(a.ncols, 900 + s)).unwrap();
+        wall.push(resp.latency.as_secs_f64());
+        phase.push(resp.phases.total_s());
+    }
+    assert_eq!(wall.len(), 50);
+    // The three phases partition the latency: their sum can trail the
+    // wall clock only by the post-kernel bookkeeping sliver.
+    for (i, (&w, &p)) in wall.iter().zip(&phase).enumerate() {
+        assert!(w + 10e-6 >= p, "request {i}: phases {p} exceed latency {w}");
+    }
+    let n = wall.len() as f64;
+    let mean_wall = wall.iter().sum::<f64>() / n;
+    let mean_phase = phase.iter().sum::<f64>() / n;
+    let slack = (0.10 * mean_wall).max(500e-6);
+    assert!(
+        (mean_wall - mean_phase).abs() <= slack,
+        "phase attribution must explain the latency: mean wall {mean_wall}, mean phases \
+         {mean_phase}, slack {slack}"
+    );
+    // The engine recorded every request into the shared histograms …
+    assert_eq!(telemetry.metrics.histogram(names::REQUEST_LATENCY).count(), 50);
+    assert_eq!(telemetry.metrics.counter(names::REQUESTS_SERVED).get(), 50);
+    let hist_phase_sum: f64 = [names::PHASE_QUEUE, names::PHASE_BARRIER, names::PHASE_KERNEL]
+        .iter()
+        .map(|name| telemetry.metrics.histogram(name).sum_s())
+        .sum();
+    let total_phase: f64 = phase.iter().sum();
+    assert!(
+        (hist_phase_sum - total_phase).abs() < 1e-6,
+        "histogram sums must match the per-response attributions: {hist_phase_sum} vs \
+         {total_phase}"
+    );
+    // … and the path counters absorbed the same request-seconds.
+    let stats = server.shutdown();
+    let attr = stats.spmv.queue_s
+        + stats.spmv.barrier_s
+        + stats.spmv.kernel_s
+        + stats.spmm.queue_s
+        + stats.spmm.barrier_s
+        + stats.spmm.kernel_s;
+    assert!(
+        (attr - total_phase).abs() <= 1e-9 + 1e-9 * total_phase.abs(),
+        "PathStats phase fields must sum the per-request phases: {attr} vs {total_phase}"
+    );
+    assert!(stats.spmm.kernel_s > 0.0, "fused batches must attribute kernel time");
+}
+
+#[test]
+fn snapshot_and_exposition_survive_a_serving_run() {
+    let a = matrix(7, 40);
+    let server = SpmvServer::start(a.clone(), ServerConfig::default());
+    let telemetry = server.telemetry();
+    let client = server.client();
+    for s in 0..10u64 {
+        client.call(random_vector(a.ncols, s)).unwrap();
+    }
+    server.shutdown();
+
+    // JSON snapshot: parse ∘ print is the identity, and the sections
+    // reflect the run.
+    let snap = TelemetrySnapshot::capture(&telemetry);
+    let text = snap.to_pretty();
+    let back = TelemetrySnapshot::parse(&text).unwrap();
+    assert_eq!(back.json.to_string(), snap.json.to_string(), "round-trip must be lossless");
+    let served = back
+        .json
+        .get("counters")
+        .and_then(|c| c.get(names::REQUESTS_SERVED))
+        .and_then(|v| v.as_usize());
+    assert_eq!(served, Some(10));
+    let latency_count = back
+        .json
+        .get("histograms")
+        .and_then(|h| h.get(names::REQUEST_LATENCY))
+        .and_then(|h| h.get("count"))
+        .and_then(|v| v.as_usize());
+    assert_eq!(latency_count, Some(10));
+    assert!(back.json.get("pool").is_some(), "capture() must carry the global pool probe");
+
+    // Prometheus text exposition: the line validator accepts every line
+    // and sees the serving series.
+    let prom = prometheus_text(&telemetry, None);
+    let samples = validate_prometheus(&prom).unwrap();
+    assert!(samples >= 10, "expected a populated exposition, got {samples} samples:\n{prom}");
+    assert!(prom.contains("phi_request_latency_seconds_bucket"));
+    assert!(prom.contains("phi_requests_served_total 10"));
+}
