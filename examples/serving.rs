@@ -22,7 +22,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use phi_spmv::coordinator::server::{percentile, PathSpec, ServerConfig, ServerStats, SpmvServer};
-use phi_spmv::kernels::Workload;
+use phi_spmv::kernels::{IsaLevel, Workload};
 use phi_spmv::sched::WorkerPool;
 use phi_spmv::sparse::gen::powerlaw::{powerlaw, PowerLawSpec};
 use phi_spmv::sparse::gen::{randomize_values, Rng};
@@ -244,6 +244,16 @@ fn main() -> anyhow::Result<()> {
         100.0 * probe.utilization(),
         probe.imbalance(),
         probe.caller_busy_s,
+    );
+    println!(
+        "isa: {} ({} lanes) | pinning: {}",
+        IsaLevel::detect(),
+        IsaLevel::detect().lanes(),
+        if probe.pinned {
+            format!("{} of {} workers pinned", probe.pinned_workers, probe.workers)
+        } else {
+            "off (set PALLAS_PIN=1, PALLAS_PLACEMENT=compact|scatter)".to_string()
+        },
     );
     let snap = TelemetrySnapshot::capture(&telemetry);
     let back = TelemetrySnapshot::parse(&snap.to_pretty())?;

@@ -1,0 +1,120 @@
+//! Inner-kernel ISA benchmarks: the vectorized (`std::arch`) kernels
+//! against the portable scalar loops, per format × workload.
+//!
+//! Measured: every storage format under SpMV and fused SpMM (k = 16) on
+//! three generator-suite classes, once with the detected
+//! [`IsaLevel`](phi_spmv::kernels::IsaLevel) and once forced portable via
+//! [`ExecCtx::with_isa`] — the same payload, pool and schedule, so the
+//! ratio isolates exactly what the explicit vector kernels buy. On a
+//! portable-only host both runs take the scalar path and every ratio is
+//! ~1.0 (the report's `isa` field says which case it measured).
+//!
+//! `cargo bench --bench bench_kernels [-- --scale 0.05]` writes
+//! `BENCH_kernels.json` with GFlop/s per (matrix × format × workload)
+//! for both ISA levels and their speedup ratio.
+
+use phi_spmv::kernels::{ExecCtx, IsaLevel, Workload};
+use phi_spmv::sched::Policy;
+use phi_spmv::sparse::gen::{paper_suite, random_vector, randomize_values};
+use phi_spmv::tuner::{exec::prepare, Format};
+use phi_spmv::util::bench::Bencher;
+use phi_spmv::util::cli::Args;
+use phi_spmv::util::json::Json;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = args.get("scale", 0.05f64);
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let bencher = Bencher::quick();
+    let suite = paper_suite();
+    let isa = IsaLevel::detect();
+    let vec_ctx = ExecCtx::pooled(threads, Policy::Dynamic(64));
+    let scalar_ctx = ExecCtx::pooled(threads, Policy::Dynamic(64)).with_isa(IsaLevel::Portable);
+
+    // SELL-C snapped to the vector lane count, exactly as the tuner's
+    // default space does (8 on portable hosts — the paper's width).
+    let lanes = isa.lanes();
+    let sell_c = if lanes > 1 { lanes } else { 8 };
+    let formats = [
+        Format::Csr,
+        Format::Ell,
+        Format::Hyb { width: 8 },
+        Format::Sell { c: sell_c, sigma: 256 },
+        Format::Bcsr { r: 4, c: 2 },
+    ];
+    let workloads = [Workload::Spmv, Workload::Spmm { k: 16 }];
+
+    println!("== inner kernels: {isa} vs portable, {threads} threads, scale {scale} ==");
+    println!(
+        "{:<16} {:<10} {:<8} {:>10} {:>12} {:>8}",
+        "matrix", "format", "workload", "isa GF", "portable GF", "speedup"
+    );
+    // 2D stencil, the paper's SpMM peak instance (pwtk), web graph.
+    let mut matrices: Vec<Json> = Vec::new();
+    for idx in [19usize, 11, 7] {
+        let entry = &suite[idx];
+        let mut a = entry.generate_scaled(scale);
+        randomize_values(&mut a, entry.id as u64);
+        let mut by_format = Json::obj();
+        for format in formats {
+            let op = prepare(&a, format);
+            let mut by_workload = Json::obj();
+            for workload in workloads {
+                let k = workload.k();
+                let x = random_vector(a.ncols * k, 4);
+                let mut y = vec![0.0f64; a.nrows * k];
+                let flops = workload.flops(a.nnz());
+                let vectorized = bencher
+                    .run("isa", || {
+                        if k > 1 {
+                            op.spmm_into(&x, &mut y, k, &vec_ctx)
+                        } else {
+                            op.spmv_into(&x, &mut y, &vec_ctx)
+                        }
+                    })
+                    .gflops(flops);
+                let portable = bencher
+                    .run("portable", || {
+                        if k > 1 {
+                            op.spmm_into(&x, &mut y, k, &scalar_ctx)
+                        } else {
+                            op.spmv_into(&x, &mut y, &scalar_ctx)
+                        }
+                    })
+                    .gflops(flops);
+                let speedup = vectorized / portable.max(1e-12);
+                println!(
+                    "{:<16} {:<10} {:<8} {:>10.3} {:>12.3} {:>7.2}x",
+                    entry.name, format, workload, vectorized, portable, speedup
+                );
+                by_workload = by_workload.set(
+                    &workload.to_string(),
+                    Json::obj()
+                        .set("isa_gflops", vectorized)
+                        .set("portable_gflops", portable)
+                        .set("speedup", speedup),
+                );
+            }
+            by_format = by_format.set(&format.to_string(), by_workload);
+        }
+        matrices.push(
+            Json::obj()
+                .set("name", entry.name)
+                .set("nrows", a.nrows)
+                .set("nnz", a.nnz())
+                .set("formats", by_format),
+        );
+    }
+
+    let report = Json::obj()
+        .set("bench", "kernels")
+        .set("isa", isa.name())
+        .set("lanes", lanes)
+        .set("threads", threads)
+        .set("scale", scale)
+        .set("sell_c", sell_c)
+        .set("matrices", matrices);
+    let path = "BENCH_kernels.json";
+    std::fs::write(path, report.to_pretty()).expect("writing BENCH_kernels.json");
+    println!("\nwrote {path}");
+}

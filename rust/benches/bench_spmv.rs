@@ -46,22 +46,25 @@ fn main() {
         }
     }
 
-    // §Perf ablation: rolled vs unrolled inner loop, allocation on/off the
-    // hot path, chunk-size sweep.
+    // §Perf ablation: portable vs vectorized inner loop, allocation
+    // on/off the hot path, chunk-size sweep.
     println!("\n== §Perf ablation (pwtk class, serial + threaded) ==");
     {
+        use phi_spmv::kernels::{ExecCtx, IsaLevel, SpmvOp};
         let e = &suite[11];
         let mut a = e.generate_scaled(scale.max(0.1));
         phi_spmv::sparse::gen::randomize_values(&mut a, 12);
         let x = random_vector(a.ncols, 9);
         let flops = 2.0 * a.nnz() as f64;
         let mut y = vec![0.0; a.nrows];
-        let m0 = bencher.run("rolled serial (before)", || {
-            phi_spmv::kernels::native::spmv_serial_rolled(&a, &x, &mut y)
+        let portable_ctx = ExecCtx::serial().with_isa(IsaLevel::Portable);
+        let m0 = bencher.run("portable serial (before)", || {
+            a.spmv_into(&x, &mut y, &portable_ctx)
         });
         println!("{}  {:.3} GFlop/s", m0.line(), m0.gflops(flops));
-        let m1 = bencher.run("unrolled serial (after)", || {
-            phi_spmv::kernels::spmv_parallel_into(&a, &x, &mut y, 1, Policy::Dynamic(64))
+        let detected_ctx = ExecCtx::serial();
+        let m1 = bencher.run(&format!("{} serial (after)", detected_ctx.isa), || {
+            a.spmv_into(&x, &mut y, &detected_ctx)
         });
         println!("{}  {:.3} GFlop/s  ({:+.1}%)", m1.line(), m1.gflops(flops),
             100.0 * (m0.mean_s / m1.mean_s - 1.0));

@@ -28,7 +28,9 @@ use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
+use crate::kernels::native::first_touch;
 use crate::kernels::op::{ExecCtx, SpmvOp, Workload};
+use crate::kernels::simd::{format_family, vectorized_for, IsaLevel};
 use crate::sched::Policy;
 use crate::sparse::Csr;
 use crate::telemetry::metrics::Counter;
@@ -435,14 +437,20 @@ struct EngineTelemetry {
     timers: ServeTimers,
     requests: Arc<Counter>,
     batches: Arc<Counter>,
+    /// The instance itself, kept for the derived-name kernel-attribution
+    /// counters (`kernel_ns_{family}_{vector|portable}`) — those are
+    /// resolved per batch, not per request, so the registry lookup is
+    /// off the per-request path.
+    telemetry: Arc<Telemetry>,
 }
 
 impl EngineTelemetry {
-    fn new(t: &Telemetry) -> EngineTelemetry {
+    fn new(t: &Arc<Telemetry>) -> EngineTelemetry {
         EngineTelemetry {
             timers: ServeTimers::new(t),
             requests: t.metrics.counter(names::REQUESTS_SERVED),
             batches: t.metrics.counter(names::BATCHES_EXECUTED),
+            telemetry: t.clone(),
         }
     }
 }
@@ -588,19 +596,40 @@ fn engine_loop(
 
         // Pack the batch into a row-major X (ncols × k).
         let k = batch.len();
+        let path = if k > 1 { spmm } else { spmv };
+        let spec = path.spec();
         let mut x = vec![0.0f64; a.ncols * k];
+        let mut y = vec![0.0f64; a.nrows * k];
+        // With a fully pinned pool, fault the panel pages in on the
+        // workers (first-touch placement) before the packing loop below
+        // faults them all on this serving thread. Pointless — and
+        // skipped — when workers float.
+        if crate::sched::WorkerPool::global().pinned() {
+            let ctx = ExecCtx::pooled(spec.threads, spec.policy);
+            first_touch(&mut x, &ctx);
+            first_touch(&mut y, &ctx);
+        }
         for (u, req) in batch.iter().enumerate() {
             assert_eq!(req.x.len(), a.ncols, "request length mismatch");
             for i in 0..a.ncols {
                 x[i * k + u] = req.x[i];
             }
         }
-        let mut y = vec![0.0f64; a.nrows * k];
-        let path = if k > 1 { spmm } else { spmv };
         let spans = path.execute_spanned(&x, &mut y, k, queue_s.iter().sum(), drained);
         let done = Instant::now();
         telem.batches.inc();
         telem.timers.batch_width.record(k as f64);
+        // Attribute the batch's kernel time to its format family and to
+        // the vector or the portable path — the counters behind the
+        // "how much serving time actually ran vectorized" question.
+        let fmt = spec.format.to_string();
+        let family = format_family(&fmt);
+        let vectorized = vectorized_for(IsaLevel::detect(), family, k);
+        telem
+            .telemetry
+            .metrics
+            .counter(&names::kernel_ns(family, vectorized))
+            .add((spans.kernel_s * 1e9) as u64);
 
         for (u, req) in batch.into_iter().enumerate() {
             let phases = Phases {
@@ -701,6 +730,12 @@ mod tests {
         for (u, v) in resp.y.iter().zip(&want) {
             assert!((u - v).abs() < 1e-10);
         }
+        // The batch's kernel time lands on the csr family's counter, on
+        // whichever of the vector/portable paths this host runs.
+        let vec_flag = vectorized_for(IsaLevel::detect(), "csr", 1);
+        let attributed =
+            engine.telemetry().metrics.counter(&names::kernel_ns("csr", vec_flag)).get();
+        assert!(attributed > 0, "kernel nanoseconds must be attributed to the csr family");
         let (spmv, spmm) = engine.shutdown();
         assert_eq!(spmv.served, 1);
         assert_eq!(spmm.served, 0);

@@ -13,6 +13,9 @@
 //!   (matrix read once per k vectors, column-blocked over k).
 //!   These execute on the host, are validated against the serial oracle,
 //!   and are the subject of the §Perf optimization pass.
+//! * [`simd`] — explicit `std::arch` vector variants of the hot inner
+//!   loops, selected per call from the [`op::ExecCtx`]'s [`simd::IsaLevel`]
+//!   (runtime feature detection, `PALLAS_ISA` override, scalar fallback).
 //! * [`micro`] — Fig. 1/Fig. 2 micro-benchmarks: KNC *models* of the array
 //!   sum and memset variants, plus runnable host equivalents.
 //! * [`spmv_model`] / [`spmm_model`] / [`blocked_model`] — reductions of a
@@ -25,6 +28,7 @@ pub mod blocked_model;
 pub mod micro;
 pub mod native;
 pub mod op;
+pub mod simd;
 pub mod spmm_model;
 pub mod spmv_model;
 
@@ -33,5 +37,6 @@ pub use native::{
     spmm_parallel, spmv_parallel, spmv_parallel_into,
 };
 pub use op::{spmm_via_spmv, ExecCtx, SpmvOp, Workload};
+pub use simd::IsaLevel;
 pub use spmm_model::SpmmVariant;
 pub use spmv_model::SpmvVariant;

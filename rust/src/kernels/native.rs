@@ -12,11 +12,17 @@
 //! `SendPtr` wrapper around the disjoint writes. Every kernel builds its
 //! own disjoint-write body; [`run_partitioned`] only distributes the unit
 //! ranges.
+//!
+//! Inner loops dispatch on the context's [`IsaLevel`] (sanitized once per
+//! call in [`effective`]): vector variants live in [`super::simd`], and
+//! the scalar loops below remain the always-correct portable fallback and
+//! the oracle the SIMD property tests compare against.
 
 use crate::sched::{run_spawned, DynamicQueue, Policy, StaticAssignment};
 use crate::sparse::{Bcsr, Csr, Ell, Hyb, Sell};
 
 use super::op::ExecCtx;
+use super::simd::IsaLevel;
 
 /// Raw-pointer wrapper asserting disjoint ownership across threads.
 #[derive(Clone, Copy)]
@@ -93,11 +99,36 @@ fn run_row_partitioned(
     });
 }
 
-/// `ctx` with the thread count the kernel will actually use: serial when
-/// the unit count is below the parallel break-even.
+/// `ctx` with the thread count the kernel will actually use (serial when
+/// the unit count is below the parallel break-even) and the ISA level
+/// clamped to what the host can execute — the single sanitization point,
+/// so the dispatch helpers below may trust `ctx.isa` unconditionally.
 fn effective<'p>(ctx: &ExecCtx<'p>, units: usize, serial_below: usize) -> ExecCtx<'p> {
     let threads = if units < serial_below { 1 } else { ctx.threads.max(1) };
-    ExecCtx { threads, ..*ctx }
+    ExecCtx { threads, isa: ctx.isa.sanitized(), ..*ctx }
+}
+
+/// Touches one element per 4 KiB page of `buf` from the context's workers,
+/// so the physical pages are faulted in where the kernels will later read
+/// and write them (first-touch NUMA placement; meaningful when the pool's
+/// workers are pinned). Intended for freshly allocated — zeroed, not yet
+/// faulted — buffers: it writes `0.0` through volatile stores, so contents
+/// are preserved only for all-zero buffers.
+pub fn first_touch(buf: &mut [f64], ctx: &ExecCtx<'_>) {
+    // One f64 every 4096 bytes hits every page exactly once.
+    const STRIDE: usize = 512;
+    if buf.is_empty() {
+        return;
+    }
+    let pages = buf.len().div_ceil(STRIDE);
+    let bp = SendPtr(buf.as_mut_ptr());
+    run_partitioned(ctx, pages, &move |r| {
+        for p in r {
+            // SAFETY: `p < ceil(len / STRIDE)` keeps `p * STRIDE < len`,
+            // and distinct pages touch distinct elements.
+            unsafe { std::ptr::write_volatile(bp.0.add(p * STRIDE), 0.0) };
+        }
+    });
 }
 
 // ------------------------------------------------------------------ CSR --
@@ -120,7 +151,27 @@ pub(crate) fn csr_spmv_into(a: &Csr, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>
     assert_eq!(x.len(), a.ncols);
     assert_eq!(y.len(), a.nrows);
     let ctx = effective(ctx, a.nrows, SERIAL_ROWS);
-    run_row_partitioned(&ctx, y, &|ys, r| spmv_range_into(a, x, ys, r));
+    let isa = ctx.isa;
+    run_row_partitioned(&ctx, y, &move |ys, r| csr_rows_dispatch(isa, a, x, ys, r));
+}
+
+/// Picks the widest available CSR SpMV row kernel for a sanitized `isa`.
+#[inline]
+fn csr_rows_dispatch(isa: IsaLevel, a: &Csr, x: &[f64], ys: &mut [f64], r: std::ops::Range<usize>) {
+    #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+    if isa == IsaLevel::Avx512 {
+        // SAFETY: `isa` was sanitized, so avx512f is present.
+        unsafe { super::simd::avx512::csr_spmv_rows(a, x, ys, r) };
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if isa.vectorized() {
+        // SAFETY: a sanitized `isa` ≥ Avx2 implies avx2 + fma are present.
+        unsafe { super::simd::avx2::csr_spmv_rows(a, x, ys, r) };
+        return;
+    }
+    let _ = isa; // moot off x86-64: every arm above compiles away
+    spmv_range_into(a, x, ys, r)
 }
 
 /// Serial SpMV over a row range into a local slice (`ys[0]` = row r.start).
@@ -154,21 +205,6 @@ fn spmv_range_into(a: &Csr, x: &[f64], ys: &mut [f64], r: std::ops::Range<usize>
     }
 }
 
-/// Naive rolled-loop serial SpMV — the §Perf *before* baseline kept for
-/// the ablation bench (`bench_spmv -- --ablation`); the production path
-/// uses the 4-way unrolled [`spmv_range_into`].
-pub fn spmv_serial_rolled(a: &Csr, x: &[f64], y: &mut [f64]) {
-    assert_eq!(x.len(), a.ncols);
-    assert_eq!(y.len(), a.nrows);
-    for i in 0..a.nrows {
-        let mut acc = 0.0;
-        for (c, v) in a.row_cids(i).iter().zip(a.row_vals(i)) {
-            acc += v * x[*c as usize];
-        }
-        y[i] = acc;
-    }
-}
-
 /// Parallel SpMM: `Y ← AX`, row-major `X`/`Y` of width `k`.
 pub fn spmm_parallel(a: &Csr, x: &[f64], k: usize, nthreads: usize, policy: Policy) -> Vec<f64> {
     let mut y = vec![0.0; a.nrows * k];
@@ -184,12 +220,35 @@ pub(crate) fn csr_spmm_into(a: &Csr, x: &[f64], y: &mut [f64], k: usize, ctx: &E
         return;
     }
     let ctx = effective(ctx, a.nrows, SERIAL_ROWS);
+    let isa = ctx.isa;
     let yp = SendPtr(y.as_mut_ptr());
     run_partitioned(&ctx, a.nrows, &move |r| {
         // Disjoint row ranges map to disjoint k-wide Y blocks.
         let ys = unsafe { std::slice::from_raw_parts_mut(yp.0.add(r.start * k), r.len() * k) };
-        spmm_rows_local(a, x, ys, k, r);
+        csr_spmm_rows_dispatch(isa, a, x, ys, k, r);
     });
+}
+
+/// Picks the CSR SpMM row kernel for a sanitized `isa` (the AVX2 variant
+/// covers AVX-512 hosts too — the column-blocked accumulator is already
+/// register-resident at 256 bits).
+#[inline]
+fn csr_spmm_rows_dispatch(
+    isa: IsaLevel,
+    a: &Csr,
+    x: &[f64],
+    ys: &mut [f64],
+    k: usize,
+    r: std::ops::Range<usize>,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if isa.vectorized() {
+        // SAFETY: a sanitized `isa` ≥ Avx2 implies avx2 + fma are present.
+        unsafe { super::simd::avx2::csr_spmm_rows(a, x, ys, k, r) };
+        return;
+    }
+    let _ = isa; // moot off x86-64
+    spmm_rows_local(a, x, ys, k, r)
 }
 
 /// SpMM over a row range; `ys` is the local Y block (row r.start at 0).
@@ -253,14 +312,35 @@ pub(crate) fn bcsr_spmv_into(b: &Bcsr, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'
     y.fill(0.0);
     let nbrows = b.nbrows();
     let ctx = effective(ctx, nbrows, SERIAL_UNITS);
+    let isa = ctx.isa;
     let yp = SendPtr(y.as_mut_ptr());
     run_partitioned(&ctx, nbrows, &move |r| {
         // Block rows map to disjoint y ranges.
         let lo = r.start * b.r;
         let hi = (r.end * b.r).min(b.nrows);
         let ys = unsafe { std::slice::from_raw_parts_mut(yp.0.add(lo), hi - lo) };
-        bcsr_rows_local(b, x, ys, r);
+        bcsr_rows_dispatch(isa, b, x, ys, r);
     });
+}
+
+/// Picks the BCSR SpMV block-row kernel for a sanitized `isa` (the AVX2
+/// variant covers AVX-512 hosts — paper block widths stop at 8 doubles).
+#[inline]
+fn bcsr_rows_dispatch(
+    isa: IsaLevel,
+    b: &Bcsr,
+    x: &[f64],
+    ys: &mut [f64],
+    br_range: std::ops::Range<usize>,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if isa.vectorized() {
+        // SAFETY: a sanitized `isa` ≥ Avx2 implies avx2 + fma are present.
+        unsafe { super::simd::avx2::bcsr_spmv_rows(b, x, ys, br_range) };
+        return;
+    }
+    let _ = isa; // moot off x86-64
+    bcsr_rows_local(b, x, ys, br_range)
 }
 
 #[inline]
@@ -371,7 +451,27 @@ pub(crate) fn ell_spmv_into(e: &Ell, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>
     assert_eq!(x.len(), e.ncols);
     assert_eq!(y.len(), e.nrows);
     let ctx = effective(ctx, e.nrows, SERIAL_ROWS);
-    run_row_partitioned(&ctx, y, &|ys, r| ell_rows_local(e, x, ys, r));
+    let isa = ctx.isa;
+    run_row_partitioned(&ctx, y, &move |ys, r| ell_rows_dispatch(isa, e, x, ys, r));
+}
+
+/// Picks the widest available ELL SpMV row kernel for a sanitized `isa`.
+#[inline]
+fn ell_rows_dispatch(isa: IsaLevel, e: &Ell, x: &[f64], ys: &mut [f64], r: std::ops::Range<usize>) {
+    #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+    if isa == IsaLevel::Avx512 {
+        // SAFETY: `isa` was sanitized, so avx512f is present.
+        unsafe { super::simd::avx512::ell_spmv_rows(e, x, ys, r) };
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if isa.vectorized() {
+        // SAFETY: a sanitized `isa` ≥ Avx2 implies avx2 + fma are present.
+        unsafe { super::simd::avx2::ell_spmv_rows(e, x, ys, r) };
+        return;
+    }
+    let _ = isa; // moot off x86-64
+    ell_rows_local(e, x, ys, r)
 }
 
 /// ELL SpMV over a row range into a local slice (`ys[0]` = row `r.start`).
@@ -399,12 +499,33 @@ pub(crate) fn ell_spmm_into(e: &Ell, x: &[f64], y: &mut [f64], k: usize, ctx: &E
         return;
     }
     let ctx = effective(ctx, e.nrows, SERIAL_ROWS);
+    let isa = ctx.isa;
     let yp = SendPtr(y.as_mut_ptr());
     run_partitioned(&ctx, e.nrows, &move |r| {
         // Disjoint row ranges map to disjoint k-wide Y blocks.
         let ys = unsafe { std::slice::from_raw_parts_mut(yp.0.add(r.start * k), r.len() * k) };
-        ell_spmm_rows_local(e, x, ys, k, r);
+        ell_spmm_rows_dispatch(isa, e, x, ys, k, r);
     });
+}
+
+/// Picks the ELL SpMM row kernel for a sanitized `isa`.
+#[inline]
+fn ell_spmm_rows_dispatch(
+    isa: IsaLevel,
+    e: &Ell,
+    x: &[f64],
+    ys: &mut [f64],
+    k: usize,
+    r: std::ops::Range<usize>,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if isa.vectorized() {
+        // SAFETY: a sanitized `isa` ≥ Avx2 implies avx2 + fma are present.
+        unsafe { super::simd::avx2::ell_spmm_rows(e, x, ys, k, r) };
+        return;
+    }
+    let _ = isa; // moot off x86-64
+    ell_spmm_rows_local(e, x, ys, k, r)
 }
 
 /// ELL SpMM over a row range; `ys` is the local Y block (row r.start at 0).
@@ -483,12 +604,35 @@ pub fn sell_spmv_parallel(s: &Sell, x: &[f64], nthreads: usize, policy: Policy) 
 }
 
 /// SELL-C-σ SpMV under an explicit execution context.
+///
+/// Vector dispatch is per call, not per range: the chunk kernel needs C
+/// to be a lane multiple (≤ 32), which is a property of the payload —
+/// the tuner's SELL candidates are lane-snapped, so tuned payloads take
+/// the vector path whenever the context's ISA allows it.
 pub(crate) fn sell_spmv_into(s: &Sell, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
     assert_eq!(x.len(), s.ncols);
     assert_eq!(y.len(), s.nrows);
     let nchunks = s.nchunks();
     let ctx = effective(ctx, nchunks, SERIAL_UNITS);
     let yp = SendPtr(y.as_mut_ptr());
+    #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+    if ctx.isa == IsaLevel::Avx512 && s.chunk % 8 == 0 && s.chunk <= 32 {
+        run_partitioned(&ctx, nchunks, &move |r| {
+            // SAFETY: sanitized Avx512 ⇒ avx512f present; chunk shape
+            // checked above; chunks scatter to disjoint y rows.
+            unsafe { super::simd::avx512::sell_spmv_chunks(s, x, yp.0, r) }
+        });
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if ctx.isa.vectorized() && s.chunk % 4 == 0 && s.chunk <= 32 {
+        run_partitioned(&ctx, nchunks, &move |r| {
+            // SAFETY: sanitized `isa` ≥ Avx2 ⇒ avx2 + fma present; chunk
+            // shape checked above; chunks scatter to disjoint y rows.
+            unsafe { super::simd::avx2::sell_spmv_chunks(s, x, yp.0, r) }
+        });
+        return;
+    }
     run_partitioned(&ctx, nchunks, &move |r| {
         let c = s.chunk;
         let mut acc = vec![0.0f64; c];
@@ -731,6 +875,36 @@ mod tests {
         let mut y = vec![f64::NAN; a.nrows];
         spmv_parallel_into(&a, &x, &mut y, 4, Policy::Dynamic(64));
         assert_close(&y, &a.spmv(&x));
+    }
+
+    #[test]
+    fn first_touch_preserves_zero_buffers_at_any_size() {
+        let ctx = ExecCtx::pooled(4, Policy::Dynamic(2));
+        for n in [0usize, 3, 512, 513, 5000] {
+            let mut buf = vec![0.0f64; n];
+            first_touch(&mut buf, &ctx);
+            assert!(buf.iter().all(|v| *v == 0.0), "n = {n}");
+        }
+    }
+
+    #[test]
+    fn forced_portable_matches_detected_isa_for_every_format() {
+        let a = test_matrix();
+        let x = random_vector(a.ncols, 67);
+        let want = a.spmv(&x);
+        let portable = ExecCtx::pooled(4, Policy::Dynamic(32)).with_isa(IsaLevel::Portable);
+        let mut y = vec![f64::NAN; a.nrows];
+        csr_spmv_into(&a, &x, &mut y, &portable);
+        assert_close(&y, &want);
+        y.fill(f64::NAN);
+        ell_spmv_into(&Ell::from_csr(&a, 0), &x, &mut y, &portable);
+        assert_close(&y, &want);
+        y.fill(f64::NAN);
+        bcsr_spmv_into(&Bcsr::from_csr(&a, 4, 2), &x, &mut y, &portable);
+        assert_close(&y, &want);
+        y.fill(f64::NAN);
+        sell_spmv_into(&Sell::from_csr(&a, 8, 64), &x, &mut y, &portable);
+        assert_close(&y, &want);
     }
 
     #[test]

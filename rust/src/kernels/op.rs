@@ -25,8 +25,9 @@ use crate::sched::{Policy, WorkerPool};
 use crate::sparse::{Bcsr, Csr, Ell, Hyb, Sell};
 
 use super::native;
+use super::simd::IsaLevel;
 
-/// How a kernel call executes: worker count, schedule, and backend.
+/// How a kernel call executes: worker count, schedule, backend, and ISA.
 #[derive(Clone, Copy)]
 pub struct ExecCtx<'p> {
     /// Worker lanes requested (clamped to ≥ 1 by the kernels).
@@ -36,30 +37,43 @@ pub struct ExecCtx<'p> {
     /// `Some(pool)` reuses the pool's parked workers; `None` spawns
     /// threads per call (the ablation baseline).
     pub pool: Option<&'p WorkerPool>,
+    /// Vector instruction set the inner loops dispatch to. Every
+    /// constructor starts from [`IsaLevel::detect`]; kernels clamp to
+    /// what the host can actually execute, so an over-asking context
+    /// degrades instead of faulting.
+    pub isa: IsaLevel,
 }
 
 impl ExecCtx<'static> {
     /// Execution on the process-wide [`WorkerPool::global`] pool — the
     /// default for every serving and tuning path.
     pub fn pooled(threads: usize, policy: Policy) -> ExecCtx<'static> {
-        ExecCtx { threads, policy, pool: Some(WorkerPool::global()) }
+        ExecCtx { threads, policy, pool: Some(WorkerPool::global()), isa: IsaLevel::detect() }
     }
 
     /// Spawn-per-call execution (what every kernel did before the pool).
     pub fn spawning(threads: usize, policy: Policy) -> ExecCtx<'static> {
-        ExecCtx { threads, policy, pool: None }
+        ExecCtx { threads, policy, pool: None, isa: IsaLevel::detect() }
     }
 
     /// Single-threaded execution on the calling thread.
     pub fn serial() -> ExecCtx<'static> {
-        ExecCtx { threads: 1, policy: Policy::Dynamic(64), pool: None }
+        ExecCtx { threads: 1, policy: Policy::Dynamic(64), pool: None, isa: IsaLevel::detect() }
     }
 }
 
 impl<'p> ExecCtx<'p> {
     /// Execution on an explicit (typically test-owned) pool.
     pub fn on_pool(pool: &'p WorkerPool, threads: usize, policy: Policy) -> ExecCtx<'p> {
-        ExecCtx { threads, policy, pool: Some(pool) }
+        ExecCtx { threads, policy, pool: Some(pool), isa: IsaLevel::detect() }
+    }
+
+    /// The same context at an explicit ISA level — the ablation and
+    /// benchmarking lever (`IsaLevel::Portable` forces the scalar
+    /// reference loops regardless of what the host supports).
+    pub fn with_isa(mut self, isa: IsaLevel) -> ExecCtx<'p> {
+        self.isa = isa;
+        self
     }
 
     /// Utilization probe of the backing pool, if this context has one
@@ -449,6 +463,22 @@ mod tests {
         let mut yk = vec![f64::NAN; a.nrows * k];
         (&a as &dyn SpmvOp).apply(Workload::Spmm { k }, &xk, &mut yk, &ctx);
         assert_close(&yk, &a.spmm(&xk, k));
+    }
+
+    #[test]
+    fn isa_override_forces_the_portable_path_with_identical_results() {
+        use crate::kernels::IsaLevel;
+        let a = matrix();
+        let x = random_vector(a.ncols, 41);
+        let want = a.spmv(&x);
+        for op in all_ops(&a) {
+            let portable = op.spmv(&x, &ExecCtx::serial().with_isa(IsaLevel::Portable));
+            let detected = op.spmv(&x, &ExecCtx::serial());
+            let clamped = op.spmv(&x, &ExecCtx::serial().with_isa(IsaLevel::Avx512));
+            assert_close(&portable, &want);
+            assert_close(&detected, &want);
+            assert_close(&clamped, &want);
+        }
     }
 
     #[test]

@@ -1,0 +1,711 @@
+//! ISA-dispatched vectorized inner kernels (paper §3: the Phi's whole
+//! premise is 512-bit SIMD; on commodity hosts the same argument holds
+//! at AVX2/AVX-512 widths).
+//!
+//! The scalar loops in [`super::native`] stay the always-correct
+//! reference; this module adds `std::arch` variants of the hot loops —
+//! CSR row dot-product, ELL stripe, BCSR dense block, SELL chunk
+//! (chunk height C = SIMD lane count, the format's design point,
+//! arXiv:1307.6209), and the column-blocked SpMM accumulator — selected
+//! by an [`IsaLevel`] carried in [`super::ExecCtx`]:
+//!
+//! ```text
+//! IsaLevel::detect()  ──►  ExecCtx { isa, … }  ──►  native::*_into
+//!   (feature probe,                                   match isa {
+//!    cached once,                                       Avx2 ⇒ simd::avx2::…,
+//!    PALLAS_ISA                                         _    ⇒ scalar loop,
+//!    override)                                        }
+//! ```
+//!
+//! Dispatch happens per parallel unit (a row range or chunk range), not
+//! per element: `#[target_feature]` functions don't inline into generic
+//! callers, so each unsafe call must amortize over a whole range.
+//! AVX-512 intrinsics require a newer stable compiler than the AVX2
+//! set, so they sit behind the off-by-default `avx512` cargo feature;
+//! without it detection tops out at [`IsaLevel::Avx2`].
+//!
+//! The level is tuner-visible: SELL `c` candidates snap to
+//! [`IsaLevel::lanes`], the cost model scales its instruction stream by
+//! [`IsaLevel::flop_throughput`], and the tuning-cache key absorbs the
+//! level so decisions tuned on one machine don't silently apply on
+//! another.
+
+use std::fmt;
+use std::sync::OnceLock;
+
+/// Environment variable that caps/forces the detected ISA level
+/// (`portable`, `avx2`, `avx512`). Requests above what the host
+/// supports are clamped down, so `PALLAS_ISA=avx512` on an AVX2
+/// machine runs AVX2, and an unparsable value falls back to detection.
+pub const ISA_ENV: &str = "PALLAS_ISA";
+
+/// Vector instruction-set level a kernel dispatch runs at, ordered by
+/// width: `Portable < Avx2 < Avx512`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum IsaLevel {
+    /// The scalar Rust loops in `kernels::native` — always correct,
+    /// the oracle the SIMD property tests compare against.
+    #[default]
+    Portable,
+    /// 256-bit AVX2 + FMA (4 × f64 lanes).
+    Avx2,
+    /// 512-bit AVX-512F (8 × f64 lanes). Only reachable when the
+    /// `avx512` cargo feature is on *and* the host reports `avx512f`.
+    Avx512,
+}
+
+impl IsaLevel {
+    /// f64 lanes per vector register at this level (1/4/8).
+    pub fn lanes(self) -> usize {
+        match self {
+            IsaLevel::Portable => 1,
+            IsaLevel::Avx2 => 4,
+            IsaLevel::Avx512 => 8,
+        }
+    }
+
+    /// Stable lowercase name, also the `PALLAS_ISA` vocabulary and the
+    /// value exported in telemetry snapshots.
+    pub fn name(self) -> &'static str {
+        match self {
+            IsaLevel::Portable => "portable",
+            IsaLevel::Avx2 => "avx2",
+            IsaLevel::Avx512 => "avx512",
+        }
+    }
+
+    /// Inverse of [`IsaLevel::name`] (case-insensitive).
+    pub fn parse(s: &str) -> Option<IsaLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "portable" | "scalar" => Some(IsaLevel::Portable),
+            "avx2" => Some(IsaLevel::Avx2),
+            "avx512" => Some(IsaLevel::Avx512),
+            _ => None,
+        }
+    }
+
+    /// Whether this level has vector kernels at all.
+    pub fn vectorized(self) -> bool {
+        self != IsaLevel::Portable
+    }
+
+    /// Relative arithmetic throughput vs the scalar loops, used by the
+    /// cost model to scale its instruction-stream term (memory terms
+    /// are untouched — the gather traffic is identical). Deliberately
+    /// below the lane count: gathers and horizontal sums eat a large
+    /// part of the theoretical width.
+    pub fn flop_throughput(self) -> f64 {
+        match self {
+            IsaLevel::Portable => 1.0,
+            IsaLevel::Avx2 => 2.0,
+            IsaLevel::Avx512 => 3.0,
+        }
+    }
+
+    /// Best level the *host* supports, independent of any override:
+    /// a runtime CPUID probe (cached by `std`), capped by how the
+    /// binary was compiled (`avx512` cargo feature).
+    pub fn available() -> IsaLevel {
+        #[cfg(target_arch = "x86_64")]
+        {
+            #[cfg(feature = "avx512")]
+            {
+                if is_x86_feature_detected!("avx512f") {
+                    return IsaLevel::Avx512;
+                }
+            }
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return IsaLevel::Avx2;
+            }
+        }
+        IsaLevel::Portable
+    }
+
+    /// The process-wide level every `ExecCtx` constructor starts from:
+    /// [`IsaLevel::available`] clamped by the `PALLAS_ISA` override,
+    /// resolved once and cached (the probe and the env read both
+    /// happen on first use).
+    pub fn detect() -> IsaLevel {
+        static DETECTED: OnceLock<IsaLevel> = OnceLock::new();
+        *DETECTED.get_or_init(|| {
+            let avail = IsaLevel::available();
+            match std::env::var(ISA_ENV) {
+                Ok(s) => match IsaLevel::parse(&s) {
+                    Some(asked) => asked.min(avail),
+                    None => {
+                        eprintln!("[simd] unrecognized {ISA_ENV}={s:?}; using {avail}");
+                        avail
+                    }
+                },
+                Err(_) => avail,
+            }
+        })
+    }
+
+    /// Clamps an explicitly requested level to what the host can
+    /// execute. Kernels sanitize at dispatch so a hand-built
+    /// `ExecCtx` asking for AVX-512 on an AVX2 box degrades instead of
+    /// faulting.
+    pub fn sanitized(self) -> IsaLevel {
+        self.min(IsaLevel::available())
+    }
+}
+
+impl fmt::Display for IsaLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Format family of a `SpmvOp::format_name`-style string: the leading
+/// alphabetic prefix (`"sell8-256"` → `"sell"`, `"bcsr4x2"` →
+/// `"bcsr"`). Telemetry buckets kernel time by family.
+pub fn format_family(name: &str) -> &str {
+    let end = name.find(|c: char| !c.is_ascii_alphabetic()).unwrap_or(name.len());
+    &name[..end]
+}
+
+/// Whether `isa` has an explicit vector kernel for this format family
+/// under a `k`-wide workload (`k == 1` is SpMV). BCSR and SELL batch
+/// (SpMM) kernels are portable-only today; HYB counts as vectorized
+/// because its ELL part (the bulk by construction) dispatches. SELL
+/// chunks whose C is not a lane multiple still fall back to the scalar
+/// loop at run time — the tuner's shapes are lane-snapped, so that
+/// only applies to hand-built payloads.
+pub fn vectorized_for(isa: IsaLevel, family: &str, k: usize) -> bool {
+    if !isa.vectorized() {
+        return false;
+    }
+    match family {
+        "csr" | "ell" | "hyb" => true,
+        "bcsr" | "sell" => k == 1,
+        _ => false,
+    }
+}
+
+/// AVX2 + FMA kernels (4 × f64 lanes). Every function here requires
+/// the caller to have verified `avx2` and `fma` support — that is the
+/// single safety obligation, discharged by dispatching only on a
+/// [`IsaLevel::sanitized`] level.
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2 {
+    use crate::sparse::{Bcsr, Csr, Ell, Sell};
+    use core::arch::x86_64::*;
+    use std::ops::Range;
+
+    /// Sums the four lanes of `v`.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn hsum(v: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(v);
+        let hi = _mm256_extractf128_pd::<1>(v);
+        let s = _mm_add_pd(lo, hi);
+        let odd = _mm_unpackhi_pd(s, s);
+        _mm_cvtsd_f64(_mm_add_sd(s, odd))
+    }
+
+    /// CSR SpMV over rows `r` (`ys[0]` is row `r.start`): 4 values per
+    /// FMA, manual x-gather, scalar remainder.
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA. Slice bounds are checked as in the scalar
+    /// kernel.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn csr_spmv_rows(a: &Csr, x: &[f64], ys: &mut [f64], r: Range<usize>) {
+        for (yi, i) in ys.iter_mut().zip(r) {
+            let cids = a.row_cids(i);
+            let vals = a.row_vals(i);
+            let mut acc = _mm256_setzero_pd();
+            let mut k = 0usize;
+            while k + 4 <= vals.len() {
+                let v = _mm256_loadu_pd(vals.as_ptr().add(k));
+                let g = _mm256_set_pd(
+                    x[cids[k + 3] as usize],
+                    x[cids[k + 2] as usize],
+                    x[cids[k + 1] as usize],
+                    x[cids[k] as usize],
+                );
+                acc = _mm256_fmadd_pd(v, g, acc);
+                k += 4;
+            }
+            let mut sum = hsum(acc);
+            while k < vals.len() {
+                sum += vals[k] * x[cids[k] as usize];
+                k += 1;
+            }
+            *yi = sum;
+        }
+    }
+
+    /// ELL SpMV over rows `r`: same shape as the CSR kernel but on the
+    /// fixed-width padded stripe (padded slots multiply an explicit
+    /// 0.0 at the sentinel column, as in the scalar loop).
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn ell_spmv_rows(e: &Ell, x: &[f64], ys: &mut [f64], r: Range<usize>) {
+        let w = e.width;
+        for (yi, i) in ys.iter_mut().zip(r) {
+            let base = i * w;
+            let vals = &e.vals[base..base + w];
+            let cids = &e.cids[base..base + w];
+            let mut acc = _mm256_setzero_pd();
+            let mut k = 0usize;
+            while k + 4 <= w {
+                let v = _mm256_loadu_pd(vals.as_ptr().add(k));
+                let g = _mm256_set_pd(
+                    x[cids[k + 3] as usize],
+                    x[cids[k + 2] as usize],
+                    x[cids[k + 1] as usize],
+                    x[cids[k] as usize],
+                );
+                acc = _mm256_fmadd_pd(v, g, acc);
+                k += 4;
+            }
+            let mut sum = hsum(acc);
+            while k < w {
+                sum += vals[k] * x[cids[k] as usize];
+                k += 1;
+            }
+            *yi = sum;
+        }
+    }
+
+    /// BCSR SpMV over block rows `br_range` (`ys[0]` is scalar row
+    /// `br_range.start * b.r`): each block row × x window is a
+    /// contiguous dual-load dot product — no gather at all, the
+    /// format's selling point. Accumulates into `ys`, so the caller
+    /// zeroes y first (as the scalar kernel does).
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn bcsr_spmv_rows(b: &Bcsr, x: &[f64], ys: &mut [f64], br_range: Range<usize>) {
+        let base_row = br_range.start * b.r;
+        for br in br_range {
+            let row_lo = br * b.r;
+            let row_hi = (row_lo + b.r).min(b.nrows);
+            for kblk in b.brptrs[br]..b.brptrs[br + 1] {
+                let col_lo = b.bcids[kblk] as usize * b.c;
+                let block = &b.vals[kblk * b.r * b.c..(kblk + 1) * b.r * b.c];
+                let cwidth = b.c.min(b.ncols - col_lo);
+                let xs = &x[col_lo..col_lo + cwidth];
+                for i in row_lo..row_hi {
+                    let brow = &block[(i - row_lo) * b.c..(i - row_lo) * b.c + cwidth];
+                    let mut acc = _mm256_setzero_pd();
+                    let mut j = 0usize;
+                    while j + 4 <= cwidth {
+                        let v = _mm256_loadu_pd(brow.as_ptr().add(j));
+                        let xv = _mm256_loadu_pd(xs.as_ptr().add(j));
+                        acc = _mm256_fmadd_pd(v, xv, acc);
+                        j += 4;
+                    }
+                    let mut sum = hsum(acc);
+                    while j < cwidth {
+                        sum += brow[j] * xs[j];
+                        j += 1;
+                    }
+                    ys[i - base_row] += sum;
+                }
+            }
+        }
+    }
+
+    /// SELL-C-σ SpMV over chunks `r`, scattering through the
+    /// σ-permutation into `y` (raw pointer: chunks own disjoint output
+    /// rows, exactly like the scalar kernel's `SendPtr` scatter).
+    /// Each group of 4 lanes is one accumulator register marched down
+    /// the chunk's slots — the layout exists for this loop.
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA, `s.chunk % 4 == 0 && s.chunk <= 32`
+    /// (checked at dispatch), and `y` valid for `s.nrows` writes.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn sell_spmv_chunks(s: &Sell, x: &[f64], y: *mut f64, r: Range<usize>) {
+        let c = s.chunk;
+        debug_assert!(c % 4 == 0 && c <= 32);
+        let nvec = c / 4;
+        let mut acc = [_mm256_setzero_pd(); 8];
+        let mut lane_vals = [0.0f64; 32];
+        for ch in r {
+            let lo = ch * c;
+            let lanes = s.nrows.min(lo + c) - lo;
+            let base = s.chunk_ptrs[ch];
+            let width = (s.chunk_ptrs[ch + 1] - base) / c;
+            for a in acc[..nvec].iter_mut() {
+                *a = _mm256_setzero_pd();
+            }
+            for j in 0..width {
+                let slot = base + j * c;
+                for v in 0..nvec {
+                    let vals = _mm256_loadu_pd(s.vals.as_ptr().add(slot + v * 4));
+                    let g = _mm256_set_pd(
+                        x[s.cids[slot + v * 4 + 3] as usize],
+                        x[s.cids[slot + v * 4 + 2] as usize],
+                        x[s.cids[slot + v * 4 + 1] as usize],
+                        x[s.cids[slot + v * 4] as usize],
+                    );
+                    acc[v] = _mm256_fmadd_pd(vals, g, acc[v]);
+                }
+            }
+            for v in 0..nvec {
+                _mm256_storeu_pd(lane_vals.as_mut_ptr().add(v * 4), acc[v]);
+            }
+            // Tail chunk: `lanes < c` only when nrows isn't a chunk
+            // multiple; padding lanes are computed and discarded.
+            for (lane, lv) in lane_vals[..lanes].iter().enumerate() {
+                *y.add(s.perm[lo + lane] as usize) = *lv;
+            }
+        }
+    }
+
+    /// Column-blocked CSR SpMM over rows `r` (`ys` holds `r.len() * k`
+    /// outputs): per nonzero, the value broadcast multiplies a
+    /// contiguous k-block of the X panel — up to 16 lanes in 4
+    /// registers, scalar lanes for the `k % 4` tail.
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA; `x.len() == a.ncols * k`.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn csr_spmm_rows(a: &Csr, x: &[f64], ys: &mut [f64], k: usize, r: Range<usize>) {
+        let mut accv = [_mm256_setzero_pd(); 4];
+        let mut tail = [0.0f64; 3];
+        for (row_idx, i) in r.enumerate() {
+            let cids = a.row_cids(i);
+            let vals = a.row_vals(i);
+            let mut u0 = 0usize;
+            while u0 < k {
+                let ub = (k - u0).min(16);
+                let nv = ub / 4;
+                let rem = ub % 4;
+                for av in accv[..nv].iter_mut() {
+                    *av = _mm256_setzero_pd();
+                }
+                for t in tail[..rem].iter_mut() {
+                    *t = 0.0;
+                }
+                for (idx, &cid) in cids.iter().enumerate() {
+                    let vs = vals[idx];
+                    let v = _mm256_set1_pd(vs);
+                    let xrow = x.as_ptr().add(cid as usize * k + u0);
+                    for t in 0..nv {
+                        accv[t] = _mm256_fmadd_pd(v, _mm256_loadu_pd(xrow.add(t * 4)), accv[t]);
+                    }
+                    for (t, tl) in tail[..rem].iter_mut().enumerate() {
+                        *tl += vs * *xrow.add(nv * 4 + t);
+                    }
+                }
+                let out = ys.as_mut_ptr().add(row_idx * k + u0);
+                for t in 0..nv {
+                    _mm256_storeu_pd(out.add(t * 4), accv[t]);
+                }
+                for (t, tl) in tail[..rem].iter().enumerate() {
+                    *out.add(nv * 4 + t) = *tl;
+                }
+                u0 += ub;
+            }
+        }
+    }
+
+    /// Column-blocked ELL SpMM over rows `r`: the CSR SpMM loop on the
+    /// padded stripe (padded slots contribute 0.0 × x\[sentinel·k..\]).
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA; `x.len() == e.ncols * k`.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn ell_spmm_rows(e: &Ell, x: &[f64], ys: &mut [f64], k: usize, r: Range<usize>) {
+        let mut accv = [_mm256_setzero_pd(); 4];
+        let mut tail = [0.0f64; 3];
+        for (row_idx, i) in r.enumerate() {
+            let base = i * e.width;
+            let mut u0 = 0usize;
+            while u0 < k {
+                let ub = (k - u0).min(16);
+                let nv = ub / 4;
+                let rem = ub % 4;
+                for av in accv[..nv].iter_mut() {
+                    *av = _mm256_setzero_pd();
+                }
+                for t in tail[..rem].iter_mut() {
+                    *t = 0.0;
+                }
+                for slot in 0..e.width {
+                    let vs = e.vals[base + slot];
+                    let v = _mm256_set1_pd(vs);
+                    let xrow = x.as_ptr().add(e.cids[base + slot] as usize * k + u0);
+                    for t in 0..nv {
+                        accv[t] = _mm256_fmadd_pd(v, _mm256_loadu_pd(xrow.add(t * 4)), accv[t]);
+                    }
+                    for (t, tl) in tail[..rem].iter_mut().enumerate() {
+                        *tl += vs * *xrow.add(nv * 4 + t);
+                    }
+                }
+                let out = ys.as_mut_ptr().add(row_idx * k + u0);
+                for t in 0..nv {
+                    _mm256_storeu_pd(out.add(t * 4), accv[t]);
+                }
+                for (t, tl) in tail[..rem].iter().enumerate() {
+                    *out.add(nv * 4 + t) = *tl;
+                }
+                u0 += ub;
+            }
+        }
+    }
+}
+
+/// AVX-512F kernels (8 × f64 lanes), compiled only under the `avx512`
+/// cargo feature (the intrinsics need a newer stable toolchain than
+/// the AVX2 set). Formats without an explicit 512-bit kernel dispatch
+/// to the AVX2 variants at this level.
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+pub(crate) mod avx512 {
+    use crate::sparse::{Csr, Ell, Sell};
+    use core::arch::x86_64::*;
+    use std::ops::Range;
+
+    /// CSR SpMV over rows `r`: 8 values per FMA, `_mm512_reduce_add_pd`
+    /// horizontal sum, scalar remainder.
+    ///
+    /// # Safety
+    /// Requires AVX-512F.
+    #[target_feature(enable = "avx512f")]
+    pub(crate) unsafe fn csr_spmv_rows(a: &Csr, x: &[f64], ys: &mut [f64], r: Range<usize>) {
+        for (yi, i) in ys.iter_mut().zip(r) {
+            let cids = a.row_cids(i);
+            let vals = a.row_vals(i);
+            let mut acc = _mm512_setzero_pd();
+            let mut k = 0usize;
+            while k + 8 <= vals.len() {
+                let v = _mm512_loadu_pd(vals.as_ptr().add(k));
+                let g = _mm512_set_pd(
+                    x[cids[k + 7] as usize],
+                    x[cids[k + 6] as usize],
+                    x[cids[k + 5] as usize],
+                    x[cids[k + 4] as usize],
+                    x[cids[k + 3] as usize],
+                    x[cids[k + 2] as usize],
+                    x[cids[k + 1] as usize],
+                    x[cids[k] as usize],
+                );
+                acc = _mm512_fmadd_pd(v, g, acc);
+                k += 8;
+            }
+            let mut sum = _mm512_reduce_add_pd(acc);
+            while k < vals.len() {
+                sum += vals[k] * x[cids[k] as usize];
+                k += 1;
+            }
+            *yi = sum;
+        }
+    }
+
+    /// ELL SpMV over rows `r`, 8-wide on the padded stripe.
+    ///
+    /// # Safety
+    /// Requires AVX-512F.
+    #[target_feature(enable = "avx512f")]
+    pub(crate) unsafe fn ell_spmv_rows(e: &Ell, x: &[f64], ys: &mut [f64], r: Range<usize>) {
+        let w = e.width;
+        for (yi, i) in ys.iter_mut().zip(r) {
+            let base = i * w;
+            let vals = &e.vals[base..base + w];
+            let cids = &e.cids[base..base + w];
+            let mut acc = _mm512_setzero_pd();
+            let mut k = 0usize;
+            while k + 8 <= w {
+                let v = _mm512_loadu_pd(vals.as_ptr().add(k));
+                let g = _mm512_set_pd(
+                    x[cids[k + 7] as usize],
+                    x[cids[k + 6] as usize],
+                    x[cids[k + 5] as usize],
+                    x[cids[k + 4] as usize],
+                    x[cids[k + 3] as usize],
+                    x[cids[k + 2] as usize],
+                    x[cids[k + 1] as usize],
+                    x[cids[k] as usize],
+                );
+                acc = _mm512_fmadd_pd(v, g, acc);
+                k += 8;
+            }
+            let mut sum = _mm512_reduce_add_pd(acc);
+            while k < w {
+                sum += vals[k] * x[cids[k] as usize];
+                k += 1;
+            }
+            *yi = sum;
+        }
+    }
+
+    /// SELL-C-σ SpMV over chunks `r` with 8-lane accumulators.
+    ///
+    /// # Safety
+    /// Requires AVX-512F, `s.chunk % 8 == 0 && s.chunk <= 32` (checked
+    /// at dispatch), and `y` valid for `s.nrows` writes.
+    #[target_feature(enable = "avx512f")]
+    pub(crate) unsafe fn sell_spmv_chunks(s: &Sell, x: &[f64], y: *mut f64, r: Range<usize>) {
+        let c = s.chunk;
+        debug_assert!(c % 8 == 0 && c <= 32);
+        let nvec = c / 8;
+        let mut acc = [_mm512_setzero_pd(); 4];
+        let mut lane_vals = [0.0f64; 32];
+        for ch in r {
+            let lo = ch * c;
+            let lanes = s.nrows.min(lo + c) - lo;
+            let base = s.chunk_ptrs[ch];
+            let width = (s.chunk_ptrs[ch + 1] - base) / c;
+            for a in acc[..nvec].iter_mut() {
+                *a = _mm512_setzero_pd();
+            }
+            for j in 0..width {
+                let slot = base + j * c;
+                for v in 0..nvec {
+                    let vals = _mm512_loadu_pd(s.vals.as_ptr().add(slot + v * 8));
+                    let g = _mm512_set_pd(
+                        x[s.cids[slot + v * 8 + 7] as usize],
+                        x[s.cids[slot + v * 8 + 6] as usize],
+                        x[s.cids[slot + v * 8 + 5] as usize],
+                        x[s.cids[slot + v * 8 + 4] as usize],
+                        x[s.cids[slot + v * 8 + 3] as usize],
+                        x[s.cids[slot + v * 8 + 2] as usize],
+                        x[s.cids[slot + v * 8 + 1] as usize],
+                        x[s.cids[slot + v * 8] as usize],
+                    );
+                    acc[v] = _mm512_fmadd_pd(vals, g, acc[v]);
+                }
+            }
+            for v in 0..nvec {
+                _mm512_storeu_pd(lane_vals.as_mut_ptr().add(v * 8), acc[v]);
+            }
+            for (lane, lv) in lane_vals[..lanes].iter().enumerate() {
+                *y.add(s.perm[lo + lane] as usize) = *lv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_are_ordered_by_width() {
+        assert!(IsaLevel::Portable < IsaLevel::Avx2);
+        assert!(IsaLevel::Avx2 < IsaLevel::Avx512);
+        assert!(IsaLevel::Portable.lanes() < IsaLevel::Avx2.lanes());
+        assert!(IsaLevel::Avx2.lanes() < IsaLevel::Avx512.lanes());
+        assert!(IsaLevel::Portable.flop_throughput() < IsaLevel::Avx2.flop_throughput());
+        assert!(IsaLevel::Avx2.flop_throughput() < IsaLevel::Avx512.flop_throughput());
+    }
+
+    #[test]
+    fn name_parse_roundtrip() {
+        for isa in [IsaLevel::Portable, IsaLevel::Avx2, IsaLevel::Avx512] {
+            assert_eq!(IsaLevel::parse(isa.name()), Some(isa));
+            assert_eq!(format!("{isa}"), isa.name());
+        }
+        assert_eq!(IsaLevel::parse(" AVX2 "), Some(IsaLevel::Avx2));
+        assert_eq!(IsaLevel::parse("scalar"), Some(IsaLevel::Portable));
+        assert_eq!(IsaLevel::parse("neon"), None);
+    }
+
+    #[test]
+    fn detection_is_cached_and_within_bounds() {
+        let d = IsaLevel::detect();
+        assert_eq!(d, IsaLevel::detect());
+        assert!(d <= IsaLevel::available());
+    }
+
+    #[test]
+    fn sanitize_clamps_to_host() {
+        assert_eq!(IsaLevel::Portable.sanitized(), IsaLevel::Portable);
+        assert!(IsaLevel::Avx512.sanitized() <= IsaLevel::available());
+    }
+
+    #[test]
+    fn format_families() {
+        assert_eq!(format_family("csr"), "csr");
+        assert_eq!(format_family("ell"), "ell");
+        assert_eq!(format_family("bcsr4x2"), "bcsr");
+        assert_eq!(format_family("hyb8"), "hyb");
+        assert_eq!(format_family("sell8-256"), "sell");
+        assert_eq!(format_family(""), "");
+    }
+
+    #[test]
+    fn vector_coverage_by_family_and_workload() {
+        for family in ["csr", "ell", "bcsr", "hyb", "sell"] {
+            assert!(!vectorized_for(IsaLevel::Portable, family, 1));
+        }
+        assert!(vectorized_for(IsaLevel::Avx2, "csr", 1));
+        assert!(vectorized_for(IsaLevel::Avx2, "csr", 16));
+        assert!(vectorized_for(IsaLevel::Avx2, "ell", 16));
+        assert!(vectorized_for(IsaLevel::Avx2, "hyb", 16));
+        assert!(vectorized_for(IsaLevel::Avx2, "sell", 1));
+        assert!(!vectorized_for(IsaLevel::Avx2, "sell", 16));
+        assert!(vectorized_for(IsaLevel::Avx2, "bcsr", 1));
+        assert!(!vectorized_for(IsaLevel::Avx2, "bcsr", 16));
+        assert!(!vectorized_for(IsaLevel::Avx2, "dense", 1));
+    }
+
+    // Direct (un-dispatched) oracle checks for the AVX2 kernels; the
+    // dispatch path itself is covered by `tests/simd_props.rs`.
+    #[cfg(target_arch = "x86_64")]
+    mod avx2_direct {
+        use super::super::{avx2, IsaLevel};
+        use crate::sparse::gen::stencil::stencil_2d;
+        use crate::sparse::gen::{random_vector, randomize_values};
+        use crate::sparse::{Bcsr, Ell, Sell};
+
+        fn close(u: &[f64], v: &[f64]) {
+            assert_eq!(u.len(), v.len());
+            for (a, b) in u.iter().zip(v) {
+                assert!((a - b).abs() <= 1e-9 * b.abs().max(1.0), "{a} vs {b}");
+            }
+        }
+
+        #[test]
+        fn kernels_match_scalar_reference() {
+            if IsaLevel::available() < IsaLevel::Avx2 {
+                return; // nothing to check on pre-AVX2 silicon
+            }
+            let mut a = stencil_2d(13, 9);
+            randomize_values(&mut a, 42);
+            let x = random_vector(a.ncols, 3);
+            let want = a.spmv(&x);
+
+            let mut y = vec![0.0f64; a.nrows];
+            unsafe { avx2::csr_spmv_rows(&a, &x, &mut y, 0..a.nrows) };
+            close(&y, &want);
+
+            let e = Ell::from_csr(&a, 0);
+            y.fill(0.0);
+            unsafe { avx2::ell_spmv_rows(&e, &x, &mut y, 0..a.nrows) };
+            close(&y, &want);
+
+            let b = Bcsr::from_csr(&a, 4, 2);
+            y.fill(0.0);
+            unsafe { avx2::bcsr_spmv_rows(&b, &x, &mut y, 0..b.nbrows()) };
+            close(&y, &want);
+
+            let s = Sell::from_csr(&a, 8, 64);
+            y.fill(0.0);
+            unsafe { avx2::sell_spmv_chunks(&s, &x, y.as_mut_ptr(), 0..s.nchunks()) };
+            close(&y, &want);
+
+            for k in [1usize, 3, 4, 16, 17] {
+                let xp = random_vector(a.ncols * k, 7 + k as u64);
+                let want_p = a.spmm(&xp, k);
+                let mut yp = vec![0.0f64; a.nrows * k];
+                unsafe { avx2::csr_spmm_rows(&a, &xp, &mut yp, k, 0..a.nrows) };
+                close(&yp, &want_p);
+                yp.fill(0.0);
+                unsafe { avx2::ell_spmm_rows(&e, &xp, &mut yp, k, 0..a.nrows) };
+                close(&yp, &want_p);
+            }
+        }
+    }
+}

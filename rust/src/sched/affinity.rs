@@ -1,0 +1,75 @@
+//! Thread→CPU pinning via a raw `sched_setaffinity` syscall.
+//!
+//! The crate carries no libc dependency, so the one OS call that
+//! pinning needs is issued directly (Linux x86-64 syscall 203 with
+//! `pid = 0`, i.e. the calling thread). Everywhere else —
+//! non-Linux, non-x86-64 — [`pin_current_thread`] is a deliberate
+//! no-op returning `false`, so callers pin opportunistically and the
+//! [`super::WorkerPool`] probe reports how many workers actually
+//! landed.
+
+/// Maximum CPUs representable in the affinity mask: 1024, matching
+/// glibc's default `cpu_set_t` width.
+pub const MAX_CPUS: usize = 1024;
+
+/// Pins the calling thread to `cpu`. Returns `true` on success,
+/// `false` when the kernel refuses (e.g. the CPU is outside the
+/// process's cpuset) or on hosts where pinning isn't implemented.
+pub fn pin_current_thread(cpu: usize) -> bool {
+    pin_impl(cpu)
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn pin_impl(cpu: usize) -> bool {
+    if cpu >= MAX_CPUS {
+        return false;
+    }
+    let mut mask = [0u64; MAX_CPUS / 64];
+    mask[cpu / 64] = 1u64 << (cpu % 64);
+    // sched_setaffinity(pid = 0 → calling thread, size, mask). The
+    // kernel copies the mask in during the call, so the stack buffer
+    // needs no lifetime beyond it. `syscall` clobbers rcx/r11 (and
+    // rflags, which asm! assumes clobbered by default).
+    let ret: i64;
+    unsafe {
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") 203i64 => ret,
+            in("rdi") 0usize,
+            in("rsi") std::mem::size_of_val(&mask),
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+fn pin_impl(_cpu: usize) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_of_range_cpu_is_rejected() {
+        assert!(!pin_current_thread(MAX_CPUS));
+        assert!(!pin_current_thread(usize::MAX));
+    }
+
+    #[test]
+    fn pinning_to_cpu0_succeeds_on_linux() {
+        // CPU 0 exists on every host this runs on; do it on a scratch
+        // thread so the test harness thread's affinity is untouched.
+        let ok = std::thread::spawn(|| pin_current_thread(0)).join().unwrap();
+        if cfg!(all(target_os = "linux", target_arch = "x86_64")) {
+            assert!(ok, "pinning to CPU 0 must succeed on Linux x86-64");
+        } else {
+            assert!(!ok, "pinning must be a no-op off Linux x86-64");
+        }
+    }
+}

@@ -5,13 +5,14 @@
 //! policies drive (a) the native multithreaded Rust kernels (via an atomic
 //! chunk-claiming iterator) and (b) the simulator's work distribution.
 
+pub mod affinity;
 pub mod balance;
 pub mod policy;
 pub mod pool;
 
 pub use balance::LoadBalance;
 pub use policy::{ChunkIter, Policy, StaticAssignment};
-pub use pool::{run_spawned, PoolProbe, WorkerPool};
+pub use pool::{configure_global, run_spawned, Placement, PoolConfig, PoolProbe, WorkerPool};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 

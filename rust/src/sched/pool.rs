@@ -16,10 +16,21 @@
 //! finished the current generation, not merely after all tasks are claimed
 //! — is what makes the job pointer's lifetime sound and prevents a slow
 //! worker from claiming into the next call's counter.
+//!
+//! Workers can opt into CPU pinning ([`PoolConfig`]): each worker pins
+//! itself to one CPU chosen by a [`Placement`] before first parking, via
+//! [`super::affinity::pin_current_thread`] (Linux x86-64; a no-op
+//! elsewhere). Pinned workers keep their caches and — together with
+//! first-touch initialization of kernel buffers
+//! ([`crate::kernels::native::first_touch`]) — their local memory pages
+//! across generations. The probe reports how many workers actually
+//! landed on their CPU.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock};
 use std::time::Instant;
+
+use super::affinity;
 
 /// The job signature: called once per task index in `0..ntasks`.
 type Job = dyn Fn(usize) + Sync;
@@ -62,6 +73,86 @@ struct Shared {
     serial_runs: AtomicU64,
     /// Pool creation time (probe uptime baseline).
     created: Instant,
+    /// Workers whose `sched_setaffinity` call succeeded (0 when pinning
+    /// is off or unsupported on this host).
+    pinned_workers: AtomicUsize,
+}
+
+/// How pinned workers are laid out over the host's CPUs.
+///
+/// CPU 0 is always left to the calling thread — the caller is the pool's
+/// extra lane, and the OS tends to park interrupt handling there anyway.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum Placement {
+    /// Workers on consecutive CPUs starting at 1 — neighbours share
+    /// caches, best for kernels whose lanes touch adjacent rows.
+    #[default]
+    Compact,
+    /// Workers spread evenly across the CPU range — maximizes per-worker
+    /// cache and memory bandwidth on multi-socket / multi-CCX hosts.
+    Scatter,
+}
+
+impl Placement {
+    /// The CPU for worker `idx` of `nworkers` on a host with `ncpus`
+    /// CPUs. Wraps modulo `ncpus`, so oversubscribed pools still get a
+    /// valid (if shared) CPU each.
+    pub fn cpu_for(&self, idx: usize, nworkers: usize, ncpus: usize) -> usize {
+        let ncpus = ncpus.max(1);
+        match self {
+            Placement::Compact => (idx + 1) % ncpus,
+            Placement::Scatter => ((idx + 1) * ncpus / (nworkers + 1)) % ncpus,
+        }
+    }
+
+    /// Parses `"compact"` / `"scatter"` (case-insensitive); `None`
+    /// otherwise.
+    pub fn parse(s: &str) -> Option<Placement> {
+        match s.to_ascii_lowercase().as_str() {
+            "compact" => Some(Placement::Compact),
+            "scatter" => Some(Placement::Scatter),
+            _ => None,
+        }
+    }
+}
+
+/// Construction options for a [`WorkerPool`]: worker count plus the
+/// opt-in pinning policy. `Default` matches the historical behavior —
+/// `available_parallelism - 1` unpinned workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolConfig {
+    /// Parked worker threads (the caller adds one lane).
+    pub workers: usize,
+    /// Pin each worker to one CPU at spawn. Best-effort: failures are
+    /// tolerated and surfaced via [`PoolProbe::pinned_workers`].
+    pub pin: bool,
+    /// CPU layout used when `pin` is set.
+    pub placement: Placement,
+}
+
+impl Default for PoolConfig {
+    fn default() -> PoolConfig {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        PoolConfig { workers: hw.saturating_sub(1), pin: false, placement: Placement::Compact }
+    }
+}
+
+impl PoolConfig {
+    /// The default config amended by the environment: `PALLAS_PIN`
+    /// (`1`/`true`/`yes` enable) and `PALLAS_PLACEMENT`
+    /// (`compact`/`scatter`). Unrecognized values are ignored.
+    pub fn from_env() -> PoolConfig {
+        let mut config = PoolConfig::default();
+        if let Ok(v) = std::env::var("PALLAS_PIN") {
+            config.pin = matches!(v.to_ascii_lowercase().as_str(), "1" | "true" | "yes");
+        }
+        if let Ok(v) = std::env::var("PALLAS_PLACEMENT") {
+            if let Some(p) = Placement::parse(&v) {
+                config.placement = p;
+            }
+        }
+        config
+    }
 }
 
 /// A fixed set of parked worker threads executing submitted jobs.
@@ -72,6 +163,8 @@ pub struct WorkerPool {
     /// generation is in flight at a time, so concurrent kernels queue on
     /// the pool instead of oversubscribing the machine.
     run_gate: Mutex<()>,
+    /// Pinning was requested at construction.
+    pin: bool,
 }
 
 /// Locks a mutex, ignoring poisoning (a panicked job must not wedge every
@@ -80,10 +173,33 @@ fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
+static GLOBAL_POOL: OnceLock<WorkerPool> = OnceLock::new();
+static GLOBAL_CONFIG: OnceLock<PoolConfig> = OnceLock::new();
+
+/// Sets the config [`WorkerPool::global`] will use, before its first
+/// use. Returns `true` when the config will take effect; `false` when
+/// the global pool already exists (it is never rebuilt) or a config was
+/// already registered.
+pub fn configure_global(config: PoolConfig) -> bool {
+    if GLOBAL_CONFIG.set(config).is_err() {
+        return false;
+    }
+    GLOBAL_POOL.get().is_none()
+}
+
 impl WorkerPool {
-    /// Spawns a pool of `workers` parked threads. `new(0)` is valid: every
-    /// `run` then executes serially on the calling thread.
+    /// Spawns a pool of `workers` parked, unpinned threads. `new(0)` is
+    /// valid: every `run` then executes serially on the calling thread.
     pub fn new(workers: usize) -> WorkerPool {
+        WorkerPool::with_config(PoolConfig { workers, ..PoolConfig::default() })
+    }
+
+    /// Spawns a pool per `config`. With `config.pin` set, each worker
+    /// pins itself to `config.placement.cpu_for(idx, ...)` before its
+    /// first park; failures (cpuset restrictions, non-Linux hosts)
+    /// leave that worker floating and are visible in the probe.
+    pub fn with_config(config: PoolConfig) -> WorkerPool {
+        let workers = config.workers;
         let shared = std::sync::Arc::new(Shared {
             ctrl: Mutex::new(Ctrl {
                 generation: 0,
@@ -101,24 +217,34 @@ impl WorkerPool {
             generations_run: AtomicU64::new(0),
             serial_runs: AtomicU64::new(0),
             created: Instant::now(),
+            pinned_workers: AtomicUsize::new(0),
         });
+        let ncpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         let handles = (0..workers)
             .map(|idx| {
                 let shared = shared.clone();
-                std::thread::spawn(move || worker_loop(&shared, idx))
+                let pin_cpu = config.pin.then(|| config.placement.cpu_for(idx, workers, ncpus));
+                std::thread::spawn(move || {
+                    if let Some(cpu) = pin_cpu {
+                        if affinity::pin_current_thread(cpu) {
+                            shared.pinned_workers.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    worker_loop(&shared, idx)
+                })
             })
             .collect();
-        WorkerPool { shared, handles, run_gate: Mutex::new(()) }
+        WorkerPool { shared, handles, run_gate: Mutex::new(()), pin: config.pin }
     }
 
     /// The process-wide pool shared by the native kernels, the server and
-    /// the tuner's trials: `available_parallelism - 1` workers (the caller
-    /// is the final lane), created on first use.
+    /// the tuner's trials, created on first use. Configured by
+    /// [`configure_global`] when that ran first, else by
+    /// [`PoolConfig::from_env`] (default: `available_parallelism - 1`
+    /// unpinned workers; the caller is the final lane).
     pub fn global() -> &'static WorkerPool {
-        static POOL: OnceLock<WorkerPool> = OnceLock::new();
-        POOL.get_or_init(|| {
-            let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-            WorkerPool::new(hw.saturating_sub(1))
+        GLOBAL_POOL.get_or_init(|| {
+            WorkerPool::with_config(GLOBAL_CONFIG.get().copied().unwrap_or_else(PoolConfig::from_env))
         })
     }
 
@@ -221,7 +347,21 @@ impl WorkerPool {
                 .collect(),
             caller_busy_s: self.shared.caller_busy_ns.load(Ordering::Relaxed) as f64 * 1e-9,
             uptime_s: self.shared.created.elapsed().as_secs_f64(),
+            pinned: self.pin,
+            pinned_workers: self.shared.pinned_workers.load(Ordering::Relaxed),
         }
+    }
+
+    /// Whether every worker of a pin-requested pool actually landed on
+    /// its CPU. Used to gate placement-dependent behavior (first-touch
+    /// buffer initialization is only worth its cost when workers stay
+    /// put). A worker's pin attempt strictly precedes its first park,
+    /// and the caller of any completed `run` has barriered on all
+    /// workers, so after one generation this count is stable.
+    pub fn pinned(&self) -> bool {
+        self.pin
+            && !self.handles.is_empty()
+            && self.shared.pinned_workers.load(Ordering::Relaxed) == self.handles.len()
     }
 }
 
@@ -243,6 +383,11 @@ pub struct PoolProbe {
     pub caller_busy_s: f64,
     /// Seconds since the pool was created.
     pub uptime_s: f64,
+    /// Pinning was requested at construction.
+    pub pinned: bool,
+    /// Workers whose pin attempt succeeded (≤ `workers`; 0 when pinning
+    /// is off or unsupported).
+    pub pinned_workers: usize,
 }
 
 impl PoolProbe {
@@ -491,5 +636,62 @@ mod tests {
     #[test]
     fn global_pool_is_a_singleton() {
         assert!(std::ptr::eq(WorkerPool::global(), WorkerPool::global()));
+    }
+
+    #[test]
+    fn placement_reserves_cpu0_and_stays_in_range() {
+        for &(nworkers, ncpus) in &[(3usize, 8usize), (7, 8), (1, 1), (12, 4), (5, 64)] {
+            for idx in 0..nworkers {
+                for placement in [Placement::Compact, Placement::Scatter] {
+                    let cpu = placement.cpu_for(idx, nworkers, ncpus);
+                    assert!(cpu < ncpus, "{placement:?} worker {idx}: cpu {cpu} >= {ncpus}");
+                    if nworkers < ncpus {
+                        assert_ne!(cpu, 0, "{placement:?} must leave CPU 0 to the caller");
+                    }
+                }
+            }
+        }
+        // Compact packs neighbours; scatter spreads across the range.
+        assert_eq!(Placement::Compact.cpu_for(0, 3, 8), 1);
+        assert_eq!(Placement::Compact.cpu_for(1, 3, 8), 2);
+        assert_eq!(Placement::Scatter.cpu_for(0, 3, 8), 2);
+        assert_eq!(Placement::Scatter.cpu_for(1, 3, 8), 4);
+        assert_eq!(Placement::Scatter.cpu_for(2, 3, 8), 6);
+    }
+
+    #[test]
+    fn placement_parses_names_case_insensitively() {
+        assert_eq!(Placement::parse("compact"), Some(Placement::Compact));
+        assert_eq!(Placement::parse("Scatter"), Some(Placement::Scatter));
+        assert_eq!(Placement::parse("spread"), None);
+    }
+
+    #[test]
+    fn pinned_pool_reports_its_landed_workers() {
+        let pool = WorkerPool::with_config(PoolConfig {
+            workers: 2,
+            pin: true,
+            placement: Placement::Scatter,
+        });
+        exact_coverage(&pool, 16); // generation barrier: pin attempts done
+        let probe = pool.probe();
+        assert!(probe.pinned, "pin was requested");
+        if cfg!(all(target_os = "linux", target_arch = "x86_64")) {
+            assert_eq!(probe.pinned_workers, 2, "both workers must land on Linux");
+            assert!(pool.pinned());
+        } else {
+            assert_eq!(probe.pinned_workers, 0, "pinning is a no-op off Linux x86-64");
+            assert!(!pool.pinned());
+        }
+    }
+
+    #[test]
+    fn unpinned_pool_probe_stays_dark() {
+        let pool = WorkerPool::new(2);
+        exact_coverage(&pool, 8);
+        let probe = pool.probe();
+        assert!(!probe.pinned);
+        assert_eq!(probe.pinned_workers, 0);
+        assert!(!pool.pinned());
     }
 }

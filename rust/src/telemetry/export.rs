@@ -78,11 +78,14 @@ impl TelemetrySnapshot {
                 .set("busy_s_total", p.busy_total_s())
                 .set("utilization", p.utilization())
                 .set("imbalance", p.imbalance())
-                .set("uptime_s", p.uptime_s),
+                .set("uptime_s", p.uptime_s)
+                .set("pinned", p.pinned)
+                .set("pinned_workers", p.pinned_workers),
             None => Json::Null,
         };
         let json = Json::obj()
             .set("schema", SNAPSHOT_SCHEMA)
+            .set("isa", crate::kernels::IsaLevel::detect().name())
             .set("counters", counters)
             .set("gauges", gauges)
             .set("histograms", histograms)
@@ -169,6 +172,12 @@ pub fn prometheus_text(t: &Telemetry, probe: Option<&PoolProbe>) -> String {
     for (kind, count) in t.journal.counts() {
         let _ = writeln!(out, "phi_events_total{{kind=\"{kind}\"}} {count}");
     }
+    // The ISA is a process property, not a metric — emitted as an
+    // enum-valued gauge (0 portable, 1 avx2, 2 avx512) so a fleet
+    // dashboard can group hosts by vector width.
+    let isa = crate::kernels::IsaLevel::detect();
+    let _ = writeln!(out, "# TYPE phi_isa_level gauge");
+    let _ = writeln!(out, "phi_isa_level {}", isa as u8);
     if let Some(p) = probe {
         let pool_gauges = [
             ("phi_pool_workers", p.workers as f64),
@@ -178,6 +187,8 @@ pub fn prometheus_text(t: &Telemetry, probe: Option<&PoolProbe>) -> String {
             ("phi_pool_busy_seconds_total", p.busy_total_s()),
             ("phi_pool_caller_busy_seconds_total", p.caller_busy_s),
             ("phi_pool_uptime_seconds", p.uptime_s),
+            ("phi_pool_pinned", if p.pinned { 1.0 } else { 0.0 }),
+            ("phi_pool_pinned_workers", p.pinned_workers as f64),
         ];
         for (n, v) in pool_gauges {
             let _ = writeln!(out, "# TYPE {n} gauge");
@@ -292,6 +303,11 @@ mod tests {
             .and_then(|h| h.get("count"))
             .and_then(|c| c.as_usize());
         assert_eq!(count, Some(4));
+        assert_eq!(
+            back.json.get("isa").and_then(|v| v.as_str()),
+            Some(crate::kernels::IsaLevel::detect().name()),
+            "snapshot must report the detected ISA"
+        );
         assert!(TelemetrySnapshot::parse("{\"schema\":\"nope\"}").is_err());
     }
 
@@ -302,6 +318,7 @@ mod tests {
         let samples = validate_prometheus(&text).unwrap();
         assert!(samples >= 8, "counters, gauge, histogram series, event counters:\n{text}");
         assert!(text.contains("phi_request_latency_seconds_bucket{le=\"+Inf\"} 4"));
+        assert!(text.contains("phi_isa_level "), "ISA gauge must always be exposed");
         assert!(validate_prometheus("not a metric line").is_err());
         assert!(validate_prometheus("bad-name 1").is_err());
         assert!(validate_prometheus("name notanumber").is_err());

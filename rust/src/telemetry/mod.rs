@@ -92,6 +92,15 @@ pub mod names {
     pub const FLEET_RETUNES: &str = "fleet_retunes_total";
     /// Counter: adaptive batch-width moves.
     pub const FLEET_WIDTH_CHANGES: &str = "fleet_width_changes_total";
+
+    /// Counter name for kernel nanoseconds attributed to one format
+    /// family on the vector or the portable path —
+    /// `kernel_ns_{family}_{vector|portable}`. Derived (not a constant)
+    /// because the family axis is open-ended; family strings come from
+    /// [`crate::kernels::simd::format_family`].
+    pub fn kernel_ns(family: &str, vectorized: bool) -> String {
+        format!("kernel_ns_{family}_{}", if vectorized { "vector" } else { "portable" })
+    }
 }
 
 /// Default bounded capacity of a [`Telemetry`] instance's event journal.

@@ -35,10 +35,13 @@ use super::space::{parse_policy, Candidate, Format, Ordering};
 /// version 3 added the ordering axis: the key hash covers the ordering
 /// search knobs and entries carry an `ordering` field, so a version-2
 /// decision — searched without RCM candidates — must not answer a
-/// version-3 lookup. Stale-version keys can never match a current lookup,
-/// so [`TuningCache::load`] discards stale-version files wholesale instead
-/// of carrying unreachable entries forever.
-const CACHE_VERSION: usize = 3;
+/// version-3 lookup. Version 4 folded the detected
+/// [`crate::kernels::IsaLevel`] into the key hash: a decision trialed
+/// with AVX-512 kernels (and a lane-snapped SELL space) must not answer
+/// a portable run of the same binary. Stale-version keys can never match
+/// a current lookup, so [`TuningCache::load`] discards stale-version
+/// files wholesale instead of carrying unreachable entries forever.
+const CACHE_VERSION: usize = 4;
 
 /// Unix-epoch seconds now — the stamp [`TunedConfig::tuned_at`] carries.
 pub fn now_epoch() -> u64 {
@@ -545,16 +548,16 @@ mod tests {
     fn rejects_bad_versions_and_shapes() {
         assert!(TuningCache::from_json(&Json::parse(r#"{"version": 9}"#).unwrap()).is_err());
         assert!(
-            TuningCache::from_json(&Json::parse(r#"{"version": 3, "entries": 3}"#).unwrap())
+            TuningCache::from_json(&Json::parse(r#"{"version": 4, "entries": 3}"#).unwrap())
                 .is_err()
         );
         let bad_format =
-            r#"{"version": 3, "entries": {"k": {"format": "zzz", "policy": "static", "threads": 1}}}"#;
+            r#"{"version": 4, "entries": {"k": {"format": "zzz", "policy": "static", "threads": 1}}}"#;
         assert!(TuningCache::from_json(&Json::parse(bad_format).unwrap()).is_err());
-        let bad_workload = r#"{"version": 3, "entries": {"k": {"workload": "spmm0",
+        let bad_workload = r#"{"version": 4, "entries": {"k": {"workload": "spmm0",
             "format": "csr", "policy": "static", "threads": 1}}}"#;
         assert!(TuningCache::from_json(&Json::parse(bad_workload).unwrap()).is_err());
-        let bad_ordering = r#"{"version": 3, "entries": {"k": {"ordering": "sorted",
+        let bad_ordering = r#"{"version": 4, "entries": {"k": {"ordering": "sorted",
             "format": "csr", "policy": "static", "threads": 1}}}"#;
         assert!(TuningCache::from_json(&Json::parse(bad_ordering).unwrap()).is_err());
     }
@@ -564,7 +567,7 @@ mod tests {
         // Lenient field parsing within the current version: a hand-edited
         // entry lacking the workload/ordering fields reads as a
         // natural-order SpMV decision.
-        let legacy = r#"{"version": 3, "entries":
+        let legacy = r#"{"version": 4, "entries":
             {"k": {"format": "csr", "policy": "dynamic,64", "threads": 2}}}"#;
         let mut c = TuningCache::from_json(&Json::parse(legacy).unwrap()).unwrap();
         assert_eq!(c.get("k").unwrap().workload, Workload::Spmv);
@@ -574,9 +577,10 @@ mod tests {
     #[test]
     fn stale_version_files_load_empty_and_are_rewritten() {
         // A pre-ordering (version 2) file: its key hashes predate the
-        // ordering axis and could never match a lookup again, so load
-        // discards it wholesale rather than carrying dead entries forever.
-        // Same for a pre-workload (version 1) file.
+        // ordering axis (and the ISA dimension) and could never match a
+        // lookup again, so load discards it wholesale rather than
+        // carrying dead entries forever. Same for a pre-workload
+        // (version 1) file.
         let dir = TempDir::new("tcache-stale");
         let path = dir.path().join("cache.json");
         let v2 = r#"{"version": 2, "entries":
@@ -591,13 +595,13 @@ mod tests {
         assert!(TuningCache::load(&path).unwrap().is_empty());
         // Corruption of a *current*-version file still errors, as does a
         // missing version field (no version-less format ever existed).
-        std::fs::write(&path, r#"{"version": 3, "entries": 3}"#).unwrap();
+        std::fs::write(&path, r#"{"version": 4, "entries": 3}"#).unwrap();
         assert!(TuningCache::load(&path).is_err());
         std::fs::write(&path, r#"{"entries": {}}"#).unwrap();
         assert!(TuningCache::load(&path).is_err());
         // A *newer*-version file errors on load AND refuses to be
         // clobbered by save — an old binary must not wipe it.
-        std::fs::write(&path, r#"{"version": 4, "entries": {}}"#).unwrap();
+        std::fs::write(&path, r#"{"version": 5, "entries": {}}"#).unwrap();
         assert!(TuningCache::load(&path).is_err());
         assert!(c.save().is_err(), "save must not overwrite a newer-version file");
         // Saving the (empty-loaded) cache rewrites the stale file in the

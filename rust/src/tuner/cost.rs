@@ -29,7 +29,7 @@ use crate::arch::PhiMachine;
 use crate::kernels::blocked_model::bcsr_profile;
 use crate::kernels::spmm_model::{spmm_profile, SpmmAnalysis, SpmmVariant};
 use crate::kernels::spmv_model::{spmv_profile, SpmvAnalysis, SpmvVariant};
-use crate::kernels::Workload;
+use crate::kernels::{IsaLevel, Workload};
 use crate::sched::{LoadBalance, StaticAssignment};
 use crate::sparse::ell::ELL_LANES;
 use crate::sparse::ordering::{apply_symmetric_permutation, rcm};
@@ -40,18 +40,32 @@ use super::space::{estimate_block_density, hyb_overflow_tail, Candidate, Format,
 /// The analytic ranker.
 pub struct CostModel {
     machine: PhiMachine,
+    /// Host ISA the ranked kernels will actually run with: the
+    /// instruction term of every profile is divided by its effective
+    /// flop throughput, so compute-bound candidates compress toward
+    /// their memory terms on wider vector units while bandwidth-bound
+    /// ones rank unchanged.
+    isa: IsaLevel,
 }
 
 impl Default for CostModel {
     fn default() -> Self {
-        CostModel { machine: PhiMachine::se10p() }
+        CostModel { machine: PhiMachine::se10p(), isa: IsaLevel::detect() }
     }
 }
 
 impl CostModel {
-    /// A cost model over the calibrated SE10P machine.
+    /// A cost model over the calibrated SE10P machine, at the detected
+    /// host ISA.
     pub fn new() -> CostModel {
         CostModel::default()
+    }
+
+    /// The same model pinned to a specific ISA level (tests; offline
+    /// what-if ranking for a different host).
+    pub fn with_isa(mut self, isa: IsaLevel) -> CostModel {
+        self.isa = isa;
+        self
     }
 
     /// Ranks SpMV candidates by predicted time, ascending (best first).
@@ -170,6 +184,10 @@ impl CostModel {
                 }
                 let assign = StaticAssignment::build(cand.policy, aa.nrows, cand.threads.max(1));
                 w.imbalance = LoadBalance::compute(&assign, oweights).imbalance;
+                // Wider vector units retire the instruction stream
+                // proportionally faster; the memory terms are untouched,
+                // so bandwidth-bound candidates keep their ranking.
+                w.instructions /= self.isa.flop_throughput();
                 let (cores, contexts) = map_threads(cand.threads);
                 let est = self.machine.estimate(cores, contexts, &w);
                 (cand, est.time_s)
@@ -507,6 +525,23 @@ mod tests {
             m.predict_for(&a, hyb, w) > m.predict_for(&a, csr, w),
             "k=32 HYB must lose to CSR on an overflow-heavy matrix"
         );
+    }
+
+    #[test]
+    fn wider_isa_never_predicted_slower() {
+        let a = stencil_2d(50, 50);
+        let c = cand(Format::Csr, 8);
+        for w in [Workload::Spmv, Workload::Spmm { k: 8 }] {
+            let portable = CostModel::new().with_isa(IsaLevel::Portable).predict_for(&a, c, w);
+            let avx2 = CostModel::new().with_isa(IsaLevel::Avx2).predict_for(&a, c, w);
+            let avx512 = CostModel::new().with_isa(IsaLevel::Avx512).predict_for(&a, c, w);
+            assert!(
+                portable >= avx2 && avx2 >= avx512,
+                "{w}: predicted times must not grow with vector width \
+                 ({portable} / {avx2} / {avx512})"
+            );
+            assert!(avx512 > 0.0 && avx512.is_finite());
+        }
     }
 
     #[test]

@@ -91,7 +91,7 @@ use std::sync::Arc;
 
 /// Cache key for one matrix under one tuner configuration and workload.
 ///
-/// Four components, because entries must only be shared when the search
+/// Five components, because entries must only be shared when the search
 /// would have been identical:
 /// * the [`MatrixStats::fingerprint_hex`] shape statistics;
 /// * the structural metrics the pruner consumes (row-length CV, 8×8 block
@@ -103,7 +103,11 @@ use std::sync::Arc;
 ///   full-space trials tuner. Warmup/measure counts are deliberately
 ///   excluded — they change timing precision, not the space searched;
 /// * the [`Workload`] (visible as the key's suffix), so a matrix's SpMV
-///   and SpMM decisions coexist instead of shadowing each other.
+///   and SpMM decisions coexist instead of shadowing each other;
+/// * the detected [`IsaLevel`]: the vector width reshapes the search
+///   space (SELL-C snaps to the lane count) and the trial timings
+///   themselves, so a decision tuned on an AVX-512 host must not be
+///   served to a portable run of the same binary.
 ///
 /// The structural scans are O(nnz) and also run inside `enumerate` on a
 /// miss; that duplication is accepted — a hit still costs far less than
@@ -113,6 +117,18 @@ fn cache_key(
     stats: &MatrixStats,
     config: &TunerConfig,
     workload: Workload,
+) -> String {
+    cache_key_isa(a, stats, config, workload, crate::kernels::IsaLevel::detect())
+}
+
+/// [`cache_key`] with the ISA pinned — split out so tests can assert
+/// that keys differ across levels without faking feature detection.
+fn cache_key_isa(
+    a: &Csr,
+    stats: &MatrixStats,
+    config: &TunerConfig,
+    workload: Workload,
+    isa: crate::kernels::IsaLevel,
 ) -> String {
     fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
         for &b in bytes {
@@ -160,6 +176,7 @@ fn cache_key(
     ] {
         h = fnv(h, &bits.to_bits().to_le_bytes());
     }
+    h = fnv(h, isa.name().as_bytes());
     format!("{}-{h:016x}-{workload}", stats.fingerprint_hex())
 }
 
@@ -578,6 +595,33 @@ mod tests {
         tuner.attach_telemetry(t2.clone());
         tuner.tune("m", &a).unwrap();
         assert_eq!(t2.journal.published(), 0);
+    }
+
+    #[test]
+    fn cache_keys_differ_across_isa_levels() {
+        use crate::kernels::IsaLevel;
+        let a = matrix();
+        let stats = MatrixStats::compute("m", &a);
+        let config = TunerConfig::quick();
+        let levels = [IsaLevel::Portable, IsaLevel::Avx2, IsaLevel::Avx512];
+        let keys: Vec<String> = levels
+            .iter()
+            .map(|&isa| cache_key_isa(&a, &stats, &config, Workload::Spmv, isa))
+            .collect();
+        for i in 0..keys.len() {
+            for j in (i + 1)..keys.len() {
+                assert_ne!(
+                    keys[i], keys[j],
+                    "{} and {} must not share a tuning entry",
+                    levels[i], levels[j]
+                );
+            }
+        }
+        // The default key is the detected-ISA key, verbatim.
+        assert_eq!(
+            cache_key(&a, &stats, &config, Workload::Spmv),
+            cache_key_isa(&a, &stats, &config, Workload::Spmv, IsaLevel::detect())
+        );
     }
 
     #[test]

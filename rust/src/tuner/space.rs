@@ -239,9 +239,16 @@ impl Default for SpaceConfig {
             ell_max_cv: 1.0,
             bcsr_min_density: 0.5,
             hyb_min_width_ratio: 4.0,
-            // C = 8 matches the 512-bit lane count; C = 32 amortizes the
-            // per-chunk bookkeeping. σ trades padding against locality.
-            sell_shapes: vec![(8, 256), (32, 1024)],
+            // C snaps to the detected SIMD lane count (4 on AVX2, 8 on
+            // AVX-512 — and 8 on portable hosts, the paper's 512-bit
+            // width) so every chunk fills whole vectors; C × 4 amortizes
+            // the per-chunk bookkeeping. σ trades padding against
+            // locality.
+            sell_shapes: {
+                let lanes = crate::kernels::simd::IsaLevel::detect().lanes();
+                let c = if lanes > 1 { lanes } else { 8 };
+                vec![(c, 256), (c * 4, 1024)]
+            },
             sell_max_pad: 1.5,
             hyb_spmm_tail_budget: 1.0,
             orderings: vec![Ordering::Natural, Ordering::Rcm],

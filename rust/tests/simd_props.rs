@@ -1,0 +1,156 @@
+//! Vectorized-kernel properties: every format × workload must produce
+//! the same result under the detected ISA as under the forced-portable
+//! scalar path (the oracle), across matrix shapes chosen to hit the
+//! vector kernels' edges — remainder lanes, empty rows, chunk widths
+//! that don't divide the lane count, and k widths around the SpMM
+//! column-block boundaries.
+//!
+//! Run under `PALLAS_ISA=portable` this degenerates to scalar-vs-scalar
+//! (still a valid identity); CI runs it both ways.
+
+use phi_spmv::kernels::{ExecCtx, IsaLevel, SpmvOp, Workload};
+use phi_spmv::sched::Policy;
+use phi_spmv::sparse::gen::powerlaw::{powerlaw, PowerLawSpec};
+use phi_spmv::sparse::gen::stencil::stencil_2d;
+use phi_spmv::sparse::gen::{random_vector, randomize_values};
+use phi_spmv::sparse::{Coo, Csr};
+use phi_spmv::tuner::{exec::prepare, Format};
+
+/// Relative closeness: the vector kernels reassociate sums (4/8-wide
+/// partials, FMA contraction), so exact equality is not the contract.
+fn assert_close(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (u, v)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (u - v).abs() <= 1e-9 * v.abs().max(1.0),
+            "{what}[{i}]: {u} vs {v}"
+        );
+    }
+}
+
+/// The matrices the kernels must agree on: a banded stencil (uniform
+/// short rows), a power-law graph (ragged rows, hubs, empties), and a
+/// hand-built edge case whose row count is coprime to every lane width
+/// and whose rows include empty, length-1 and length-9 shapes.
+fn matrices() -> Vec<(&'static str, Csr)> {
+    let mut stencil = stencil_2d(13, 9);
+    randomize_values(&mut stencil, 5);
+    let ragged = powerlaw(&PowerLawSpec {
+        n: 500,
+        nnz: 3000,
+        row_alpha: 1.6,
+        col_alpha: 1.4,
+        max_row: 80,
+        seed: 7,
+    });
+    let mut edges = Coo::new(37, 41);
+    for i in 0..37 {
+        match i % 4 {
+            0 => {} // empty row
+            1 => edges.push(i, i % 41, 1.5 + i as f64),
+            _ => {
+                for j in 0..9 {
+                    edges.push(i, (i * 3 + j * 5) % 41, 0.25 * (i + j) as f64 - 3.0);
+                }
+            }
+        }
+    }
+    vec![("stencil", stencil), ("powerlaw", ragged), ("edges", edges.to_csr())]
+}
+
+fn formats() -> Vec<Format> {
+    vec![
+        Format::Csr,
+        Format::Ell,
+        Format::Hyb { width: 4 },
+        Format::Bcsr { r: 4, c: 2 },
+        // SELL chunks below, at, and beyond the lane widths: c = 3 never
+        // vectorizes, c = 4 is exactly one AVX2 vector, c = 8 one
+        // AVX-512 (or two AVX2) vectors, c = 32 the kernels' cap.
+        Format::Sell { c: 3, sigma: 64 },
+        Format::Sell { c: 4, sigma: 64 },
+        Format::Sell { c: 8, sigma: 256 },
+        Format::Sell { c: 32, sigma: 256 },
+    ]
+}
+
+/// The k sweep crosses the SpMM kernels' column-block boundaries: 1
+/// (SpMV), 3 (scalar tail only), 8 (two AVX2 vectors), 16 (a full
+/// block), 17 (full block + remainder lane).
+const KS: [usize; 5] = [1, 3, 8, 16, 17];
+
+#[test]
+fn vectorized_kernels_match_the_portable_oracle() {
+    let detected = ExecCtx::serial();
+    let portable = ExecCtx::serial().with_isa(IsaLevel::Portable);
+    for (name, a) in matrices() {
+        for format in formats() {
+            let op = prepare(&a, format);
+            for k in KS {
+                let what = format!("{name}/{format}/k{k}");
+                let x = random_vector(a.ncols * k, 11);
+                let mut got = vec![0.0f64; a.nrows * k];
+                let mut want = vec![0.0f64; a.nrows * k];
+                if k > 1 {
+                    op.spmm_into(&x, &mut got, k, &detected);
+                    op.spmm_into(&x, &mut want, k, &portable);
+                } else {
+                    op.spmv_into(&x, &mut got, &detected);
+                    op.spmv_into(&x, &mut want, &portable);
+                }
+                assert_close(&got, &want, &what);
+                // And the portable path itself agrees with the reference
+                // triplet product, so "both paths wrong the same way"
+                // cannot pass.
+                let reference = if k > 1 { a.spmm(&x, k) } else { a.spmv(&x) };
+                assert_close(&want, &reference, &format!("{what}/oracle"));
+            }
+        }
+    }
+}
+
+#[test]
+fn pooled_execution_agrees_across_isa_levels() {
+    let mut a = stencil_2d(21, 17);
+    randomize_values(&mut a, 13);
+    let detected = ExecCtx::pooled(2, Policy::Dynamic(16));
+    let portable = ExecCtx::pooled(2, Policy::Dynamic(16)).with_isa(IsaLevel::Portable);
+    for format in formats() {
+        let op = prepare(&a, format);
+        let k = 4;
+        let x = random_vector(a.ncols * k, 3);
+        let mut got = vec![0.0f64; a.nrows * k];
+        let mut want = vec![0.0f64; a.nrows * k];
+        op.spmm_into(&x, &mut got, k, &detected);
+        op.spmm_into(&x, &mut want, k, &portable);
+        assert_close(&got, &want, &format!("pooled/{format}"));
+    }
+}
+
+#[test]
+fn isa_level_parse_name_and_order_are_consistent() {
+    for isa in [IsaLevel::Portable, IsaLevel::Avx2, IsaLevel::Avx512] {
+        assert_eq!(IsaLevel::parse(isa.name()), Some(isa), "name must parse back");
+    }
+    assert_eq!(IsaLevel::parse("scalar"), Some(IsaLevel::Portable));
+    assert_eq!(IsaLevel::parse("AVX2"), Some(IsaLevel::Avx2), "parse is case-insensitive");
+    assert_eq!(IsaLevel::parse("knc"), None);
+    assert!(IsaLevel::Portable < IsaLevel::Avx2 && IsaLevel::Avx2 < IsaLevel::Avx512);
+    assert_eq!(IsaLevel::Portable.lanes(), 1);
+    assert!(IsaLevel::Avx2.lanes() < IsaLevel::Avx512.lanes());
+}
+
+#[test]
+fn detection_is_bounded_and_sanitize_clamps() {
+    let detected = IsaLevel::detect();
+    assert!(detected <= IsaLevel::available(), "detect can never exceed the host");
+    // A context asking for more than the host has is clamped, not
+    // trusted — forcing Avx512 on a portable host must still compute.
+    let mut a = stencil_2d(9, 9);
+    randomize_values(&mut a, 1);
+    let x = random_vector(a.ncols, 2);
+    let mut y = vec![0.0f64; a.nrows];
+    let greedy = ExecCtx::serial().with_isa(IsaLevel::Avx512);
+    a.spmv_into(&x, &mut y, &greedy);
+    assert_close(&y, &a.spmv(&x), "clamped-isa spmv");
+}
