@@ -1,0 +1,155 @@
+//! Specialization payoff benchmarks: the const-generic registry
+//! micro-kernels (`kernels::specialize`) against the runtime-parameter
+//! generic loops, per format family × shape × workload.
+//!
+//! Measured on two generator-suite classes (the 2D stencil and the
+//! pwtk-like FEM instance — the block-dense cases the BCSR and SELL
+//! variants exist for): the same matrix, pool, schedule and thread
+//! count, with only the inner loop swapped, so every ratio isolates
+//! exactly what baking the shape into the instruction stream buys.
+//!
+//! `cargo bench --bench bench_specialize [-- --scale 0.05]` writes
+//! `BENCH_specialize.json` with per-case GFlop/s for both payloads, the
+//! speedup ratio, and a `payoff` summary naming the two CI-gated cases
+//! (BCSR 4×4 SpMV and SELL-8 SpMV; the gate applies on vector hosts —
+//! check the report's `isa` field).
+
+use phi_spmv::kernels::{ExecCtx, IsaLevel, SpmvOp, Workload};
+use phi_spmv::kernels::specialize;
+use phi_spmv::sched::Policy;
+use phi_spmv::sparse::gen::{paper_suite, random_vector, randomize_values};
+use phi_spmv::tuner::{exec::prepare, prepare_spec, Format};
+use phi_spmv::util::bench::Bencher;
+use phi_spmv::util::cli::Args;
+use phi_spmv::util::json::Json;
+
+fn run_case(op: &dyn SpmvOp, x: &[f64], y: &mut [f64], k: usize, ctx: &ExecCtx<'_>) {
+    if k > 1 {
+        op.spmm_into(x, y, k, ctx)
+    } else {
+        op.spmv_into(x, y, ctx)
+    }
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = args.get("scale", 0.05f64);
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let bencher = Bencher::quick();
+    let suite = paper_suite();
+    let isa = IsaLevel::detect();
+    let ctx = ExecCtx::pooled(threads, Policy::Dynamic(64));
+
+    // (format, workload) cases the registry advertises. CSR runs both
+    // workloads (unroll for SpMV, k-block for SpMM); the block/chunk
+    // families are SpMV-kind only, matching the tuner's coverage rule.
+    let cases: Vec<(Format, Workload)> = vec![
+        (Format::Csr, Workload::Spmv),
+        (Format::Csr, Workload::Spmm { k: 8 }),
+        (Format::Bcsr { r: 2, c: 2 }, Workload::Spmv),
+        (Format::Bcsr { r: 4, c: 4 }, Workload::Spmv),
+        (Format::Bcsr { r: 8, c: 8 }, Workload::Spmv),
+        (Format::Sell { c: 4, sigma: 256 }, Workload::Spmv),
+        (Format::Sell { c: 8, sigma: 256 }, Workload::Spmv),
+        (Format::Sell { c: 16, sigma: 256 }, Workload::Spmv),
+    ];
+
+    println!(
+        "== specialization payoff: {} registry variants, {isa}, {threads} threads, scale {scale} ==",
+        specialize::registry().len()
+    );
+    println!(
+        "{:<16} {:<12} {:<8} {:>10} {:>12} {:>8}  variant",
+        "matrix", "format", "workload", "spec GF", "generic GF", "speedup"
+    );
+
+    // 2D stencil and the pwtk-like FEM case (the paper's SpMM peak).
+    let mut matrices: Vec<Json> = Vec::new();
+    // The CI gate reads these two: BCSR 4×4 SpMV and SELL-8 SpMV on the
+    // stencil (dense diagonal blocks, uniform rows — the shapes the
+    // registry was built for).
+    let mut gate_bcsr4x4 = 0.0f64;
+    let mut gate_sell8 = 0.0f64;
+    for (which, idx) in [("stencil", 19usize), ("fem", 11usize)] {
+        let entry = &suite[idx];
+        let mut a = entry.generate_scaled(scale);
+        randomize_values(&mut a, entry.id as u64);
+        let mut rows: Vec<Json> = Vec::new();
+        for (format, workload) in &cases {
+            let (format, workload) = (*format, *workload);
+            let k = workload.k();
+            let Some(spec_op) = prepare_spec(&a, format, k) else {
+                // Registry does not cover this shape at this ISA (e.g. a
+                // non-x86 build): report the hole instead of skipping
+                // silently.
+                println!("{:<16} {:<12} {:<8} {:>10}", entry.name, format, workload, "uncovered");
+                rows.push(
+                    Json::obj()
+                        .set("format", format.to_string())
+                        .set("workload", workload.to_string())
+                        .set("covered", false),
+                );
+                continue;
+            };
+            let generic_op = prepare(&a, format);
+            let variant = spec_op.variant_name().unwrap_or("?");
+            let x = random_vector(a.ncols * k, 4);
+            let mut y = vec![0.0f64; a.nrows * k];
+            let flops = workload.flops(a.nnz());
+            let spec_gf = bencher
+                .run("spec", || run_case(spec_op.as_ref(), &x, &mut y, k, &ctx))
+                .gflops(flops);
+            let generic_gf = bencher
+                .run("generic", || run_case(generic_op.as_ref(), &x, &mut y, k, &ctx))
+                .gflops(flops);
+            let speedup = spec_gf / generic_gf.max(1e-12);
+            if which == "stencil" && workload == Workload::Spmv {
+                if format == (Format::Bcsr { r: 4, c: 4 }) {
+                    gate_bcsr4x4 = speedup;
+                }
+                if let Format::Sell { c: 8, .. } = format {
+                    gate_sell8 = speedup;
+                }
+            }
+            println!(
+                "{:<16} {:<12} {:<8} {:>10.3} {:>12.3} {:>7.2}x  {variant}",
+                entry.name, format, workload, spec_gf, generic_gf, speedup
+            );
+            rows.push(
+                Json::obj()
+                    .set("format", format.to_string())
+                    .set("workload", workload.to_string())
+                    .set("covered", true)
+                    .set("variant", variant)
+                    .set("spec_gflops", spec_gf)
+                    .set("generic_gflops", generic_gf)
+                    .set("speedup", speedup),
+            );
+        }
+        matrices.push(
+            Json::obj()
+                .set("name", entry.name)
+                .set("class", which)
+                .set("nrows", a.nrows)
+                .set("nnz", a.nnz())
+                .set("cases", rows),
+        );
+    }
+
+    let report = Json::obj()
+        .set("bench", "specialize")
+        .set("isa", isa.name())
+        .set("threads", threads)
+        .set("scale", scale)
+        .set("registry_variants", specialize::registry().len())
+        .set(
+            "payoff",
+            Json::obj()
+                .set("bcsr4x4_spmv_speedup", gate_bcsr4x4)
+                .set("sell8_spmv_speedup", gate_sell8),
+        )
+        .set("matrices", matrices);
+    let path = "BENCH_specialize.json";
+    std::fs::write(path, report.to_pretty()).expect("writing BENCH_specialize.json");
+    println!("\nwrote {path}");
+}

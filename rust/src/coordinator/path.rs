@@ -35,7 +35,7 @@ use crate::sched::Policy;
 use crate::sparse::Csr;
 use crate::telemetry::metrics::Counter;
 use crate::telemetry::{names, Phases, ServeTimers, Telemetry};
-use crate::tuner::{Format, Ordering, TunedConfig};
+use crate::tuner::{Candidate, Format, Ordering, TunedConfig};
 
 use super::server::ServerConfig;
 
@@ -58,6 +58,11 @@ pub struct PathSpec {
     pub threads: usize,
     /// Workload this path's configuration was tuned/chosen for.
     pub workload: Workload,
+    /// Registry micro-kernel variant the decision committed to (`None`
+    /// for a generic decision). The path's payload is prepared through
+    /// the specialization registry when set, and the engine splits its
+    /// kernel-time attribution per variant.
+    pub variant: Option<String>,
 }
 
 impl PathSpec {
@@ -73,6 +78,24 @@ impl PathSpec {
             policy: cand.policy,
             threads: cand.threads.max(1),
             workload: decision.workload,
+            variant: decision.variant.clone(),
+        }
+    }
+
+    /// The search-space candidate this spec executes — the argument for
+    /// [`crate::tuner::exec::prepare_owned_candidate`], with the
+    /// specialization axis recovered from [`PathSpec::variant`].
+    pub fn candidate(&self) -> Candidate {
+        Candidate {
+            format: self.format,
+            ordering: self.ordering,
+            policy: self.policy,
+            threads: self.threads.max(1),
+            spec: if self.variant.is_some() {
+                crate::kernels::Specialization::Specialized
+            } else {
+                crate::kernels::Specialization::Generic
+            },
         }
     }
 }
@@ -85,6 +108,7 @@ impl Default for PathSpec {
             policy: Policy::Dynamic(64),
             threads: 1,
             workload: Workload::Spmv,
+            variant: None,
         }
     }
 }
@@ -461,17 +485,22 @@ impl Engine {
     /// spec — or is absent — both paths share one payload `Arc` instead
     /// of converting twice (their counters stay distinct regardless).
     pub fn start(a: Arc<Csr>, config: ServerConfig) -> Engine {
-        use crate::tuner::exec::prepare_owned_with;
+        use crate::tuner::exec::prepare_owned_candidate;
         let spmv_spec = config.spmv.clone();
         let batch_spec = config.spmm.clone().unwrap_or_else(|| config.spmv.clone());
         let spmv_op: Arc<dyn SpmvOp> =
-            Arc::from(prepare_owned_with(&a, spmv_spec.format, spmv_spec.ordering));
+            Arc::from(prepare_owned_candidate(&a, &spmv_spec.candidate(), 1));
+        // Sharing now also requires matching variants and batch widths: a
+        // k-block-specialized SpMM payload is a different kernel binding
+        // than the SpMV payload even in the same format.
         let spmm_op: Arc<dyn SpmvOp> = if batch_spec.format == spmv_spec.format
             && batch_spec.ordering == spmv_spec.ordering
+            && batch_spec.variant == spmv_spec.variant
+            && batch_spec.workload.k() == 1
         {
             spmv_op.clone()
         } else {
-            Arc::from(prepare_owned_with(&a, batch_spec.format, batch_spec.ordering))
+            Arc::from(prepare_owned_candidate(&a, &batch_spec.candidate(), batch_spec.workload.k()))
         };
         let nnz = a.nnz();
         let spmv = Arc::new(Path::new(spmv_spec, spmv_op, nnz, config.pooled));
@@ -630,6 +659,16 @@ fn engine_loop(
             .metrics
             .counter(&names::kernel_ns(family, vectorized))
             .add((spans.kernel_s * 1e9) as u64);
+        // A specialized path additionally books its time against its
+        // registry variant, so dashboards can see which committed
+        // micro-kernels actually carry the serving load.
+        if let Some(variant) = spec.variant.as_deref() {
+            telem
+                .telemetry
+                .metrics
+                .counter(&names::kernel_ns_variant(family, variant))
+                .add((spans.kernel_s * 1e9) as u64);
+        }
 
         for (u, req) in batch.into_iter().enumerate() {
             let phases = Phases {

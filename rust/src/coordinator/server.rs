@@ -381,6 +381,7 @@ mod tests {
                 ordering: Ordering::Natural,
                 policy: Policy::Dynamic(32),
                 threads: 2,
+                variant: None,
                 gflops: 0.0,
                 source: "trial".to_string(),
                 tuned_at: 0,
@@ -411,6 +412,7 @@ mod tests {
             ordering: Ordering::Natural,
             policy: Policy::Dynamic(64),
             threads: 1,
+            variant: None,
             gflops: 0.0,
             source: "trial".to_string(),
             tuned_at: 0,
@@ -421,6 +423,7 @@ mod tests {
             ordering: Ordering::Rcm,
             policy: Policy::Dynamic(16),
             threads: 2,
+            variant: None,
             gflops: 0.0,
             source: "trial".to_string(),
             tuned_at: 0,

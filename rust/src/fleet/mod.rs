@@ -51,4 +51,4 @@ pub mod retune;
 
 pub use batch::{ArrivalTracker, BatchConfig};
 pub use registry::{EntryReport, Fleet, FleetConfig, FleetEvent, FleetStats};
-pub use retune::{DriftJudgment, RetuneConfig};
+pub use retune::{BackoffState, DriftJudgment, RetuneConfig};

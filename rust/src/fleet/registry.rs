@@ -30,11 +30,11 @@ use crate::kernels::op::SpmvOp;
 use crate::kernels::Workload;
 use crate::sparse::{Csr, MatrixStats};
 use crate::telemetry::{names, EventKind, Subscriber, Telemetry};
-use crate::tuner::exec::prepare_owned_with;
+use crate::tuner::exec::prepare_owned_candidate;
 use crate::tuner::{TunedConfig, Tuner};
 
 use super::batch::{expected_arrivals, pick_width, ArrivalTracker, BatchConfig};
-use super::retune::{judge, RetuneConfig};
+use super::retune::{judge, BackoffState, RetuneConfig};
 
 /// Fleet-wide knobs.
 #[derive(Debug, Clone)]
@@ -300,6 +300,11 @@ struct FleetEntry {
     retired: Mutex<(PathStats, PathStats)>,
     /// Re-tune + hot-swap cycles this entry absorbed.
     retunes: AtomicUsize,
+    /// Per-path drift-check back-off (`[0]` SpMV, `[1]` SpMM): entries
+    /// whose re-tunes keep landing on the decision they already serve
+    /// are checked exponentially less often. See
+    /// [`super::retune::BackoffState`].
+    backoff: Mutex<[BackoffState; 2]>,
     /// LRU stamp from the fleet's logical clock.
     last_used: AtomicU64,
 }
@@ -385,6 +390,7 @@ impl Fleet {
             tracker: Mutex::new(ArrivalTracker::default()),
             retired: Mutex::new((PathStats::default(), PathStats::default())),
             retunes: AtomicUsize::new(0),
+            backoff: Mutex::new([BackoffState::default(), BackoffState::default()]),
             last_used: AtomicU64::new(0),
         });
         self.inner.touch(&entry);
@@ -849,9 +855,17 @@ impl FleetInner {
         if path.window().batches < self.config.retune.min_window_batches.max(1) {
             return;
         }
+        let backoff_idx = if is_spmv { 0 } else { 1 };
+        // A backed-off path skips the judgment without consuming its
+        // window — the evidence keeps accumulating for the check that
+        // eventually runs.
+        if entry.backoff.lock().unwrap()[backoff_idx].should_skip() {
+            return;
+        }
         let window = path.take_window();
         let judgment = judge(decision, &window, &self.config.retune);
         if !judgment.drifted {
+            entry.backoff.lock().unwrap()[backoff_idx].observe_stable();
             return;
         }
         // Publish the confirmation — with the evidence it ran on — at the
@@ -874,8 +888,27 @@ impl FleetInner {
             tuner.tune_workload(&entry.id, &entry.a, decision.workload)
         };
         let Ok(fresh) = fresh else { return };
+        // A re-tune that lands on the very decision it was meant to
+        // replace is a sign the *environment*, not the decision, is slow
+        // — back its drift checks off exponentially instead of burning a
+        // search per pass. A genuinely different decision resets the
+        // streak.
+        if fresh.candidate() == decision.candidate() && fresh.variant == decision.variant {
+            let mut backoff = entry.backoff.lock().unwrap();
+            let skip = backoff[backoff_idx].record_fruitless();
+            let failures = backoff[backoff_idx].failures;
+            drop(backoff);
+            self.push_event(EventKind::RetuneBackoff {
+                id: entry.id.clone(),
+                failures,
+                skip,
+            });
+        } else {
+            entry.backoff.lock().unwrap()[backoff_idx].record_improvement();
+        }
+        let spec = PathSpec::from_decision(&fresh);
         let op: Arc<dyn SpmvOp> =
-            Arc::from(prepare_owned_with(&entry.a, fresh.format, fresh.ordering));
+            Arc::from(prepare_owned_candidate(&entry.a, &spec.candidate(), fresh.workload.k()));
         // Install only if this engine still owns the inspected path — the
         // entry may have been evicted and re-materialized while the
         // search ran. A missed install is not lost work: the fresh
@@ -888,7 +921,7 @@ impl FleetInner {
                     let owner =
                         if is_spmv { w.engine.spmv_path() } else { w.engine.spmm_path() };
                     if Arc::ptr_eq(owner, path) {
-                        path.swap(PathSpec::from_decision(&fresh), op);
+                        path.swap(spec, op);
                         if is_spmv {
                             w.spmv = fresh.clone();
                         } else {
@@ -952,8 +985,9 @@ impl FleetInner {
             None
         };
         let prepared = fresh.as_ref().map(|d| {
+            let spec = PathSpec::from_decision(d);
             let op: Arc<dyn SpmvOp> =
-                Arc::from(prepare_owned_with(&entry.a, d.format, d.ordering));
+                Arc::from(prepare_owned_candidate(&entry.a, &spec.candidate(), d.workload.k()));
             op
         });
         let mut swapped_to = None;

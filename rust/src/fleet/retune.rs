@@ -113,6 +113,66 @@ pub fn drifted(decision: &TunedConfig, window: &PathWindow, config: &RetuneConfi
     judge(decision, window, config).drifted
 }
 
+/// Exponential back-off for an entry whose re-tunes keep landing on the
+/// decision it already had. Without it, an entry whose *environment*
+/// (not whose decision) is slow — a noisy neighbor, a thermally
+/// throttled host — confirms drift on every pass, burns a full search
+/// each time, and swaps in the same payload it was serving. The state
+/// machine:
+///
+/// * a **fruitless** re-tune (same decision, no better figure) doubles
+///   the number of upcoming drift checks to skip, capped at
+///   `2^`[`BackoffState::MAX_SHIFT`];
+/// * an **improving** re-tune resets the back-off entirely;
+/// * a drift check that runs and finds *no* drift decays the failure
+///   count by one, so an old burst of fruitless re-tunes does not
+///   penalize an entry that has since settled.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BackoffState {
+    /// Consecutive re-tunes that failed to improve the decision.
+    pub failures: u32,
+    /// Drift checks left to skip before the next judgment runs.
+    pub remaining: u32,
+}
+
+impl BackoffState {
+    /// Cap on the exponent: at most `2^MAX_SHIFT` checks are skipped
+    /// between attempts, however long the fruitless streak.
+    pub const MAX_SHIFT: u32 = 6;
+
+    /// Consults (and advances) the back-off before a drift check:
+    /// `true` means skip this check and burn one skip credit.
+    pub fn should_skip(&mut self) -> bool {
+        if self.remaining > 0 {
+            self.remaining -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Records a re-tune that landed on no better decision. Returns the
+    /// new skip budget (for the journal event).
+    pub fn record_fruitless(&mut self) -> u32 {
+        self.failures = self.failures.saturating_add(1);
+        self.remaining = 1u32 << self.failures.min(Self::MAX_SHIFT);
+        self.remaining
+    }
+
+    /// Records a re-tune that genuinely improved the decision: the
+    /// streak is over, checks resume at full cadence.
+    pub fn record_improvement(&mut self) {
+        *self = BackoffState::default();
+    }
+
+    /// Records a drift check that ran and found the path healthy —
+    /// decays the failure count so the next confirmed drift starts from
+    /// a shorter back-off.
+    pub fn observe_stable(&mut self) {
+        self.failures = self.failures.saturating_sub(1);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,6 +186,7 @@ mod tests {
             ordering: Ordering::Natural,
             policy: Policy::Dynamic(64),
             threads: 2,
+            variant: None,
             gflops,
             source: source.to_string(),
             tuned_at: 0,
@@ -184,5 +245,51 @@ mod tests {
         // SpMV paths have no width gate.
         let dv = decision(Workload::Spmv, 8.0, "trial");
         assert!(drifted(&dv, &window(10, 10, 1.0), &cfg));
+    }
+
+    #[test]
+    fn backoff_doubles_caps_and_resets() {
+        let mut b = BackoffState::default();
+        assert!(!b.should_skip(), "fresh state never skips");
+
+        // Fruitless re-tunes double the skip budget: 2, 4, 8, …
+        assert_eq!(b.record_fruitless(), 2);
+        assert_eq!(b.record_fruitless(), 4);
+        assert_eq!(b.record_fruitless(), 8);
+        assert_eq!(b.failures, 3);
+
+        // The budget is consumed one check at a time.
+        for _ in 0..8 {
+            assert!(b.should_skip());
+        }
+        assert!(!b.should_skip(), "exhausted budget lets the next check run");
+
+        // The exponent is capped: a year-long fruitless streak still
+        // re-checks every 2^MAX_SHIFT passes.
+        for _ in 0..40 {
+            b.record_fruitless();
+        }
+        assert_eq!(b.remaining, 1 << BackoffState::MAX_SHIFT);
+
+        // An improving re-tune resets everything.
+        b.record_improvement();
+        assert_eq!(b, BackoffState::default());
+        assert!(!b.should_skip());
+    }
+
+    #[test]
+    fn stable_checks_decay_the_failure_streak() {
+        let mut b = BackoffState::default();
+        b.record_fruitless();
+        b.record_fruitless();
+        assert_eq!(b.failures, 2);
+        b.observe_stable();
+        assert_eq!(b.failures, 1, "healthy checks shorten the next back-off");
+        // The next fruitless re-tune backs off from the decayed count.
+        assert_eq!(b.record_fruitless(), 4);
+        b.observe_stable();
+        b.observe_stable();
+        b.observe_stable();
+        assert_eq!(b.failures, 0, "decay saturates at zero");
     }
 }

@@ -4,6 +4,12 @@
 //! (e.g. "5 instructions per char", "4 per int") plus its memory behaviour;
 //! the KNC model turns that into GB/s for any cores × threads point. The
 //! host-native versions actually run and are used by `bench_microbench`.
+//!
+//! The instruction-stream framing here is why [`crate::kernels::specialize`]
+//! exists: Figs 1–2 show throughput tracking instructions-per-element long
+//! before bandwidth saturates, so shrinking the inner loop's instruction
+//! count (const-generic unrolling, register-resident accumulators) is a
+//! first-order win, not a micro-optimization.
 
 use crate::arch::core_model::{InstrMix, IssueModel};
 use crate::arch::mem::{MemSystem, StoreFlavour};

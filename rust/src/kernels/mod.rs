@@ -16,6 +16,12 @@
 //! * [`simd`] — explicit `std::arch` vector variants of the hot inner
 //!   loops, selected per call from the [`op::ExecCtx`]'s [`simd::IsaLevel`]
 //!   (runtime feature detection, `PALLAS_ISA` override, scalar fallback).
+//! * [`specialize`] — const-generic monomorphizations of the hot inner
+//!   loops (BCSR `R×C`, SELL chunk height, CSR unroll / SpMM k-block) in
+//!   a static [`specialize::SpecKernel`] registry keyed by
+//!   `(family, shape, isa)`; the tuner's `Specialized` axis resolves a
+//!   variant at prepare time and the generic loops stay as fallback and
+//!   oracle.
 //! * [`micro`] — Fig. 1/Fig. 2 micro-benchmarks: KNC *models* of the array
 //!   sum and memset variants, plus runnable host equivalents.
 //! * [`spmv_model`] / [`spmm_model`] / [`blocked_model`] — reductions of a
@@ -29,6 +35,7 @@ pub mod micro;
 pub mod native;
 pub mod op;
 pub mod simd;
+pub mod specialize;
 pub mod spmm_model;
 pub mod spmv_model;
 
@@ -38,5 +45,6 @@ pub use native::{
 };
 pub use op::{spmm_via_spmv, ExecCtx, SpmvOp, Workload};
 pub use simd::IsaLevel;
+pub use specialize::Specialization;
 pub use spmm_model::SpmmVariant;
 pub use spmv_model::SpmvVariant;

@@ -26,14 +26,14 @@ use super::simd::IsaLevel;
 
 /// Raw-pointer wrapper asserting disjoint ownership across threads.
 #[derive(Clone, Copy)]
-struct SendPtr(*mut f64);
+pub(crate) struct SendPtr(pub(crate) *mut f64);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 
 /// Below this many row-units a kernel runs serially on the caller.
-const SERIAL_ROWS: usize = 256;
+pub(crate) const SERIAL_ROWS: usize = 256;
 /// Serial threshold for the coarser block-row/chunk units.
-const SERIAL_UNITS: usize = 64;
+pub(crate) const SERIAL_UNITS: usize = 64;
 
 /// The shared scheduling scaffold of every parallel kernel: distributes
 /// `0..n` work units over `ctx.threads` workers under `ctx.policy` and
@@ -103,7 +103,7 @@ fn run_row_partitioned(
 /// the unit count is below the parallel break-even) and the ISA level
 /// clamped to what the host can execute — the single sanitization point,
 /// so the dispatch helpers below may trust `ctx.isa` unconditionally.
-fn effective<'p>(ctx: &ExecCtx<'p>, units: usize, serial_below: usize) -> ExecCtx<'p> {
+pub(crate) fn effective<'p>(ctx: &ExecCtx<'p>, units: usize, serial_below: usize) -> ExecCtx<'p> {
     let threads = if units < serial_below { 1 } else { ctx.threads.max(1) };
     ExecCtx { threads, isa: ctx.isa.sanitized(), ..*ctx }
 }

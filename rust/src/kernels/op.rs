@@ -211,6 +211,13 @@ pub trait SpmvOp: Send + Sync {
     /// Reports the *materialized* layout; tuner decisions print their own
     /// [`crate::tuner::Format`], which may differ by lane rounding (HYB).
     fn format_name(&self) -> String;
+    /// Registry variant name when this payload is bound to a
+    /// [`crate::kernels::specialize::SpecKernel`] (e.g. `"bcsr4x4_avx2"`);
+    /// `None` for the generic runtime-parameter kernels. Recorded by
+    /// tuned decisions and the per-variant `kernel_ns` counters.
+    fn variant_name(&self) -> Option<&'static str> {
+        None
+    }
     /// SpMV: `y ← Ax`.
     fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>);
 
@@ -371,6 +378,9 @@ macro_rules! forward_spmv_op {
             }
             fn format_name(&self) -> String {
                 (**self).format_name()
+            }
+            fn variant_name(&self) -> Option<&'static str> {
+                (**self).variant_name()
             }
             fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
                 (**self).spmv_into(x, y, ctx)

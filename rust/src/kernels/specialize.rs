@@ -1,0 +1,959 @@
+//! Shape-specialized micro-kernels: const-generic monomorphizations of
+//! the hot inner loops, collected in a static registry keyed by
+//! `(family, shape, isa)`.
+//!
+//! The paper's attribution (§4) is that SpMV on the Phi is limited by
+//! memory latency and instruction-stream efficiency, not raw bandwidth —
+//! so once the loops are vectorized ([`super::simd`]), the next lever is
+//! removing the *runtime parameters* from the inner loop: a BCSR kernel
+//! that knows `R×C = 4×4` at compile time fully unrolls the block
+//! multiply and keeps one accumulator register per row; a SELL kernel
+//! with a const chunk height keeps the whole lane accumulator in
+//! registers with no `width`-dependent indexing. DBCSR's Xeon Phi port
+//! (arXiv:1708.03604) and SELL-C-σ (arXiv:1307.6209) both report their
+//! wins from exactly this kind of small-shape specialization.
+//!
+//! ```text
+//!   registry(): &[SpecKernel]           (portable + AVX2 per shape)
+//!        ▲                 │
+//!        │ resolve(family, shape, isa)  (prepare time, not serve time)
+//!        │                 ▼
+//!   tuner Specialization axis      SpecCsrOp / SpecBcsrOp / SpecSellOp
+//!   (enumerate_for prunes to       (SpmvOp payloads that record their
+//!    covered shapes)                variant_name for telemetry)
+//! ```
+//!
+//! The runtime-parameter loops in [`super::native`] remain the generic
+//! fallback for every shape the registry does not cover, and the oracle
+//! `tests/specialize_props.rs` compares every variant against.
+//!
+//! Covered shapes (every one has a portable *and* an AVX2 entry — the
+//! registry-completeness test enforces this):
+//!
+//! | family | shape axis            | values                               |
+//! |--------|-----------------------|--------------------------------------|
+//! | bcsr   | block `R×C`           | 2×2, 3×3, 4×4, 8×8, 4×8, 8×1         |
+//! | sell   | chunk height `C`      | 4, 8, 16                             |
+//! | csr    | SpMV unroll `U`       | 1, 2, 4 (picked from mean nnz/row)   |
+//! | csr    | SpMM k-block `KB`     | 1, 2, 4, 8 (largest ≤ workload k)    |
+
+use std::ops::{Deref, Range};
+use std::sync::OnceLock;
+
+use crate::sparse::{Bcsr, Csr, Sell};
+
+use super::native;
+use super::op::ExecCtx;
+use super::simd::IsaLevel;
+
+// ------------------------------------------------------------ the axis --
+
+/// The tuner-visible specialization axis: run the generic
+/// runtime-parameter loops, or a registry micro-kernel monomorphized for
+/// the candidate's shape. `enumerate_for` only emits `Specialized`
+/// candidates for shapes [`covers`] confirms, so a `Specialized`
+/// decision can always be prepared.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub enum Specialization {
+    /// The runtime-parameter kernels in [`super::native`] / [`super::simd`].
+    #[default]
+    Generic,
+    /// A const-generic registry kernel matched to the payload shape.
+    Specialized,
+}
+
+impl Specialization {
+    /// Stable short name, also the cache-file / candidate vocabulary.
+    pub fn name(self) -> &'static str {
+        match self {
+            Specialization::Generic => "gen",
+            Specialization::Specialized => "spec",
+        }
+    }
+
+    /// Inverse of [`Specialization::name`].
+    pub fn parse(s: &str) -> Option<Specialization> {
+        match s {
+            "gen" => Some(Specialization::Generic),
+            "spec" => Some(Specialization::Specialized),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Specialization {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// -------------------------------------------------------- the registry --
+
+/// Advertised BCSR block shapes (covers the tuner's default block
+/// candidates plus the square blocks the paper sweeps).
+pub const BCSR_SHAPES: &[(usize, usize)] = &[(2, 2), (3, 3), (4, 4), (8, 8), (4, 8), (8, 1)];
+/// Advertised SELL chunk heights.
+pub const SELL_CHUNKS: &[usize] = &[4, 8, 16];
+/// Advertised CSR SpMV unroll factors.
+pub const CSR_UNROLLS: &[usize] = &[1, 2, 4];
+/// Advertised CSR SpMM column-block widths.
+pub const SPMM_KBLOCKS: &[usize] = &[1, 2, 4, 8];
+
+/// The monomorphized entry point of one registry variant. Every pointer
+/// is a safe fn: AVX2 variants re-check host support on entry and fall
+/// back to their portable twin, so a mis-dispatched call degrades
+/// instead of faulting.
+#[derive(Clone, Copy)]
+pub enum KernelFn {
+    /// CSR SpMV over a row range (`ys[0]` = row `r.start`); overwrites.
+    CsrSpmv(fn(&Csr, &[f64], &mut [f64], Range<usize>)),
+    /// CSR SpMM over a row range; `ys` is the local `r.len()·k` block.
+    CsrSpmm(fn(&Csr, &[f64], &mut [f64], usize, Range<usize>)),
+    /// BCSR SpMV over a block-row range; fully overwrites its rows
+    /// (unlike the generic kernel, no caller pre-zeroing needed).
+    BcsrSpmv(fn(&Bcsr, &[f64], &mut [f64], Range<usize>)),
+    /// SELL SpMV over a chunk range, scattering through the permutation
+    /// into `y` (chunks own disjoint output rows).
+    SellSpmv(fn(&Sell, &[f64], *mut f64, Range<usize>)),
+}
+
+impl KernelFn {
+    fn is_spmm(&self) -> bool {
+        matches!(self, KernelFn::CsrSpmm(_))
+    }
+}
+
+/// One registry variant: a micro-kernel compiled with its shape baked in.
+pub struct SpecKernel {
+    /// Stable variant name (`bcsr4x4_avx2`, `csr_mm8_portable`, …):
+    /// recorded in tuned decisions, cache files, and per-variant
+    /// `kernel_ns` counters.
+    pub name: &'static str,
+    /// Format family the kernel multiplies (`csr` / `bcsr` / `sell`).
+    pub family: &'static str,
+    /// Shape key: `(R, C)` for BCSR, `(C, 0)` for SELL, `(U, 0)` for
+    /// CSR SpMV, `(KB, 0)` for CSR SpMM.
+    pub shape: (usize, usize),
+    /// ISA level the variant was compiled for.
+    pub isa: IsaLevel,
+    /// The monomorphized entry point.
+    pub kind: KernelFn,
+}
+
+macro_rules! spec {
+    ($name:literal, $family:literal, $shape:expr, $isa:expr, $kind:expr) => {
+        SpecKernel { name: $name, family: $family, shape: $shape, isa: $isa, kind: $kind }
+    };
+}
+
+/// The static variant registry. Portable entries exist on every target;
+/// AVX2 entries only on x86-64 (off x86-64, [`resolve`] simply never
+/// sees them, and the tuner never emits `Specialized` AVX2 shapes).
+pub fn registry() -> &'static [SpecKernel] {
+    static REG: OnceLock<Vec<SpecKernel>> = OnceLock::new();
+    REG.get_or_init(|| {
+        use IsaLevel::*;
+        use KernelFn::*;
+        let mut v = vec![
+            spec!("bcsr2x2_portable", "bcsr", (2, 2), Portable, BcsrSpmv(bcsr_rows_spec::<2, 2>)),
+            spec!("bcsr3x3_portable", "bcsr", (3, 3), Portable, BcsrSpmv(bcsr_rows_spec::<3, 3>)),
+            spec!("bcsr4x4_portable", "bcsr", (4, 4), Portable, BcsrSpmv(bcsr_rows_spec::<4, 4>)),
+            spec!("bcsr8x8_portable", "bcsr", (8, 8), Portable, BcsrSpmv(bcsr_rows_spec::<8, 8>)),
+            spec!("bcsr4x8_portable", "bcsr", (4, 8), Portable, BcsrSpmv(bcsr_rows_spec::<4, 8>)),
+            spec!("bcsr8x1_portable", "bcsr", (8, 1), Portable, BcsrSpmv(bcsr_rows_spec::<8, 1>)),
+            spec!("sell4_portable", "sell", (4, 0), Portable, SellSpmv(sell_chunks_spec::<4>)),
+            spec!("sell8_portable", "sell", (8, 0), Portable, SellSpmv(sell_chunks_spec::<8>)),
+            spec!("sell16_portable", "sell", (16, 0), Portable, SellSpmv(sell_chunks_spec::<16>)),
+            spec!("csr_u1_portable", "csr", (1, 0), Portable, CsrSpmv(csr_rows_spec::<1>)),
+            spec!("csr_u2_portable", "csr", (2, 0), Portable, CsrSpmv(csr_rows_spec::<2>)),
+            spec!("csr_u4_portable", "csr", (4, 0), Portable, CsrSpmv(csr_rows_spec::<4>)),
+            spec!("csr_mm1_portable", "csr", (1, 0), Portable, CsrSpmm(csr_mm_spec::<1>)),
+            spec!("csr_mm2_portable", "csr", (2, 0), Portable, CsrSpmm(csr_mm_spec::<2>)),
+            spec!("csr_mm4_portable", "csr", (4, 0), Portable, CsrSpmm(csr_mm_spec::<4>)),
+            spec!("csr_mm8_portable", "csr", (8, 0), Portable, CsrSpmm(csr_mm_spec::<8>)),
+        ];
+        #[cfg(target_arch = "x86_64")]
+        v.extend([
+            spec!("bcsr2x2_avx2", "bcsr", (2, 2), Avx2, BcsrSpmv(x86::bcsr_2x2)),
+            spec!("bcsr3x3_avx2", "bcsr", (3, 3), Avx2, BcsrSpmv(x86::bcsr_3x3)),
+            spec!("bcsr4x4_avx2", "bcsr", (4, 4), Avx2, BcsrSpmv(x86::bcsr_4x4)),
+            spec!("bcsr8x8_avx2", "bcsr", (8, 8), Avx2, BcsrSpmv(x86::bcsr_8x8)),
+            spec!("bcsr4x8_avx2", "bcsr", (4, 8), Avx2, BcsrSpmv(x86::bcsr_4x8)),
+            spec!("bcsr8x1_avx2", "bcsr", (8, 1), Avx2, BcsrSpmv(x86::bcsr_8x1)),
+            spec!("sell4_avx2", "sell", (4, 0), Avx2, SellSpmv(x86::sell_4)),
+            spec!("sell8_avx2", "sell", (8, 0), Avx2, SellSpmv(x86::sell_8)),
+            spec!("sell16_avx2", "sell", (16, 0), Avx2, SellSpmv(x86::sell_16)),
+            spec!("csr_u1_avx2", "csr", (1, 0), Avx2, CsrSpmv(x86::csr_u1)),
+            spec!("csr_u2_avx2", "csr", (2, 0), Avx2, CsrSpmv(x86::csr_u2)),
+            spec!("csr_u4_avx2", "csr", (4, 0), Avx2, CsrSpmv(x86::csr_u4)),
+            spec!("csr_mm1_avx2", "csr", (1, 0), Avx2, CsrSpmm(x86::csr_mm1)),
+            spec!("csr_mm2_avx2", "csr", (2, 0), Avx2, CsrSpmm(x86::csr_mm2)),
+            spec!("csr_mm4_avx2", "csr", (4, 0), Avx2, CsrSpmm(x86::csr_mm4)),
+            spec!("csr_mm8_avx2", "csr", (8, 0), Avx2, CsrSpmm(x86::csr_mm8)),
+        ]);
+        v
+    })
+}
+
+/// The widest registry variant for `(family, shape)` at or below `isa`
+/// (`spmm` selects between the CSR SpMV and SpMM kernel kinds). Returns
+/// `None` when the shape is not advertised — callers fall back to the
+/// generic loops, never fail.
+pub fn resolve(
+    family: &str,
+    shape: (usize, usize),
+    spmm: bool,
+    isa: IsaLevel,
+) -> Option<&'static SpecKernel> {
+    registry()
+        .iter()
+        .filter(|k| {
+            k.family == family && k.shape == shape && k.kind.is_spmm() == spmm && k.isa <= isa
+        })
+        .max_by_key(|k| k.isa)
+}
+
+/// Whether the registry covers `(family, shape)` at or below `isa` —
+/// what `tuner::space::enumerate_for` prunes the `Specialized` axis to.
+pub fn covers(family: &str, shape: (usize, usize), isa: IsaLevel) -> bool {
+    resolve(family, shape, false, isa).is_some()
+}
+
+/// CSR SpMV unroll factor for a mean row length: short rows would waste
+/// the unrolled steady state on the remainder loop.
+pub fn csr_unroll_for(nnz_per_row: f64) -> usize {
+    if nnz_per_row >= 8.0 {
+        4
+    } else if nnz_per_row >= 4.0 {
+        2
+    } else {
+        1
+    }
+}
+
+/// Largest advertised SpMM column block ≤ the workload width.
+pub fn spmm_kblock_for(k: usize) -> usize {
+    SPMM_KBLOCKS.iter().copied().filter(|kb| *kb <= k).max().unwrap_or(1)
+}
+
+// -------------------------------------------------- specialized payloads --
+
+/// CSR payload bound to a const-unroll SpMV variant (and, for SpMM
+/// workloads, a const-k-block SpMM variant). Generic over the holder so
+/// borrowing (`&Csr`) and owning (`Arc<Csr>`) prepare paths share it.
+pub struct SpecCsrOp<H> {
+    a: H,
+    spmv: &'static SpecKernel,
+    spmm: Option<&'static SpecKernel>,
+}
+
+impl<H: Deref<Target = Csr>> SpecCsrOp<H> {
+    /// Binds `a` to the unroll variant matching its mean row length at
+    /// `isa`; `k > 1` additionally resolves the SpMM k-block variant
+    /// (which then names the payload). Hands the holder back only if the
+    /// registry has no CSR entry at all for `isa`, so the caller can fall
+    /// through to the generic payload without a copy.
+    pub fn new(a: H, k: usize, isa: IsaLevel) -> Result<SpecCsrOp<H>, H> {
+        let per_row = {
+            let csr: &Csr = &a;
+            let nnz = csr.rptrs[csr.nrows] as f64;
+            nnz / csr.nrows.max(1) as f64
+        };
+        let Some(spmv) = resolve("csr", (csr_unroll_for(per_row), 0), false, isa) else {
+            return Err(a);
+        };
+        let spmm = if k > 1 { resolve("csr", (spmm_kblock_for(k), 0), true, isa) } else { None };
+        Ok(SpecCsrOp { a, spmv, spmm })
+    }
+
+    fn run_spmv(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
+        let a: &Csr = &self.a;
+        assert_eq!(x.len(), a.ncols);
+        assert_eq!(y.len(), a.nrows);
+        let KernelFn::CsrSpmv(kern) = self.spmv.kind else { unreachable!() };
+        let ctx = native::effective(ctx, a.nrows, native::SERIAL_ROWS);
+        let yp = native::SendPtr(y.as_mut_ptr());
+        native::run_partitioned(&ctx, a.nrows, &move |r| {
+            // Row ranges partition 0..nrows; disjoint y slices.
+            let ys = unsafe { std::slice::from_raw_parts_mut(yp.0.add(r.start), r.len()) };
+            kern(a, x, ys, r);
+        });
+    }
+}
+
+impl<H: Deref<Target = Csr> + Send + Sync> super::op::SpmvOp for SpecCsrOp<H> {
+    fn nrows(&self) -> usize {
+        let a: &Csr = &self.a;
+        a.nrows
+    }
+    fn ncols(&self) -> usize {
+        let a: &Csr = &self.a;
+        a.ncols
+    }
+    fn storage_bytes(&self) -> usize {
+        Csr::storage_bytes(&self.a)
+    }
+    fn format_name(&self) -> String {
+        "csr".to_string()
+    }
+    fn variant_name(&self) -> Option<&'static str> {
+        Some(self.spmm.unwrap_or(self.spmv).name)
+    }
+    fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
+        self.run_spmv(x, y, ctx);
+    }
+    fn spmm_into(&self, x: &[f64], y: &mut [f64], k: usize, ctx: &ExecCtx<'_>) {
+        let Some(KernelFn::CsrSpmm(kern)) = self.spmm.map(|s| s.kind) else {
+            return native::csr_spmm_into(&self.a, x, y, k, ctx);
+        };
+        let a: &Csr = &self.a;
+        assert_eq!(x.len(), a.ncols * k, "X must be ncols*k row-major");
+        assert_eq!(y.len(), a.nrows * k, "Y must be nrows*k row-major");
+        if k == 0 {
+            return;
+        }
+        let ctx = native::effective(ctx, a.nrows, native::SERIAL_ROWS);
+        let yp = native::SendPtr(y.as_mut_ptr());
+        native::run_partitioned(&ctx, a.nrows, &move |r| {
+            // Disjoint row ranges map to disjoint k-wide Y blocks.
+            let ys = unsafe { std::slice::from_raw_parts_mut(yp.0.add(r.start * k), r.len() * k) };
+            kern(a, x, ys, k, r);
+        });
+    }
+}
+
+/// BCSR payload bound to the const `R×C` variant matching its blocking.
+pub struct SpecBcsrOp {
+    b: Bcsr,
+    kern: &'static SpecKernel,
+}
+
+impl SpecBcsrOp {
+    /// Binds `b` to its shape's variant at `isa`; hands the payload back
+    /// if the registry does not cover `(b.r, b.c)` — the shape-match
+    /// guarantee `prepare` relies on.
+    pub fn new(b: Bcsr, isa: IsaLevel) -> Result<SpecBcsrOp, Bcsr> {
+        match resolve("bcsr", (b.r, b.c), false, isa) {
+            Some(kern) => Ok(SpecBcsrOp { b, kern }),
+            None => Err(b),
+        }
+    }
+}
+
+impl super::op::SpmvOp for SpecBcsrOp {
+    fn nrows(&self) -> usize {
+        self.b.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.b.ncols
+    }
+    fn storage_bytes(&self) -> usize {
+        self.b.storage_bytes()
+    }
+    fn format_name(&self) -> String {
+        format!("bcsr{}x{}", self.b.r, self.b.c)
+    }
+    fn variant_name(&self) -> Option<&'static str> {
+        Some(self.kern.name)
+    }
+    fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
+        assert_eq!(x.len(), self.b.ncols);
+        assert_eq!(y.len(), self.b.nrows);
+        let KernelFn::BcsrSpmv(kern) = self.kern.kind else { unreachable!() };
+        let b = &self.b;
+        let nbrows = b.nbrows();
+        let ctx = native::effective(ctx, nbrows, native::SERIAL_UNITS);
+        let yp = native::SendPtr(y.as_mut_ptr());
+        native::run_partitioned(&ctx, nbrows, &move |r| {
+            // Block rows map to disjoint y ranges; the spec kernel fully
+            // overwrites its rows, so no pre-zero pass is needed.
+            let lo = r.start * b.r;
+            let hi = (r.end * b.r).min(b.nrows);
+            let ys = unsafe { std::slice::from_raw_parts_mut(yp.0.add(lo), hi - lo) };
+            kern(b, x, ys, r);
+        });
+    }
+    fn spmm_into(&self, x: &[f64], y: &mut [f64], k: usize, ctx: &ExecCtx<'_>) {
+        native::bcsr_spmm_into(&self.b, x, y, k, ctx);
+    }
+}
+
+/// SELL payload bound to the const chunk-height variant matching `C`.
+pub struct SpecSellOp {
+    s: Sell,
+    kern: &'static SpecKernel,
+}
+
+impl SpecSellOp {
+    /// Binds `s` to its chunk height's variant at `isa`; hands the
+    /// payload back if the registry does not cover `s.chunk`.
+    pub fn new(s: Sell, isa: IsaLevel) -> Result<SpecSellOp, Sell> {
+        match resolve("sell", (s.chunk, 0), false, isa) {
+            Some(kern) => Ok(SpecSellOp { s, kern }),
+            None => Err(s),
+        }
+    }
+}
+
+impl super::op::SpmvOp for SpecSellOp {
+    fn nrows(&self) -> usize {
+        self.s.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.s.ncols
+    }
+    fn storage_bytes(&self) -> usize {
+        self.s.storage_bytes()
+    }
+    fn format_name(&self) -> String {
+        format!("sell{}-{}", self.s.chunk, self.s.sigma)
+    }
+    fn variant_name(&self) -> Option<&'static str> {
+        Some(self.kern.name)
+    }
+    fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
+        assert_eq!(x.len(), self.s.ncols);
+        assert_eq!(y.len(), self.s.nrows);
+        let KernelFn::SellSpmv(kern) = self.kern.kind else { unreachable!() };
+        let s = &self.s;
+        let nchunks = s.nchunks();
+        let ctx = native::effective(ctx, nchunks, native::SERIAL_UNITS);
+        let yp = native::SendPtr(y.as_mut_ptr());
+        native::run_partitioned(&ctx, nchunks, &move |r| {
+            // Chunks scatter to disjoint y rows (σ-permutation bijection).
+            kern(s, x, yp.0, r);
+        });
+    }
+    fn spmm_into(&self, x: &[f64], y: &mut [f64], k: usize, ctx: &ExecCtx<'_>) {
+        native::sell_spmm_into(&self.s, x, y, k, ctx);
+    }
+}
+
+// ------------------------------------------------- portable const bodies --
+
+/// CSR SpMV with a const `U`-way unrolled dot product (`U` independent
+/// accumulators; `U = 1` is the branch-minimal short-row loop).
+#[inline]
+fn csr_rows_spec<const U: usize>(a: &Csr, x: &[f64], ys: &mut [f64], r: Range<usize>) {
+    for (yi, i) in ys.iter_mut().zip(r) {
+        let cids = a.row_cids(i);
+        let vals = a.row_vals(i);
+        let mut accs = [0.0f64; U];
+        let mut k = 0usize;
+        while k + U <= vals.len() {
+            for u in 0..U {
+                accs[u] += vals[k + u] * x[cids[k + u] as usize];
+            }
+            k += U;
+        }
+        let mut sum: f64 = accs.iter().sum();
+        while k < vals.len() {
+            sum += vals[k] * x[cids[k] as usize];
+            k += 1;
+        }
+        *yi = sum;
+    }
+}
+
+/// CSR SpMM walking `k` in const `KB`-wide column blocks (register-array
+/// accumulator, runtime tail for `k % KB`).
+#[inline]
+fn csr_mm_spec<const KB: usize>(a: &Csr, x: &[f64], ys: &mut [f64], k: usize, r: Range<usize>) {
+    for (row_idx, i) in r.clone().enumerate() {
+        let cids = a.row_cids(i);
+        let vals = a.row_vals(i);
+        let mut u0 = 0usize;
+        while u0 + KB <= k {
+            let mut acc = [0.0f64; KB];
+            for (idx, &cid) in cids.iter().enumerate() {
+                let v = vals[idx];
+                let xrow = &x[cid as usize * k + u0..][..KB];
+                for t in 0..KB {
+                    acc[t] += v * xrow[t];
+                }
+            }
+            ys[row_idx * k + u0..][..KB].copy_from_slice(&acc);
+            u0 += KB;
+        }
+        if u0 < k {
+            let rem = k - u0;
+            let mut acc = [0.0f64; KB];
+            for (idx, &cid) in cids.iter().enumerate() {
+                let v = vals[idx];
+                let xrow = &x[cid as usize * k + u0..][..rem];
+                for t in 0..rem {
+                    acc[t] += v * xrow[t];
+                }
+            }
+            ys[row_idx * k + u0..][..rem].copy_from_slice(&acc[..rem]);
+        }
+    }
+}
+
+/// BCSR SpMV with const block shape: the `R×C` multiply fully unrolls,
+/// accumulators stay in registers across the whole block row, and rows
+/// are stored exactly once (no zero-fill pass, unlike the generic
+/// accumulate-into kernel). Ragged edges (last block row / column) take
+/// a scalar side path.
+#[inline]
+fn bcsr_rows_spec<const R: usize, const C: usize>(
+    b: &Bcsr,
+    x: &[f64],
+    ys: &mut [f64],
+    br_range: Range<usize>,
+) {
+    debug_assert_eq!((b.r, b.c), (R, C));
+    let base_row = br_range.start * R;
+    for br in br_range {
+        let row_lo = br * R;
+        let rows = (row_lo + R).min(b.nrows) - row_lo;
+        let mut acc = [0.0f64; R];
+        for kblk in b.brptrs[br]..b.brptrs[br + 1] {
+            let col_lo = b.bcids[kblk] as usize * C;
+            let block = &b.vals[kblk * R * C..(kblk + 1) * R * C];
+            if col_lo + C <= b.ncols {
+                let xs = &x[col_lo..col_lo + C];
+                for i in 0..rows.min(R) {
+                    let brow = &block[i * C..(i + 1) * C];
+                    let mut s = 0.0;
+                    for j in 0..C {
+                        s += brow[j] * xs[j];
+                    }
+                    acc[i] += s;
+                }
+            } else {
+                let cw = b.ncols - col_lo;
+                let xs = &x[col_lo..col_lo + cw];
+                for i in 0..rows.min(R) {
+                    let brow = &block[i * C..i * C + cw];
+                    let mut s = 0.0;
+                    for (bv, xv) in brow.iter().zip(xs) {
+                        s += bv * xv;
+                    }
+                    acc[i] += s;
+                }
+            }
+        }
+        ys[row_lo - base_row..row_lo - base_row + rows].copy_from_slice(&acc[..rows]);
+    }
+}
+
+/// SELL SpMV with const chunk height: the lane accumulator is a
+/// fixed-size array, so the slot loop is branch-free and the compiler
+/// keeps all `C` lanes in registers.
+#[inline]
+fn sell_chunks_spec<const C: usize>(s: &Sell, x: &[f64], y: *mut f64, r: Range<usize>) {
+    debug_assert_eq!(s.chunk, C);
+    for ch in r {
+        let lo = ch * C;
+        let lanes = s.nrows.min(lo + C) - lo;
+        let base = s.chunk_ptrs[ch];
+        let width = (s.chunk_ptrs[ch + 1] - base) / C;
+        let mut acc = [0.0f64; C];
+        for j in 0..width {
+            let slot = base + j * C;
+            for lane in 0..C {
+                acc[lane] += s.vals[slot + lane] * x[s.cids[slot + lane] as usize];
+            }
+        }
+        // Chunk-disjoint sorted positions map to disjoint y slots
+        // because the permutation is a bijection.
+        for lane in 0..lanes {
+            unsafe {
+                *y.add(s.perm[lo + lane] as usize) = acc[lane];
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------- AVX2 const bodies --
+
+/// AVX2 + FMA monomorphizations. Each public entry is a *safe* fn that
+/// re-checks host support and falls back to the portable twin, so the
+/// registry's fn pointers carry no safety obligation to call sites.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::*;
+    use core::arch::x86_64::*;
+
+    /// Sums the four lanes of `v`.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn hsum(v: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(v);
+        let hi = _mm256_extractf128_pd::<1>(v);
+        let s = _mm_add_pd(lo, hi);
+        let odd = _mm_unpackhi_pd(s, s);
+        _mm_cvtsd_f64(_mm_add_sd(s, odd))
+    }
+
+    #[inline]
+    fn have_avx2() -> bool {
+        IsaLevel::available() >= IsaLevel::Avx2
+    }
+
+    /// CSR SpMV, `U` accumulator registers marched 4·U values per step.
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn csr_rows_avx2<const U: usize>(a: &Csr, x: &[f64], ys: &mut [f64], r: Range<usize>) {
+        for (yi, i) in ys.iter_mut().zip(r) {
+            let cids = a.row_cids(i);
+            let vals = a.row_vals(i);
+            let mut acc = [_mm256_setzero_pd(); U];
+            let mut k = 0usize;
+            while k + 4 * U <= vals.len() {
+                for u in 0..U {
+                    let v = _mm256_loadu_pd(vals.as_ptr().add(k + u * 4));
+                    let g = _mm256_set_pd(
+                        x[cids[k + u * 4 + 3] as usize],
+                        x[cids[k + u * 4 + 2] as usize],
+                        x[cids[k + u * 4 + 1] as usize],
+                        x[cids[k + u * 4] as usize],
+                    );
+                    acc[u] = _mm256_fmadd_pd(v, g, acc[u]);
+                }
+                k += 4 * U;
+            }
+            let mut total = acc[0];
+            for a in acc.iter().skip(1) {
+                total = _mm256_add_pd(total, *a);
+            }
+            let mut sum = hsum(total);
+            while k < vals.len() {
+                sum += vals[k] * x[cids[k] as usize];
+                k += 1;
+            }
+            *yi = sum;
+        }
+    }
+
+    /// CSR SpMM, const `KB` column block; `KB ≥ 4` keeps `KB/4`
+    /// accumulator registers, smaller blocks run the unrolled scalar
+    /// body under the AVX2 feature set.
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn csr_mm_avx2<const KB: usize>(
+        a: &Csr,
+        x: &[f64],
+        ys: &mut [f64],
+        k: usize,
+        r: Range<usize>,
+    ) {
+        if KB < 4 {
+            return super::csr_mm_spec::<KB>(a, x, ys, k, r);
+        }
+        let nv = KB / 4;
+        for (row_idx, i) in r.clone().enumerate() {
+            let cids = a.row_cids(i);
+            let vals = a.row_vals(i);
+            let mut u0 = 0usize;
+            while u0 + KB <= k {
+                let mut acc = [_mm256_setzero_pd(); KB];
+                for (idx, &cid) in cids.iter().enumerate() {
+                    let v = _mm256_set1_pd(vals[idx]);
+                    let xrow = x.as_ptr().add(cid as usize * k + u0);
+                    for t in 0..nv {
+                        acc[t] = _mm256_fmadd_pd(v, _mm256_loadu_pd(xrow.add(t * 4)), acc[t]);
+                    }
+                }
+                let out = ys.as_mut_ptr().add(row_idx * k + u0);
+                for t in 0..nv {
+                    _mm256_storeu_pd(out.add(t * 4), acc[t]);
+                }
+                u0 += KB;
+            }
+            if u0 < k {
+                let rem = k - u0;
+                let mut acc = [0.0f64; KB];
+                for (idx, &cid) in cids.iter().enumerate() {
+                    let v = vals[idx];
+                    let xrow = &x[cid as usize * k + u0..][..rem];
+                    for t in 0..rem {
+                        acc[t] += v * xrow[t];
+                    }
+                }
+                ys[row_idx * k + u0..][..rem].copy_from_slice(&acc[..rem]);
+            }
+        }
+    }
+
+    /// BCSR SpMV, const `R×C` with vector rows when `C` is a lane
+    /// multiple: one x-window load per block (no gather), `R` register
+    /// accumulators held across the whole block row, one horizontal sum
+    /// per row per block row (the generic kernel pays one per block).
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn bcsr_rows_avx2<const R: usize, const C: usize>(
+        a: &Bcsr,
+        x: &[f64],
+        ys: &mut [f64],
+        br_range: Range<usize>,
+    ) {
+        if C % 4 != 0 {
+            return super::bcsr_rows_spec::<R, C>(a, x, ys, br_range);
+        }
+        debug_assert_eq!((a.r, a.c), (R, C));
+        let nv = C / 4;
+        let base_row = br_range.start * R;
+        for br in br_range {
+            let row_lo = br * R;
+            let rows = (row_lo + R).min(a.nrows) - row_lo;
+            if rows < R {
+                // Ragged last block row: scalar side path.
+                let sub = br..br + 1;
+                let ys_tail = &mut ys[row_lo - base_row..row_lo - base_row + rows];
+                super::bcsr_rows_spec::<R, C>(a, x, ys_tail, sub);
+                continue;
+            }
+            let mut acc = [[_mm256_setzero_pd(); 2]; R];
+            let mut edge = [0.0f64; R];
+            for kblk in a.brptrs[br]..a.brptrs[br + 1] {
+                let col_lo = a.bcids[kblk] as usize * C;
+                let bp = a.vals.as_ptr().add(kblk * R * C);
+                if col_lo + C <= a.ncols {
+                    let mut xv = [_mm256_setzero_pd(); 2];
+                    for v in 0..nv {
+                        xv[v] = _mm256_loadu_pd(x.as_ptr().add(col_lo + v * 4));
+                    }
+                    for i in 0..R {
+                        for v in 0..nv {
+                            let bv = _mm256_loadu_pd(bp.add(i * C + v * 4));
+                            acc[i][v] = _mm256_fmadd_pd(bv, xv[v], acc[i][v]);
+                        }
+                    }
+                } else {
+                    let cw = a.ncols - col_lo;
+                    for i in 0..R {
+                        let mut s = 0.0;
+                        for j in 0..cw {
+                            s += *bp.add(i * C + j) * x[col_lo + j];
+                        }
+                        edge[i] += s;
+                    }
+                }
+            }
+            for i in 0..R {
+                let mut total = acc[i][0];
+                for v in 1..nv {
+                    total = _mm256_add_pd(total, acc[i][v]);
+                }
+                ys[row_lo - base_row + i] = hsum(total) + edge[i];
+            }
+        }
+    }
+
+    /// SELL SpMV, const chunk height (`C % 4 == 0`): `C/4` accumulator
+    /// registers with a branch-free slot loop.
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn sell_chunks_avx2<const C: usize>(s: &Sell, x: &[f64], y: *mut f64, r: Range<usize>) {
+        debug_assert!(C % 4 == 0 && s.chunk == C);
+        let nv = C / 4;
+        let mut acc = [_mm256_setzero_pd(); C];
+        let mut lane_vals = [0.0f64; C];
+        for ch in r {
+            let lo = ch * C;
+            let lanes = s.nrows.min(lo + C) - lo;
+            let base = s.chunk_ptrs[ch];
+            let width = (s.chunk_ptrs[ch + 1] - base) / C;
+            for a in acc[..nv].iter_mut() {
+                *a = _mm256_setzero_pd();
+            }
+            for j in 0..width {
+                let slot = base + j * C;
+                for v in 0..nv {
+                    let vals = _mm256_loadu_pd(s.vals.as_ptr().add(slot + v * 4));
+                    let g = _mm256_set_pd(
+                        x[s.cids[slot + v * 4 + 3] as usize],
+                        x[s.cids[slot + v * 4 + 2] as usize],
+                        x[s.cids[slot + v * 4 + 1] as usize],
+                        x[s.cids[slot + v * 4] as usize],
+                    );
+                    acc[v] = _mm256_fmadd_pd(vals, g, acc[v]);
+                }
+            }
+            for v in 0..nv {
+                _mm256_storeu_pd(lane_vals.as_mut_ptr().add(v * 4), acc[v]);
+            }
+            for (lane, lv) in lane_vals[..lanes].iter().enumerate() {
+                *y.add(s.perm[lo + lane] as usize) = *lv;
+            }
+        }
+    }
+
+    /// Safe registry entry points: host-support check, then the AVX2
+    /// monomorphization; portable twin otherwise.
+    macro_rules! entry {
+        ($name:ident, csr_u $u:literal) => {
+            pub(super) fn $name(a: &Csr, x: &[f64], ys: &mut [f64], r: Range<usize>) {
+                if have_avx2() {
+                    // SAFETY: host support verified above.
+                    unsafe { csr_rows_avx2::<$u>(a, x, ys, r) }
+                } else {
+                    super::csr_rows_spec::<$u>(a, x, ys, r)
+                }
+            }
+        };
+        ($name:ident, csr_mm $kb:literal) => {
+            pub(super) fn $name(a: &Csr, x: &[f64], ys: &mut [f64], k: usize, r: Range<usize>) {
+                if have_avx2() {
+                    // SAFETY: host support verified above.
+                    unsafe { csr_mm_avx2::<$kb>(a, x, ys, k, r) }
+                } else {
+                    super::csr_mm_spec::<$kb>(a, x, ys, k, r)
+                }
+            }
+        };
+        ($name:ident, bcsr $r:literal x $c:literal) => {
+            pub(super) fn $name(b: &Bcsr, x: &[f64], ys: &mut [f64], r: Range<usize>) {
+                if have_avx2() {
+                    // SAFETY: host support verified above.
+                    unsafe { bcsr_rows_avx2::<$r, $c>(b, x, ys, r) }
+                } else {
+                    super::bcsr_rows_spec::<$r, $c>(b, x, ys, r)
+                }
+            }
+        };
+        ($name:ident, sell $c:literal) => {
+            pub(super) fn $name(s: &Sell, x: &[f64], y: *mut f64, r: Range<usize>) {
+                if have_avx2() {
+                    // SAFETY: host support verified above.
+                    unsafe { sell_chunks_avx2::<$c>(s, x, y, r) }
+                } else {
+                    super::sell_chunks_spec::<$c>(s, x, y, r)
+                }
+            }
+        };
+    }
+
+    entry!(csr_u1, csr_u 1);
+    entry!(csr_u2, csr_u 2);
+    entry!(csr_u4, csr_u 4);
+    entry!(csr_mm1, csr_mm 1);
+    entry!(csr_mm2, csr_mm 2);
+    entry!(csr_mm4, csr_mm 4);
+    entry!(csr_mm8, csr_mm 8);
+    entry!(bcsr_2x2, bcsr 2 x 2);
+    entry!(bcsr_3x3, bcsr 3 x 3);
+    entry!(bcsr_4x4, bcsr 4 x 4);
+    entry!(bcsr_8x8, bcsr 8 x 8);
+    entry!(bcsr_4x8, bcsr 4 x 8);
+    entry!(bcsr_8x1, bcsr 8 x 1);
+    entry!(sell_4, sell 4);
+    entry!(sell_8, sell 8);
+    entry!(sell_16, sell 16);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{SpmvOp, Workload};
+    use crate::sparse::gen::stencil::stencil_2d;
+    use crate::sparse::gen::{random_vector, randomize_values};
+    use std::sync::Arc;
+
+    fn matrix() -> Csr {
+        let mut a = stencil_2d(30, 29);
+        randomize_values(&mut a, 91);
+        a
+    }
+
+    fn close(u: &[f64], v: &[f64]) {
+        assert_eq!(u.len(), v.len());
+        for (a, b) in u.iter().zip(v) {
+            assert!((a - b).abs() <= 1e-9 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn every_advertised_shape_has_portable_and_avx2_entries() {
+        for &(r, c) in BCSR_SHAPES {
+            assert!(resolve("bcsr", (r, c), false, IsaLevel::Portable).is_some(), "bcsr{r}x{c}");
+            #[cfg(target_arch = "x86_64")]
+            assert_eq!(resolve("bcsr", (r, c), false, IsaLevel::Avx2).unwrap().isa, IsaLevel::Avx2);
+        }
+        for &c in SELL_CHUNKS {
+            assert!(resolve("sell", (c, 0), false, IsaLevel::Portable).is_some(), "sell{c}");
+            #[cfg(target_arch = "x86_64")]
+            assert_eq!(resolve("sell", (c, 0), false, IsaLevel::Avx2).unwrap().isa, IsaLevel::Avx2);
+        }
+        for &u in CSR_UNROLLS {
+            assert!(resolve("csr", (u, 0), false, IsaLevel::Portable).is_some(), "csr u{u}");
+            #[cfg(target_arch = "x86_64")]
+            assert_eq!(resolve("csr", (u, 0), false, IsaLevel::Avx2).unwrap().isa, IsaLevel::Avx2);
+        }
+        for &kb in SPMM_KBLOCKS {
+            assert!(resolve("csr", (kb, 0), true, IsaLevel::Portable).is_some(), "csr mm{kb}");
+            #[cfg(target_arch = "x86_64")]
+            assert_eq!(resolve("csr", (kb, 0), true, IsaLevel::Avx2).unwrap().isa, IsaLevel::Avx2);
+        }
+    }
+
+    #[test]
+    fn resolve_never_exceeds_the_requested_isa() {
+        for kern in registry() {
+            let hit = resolve(kern.family, kern.shape, kern.kind.is_spmm(), IsaLevel::Portable)
+                .expect("portable entry must exist");
+            assert_eq!(hit.isa, IsaLevel::Portable);
+        }
+        assert!(resolve("bcsr", (5, 5), false, IsaLevel::Avx2).is_none());
+        assert!(!covers("sell", (12, 0), IsaLevel::Avx2));
+        assert!(covers("bcsr", (4, 4), IsaLevel::Portable));
+    }
+
+    #[test]
+    fn unroll_and_kblock_selection() {
+        assert_eq!(csr_unroll_for(1.5), 1);
+        assert_eq!(csr_unroll_for(5.0), 2);
+        assert_eq!(csr_unroll_for(20.0), 4);
+        assert_eq!(spmm_kblock_for(1), 1);
+        assert_eq!(spmm_kblock_for(3), 2);
+        assert_eq!(spmm_kblock_for(16), 8);
+    }
+
+    #[test]
+    fn specialized_ops_match_the_generic_oracle() {
+        let a = Arc::new(matrix());
+        let x = random_vector(a.ncols, 5);
+        let want = Csr::spmv(&a, &x);
+        let ctx = ExecCtx::serial();
+        for isa in [IsaLevel::Portable, IsaLevel::detect()] {
+            let op = SpecCsrOp::new(a.clone(), 1, isa).ok().expect("csr always covered");
+            close(&op.spmv(&x, &ctx), &want);
+            let b = SpecBcsrOp::new(Bcsr::from_csr(&a, 4, 4), isa).unwrap();
+            close(&b.spmv(&x, &ctx), &want);
+            let s = SpecSellOp::new(Sell::from_csr(&a, 8, 64), isa).unwrap();
+            close(&s.spmv(&x, &ctx), &want);
+        }
+        let k = 7;
+        let xk = random_vector(a.ncols * k, 9);
+        // UFCS: the blanket Arc impl would shadow the inherent two-argument
+        // `Csr::spmm` during method probing.
+        let wantk = Csr::spmm(&a, &xk, k);
+        let op = SpecCsrOp::new(a.clone(), k, IsaLevel::detect()).ok().unwrap();
+        let mut yk = vec![f64::NAN; a.nrows * k];
+        op.apply(Workload::Spmm { k }, &xk, &mut yk, &ctx);
+        close(&yk, &wantk);
+        assert!(op.variant_name().unwrap().contains("mm"));
+    }
+
+    #[test]
+    fn uncovered_shapes_hand_the_payload_back() {
+        let a = matrix();
+        let b = Bcsr::from_csr(&a, 5, 5);
+        assert!(SpecBcsrOp::new(b, IsaLevel::detect()).is_err());
+        let s = Sell::from_csr(&a, 12, 64);
+        assert!(SpecSellOp::new(s, IsaLevel::detect()).is_err());
+    }
+}

@@ -157,6 +157,23 @@ pub enum EventKind {
         /// The cached decision served.
         decision: String,
     },
+    /// The on-disk tuning cache was written by an older format version
+    /// and loaded empty — every entry re-tunes once. Published so a cold
+    /// fleet start after an upgrade reads as a migration, not a bug.
+    CacheMigrated {
+        /// Format version of the discarded file.
+        from: usize,
+    },
+    /// A drifting entry's re-tunes keep landing on the same decision, so
+    /// its drift checks are being exponentially backed off.
+    RetuneBackoff {
+        /// Entry id.
+        id: String,
+        /// Consecutive re-tunes that failed to improve the decision.
+        failures: u32,
+        /// Drift checks that will be skipped before the next attempt.
+        skip: u32,
+    },
 }
 
 impl EventKind {
@@ -176,6 +193,8 @@ impl EventKind {
             EventKind::TrialTimed { .. } => "trial_timed",
             EventKind::DecisionCommitted { .. } => "decision_committed",
             EventKind::CacheHit { .. } => "cache_hit",
+            EventKind::CacheMigrated { .. } => "cache_migrated",
+            EventKind::RetuneBackoff { .. } => "retune_backoff",
         }
     }
 }
@@ -246,6 +265,16 @@ impl std::fmt::Display for EventKind {
             }
             EventKind::CacheHit { name, workload, decision } => {
                 write!(f, "cache hit {name} [{workload}]: {decision}")
+            }
+            EventKind::CacheMigrated { from } => {
+                write!(f, "tuning cache migrated from format v{from}: starting cold")
+            }
+            EventKind::RetuneBackoff { id, failures, skip } => {
+                write!(
+                    f,
+                    "retune backoff {id}: {failures} fruitless re-tunes, skipping next {skip} \
+                     drift checks"
+                )
             }
         }
     }

@@ -101,6 +101,16 @@ pub mod names {
     pub fn kernel_ns(family: &str, vectorized: bool) -> String {
         format!("kernel_ns_{family}_{}", if vectorized { "vector" } else { "portable" })
     }
+
+    /// Counter name for kernel nanoseconds attributed to one
+    /// *specialized* micro-kernel variant — `kernel_ns_{family}_{variant}`
+    /// with the variant name from the registry (e.g.
+    /// `kernel_ns_bcsr_bcsr4x4_avx2`). Splitting the counter per variant
+    /// is what lets a dashboard show whether the specialized payloads a
+    /// tuner committed to are actually the ones burning the cycles.
+    pub fn kernel_ns_variant(family: &str, variant: &str) -> String {
+        format!("kernel_ns_{family}_{variant}")
+    }
 }
 
 /// Default bounded capacity of a [`Telemetry`] instance's event journal.

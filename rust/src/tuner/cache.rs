@@ -24,6 +24,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
+use crate::kernels::specialize::Specialization;
 use crate::kernels::Workload;
 use crate::sched::Policy;
 use crate::util::json::Json;
@@ -38,10 +39,18 @@ use super::space::{parse_policy, Candidate, Format, Ordering};
 /// version-3 lookup. Version 4 folded the detected
 /// [`crate::kernels::IsaLevel`] into the key hash: a decision trialed
 /// with AVX-512 kernels (and a lane-snapped SELL space) must not answer
-/// a portable run of the same binary. Stale-version keys can never match
-/// a current lookup, so [`TuningCache::load`] discards stale-version
-/// files wholesale instead of carrying unreachable entries forever.
-const CACHE_VERSION: usize = 4;
+/// a portable run of the same binary. Version 5 added the specialization
+/// axis: entries carry an optional `variant` field naming the registry
+/// micro-kernel the decision executes
+/// ([`crate::kernels::specialize::SpecKernel`]), and the key hash covers
+/// the axis, so a version-4 decision — searched without specialized
+/// candidates — must not answer a version-5 lookup. Stale-version keys
+/// can never match a current lookup, so [`TuningCache::load`] discards
+/// stale-version files wholesale instead of carrying unreachable entries
+/// forever (recording the old version in
+/// [`TuningCache::take_migrated_from`] so the caller can log the
+/// migration once instead of silently serving an empty cache).
+const CACHE_VERSION: usize = 5;
 
 /// Unix-epoch seconds now — the stamp [`TunedConfig::tuned_at`] carries.
 pub fn now_epoch() -> u64 {
@@ -64,6 +73,12 @@ pub struct TunedConfig {
     pub policy: Policy,
     /// Chosen thread count.
     pub threads: usize,
+    /// Name of the specialized registry micro-kernel the decision executes
+    /// (e.g. `"bcsr4x4_avx2"`), or `None` when the generic loops won the
+    /// search. Provenance for operators *and* dispatch input: a `Some`
+    /// here makes [`TunedConfig::candidate`] a
+    /// [`Specialization::Specialized`] candidate.
+    pub variant: Option<String>,
     /// GFlop/s observed (trials) or predicted (model) at decision time.
     pub gflops: f64,
     /// `"trial"` or `"model"`.
@@ -86,6 +101,7 @@ impl PartialEq for TunedConfig {
             && self.ordering == other.ordering
             && self.policy == other.policy
             && self.threads == other.threads
+            && self.variant == other.variant
             && self.gflops == other.gflops
             && self.source == other.source
     }
@@ -99,12 +115,18 @@ impl TunedConfig {
             ordering: self.ordering,
             policy: self.policy,
             threads: self.threads,
+            spec: if self.variant.is_some() {
+                Specialization::Specialized
+            } else {
+                Specialization::Generic
+            },
         }
     }
 
-    /// Serializes to a JSON object.
+    /// Serializes to a JSON object. The `variant` field is written only
+    /// when present, so generic decisions keep the pre-v5 entry shape.
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let j = Json::obj()
             .set("workload", self.workload.to_string())
             .set("format", self.format.to_string())
             .set("ordering", self.ordering.to_string())
@@ -112,7 +134,11 @@ impl TunedConfig {
             .set("threads", self.threads)
             .set("gflops", self.gflops)
             .set("source", self.source.as_str())
-            .set("tuned_at", self.tuned_at)
+            .set("tuned_at", self.tuned_at);
+        match &self.variant {
+            Some(v) => j.set("variant", v.as_str()),
+            None => j,
+        }
     }
 
     /// Parses the [`TunedConfig::to_json`] form. A hand-edited entry
@@ -151,6 +177,7 @@ impl TunedConfig {
             .and_then(Json::as_str)
             .unwrap_or("unknown")
             .to_string();
+        let variant = j.get("variant").and_then(Json::as_str).map(str::to_string);
         // A stampless (hand-edited) entry reads as infinitely old: under a
         // TTL it expires immediately, without one it lives forever.
         let tuned_at = j.get("tuned_at").and_then(Json::as_usize).unwrap_or(0) as u64;
@@ -160,6 +187,7 @@ impl TunedConfig {
             ordering,
             policy,
             threads: threads.max(1),
+            variant,
             gflops,
             source,
             tuned_at,
@@ -179,7 +207,11 @@ impl std::fmt::Display for TunedConfig {
             self.workload,
             self.gflops,
             self.source
-        )
+        )?;
+        if let Some(v) = &self.variant {
+            write!(f, " via {v}")?;
+        }
+        Ok(())
     }
 }
 
@@ -197,6 +229,11 @@ pub struct TuningCache {
     /// further in the past look up as absent (and are pruned from the
     /// file on save). `None` — the default — disables decay.
     max_age: Option<Duration>,
+    /// Set by [`TuningCache::load`] when the backing file was written by
+    /// an older format version and therefore loaded empty: the old
+    /// version number, held until [`TuningCache::take_migrated_from`]
+    /// collects it for logging.
+    migrated_from: Option<usize>,
     /// Lookups answered from the cache.
     pub hits: usize,
     /// Lookups that fell through to a search.
@@ -232,6 +269,16 @@ impl TuningCache {
             anyhow::bail!("tuning cache {path:?} has a missing or malformed 'version' field");
         };
         if version < CACHE_VERSION {
+            // Loading empty is correct (the old keys are unreachable) but
+            // must not be *silent*: losing every cached decision to a
+            // format bump looks exactly like a cold cache unless someone
+            // says so. One line here, one journal event at the tuner
+            // layer (which drains `migrated_from`).
+            eprintln!(
+                "tuning cache {path:?}: migrated from format v{version} to \
+                 v{CACHE_VERSION}, starting empty (old keys are unreachable)"
+            );
+            cache.migrated_from = Some(version);
             return Ok(cache);
         }
         anyhow::ensure!(
@@ -257,6 +304,13 @@ impl TuningCache {
     /// The configured age limit, if any.
     pub fn max_age(&self) -> Option<Duration> {
         self.max_age
+    }
+
+    /// The format version an older-version backing file was migrated
+    /// from, if [`TuningCache::load`] discarded one. Take-semantics so a
+    /// single caller logs the migration exactly once.
+    pub fn take_migrated_from(&mut self) -> Option<usize> {
+        self.migrated_from.take()
     }
 
     /// Whether `entry` is past the configured age limit (never, without
@@ -448,6 +502,7 @@ mod tests {
                     ordering: Ordering::Natural,
                     policy: Policy::Dynamic(64),
                     threads: 8,
+                    variant: Some("csr_u2_avx2".to_string()),
                     gflops: 3.5,
                     source: "trial".to_string(),
                     tuned_at: 1_700_000_000,
@@ -461,6 +516,7 @@ mod tests {
                     ordering: Ordering::Rcm,
                     policy: Policy::Dynamic(16),
                     threads: 4,
+                    variant: None,
                     gflops: 2.25,
                     source: "model".to_string(),
                     tuned_at: 1_700_000_001,
@@ -474,6 +530,7 @@ mod tests {
                     ordering: Ordering::Natural,
                     policy: Policy::StaticBlock,
                     threads: 1,
+                    variant: None,
                     gflops: 0.5,
                     source: "trial".to_string(),
                     tuned_at: 1_700_000_002,
@@ -548,16 +605,16 @@ mod tests {
     fn rejects_bad_versions_and_shapes() {
         assert!(TuningCache::from_json(&Json::parse(r#"{"version": 9}"#).unwrap()).is_err());
         assert!(
-            TuningCache::from_json(&Json::parse(r#"{"version": 4, "entries": 3}"#).unwrap())
+            TuningCache::from_json(&Json::parse(r#"{"version": 5, "entries": 3}"#).unwrap())
                 .is_err()
         );
         let bad_format =
-            r#"{"version": 4, "entries": {"k": {"format": "zzz", "policy": "static", "threads": 1}}}"#;
+            r#"{"version": 5, "entries": {"k": {"format": "zzz", "policy": "static", "threads": 1}}}"#;
         assert!(TuningCache::from_json(&Json::parse(bad_format).unwrap()).is_err());
-        let bad_workload = r#"{"version": 4, "entries": {"k": {"workload": "spmm0",
+        let bad_workload = r#"{"version": 5, "entries": {"k": {"workload": "spmm0",
             "format": "csr", "policy": "static", "threads": 1}}}"#;
         assert!(TuningCache::from_json(&Json::parse(bad_workload).unwrap()).is_err());
-        let bad_ordering = r#"{"version": 4, "entries": {"k": {"ordering": "sorted",
+        let bad_ordering = r#"{"version": 5, "entries": {"k": {"ordering": "sorted",
             "format": "csr", "policy": "static", "threads": 1}}}"#;
         assert!(TuningCache::from_json(&Json::parse(bad_ordering).unwrap()).is_err());
     }
@@ -565,13 +622,15 @@ mod tests {
     #[test]
     fn current_version_entries_without_optional_fields_use_defaults() {
         // Lenient field parsing within the current version: a hand-edited
-        // entry lacking the workload/ordering fields reads as a
-        // natural-order SpMV decision.
-        let legacy = r#"{"version": 4, "entries":
+        // entry lacking the workload/ordering/variant fields reads as a
+        // natural-order generic SpMV decision.
+        let legacy = r#"{"version": 5, "entries":
             {"k": {"format": "csr", "policy": "dynamic,64", "threads": 2}}}"#;
         let mut c = TuningCache::from_json(&Json::parse(legacy).unwrap()).unwrap();
         assert_eq!(c.get("k").unwrap().workload, Workload::Spmv);
         assert_eq!(c.get("k").unwrap().ordering, Ordering::Natural);
+        assert_eq!(c.get("k").unwrap().variant, None);
+        assert_eq!(c.get("k").unwrap().candidate().spec, Specialization::Generic);
     }
 
     #[test]
@@ -589,19 +648,25 @@ mod tests {
         std::fs::write(&path, v2).unwrap();
         let mut c = TuningCache::load(&path).unwrap();
         assert!(c.is_empty(), "stale-version entries must be dropped");
+        // The migration is recorded (once) so the tuner can journal it —
+        // losing a cache to a format bump must not be silent.
+        assert_eq!(c.take_migrated_from(), Some(2));
+        assert_eq!(c.take_migrated_from(), None, "take-semantics: logged once");
         let v1 = r#"{"version": 1, "entries":
             {"oldkey": {"format": "csr", "policy": "dynamic,64", "threads": 2}}}"#;
         std::fs::write(&path, v1).unwrap();
-        assert!(TuningCache::load(&path).unwrap().is_empty());
+        let mut from_v1 = TuningCache::load(&path).unwrap();
+        assert!(from_v1.is_empty());
+        assert_eq!(from_v1.take_migrated_from(), Some(1));
         // Corruption of a *current*-version file still errors, as does a
         // missing version field (no version-less format ever existed).
-        std::fs::write(&path, r#"{"version": 4, "entries": 3}"#).unwrap();
+        std::fs::write(&path, r#"{"version": 5, "entries": 3}"#).unwrap();
         assert!(TuningCache::load(&path).is_err());
         std::fs::write(&path, r#"{"entries": {}}"#).unwrap();
         assert!(TuningCache::load(&path).is_err());
         // A *newer*-version file errors on load AND refuses to be
         // clobbered by save — an old binary must not wipe it.
-        std::fs::write(&path, r#"{"version": 5, "entries": {}}"#).unwrap();
+        std::fs::write(&path, r#"{"version": 6, "entries": {}}"#).unwrap();
         assert!(TuningCache::load(&path).is_err());
         assert!(c.save().is_err(), "save must not overwrite a newer-version file");
         // Saving the (empty-loaded) cache rewrites the stale file in the

@@ -27,6 +27,7 @@
 use crate::arch::phi::WorkProfile;
 use crate::arch::PhiMachine;
 use crate::kernels::blocked_model::bcsr_profile;
+use crate::kernels::specialize::Specialization;
 use crate::kernels::spmm_model::{spmm_profile, SpmmAnalysis, SpmmVariant};
 use crate::kernels::spmv_model::{spmv_profile, SpmvAnalysis, SpmvVariant};
 use crate::kernels::{IsaLevel, Workload};
@@ -36,6 +37,16 @@ use crate::sparse::ordering::{apply_symmetric_permutation, rcm};
 use crate::sparse::{Bcsr, Csr};
 
 use super::space::{estimate_block_density, hyb_overflow_tail, Candidate, Format, Ordering};
+
+/// Instruction-term multiplier for [`Specialization::Specialized`]
+/// candidates: a const-shape micro-kernel retires the same FMAs but
+/// sheds the runtime-parameter bookkeeping (trip-count arithmetic,
+/// bounds-dependent branches, the per-block remainder logic the generic
+/// loops re-test every iteration), so its instruction stream compresses
+/// while its memory terms are byte-for-byte identical. The model prices
+/// only that: compute-bound candidates gain, bandwidth-bound ones rank
+/// unchanged — which is also why trials, not the model, settle the race.
+pub const SPEC_INSTRUCTION_DISCOUNT: f64 = 0.75;
 
 /// The analytic ranker.
 pub struct CostModel {
@@ -188,6 +199,9 @@ impl CostModel {
                 // proportionally faster; the memory terms are untouched,
                 // so bandwidth-bound candidates keep their ranking.
                 w.instructions /= self.isa.flop_throughput();
+                if cand.spec == Specialization::Specialized {
+                    w.instructions *= SPEC_INSTRUCTION_DISCOUNT;
+                }
                 let (cores, contexts) = map_threads(cand.threads);
                 let est = self.machine.estimate(cores, contexts, &w);
                 (cand, est.time_s)
@@ -337,7 +351,13 @@ mod tests {
     use crate::sparse::gen::stencil::stencil_2d;
 
     fn cand(format: Format, threads: usize) -> Candidate {
-        Candidate { format, ordering: Ordering::Natural, policy: Policy::Dynamic(64), threads }
+        Candidate {
+            format,
+            ordering: Ordering::Natural,
+            policy: Policy::Dynamic(64),
+            threads,
+            spec: Specialization::Generic,
+        }
     }
 
     #[test]
@@ -545,6 +565,34 @@ mod tests {
     }
 
     #[test]
+    fn specialized_twin_predicted_faster_never_slower() {
+        // The discount shrinks only the instruction term under a roofline
+        // max(), so a specialized candidate is never predicted slower than
+        // its generic twin, never gains more than the discount itself, and
+        // gains strictly wherever the twin was compute-bound.
+        let a = stencil_2d(40, 40);
+        let m = CostModel::new();
+        let mut strict_win = false;
+        for w in [Workload::Spmv, Workload::Spmm { k: 8 }] {
+            for (format, threads) in
+                [(Format::Csr, 1), (Format::Csr, 8), (Format::Bcsr { r: 4, c: 4 }, 8)]
+            {
+                let generic = cand(format, threads);
+                let spec = Candidate { spec: Specialization::Specialized, ..generic };
+                let tg = m.predict_for(&a, generic, w);
+                let ts = m.predict_for(&a, spec, w);
+                assert!(ts <= tg, "{w} {format} t{threads}: specialized {ts} vs generic {tg}");
+                assert!(
+                    ts >= tg * SPEC_INSTRUCTION_DISCOUNT,
+                    "{w} {format} t{threads}: discount only touches the instruction term"
+                );
+                strict_win |= ts < tg;
+            }
+        }
+        assert!(strict_win, "at least one compute-bound twin must gain from the discount");
+    }
+
+    #[test]
     fn static_predicted_worse_than_dynamic_on_skewed_rows() {
         let a = powerlaw(&PowerLawSpec {
             n: 3000,
@@ -562,6 +610,7 @@ mod tests {
                 ordering: Ordering::Natural,
                 policy: Policy::Dynamic(16),
                 threads: 8,
+                spec: Specialization::Generic,
             },
         );
         let stat = m.predict(
@@ -571,6 +620,7 @@ mod tests {
                 ordering: Ordering::Natural,
                 policy: Policy::StaticBlock,
                 threads: 8,
+                spec: Specialization::Generic,
             },
         );
         assert!(stat >= dynamic, "static {stat} vs dynamic {dynamic}");

@@ -22,6 +22,8 @@
 use std::sync::Arc;
 
 use crate::kernels::op::{ExecCtx, SpmvOp};
+use crate::kernels::specialize::{SpecBcsrOp, SpecCsrOp, SpecSellOp, Specialization};
+use crate::kernels::IsaLevel;
 use crate::sparse::ordering::permute::{permute_panel, unpermute_panel};
 use crate::sparse::ordering::rcm;
 use crate::sparse::{Bcsr, Csr, Ell, Hyb, Sell};
@@ -69,6 +71,9 @@ impl SpmvOp for PermutedOp<'_> {
     fn format_name(&self) -> String {
         format!("rcm:{}", self.inner.format_name())
     }
+    fn variant_name(&self) -> Option<&'static str> {
+        self.inner.variant_name()
+    }
     fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
         let px = permute_panel(x, &self.perm, 1);
         let mut py = vec![0.0f64; y.len()];
@@ -98,6 +103,35 @@ fn convert_owned(b: Csr, format: Format) -> Box<dyn SpmvOp> {
     }
 }
 
+/// [`convert_owned`], but through the specialization registry: binds the
+/// conversion to the const-shape micro-kernel matching `format` at
+/// `isa`, handing the matrix back untouched when the registry has no
+/// covering variant (ELL/HYB never do) so the caller can fall through to
+/// the generic payload. `k` is the workload batch width — `k > 1` lets
+/// the CSR payload resolve its SpMM k-block variant too.
+fn convert_spec_owned(
+    b: Csr,
+    format: Format,
+    k: usize,
+    isa: IsaLevel,
+) -> Result<Box<dyn SpmvOp>, Csr> {
+    match format {
+        Format::Csr => match SpecCsrOp::new(Box::new(b), k, isa) {
+            Ok(op) => Ok(Box::new(op)),
+            Err(b) => Err(*b),
+        },
+        Format::Bcsr { r, c } => match SpecBcsrOp::new(Bcsr::from_csr(&b, r, c), isa) {
+            Ok(op) => Ok(Box::new(op)),
+            Err(_) => Err(b),
+        },
+        Format::Sell { c, sigma } => match SpecSellOp::new(Sell::from_csr(&b, c, sigma), isa) {
+            Ok(op) => Ok(Box::new(op)),
+            Err(_) => Err(b),
+        },
+        _ => Err(b),
+    }
+}
+
 /// Builds the RCM permutation for `a`, materializes `P A Pᵀ` and wraps
 /// `format`'s conversion of it in a [`PermutedOp`]. (The trialer instead
 /// permutes once and wraps [`prepare`] of the permuted matrix per format
@@ -106,6 +140,49 @@ pub fn prepare_rcm(a: &Csr, format: Format) -> Box<dyn SpmvOp> {
     let perm = rcm(a);
     let b = crate::sparse::ordering::apply_symmetric_permutation(a, &perm);
     Box::new(PermutedOp::new(convert_owned(b, format), perm))
+}
+
+/// [`prepare_rcm`] with the specialization axis: a `Specialized`
+/// candidate converts the permuted matrix through the registry, falling
+/// back to the generic conversion when uncovered.
+fn prepare_rcm_spec(a: &Csr, format: Format, spec: Specialization, k: usize) -> Box<dyn SpmvOp> {
+    let perm = rcm(a);
+    let b = crate::sparse::ordering::apply_symmetric_permutation(a, &perm);
+    let inner = if spec == Specialization::Specialized {
+        match convert_spec_owned(b, format, k, IsaLevel::detect()) {
+            Ok(op) => op,
+            Err(b) => convert_owned(b, format),
+        }
+    } else {
+        convert_owned(b, format)
+    };
+    Box::new(PermutedOp::new(inner, perm))
+}
+
+/// Converts `a` into `format`'s *specialized* payload in natural order:
+/// the registry micro-kernel whose const shape matches the format's
+/// parameters (CSR picks its unroll from the mean row length, and its
+/// SpMM k-block from `k`). `None` when the registry has no covering
+/// variant — enumeration prunes those candidates, but a cached decision
+/// can outlive a registry change, so callers must fall back to
+/// [`prepare`] rather than trust coverage.
+pub fn prepare_spec(a: &Csr, format: Format, k: usize) -> Option<Box<dyn SpmvOp + '_>> {
+    let isa = IsaLevel::detect();
+    match format {
+        Format::Csr => match SpecCsrOp::new(a, k, isa) {
+            Ok(op) => Some(Box::new(op)),
+            Err(_) => None,
+        },
+        Format::Bcsr { r, c } => match SpecBcsrOp::new(Bcsr::from_csr(a, r, c), isa) {
+            Ok(op) => Some(Box::new(op)),
+            Err(_) => None,
+        },
+        Format::Sell { c, sigma } => match SpecSellOp::new(Sell::from_csr(a, c, sigma), isa) {
+            Ok(op) => Some(Box::new(op)),
+            Err(_) => None,
+        },
+        _ => None,
+    }
 }
 
 /// Converts `a` into `format`'s executable op in natural order. CSR runs
@@ -153,6 +230,65 @@ pub fn prepare_owned_with(a: &Arc<Csr>, format: Format, ordering: Ordering) -> B
     }
 }
 
+/// [`prepare_spec`] for owners: the CSR payload shares the `Arc` (no
+/// copy) and the returned op is `'static`.
+pub fn prepare_owned_spec(a: &Arc<Csr>, format: Format, k: usize) -> Option<Box<dyn SpmvOp>> {
+    let isa = IsaLevel::detect();
+    match format {
+        Format::Csr => match SpecCsrOp::new(a.clone(), k, isa) {
+            Ok(op) => Some(Box::new(op)),
+            Err(_) => None,
+        },
+        Format::Bcsr { r, c } => match SpecBcsrOp::new(Bcsr::from_csr(a, r, c), isa) {
+            Ok(op) => Some(Box::new(op)),
+            Err(_) => None,
+        },
+        Format::Sell { c, sigma } => {
+            match SpecSellOp::new(Sell::from_csr(a, c, sigma), isa) {
+                Ok(op) => Some(Box::new(op)),
+                Err(_) => None,
+            }
+        }
+        _ => None,
+    }
+}
+
+/// The full candidate prepare: format × ordering × specialization, with
+/// `k` naming the workload batch width (1 for SpMV). A `Specialized`
+/// candidate resolves its registry micro-kernel; an uncovered shape —
+/// impossible from enumeration, possible from a cache whose registry has
+/// since shrunk — silently degrades to the generic payload, so a stale
+/// decision still computes the right answer.
+pub fn prepare_candidate(a: &Csr, cand: &Candidate, k: usize) -> Box<dyn SpmvOp + '_> {
+    match cand.ordering {
+        Ordering::Natural => {
+            if cand.spec == Specialization::Specialized {
+                if let Some(op) = prepare_spec(a, cand.format, k) {
+                    return op;
+                }
+            }
+            prepare(a, cand.format)
+        }
+        Ordering::Rcm => prepare_rcm_spec(a, cand.format, cand.spec, k),
+    }
+}
+
+/// [`prepare_candidate`] for owners — the serving coordinator's
+/// constructor once a tuned decision carries a variant.
+pub fn prepare_owned_candidate(a: &Arc<Csr>, cand: &Candidate, k: usize) -> Box<dyn SpmvOp> {
+    match cand.ordering {
+        Ordering::Natural => {
+            if cand.spec == Specialization::Specialized {
+                if let Some(op) = prepare_owned_spec(a, cand.format, k) {
+                    return op;
+                }
+            }
+            prepare_owned(a, cand.format)
+        }
+        Ordering::Rcm => prepare_rcm_spec(a, cand.format, cand.spec, k),
+    }
+}
+
 /// A matrix bound to one candidate: payload + schedule, the thing the
 /// tuner hands back for repeated execution.
 pub struct Prepared<'a> {
@@ -165,9 +301,16 @@ pub struct Prepared<'a> {
 
 impl<'a> Prepared<'a> {
     /// Converts `a` for `candidate` (reordering first when the candidate
-    /// says so).
+    /// says so, through the specialization registry when it says that).
+    /// SpMM-bound callers should use [`Prepared::for_k`] so a specialized
+    /// CSR payload can bind its k-block variant.
     pub fn new(a: &'a Csr, candidate: Candidate) -> Prepared<'a> {
-        Prepared { candidate, op: prepare_with(a, candidate.format, candidate.ordering) }
+        Prepared::for_k(a, candidate, 1)
+    }
+
+    /// [`Prepared::new`] with the workload batch width (`k = 1` ≡ SpMV).
+    pub fn for_k(a: &'a Csr, candidate: Candidate, k: usize) -> Prepared<'a> {
+        Prepared { candidate, op: prepare_candidate(a, &candidate, k) }
     }
 
     /// The execution context the candidate implies (pooled workers).
@@ -242,7 +385,13 @@ mod tests {
                 for threads in [1usize, 4] {
                     let p = Prepared::new(
                         &a,
-                        Candidate { format, ordering: Ordering::Natural, policy, threads },
+                        Candidate {
+                            format,
+                            ordering: Ordering::Natural,
+                            policy,
+                            threads,
+                            spec: Specialization::Generic,
+                        },
                     );
                     let got = p.spmv(&x);
                     assert_eq!(got.len(), want.len());
@@ -278,6 +427,7 @@ mod tests {
                     ordering: Ordering::Rcm,
                     policy: Policy::Dynamic(32),
                     threads: 4,
+                    spec: Specialization::Generic,
                 },
             );
             assert_eq!(p.op.format_name(), format!("rcm:{}", prepare(&a, format).format_name()));
@@ -300,6 +450,7 @@ mod tests {
                 ordering: Ordering::Natural,
                 policy: Policy::Dynamic(64),
                 threads: 1,
+                spec: Specialization::Generic,
             },
         );
         let reordered = Prepared::new(
@@ -309,6 +460,7 @@ mod tests {
                 ordering: Ordering::Rcm,
                 policy: Policy::Dynamic(64),
                 threads: 1,
+                spec: Specialization::Generic,
             },
         );
         // Same nonzeros either way; the wrapper adds exactly the stored
@@ -338,6 +490,7 @@ mod tests {
                     ordering: Ordering::Natural,
                     policy: Policy::Dynamic(32),
                     threads: 4,
+                    spec: Specialization::Generic,
                 },
             );
             let got = p.spmm(&x, k);
@@ -356,6 +509,7 @@ mod tests {
             ordering: Ordering::Natural,
             policy: Policy::Dynamic(64),
             threads: 1,
+            spec: Specialization::Generic,
         };
         let csr = Prepared::new(&a, cand(Format::Csr));
         let ell = Prepared::new(&a, cand(Format::Ell));
@@ -366,6 +520,70 @@ mod tests {
             sell.storage_bytes() <= ell.storage_bytes() + 4 * a.nrows + 8 * (a.nrows + 1),
             "SELL must never pad beyond ELL (plus its perm/pointer overhead)"
         );
+    }
+
+    #[test]
+    fn specialized_candidates_match_the_oracle_and_name_their_variant() {
+        let a = square_matrix();
+        let x = random_vector(a.ncols, 98);
+        let want = a.spmv(&x);
+        let k = 4;
+        let xk = random_vector(a.ncols * k, 99);
+        let want_k = a.spmm(&xk, k);
+        for format in [Format::Csr, Format::Bcsr { r: 4, c: 4 }, Format::Sell { c: 8, sigma: 64 }]
+        {
+            for ordering in [Ordering::Natural, Ordering::Rcm] {
+                let cand = Candidate {
+                    format,
+                    ordering,
+                    policy: Policy::Dynamic(32),
+                    threads: 2,
+                    spec: Specialization::Specialized,
+                };
+                let p = Prepared::for_k(&a, cand, k);
+                // A PermutedOp forwards the inner payload's variant, so
+                // the binding is visible through the RCM wrapper too.
+                assert!(
+                    p.op.variant_name().is_some(),
+                    "{format} {ordering}: covered shape must bind a registry variant"
+                );
+                for (u, v) in p.spmv(&x).iter().zip(&want) {
+                    assert!((u - v).abs() < 1e-10, "{format} {ordering} spmv");
+                }
+                for (u, v) in p.spmm(&xk, k).iter().zip(&want_k) {
+                    assert!((u - v).abs() < 1e-10, "{format} {ordering} spmm");
+                }
+            }
+        }
+        // An uncovered shape degrades to the generic payload, not a panic:
+        // the answer stays right even when a cached decision outlives the
+        // registry entry it was tuned against.
+        let cand = Candidate {
+            format: Format::Bcsr { r: 5, c: 5 },
+            ordering: Ordering::Natural,
+            policy: Policy::Dynamic(32),
+            threads: 1,
+            spec: Specialization::Specialized,
+        };
+        let p = Prepared::new(&a, cand);
+        assert!(p.op.variant_name().is_none());
+        for (u, v) in p.spmv(&x).iter().zip(&want) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn prepared_owned_spec_is_static_and_shares_csr() {
+        let a = Arc::new(square_matrix());
+        let x = random_vector(a.ncols, 90);
+        let want = Csr::spmv(&a, &x);
+        let op = prepare_owned_spec(&a, Format::Csr, 1).expect("csr is always covered");
+        assert_eq!(Arc::strong_count(&a), 2, "specialized CSR payload must share, not copy");
+        assert!(op.variant_name().unwrap().starts_with("csr_u"));
+        let handle = std::thread::spawn(move || op.spmv(&x, &ExecCtx::serial()));
+        for (u, v) in handle.join().unwrap().iter().zip(&want) {
+            assert!((u - v).abs() < 1e-10);
+        }
     }
 
     #[test]

@@ -79,11 +79,15 @@ pub mod trial;
 
 pub use cache::{now_epoch, TunedConfig, TuningCache};
 pub use cost::CostModel;
-pub use exec::{prepare, prepare_owned, prepare_owned_with, prepare_with, PermutedOp, Prepared};
+pub use exec::{
+    prepare, prepare_candidate, prepare_owned, prepare_owned_candidate, prepare_owned_spec,
+    prepare_owned_with, prepare_spec, prepare_with, PermutedOp, Prepared,
+};
 pub use space::{Candidate, Format, Ordering, SearchSpace, SpaceConfig};
 pub use trial::{TrialResult, Trialer};
 
 pub use crate::kernels::Workload;
+use crate::kernels::specialize::{self, Specialization};
 use crate::sparse::stats::{mean_diag_distance, row_length_cv};
 use crate::sparse::{Csr, MatrixStats};
 use crate::telemetry::{names, EventKind, Telemetry};
@@ -107,7 +111,11 @@ use std::sync::Arc;
 /// * the detected [`IsaLevel`]: the vector width reshapes the search
 ///   space (SELL-C snaps to the lane count) and the trial timings
 ///   themselves, so a decision tuned on an AVX-512 host must not be
-///   served to a portable run of the same binary.
+///   served to a portable run of the same binary;
+/// * the specialization registry's advertised variant names: the
+///   `Specialized` axis only enumerates shapes the registry covers, so a
+///   binary with a different registry (a shape added or dropped) searched
+///   a different space and must not share entries.
 ///
 /// The structural scans are O(nnz) and also run inside `enumerate` on a
 /// miss; that duplication is accepted — a hit still costs far less than
@@ -177,7 +185,45 @@ fn cache_key_isa(
         h = fnv(h, &bits.to_bits().to_le_bytes());
     }
     h = fnv(h, isa.name().as_bytes());
+    for kern in specialize::registry() {
+        h = fnv(h, kern.name.as_bytes());
+    }
     format!("{}-{h:016x}-{workload}", stats.fingerprint_hex())
+}
+
+/// Maximum structural distance at which a past decision seeds a new
+/// search (see [`Tuner`]'s priors). The distance is
+/// `|ln(rows ratio)| + |ln(nnz ratio)| + |ΔCV| + |Δspread|` — near-zero
+/// for two matrices that differ only in size by a few percent, ≥ 1 for
+/// genuinely different structures (a stencil vs. a power-law graph
+/// differs by whole units of CV alone).
+const PRIOR_MAX_DISTANCE: f64 = 0.25;
+
+/// Structural coordinates of a committed decision, kept in memory so the
+/// next search over a *similar* matrix can be seeded instead of run in
+/// full. The specialization axis nearly doubles the candidate count;
+/// priors are what keep repeat-heavy fleets (many near-identical
+/// matrices, distinct fingerprints) inside the old trial budget.
+#[derive(Debug, Clone)]
+struct Prior {
+    workload: Workload,
+    nrows: f64,
+    nnz: f64,
+    cv: f64,
+    spread: f64,
+    decision: TunedConfig,
+}
+
+impl Prior {
+    /// Structural distance from this prior to a matrix with the given
+    /// coordinates. Log-ratios for the counts (scale-free), absolute
+    /// differences for the already-normalized shape metrics.
+    fn distance(&self, nrows: f64, nnz: f64, cv: f64, spread: f64) -> f64 {
+        (self.nrows.max(1.0) / nrows.max(1.0)).ln().abs()
+            + (self.nnz.max(1.0) / nnz.max(1.0)).ln().abs()
+            + (self.cv - cv).abs()
+            + (self.spread - spread).abs()
+    }
 }
 
 /// Tuner knobs.
@@ -228,12 +274,18 @@ pub struct Tuner {
     /// Where search/decision events and cache counters go, when attached
     /// (see [`Tuner::with_telemetry`]); `None` keeps the tuner silent.
     telemetry: Option<Arc<Telemetry>>,
+    /// Committed decisions with their structural coordinates, newest
+    /// last: the nearest-neighbor priors that seed (and shrink) searches
+    /// over structurally similar matrices. In-memory only — a prior is a
+    /// hint about *this* process's recent traffic, not a portable fact
+    /// like a cache entry.
+    priors: Vec<Prior>,
 }
 
 impl Tuner {
     /// Creates a tuner over an explicit cache.
     pub fn new(config: TunerConfig, cache: TuningCache) -> Tuner {
-        Tuner { config, cache, telemetry: None }
+        Tuner { config, cache, telemetry: None, priors: Vec::new() }
     }
 
     /// Publishes this tuner's search/decision events (cache hit, search
@@ -349,6 +401,12 @@ impl Tuner {
         stats: &MatrixStats,
         workload: Workload,
     ) -> crate::Result<TunedConfig> {
+        if let Some(from) = self.cache.take_migrated_from() {
+            // The cache file was written by an older format version and
+            // loaded empty — journal it once so the fleet's operators see
+            // a migration, not an inexplicable cold cache.
+            self.publish(EventKind::CacheMigrated { from });
+        }
         let key = cache_key(a, stats, &self.config, workload);
         if let Some(found) = self.cache.get(&key) {
             let found = found.clone();
@@ -388,22 +446,39 @@ impl Tuner {
                 eprintln!("[tuner] {}: pruned {reason}", stats.name);
             }
         }
+        // Structural coordinates for the nearest-neighbor priors (shared
+        // with the prior recorded below, so distances are symmetric).
+        let (nrows_f, nnz_f) = (a.nrows as f64, a.nnz() as f64);
+        let cv = row_length_cv(a);
+        let spread = mean_diag_distance(a) / a.nrows.max(1) as f64;
         let chosen = if self.config.trials {
+            let trialed = match self.seeded_candidates(workload, nrows_f, nnz_f, cv, spread,
+                &space.candidates)
+            {
+                Some(seeded) => {
+                    if self.config.verbose {
+                        eprintln!(
+                            "[tuner] {}: prior seeds {} of {} candidates",
+                            stats.name,
+                            seeded.len(),
+                            space.candidates.len()
+                        );
+                    }
+                    seeded
+                }
+                None => space.candidates.clone(),
+            };
             // `run_all` instead of `best` so every candidate's timing is
             // published, not just the winner's — the journal shows how
             // close the race was.
             let results = Trialer::new(self.config.warmup, self.config.measure)
                 .with_workload(workload)
-                .run_all(a, &space.candidates);
+                .run_all(a, &trialed);
             self.bump(names::TUNER_TRIALS, results.len() as u64);
             for r in &results {
                 self.publish(EventKind::TrialTimed {
                     name: stats.name.clone(),
-                    candidate: format!(
-                        "{} {} {} t{}",
-                        r.candidate.format, r.candidate.ordering, r.candidate.policy,
-                        r.candidate.threads
-                    ),
+                    candidate: r.candidate.to_string(),
                     gflops: r.gflops,
                     iters: r.iters,
                 });
@@ -418,6 +493,7 @@ impl Tuner {
                 ordering: best.candidate.ordering,
                 policy: best.candidate.policy,
                 threads: best.candidate.threads,
+                variant: best.variant.map(str::to_string),
                 gflops: best.gflops,
                 source: "trial".to_string(),
                 tuned_at: cache::now_epoch(),
@@ -431,11 +507,20 @@ impl Tuner {
                 ordering: cand.ordering,
                 policy: cand.policy,
                 threads: cand.threads,
+                variant: model_variant(a, &cand, workload),
                 gflops: workload.flops(a.nnz()) / secs.max(1e-12) / 1e9,
                 source: "model".to_string(),
                 tuned_at: cache::now_epoch(),
             }
         };
+        self.priors.push(Prior {
+            workload,
+            nrows: nrows_f,
+            nnz: nnz_f,
+            cv,
+            spread,
+            decision: chosen.clone(),
+        });
         if self.config.verbose {
             eprintln!(
                 "[tuner] cache miss {key} ({}): searched {} candidates → {chosen}",
@@ -460,6 +545,72 @@ impl Tuner {
         let config = self.tune(name, a)?;
         Ok(Prepared::new(a, config.candidate()).spmv(x))
     }
+
+    /// Nearest-fingerprint trial seeding: when a past decision's matrix
+    /// is structurally within [`PRIOR_MAX_DISTANCE`] of this one *and*
+    /// its winning candidate is present in this space, reorder the list
+    /// prior-winner-first and cut it to half — the strong incumbent makes
+    /// the early-termination margin bite immediately, and the trimming
+    /// guarantees strictly fewer trials even when it does not. `None`
+    /// (no prior close enough, winner pruned from this space, or a space
+    /// too small to be worth cutting) trials the full list.
+    fn seeded_candidates(
+        &self,
+        workload: Workload,
+        nrows: f64,
+        nnz: f64,
+        cv: f64,
+        spread: f64,
+        candidates: &[Candidate],
+    ) -> Option<Vec<Candidate>> {
+        if candidates.len() < 2 {
+            return None;
+        }
+        let (dist, prior) = self
+            .priors
+            .iter()
+            .filter(|p| p.workload == workload)
+            .map(|p| (p.distance(nrows, nnz, cv, spread), p))
+            .min_by(|u, v| u.0.partial_cmp(&v.0).unwrap_or(std::cmp::Ordering::Equal))?;
+        if dist > PRIOR_MAX_DISTANCE {
+            return None;
+        }
+        let seed = prior.decision.candidate();
+        candidates.iter().position(|c| *c == seed)?;
+        let mut out = Vec::with_capacity(candidates.len());
+        out.push(seed);
+        out.extend(candidates.iter().copied().filter(|c| *c != seed));
+        out.truncate(candidates.len().div_ceil(2).max(1));
+        Some(out)
+    }
+}
+
+/// The registry variant a `Specialized` model-path decision would bind
+/// at prepare time — mirrors [`crate::kernels::specialize::SpecCsrOp`]'s
+/// resolution (SpMM k-block names the payload when resolved, the SpMV
+/// unroll otherwise) without converting anything. `None` for generic
+/// candidates and uncovered shapes.
+fn model_variant(a: &Csr, cand: &Candidate, workload: Workload) -> Option<String> {
+    if cand.spec != Specialization::Specialized {
+        return None;
+    }
+    let isa = crate::kernels::IsaLevel::detect();
+    let kern = match cand.format {
+        Format::Csr => {
+            let k = workload.k();
+            let spmm = (k > 1)
+                .then(|| specialize::resolve("csr", (specialize::spmm_kblock_for(k), 0), true, isa))
+                .flatten();
+            spmm.or_else(|| {
+                let per_row = a.nnz() as f64 / a.nrows.max(1) as f64;
+                specialize::resolve("csr", (specialize::csr_unroll_for(per_row), 0), false, isa)
+            })
+        }
+        Format::Bcsr { r, c } => specialize::resolve("bcsr", (r, c), false, isa),
+        Format::Sell { c, .. } => specialize::resolve("sell", (c, 0), false, isa),
+        _ => None,
+    };
+    kern.map(|k| k.name.to_string())
 }
 
 /// One-shot convenience: tune `a` with default settings (in-memory cache)
@@ -633,5 +784,98 @@ mod tests {
         let decision = tuner.tune_workload("m", &a, Workload::Spmm { k }).unwrap();
         let y = Prepared::new(&a, decision.candidate()).spmm(&x, k);
         assert_close(&y, &a.spmm(&x, k));
+    }
+
+    #[test]
+    fn near_identical_matrix_is_seeded_with_strictly_fewer_trials() {
+        use crate::telemetry::{names, Telemetry};
+        let t = Telemetry::new();
+        let mut tuner = Tuner::quick().with_telemetry(t.clone());
+
+        // Two stencils one grid-column apart: distinct fingerprints (so
+        // no cache hit) but nearly identical structure, well inside
+        // PRIOR_MAX_DISTANCE of each other.
+        let a = stencil_2d(40, 35);
+        let b = stencil_2d(40, 36);
+        tuner.tune("a", &a).unwrap();
+        let full = t.metrics.counter(names::TUNER_TRIALS).get();
+        assert!(full >= 2, "quick space still has at least two candidates");
+
+        tuner.tune("b", &b).unwrap();
+        let seeded = t.metrics.counter(names::TUNER_TRIALS).get() - full;
+        assert_eq!(tuner.cache.misses, 2, "distinct fingerprints must both search");
+        assert!(
+            seeded < full,
+            "prior-seeded search must trial strictly fewer candidates ({seeded} vs {full})"
+        );
+
+        // A structurally distant matrix (64 rows vs. 1400 — whole units
+        // of log-ratio) must NOT inherit the stencil's prior: its full
+        // space is trialed, every candidate.
+        let c = stencil_2d(8, 8);
+        let c_stats = MatrixStats::compute("c", &c);
+        let c_space = space::enumerate_for(&c, &c_stats, &tuner.config.space, Workload::Spmv);
+        let before = t.metrics.counter(names::TUNER_TRIALS).get();
+        tuner.tune("c", &c).unwrap();
+        let alien = t.metrics.counter(names::TUNER_TRIALS).get() - before;
+        assert_eq!(
+            alien,
+            c_space.candidates.len() as u64,
+            "a distant matrix must trial its full space, not a seeded cut"
+        );
+    }
+
+    #[test]
+    fn seeded_candidates_respects_distance_and_membership() {
+        let a = matrix();
+        let mut tuner = Tuner::quick();
+        let decision = tuner.tune("m", &a).unwrap();
+        let stats = MatrixStats::compute("m", &a);
+        let space = space::enumerate_for(&a, &stats, &tuner.config.space, Workload::Spmv);
+        let nrows = a.nrows as f64;
+        let nnz = a.nnz() as f64;
+        let cv = row_length_cv(&a);
+        let spread = mean_diag_distance(&a) / a.nrows.max(1) as f64;
+
+        let seeded = tuner
+            .seeded_candidates(Workload::Spmv, nrows, nnz, cv, spread, &space.candidates)
+            .expect("the just-committed prior is at distance zero");
+        assert_eq!(seeded[0], decision.candidate(), "prior winner leads the list");
+        assert!(
+            seeded.len() < space.candidates.len(),
+            "seeding must shrink the list ({} vs {})",
+            seeded.len(),
+            space.candidates.len()
+        );
+
+        // Far away in structure → no seeding.
+        assert!(
+            tuner
+                .seeded_candidates(Workload::Spmv, nrows * 64.0, nnz * 64.0, cv, spread,
+                    &space.candidates)
+                .is_none(),
+            "a prior beyond PRIOR_MAX_DISTANCE must not seed"
+        );
+        // Wrong workload → no seeding.
+        assert!(
+            tuner
+                .seeded_candidates(Workload::Spmm { k: 8 }, nrows, nnz, cv, spread,
+                    &space.candidates)
+                .is_none(),
+            "priors are workload-scoped"
+        );
+        // Prior winner absent from the offered space → no seeding.
+        let without_winner: Vec<Candidate> = space
+            .candidates
+            .iter()
+            .copied()
+            .filter(|c| *c != decision.candidate())
+            .collect();
+        assert!(
+            tuner
+                .seeded_candidates(Workload::Spmv, nrows, nnz, cv, spread, &without_winner)
+                .is_none(),
+            "a seed pruned from this space must not be resurrected"
+        );
     }
 }

@@ -31,7 +31,8 @@
 //! [`enumerate_for`] prunes HYB from SpMM spaces on heavy-overflow
 //! matrices that are perfectly fine SpMV candidates.
 
-use crate::kernels::Workload;
+use crate::kernels::specialize::{self, Specialization};
+use crate::kernels::{IsaLevel, Workload};
 use crate::sched::Policy;
 use crate::sparse::stats::{mean_diag_distance, row_length_cv};
 use crate::sparse::{Csr, MatrixStats};
@@ -173,11 +174,21 @@ pub struct Candidate {
     pub policy: Policy,
     /// Worker thread count.
     pub threads: usize,
+    /// Whether the payload binds a registry micro-kernel
+    /// ([`Specialization::Specialized`]) or runs the generic
+    /// runtime-parameter loops. `Specialized` candidates are only
+    /// enumerated for shapes [`crate::kernels::specialize::covers`]
+    /// confirms.
+    pub spec: Specialization,
 }
 
 impl std::fmt::Display for Candidate {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{} {} {} t{}", self.format, self.ordering, self.policy, self.threads)
+        write!(f, "{} {} {} t{}", self.format, self.ordering, self.policy, self.threads)?;
+        if self.spec == Specialization::Specialized {
+            write!(f, " spec")?;
+        }
+        Ok(())
     }
 }
 
@@ -323,6 +334,37 @@ pub fn estimate_block_density(a: &Csr, r: usize, c: usize) -> f64 {
     }
 }
 
+/// Whether the registry has a micro-kernel for this (format, workload)
+/// at `isa` — the pruning gate of the `Specialized` axis. BCSR and SELL
+/// specializations cover SpMV only (their SpMM path is the generic fused
+/// kernel, so a `Specialized` SpMM candidate would tie with its generic
+/// twin and waste a trial); CSR covers both.
+pub fn spec_covered(
+    format: Format,
+    stats: &MatrixStats,
+    workload: Workload,
+    isa: IsaLevel,
+) -> bool {
+    match format {
+        Format::Csr => match workload {
+            Workload::Spmv => {
+                specialize::covers("csr", (specialize::csr_unroll_for(stats.nnz_per_row), 0), isa)
+            }
+            Workload::Spmm { k } => {
+                specialize::resolve("csr", (specialize::spmm_kblock_for(k), 0), true, isa)
+                    .is_some()
+            }
+        },
+        Format::Bcsr { r, c } => {
+            workload == Workload::Spmv && specialize::covers("bcsr", (r, c), isa)
+        }
+        Format::Sell { c, .. } => {
+            workload == Workload::Spmv && specialize::covers("sell", (c, 0), isa)
+        }
+        _ => false,
+    }
+}
+
 /// Enumerates the pruned SpMV search space for one matrix
 /// ([`enumerate_for`] with [`Workload::Spmv`]).
 pub fn enumerate(a: &Csr, stats: &MatrixStats, cfg: &SpaceConfig) -> SearchSpace {
@@ -435,9 +477,22 @@ pub fn enumerate_for(
     threads.sort_unstable();
     threads.dedup();
 
+    // The specialization axis: shapes the registry covers get a
+    // `Specialized` twin per candidate; uncovered shapes stay
+    // generic-only, so a `Specialized` decision is always preparable.
+    let isa = IsaLevel::detect();
+    for &format in &formats {
+        if !spec_covered(format, stats, workload, isa) {
+            pruned.push(format!(
+                "spec {format}: no registry micro-kernel for this shape under {workload}"
+            ));
+        }
+    }
+
     let mut candidates = Vec::new();
     for &ordering in &orderings {
         for &format in &formats {
+            let specialized = spec_covered(format, stats, workload, isa);
             let mut serial_seen = false;
             for &policy in &policies {
                 for &t in &threads {
@@ -449,7 +504,17 @@ pub fn enumerate_for(
                         }
                         serial_seen = true;
                     }
-                    candidates.push(Candidate { format, ordering, policy, threads: t });
+                    let spec = Specialization::Generic;
+                    candidates.push(Candidate { format, ordering, policy, threads: t, spec });
+                    if specialized {
+                        candidates.push(Candidate {
+                            format,
+                            ordering,
+                            policy,
+                            threads: t,
+                            spec: Specialization::Specialized,
+                        });
+                    }
                 }
             }
         }
@@ -615,12 +680,61 @@ mod tests {
         let s = space_for(&a);
         for fmt in formats_of(&s) {
             for ordering in [Ordering::Natural, Ordering::Rcm] {
-                let serial = s
-                    .candidates
-                    .iter()
-                    .filter(|c| c.format == fmt && c.ordering == ordering && c.threads == 1)
-                    .count();
-                assert!(serial <= 1, "{fmt} {ordering}: {serial} serial candidates");
+                for spec in [Specialization::Generic, Specialization::Specialized] {
+                    let serial = s
+                        .candidates
+                        .iter()
+                        .filter(|c| {
+                            c.format == fmt
+                                && c.ordering == ordering
+                                && c.spec == spec
+                                && c.threads == 1
+                        })
+                        .count();
+                    assert!(serial <= 1, "{fmt} {ordering} {spec}: {serial} serial candidates");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn specialized_twins_emitted_only_for_covered_shapes() {
+        let a = stencil_2d(30, 30);
+        let stats = MatrixStats::compute("t", &a);
+        let s = enumerate(&a, &stats, &SpaceConfig::default());
+        // CSR SpMV is always covered (every unroll has a portable entry),
+        // so the space must carry at least one specialized candidate.
+        assert!(
+            s.candidates
+                .iter()
+                .any(|c| c.format == Format::Csr && c.spec == Specialization::Specialized),
+            "CSR must get a specialized twin"
+        );
+        // Every specialized candidate has a generic sibling with the same
+        // coordinates: specialization never replaces the oracle, it rides
+        // alongside it.
+        for c in s.candidates.iter().filter(|c| c.spec == Specialization::Specialized) {
+            assert!(
+                s.candidates.iter().any(|g| g.spec == Specialization::Generic
+                    && g.format == c.format
+                    && g.ordering == c.ordering
+                    && g.policy == c.policy
+                    && g.threads == c.threads),
+                "{c}: specialized candidate without its generic twin"
+            );
+            assert!(
+                spec_covered(c.format, &stats, Workload::Spmv, IsaLevel::detect()),
+                "{c}: specialized candidate for an uncovered shape"
+            );
+        }
+        // ELL and HYB never specialize: their pruned notes name the axis.
+        for fmt in formats_of(&s) {
+            if matches!(fmt, Format::Ell | Format::Hyb { .. }) {
+                assert!(
+                    !s.candidates.iter().any(|c| c.format == fmt
+                        && c.spec == Specialization::Specialized),
+                    "{fmt} has no registry micro-kernel"
+                );
             }
         }
     }

@@ -5,11 +5,14 @@
 //! protocol (70 runs) — tuning happens on the serving path, so the budget
 //! per candidate is a handful of kernel runs and the statistic is the
 //! *minimum*, which is robust to scheduling noise at small sample sizes.
-//! Each distinct (format, ordering) is converted exactly once and reused
-//! across every (policy, threads) combination that names it; RCM
-//! candidates share one reorder across all their formats, and their timed
-//! iterations run through the [`PermutedOp`] wrapper so the per-call
-//! vector permutation shows up in the measurement.
+//! Each distinct (format, ordering, specialization) is converted exactly
+//! once and reused across every (policy, threads) combination that names
+//! it; RCM candidates share one reorder across all their formats, and
+//! their timed iterations run through the [`PermutedOp`] wrapper so the
+//! per-call vector permutation shows up in the measurement. Specialized
+//! candidates run the registry micro-kernel their shape resolves to
+//! ([`crate::kernels::specialize`]), so the generic-vs-specialized race
+//! is settled by the same stopwatch as every other axis.
 //!
 //! Two levers keep the budget tight:
 //!
@@ -26,13 +29,14 @@
 use std::time::Instant;
 
 use crate::kernels::op::{ExecCtx, SpmvOp};
+use crate::kernels::specialize::Specialization;
 use crate::kernels::Workload;
 use crate::sparse::gen::random_vector;
 use crate::sparse::ordering::{apply_symmetric_permutation, rcm};
 use crate::sparse::Csr;
 
 use super::cost::CostModel;
-use super::exec::{prepare, PermutedOp};
+use super::exec::{prepare, prepare_spec, PermutedOp};
 use super::space::{Candidate, Format, Ordering};
 
 /// Measured iterations before early termination may trigger: one probe can
@@ -55,6 +59,10 @@ pub struct TrialResult {
     pub gflops: f64,
     /// One-time format conversion cost (amortized over reuse).
     pub convert_secs: f64,
+    /// Registry micro-kernel the payload bound to (`None` for generic
+    /// candidates — and for specialized ones whose shape turned out
+    /// uncovered and degraded to the generic payload).
+    pub variant: Option<&'static str>,
     /// Measured iterations actually run (less than `measure` when the
     /// early-termination budget cut the loop short).
     pub iters: usize,
@@ -140,24 +148,57 @@ impl Trialer {
                 let b = apply_symmetric_permutation(a, &perm);
                 (perm, b)
             });
-        let mut prepared: Vec<(Format, Ordering, Box<dyn SpmvOp + '_>, f64)> = Vec::new();
+        type Payload<'m> = (Format, Ordering, Specialization, Box<dyn SpmvOp + 'm>, f64);
+        let mut prepared: Vec<Payload<'_>> = Vec::new();
         let mut out = Vec::with_capacity(ordered.len());
         let mut incumbent = f64::INFINITY;
+        // A specialized candidate's payload binds the registry
+        // micro-kernel for its shape (falling back to the generic payload
+        // when uncovered, which enumeration rules out anyway).
+        fn prep<'m>(
+            b: &'m Csr,
+            format: Format,
+            spec: Specialization,
+            k: usize,
+        ) -> Box<dyn SpmvOp + 'm> {
+            match spec {
+                Specialization::Specialized => {
+                    prepare_spec(b, format, k).unwrap_or_else(|| prepare(b, format))
+                }
+                Specialization::Generic => prepare(b, format),
+            }
+        }
         for &cand in &ordered {
-            if !prepared.iter().any(|(f, o, _, _)| *f == cand.format && *o == cand.ordering) {
+            if !prepared
+                .iter()
+                .any(|(f, o, s, _, _)| {
+                    *f == cand.format && *o == cand.ordering && *s == cand.spec
+                })
+            {
                 let t0 = Instant::now();
                 let op: Box<dyn SpmvOp + '_> = match cand.ordering {
-                    Ordering::Natural => prepare(a, cand.format),
+                    Ordering::Natural => prep(a, cand.format, cand.spec, k),
                     Ordering::Rcm => {
                         let (perm, b) = permuted.as_ref().expect("permuted matrix prepared");
-                        Box::new(PermutedOp::new(prepare(b, cand.format), perm.clone()))
+                        Box::new(PermutedOp::new(
+                            prep(b, cand.format, cand.spec, k),
+                            perm.clone(),
+                        ))
                     }
                 };
-                prepared.push((cand.format, cand.ordering, op, t0.elapsed().as_secs_f64()));
+                prepared.push((
+                    cand.format,
+                    cand.ordering,
+                    cand.spec,
+                    op,
+                    t0.elapsed().as_secs_f64(),
+                ));
             }
-            let (_, _, op, convert_secs) = prepared
+            let (_, _, _, op, convert_secs) = prepared
                 .iter()
-                .find(|(f, o, _, _)| *f == cand.format && *o == cand.ordering)
+                .find(|(f, o, s, _, _)| {
+                    *f == cand.format && *o == cand.ordering && *s == cand.spec
+                })
                 .unwrap();
             let ctx = ExecCtx::pooled(cand.threads, cand.policy);
             for _ in 0..self.warmup {
@@ -182,6 +223,7 @@ impl Trialer {
                 secs: best,
                 gflops: flops / best.max(1e-12) / 1e9,
                 convert_secs: *convert_secs,
+                variant: op.variant_name(),
                 iters,
             });
         }
@@ -214,12 +256,14 @@ mod tests {
                 ordering: Ordering::Natural,
                 policy: Policy::Dynamic(64),
                 threads: 1,
+                spec: Specialization::Generic,
             },
             Candidate {
                 format: Format::Ell,
                 ordering: Ordering::Natural,
                 policy: Policy::Dynamic(64),
                 threads: 1,
+                spec: Specialization::Generic,
             },
         ];
         let t = Trialer::new(1, 3);
@@ -243,18 +287,21 @@ mod tests {
                 ordering: Ordering::Natural,
                 policy: Policy::Dynamic(64),
                 threads: 1,
+                spec: Specialization::Generic,
             },
             Candidate {
                 format: Format::Csr,
                 ordering: Ordering::Rcm,
                 policy: Policy::Dynamic(64),
                 threads: 1,
+                spec: Specialization::Generic,
             },
             Candidate {
                 format: Format::Ell,
                 ordering: Ordering::Rcm,
                 policy: Policy::Dynamic(64),
                 threads: 1,
+                spec: Specialization::Generic,
             },
         ];
         let t = Trialer::new(0, 2).with_margin(f64::INFINITY);
@@ -265,6 +312,28 @@ mod tests {
         }
         let best = t.best(&a, &candidates).unwrap();
         assert!(candidates.contains(&best.candidate));
+    }
+
+    #[test]
+    fn specialized_candidates_trial_and_record_their_variant() {
+        let a = stencil_2d(20, 20);
+        let generic = Candidate {
+            format: Format::Csr,
+            ordering: Ordering::Natural,
+            policy: Policy::Dynamic(64),
+            threads: 1,
+            spec: Specialization::Generic,
+        };
+        let specialized = Candidate { spec: Specialization::Specialized, ..generic };
+        let t = Trialer::new(0, 2).with_margin(f64::INFINITY);
+        let results = t.run_all(&a, &[generic, specialized]);
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].variant, None, "generic payloads carry no variant");
+        let v = results[1].variant.expect("specialized CSR must bind a registry variant");
+        assert!(v.starts_with("csr_u"), "{v}");
+        for r in &results {
+            assert!(r.secs.is_finite() && r.secs >= 0.0);
+        }
     }
 
     #[test]
@@ -296,12 +365,14 @@ mod tests {
                 ordering: Ordering::Natural,
                 policy: Policy::Dynamic(64),
                 threads: 1,
+                spec: Specialization::Generic,
             },
             Candidate {
                 format: sell,
                 ordering: Ordering::Natural,
                 policy: Policy::Dynamic(64),
                 threads: 1,
+                spec: Specialization::Generic,
             },
         ];
         let t = Trialer::new(0, 2).with_workload(Workload::Spmm { k: 4 });
@@ -325,18 +396,21 @@ mod tests {
                 ordering: Ordering::Natural,
                 policy: Policy::Dynamic(64),
                 threads: 1,
+                spec: Specialization::Generic,
             },
             Candidate {
                 format: Format::Csr,
                 ordering: Ordering::Natural,
                 policy: Policy::Dynamic(16),
                 threads: 1,
+                spec: Specialization::Generic,
             },
             Candidate {
                 format: Format::Ell,
                 ordering: Ordering::Natural,
                 policy: Policy::Dynamic(64),
                 threads: 1,
+                spec: Specialization::Generic,
             },
         ];
         let measure = 6;
@@ -360,12 +434,14 @@ mod tests {
                 ordering: Ordering::Natural,
                 policy: Policy::Dynamic(64),
                 threads: 1,
+                spec: Specialization::Generic,
             },
             Candidate {
                 format: Format::Csr,
                 ordering: Ordering::Natural,
                 policy: Policy::Dynamic(64),
                 threads: 1,
+                spec: Specialization::Generic,
             },
         ];
         let measure = 3;

@@ -1,0 +1,318 @@
+//! Edge-shape and property tests for the const-generic micro-kernel
+//! registry (`kernels::specialize`): every registry variant must agree
+//! with the generic loops on shapes chosen to stress remainders (block
+//! shapes that do not divide the matrix dims, k values off the k-block
+//! grid, empty rows), and the prepare paths must never bind a variant
+//! whose baked-in shape disagrees with the payload.
+
+use phi_spmv::kernels::op::{ExecCtx, SpmvOp};
+use phi_spmv::kernels::specialize::{
+    self, KernelFn, BCSR_SHAPES, CSR_UNROLLS, SELL_CHUNKS, SPMM_KBLOCKS,
+};
+use phi_spmv::kernels::{IsaLevel, Workload};
+use phi_spmv::sched::Policy;
+use phi_spmv::sparse::{Bcsr, Coo, Csr, Sell};
+use phi_spmv::tuner::{prepare_spec, Format};
+
+/// Batch widths stressed against the CSR SpMM k-block kernels: 1 (the
+/// degenerate panel), 4 (a grid point), and 17 (prime, off every
+/// advertised block width — the remainder loop must carry 1 column).
+const EDGE_KS: &[usize] = &[1, 4, 17];
+
+fn assert_close(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (u, v)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (u - v).abs() < 1e-9 * (1.0 + v.abs()),
+            "{what}: row-slot {i}: {u} vs {v}"
+        );
+    }
+}
+
+/// Deterministic test matrix: `m × n` with a band plus scattered fill,
+/// rows divisible by 7 left completely empty. The dims are picked by
+/// callers to *not* divide the block shapes under test, so every padded
+/// tail path runs.
+fn edge_matrix(m: usize, n: usize) -> Csr {
+    let mut coo = Coo::new(m, n);
+    let mut state = 0x2545_f491_4f6c_dd1du64;
+    for i in 0..m {
+        if i % 7 == 0 {
+            continue; // empty row: rptrs[i] == rptrs[i+1]
+        }
+        for d in 0..5usize {
+            let j = (i + d * 3) % n;
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = ((state >> 33) as f64) / (1u64 << 31) as f64 - 1.0;
+            coo.push(i, j, v);
+        }
+        // One far off-band entry to defeat purely banded layouts.
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        coo.push(i, (state as usize) % n, 0.25);
+    }
+    coo.to_csr()
+}
+
+fn dense_vector(n: usize, seed: u64) -> Vec<f64> {
+    let mut state = seed | 1;
+    (0..n)
+        .map(|_| {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f64) / (1u64 << 31) as f64 - 1.0
+        })
+        .collect()
+}
+
+/// Every registry variant — portable *and* AVX2, regardless of which one
+/// `resolve` would pick on this host — against the generic oracle, on a
+/// matrix whose dims (37 × 41) divide none of the advertised block
+/// shapes. The AVX2 entry points are safe fns that re-check host support
+/// on entry, so calling them directly is valid everywhere.
+#[test]
+fn every_registry_variant_matches_the_generic_oracle() {
+    let a = edge_matrix(37, 41);
+    let x = dense_vector(a.ncols, 11);
+    let want_spmv = a.spmv(&x);
+    let mut exercised = 0usize;
+    for kern in specialize::registry() {
+        match kern.kind {
+            KernelFn::CsrSpmv(f) => {
+                let mut y = vec![f64::NAN; a.nrows]; // NaN canary: full overwrite required
+                f(&a, &x, &mut y, 0..a.nrows);
+                assert_close(&y, &want_spmv, kern.name);
+            }
+            KernelFn::CsrSpmm(f) => {
+                for &k in EDGE_KS {
+                    let xs = dense_vector(a.ncols * k, 13 + k as u64);
+                    let want = a.spmm(&xs, k);
+                    let mut y = vec![f64::NAN; a.nrows * k];
+                    f(&a, &xs, &mut y, k, 0..a.nrows);
+                    assert_close(&y, &want, &format!("{} k={k}", kern.name));
+                }
+            }
+            KernelFn::BcsrSpmv(f) => {
+                let b = Bcsr::from_csr(&a, kern.shape.0, kern.shape.1);
+                assert!(
+                    b.nrows % b.r != 0 || b.ncols % b.c != 0,
+                    "edge dims must exercise the partial tail block for {}",
+                    kern.name
+                );
+                let mut y = vec![f64::NAN; b.nrows];
+                f(&b, &x, &mut y, 0..b.nbrows());
+                assert_close(&y, &want_spmv, kern.name);
+            }
+            KernelFn::SellSpmv(f) => {
+                let s = Sell::from_csr(&a, kern.shape.0, 64);
+                assert!(
+                    s.nrows % s.chunk != 0,
+                    "edge dims must leave a padded final chunk for {}",
+                    kern.name
+                );
+                let mut y = vec![f64::NAN; s.nrows];
+                f(&s, &x, y.as_mut_ptr(), 0..s.nchunks());
+                assert_close(&y, &want_spmv, kern.name);
+            }
+        }
+        exercised += 1;
+    }
+    assert_eq!(
+        exercised,
+        specialize::registry().len(),
+        "every advertised variant must have been exercised"
+    );
+}
+
+/// The registry's own completeness invariants: unique names, a portable
+/// entry behind every advertised shape (AVX2 must never be the only
+/// implementation — the portable twin is the oracle *and* the non-x86
+/// fallback), and the advertised shape lists fully covered.
+#[test]
+fn registry_is_complete_and_portably_backed() {
+    let reg = specialize::registry();
+    let mut names: Vec<&str> = reg.iter().map(|k| k.name).collect();
+    names.sort_unstable();
+    names.dedup();
+    assert_eq!(names.len(), reg.len(), "variant names must be unique");
+
+    for &(r, c) in BCSR_SHAPES {
+        assert!(
+            specialize::covers("bcsr", (r, c), IsaLevel::Portable),
+            "bcsr {r}x{c} must have a portable kernel"
+        );
+    }
+    for &c in SELL_CHUNKS {
+        assert!(
+            specialize::covers("sell", (c, 0), IsaLevel::Portable),
+            "sell-{c} must have a portable kernel"
+        );
+    }
+    for &u in CSR_UNROLLS {
+        assert!(
+            specialize::covers("csr", (u, 0), IsaLevel::Portable),
+            "csr unroll {u} must have a portable kernel"
+        );
+    }
+    for &kb in SPMM_KBLOCKS {
+        assert!(
+            specialize::resolve("csr", (kb, 0), true, IsaLevel::Portable).is_some(),
+            "csr k-block {kb} must have a portable SpMM kernel"
+        );
+    }
+    // Every non-portable entry has a portable twin at the same
+    // (family, shape, kind) — the degradation target always exists.
+    for kern in reg.iter().filter(|k| k.isa != IsaLevel::Portable) {
+        assert!(
+            reg.iter().any(|p| {
+                p.isa == IsaLevel::Portable
+                    && p.family == kern.family
+                    && p.shape == kern.shape
+                    && matches!(
+                        (&p.kind, &kern.kind),
+                        (KernelFn::CsrSpmv(_), KernelFn::CsrSpmv(_))
+                            | (KernelFn::CsrSpmm(_), KernelFn::CsrSpmm(_))
+                            | (KernelFn::BcsrSpmv(_), KernelFn::BcsrSpmv(_))
+                            | (KernelFn::SellSpmv(_), KernelFn::SellSpmv(_))
+                    )
+            }),
+            "{} has no portable twin",
+            kern.name
+        );
+    }
+}
+
+/// `prepare_spec` must bind a variant whose baked-in shape matches the
+/// payload it will multiply — and must return `None` (never a
+/// mismatched kernel) for every shape the registry does not advertise.
+#[test]
+fn prepare_never_binds_a_mismatched_variant() {
+    let a = edge_matrix(53, 47);
+    let x = dense_vector(a.ncols, 29);
+    let want = a.spmv(&x);
+    let isa = IsaLevel::detect();
+    let ctx = ExecCtx::serial();
+
+    // BCSR: covered shapes bind `bcsr{r}x{c}_*`; everything else is None.
+    for r in 1..=9usize {
+        for c in 1..=9usize {
+            let format = Format::Bcsr { r, c };
+            let covered = specialize::covers("bcsr", (r, c), isa);
+            match prepare_spec(&a, format, 1) {
+                Some(op) => {
+                    assert!(covered, "prepare_spec bound bcsr {r}x{c} without coverage");
+                    let name = op.variant_name().expect("specialized payloads name themselves");
+                    assert!(
+                        name.starts_with(&format!("bcsr{r}x{c}_")),
+                        "bcsr {r}x{c} bound {name}"
+                    );
+                    let mut y = vec![0.0; a.nrows];
+                    op.spmv_into(&x, &mut y, &ctx);
+                    assert_close(&y, &want, name);
+                }
+                None => assert!(!covered, "covered bcsr {r}x{c} must prepare"),
+            }
+        }
+    }
+
+    // SELL: same contract over chunk heights.
+    for chunk in [2usize, 4, 6, 8, 12, 16, 32] {
+        let format = Format::Sell { c: chunk, sigma: 64 };
+        let covered = specialize::covers("sell", (chunk, 0), isa);
+        match prepare_spec(&a, format, 1) {
+            Some(op) => {
+                assert!(covered, "prepare_spec bound sell-{chunk} without coverage");
+                let name = op.variant_name().unwrap();
+                assert!(name.starts_with(&format!("sell{chunk}_")), "sell-{chunk} bound {name}");
+                let mut y = vec![0.0; a.nrows];
+                op.spmv_into(&x, &mut y, &ctx);
+                assert_close(&y, &want, name);
+            }
+            None => assert!(!covered, "covered sell-{chunk} must prepare"),
+        }
+    }
+
+    // CSR: the unroll follows the mean row length, the k-block the batch
+    // width; both are recorded in the variant name.
+    let per_row = a.nnz() as f64 / a.nrows.max(1) as f64;
+    let unroll = specialize::csr_unroll_for(per_row);
+    for &k in EDGE_KS {
+        let Some(op) = prepare_spec(&a, Format::Csr, k) else {
+            panic!("CSR is always covered at any ISA");
+        };
+        let name = op.variant_name().unwrap();
+        if k > 1 {
+            let kb = specialize::spmm_kblock_for(k);
+            assert!(
+                name.starts_with(&format!("csr_mm{kb}_")),
+                "csr k={k} bound {name}, expected k-block {kb}"
+            );
+            let xs = dense_vector(a.ncols * k, 31 + k as u64);
+            let mut y = vec![0.0; a.nrows * k];
+            op.apply(Workload::Spmm { k }, &xs, &mut y, &ctx);
+            assert_close(&y, &a.spmm(&xs, k), name);
+        } else {
+            assert!(
+                name.starts_with(&format!("csr_u{unroll}_")),
+                "csr spmv bound {name}, expected unroll {unroll}"
+            );
+            let mut y = vec![0.0; a.nrows];
+            op.apply(Workload::Spmv, &x, &mut y, &ctx);
+            assert_close(&y, &want, name);
+        }
+    }
+
+    // Formats outside the registry's families never specialize.
+    assert!(prepare_spec(&a, Format::Ell, 1).is_none());
+    assert!(prepare_spec(&a, Format::Hyb { width: 4 }, 1).is_none());
+}
+
+/// Specialized payloads must stay correct under the threaded scheduler,
+/// not just the serial path — row/chunk partitioning interacts with the
+/// baked-in shapes (a partition boundary mid-block must not double- or
+/// zero-write).
+#[test]
+fn specialized_payloads_survive_threaded_partitioning() {
+    let a = edge_matrix(67, 59);
+    let x = dense_vector(a.ncols, 41);
+    let want = a.spmv(&x);
+    for format in [
+        Format::Csr,
+        Format::Bcsr { r: 4, c: 4 },
+        Format::Bcsr { r: 8, c: 1 },
+        Format::Sell { c: 8, sigma: 64 },
+    ] {
+        let Some(op) = prepare_spec(&a, format, 1) else {
+            continue; // shape uncovered at this ISA: nothing to stress
+        };
+        for threads in [2usize, 3, 5] {
+            let ctx = ExecCtx::pooled(threads, Policy::Dynamic(4));
+            let mut y = vec![0.0; a.nrows];
+            op.spmv_into(&x, &mut y, &ctx);
+            assert_close(&y, &want, &format!("{format} under {threads} threads"));
+        }
+    }
+}
+
+/// The tuner's fingerprint-nearest-neighbor priors: a second,
+/// structurally near-identical matrix must be searched with strictly
+/// fewer trials than the first (the prior seeds and halves its
+/// candidate list).
+#[test]
+fn priors_shrink_the_second_search() {
+    use phi_spmv::sparse::gen::stencil::stencil_2d;
+    use phi_spmv::telemetry::{names, Telemetry};
+    use phi_spmv::tuner::Tuner;
+
+    let t = Telemetry::new();
+    let mut tuner = Tuner::quick().with_telemetry(t.clone());
+    let a = stencil_2d(32, 31);
+    let b = stencil_2d(32, 32);
+    tuner.tune("a", &a).unwrap();
+    let first = t.metrics.counter(names::TUNER_TRIALS).get();
+    tuner.tune("b", &b).unwrap();
+    let second = t.metrics.counter(names::TUNER_TRIALS).get() - first;
+    assert_eq!(tuner.cache.misses, 2, "distinct fingerprints must both search");
+    assert!(
+        second < first,
+        "prior-seeded search must issue strictly fewer trials ({second} vs {first})"
+    );
+}

@@ -250,6 +250,11 @@ fn tuning_cache_roundtrips_deterministically_through_json() {
                         ordering: if rng.bool(0.5) { Ordering::Natural } else { Ordering::Rcm },
                         policy,
                         threads: 1 + rng.usize_below(64),
+                        variant: if rng.bool(0.25) {
+                            Some(format!("csr_u{}_avx2", 1 << rng.usize_below(3)))
+                        } else {
+                            None
+                        },
                         gflops: (rng.usize_below(10_000) as f64) / 64.0,
                         source: if rng.bool(0.5) { "trial".into() } else { "model".into() },
                         tuned_at: rng.next_u64() % 2_000_000_000,
