@@ -21,7 +21,9 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use phi_spmv::fleet::{BatchConfig, Fleet, FleetConfig, RetuneConfig};
+use phi_spmv::fleet::{
+    Admission, BatchConfig, Fleet, FleetConfig, Intake, RetuneConfig, TenantBudget,
+};
 use phi_spmv::kernels::Workload;
 use phi_spmv::sched::WorkerPool;
 use phi_spmv::sparse::gen::banded::{banded_runs, BandedSpec};
@@ -274,6 +276,88 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(samples > 20, "fleet exposition suspiciously small: {samples} samples");
     std::fs::write("TELEMETRY_fleet.prom", &prom)?;
     println!("wrote TELEMETRY_fleet.json and TELEMETRY_fleet.prom ({samples} samples)");
+
+    // The admission-controlled front door: three tenants, one with a
+    // hard rate budget (the burst is admitted, the rest shed — always
+    // an explicit rejection, never a hang) and one with an unmeetable
+    // p99 objective (maintain() walks its batch width down a rung).
+    println!("— intake: admission control & per-tenant SLOs —");
+    let itelemetry = Telemetry::new();
+    let ifleet = Fleet::new(
+        FleetConfig {
+            retune: RetuneConfig { enabled: false, ..RetuneConfig::default() },
+            telemetry: itelemetry.clone(),
+            ..FleetConfig::default()
+        },
+        Tuner::new(TunerConfig::model_only(), TuningCache::in_memory()),
+    );
+    let mut tenant_mats = Vec::new();
+    for (i, name) in ["alpha", "bravo", "charlie"].iter().enumerate() {
+        let n = 24 + 4 * i;
+        let mut a = stencil_2d(n, n);
+        randomize_values(&mut a, 900 + i as u64);
+        let a = Arc::new(a);
+        ifleet.register(name, a.clone())?;
+        tenant_mats.push((name.to_string(), a));
+    }
+    let intake = Intake::new(ifleet, TenantBudget::unlimited());
+    intake.set_budget(
+        "bravo",
+        TenantBudget { max_qps: 1e-9, burst: 4, ..TenantBudget::unlimited() },
+    );
+    intake.set_budget(
+        "charlie",
+        TenantBudget { p99_target: Duration::from_nanos(1), ..TenantBudget::unlimited() },
+    );
+    for round in 0..40u64 {
+        for (name, a) in &tenant_mats {
+            let x = random_vector(a.ncols, 9_500 + round);
+            match intake.submit(name, x)? {
+                Admission::Admitted(ticket) => {
+                    ticket.recv()?;
+                }
+                Admission::Shed { .. } => {}
+            }
+        }
+    }
+    let width_before = intake.fleet().current_max_batch("charlie");
+    intake.maintain();
+    let width_after = intake.fleet().current_max_batch("charlie");
+    println!(
+        "{:<10} {:>9} {:>6} {:>10} {:>12} {:>6} {:>10}",
+        "tenant", "admitted", "shed", "p99 ms", "target", "viol", "compliant"
+    );
+    for r in intake.report() {
+        println!(
+            "{:<10} {:>9} {:>6} {:>10.3} {:>12} {:>6} {:>10}",
+            r.tenant,
+            r.admitted,
+            r.shed,
+            r.last_p99.map(|p| p.as_secs_f64() * 1e3).unwrap_or(0.0),
+            format!("{:?}", r.p99_target),
+            r.violations,
+            if r.compliant { "yes" } else { "NO" },
+        );
+    }
+    println!(
+        "intake totals: {} admitted, {} shed | charlie width {:?} → {:?} under p99 pressure",
+        itelemetry.metrics.counter(names::INTAKE_ADMITTED).get(),
+        itelemetry.metrics.counter(names::INTAKE_SHED).get(),
+        width_before,
+        width_after,
+    );
+    let report = intake.report();
+    anyhow::ensure!(
+        report.iter().map(|r| r.shed).sum::<u64>() > 0,
+        "the rate-budgeted tenant must have shed"
+    );
+    anyhow::ensure!(
+        report.iter().any(|r| r.violations > 0),
+        "the 1 ns objective must have been violated"
+    );
+    let istats = intake.shutdown();
+    anyhow::ensure!(istats.served() > 0, "the intake fleet must have served");
+
     println!("fleet OK");
     Ok(())
 }

@@ -9,17 +9,32 @@
 //! paths, client p50/p99 latency, and the eviction/re-materialization
 //! counts that explain them.
 //!
-//! `cargo bench --bench bench_fleet [-- --requests 400 --scale 1.0]`
+//! Two further scenarios ride along:
+//!
+//! * **heavy** — the intake front door under fire: hundreds of client
+//!   threads across mixed-size tenants, run twice (admission control on
+//!   with tight in-flight budgets, then off), reporting p50/p99/p999
+//!   client latency and the shed counts. The comparison is the point:
+//!   shedding trades a slice of the offered load for a bounded tail.
+//! * **shard** — one large matrix served unsharded, then row-sharded
+//!   across 2 and 4 independently tuned engines, with a deep in-flight
+//!   pipeline; reports wall-clock aggregate GFlop/s per shard count and
+//!   the best sharded-over-unsharded speedup (the CI smoke gate).
+//!
+//! `cargo bench --bench bench_fleet [-- --requests 400 --scale 1.0 --clients 200]`
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use phi_spmv::coordinator::server::percentile;
-use phi_spmv::fleet::{BatchConfig, Fleet, FleetConfig, RetuneConfig};
+use phi_spmv::fleet::{
+    Admission, BatchConfig, Fleet, FleetConfig, Intake, RetuneConfig, ShardConfig, TenantBudget,
+};
 use phi_spmv::sparse::gen::powerlaw::{powerlaw, PowerLawSpec};
 use phi_spmv::sparse::gen::{random_vector, randomize_values, Rng};
 use phi_spmv::sparse::Csr;
-use phi_spmv::tuner::Tuner;
+use phi_spmv::tuner::{Tuner, TunerConfig, TuningCache};
 use phi_spmv::util::cli::Args;
 use phi_spmv::util::json::Json;
 
@@ -100,6 +115,156 @@ fn run_fleet(entry_count: usize, scale: f64, requests: usize, budget: usize) -> 
     }
 }
 
+fn model_tuner() -> Tuner {
+    Tuner::new(TunerConfig::model_only(), TuningCache::in_memory())
+}
+
+fn quiet_config() -> FleetConfig {
+    FleetConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        retune: RetuneConfig { enabled: false, ..RetuneConfig::default() },
+        batch: BatchConfig { min_samples: usize::MAX, ..BatchConfig::default() },
+        ..FleetConfig::default()
+    }
+}
+
+struct HeavyRun {
+    admitted: u64,
+    shed: u64,
+    p50_ms: f64,
+    p99_ms: f64,
+    p999_ms: f64,
+    wall_s: f64,
+}
+
+impl HeavyRun {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("admitted", self.admitted)
+            .set("shed", self.shed)
+            .set("p50_ms", self.p50_ms)
+            .set("p99_ms", self.p99_ms)
+            .set("p999_ms", self.p999_ms)
+            .set("wall_s", self.wall_s)
+    }
+}
+
+/// Hundreds of client threads hammering mixed-size tenants through the
+/// intake, with admission control either biting (tight per-tenant
+/// in-flight budgets) or disabled (unlimited budgets).
+fn run_heavy(scale: f64, clients: usize, shed_on: bool) -> HeavyRun {
+    let sizes = [1_500.0, 4_000.0, 8_000.0];
+    let mats: Vec<(String, Arc<Csr>)> = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| {
+            let n = (s * scale).max(200.0) as usize;
+            let spec = PowerLawSpec {
+                n,
+                nnz: 10 * n,
+                row_alpha: 1.7,
+                col_alpha: 1.5,
+                max_row: 48,
+                seed: 200 + i as u64,
+            };
+            let mut a = powerlaw(&spec);
+            randomize_values(&mut a, 210 + i as u64);
+            (format!("t{i}"), Arc::new(a))
+        })
+        .collect();
+    let fleet = Fleet::new(quiet_config(), model_tuner());
+    for (id, a) in &mats {
+        fleet.register(id, a.clone()).expect("register");
+    }
+    let budget = if shed_on {
+        TenantBudget { max_inflight: 16, ..TenantBudget::unlimited() }
+    } else {
+        TenantBudget::unlimited()
+    };
+    let intake = Arc::new(Intake::new(fleet, budget));
+    let latencies = Arc::new(Mutex::new(Vec::<Duration>::new()));
+    let shed = Arc::new(AtomicU64::new(0));
+    let rounds = 4usize;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let intake = intake.clone();
+            let mats = mats.clone();
+            let latencies = latencies.clone();
+            let shed = shed.clone();
+            std::thread::spawn(move || {
+                let mut local = Vec::with_capacity(rounds);
+                for round in 0..rounds {
+                    let (id, a) = &mats[(c + round) % mats.len()];
+                    let x = random_vector(a.ncols, (c * rounds + round) as u64);
+                    let start = Instant::now();
+                    match intake.submit(id, x).expect("submit") {
+                        Admission::Admitted(ticket) => {
+                            ticket.recv().expect("admitted requests are answered");
+                            local.push(start.elapsed());
+                        }
+                        Admission::Shed { .. } => {
+                            shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                latencies.lock().unwrap().extend(local);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client");
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut latencies = std::mem::take(&mut *latencies.lock().unwrap());
+    latencies.sort();
+    HeavyRun {
+        admitted: latencies.len() as u64,
+        shed: shed.load(Ordering::Relaxed),
+        p50_ms: percentile(&latencies, 0.50).as_secs_f64() * 1e3,
+        p99_ms: percentile(&latencies, 0.99).as_secs_f64() * 1e3,
+        p999_ms: percentile(&latencies, 0.999).as_secs_f64() * 1e3,
+        wall_s,
+    }
+}
+
+/// One large matrix, a deep in-flight pipeline, `shards` engines.
+/// Returns (actual shard count, wall-clock aggregate GFlop/s).
+fn run_shard(scale: f64, shards: usize) -> (usize, f64) {
+    let n = (6_000.0 * scale).max(400.0) as usize;
+    let spec = PowerLawSpec {
+        n,
+        nnz: 12 * n,
+        row_alpha: 1.7,
+        col_alpha: 1.5,
+        max_row: 64,
+        seed: 300,
+    };
+    let mut a = powerlaw(&spec);
+    randomize_values(&mut a, 301);
+    let a = Arc::new(a);
+    let shard = if shards > 1 {
+        ShardConfig { threshold_nnz: 0, shards }
+    } else {
+        ShardConfig::default()
+    };
+    let fleet = Fleet::new(FleetConfig { shard, ..quiet_config() }, model_tuner());
+    fleet.register("big", a.clone()).expect("register");
+    let actual = fleet.shard_count("big").unwrap_or(1);
+    let requests = 256usize;
+    let t0 = Instant::now();
+    let pending: Vec<_> = (0..requests)
+        .map(|r| fleet.submit("big", random_vector(a.ncols, 400 + r as u64)).expect("submit"))
+        .collect();
+    for s in pending {
+        s.recv().expect("response");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    fleet.shutdown();
+    (actual, requests as f64 * 2.0 * a.nnz() as f64 / wall.max(1e-12) / 1e9)
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
     let requests = args.get("requests", 400usize);
@@ -138,12 +303,51 @@ fn main() {
         );
     }
 
+    // Heavy concurrency through the intake: admission control on vs off.
+    let clients = args.get("clients", 200usize);
+    println!("\nheavy: {clients} client threads × 4 rounds, mixed tenant sizes");
+    println!(
+        "{:<10} {:>10} {:>8} {:>10} {:>10} {:>10} {:>8}",
+        "shedding", "admitted", "shed", "p50 ms", "p99 ms", "p999 ms", "wall s"
+    );
+    let mut heavy = Json::obj().set("clients", clients);
+    for (label, on) in [("on", true), ("off", false)] {
+        let run = run_heavy(scale, clients, on);
+        println!(
+            "{label:<10} {:>10} {:>8} {:>10.3} {:>10.3} {:>10.3} {:>8.2}",
+            run.admitted, run.shed, run.p50_ms, run.p99_ms, run.p999_ms, run.wall_s
+        );
+        heavy = heavy.set(&format!("shed_{label}"), run.to_json());
+    }
+
+    // Scale-out: the same large matrix unsharded vs row-sharded.
+    println!("\nshard: one large matrix, 256 requests in flight");
+    println!("{:<8} {:>8} {:>10}", "asked", "engines", "GFlop/s");
+    let mut shard_json = Json::obj();
+    let mut unsharded_gf = 0.0f64;
+    let mut best_speedup = 0.0f64;
+    for s in [1usize, 2, 4] {
+        let (actual, gf) = run_shard(scale, s);
+        println!("{s:<8} {actual:>8} {gf:>10.3}");
+        if s == 1 {
+            unsharded_gf = gf;
+        } else if unsharded_gf > 0.0 {
+            best_speedup = best_speedup.max(gf / unsharded_gf);
+        }
+        shard_json = shard_json
+            .set(&s.to_string(), Json::obj().set("engines", actual).set("gflops", gf));
+    }
+    shard_json = shard_json.set("best_speedup", best_speedup);
+    println!("best sharded speedup over unsharded: {best_speedup:.2}×");
+
     let report = Json::obj()
         .set("bench", "fleet")
         .set("budget_bytes", budget)
         .set("requests_per_count", requests)
         .set("scale", scale)
-        .set("by_entry_count", by_count);
+        .set("by_entry_count", by_count)
+        .set("heavy", heavy)
+        .set("shard", shard_json);
     let path = "BENCH_fleet.json";
     std::fs::write(path, report.to_pretty()).expect("writing BENCH_fleet.json");
     println!("wrote {path}");

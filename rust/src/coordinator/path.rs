@@ -565,6 +565,14 @@ impl Engine {
         }
     }
 
+    /// Whether the serving loop has exited. A healthy loop runs until
+    /// [`Engine::shutdown`], so `true` on a live engine means the worker
+    /// panicked (e.g. a malformed batch) — the fleet's shard-fault
+    /// detection reads this.
+    pub fn worker_finished(&self) -> bool {
+        self.worker.as_ref().map(|w| w.is_finished()).unwrap_or(true)
+    }
+
     /// Stops the loop (after the queue drains) and returns both paths'
     /// final stats. Outstanding client clones become inert.
     pub fn shutdown(mut self) -> (PathStats, PathStats) {

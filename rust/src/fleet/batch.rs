@@ -137,6 +137,27 @@ pub fn pick_width(config: &BatchConfig, expected: f64, current: usize) -> usize 
     }
 }
 
+/// Moves one rung along the ladder — the SLO nudge primitive
+/// ([`crate::fleet::intake::Intake::maintain`]): unlike the rate-driven
+/// [`pick_width`], an SLO signal says only "direction", so the width
+/// moves a single step per maintenance pass and re-judges at the new
+/// rung. Clamps at the ladder ends; `current` off the ladder snaps to
+/// the nearest rung in the requested direction. Empty ladders never
+/// move.
+pub fn step_width(config: &BatchConfig, current: usize, up: bool) -> usize {
+    let mut rungs: Vec<usize> = config.ladder.iter().map(|&r| r.max(1)).collect();
+    if rungs.is_empty() {
+        return current;
+    }
+    rungs.sort_unstable();
+    rungs.dedup();
+    if up {
+        rungs.into_iter().find(|&r| r > current).unwrap_or(current)
+    } else {
+        rungs.into_iter().rev().find(|&r| r < current).unwrap_or(current)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,6 +237,20 @@ mod tests {
             k = pick_width(&cfg, e, k);
             assert_eq!(k, 8, "width must not flap around the boundary (expected {e})");
         }
+    }
+
+    #[test]
+    fn step_width_moves_one_rung_and_clamps() {
+        let cfg = BatchConfig::default(); // ladder [1,4,8,16]
+        assert_eq!(step_width(&cfg, 4, true), 8);
+        assert_eq!(step_width(&cfg, 8, false), 4);
+        assert_eq!(step_width(&cfg, 16, true), 16, "clamps at the top");
+        assert_eq!(step_width(&cfg, 1, false), 1, "clamps at the bottom");
+        // Off-ladder widths snap to the nearest rung in the direction.
+        assert_eq!(step_width(&cfg, 5, true), 8);
+        assert_eq!(step_width(&cfg, 5, false), 4);
+        let empty = BatchConfig { ladder: vec![], ..BatchConfig::default() };
+        assert_eq!(step_width(&empty, 7, true), 7, "empty ladder never moves");
     }
 
     #[test]

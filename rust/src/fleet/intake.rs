@@ -1,0 +1,488 @@
+//! Async intake: per-tenant admission control, load shedding, and
+//! latency SLOs in front of the fleet.
+//!
+//! The fleet will happily enqueue unbounded work; under
+//! millions-of-users traffic that turns one greedy tenant into
+//! everyone's tail latency. The intake layer is the contract at the
+//! door: every request is checked against its tenant's
+//! [`TenantBudget`] *before* it reaches an engine queue, and a request
+//! over budget is **shed with an explicit rejection** — the caller
+//! always learns its fate immediately; nothing is silently dropped and
+//! nothing hangs.
+//!
+//! ```text
+//!   client ──submit──► [Intake] ──┬─ admitted ──► Fleet::submit ──► shards
+//!                        │        │                (Ticket tracks in-flight
+//!                        │        │                 count/bytes + latency)
+//!                        │        └─ shed ──► Admission::Shed { reason }
+//!                        │                    (journal `shed` + counter)
+//!                        └─ maintain(): per-tenant p99 vs SLO target
+//!                             ├─ violating  → width DOWN (latency pressure)
+//!                             └─ compliant + shedding → width UP (throughput)
+//! ```
+//!
+//! Three budget axes, three shed reasons: `qps` (token bucket over
+//! [`TenantBudget::max_qps`] with [`TenantBudget::burst`]), `inflight`
+//! (concurrent admitted requests), and `bytes` (admitted request
+//! payload bytes in flight). Counters are reserved *atomically* at
+//! admission and released exactly once when the [`Ticket`] is received
+//! or dropped, so the budgets hold under arbitrary thread interleaving.
+//!
+//! The SLO loop closes through the fleet's adaptive-width ladder
+//! ([`crate::fleet::batch`]): [`Intake::maintain`] compares each
+//! tenant's observed p99 against [`TenantBudget::p99_target`] and
+//! nudges the entry's batch width one ladder rung down under p99
+//! pressure (narrower batches = less queueing ahead of a request) or
+//! one rung up when the tenant is compliant but shedding (wider batches
+//! = more throughput per engine pass).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::server::percentile;
+use crate::coordinator::Response;
+use crate::fleet::registry::Fleet;
+use crate::fleet::shard::Submission;
+use crate::telemetry::{names, EventKind, Telemetry};
+
+/// Per-tenant admission budget and latency objective. A tenant is one
+/// fleet entry (the entry id is the tenant id).
+#[derive(Debug, Clone)]
+pub struct TenantBudget {
+    /// Sustained admission rate (requests/second); `f64::INFINITY`
+    /// disables rate limiting.
+    pub max_qps: f64,
+    /// Token-bucket depth: how many requests may arrive back-to-back
+    /// before the rate limit bites (min 1).
+    pub burst: usize,
+    /// Concurrent admitted-but-unanswered requests.
+    pub max_inflight: usize,
+    /// Admitted request payload bytes in flight (`x.len() * 8` each).
+    pub max_inflight_bytes: usize,
+    /// The tenant's p99 latency objective, judged by
+    /// [`Intake::maintain`] over the window since the previous call.
+    pub p99_target: Duration,
+}
+
+impl TenantBudget {
+    /// No limits, and an SLO target loose enough to never trip.
+    pub fn unlimited() -> TenantBudget {
+        TenantBudget {
+            max_qps: f64::INFINITY,
+            burst: 1,
+            max_inflight: usize::MAX,
+            max_inflight_bytes: usize::MAX,
+            p99_target: Duration::from_secs(3600),
+        }
+    }
+}
+
+impl Default for TenantBudget {
+    fn default() -> Self {
+        TenantBudget::unlimited()
+    }
+}
+
+/// Why a request was shed. The string forms (`qps`, `inflight`,
+/// `bytes`) appear in the journal's `shed` events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The tenant's token bucket ran dry ([`TenantBudget::max_qps`]).
+    RateLimit,
+    /// Too many admitted requests in flight
+    /// ([`TenantBudget::max_inflight`]).
+    Inflight,
+    /// Too many payload bytes in flight
+    /// ([`TenantBudget::max_inflight_bytes`]).
+    Bytes,
+}
+
+impl ShedReason {
+    /// The journal/metric label for this reason.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShedReason::RateLimit => "qps",
+            ShedReason::Inflight => "inflight",
+            ShedReason::Bytes => "bytes",
+        }
+    }
+}
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// One tenant's live accounting. Budget reservations are atomic
+/// (fetch-and-check), so concurrent submitters can never overshoot.
+struct TenantState {
+    budget: Mutex<TenantBudget>,
+    bucket: Mutex<Bucket>,
+    inflight: AtomicUsize,
+    inflight_bytes: AtomicUsize,
+    admitted: AtomicU64,
+    shed: AtomicU64,
+    violations: AtomicU64,
+    /// Sheds since the last `maintain` pass (throughput-pressure signal).
+    shed_since: AtomicU64,
+    /// Latencies observed since the last `maintain` pass.
+    window: Mutex<Vec<Duration>>,
+    /// The p99 computed by the most recent `maintain` pass.
+    last_p99: Mutex<Option<Duration>>,
+}
+
+impl TenantState {
+    fn new(budget: TenantBudget) -> TenantState {
+        // Start with a full bucket: a rate-limited tenant's first
+        // `burst` requests are admitted, then the rate binds.
+        let tokens = budget.burst.max(1) as f64;
+        TenantState {
+            budget: Mutex::new(budget),
+            bucket: Mutex::new(Bucket { tokens, last: Instant::now() }),
+            inflight: AtomicUsize::new(0),
+            inflight_bytes: AtomicUsize::new(0),
+            admitted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            violations: AtomicU64::new(0),
+            shed_since: AtomicU64::new(0),
+            window: Mutex::new(Vec::new()),
+            last_p99: Mutex::new(None),
+        }
+    }
+
+    /// Reserves one in-flight slot and `bytes` of byte budget, or says
+    /// why not. On failure nothing stays reserved.
+    fn reserve(&self, bytes: usize, budget: &TenantBudget) -> Result<(), ShedReason> {
+        if self
+            .inflight
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                (v < budget.max_inflight).then_some(v + 1)
+            })
+            .is_err()
+        {
+            return Err(ShedReason::Inflight);
+        }
+        if self
+            .inflight_bytes
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                v.checked_add(bytes).filter(|&t| t <= budget.max_inflight_bytes)
+            })
+            .is_err()
+        {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            return Err(ShedReason::Bytes);
+        }
+        if !self.take_token(budget) {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            self.inflight_bytes.fetch_sub(bytes, Ordering::SeqCst);
+            return Err(ShedReason::RateLimit);
+        }
+        Ok(())
+    }
+
+    fn release(&self, bytes: usize) {
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+        self.inflight_bytes.fetch_sub(bytes, Ordering::SeqCst);
+    }
+
+    fn take_token(&self, budget: &TenantBudget) -> bool {
+        if budget.max_qps.is_infinite() {
+            return true;
+        }
+        let mut bucket = self.bucket.lock().unwrap();
+        let now = Instant::now();
+        let cap = budget.burst.max(1) as f64;
+        bucket.tokens =
+            (bucket.tokens + now.duration_since(bucket.last).as_secs_f64() * budget.max_qps)
+                .min(cap);
+        bucket.last = now;
+        if bucket.tokens >= 1.0 {
+            bucket.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// The verdict on one submission: a [`Ticket`] to collect the answer,
+/// or an explicit shed.
+pub enum Admission {
+    /// Admitted — redeem the ticket with [`Ticket::recv`].
+    Admitted(Ticket),
+    /// Shed — the request was **not** enqueued anywhere; this verdict
+    /// is the rejection.
+    Shed {
+        /// Which budget axis tripped.
+        reason: ShedReason,
+    },
+}
+
+impl Admission {
+    /// Unwraps the ticket; sheds become errors (convenience for tests
+    /// and examples).
+    pub fn into_ticket(self) -> anyhow::Result<Ticket> {
+        match self {
+            Admission::Admitted(t) => Ok(t),
+            Admission::Shed { reason } => {
+                Err(anyhow::anyhow!("request shed: {} budget exceeded", reason.as_str()))
+            }
+        }
+    }
+}
+
+/// An admitted request's claim check. Holds the tenant's budget
+/// reservation; the reservation is released exactly once — on
+/// [`Ticket::recv`] or, if the ticket is abandoned, on drop.
+pub struct Ticket {
+    submission: Option<Submission>,
+    tenant: Arc<TenantState>,
+    tenant_id: String,
+    bytes: usize,
+    enqueued: Instant,
+    telemetry: Arc<Telemetry>,
+}
+
+impl Ticket {
+    /// Waits for the (assembled) response. Records the tenant's
+    /// end-to-end latency — admission to assembled answer — into the
+    /// SLO window and the per-tenant histogram.
+    pub fn recv(mut self) -> anyhow::Result<Response> {
+        let submission = self.submission.take().expect("ticket redeemed once");
+        let result = submission.recv();
+        self.tenant.release(self.bytes);
+        if result.is_ok() {
+            let latency = self.enqueued.elapsed();
+            self.tenant.window.lock().unwrap().push(latency);
+            self.telemetry
+                .metrics
+                .histogram(&names::tenant_latency(&self.tenant_id))
+                .record_duration(latency);
+        }
+        result
+    }
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        if self.submission.is_some() {
+            self.tenant.release(self.bytes);
+        }
+    }
+}
+
+/// One tenant's scoreboard (see [`Intake::report`]).
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    /// Tenant (= fleet entry) id.
+    pub tenant: String,
+    /// Requests admitted.
+    pub admitted: u64,
+    /// Requests shed.
+    pub shed: u64,
+    /// Maintenance passes that found p99 over target.
+    pub violations: u64,
+    /// p99 over the window judged by the most recent maintenance pass.
+    pub last_p99: Option<Duration>,
+    /// The tenant's p99 objective.
+    pub p99_target: Duration,
+    /// Whether the most recent judged window met the objective (true
+    /// when nothing has been judged yet).
+    pub compliant: bool,
+}
+
+/// The admission-controlled front door to a [`Fleet`].
+pub struct Intake {
+    fleet: Fleet,
+    default_budget: TenantBudget,
+    tenants: Mutex<BTreeMap<String, Arc<TenantState>>>,
+}
+
+impl Intake {
+    /// Wraps `fleet`; tenants not explicitly configured get
+    /// `default_budget`.
+    pub fn new(fleet: Fleet, default_budget: TenantBudget) -> Intake {
+        Intake { fleet, default_budget, tenants: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The wrapped fleet (register entries, inspect stats, …).
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
+    }
+
+    /// Sets (or replaces) one tenant's budget.
+    pub fn set_budget(&self, tenant: &str, budget: TenantBudget) {
+        let mut tenants = self.tenants.lock().unwrap();
+        match tenants.get(tenant) {
+            Some(state) => *state.budget.lock().unwrap() = budget,
+            None => {
+                tenants.insert(tenant.to_string(), Arc::new(TenantState::new(budget)));
+            }
+        }
+    }
+
+    fn tenant(&self, id: &str) -> Arc<TenantState> {
+        let mut tenants = self.tenants.lock().unwrap();
+        tenants
+            .entry(id.to_string())
+            .or_insert_with(|| Arc::new(TenantState::new(self.default_budget.clone())))
+            .clone()
+    }
+
+    /// Admission-checks and enqueues one request. `Err` means the
+    /// tenant names no fleet entry (or the fleet is stopping); a
+    /// request over budget is `Ok(Admission::Shed { .. })` — an
+    /// explicit, immediate rejection.
+    pub fn submit(&self, tenant_id: &str, x: Vec<f64>) -> anyhow::Result<Admission> {
+        let tenant = self.tenant(tenant_id);
+        let bytes = x.len() * std::mem::size_of::<f64>();
+        let budget = tenant.budget.lock().unwrap().clone();
+        let telemetry = self.fleet.telemetry();
+        if let Err(reason) = tenant.reserve(bytes, &budget) {
+            tenant.shed.fetch_add(1, Ordering::Relaxed);
+            tenant.shed_since.fetch_add(1, Ordering::Relaxed);
+            telemetry.metrics.counter(names::INTAKE_SHED).inc();
+            telemetry.publish(EventKind::Shed {
+                tenant: tenant_id.to_string(),
+                reason: reason.as_str(),
+                inflight: tenant.inflight.load(Ordering::Relaxed),
+            });
+            return Ok(Admission::Shed { reason });
+        }
+        let submission = match self.fleet.submit(tenant_id, x) {
+            Ok(s) => s,
+            Err(e) => {
+                tenant.release(bytes);
+                return Err(e);
+            }
+        };
+        tenant.admitted.fetch_add(1, Ordering::Relaxed);
+        telemetry.metrics.counter(names::INTAKE_ADMITTED).inc();
+        Ok(Admission::Admitted(Ticket {
+            submission: Some(submission),
+            tenant,
+            tenant_id: tenant_id.to_string(),
+            bytes,
+            enqueued: Instant::now(),
+            telemetry,
+        }))
+    }
+
+    /// Submit + redeem in one call; sheds surface as errors.
+    pub fn call(&self, tenant_id: &str, x: Vec<f64>) -> anyhow::Result<Response> {
+        self.submit(tenant_id, x)?.into_ticket()?.recv()
+    }
+
+    /// Judges every tenant's latency window against its SLO and closes
+    /// the loop through the fleet's width ladder: p99 over target →
+    /// violation (journaled, counted) + width down; compliant but
+    /// shedding → width up. Call periodically (the examples/benches
+    /// call it between load phases).
+    pub fn maintain(&self) {
+        let tenants: Vec<(String, Arc<TenantState>)> =
+            self.tenants.lock().unwrap().iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        let telemetry = self.fleet.telemetry();
+        for (id, tenant) in tenants {
+            let mut window = std::mem::take(&mut *tenant.window.lock().unwrap());
+            let sheds = tenant.shed_since.swap(0, Ordering::Relaxed);
+            if window.is_empty() {
+                continue;
+            }
+            let budget = tenant.budget.lock().unwrap().clone();
+            window.sort_unstable();
+            let p99 = percentile(&window, 0.99);
+            *tenant.last_p99.lock().unwrap() = Some(p99);
+            if p99 > budget.p99_target {
+                tenant.violations.fetch_add(1, Ordering::Relaxed);
+                telemetry.metrics.counter(names::SLO_VIOLATIONS).inc();
+                telemetry.publish(EventKind::SloViolation {
+                    tenant: id.clone(),
+                    p99_s: p99.as_secs_f64(),
+                    target_s: budget.p99_target.as_secs_f64(),
+                    samples: window.len(),
+                });
+                let _ = self.fleet.nudge_width_for_slo(
+                    &id,
+                    false,
+                    p99.as_secs_f64(),
+                    budget.p99_target.as_secs_f64(),
+                );
+            } else if sheds > 0 {
+                let _ = self.fleet.nudge_width_for_slo(
+                    &id,
+                    true,
+                    p99.as_secs_f64(),
+                    budget.p99_target.as_secs_f64(),
+                );
+            }
+        }
+    }
+
+    /// Per-tenant scoreboards, tenant-id order.
+    pub fn report(&self) -> Vec<TenantReport> {
+        let tenants: Vec<(String, Arc<TenantState>)> =
+            self.tenants.lock().unwrap().iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        tenants
+            .into_iter()
+            .map(|(id, t)| {
+                let target = t.budget.lock().unwrap().p99_target;
+                let last_p99 = *t.last_p99.lock().unwrap();
+                TenantReport {
+                    tenant: id,
+                    admitted: t.admitted.load(Ordering::Relaxed),
+                    shed: t.shed.load(Ordering::Relaxed),
+                    violations: t.violations.load(Ordering::Relaxed),
+                    last_p99,
+                    p99_target: target,
+                    compliant: last_p99.map(|p| p <= target).unwrap_or(true),
+                }
+            })
+            .collect()
+    }
+
+    /// Stops the wrapped fleet, returning its final stats.
+    pub fn shutdown(self) -> crate::fleet::FleetStats {
+        self.fleet.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_reservations_are_exact_and_roll_back() {
+        let t = TenantState::new(TenantBudget {
+            max_inflight: 2,
+            max_inflight_bytes: 100,
+            ..TenantBudget::unlimited()
+        });
+        let budget = t.budget.lock().unwrap().clone();
+        assert!(t.reserve(40, &budget).is_ok());
+        assert!(t.reserve(40, &budget).is_ok());
+        // Third request trips the in-flight cap, not the byte cap.
+        assert_eq!(t.reserve(10, &budget), Err(ShedReason::Inflight));
+        t.release(40);
+        // Byte cap now binds: 40 in flight + 70 > 100.
+        assert_eq!(t.reserve(70, &budget), Err(ShedReason::Bytes));
+        // Failed reservations must leave no residue.
+        assert_eq!(t.inflight.load(Ordering::SeqCst), 1);
+        assert_eq!(t.inflight_bytes.load(Ordering::SeqCst), 40);
+        assert!(t.reserve(60, &budget).is_ok());
+    }
+
+    #[test]
+    fn token_bucket_grants_the_burst_then_binds() {
+        let strict = TenantBudget { max_qps: 1e-9, burst: 2, ..TenantBudget::unlimited() };
+        let t = TenantState::new(strict.clone());
+        // A fresh bucket holds `burst` tokens; at ~zero qps it never
+        // refills, so exactly two requests pass.
+        assert!(t.take_token(&strict));
+        assert!(t.take_token(&strict));
+        assert!(!t.take_token(&strict));
+        let open = TenantBudget::unlimited();
+        assert!(t.take_token(&open), "infinite qps never rate-limits");
+    }
+}

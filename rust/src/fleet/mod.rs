@@ -24,6 +24,15 @@
 //!  [batch]    ArrivalTracker (EMA gap) ──► expected arrivals/window
 //!                 ──► pick_width over the tuned ladder (hysteresis)
 //!                 ──► re-tune spmm@k' + swap + retarget max_batch
+//!        ▼
+//!  [shard]    nnz ≥ threshold ──► contiguous_balanced row ranges
+//!                 ──► one independently tuned Engine per shard
+//!                 ──► Submission assembles partial y in row order
+//!        ▼
+//!  [intake]   per-tenant TenantBudget (qps/inflight/bytes)
+//!                 ──► admit (Ticket) or Shed { reason } — explicit,
+//!                     never a hang; maintain(): p99 vs SLO target
+//!                 ──► width down under p99 pressure, up when shedding
 //! ```
 //!
 //! * [`registry`] — [`Fleet`]: registration (tune both workloads, warm an
@@ -37,7 +46,14 @@
 //! * [`batch`] — arrival-rate-adaptive SpMM width: an EMA
 //!   [`batch::ArrivalTracker`] per entry and the hysteresis ladder walk
 //!   ([`batch::pick_width`]), so k follows the offered load instead of a
-//!   static `max_batch`.
+//!   static `max_batch`; [`batch::step_width`] is the one-rung SLO nudge.
+//! * [`shard`] — row-sharded scale-out for large matrices: per-shard
+//!   tuned engines (a big shard may pick a different format/variant than
+//!   its siblings), partial-`y` assembly, and fault containment — a
+//!   panicked shard worker yields explicit errors, never poisons peers.
+//! * [`intake`] — the admission-controlled front door: per-tenant
+//!   byte/QPS/in-flight budgets with explicit load shedding, per-tenant
+//!   p99 SLOs, and the feedback loop into the width ladder.
 //!
 //! The serving data plane is untouched by all of this: requests flow
 //! through the same [`crate::coordinator::path::Path`] units the
@@ -46,9 +62,13 @@
 //! loop observes at a batch boundary.
 
 pub mod batch;
+pub mod intake;
 pub mod registry;
 pub mod retune;
+pub mod shard;
 
 pub use batch::{ArrivalTracker, BatchConfig};
+pub use intake::{Admission, Intake, ShedReason, TenantBudget, TenantReport, Ticket};
 pub use registry::{EntryReport, Fleet, FleetConfig, FleetEvent, FleetStats};
 pub use retune::{BackoffState, DriftJudgment, RetuneConfig};
+pub use shard::{ShardConfig, ShardEngine, ShardSeed, Submission};

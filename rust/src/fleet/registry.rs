@@ -21,11 +21,10 @@
 use std::collections::btree_map::Entry as MapEntry;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::coordinator::path::{Engine, Path, PathSpec, PathStats, Response};
-use crate::coordinator::server::ServerConfig;
+use crate::coordinator::path::{Path, PathSpec, PathStats, Response};
 use crate::kernels::op::SpmvOp;
 use crate::kernels::Workload;
 use crate::sparse::{Csr, MatrixStats};
@@ -33,8 +32,9 @@ use crate::telemetry::{names, EventKind, Subscriber, Telemetry};
 use crate::tuner::exec::prepare_owned_candidate;
 use crate::tuner::{TunedConfig, Tuner};
 
-use super::batch::{expected_arrivals, pick_width, ArrivalTracker, BatchConfig};
+use super::batch::{expected_arrivals, pick_width, step_width, ArrivalTracker, BatchConfig};
 use super::retune::{judge, BackoffState, RetuneConfig};
+use super::shard::{plan_ranges, row_slice, shard_name, ShardConfig, ShardEngine, ShardSeed, Submission};
 
 /// Fleet-wide knobs.
 #[derive(Debug, Clone)]
@@ -57,6 +57,12 @@ pub struct FleetConfig {
     pub retune: RetuneConfig,
     /// Arrival-rate-adaptive batch-width knobs.
     pub batch: BatchConfig,
+    /// Row-sharding policy: matrices whose nonzero count crosses the
+    /// threshold are split across several independently tuned engines
+    /// with partial-`y` assembly (see [`super::shard`]). Disabled by
+    /// default — every entry serves from one engine, exactly the
+    /// pre-shard fleet.
+    pub shard: ShardConfig,
     /// Telemetry instance the whole fleet records into: every entry's
     /// engine (latency/phase histograms), the maintenance thread's
     /// journal events, and — via [`Fleet::new`] attaching it to the
@@ -74,6 +80,7 @@ impl Default for FleetConfig {
             pooled: true,
             retune: RetuneConfig::default(),
             batch: BatchConfig::default(),
+            shard: ShardConfig::default(),
             telemetry: Telemetry::new(),
         }
     }
@@ -171,6 +178,11 @@ impl FleetEvent {
                 to: to.clone(),
             },
             EventKind::WidthChanged { id, from, to, .. } => {
+                FleetEvent::WidthChanged { id: id.clone(), from: *from, to: *to }
+            }
+            // An SLO-driven width nudge is a width change in this view;
+            // the journal kind keeps the p99-vs-target evidence.
+            EventKind::SloWidthChanged { id, from, to, .. } => {
                 FleetEvent::WidthChanged { id: id.clone(), from: *from, to: *to }
             }
             _ => return None,
@@ -275,19 +287,19 @@ impl FleetStats {
     }
 }
 
-/// A warm entry: a running engine plus the decisions it serves with.
+/// A warm entry: its running (possibly sharded) engine set; the serving
+/// decisions live per shard inside it.
 struct WarmEntry {
-    engine: Engine,
-    spmv: TunedConfig,
-    spmm: TunedConfig,
+    engine: ShardEngine,
 }
 
-/// Registry state of one entry. Cold entries keep their decisions (and
-/// the adapted batch width), so re-materializing is a payload
-/// preparation, never a re-search.
+/// Registry state of one entry. Cold entries keep every shard's seed —
+/// sub-matrix, row range and decision pair (and the adapted batch
+/// width) — so re-materializing is a payload preparation that never
+/// consults the tuner.
 enum EntryState {
     Warm(WarmEntry),
-    Cold { spmv: TunedConfig, spmm: TunedConfig, k: usize },
+    Cold { seeds: Vec<ShardSeed>, k: usize },
 }
 
 struct FleetEntry {
@@ -371,22 +383,50 @@ impl Fleet {
     /// overflows. Errors on a duplicate id.
     pub fn register(&self, id: &str, a: Arc<Csr>) -> anyhow::Result<()> {
         anyhow::ensure!(!id.is_empty(), "fleet entry id must be non-empty");
-        let (spmv, spmm) = {
-            // One O(nnz) statistics pass shared by both workload tunes —
-            // on a cache-answered registration the stats pass would
-            // otherwise dominate.
-            let stats = MatrixStats::compute(id, &a);
+        let k = self.inner.config.max_batch.max(1);
+        let plan = plan_ranges(&a, &self.inner.config.shard);
+        let seeds = {
             let mut tuner = self.inner.tuner.lock().unwrap();
-            let spmv = tuner.tune_with_stats_for(&a, &stats, Workload::Spmv)?;
-            let k = self.inner.config.max_batch.max(1);
-            let spmm = tuner.tune_with_stats_for(&a, &stats, Workload::Spmm { k })?;
-            (spmv, spmm)
+            let mut seeds = Vec::with_capacity(plan.len());
+            if plan.len() == 1 {
+                // Unsharded: tuned under the entry's own id, so cache
+                // keys — and the whole serving behavior — are identical
+                // to the pre-shard fleet. One O(nnz) statistics pass is
+                // shared by both workload tunes; on a cache-answered
+                // registration the stats pass would otherwise dominate.
+                let stats = MatrixStats::compute(id, &a);
+                let spmv = tuner.tune_with_stats_for(&a, &stats, Workload::Spmv)?;
+                let spmm = tuner.tune_with_stats_for(&a, &stats, Workload::Spmm { k })?;
+                seeds.push(ShardSeed {
+                    name: id.to_string(),
+                    range: 0..a.nrows,
+                    a: a.clone(),
+                    spmv,
+                    spmm,
+                });
+            } else {
+                // Sharded: each shard is tuned *independently* under its
+                // stable shard name — a big shard may legitimately pick
+                // a different format/variant than its siblings, and the
+                // per-shard cache entries survive evict cycles.
+                for (idx, range) in plan.iter().enumerate() {
+                    let name = shard_name(id, idx);
+                    let sub = Arc::new(row_slice(&a, range));
+                    let stats = MatrixStats::compute(&name, &sub);
+                    let spmv = tuner.tune_with_stats_for(&sub, &stats, Workload::Spmv)?;
+                    let spmm = tuner.tune_with_stats_for(&sub, &stats, Workload::Spmm { k })?;
+                    seeds.push(ShardSeed { name, range: range.clone(), a: sub, spmv, spmm });
+                }
+            }
+            seeds
         };
-        let k = spmm.workload.k().max(1);
+        let k = seeds[0].spmm.workload.k().max(1);
+        let shards = seeds.len();
+        let (spmv_str, spmm_str) = (seeds[0].spmv.to_string(), seeds[0].spmm.to_string());
         let entry = Arc::new(FleetEntry {
             id: id.to_string(),
-            a,
-            state: Mutex::new(EntryState::Cold { spmv: spmv.clone(), spmm: spmm.clone(), k }),
+            a: a.clone(),
+            state: Mutex::new(EntryState::Cold { seeds, k }),
             tracker: Mutex::new(ArrivalTracker::default()),
             retired: Mutex::new((PathStats::default(), PathStats::default())),
             retunes: AtomicUsize::new(0),
@@ -409,36 +449,44 @@ impl Fleet {
             }
         }
         let (_, bytes) = self.inner.warm(&entry);
+        if shards > 1 {
+            self.inner.push_event(EventKind::Sharded {
+                id: id.to_string(),
+                shards,
+                nnz: a.nnz(),
+            });
+        }
         self.inner.push_event(EventKind::Registered {
             id: id.to_string(),
             bytes,
-            spmv: spmv.to_string(),
-            spmm: spmm.to_string(),
+            spmv: spmv_str,
+            spmm: spmm_str,
         });
         self.inner.enforce_budget(id);
         Ok(())
     }
 
-    /// Submits a request to `id`'s entry; returns a receiver for the
+    /// Submits a request to `id`'s entry; returns the (per-shard)
+    /// submission handle — [`Submission::recv`] assembles the full
     /// response. A cold entry is re-materialized first (payloads
-    /// re-prepared from its kept decisions — no re-search), which may
-    /// evict the least-recently-used peers.
-    pub fn submit(&self, id: &str, x: Vec<f64>) -> anyhow::Result<mpsc::Receiver<Response>> {
+    /// re-prepared from its kept seeds — no re-search), which may evict
+    /// the least-recently-used peers.
+    pub fn submit(&self, id: &str, x: Vec<f64>) -> anyhow::Result<Submission> {
         let entry = self.inner.entry(id)?;
         self.inner.touch(&entry);
         entry.tracker.lock().unwrap().record();
-        let (rx, was_cold, bytes) = self.inner.submit_to(&entry, x);
+        let (submission, was_cold, bytes) = self.inner.submit_to(&entry, x);
         if was_cold {
             self.inner.rematerializations.fetch_add(1, AtomicOrdering::Relaxed);
             self.inner.push_event(EventKind::Rematerialized { id: entry.id.clone(), bytes });
             self.inner.enforce_budget(&entry.id);
         }
-        rx
+        submission
     }
 
     /// Submits and waits.
     pub fn call(&self, id: &str, x: Vec<f64>) -> anyhow::Result<Response> {
-        Ok(self.submit(id, x)?.recv()?)
+        self.submit(id, x)?.recv()
     }
 
     /// Runs one maintenance pass synchronously — drift checks and width
@@ -479,12 +527,24 @@ impl Fleet {
     }
 
     /// The decisions currently serving (or kept by) `id`: (SpMV, SpMM).
+    /// For a sharded entry this is the lead shard's pair; the siblings'
+    /// decisions may differ (each shard tunes independently).
     pub fn decisions(&self, id: &str) -> Option<(TunedConfig, TunedConfig)> {
         let entry = self.inner.entry(id).ok()?;
         let state = entry.state.lock().unwrap();
         Some(match &*state {
-            EntryState::Warm(w) => (w.spmv.clone(), w.spmm.clone()),
-            EntryState::Cold { spmv, spmm, .. } => (spmv.clone(), spmm.clone()),
+            EntryState::Warm(w) => w.engine.lead_decisions(),
+            EntryState::Cold { seeds, .. } => (seeds[0].spmv.clone(), seeds[0].spmm.clone()),
+        })
+    }
+
+    /// How many shard engines serve (or would serve) `id`.
+    pub fn shard_count(&self, id: &str) -> Option<usize> {
+        let entry = self.inner.entry(id).ok()?;
+        let state = entry.state.lock().unwrap();
+        Some(match &*state {
+            EntryState::Warm(w) => w.engine.shards(),
+            EntryState::Cold { seeds, .. } => seeds.len(),
         })
     }
 
@@ -504,9 +564,7 @@ impl Fleet {
         let entry = self.inner.entry(id).ok()?;
         let state = entry.state.lock().unwrap();
         match &*state {
-            EntryState::Warm(w) => {
-                Some((w.engine.spmv_path().swaps(), w.engine.spmm_path().swaps()))
-            }
+            EntryState::Warm(w) => Some(w.engine.path_swaps()),
             EntryState::Cold { .. } => None,
         }
     }
@@ -549,33 +607,151 @@ impl Fleet {
         factor: f64,
     ) -> anyhow::Result<()> {
         let entry = self.inner.entry(id)?;
+        // Every shard has its own cache key (sub-matrix fingerprint under
+        // its shard name), so the skew walks all of them. Collect the
+        // unit identities first — the tuner lock is never taken while the
+        // state lock is held.
+        let units: Vec<(String, Arc<Csr>)> = {
+            let state = entry.state.lock().unwrap();
+            match &*state {
+                EntryState::Warm(w) => {
+                    w.engine.maintenance_snapshot().into_iter().map(|u| (u.name, u.a)).collect()
+                }
+                EntryState::Cold { seeds, .. } => {
+                    seeds.iter().map(|s| (s.name.clone(), s.a.clone())).collect()
+                }
+            }
+        };
         {
             let mut tuner = self.inner.tuner.lock().unwrap();
-            let key = tuner.key(id, &entry.a, workload);
-            if let Some(found) = tuner.cache.get(&key) {
-                let mut skewed = found.clone();
-                skewed.gflops *= factor;
-                tuner.cache.insert(key, skewed);
+            for (name, a) in &units {
+                let key = tuner.key(name, a, workload);
+                if let Some(found) = tuner.cache.get(&key) {
+                    let mut skewed = found.clone();
+                    skewed.gflops *= factor;
+                    tuner.cache.insert(key, skewed);
+                }
             }
         }
         let mut state = entry.state.lock().unwrap();
         match &mut *state {
-            EntryState::Warm(w) => {
-                if w.spmv.workload == workload {
-                    w.spmv.gflops *= factor;
-                }
-                if w.spmm.workload == workload {
-                    w.spmm.gflops *= factor;
-                }
-            }
-            EntryState::Cold { spmv, spmm, .. } => {
-                if spmv.workload == workload {
-                    spmv.gflops *= factor;
-                }
-                if spmm.workload == workload {
-                    spmm.gflops *= factor;
+            EntryState::Warm(w) => w.engine.skew_decisions(workload, factor),
+            EntryState::Cold { seeds, .. } => {
+                for s in seeds {
+                    if s.spmv.workload == workload {
+                        s.spmv.gflops *= factor;
+                    }
+                    if s.spmm.workload == workload {
+                        s.spmm.gflops *= factor;
+                    }
                 }
             }
+        }
+        Ok(())
+    }
+
+    /// Nudges `id`'s batch width one ladder rung (up under throughput
+    /// pressure, down under p99 pressure) — the SLO feedback hook
+    /// [`super::intake::Intake::maintain`] drives. Unlike the
+    /// rate-driven ladder walk, the move is a single step per call.
+    /// Returns the `(from, to)` widths when a move landed; `None` when
+    /// already at the ladder's end, the entry is cold, or the install
+    /// raced an evict cycle (the next pass re-judges).
+    pub fn nudge_width_for_slo(
+        &self,
+        id: &str,
+        up: bool,
+        p99_s: f64,
+        target_s: f64,
+    ) -> anyhow::Result<Option<(usize, usize)>> {
+        let entry = self.inner.entry(id)?;
+        let current_k = {
+            let state = entry.state.lock().unwrap();
+            match &*state {
+                EntryState::Warm(w) => w.engine.max_batch(),
+                EntryState::Cold { .. } => return Ok(None),
+            }
+        };
+        let new_k = step_width(&self.inner.config.batch, current_k, up);
+        if new_k == current_k {
+            return Ok(None);
+        }
+        let Some(swapped) = self.inner.retarget_width(&entry, current_k, new_k) else {
+            return Ok(None);
+        };
+        self.inner.width_changes.fetch_add(1, AtomicOrdering::Relaxed);
+        self.inner.push_event(EventKind::SloWidthChanged {
+            id: id.to_string(),
+            from: current_k,
+            to: new_k,
+            p99_s,
+            target_s,
+        });
+        for (workload, to) in swapped {
+            self.inner.push_event(EventKind::HotSwap { id: id.to_string(), workload, to });
+        }
+        Ok(Some((current_k, new_k)))
+    }
+
+    /// Test/demo hook: feeds shard `shard` of `id` a malformed request
+    /// that panics its engine worker mid-batch (see
+    /// [`ShardEngine::inject_fault`]) — the deterministic stand-in for
+    /// "a shard died under load". Journals a `shard_fault`. Errors when
+    /// the entry is cold or the shard index is out of range.
+    pub fn inject_shard_fault(&self, id: &str, shard: usize) -> anyhow::Result<()> {
+        let entry = self.inner.entry(id)?;
+        let ok = {
+            let state = entry.state.lock().unwrap();
+            match &*state {
+                EntryState::Warm(w) => w.engine.inject_fault(shard),
+                EntryState::Cold { .. } => {
+                    anyhow::bail!("fleet entry {id:?} is cold; no engine to fault")
+                }
+            }
+        };
+        anyhow::ensure!(ok, "fleet entry {id:?} has no shard {shard}");
+        self.inner.push_event(EventKind::ShardFault { id: id.to_string(), shard });
+        Ok(())
+    }
+
+    /// Whether shard `shard` of `id`'s serving loop has exited — `true`
+    /// on a warm entry means the worker panicked. `None` when the entry
+    /// is cold, unknown, or the index is out of range.
+    pub fn shard_failed(&self, id: &str, shard: usize) -> Option<bool> {
+        let entry = self.inner.entry(id).ok()?;
+        let state = entry.state.lock().unwrap();
+        match &*state {
+            EntryState::Warm(w) => w.engine.shard_failed(shard),
+            EntryState::Cold { .. } => None,
+        }
+    }
+
+    /// Tears `id`'s engines down and re-materializes them from the kept
+    /// seeds — the recovery path after a shard fault. No re-search: the
+    /// seeds carry every shard's decisions. Counts and journals as a
+    /// re-materialization.
+    pub fn recover(&self, id: &str) -> anyhow::Result<()> {
+        let entry = self.inner.entry(id)?;
+        self.inner.cool(&entry);
+        self.inner.touch(&entry);
+        let (became_warm, bytes) = self.inner.warm(&entry);
+        if became_warm {
+            self.inner.rematerializations.fetch_add(1, AtomicOrdering::Relaxed);
+            self.inner.push_event(EventKind::Rematerialized { id: id.to_string(), bytes });
+        }
+        self.inner.enforce_budget(id);
+        Ok(())
+    }
+
+    /// Test hook: folds `count` synthetic inter-arrival gaps of `gap_s`
+    /// seconds into `id`'s arrival tracker — deterministic load-shape
+    /// injection, so width-adaptation tests drive the ladder without
+    /// wall-clock sleeps (see [`super::batch::ArrivalTracker::record_gap`]).
+    pub fn inject_arrival_gaps(&self, id: &str, gap_s: f64, count: usize) -> anyhow::Result<()> {
+        let entry = self.inner.entry(id)?;
+        let mut tracker = entry.tracker.lock().unwrap();
+        for _ in 0..count {
+            tracker.record_gap(gap_s);
         }
         Ok(())
     }
@@ -592,8 +768,9 @@ impl Fleet {
                 let state = e.state.lock().unwrap();
                 match &*state {
                     EntryState::Warm(w) => {
-                        spmv.absorb(&w.engine.spmv_path().stats());
-                        spmm.absorb(&w.engine.spmm_path().stats());
+                        let (live_spmv, live_spmm) = w.engine.stats();
+                        spmv.absorb(&live_spmv);
+                        spmm.absorb(&live_spmm);
                         (true, w.engine.storage_bytes())
                     }
                     EntryState::Cold { .. } => (false, 0),
@@ -673,6 +850,8 @@ impl FleetInner {
             EventKind::Rematerialized { .. } => Some(names::FLEET_REMATERIALIZATIONS),
             EventKind::Retuned { .. } => Some(names::FLEET_RETUNES),
             EventKind::WidthChanged { .. } => Some(names::FLEET_WIDTH_CHANGES),
+            EventKind::SloWidthChanged { .. } => Some(names::FLEET_WIDTH_CHANGES),
+            EventKind::ShardFault { .. } => Some(names::SHARD_FAULTS),
             _ => None,
         };
         if let Some(name) = counter {
@@ -683,31 +862,37 @@ impl FleetInner {
 
     /// Ensures the entry behind the already-held state lock is warm.
     /// Returns (whether this call materialized it, payload bytes).
-    fn ensure_warm_locked(&self, entry: &FleetEntry, state: &mut EntryState) -> (bool, usize) {
+    fn ensure_warm_locked(&self, state: &mut EntryState) -> (bool, usize) {
         if let EntryState::Warm(w) = &*state {
             return (false, w.engine.storage_bytes());
         }
-        let EntryState::Cold { spmv, spmm, k } = &*state else {
+        let EntryState::Cold { seeds, k } = &*state else {
             unreachable!("EntryState has exactly two variants");
         };
-        let (spmv_d, spmm_d, k) = (spmv.clone(), spmm.clone(), *k);
-        let mut config = ServerConfig::tuned_pair(&spmv_d, &spmm_d);
-        config.max_batch = k.max(1);
-        config.max_wait = self.config.max_wait;
-        config.pooled = self.config.pooled;
-        // Every entry's engine records into the fleet's one instance, so
-        // the latency/phase histograms aggregate across the whole fleet.
-        config.telemetry = self.config.telemetry.clone();
-        let engine = Engine::start(entry.a.clone(), config);
+        // The seeds carry every shard's sub-matrix and decision pair, so
+        // warming never consults the tuner — crucial both for the
+        // "re-materialize without re-search" guarantee and because this
+        // runs under the state lock (taking the tuner lock here would
+        // invert the maintenance passes' tuner → state ordering).
+        let (seeds, k) = (seeds.clone(), *k);
+        let engine = ShardEngine::start(
+            seeds,
+            k.max(1),
+            self.config.max_wait,
+            self.config.pooled,
+            // Every entry's engines record into the fleet's one instance,
+            // so latency/phase histograms aggregate across the fleet.
+            self.config.telemetry.clone(),
+        );
         let bytes = engine.storage_bytes();
-        *state = EntryState::Warm(WarmEntry { engine, spmv: spmv_d, spmm: spmm_d });
+        *state = EntryState::Warm(WarmEntry { engine });
         (true, bytes)
     }
 
     /// Ensures the entry is warm (the registration path).
     fn warm(&self, entry: &FleetEntry) -> (bool, usize) {
         let mut state = entry.state.lock().unwrap();
-        self.ensure_warm_locked(entry, &mut state)
+        self.ensure_warm_locked(&mut state)
     }
 
     /// Warms if needed and enqueues the request *while holding the state
@@ -720,13 +905,13 @@ impl FleetInner {
         &self,
         entry: &FleetEntry,
         x: Vec<f64>,
-    ) -> (anyhow::Result<mpsc::Receiver<Response>>, bool, usize) {
+    ) -> (anyhow::Result<Submission>, bool, usize) {
         let mut state = entry.state.lock().unwrap();
-        let (was_cold, bytes) = self.ensure_warm_locked(entry, &mut state);
+        let (was_cold, bytes) = self.ensure_warm_locked(&mut state);
         let EntryState::Warm(w) = &*state else {
             unreachable!("ensure_warm_locked leaves the entry warm");
         };
-        (w.engine.client().submit(x), was_cold, bytes)
+        (w.engine.submit(x), was_cold, bytes)
     }
 
     /// Drops a warm entry's engine and payloads, folding its stats into
@@ -734,14 +919,11 @@ impl FleetInner {
     /// the entry was already cold.
     fn cool(&self, entry: &FleetEntry) -> Option<usize> {
         let mut state = entry.state.lock().unwrap();
-        let (spmv_d, spmm_d, k) = match &*state {
-            EntryState::Warm(w) => (w.spmv.clone(), w.spmm.clone(), w.engine.max_batch()),
+        let (seeds, k) = match &*state {
+            EntryState::Warm(w) => (w.engine.seeds(), w.engine.max_batch()),
             EntryState::Cold { .. } => return None,
         };
-        let old = std::mem::replace(
-            &mut *state,
-            EntryState::Cold { spmv: spmv_d, spmm: spmm_d, k },
-        );
+        let old = std::mem::replace(&mut *state, EntryState::Cold { seeds, k });
         let EntryState::Warm(w) = old else {
             unreachable!("matched Warm above");
         };
@@ -814,36 +996,46 @@ impl FleetInner {
     }
 
     fn maintain_entry(&self, entry: &FleetEntry) {
-        // Snapshot what the warm entry serves with; cold entries have
-        // nothing to maintain (their decisions age out via the cache TTL).
+        // Snapshot what the warm entry serves with — one unit per shard;
+        // cold entries have nothing to maintain (their decisions age out
+        // via the cache TTL).
         let snapshot = {
             let state = entry.state.lock().unwrap();
             match &*state {
-                EntryState::Warm(w) => Some((
-                    w.engine.spmv_path().clone(),
-                    w.engine.spmm_path().clone(),
-                    w.spmv.clone(),
-                    w.spmm.clone(),
-                    w.engine.max_batch(),
-                )),
+                EntryState::Warm(w) => {
+                    Some((w.engine.maintenance_snapshot(), w.engine.max_batch()))
+                }
                 EntryState::Cold { .. } => None,
             }
         };
-        let Some((spmv_path, spmm_path, spmv_d, spmm_d, current_k)) = snapshot else {
+        let Some((units, current_k)) = snapshot else {
             return;
         };
-        self.check_drift(entry, &spmv_path, &spmv_d, true);
-        self.check_drift(entry, &spmm_path, &spmm_d, false);
+        // Each shard drifts — and re-tunes — independently: its window,
+        // its sub-matrix, its cache key.
+        for (idx, u) in units.iter().enumerate() {
+            self.check_drift(entry, idx, &u.name, &u.a, &u.spmv_path, &u.spmv, true);
+            self.check_drift(entry, idx, &u.name, &u.a, &u.spmm_path, &u.spmm, false);
+        }
         self.adapt_width(entry, current_k);
     }
 
-    /// Judges one path's window against its decision; on confirmed drift,
-    /// invalidates the cache entry, re-tunes on this (maintenance)
-    /// thread while the old payload keeps serving, and hot-swaps the
-    /// fresh preparation in.
+    /// Judges one unit path's window against its decision; on confirmed
+    /// drift, invalidates the cache entry, re-tunes on this
+    /// (maintenance) thread while the old payload keeps serving, and
+    /// hot-swaps the fresh preparation in. `unit`/`name`/`a` identify
+    /// the shard (for an unsharded entry: unit 0, the entry id, the full
+    /// matrix — journal ids and cache keys are then exactly the
+    /// pre-shard fleet's). The drift back-off is entry-level: fruitless
+    /// re-tunes on any shard mean the *environment* is slow, which is
+    /// shared evidence.
+    #[allow(clippy::too_many_arguments)]
     fn check_drift(
         &self,
         entry: &FleetEntry,
+        unit: usize,
+        name: &str,
+        a: &Arc<Csr>,
         path: &Arc<Path>,
         decision: &TunedConfig,
         is_spmv: bool,
@@ -873,7 +1065,7 @@ impl FleetInner {
         // fails or loses an ownership race below, the journal shows what
         // contradicted the decision.
         self.push_event(EventKind::DriftConfirmed {
-            id: entry.id.clone(),
+            id: name.to_string(),
             workload: decision.workload.to_string(),
             measured_gflops: judgment.measured_gflops,
             promised_gflops: judgment.promised_gflops,
@@ -882,10 +1074,10 @@ impl FleetInner {
         });
         let fresh = {
             let mut tuner = self.tuner.lock().unwrap();
-            let key = tuner.key(&entry.id, &entry.a, decision.workload);
+            let key = tuner.key(name, a, decision.workload);
             tuner.cache.invalidate_if_drifted(&key, window.gflops(), self.config.retune.tolerance);
             let _ = tuner.cache.save();
-            tuner.tune_workload(&entry.id, &entry.a, decision.workload)
+            tuner.tune_workload(name, a, decision.workload)
         };
         let Ok(fresh) = fresh else { return };
         // A re-tune that lands on the very decision it was meant to
@@ -899,7 +1091,7 @@ impl FleetInner {
             let failures = backoff[backoff_idx].failures;
             drop(backoff);
             self.push_event(EventKind::RetuneBackoff {
-                id: entry.id.clone(),
+                id: name.to_string(),
                 failures,
                 skip,
             });
@@ -908,7 +1100,7 @@ impl FleetInner {
         }
         let spec = PathSpec::from_decision(&fresh);
         let op: Arc<dyn SpmvOp> =
-            Arc::from(prepare_owned_candidate(&entry.a, &spec.candidate(), fresh.workload.k()));
+            Arc::from(prepare_owned_candidate(a, &spec.candidate(), fresh.workload.k()));
         // Install only if this engine still owns the inspected path — the
         // entry may have been evicted and re-materialized while the
         // search ran. A missed install is not lost work: the fresh
@@ -918,15 +1110,14 @@ impl FleetInner {
             let mut state = entry.state.lock().unwrap();
             match &mut *state {
                 EntryState::Warm(w) => {
-                    let owner =
-                        if is_spmv { w.engine.spmv_path() } else { w.engine.spmm_path() };
-                    if Arc::ptr_eq(owner, path) {
+                    let owned = w
+                        .engine
+                        .unit_path(unit, is_spmv)
+                        .map(|owner| Arc::ptr_eq(owner, path))
+                        .unwrap_or(false);
+                    if owned {
                         path.swap(spec, op);
-                        if is_spmv {
-                            w.spmv = fresh.clone();
-                        } else {
-                            w.spmm = fresh.clone();
-                        }
+                        w.engine.set_unit_decision(unit, is_spmv, fresh.clone());
                         true
                     } else {
                         false
@@ -944,7 +1135,7 @@ impl FleetInner {
         self.retunes.fetch_add(1, AtomicOrdering::Relaxed);
         entry.retunes.fetch_add(1, AtomicOrdering::Relaxed);
         self.push_event(EventKind::Retuned {
-            id: entry.id.clone(),
+            id: name.to_string(),
             workload: decision.workload.to_string(),
             measured_gflops: judgment.measured_gflops,
             promised_gflops: judgment.promised_gflops,
@@ -955,9 +1146,8 @@ impl FleetInner {
     }
 
     /// Moves the entry's batch width along the tuned ladder when the
-    /// offered load says so; a new rung > 1 gets an SpMM decision tuned
-    /// at exactly that width (a cache hit once the rung has been
-    /// visited) hot-swapped onto the batch path.
+    /// offered load says so; the install is shared with the SLO nudge
+    /// path (see [`FleetInner::retarget_width`]).
     fn adapt_width(&self, entry: &FleetEntry, current_k: usize) {
         let cfg = &self.config.batch;
         let (rate, samples) = {
@@ -973,41 +1163,7 @@ impl FleetInner {
         if new_k == current_k {
             return;
         }
-        // Width 1 never routes to the SpMM path, so only wider rungs need
-        // a freshly tuned decision.
-        let fresh = if new_k > 1 {
-            let mut tuner = self.tuner.lock().unwrap();
-            match tuner.tune_workload(&entry.id, &entry.a, Workload::Spmm { k: new_k }) {
-                Ok(decision) => Some(decision),
-                Err(_) => return,
-            }
-        } else {
-            None
-        };
-        let prepared = fresh.as_ref().map(|d| {
-            let spec = PathSpec::from_decision(d);
-            let op: Arc<dyn SpmvOp> =
-                Arc::from(prepare_owned_candidate(&entry.a, &spec.candidate(), d.workload.k()));
-            op
-        });
-        let mut swapped_to = None;
-        {
-            let mut state = entry.state.lock().unwrap();
-            let EntryState::Warm(w) = &mut *state else { return };
-            if w.engine.max_batch() != current_k {
-                // Raced an evict/re-materialize cycle; the next pass
-                // re-evaluates from the fresh state.
-                return;
-            }
-            if let (Some(decision), Some(op)) = (fresh, prepared) {
-                w.engine.spmm_path().swap(PathSpec::from_decision(&decision), op);
-                swapped_to = Some((decision.workload.to_string(), decision.to_string()));
-                w.spmm = decision;
-            }
-            w.engine.set_max_batch(new_k);
-        }
-        // The rung's decision may have brought a larger payload format.
-        self.enforce_budget(&entry.id);
+        let Some(swapped) = self.retarget_width(entry, current_k, new_k) else { return };
         self.width_changes.fetch_add(1, AtomicOrdering::Relaxed);
         self.push_event(EventKind::WidthChanged {
             id: entry.id.clone(),
@@ -1016,9 +1172,78 @@ impl FleetInner {
             expected_arrivals: expected,
             rate_samples: samples,
         });
-        if let Some((workload, to)) = swapped_to {
+        for (workload, to) in swapped {
             self.push_event(EventKind::HotSwap { id: entry.id.clone(), workload, to });
         }
+    }
+
+    /// Installs a new batch width on a warm entry: a rung > 1 gets an
+    /// SpMM decision tuned at exactly that width *per shard* (a cache
+    /// hit once the rung has been visited) hot-swapped onto each unit's
+    /// batch path, then every unit's cap moves. Returns the hot-swap
+    /// descriptions, or `None` when the entry is cold, a tune failed, or
+    /// the install raced an evict/re-materialize cycle (the next pass
+    /// re-evaluates from fresh state).
+    fn retarget_width(
+        &self,
+        entry: &FleetEntry,
+        current_k: usize,
+        new_k: usize,
+    ) -> Option<Vec<(String, String)>> {
+        let units: Vec<(String, Arc<Csr>)> = {
+            let state = entry.state.lock().unwrap();
+            match &*state {
+                EntryState::Warm(w) => {
+                    w.engine.maintenance_snapshot().into_iter().map(|u| (u.name, u.a)).collect()
+                }
+                EntryState::Cold { .. } => return None,
+            }
+        };
+        // Width 1 never routes to the SpMM path, so only wider rungs need
+        // freshly tuned decisions.
+        let fresh: Vec<TunedConfig> = if new_k > 1 {
+            let mut tuner = self.tuner.lock().unwrap();
+            let mut decisions = Vec::with_capacity(units.len());
+            for (name, a) in &units {
+                match tuner.tune_workload(name, a, Workload::Spmm { k: new_k }) {
+                    Ok(d) => decisions.push(d),
+                    Err(_) => return None,
+                }
+            }
+            decisions
+        } else {
+            Vec::new()
+        };
+        let prepared: Vec<(TunedConfig, Arc<dyn SpmvOp>)> = fresh
+            .into_iter()
+            .zip(&units)
+            .map(|(d, (_, a))| {
+                let spec = PathSpec::from_decision(&d);
+                let op: Arc<dyn SpmvOp> =
+                    Arc::from(prepare_owned_candidate(a, &spec.candidate(), d.workload.k()));
+                (d, op)
+            })
+            .collect();
+        let mut swapped = Vec::new();
+        {
+            let mut state = entry.state.lock().unwrap();
+            let EntryState::Warm(w) = &mut *state else { return None };
+            if w.engine.max_batch() != current_k
+                || (new_k > 1 && w.engine.shards() != prepared.len())
+            {
+                return None;
+            }
+            for (i, (decision, op)) in prepared.into_iter().enumerate() {
+                let path = w.engine.unit_path(i, false)?.clone();
+                path.swap(PathSpec::from_decision(&decision), op);
+                swapped.push((decision.workload.to_string(), decision.to_string()));
+                w.engine.set_unit_decision(i, false, decision);
+            }
+            w.engine.set_max_batch(new_k);
+        }
+        // The rung's decisions may have brought larger payload formats.
+        self.enforce_budget(&entry.id);
+        Some(swapped)
     }
 }
 
@@ -1143,6 +1368,41 @@ mod tests {
         assert!(fleet.drain_events().is_empty(), "drain must consume");
         let stats = fleet.shutdown();
         assert_eq!(stats.events_dropped, 0);
+    }
+
+    #[test]
+    fn sharded_registration_serves_the_oracle_and_journals() {
+        let tuner = Tuner::new(
+            crate::tuner::TunerConfig::model_only(),
+            crate::tuner::TuningCache::in_memory(),
+        );
+        let config = FleetConfig {
+            shard: ShardConfig { threshold_nnz: 0, shards: 3 },
+            ..quiet_config()
+        };
+        let fleet = Fleet::new(config, tuner);
+        let a = matrix(8, 24);
+        fleet.register("s", a.clone()).unwrap();
+        let shards = fleet.shard_count("s").unwrap();
+        assert!(shards >= 2, "a 24×24 stencil must split across engines, got {shards}");
+        let x = random_vector(a.ncols, 5);
+        let want = Csr::spmv(&a, &x);
+        let resp = fleet.call("s", x).unwrap();
+        for (u, v) in resp.y.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-10, "sharded assembly must match the oracle");
+        }
+        let t = fleet.telemetry();
+        assert!(t.journal.counts().iter().any(|(k, n)| *k == "sharded" && *n >= 1));
+        // Evict/re-materialize keeps the shard seeds: still correct after.
+        fleet.recover("s").unwrap();
+        assert_eq!(fleet.shard_count("s"), Some(shards));
+        let x = random_vector(a.ncols, 6);
+        let want = Csr::spmv(&a, &x);
+        let resp = fleet.call("s", x).unwrap();
+        for (u, v) in resp.y.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-10);
+        }
+        fleet.shutdown();
     }
 
     #[test]

@@ -1,0 +1,486 @@
+//! Row-sharded serving: one large matrix split across several
+//! independently tuned engines, with partial-`y` assembly.
+//!
+//! The source paper's headline observation is that a many-core part only
+//! saturates its memory system with enough *concurrent* work in flight —
+//! one synchronous engine per matrix caps a huge tenant's throughput at
+//! whatever a single batching loop can push. This module applies the
+//! DBCSR-style decomposition one level up: matrices whose nonzero count
+//! crosses [`ShardConfig::threshold_nnz`] are row-sharded along
+//! [`crate::sparse::partition::Partition::contiguous_balanced`]
+//! boundaries into sub-matrices, each tuned *independently* (a big shard
+//! may legitimately pick a different format, schedule or micro-kernel
+//! variant than its siblings) and served by its own
+//! [`crate::coordinator::Engine`]. A request broadcasts its `x` vector
+//! to every shard; each shard computes the rows of `y` it owns, and the
+//! [`Submission`] handle concatenates the partial results in row order.
+//!
+//! Execution placement: the process-wide
+//! [`crate::sched::WorkerPool`] serializes concurrent multi-worker
+//! generations behind a run gate, so shard engines executing through the
+//! shared pool would take turns instead of overlapping. A multi-shard
+//! engine therefore (a) runs its units on the spawn-per-batch backend,
+//! which has no shared gate, and (b) divides each unit's tuned thread
+//! count by the shard count (floor 1) — the shards split the machine
+//! instead of oversubscribing it, and a 1-thread generation runs
+//! entirely on its engine thread, making S shards genuinely S-way
+//! concurrent. Single-shard engines keep the fleet's configured backend
+//! and the decision's thread count: the `shards == 1` case is
+//! bit-for-bit the old per-entry engine.
+//!
+//! Failure containment: a shard worker that panics mid-batch (see
+//! [`ShardEngine::inject_fault`]) drops its reply senders, so the
+//! affected requests observe an explicit channel error — never a hang —
+//! and [`Submission::recv`] surfaces which shard died. The other shards
+//! (and every other fleet entry) keep serving; re-materializing the
+//! entry rebuilds the dead engine from its kept seeds.
+
+use std::ops::Range;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use crate::coordinator::path::{Engine, Path, PathStats, Response};
+use crate::coordinator::server::ServerConfig;
+use crate::sparse::partition::Partition;
+use crate::sparse::Csr;
+use crate::telemetry::{Phases, Telemetry};
+use crate::tuner::TunedConfig;
+
+/// When and how much to shard.
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// Matrices with at least this many nonzeros are row-sharded.
+    /// `usize::MAX` (the default) disables sharding.
+    pub threshold_nnz: usize,
+    /// Engines a matrix above the threshold is split across (≥ 2 to
+    /// have any effect; empty row ranges are dropped, so very small or
+    /// very ragged matrices may end up with fewer).
+    pub shards: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig { threshold_nnz: usize::MAX, shards: 2 }
+    }
+}
+
+/// The tuner-cache name of one shard of entry `id` — stable across
+/// evict/re-materialize cycles, so per-shard decisions are cache hits
+/// forever after the first registration.
+pub fn shard_name(id: &str, idx: usize) -> String {
+    format!("{id}#s{idx}")
+}
+
+/// The row ranges a matrix is sharded into under `config`: contiguous,
+/// ascending, disjoint, covering `0..a.nrows` exactly, with empty
+/// trailing ranges dropped. Below the threshold (or with `shards < 2`)
+/// the plan is the single full range. Deterministic: same matrix, same
+/// config, same plan.
+pub fn plan_ranges(a: &Csr, config: &ShardConfig) -> Vec<Range<usize>> {
+    if a.nnz() < config.threshold_nnz || config.shards < 2 {
+        return vec![0..a.nrows];
+    }
+    let ranges: Vec<Range<usize>> = Partition::contiguous_balanced(a, config.shards)
+        .ranges
+        .into_iter()
+        .filter(|r| !r.is_empty())
+        .collect();
+    if ranges.is_empty() {
+        // nrows == 0: keep the degenerate full range so downstream code
+        // never sees an empty plan.
+        vec![0..a.nrows]
+    } else {
+        ranges
+    }
+}
+
+/// Extracts rows `range` of `a` as a standalone CSR: row pointers
+/// rebased to 0, the column space (and therefore the `x` length) kept at
+/// the full `a.ncols`.
+pub fn row_slice(a: &Csr, range: &Range<usize>) -> Csr {
+    let base = a.rptrs[range.start];
+    let rptrs: Vec<usize> =
+        (range.start..=range.end).map(|i| a.rptrs[i] - base).collect();
+    let lo = a.rptrs[range.start];
+    let hi = a.rptrs[range.end];
+    Csr::from_parts(
+        range.end - range.start,
+        a.ncols,
+        rptrs,
+        a.cids[lo..hi].to_vec(),
+        a.vals[lo..hi].to_vec(),
+    )
+    .expect("a row slice of a valid CSR is a valid CSR")
+}
+
+/// Everything needed to (re-)materialize one shard without touching the
+/// tuner: the sub-matrix, its row range in the full matrix, and its
+/// independently tuned decision pair. A single-shard entry's seed is the
+/// full matrix under the entry's own id.
+#[derive(Debug, Clone)]
+pub struct ShardSeed {
+    /// Tuner-cache name ([`shard_name`], or the entry id when unsharded).
+    pub name: String,
+    /// Rows of the full matrix this shard owns.
+    pub range: Range<usize>,
+    /// The shard's sub-matrix (rows rebased, full column space).
+    pub a: Arc<Csr>,
+    /// The shard's SpMV decision.
+    pub spmv: TunedConfig,
+    /// The shard's SpMM decision.
+    pub spmm: TunedConfig,
+}
+
+/// One running shard: its seed plus the engine serving it.
+pub(crate) struct ShardUnit {
+    pub(crate) name: String,
+    pub(crate) range: Range<usize>,
+    pub(crate) a: Arc<Csr>,
+    pub(crate) engine: Engine,
+    pub(crate) spmv: TunedConfig,
+    pub(crate) spmm: TunedConfig,
+}
+
+/// Per-unit snapshot the fleet's maintenance pass works from (paths are
+/// shared handles; decisions are the serving copies at snapshot time).
+pub(crate) struct UnitSnapshot {
+    pub(crate) name: String,
+    pub(crate) a: Arc<Csr>,
+    pub(crate) spmv_path: Arc<Path>,
+    pub(crate) spmm_path: Arc<Path>,
+    pub(crate) spmv: TunedConfig,
+    pub(crate) spmm: TunedConfig,
+}
+
+/// A set of engines serving one matrix: one per shard (often exactly
+/// one). The fleet's warm entries hold one of these instead of a bare
+/// [`Engine`].
+pub struct ShardEngine {
+    nrows: usize,
+    ncols: usize,
+    units: Vec<ShardUnit>,
+}
+
+impl ShardEngine {
+    /// Boots one engine per seed. See the module docs for the placement
+    /// policy multi-shard engines apply (spawn backend, divided
+    /// threads); a single seed reproduces the unsharded engine exactly.
+    pub fn start(
+        seeds: Vec<ShardSeed>,
+        max_batch: usize,
+        max_wait: Duration,
+        pooled: bool,
+        telemetry: Arc<Telemetry>,
+    ) -> ShardEngine {
+        assert!(!seeds.is_empty(), "a shard engine needs at least one seed");
+        let shards = seeds.len();
+        let nrows = seeds.iter().map(|s| s.range.end).max().unwrap_or(0);
+        let ncols = seeds[0].a.ncols;
+        let units = seeds
+            .into_iter()
+            .map(|seed| {
+                let mut config = ServerConfig::tuned_pair(&seed.spmv, &seed.spmm);
+                config.max_batch = max_batch.max(1);
+                config.max_wait = max_wait;
+                config.telemetry = telemetry.clone();
+                if shards > 1 {
+                    config.pooled = false;
+                    config.spmv.threads = (config.spmv.threads / shards).max(1);
+                    if let Some(spmm) = config.spmm.as_mut() {
+                        spmm.threads = (spmm.threads / shards).max(1);
+                    }
+                } else {
+                    config.pooled = pooled;
+                }
+                let engine = Engine::start(seed.a.clone(), config);
+                ShardUnit {
+                    name: seed.name,
+                    range: seed.range,
+                    a: seed.a,
+                    engine,
+                    spmv: seed.spmv,
+                    spmm: seed.spmm,
+                }
+            })
+            .collect();
+        ShardEngine { nrows, ncols, units }
+    }
+
+    /// Number of shard engines.
+    pub fn shards(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Broadcasts `x` to every shard and returns the assembly handle.
+    /// A dead shard's rejection is embedded in the submission — the
+    /// caller learns about it from [`Submission::recv`], and the healthy
+    /// shards' work is unaffected.
+    pub fn submit(&self, x: Vec<f64>) -> anyhow::Result<Submission> {
+        anyhow::ensure!(
+            x.len() == self.ncols,
+            "request length {} != ncols {}",
+            x.len(),
+            self.ncols
+        );
+        let mut x = Some(x);
+        let last = self.units.len() - 1;
+        let parts = self
+            .units
+            .iter()
+            .enumerate()
+            .map(|(i, u)| {
+                let xi = if i == last {
+                    x.take().expect("x is consumed only by the last shard")
+                } else {
+                    x.as_ref().expect("x lives until the last shard").clone()
+                };
+                SubmissionPart { shard: i, range: u.range.clone(), rx: u.engine.client().submit(xi) }
+            })
+            .collect();
+        Ok(Submission { nrows: self.nrows, parts })
+    }
+
+    /// The current batch-width cap (every unit shares one target).
+    pub fn max_batch(&self) -> usize {
+        self.units[0].engine.max_batch()
+    }
+
+    /// Retargets every unit's batch-width cap.
+    pub fn set_max_batch(&self, k: usize) {
+        for u in &self.units {
+            u.engine.set_max_batch(k);
+        }
+    }
+
+    /// Prepared payload bytes across all shards.
+    pub fn storage_bytes(&self) -> usize {
+        self.units.iter().map(|u| u.engine.storage_bytes()).sum()
+    }
+
+    /// Whether shard `idx`'s serving loop has exited (a healthy engine's
+    /// loop runs until shutdown, so `true` before shutdown means the
+    /// worker panicked).
+    pub fn shard_failed(&self, idx: usize) -> Option<bool> {
+        self.units.get(idx).map(|u| u.engine.worker_finished())
+    }
+
+    /// Test/demo fault injection: feeds shard `idx` a malformed request
+    /// (wrong `x` length), which trips the engine loop's packing
+    /// assertion *mid-batch* — the worker panics, in-flight riders of
+    /// that batch get channel errors, and later submissions to the shard
+    /// are rejected at enqueue. Returns whether `idx` named a shard.
+    pub fn inject_fault(&self, idx: usize) -> bool {
+        match self.units.get(idx) {
+            Some(u) => {
+                let _ = u.engine.client().submit(vec![0.0; u.a.ncols + 1]);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// The seeds that rebuild this engine (the cold form of the entry).
+    pub(crate) fn seeds(&self) -> Vec<ShardSeed> {
+        self.units
+            .iter()
+            .map(|u| ShardSeed {
+                name: u.name.clone(),
+                range: u.range.clone(),
+                a: u.a.clone(),
+                spmv: u.spmv.clone(),
+                spmm: u.spmm.clone(),
+            })
+            .collect()
+    }
+
+    /// Per-unit maintenance snapshot (shared path handles + decisions).
+    pub(crate) fn maintenance_snapshot(&self) -> Vec<UnitSnapshot> {
+        self.units
+            .iter()
+            .map(|u| UnitSnapshot {
+                name: u.name.clone(),
+                a: u.a.clone(),
+                spmv_path: u.engine.spmv_path().clone(),
+                spmm_path: u.engine.spmm_path().clone(),
+                spmv: u.spmv.clone(),
+                spmm: u.spmm.clone(),
+            })
+            .collect()
+    }
+
+    /// Unit `idx`'s serving path for one workload side.
+    pub(crate) fn unit_path(&self, idx: usize, is_spmv: bool) -> Option<&Arc<Path>> {
+        self.units
+            .get(idx)
+            .map(|u| if is_spmv { u.engine.spmv_path() } else { u.engine.spmm_path() })
+    }
+
+    /// Replaces unit `idx`'s serving decision copy after a hot swap.
+    pub(crate) fn set_unit_decision(&mut self, idx: usize, is_spmv: bool, d: TunedConfig) {
+        if let Some(u) = self.units.get_mut(idx) {
+            if is_spmv {
+                u.spmv = d;
+            } else {
+                u.spmm = d;
+            }
+        }
+    }
+
+    /// First unit's decision pair — the entry-level answer for
+    /// [`crate::fleet::Fleet::decisions`] (sharded entries have one pair
+    /// per shard; the first is the representative).
+    pub(crate) fn lead_decisions(&self) -> (TunedConfig, TunedConfig) {
+        (self.units[0].spmv.clone(), self.units[0].spmm.clone())
+    }
+
+    /// Hot-swap counts summed across units: (SpMV, SpMM).
+    pub(crate) fn path_swaps(&self) -> (usize, usize) {
+        self.units.iter().fold((0, 0), |(v, m), u| {
+            (v + u.engine.spmv_path().swaps(), m + u.engine.spmm_path().swaps())
+        })
+    }
+
+    /// Folds every unit's cumulative path stats: (SpMV, SpMM).
+    pub(crate) fn stats(&self) -> (PathStats, PathStats) {
+        let mut spmv = PathStats::default();
+        let mut spmm = PathStats::default();
+        for u in &self.units {
+            spmv.absorb(&u.engine.spmv_path().stats());
+            spmm.absorb(&u.engine.spmm_path().stats());
+        }
+        (spmv, spmm)
+    }
+
+    /// Skews every unit decision matching `workload` (drift injection —
+    /// see [`crate::fleet::Fleet::skew_recorded_gflops`]).
+    pub(crate) fn skew_decisions(&mut self, workload: crate::kernels::Workload, factor: f64) {
+        for u in &mut self.units {
+            if u.spmv.workload == workload {
+                u.spmv.gflops *= factor;
+            }
+            if u.spmm.workload == workload {
+                u.spmm.gflops *= factor;
+            }
+        }
+    }
+
+    /// Drains and stops every unit, folding their final path stats:
+    /// (SpMV, SpMM). Panicked workers are joined without propagating.
+    pub fn shutdown(self) -> (PathStats, PathStats) {
+        let mut spmv = PathStats::default();
+        let mut spmm = PathStats::default();
+        for u in self.units {
+            let (v, m) = u.engine.shutdown();
+            spmv.absorb(&v);
+            spmm.absorb(&m);
+        }
+        (spmv, spmm)
+    }
+}
+
+struct SubmissionPart {
+    shard: usize,
+    range: Range<usize>,
+    rx: anyhow::Result<mpsc::Receiver<Response>>,
+}
+
+/// The response handle for one logical request: one receiver per shard,
+/// assembled into a full-`y` [`Response`] on [`Submission::recv`]. For a
+/// single-shard entry this is a zero-assembly passthrough.
+pub struct Submission {
+    nrows: usize,
+    parts: Vec<SubmissionPart>,
+}
+
+impl Submission {
+    /// Waits for every shard and assembles the full response. The
+    /// reported latency is the slowest shard's (they run concurrently);
+    /// phases and batch size are likewise the per-shard maxima. Errors —
+    /// never hangs — if any shard rejected the request or died before
+    /// replying.
+    pub fn recv(self) -> anyhow::Result<Response> {
+        let mut parts = self.parts;
+        if parts.len() == 1 && parts[0].range.start == 0 {
+            let part = parts.pop().expect("one part");
+            let rx = part.rx?;
+            return rx.recv().map_err(|_| {
+                anyhow::anyhow!("shard {} died before replying", part.shard)
+            });
+        }
+        let mut y = vec![0.0f64; self.nrows];
+        let mut latency = Duration::ZERO;
+        let mut phases = Phases::default();
+        let mut batch_size = 0usize;
+        for part in parts {
+            let rx = part
+                .rx
+                .map_err(|e| anyhow::anyhow!("shard {} rejected the request: {e}", part.shard))?;
+            let resp = rx.recv().map_err(|_| {
+                anyhow::anyhow!("shard {} died before replying", part.shard)
+            })?;
+            anyhow::ensure!(
+                resp.y.len() == part.range.len(),
+                "shard {} returned {} rows for a {}-row range",
+                part.shard,
+                resp.y.len(),
+                part.range.len()
+            );
+            y[part.range.clone()].copy_from_slice(&resp.y);
+            latency = latency.max(resp.latency);
+            phases.queue_s = phases.queue_s.max(resp.phases.queue_s);
+            phases.barrier_s = phases.barrier_s.max(resp.phases.barrier_s);
+            phases.kernel_s = phases.kernel_s.max(resp.phases.kernel_s);
+            batch_size = batch_size.max(resp.batch_size);
+        }
+        Ok(Response { y, latency, phases, batch_size })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::stencil::stencil_2d;
+    use crate::sparse::gen::{random_vector, randomize_values};
+
+    fn matrix(n: usize, seed: u64) -> Csr {
+        let mut a = stencil_2d(n, n);
+        randomize_values(&mut a, seed);
+        a
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_covers_every_row_once() {
+        let a = matrix(20, 3);
+        let config = ShardConfig { threshold_nnz: 0, shards: 4 };
+        let plan = plan_ranges(&a, &config);
+        assert_eq!(plan, plan_ranges(&a, &config), "same input, same plan");
+        assert_eq!(plan.first().map(|r| r.start), Some(0));
+        assert_eq!(plan.last().map(|r| r.end), Some(a.nrows));
+        for w in plan.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "ranges must tile contiguously");
+        }
+        // Below the threshold the plan degenerates to the full range.
+        let off = ShardConfig::default();
+        assert_eq!(plan_ranges(&a, &off), vec![0..a.nrows]);
+    }
+
+    #[test]
+    fn row_slices_reassemble_the_oracle() {
+        let a = matrix(16, 7);
+        let x = random_vector(a.ncols, 11);
+        let want = Csr::spmv(&a, &x);
+        for shards in [1usize, 2, 3, 8] {
+            let plan = plan_ranges(&a, &ShardConfig { threshold_nnz: 0, shards });
+            let mut y = vec![0.0; a.nrows];
+            for r in &plan {
+                let sub = row_slice(&a, r);
+                assert_eq!(sub.nrows, r.len());
+                assert_eq!(sub.ncols, a.ncols);
+                y[r.clone()].copy_from_slice(&sub.spmv(&x));
+            }
+            for (u, v) in y.iter().zip(&want) {
+                assert!((u - v).abs() < 1e-12, "{shards} shards disagree with the oracle");
+            }
+        }
+    }
+}

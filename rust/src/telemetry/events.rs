@@ -174,6 +174,63 @@ pub enum EventKind {
         /// Drift checks that will be skipped before the next attempt.
         skip: u32,
     },
+    /// A large matrix was row-sharded across several independently tuned
+    /// engines at registration time.
+    Sharded {
+        /// Entry id.
+        id: String,
+        /// Number of shard engines serving the entry.
+        shards: usize,
+        /// Nonzeros of the full matrix that crossed the threshold.
+        nnz: usize,
+    },
+    /// A shard engine died mid-batch (injected or organic panic). The
+    /// entry keeps serving its healthy shards; affected requests get
+    /// explicit errors until the entry is re-materialized.
+    ShardFault {
+        /// Entry id.
+        id: String,
+        /// Index of the faulted shard.
+        shard: usize,
+    },
+    /// The intake layer refused a request because its tenant exceeded a
+    /// budget — the explicit rejection the client receives instead of a
+    /// hang.
+    Shed {
+        /// Tenant (entry) id.
+        tenant: String,
+        /// Which budget was exceeded (`"qps"`, `"inflight"`, `"bytes"`).
+        reason: &'static str,
+        /// Requests the tenant had in flight at the decision.
+        inflight: usize,
+    },
+    /// A tenant's observed p99 latency exceeded its SLO target over the
+    /// last maintenance window.
+    SloViolation {
+        /// Tenant (entry) id.
+        tenant: String,
+        /// Observed p99 over the window (seconds).
+        p99_s: f64,
+        /// The tenant's target (seconds).
+        target_s: f64,
+        /// Latency samples behind the estimate.
+        samples: usize,
+    },
+    /// SLO pressure walked the adaptive batch width one ladder rung:
+    /// down when p99 broke the target, up when the tenant was shedding
+    /// while still inside it.
+    SloWidthChanged {
+        /// Entry id.
+        id: String,
+        /// Previous width.
+        from: usize,
+        /// New width.
+        to: usize,
+        /// Observed p99 that drove the step (seconds).
+        p99_s: f64,
+        /// The tenant's target (seconds).
+        target_s: f64,
+    },
 }
 
 impl EventKind {
@@ -195,6 +252,11 @@ impl EventKind {
             EventKind::CacheHit { .. } => "cache_hit",
             EventKind::CacheMigrated { .. } => "cache_migrated",
             EventKind::RetuneBackoff { .. } => "retune_backoff",
+            EventKind::Sharded { .. } => "sharded",
+            EventKind::ShardFault { .. } => "shard_fault",
+            EventKind::Shed { .. } => "shed",
+            EventKind::SloViolation { .. } => "slo_violation",
+            EventKind::SloWidthChanged { .. } => "slo_width_changed",
         }
     }
 }
@@ -274,6 +336,31 @@ impl std::fmt::Display for EventKind {
                     f,
                     "retune backoff {id}: {failures} fruitless re-tunes, skipping next {skip} \
                      drift checks"
+                )
+            }
+            EventKind::Sharded { id, shards, nnz } => {
+                write!(f, "sharded {id}: {shards} engines over {nnz} nnz")
+            }
+            EventKind::ShardFault { id, shard } => {
+                write!(f, "shard fault {id}: shard {shard} died")
+            }
+            EventKind::Shed { tenant, reason, inflight } => {
+                write!(f, "shed {tenant}: {reason} budget exceeded ({inflight} in flight)")
+            }
+            EventKind::SloViolation { tenant, p99_s, target_s, samples } => {
+                write!(
+                    f,
+                    "slo violation {tenant}: p99 {:.2} ms > target {:.2} ms ({samples} samples)",
+                    p99_s * 1e3,
+                    target_s * 1e3
+                )
+            }
+            EventKind::SloWidthChanged { id, from, to, p99_s, target_s } => {
+                write!(
+                    f,
+                    "slo width {id}: {from} → {to} (p99 {:.2} ms vs target {:.2} ms)",
+                    p99_s * 1e3,
+                    target_s * 1e3
                 )
             }
         }

@@ -92,6 +92,22 @@ pub mod names {
     pub const FLEET_RETUNES: &str = "fleet_retunes_total";
     /// Counter: adaptive batch-width moves.
     pub const FLEET_WIDTH_CHANGES: &str = "fleet_width_changes_total";
+    /// Counter: requests admitted by the intake layer.
+    pub const INTAKE_ADMITTED: &str = "intake_admitted_total";
+    /// Counter: requests shed by per-tenant admission control.
+    pub const INTAKE_SHED: &str = "intake_shed_total";
+    /// Counter: per-tenant p99 SLO violations observed by intake
+    /// maintenance.
+    pub const SLO_VIOLATIONS: &str = "slo_violations_total";
+    /// Counter: shard engines lost to a mid-batch fault.
+    pub const SHARD_FAULTS: &str = "shard_faults_total";
+
+    /// Histogram name for one tenant's end-to-end intake latency
+    /// (admission → assembled response), seconds. Derived because the
+    /// tenant axis is open-ended.
+    pub fn tenant_latency(tenant: &str) -> String {
+        format!("tenant_latency_seconds_{tenant}")
+    }
 
     /// Counter name for kernel nanoseconds attributed to one format
     /// family on the vector or the portable path —

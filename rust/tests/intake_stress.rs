@@ -1,0 +1,271 @@
+//! Concurrency stress harness for the admission-controlled intake:
+//! hundreds of client threads against a small fleet under an
+//! eviction-forcing memory budget. The invariants under fire:
+//!
+//! * **zero wrong answers** — every admitted request's response matches
+//!   its own oracle, no matter how batches fuse or entries churn;
+//! * **zero lost non-shed requests** — an admitted ticket always
+//!   redeems to a response;
+//! * **shed requests are always explicitly rejected** — a shed is an
+//!   `Admission::Shed { reason }` verdict returned immediately, never a
+//!   hang or a silent drop;
+//! * **exact accounting** — per-tenant scoreboards, the intake
+//!   counters, and the bounded journal's drop-oldest bookkeeping all
+//!   reconcile to the thread-side tallies.
+//!
+//! Client count: env `PHI_STRESS_CLIENTS` (default 200).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use phi_spmv::fleet::{
+    Admission, Fleet, FleetConfig, Intake, RetuneConfig, ShedReason, TenantBudget,
+};
+use phi_spmv::sparse::gen::stencil::stencil_2d;
+use phi_spmv::sparse::gen::{random_vector, randomize_values};
+use phi_spmv::sparse::Csr;
+use phi_spmv::tuner::{Tuner, TunerConfig, TuningCache};
+
+const TENANTS: usize = 3;
+const ROUNDS: usize = 5;
+
+fn client_count() -> usize {
+    std::env::var("PHI_STRESS_CLIENTS").ok().and_then(|v| v.parse().ok()).unwrap_or(200)
+}
+
+fn matrix(seed: u64, n: usize) -> Arc<Csr> {
+    let mut a = stencil_2d(n, n);
+    randomize_values(&mut a, seed);
+    Arc::new(a)
+}
+
+fn quiet_fleet(memory_budget_bytes: usize) -> Fleet {
+    let tuner = Tuner::new(TunerConfig::model_only(), TuningCache::in_memory());
+    let config = FleetConfig {
+        memory_budget_bytes,
+        retune: RetuneConfig { enabled: false, ..RetuneConfig::default() },
+        ..FleetConfig::default()
+    };
+    Fleet::new(config, tuner)
+}
+
+#[test]
+fn hundreds_of_clients_zero_wrong_answers_exact_accounting() {
+    let matrices: Vec<Arc<Csr>> = (0..TENANTS).map(|i| matrix(100 + i as u64, 16)).collect();
+    // Budget for roughly two of the three entries: the round-robin
+    // traffic below forces evict/re-materialize churn *while* requests
+    // are in flight.
+    let budget_bytes = 2 * matrices[0].storage_bytes() + matrices[0].storage_bytes() / 2;
+    let fleet = quiet_fleet(budget_bytes);
+    // Subscribe before any events so seen + missed reconciles to the
+    // full published history.
+    let telemetry = fleet.telemetry();
+    let mut audit = telemetry.journal.subscribe();
+    for (i, a) in matrices.iter().enumerate() {
+        fleet.register(&format!("t{i}"), a.clone()).unwrap();
+    }
+    // Tight in-flight caps so admission control actually bites under
+    // this thread count; tenant t2 additionally gets a byte cap.
+    let intake = Arc::new(Intake::new(fleet, TenantBudget {
+        max_inflight: 8,
+        ..TenantBudget::unlimited()
+    }));
+    intake.set_budget("t2", TenantBudget {
+        max_inflight: 8,
+        max_inflight_bytes: matrices[2].ncols * 8 * 4,
+        ..TenantBudget::unlimited()
+    });
+
+    let clients = client_count();
+    let ok = Arc::new(AtomicU64::new(0));
+    let shed = Arc::new(AtomicU64::new(0));
+    let wrong = Arc::new(AtomicU64::new(0));
+    let lost = Arc::new(AtomicU64::new(0));
+    let submit_errors = Arc::new(AtomicU64::new(0));
+
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let intake = intake.clone();
+            let matrices = matrices.clone();
+            let (ok, shed, wrong, lost, submit_errors) = (
+                ok.clone(),
+                shed.clone(),
+                wrong.clone(),
+                lost.clone(),
+                submit_errors.clone(),
+            );
+            std::thread::spawn(move || {
+                for round in 0..ROUNDS {
+                    let tid = (c + round) % TENANTS;
+                    let a = &matrices[tid];
+                    let x = random_vector(a.ncols, (c * ROUNDS + round) as u64);
+                    match intake.submit(&format!("t{tid}"), x.clone()) {
+                        Ok(Admission::Admitted(ticket)) => match ticket.recv() {
+                            Ok(resp) => {
+                                let want = a.spmv(&x);
+                                let bad = resp.y.iter().zip(&want).any(|(u, v)| {
+                                    (u - v).abs() >= 1e-9 * (1.0 + v.abs())
+                                });
+                                if bad || resp.y.len() != want.len() {
+                                    wrong.fetch_add(1, Ordering::Relaxed);
+                                } else {
+                                    ok.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            Err(_) => {
+                                lost.fetch_add(1, Ordering::Relaxed);
+                            }
+                        },
+                        Ok(Admission::Shed { .. }) => {
+                            shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            submit_errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client threads must not panic");
+    }
+
+    let (ok, shed) = (ok.load(Ordering::Relaxed), shed.load(Ordering::Relaxed));
+    assert_eq!(wrong.load(Ordering::Relaxed), 0, "zero wrong answers");
+    assert_eq!(lost.load(Ordering::Relaxed), 0, "admitted requests must all be answered");
+    assert_eq!(submit_errors.load(Ordering::Relaxed), 0, "registered tenants never error");
+    assert_eq!(ok + shed, (clients * ROUNDS) as u64, "every request has exactly one fate");
+
+    // The scoreboards reconcile to the thread-side tallies…
+    let report = intake.report();
+    assert_eq!(report.iter().map(|r| r.admitted).sum::<u64>(), ok);
+    assert_eq!(report.iter().map(|r| r.shed).sum::<u64>(), shed);
+    // …and so do the counters.
+    assert_eq!(
+        telemetry.metrics.counter(phi_spmv::telemetry::names::INTAKE_ADMITTED).get(),
+        ok
+    );
+    assert_eq!(telemetry.metrics.counter(phi_spmv::telemetry::names::INTAKE_SHED).get(), shed);
+    // Journal drop accounting is exact even when the bounded buffer
+    // overflowed: every published event is either still buffered,
+    // counted as dropped, and the cumulative per-kind counts include
+    // one `shed` per shed verdict.
+    let journal = &telemetry.journal;
+    assert_eq!(journal.dropped(), journal.published() - journal.len() as u64);
+    let (seen, missed) = audit.poll(journal);
+    assert_eq!(seen.len() as u64 + missed, journal.published());
+    let shed_events =
+        journal.counts().iter().find(|(k, _)| *k == "shed").map(|(_, n)| *n).unwrap_or(0);
+    assert_eq!(shed_events, shed, "one journal `shed` event per shed verdict");
+
+    let stats = Arc::try_unwrap(intake).ok().expect("all clients joined").shutdown();
+    assert!(stats.evictions >= 1, "the budget must have forced eviction under load");
+    assert!(stats.rematerializations >= 1, "evicted entries must have come back");
+    assert_eq!(stats.served() as u64, ok, "engines served exactly the admitted requests");
+}
+
+#[test]
+fn sheds_are_explicit_and_immediate() {
+    let fleet = quiet_fleet(0);
+    let a = matrix(7, 12);
+    fleet.register("t", a.clone()).unwrap();
+    let intake = Intake::new(fleet, TenantBudget::unlimited());
+
+    // In-flight cap 0: every request is shed — each verdict is an
+    // explicit rejection carrying the tripped axis.
+    intake.set_budget("t", TenantBudget { max_inflight: 0, ..TenantBudget::unlimited() });
+    for _ in 0..50 {
+        match intake.submit("t", vec![1.0; a.ncols]).unwrap() {
+            Admission::Shed { reason } => assert_eq!(reason, ShedReason::Inflight),
+            Admission::Admitted(_) => panic!("a zero-inflight budget must shed everything"),
+        }
+    }
+    // into_ticket surfaces the shed as an error that names the axis.
+    let err = intake.submit("t", vec![1.0; a.ncols]).unwrap().into_ticket().unwrap_err();
+    assert!(err.to_string().contains("inflight"), "unexpected message: {err}");
+
+    // Rate limiting: a fresh-budget bucket grants the burst, then
+    // binds. At ~zero qps the bucket never refills, so after the two
+    // burst tokens every further request is shed with the qps reason.
+    let fleet2 = quiet_fleet(0);
+    fleet2.register("r", a.clone()).unwrap();
+    let intake2 = Intake::new(fleet2, TenantBudget::unlimited());
+    intake2.set_budget("r", TenantBudget { max_qps: 1e-9, burst: 2, ..TenantBudget::unlimited() });
+    let mut tickets = Vec::new();
+    for _ in 0..2 {
+        match intake2.submit("r", vec![1.0; a.ncols]).unwrap() {
+            Admission::Admitted(t) => tickets.push(t),
+            Admission::Shed { reason } => panic!("burst tokens must admit, shed as {reason:?}"),
+        }
+    }
+    for _ in 0..10 {
+        match intake2.submit("r", vec![1.0; a.ncols]).unwrap() {
+            Admission::Shed { reason } => assert_eq!(reason, ShedReason::RateLimit),
+            Admission::Admitted(_) => panic!("a dry bucket must rate-limit"),
+        }
+    }
+    for t in tickets {
+        t.recv().expect("admitted burst requests must be answered");
+    }
+    intake2.shutdown();
+    intake.shutdown();
+}
+
+#[test]
+fn slo_pressure_walks_width_down_and_shedding_recovery_walks_it_up() {
+    let fleet = quiet_fleet(0);
+    let a = matrix(9, 16);
+    fleet.register("t", a.clone()).unwrap();
+    let intake = Intake::new(fleet, TenantBudget::unlimited());
+    assert_eq!(intake.fleet().current_max_batch("t"), Some(16));
+
+    // An unmeetable SLO: every judged window violates, and each
+    // maintenance pass walks the width one rung down the ladder.
+    intake.set_budget("t", TenantBudget {
+        p99_target: Duration::from_nanos(1),
+        ..TenantBudget::unlimited()
+    });
+    for i in 0..4 {
+        let x = random_vector(a.ncols, 60 + i);
+        intake.call("t", x).unwrap();
+    }
+    intake.maintain();
+    assert_eq!(intake.fleet().current_max_batch("t"), Some(8), "p99 pressure: 16 → 8");
+    for i in 0..4 {
+        let x = random_vector(a.ncols, 70 + i);
+        intake.call("t", x).unwrap();
+    }
+    intake.maintain();
+    assert_eq!(intake.fleet().current_max_batch("t"), Some(4), "p99 pressure: 8 → 4");
+
+    let report = intake.report();
+    assert_eq!(report.len(), 1);
+    assert!(report[0].violations >= 2);
+    assert!(!report[0].compliant);
+    assert!(report[0].last_p99.unwrap() > Duration::from_nanos(1));
+    let t = intake.fleet().telemetry();
+    assert!(t.metrics.counter(phi_spmv::telemetry::names::SLO_VIOLATIONS).get() >= 2);
+    assert!(t.journal.counts().iter().any(|(k, n)| *k == "slo_violation" && *n >= 2));
+    assert!(t.journal.counts().iter().any(|(k, n)| *k == "slo_width_changed" && *n >= 2));
+
+    // Now the tenant is compliant (loose target) but shedding: the next
+    // judged window nudges the width back up for throughput.
+    intake.set_budget("t", TenantBudget { max_inflight: 0, ..TenantBudget::unlimited() });
+    for _ in 0..3 {
+        assert!(matches!(intake.submit("t", vec![0.0; a.ncols]).unwrap(), Admission::Shed { .. }));
+    }
+    intake.set_budget("t", TenantBudget::unlimited());
+    for i in 0..4 {
+        let x = random_vector(a.ncols, 80 + i);
+        intake.call("t", x).unwrap();
+    }
+    intake.maintain();
+    assert_eq!(
+        intake.fleet().current_max_batch("t"),
+        Some(8),
+        "compliant + shedding: width back up one rung"
+    );
+    intake.shutdown();
+}

@@ -1,0 +1,311 @@
+//! Sharded serving vs the unsharded oracle, at three levels: pure
+//! row-slice assembly (SpMV and SpMM, k ∈ {1, 4, 17}) across
+//! stencil/power-law/banded/ragged patterns and shard counts
+//! {1, 2, 3, 8}; a hand-seeded `ShardEngine`; and the fleet with
+//! sharding forced on — plus shard-plan determinism and the
+//! fault-injection story (a dead shard must yield explicit errors,
+//! never poison peers, and recover on re-materialization).
+//!
+//! Case count for the property sweep: env `PHI_PROP_CASES`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use phi_spmv::fleet::shard::{plan_ranges, row_slice, shard_name, ShardConfig, ShardEngine, ShardSeed};
+use phi_spmv::fleet::{Fleet, FleetConfig, RetuneConfig};
+use phi_spmv::kernels::Workload;
+use phi_spmv::sched::Policy;
+use phi_spmv::sparse::gen::banded::{banded_runs, BandedSpec};
+use phi_spmv::sparse::gen::powerlaw::{powerlaw, PowerLawSpec};
+use phi_spmv::sparse::gen::stencil::stencil_2d;
+use phi_spmv::sparse::gen::{random_vector, randomize_values};
+use phi_spmv::sparse::Csr;
+use phi_spmv::telemetry::Telemetry;
+use phi_spmv::tuner::{Format, Ordering, TunedConfig, Tuner, TunerConfig, TuningCache};
+use phi_spmv::util::prop::{arb, check};
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 8];
+const WIDTHS: [usize; 3] = [1, 4, 17];
+
+fn assert_close(got: &[f64], want: &[f64], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: length");
+    for (i, (u, v)) in got.iter().zip(want).enumerate() {
+        assert!((u - v).abs() < 1e-9 * (1.0 + v.abs()), "{tag}: idx {i}: {u} vs {v}");
+    }
+}
+
+/// Slices `a` along `plan`, runs each shard's kernel, and assembles the
+/// partial results in row order — the pure (engine-free) form of what
+/// `ShardEngine`/`Submission` do.
+fn assemble(a: &Csr, plan: &[std::ops::Range<usize>], x: &[f64], k: usize) -> Vec<f64> {
+    let mut y = vec![0.0; a.nrows * k];
+    for r in plan {
+        let sub = row_slice(a, r);
+        let part = if k == 1 { sub.spmv(x) } else { sub.spmm(x, k) };
+        y[r.start * k..r.end * k].copy_from_slice(&part);
+    }
+    y
+}
+
+fn check_all_plans(a: &Csr, tag: &str) {
+    for &k in &WIDTHS {
+        let x = random_vector(a.ncols * k, 11 + k as u64);
+        let want = if k == 1 { a.spmv(&x) } else { a.spmm(&x, k) };
+        for &shards in &SHARD_COUNTS {
+            let plan = plan_ranges(a, &ShardConfig { threshold_nnz: 0, shards });
+            let got = assemble(a, &plan, &x, k);
+            assert_close(&got, &want, &format!("{tag}: {shards} shards, k={k}"));
+        }
+    }
+}
+
+#[test]
+fn sharded_assembly_matches_the_oracle_across_pattern_classes() {
+    let mut stencil = stencil_2d(14, 14);
+    randomize_values(&mut stencil, 3);
+    check_all_plans(&stencil, "stencil");
+
+    let pl = powerlaw(&PowerLawSpec {
+        n: 400,
+        nnz: 4_000,
+        row_alpha: 1.7,
+        col_alpha: 1.2,
+        max_row: 80,
+        seed: 5,
+    });
+    check_all_plans(&pl, "powerlaw");
+
+    let banded =
+        banded_runs(&BandedSpec { n: 300, mean_row: 9.0, run: 4, locality: 0.08, seed: 7 });
+    check_all_plans(&banded, "banded");
+}
+
+#[test]
+fn sharded_assembly_matches_the_oracle_on_edge_shapes() {
+    // Ragged with empty rows — including an empty first and last row, the
+    // shapes most likely to break row-pointer rebasing at a boundary.
+    let ragged = Csr::from_parts(
+        6,
+        5,
+        vec![0, 0, 3, 3, 3, 7, 7],
+        vec![0, 2, 4, 0, 1, 2, 3],
+        vec![1.0, -2.0, 3.0, 0.5, -0.25, 4.0, 8.0],
+    )
+    .expect("valid ragged CSR");
+    check_all_plans(&ragged, "ragged-empty-rows");
+
+    // Fewer rows than requested shards: every shard is a single row and
+    // the empty tail ranges must be dropped, not served.
+    let tiny = Csr::from_parts(3, 4, vec![0, 2, 2, 5], vec![0, 3, 1, 2, 3], vec![
+        1.0, 2.0, 3.0, 4.0, 5.0,
+    ])
+    .expect("valid tiny CSR");
+    let plan = plan_ranges(&tiny, &ShardConfig { threshold_nnz: 0, shards: 8 });
+    assert!(plan.len() <= tiny.nrows, "no shard may be empty");
+    assert!(plan.iter().all(|r| !r.is_empty()));
+    check_all_plans(&tiny, "single-row-shards");
+}
+
+#[test]
+fn shard_plans_are_deterministic_disjoint_and_covering() {
+    check(
+        "shard plan determinism & coverage",
+        |rng| {
+            let a = arb::csr(rng, 60, 6);
+            let shards = 1 + rng.usize_below(8);
+            (a, shards)
+        },
+        |(a, shards)| {
+            let config = ShardConfig { threshold_nnz: 0, shards: *shards };
+            let plan = plan_ranges(a, &config);
+            if plan != plan_ranges(a, &config) {
+                return Err("same matrix + config must give the same plan".into());
+            }
+            if plan.first().map(|r| r.start) != Some(0)
+                || plan.last().map(|r| r.end) != Some(a.nrows)
+            {
+                return Err(format!("plan {plan:?} does not span 0..{}", a.nrows));
+            }
+            for w in plan.windows(2) {
+                if w[0].end != w[1].start {
+                    return Err(format!("ranges {:?} and {:?} do not tile", w[0], w[1]));
+                }
+            }
+            if plan.len() > 1 && plan.iter().any(|r| r.is_empty()) {
+                return Err(format!("multi-shard plan {plan:?} contains an empty range"));
+            }
+            // Below the threshold the plan must degenerate to one range.
+            let off = ShardConfig { threshold_nnz: a.nnz() + 1, shards: *shards };
+            if plan_ranges(a, &off).len() != 1 {
+                return Err("below-threshold matrices must not shard".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sharded_assembly_property_on_random_ragged_matrices() {
+    check(
+        "sharded SpMV/SpMM assembly == oracle",
+        |rng| {
+            let a = arb::csr(rng, 50, 5);
+            let shards = SHARD_COUNTS[rng.usize_below(SHARD_COUNTS.len())];
+            let k = WIDTHS[rng.usize_below(WIDTHS.len())];
+            let x = arb::vector(rng, a.ncols * k);
+            (a, shards, k, x)
+        },
+        |(a, shards, k, x)| {
+            let plan = plan_ranges(a, &ShardConfig { threshold_nnz: 0, shards: *shards });
+            let want = if *k == 1 { a.spmv(x) } else { a.spmm(x, *k) };
+            let got = assemble(a, &plan, x, *k);
+            for (i, (u, v)) in got.iter().zip(&want).enumerate() {
+                if (u - v).abs() >= 1e-9 * (1.0 + v.abs()) {
+                    return Err(format!("row-element {i}: {u} vs oracle {v}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn csr_decision(workload: Workload) -> TunedConfig {
+    TunedConfig {
+        workload,
+        format: Format::Csr,
+        ordering: Ordering::Natural,
+        policy: Policy::StaticBlock,
+        threads: 1,
+        variant: None,
+        gflops: 1.0,
+        source: "model".into(),
+        tuned_at: 0,
+    }
+}
+
+#[test]
+fn shard_engine_serves_concurrent_requests_with_hand_built_seeds() {
+    let mut a = stencil_2d(16, 16);
+    randomize_values(&mut a, 9);
+    let a = Arc::new(a);
+    let plan = plan_ranges(&a, &ShardConfig { threshold_nnz: 0, shards: 3 });
+    assert!(plan.len() >= 2, "a 256-row stencil must split");
+    let seeds: Vec<ShardSeed> = plan
+        .iter()
+        .enumerate()
+        .map(|(idx, r)| ShardSeed {
+            name: shard_name("hand", idx),
+            range: r.clone(),
+            a: Arc::new(row_slice(&a, r)),
+            spmv: csr_decision(Workload::Spmv),
+            spmm: csr_decision(Workload::Spmm { k: 4 }),
+        })
+        .collect();
+    let engine =
+        ShardEngine::start(seeds, 4, Duration::from_millis(1), false, Telemetry::new());
+    assert_eq!(engine.shards(), plan.len());
+
+    // Many requests in flight at once: batching may fuse any subset on
+    // any shard; every response must still be that request's oracle.
+    let inputs: Vec<Vec<f64>> = (0..10).map(|i| random_vector(a.ncols, 20 + i)).collect();
+    let submissions: Vec<_> =
+        inputs.iter().map(|x| engine.submit(x.clone()).expect("submit")).collect();
+    for (x, s) in inputs.iter().zip(submissions) {
+        let resp = s.recv().expect("healthy shards must answer");
+        assert_close(&resp.y, &a.spmv(x), "hand-seeded shard engine");
+    }
+    engine.shutdown();
+}
+
+fn sharded_fleet(shards: usize) -> Fleet {
+    let tuner = Tuner::new(TunerConfig::model_only(), TuningCache::in_memory());
+    let config = FleetConfig {
+        shard: ShardConfig { threshold_nnz: 0, shards },
+        retune: RetuneConfig { enabled: false, ..RetuneConfig::default() },
+        ..FleetConfig::default()
+    };
+    Fleet::new(config, tuner)
+}
+
+#[test]
+fn fleet_with_forced_sharding_serves_spmv_and_fused_batches() {
+    let fleet = sharded_fleet(3);
+    let mut a = stencil_2d(18, 18);
+    randomize_values(&mut a, 13);
+    let a = Arc::new(a);
+    fleet.register("big", a.clone()).unwrap();
+    assert!(fleet.shard_count("big").unwrap() >= 2);
+
+    // 17 concurrent submissions: wider than the default ladder top, so
+    // fused batches of every width the batcher picks are exercised.
+    let inputs: Vec<Vec<f64>> = (0..17).map(|i| random_vector(a.ncols, 40 + i)).collect();
+    let submissions: Vec<_> =
+        inputs.iter().map(|x| fleet.submit("big", x.clone()).expect("submit")).collect();
+    for (x, s) in inputs.iter().zip(submissions) {
+        let resp = s.recv().expect("submission must be answered");
+        assert_close(&resp.y, &a.spmv(x), "sharded fleet");
+    }
+    let stats = fleet.shutdown();
+    assert_eq!(stats.served(), 17 * fleet_parts(&a));
+}
+
+/// Served-request accounting is per engine: a sharded entry counts one
+/// served request per shard per submission.
+fn fleet_parts(a: &Csr) -> usize {
+    plan_ranges(a, &ShardConfig { threshold_nnz: 0, shards: 3 }).len()
+}
+
+#[test]
+fn shard_fault_does_not_poison_the_fleet_and_recovery_serves() {
+    let fleet = sharded_fleet(2);
+    let mut a = stencil_2d(16, 16);
+    randomize_values(&mut a, 17);
+    let a = Arc::new(a);
+    let mut b = stencil_2d(12, 12);
+    randomize_values(&mut b, 19);
+    let b = Arc::new(b);
+    fleet.register("victim", a.clone()).unwrap();
+    fleet.register("bystander", b.clone()).unwrap();
+    assert!(fleet.shard_count("victim").unwrap() >= 2);
+
+    // Healthy baseline.
+    let x = random_vector(a.ncols, 23);
+    assert_close(&fleet.call("victim", x.clone()).unwrap().y, &a.spmv(&x), "pre-fault");
+
+    // Kill shard 0 mid-batch and wait for its loop to die.
+    fleet.inject_shard_fault("victim", 0).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while fleet.shard_failed("victim", 0) != Some(true) {
+        assert!(Instant::now() < deadline, "faulted shard worker must exit");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // The faulted entry reports an explicit error — never a hang, never
+    // a wrong partial answer.
+    let x = random_vector(a.ncols, 29);
+    let err = fleet.call("victim", x).expect_err("a dead shard must surface an error");
+    assert!(
+        err.to_string().contains("shard"),
+        "error should name the shard failure, got: {err}"
+    );
+
+    // Peers are unaffected: the other entry keeps serving correctly.
+    let xb = random_vector(b.ncols, 31);
+    assert_close(&fleet.call("bystander", xb.clone()).unwrap().y, &b.spmv(&xb), "bystander");
+
+    // The journal + counter recorded the fault.
+    let t = fleet.telemetry();
+    assert!(t.journal.counts().iter().any(|(k, n)| *k == "shard_fault" && *n >= 1));
+    assert!(t.metrics.counter(phi_spmv::telemetry::names::SHARD_FAULTS).get() >= 1);
+
+    // Re-materialization rebuilds the dead engine from its seeds — no
+    // re-search — and the entry serves correctly again.
+    let (_, misses_before) = fleet.tuner_counters();
+    fleet.recover("victim").unwrap();
+    let (_, misses_after) = fleet.tuner_counters();
+    assert_eq!(misses_after, misses_before, "recovery must not re-search");
+    assert_eq!(fleet.shard_failed("victim", 0), Some(false));
+    let x = random_vector(a.ncols, 37);
+    assert_close(&fleet.call("victim", x.clone()).unwrap().y, &a.spmv(&x), "post-recovery");
+    fleet.shutdown();
+}
