@@ -17,10 +17,18 @@
 //! in. Every fleet event (registrations with decisions, evictions,
 //! re-materializations, width moves, the re-tune) is printed as it
 //! drains.
+//!
+//! Tracing rides along: `--trace N` samples one request in N (default 1
+//! — every request; 0 turns tracing off) and the mixed-traffic burst's
+//! causal trees (request → per-shard legs → batch → kernel) are written
+//! to `TRACE_fleet.json`, loadable as-is in <https://ui.perfetto.dev>
+//! or `chrome://tracing`. The closing report places every entry's served
+//! paths on the startup-calibrated machine roofline.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use phi_spmv::fleet::shard::ShardConfig;
 use phi_spmv::fleet::{
     Admission, BatchConfig, Fleet, FleetConfig, Intake, RetuneConfig, TenantBudget,
 };
@@ -32,7 +40,7 @@ use phi_spmv::sparse::gen::stencil::stencil_2d;
 use phi_spmv::sparse::gen::{random_vector, randomize_values, Rng};
 use phi_spmv::sparse::Csr;
 use phi_spmv::telemetry::{
-    names, prometheus_text, validate_prometheus, Telemetry, TelemetrySnapshot,
+    names, prometheus_text, validate_prometheus, MachineRoofline, Telemetry, TelemetrySnapshot,
 };
 use phi_spmv::tuner::{Tuner, TunerConfig, TuningCache};
 use phi_spmv::util::cli::Args;
@@ -85,6 +93,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let requests = args.get("requests", 600usize);
     let entries = args.get("entries", 9usize).max(2);
+    let trace = args.get("trace", 1u64);
 
     let mats = population(entries);
     let total_bytes: usize = mats.iter().map(|(_, a)| a.storage_bytes()).sum();
@@ -107,6 +116,19 @@ fn main() -> anyhow::Result<()> {
     // and the fleet's own event journal — the closing report and the
     // exported snapshot cover the whole fleet.
     let telemetry = Telemetry::new();
+    // Calibrate the machine roofline before any kernel runs: achieved
+    // GB/s and GFlop/s gauges, kernel-span annotations, and the closing
+    // per-entry verdicts are all priced against these measured peaks.
+    let roof = MachineRoofline::calibrate();
+    telemetry.set_roofline(roof);
+    println!(
+        "roofline: peak read {:.1} GB/s | random-access latency {:.0} ns | flop ceiling \
+         {:.1} GFlop/s",
+        roof.peak_read_gbps, roof.random_latency_ns, roof.peak_gflops,
+    );
+    // 1-in-N request sampling (0 = off); traced requests carry their
+    // full causal tree into TRACE_fleet.json below.
+    telemetry.tracer.set_sample_every(trace);
     let fleet = Fleet::new(
         FleetConfig {
             memory_budget_bytes: budget,
@@ -117,6 +139,9 @@ fn main() -> anyhow::Result<()> {
                 ..RetuneConfig::default()
             },
             batch: BatchConfig { min_samples: 12, ..BatchConfig::default() },
+            // Shard the larger matrices so the traces show real fan-out:
+            // a request to a sharded entry fans into one span per leg.
+            shard: ShardConfig { threshold_nnz: 20_000, shards: 2 },
             telemetry: telemetry.clone(),
             ..FleetConfig::default()
         },
@@ -171,6 +196,21 @@ fn main() -> anyhow::Result<()> {
     println!("{served} requests in {wall:.2}s = {:.0} req/s", served as f64 / wall);
     drain_and_print(&fleet);
 
+    // Export the burst's causal traces now, while every sampled tree is
+    // still complete — the drift phase below sends enough extra traffic
+    // to start evicting the oldest spans from the bounded buffer.
+    if trace > 0 {
+        let tstats = telemetry.tracer.stats();
+        telemetry.tracer.write_chrome("TRACE_fleet.json")?;
+        println!(
+            "traces: {} requests sampled (1-in-{trace}), {} spans, {} evicted → \
+             TRACE_fleet.json (load in ui.perfetto.dev or chrome://tracing)",
+            tstats.sampled, tstats.spans, tstats.dropped,
+        );
+    } else {
+        println!("tracing off (--trace 0)");
+    }
+
     // Drift injection: inflate one hot entry's recorded throughput so
     // the background thread must re-tune and hot-swap it under load.
     let victim = hot[0];
@@ -224,6 +264,49 @@ fn main() -> anyhow::Result<()> {
     );
     anyhow::ensure!(stats.evictions > 0, "the budget was sized to force evictions");
     anyhow::ensure!(stats.retunes > 0, "the injected drift must have been re-tuned");
+
+    // Per-entry roofline verdicts: modeled bytes over measured kernel
+    // time, against the peaks calibrated at startup. Sparse multiplies
+    // live under the roofs (latency- or bandwidth-bound) — a
+    // compute-bound verdict here would mean the bytes model broke.
+    println!("— roofline attribution (per entry) —");
+    println!(
+        "machine: read {:.1} GB/s | latency {:.0} ns | compute {:.1} GFlop/s | knee \
+         {:.2} flop/B",
+        roof.peak_read_gbps,
+        roof.random_latency_ns,
+        roof.peak_gflops,
+        roof.knee_flops_per_byte(),
+    );
+    for e in &stats.entries {
+        for (label, s, bound) in
+            [("spmv", &e.spmv, &e.spmv_bound), ("spmm", &e.spmm, &e.spmm_bound)]
+        {
+            if s.batches == 0 {
+                continue;
+            }
+            let gbps = roof.cap_gbps(s.achieved_gbps());
+            let verdict = bound.as_deref().unwrap_or("uncalibrated");
+            println!(
+                "{:<16} {label}: {gbps:>6.2} GB/s ({:>4.0}% of peak), {:>6.2} GFlop/s → \
+                 {verdict}",
+                e.id,
+                100.0 * gbps / roof.peak_read_gbps.max(1e-12),
+                s.gflops().min(roof.peak_gflops),
+            );
+            anyhow::ensure!(
+                gbps <= roof.peak_read_gbps + 1e-9,
+                "achieved bandwidth must never exceed the calibrated peak"
+            );
+            // SpMV moves ~6 bytes per flop — it cannot reach any
+            // machine's flop ceiling. (Wide fused SpMM on a scalar-only
+            // host legitimately can, so only the SpMV verdict is gated.)
+            anyhow::ensure!(
+                label != "spmv" || verdict != "compute-bound",
+                "SpMV cannot saturate the flop ceiling"
+            );
+        }
+    }
 
     // Closing telemetry report: latency attribution across every entry,
     // the shared pool's utilization, and the event journal's accounting.

@@ -1,17 +1,27 @@
-//! Micro-benchmarks (paper Fig. 1 / Fig. 2).
+//! Micro-benchmarks (paper Fig. 1 / Fig. 2) plus roofline calibration.
 //!
 //! Measured: host read/write bandwidth with the same kernels the paper
-//! uses (char sum, vectorized f64 sum, fill), across thread counts.
-//! Modeled: the calibrated KNC curves at the paper's sweep points.
+//! uses (char sum, vectorized f64 sum, fill), across thread counts, and
+//! the full [`MachineRoofline`] calibration pass (streaming-read peak,
+//! pointer-chase latency, multiply-add ceiling). Modeled: the calibrated
+//! KNC curves at the paper's sweep points.
 //!
-//! `cargo bench --bench bench_microbench`
+//! `cargo bench --bench bench_microbench [-- --scale 1.0]` writes
+//! `BENCH_microbench.json` with the calibrated peak read GB/s,
+//! random-access latency in ns, and the per-ISA flop-ceiling table.
 
 use phi_spmv::kernels::micro::{
     host_fill, host_sum_bytes, host_sum_f64, model_read, model_write, ReadBench, WriteBench,
 };
+use phi_spmv::kernels::simd::IsaLevel;
+use phi_spmv::telemetry::MachineRoofline;
 use phi_spmv::util::bench::Bencher;
+use phi_spmv::util::cli::Args;
+use phi_spmv::util::json::Json;
 
 fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = args.get("scale", 1.0f64);
     let bencher = Bencher::new(3, 10);
     let max_threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
 
@@ -52,4 +62,34 @@ fn main() {
         let g: Vec<f64> = (1..=4).map(|t| model_write(b, 61, t).gbps).collect();
         println!("{name:<22} {:>8.1} {:>8.1} {:>8.1} {:>8.1}", g[0], g[1], g[2], g[3]);
     }
+
+    // The same calibration pass the serving examples install at startup
+    // (telemetry::MachineRoofline), exported so CI can gate "achieved
+    // never exceeds peak" against a figure measured on the same runner.
+    println!("\n== measured: machine roofline calibration (scale {scale}) ==");
+    let roof = MachineRoofline::calibrate_scaled(scale);
+    let detected = IsaLevel::detect();
+    println!("peak streaming read   {:>10.2} GB/s", roof.peak_read_gbps);
+    println!("random-access latency {:>10.1} ns", roof.random_latency_ns);
+    println!("roofline knee         {:>10.3} flop/B", roof.knee_flops_per_byte());
+    println!("flop ceiling ({}: measured; others projected)", detected.name());
+    let mut ceilings = Json::obj();
+    for isa in [IsaLevel::Portable, IsaLevel::Avx2, IsaLevel::Avx512] {
+        let mark = if isa == detected { " *" } else { "" };
+        println!("  {:<10} {:>10.2} GFlop/s{mark}", isa.name(), roof.flop_ceiling(isa));
+        ceilings = ceilings.set(isa.name(), roof.flop_ceiling(isa));
+    }
+
+    let report = Json::obj()
+        .set("bench", "microbench")
+        .set("threads", max_threads)
+        .set("scale", scale)
+        .set("peak_read_gbps", roof.peak_read_gbps)
+        .set("random_latency_ns", roof.random_latency_ns)
+        .set("knee_flops_per_byte", roof.knee_flops_per_byte())
+        .set("detected_isa", detected.name())
+        .set("flop_ceiling_gflops", ceilings);
+    let path = "BENCH_microbench.json";
+    std::fs::write(path, report.to_pretty()).expect("writing BENCH_microbench.json");
+    println!("\nwrote {path}");
 }

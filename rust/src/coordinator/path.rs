@@ -34,8 +34,11 @@ use crate::kernels::simd::{format_family, vectorized_for, IsaLevel};
 use crate::sched::Policy;
 use crate::sparse::Csr;
 use crate::telemetry::metrics::Counter;
-use crate::telemetry::{names, Phases, ServeTimers, Telemetry};
+use crate::telemetry::{
+    names, Boundedness, MachineRoofline, Phases, ServeTimers, SpanCtx, Telemetry,
+};
 use crate::tuner::{Candidate, Format, Ordering, TunedConfig};
+use crate::util::json::Json;
 
 use super::server::ServerConfig;
 
@@ -149,6 +152,12 @@ pub struct PathStats {
     /// Workload the executing configuration was tuned for (`"spmv"` on a
     /// batch path means batches reused a single-vector decision).
     pub workload: String,
+    /// Bytes the path's batches *must* have moved under the analytic
+    /// compulsory-traffic model
+    /// ([`crate::kernels::SpmvOp::bytes_moved`]), summed per batch.
+    /// Divide by [`PathStats::compute_s`] for the path's modeled
+    /// achieved bandwidth.
+    pub bytes_modeled: f64,
 }
 
 impl PathStats {
@@ -159,6 +168,28 @@ impl PathStats {
         } else {
             self.flops / self.compute_s.max(1e-12) / 1e9
         }
+    }
+
+    /// Modeled achieved bandwidth over the path's kernel busy time,
+    /// GB/s; 0 when the path never ran. Uncapped — callers holding a
+    /// calibrated roofline clamp with
+    /// [`MachineRoofline::cap_gbps`] before reporting.
+    pub fn achieved_gbps(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.bytes_modeled / self.compute_s.max(1e-12) / 1e9
+        }
+    }
+
+    /// Places the path on a calibrated roofline: achieved bandwidth
+    /// (peak-capped) and throughput (ceiling-capped) against the
+    /// machine's peaks.
+    pub fn classify(&self, roofline: &MachineRoofline) -> Boundedness {
+        roofline.classify(
+            roofline.cap_gbps(self.achieved_gbps()),
+            self.gflops().min(roofline.peak_gflops),
+        )
     }
 
     /// Folds `other`'s counters into `self` (the fleet uses this to carry
@@ -173,6 +204,7 @@ impl PathStats {
         self.queue_s += other.queue_s;
         self.barrier_s += other.barrier_s;
         self.kernel_s += other.kernel_s;
+        self.bytes_modeled += other.bytes_modeled;
         if !other.format.is_empty() {
             self.format = other.format.clone();
             self.ordering = other.ordering.clone();
@@ -230,6 +262,7 @@ struct PathCounters {
     served: usize,
     flops: f64,
     compute_s: f64,
+    bytes_modeled: f64,
     phases: Phases,
     swaps: usize,
     window: PathWindow,
@@ -311,6 +344,7 @@ impl Path {
             state.op.spmv_into(x, y, &ctx);
         }
         let compute = t0.elapsed().as_secs_f64();
+        let bytes = state.op.bytes_moved(k) as f64;
         drop(state);
         let flops = 2.0 * self.nnz as f64 * k as f64;
         let mut c = self.counters.lock().unwrap();
@@ -318,6 +352,7 @@ impl Path {
         c.served += k;
         c.flops += flops;
         c.compute_s += compute;
+        c.bytes_modeled += bytes;
         c.phases.queue_s += queue_s_total;
         c.phases.barrier_s += barrier * k as f64;
         c.phases.kernel_s += compute * k as f64;
@@ -371,6 +406,7 @@ impl Path {
             format,
             ordering,
             workload,
+            bytes_modeled: c.bytes_modeled,
         }
     }
 
@@ -396,11 +432,14 @@ enum Msg {
     Stop,
 }
 
-/// One in-flight request: the input vector and a completion channel.
+/// One in-flight request: the input vector, a completion channel, and —
+/// when the request is being traced — the span to parent the engine's
+/// batch/kernel spans under.
 struct Request {
     x: Vec<f64>,
     enqueued: Instant,
     reply: mpsc::Sender<Response>,
+    trace: Option<SpanCtx>,
 }
 
 /// A served response.
@@ -428,9 +467,21 @@ pub struct SpmvClient {
 impl SpmvClient {
     /// Submits a request; returns a receiver for the response.
     pub fn submit(&self, x: Vec<f64>) -> anyhow::Result<mpsc::Receiver<Response>> {
+        self.submit_traced(x, None)
+    }
+
+    /// [`SpmvClient::submit`] with an optional trace span: when `trace`
+    /// is set, the engine records "batch" and "kernel" spans for this
+    /// request under it, so a sampled request's timeline continues
+    /// inside the serving loop.
+    pub fn submit_traced(
+        &self,
+        x: Vec<f64>,
+        trace: Option<SpanCtx>,
+    ) -> anyhow::Result<mpsc::Receiver<Response>> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
-            .send(Msg::Req(Request { x, enqueued: Instant::now(), reply: reply_tx }))
+            .send(Msg::Req(Request { x, enqueued: Instant::now(), reply: reply_tx, trace }))
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         Ok(reply_rx)
     }
@@ -677,6 +728,21 @@ fn engine_loop(
                 .counter(&names::kernel_ns_variant(family, variant))
                 .add((spans.kernel_s * 1e9) as u64);
         }
+        // Roofline attribution: the batch's modeled compulsory traffic
+        // over its kernel time is the family's achieved bandwidth. The
+        // exported gauges are capped at the calibrated peaks — a
+        // cache-resident payload streams faster than DRAM, which would
+        // put the point above the roof — while the raw figure still
+        // rides in the kernel span's args.
+        let bytes = path.payload().bytes_moved(k);
+        let raw_gbps = bytes as f64 / spans.kernel_s.max(1e-12) / 1e9;
+        let raw_gflops = 2.0 * a.nnz() as f64 * k as f64 / spans.kernel_s.max(1e-12) / 1e9;
+        let (gbps, gflops) = match telem.telemetry.roofline() {
+            Some(roof) => (roof.cap_gbps(raw_gbps), raw_gflops.min(roof.peak_gflops)),
+            None => (raw_gbps, raw_gflops),
+        };
+        telem.telemetry.metrics.gauge(&names::roofline_gbps(family)).set(gbps);
+        telem.telemetry.metrics.gauge(&names::roofline_gflops(family)).set(gflops);
 
         for (u, req) in batch.into_iter().enumerate() {
             let phases = Phases {
@@ -687,6 +753,39 @@ fn engine_loop(
             let latency = done.saturating_duration_since(req.enqueued);
             telem.timers.record(latency, &phases);
             telem.requests.inc();
+            // A traced rider gets the batch's timeline attached to its
+            // own trace: a "batch" span covering drain → reply and a
+            // "kernel" child covering the compute itself. Riders of one
+            // shared batch each carry a full copy — every trace is
+            // self-contained.
+            if let Some(ctx) = req.trace {
+                let tracer = &telem.telemetry.tracer;
+                let batch_span = tracer.record_span(
+                    ctx,
+                    "batch",
+                    drained,
+                    done.saturating_duration_since(drained).as_secs_f64(),
+                    vec![("width".to_string(), Json::from(k))],
+                );
+                let kernel_start = drained + Duration::from_secs_f64(spans.barrier_s);
+                tracer.record_span(
+                    batch_span,
+                    "kernel",
+                    kernel_start,
+                    spans.kernel_s,
+                    vec![
+                        ("format".to_string(), Json::from(fmt.as_str())),
+                        (
+                            "variant".to_string(),
+                            Json::from(spec.variant.as_deref().unwrap_or("generic")),
+                        ),
+                        ("gbps".to_string(), Json::from(gbps)),
+                        ("raw_gbps".to_string(), Json::from(raw_gbps)),
+                        ("gflops".to_string(), Json::from(gflops)),
+                        ("bytes".to_string(), Json::from(bytes)),
+                    ],
+                );
+            }
             let yi: Vec<f64> = (0..a.nrows).map(|i| y[i * k + u]).collect();
             let _ = req.reply.send(Response { y: yi, latency, phases, batch_size: k });
         }
@@ -786,5 +885,61 @@ mod tests {
         let (spmv, spmm) = engine.shutdown();
         assert_eq!(spmv.served, 1);
         assert_eq!(spmm.served, 0);
+    }
+
+    #[test]
+    fn stats_model_bytes_and_place_the_path_on_a_roofline() {
+        let a = matrix();
+        let path = path_over(&a, Format::Csr);
+        let x = random_vector(a.ncols, 7);
+        let mut y = vec![0.0; a.nrows];
+        path.execute(&x, &mut y, 1);
+        path.execute(&x, &mut y, 1);
+        let stats = path.stats();
+        let per_batch = path.payload().bytes_moved(1) as f64;
+        assert!((stats.bytes_modeled - 2.0 * per_batch).abs() < 1e-6);
+        assert!(stats.achieved_gbps() > 0.0);
+        // Roofline with a sky-high flop ceiling: the path cannot be
+        // compute-bound; a tiny bandwidth peak forces bandwidth-bound.
+        let roof = MachineRoofline {
+            peak_read_gbps: 1e-6,
+            random_latency_ns: 100.0,
+            peak_gflops: 1e9,
+        };
+        assert_eq!(stats.classify(&roof), Boundedness::Bandwidth);
+        // Absorbing carries the modeled bytes along.
+        let mut merged = PathStats::default();
+        merged.absorb(&stats);
+        merged.absorb(&stats);
+        assert!((merged.bytes_modeled - 2.0 * stats.bytes_modeled).abs() < 1e-6);
+    }
+
+    #[test]
+    fn traced_submission_records_batch_and_kernel_spans() {
+        let a = matrix();
+        let config = ServerConfig::default();
+        let telemetry = config.telemetry.clone();
+        telemetry.tracer.set_sample_every(1);
+        let engine = Engine::start(a.clone(), config);
+        let root = telemetry.tracer.root("request", None).expect("sampling at 1-in-1");
+        let ctx = root.ctx();
+        let x = random_vector(a.ncols, 11);
+        let resp = engine.client().submit_traced(x, Some(ctx)).unwrap().recv().unwrap();
+        assert_eq!(resp.batch_size, 1);
+        telemetry.tracer.finish(root);
+        engine.shutdown();
+        let spans = telemetry.tracer.spans();
+        let batch = spans
+            .iter()
+            .find(|s| s.name == "batch")
+            .expect("traced request must record a batch span");
+        assert_eq!(batch.parent, Some(ctx.span));
+        assert_eq!(batch.trace, ctx.trace);
+        let kernel = spans
+            .iter()
+            .find(|s| s.name == "kernel")
+            .expect("traced request must record a kernel span");
+        assert_eq!(kernel.parent, Some(batch.span));
+        assert!(kernel.args.iter().any(|(k, _)| k == "gbps"));
     }
 }

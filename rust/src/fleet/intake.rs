@@ -45,7 +45,7 @@ use crate::coordinator::server::percentile;
 use crate::coordinator::Response;
 use crate::fleet::registry::Fleet;
 use crate::fleet::shard::Submission;
-use crate::telemetry::{names, EventKind, Telemetry};
+use crate::telemetry::{names, ActiveSpan, EventKind, Telemetry};
 
 /// Per-tenant admission budget and latency objective. A tenant is one
 /// fleet entry (the entry id is the tenant id).
@@ -243,6 +243,11 @@ pub struct Ticket {
     bytes: usize,
     enqueued: Instant,
     telemetry: Arc<Telemetry>,
+    /// The request's root span when it is traced — the intake owns the
+    /// root (it opened it before admission), so the root closes here,
+    /// covering admission → assembled answer. Abandoned or failed
+    /// tickets drop it: traces only contain completed requests.
+    root: Option<ActiveSpan>,
 }
 
 impl Ticket {
@@ -260,6 +265,9 @@ impl Ticket {
                 .metrics
                 .histogram(&names::tenant_latency(&self.tenant_id))
                 .record_duration(latency);
+            if let Some(root) = self.root.take() {
+                self.telemetry.tracer.finish(root);
+            }
         }
         result
     }
@@ -340,6 +348,11 @@ impl Intake {
         let bytes = x.len() * std::mem::size_of::<f64>();
         let budget = tenant.budget.lock().unwrap().clone();
         let telemetry = self.fleet.telemetry();
+        // The trace's sampling decision happens at the door — before
+        // admission — so shed requests are traceable too. Tenants under
+        // SLO violation are force-sampled (see [`Intake::maintain`]).
+        let root = telemetry.tracer.root("request", Some(tenant_id));
+        let admission = root.as_ref().map(|r| telemetry.tracer.child(r.ctx(), "admission"));
         if let Err(reason) = tenant.reserve(bytes, &budget) {
             tenant.shed.fetch_add(1, Ordering::Relaxed);
             tenant.shed_since.fetch_add(1, Ordering::Relaxed);
@@ -349,15 +362,27 @@ impl Intake {
                 reason: reason.as_str(),
                 inflight: tenant.inflight.load(Ordering::Relaxed),
             });
+            // A shed is a completed (if short) request: its trace is the
+            // admission span with the shed verdict, closed right here.
+            if let (Some(mut adm), Some(r)) = (admission, root) {
+                adm.arg("verdict", reason.as_str());
+                telemetry.tracer.finish(adm);
+                telemetry.tracer.finish(r);
+            }
             return Ok(Admission::Shed { reason });
         }
-        let submission = match self.fleet.submit(tenant_id, x) {
+        let trace = root.as_ref().map(ActiveSpan::ctx);
+        let submission = match self.fleet.submit_traced(tenant_id, x, trace) {
             Ok(s) => s,
             Err(e) => {
                 tenant.release(bytes);
                 return Err(e);
             }
         };
+        if let Some(mut adm) = admission {
+            adm.arg("verdict", "admitted");
+            telemetry.tracer.finish(adm);
+        }
         tenant.admitted.fetch_add(1, Ordering::Relaxed);
         telemetry.metrics.counter(names::INTAKE_ADMITTED).inc();
         Ok(Admission::Admitted(Ticket {
@@ -367,6 +392,7 @@ impl Intake {
             bytes,
             enqueued: Instant::now(),
             telemetry,
+            root,
         }))
     }
 
@@ -403,19 +429,27 @@ impl Intake {
                     target_s: budget.p99_target.as_secs_f64(),
                     samples: window.len(),
                 });
+                // Force-trace the violating tenant: every one of its
+                // requests is captured until a pass finds it compliant
+                // again, so the evidence for *why* p99 blew the target
+                // is in the trace, not just the histogram.
+                telemetry.tracer.force(&id);
                 let _ = self.fleet.nudge_width_for_slo(
                     &id,
                     false,
                     p99.as_secs_f64(),
                     budget.p99_target.as_secs_f64(),
                 );
-            } else if sheds > 0 {
-                let _ = self.fleet.nudge_width_for_slo(
-                    &id,
-                    true,
-                    p99.as_secs_f64(),
-                    budget.p99_target.as_secs_f64(),
-                );
+            } else {
+                telemetry.tracer.unforce(&id);
+                if sheds > 0 {
+                    let _ = self.fleet.nudge_width_for_slo(
+                        &id,
+                        true,
+                        p99.as_secs_f64(),
+                        budget.p99_target.as_secs_f64(),
+                    );
+                }
             }
         }
     }

@@ -28,7 +28,7 @@ use crate::coordinator::path::{Path, PathSpec, PathStats, Response};
 use crate::kernels::op::SpmvOp;
 use crate::kernels::Workload;
 use crate::sparse::{Csr, MatrixStats};
-use crate::telemetry::{names, EventKind, Subscriber, Telemetry};
+use crate::telemetry::{names, ActiveSpan, EventKind, SpanCtx, Subscriber, Telemetry};
 use crate::tuner::exec::prepare_owned_candidate;
 use crate::tuner::{TunedConfig, Tuner};
 
@@ -231,6 +231,12 @@ pub struct EntryReport {
     pub spmv: PathStats,
     /// Fused-batch path stats.
     pub spmm: PathStats,
+    /// Roofline verdict for the SpMV path ("latency-bound" /
+    /// "bandwidth-bound" / "compute-bound"); `None` when the machine
+    /// roofline is uncalibrated or the path never ran.
+    pub spmv_bound: Option<String>,
+    /// Roofline verdict for the SpMM path, same convention.
+    pub spmm_bound: Option<String>,
 }
 
 /// Fleet-wide statistics. Aggregates are sums over the entries' per-path
@@ -472,16 +478,41 @@ impl Fleet {
     /// re-prepared from its kept seeds — no re-search), which may evict
     /// the least-recently-used peers.
     pub fn submit(&self, id: &str, x: Vec<f64>) -> anyhow::Result<Submission> {
+        self.submit_traced(id, x, None)
+    }
+
+    /// [`Fleet::submit`] under a trace. With `parent` set, the shard
+    /// fan-out continues the caller's trace (the intake path does this —
+    /// it already opened the request's root). With `None`, the fleet
+    /// itself makes the sampling decision and, for sampled requests,
+    /// mints a "request" root span (tenant = the entry id) that closes
+    /// when [`Submission::recv`] assembles the full response.
+    pub fn submit_traced(
+        &self,
+        id: &str,
+        x: Vec<f64>,
+        parent: Option<SpanCtx>,
+    ) -> anyhow::Result<Submission> {
         let entry = self.inner.entry(id)?;
         self.inner.touch(&entry);
         entry.tracker.lock().unwrap().record();
-        let (submission, was_cold, bytes) = self.inner.submit_to(&entry, x);
+        let telemetry = &self.inner.config.telemetry;
+        let root = match parent {
+            Some(_) => None,
+            None => telemetry.tracer.root("request", Some(id)),
+        };
+        let ctx = parent.or_else(|| root.as_ref().map(ActiveSpan::ctx));
+        let (submission, was_cold, bytes) = self.inner.submit_to(&entry, x, ctx);
         if was_cold {
             self.inner.rematerializations.fetch_add(1, AtomicOrdering::Relaxed);
             self.inner.push_event(EventKind::Rematerialized { id: entry.id.clone(), bytes });
             self.inner.enforce_budget(&entry.id);
         }
-        submission
+        let mut submission = submission?;
+        if let Some(root) = root {
+            submission.attach_root(telemetry.clone(), root);
+        }
+        Ok(submission)
     }
 
     /// Submits and waits.
@@ -761,6 +792,7 @@ impl Fleet {
     pub fn stats(&self) -> FleetStats {
         let entries: Vec<Arc<FleetEntry>> =
             self.inner.entries.lock().unwrap().values().cloned().collect();
+        let roofline = self.inner.config.telemetry.roofline();
         let mut reports = Vec::with_capacity(entries.len());
         for e in &entries {
             let (mut spmv, mut spmm) = e.retired.lock().unwrap().clone();
@@ -776,6 +808,12 @@ impl Fleet {
                     EntryState::Cold { .. } => (false, 0),
                 }
             };
+            let bound = |s: &PathStats| {
+                roofline
+                    .filter(|_| s.batches > 0)
+                    .map(|r| s.classify(&r).as_str().to_string())
+            };
+            let (spmv_bound, spmm_bound) = (bound(&spmv), bound(&spmm));
             reports.push(EntryReport {
                 id: e.id.clone(),
                 warm,
@@ -783,6 +821,8 @@ impl Fleet {
                 retunes: e.retunes.load(AtomicOrdering::Relaxed),
                 spmv,
                 spmm,
+                spmv_bound,
+                spmm_bound,
             });
         }
         FleetStats {
@@ -905,13 +945,14 @@ impl FleetInner {
         &self,
         entry: &FleetEntry,
         x: Vec<f64>,
+        trace: Option<SpanCtx>,
     ) -> (anyhow::Result<Submission>, bool, usize) {
         let mut state = entry.state.lock().unwrap();
         let (was_cold, bytes) = self.ensure_warm_locked(&mut state);
         let EntryState::Warm(w) = &*state else {
             unreachable!("ensure_warm_locked leaves the entry warm");
         };
-        (w.engine.submit(x), was_cold, bytes)
+        (w.engine.submit_traced(x, trace), was_cold, bytes)
     }
 
     /// Drops a warm entry's engine and payloads, folding its stats into

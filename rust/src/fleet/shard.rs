@@ -43,7 +43,7 @@ use crate::coordinator::path::{Engine, Path, PathStats, Response};
 use crate::coordinator::server::ServerConfig;
 use crate::sparse::partition::Partition;
 use crate::sparse::Csr;
-use crate::telemetry::{Phases, Telemetry};
+use crate::telemetry::{ActiveSpan, Phases, SpanCtx, Telemetry};
 use crate::tuner::TunedConfig;
 
 /// When and how much to shard.
@@ -159,6 +159,7 @@ pub struct ShardEngine {
     nrows: usize,
     ncols: usize,
     units: Vec<ShardUnit>,
+    telemetry: Arc<Telemetry>,
 }
 
 impl ShardEngine {
@@ -203,7 +204,7 @@ impl ShardEngine {
                 }
             })
             .collect();
-        ShardEngine { nrows, ncols, units }
+        ShardEngine { nrows, ncols, units, telemetry }
     }
 
     /// Number of shard engines.
@@ -216,6 +217,19 @@ impl ShardEngine {
     /// caller learns about it from [`Submission::recv`], and the healthy
     /// shards' work is unaffected.
     pub fn submit(&self, x: Vec<f64>) -> anyhow::Result<Submission> {
+        self.submit_traced(x, None)
+    }
+
+    /// [`ShardEngine::submit`] under a trace: when `parent` is set, the
+    /// fan-out opens one "shard" child span per shard (annotated with
+    /// the shard index and row range, closed when that shard's partial
+    /// reply is assembled in [`Submission::recv`]) and each shard's
+    /// engine continues the trace inside its batching loop.
+    pub fn submit_traced(
+        &self,
+        x: Vec<f64>,
+        parent: Option<SpanCtx>,
+    ) -> anyhow::Result<Submission> {
         anyhow::ensure!(
             x.len() == self.ncols,
             "request length {} != ncols {}",
@@ -234,10 +248,27 @@ impl ShardEngine {
                 } else {
                     x.as_ref().expect("x lives until the last shard").clone()
                 };
-                SubmissionPart { shard: i, range: u.range.clone(), rx: u.engine.client().submit(xi) }
+                let span = parent.map(|p| {
+                    let mut s = self.telemetry.tracer.child(p, "shard");
+                    s.arg("shard", i);
+                    s.arg("rows", format!("{}..{}", u.range.start, u.range.end));
+                    s
+                });
+                let trace = span.as_ref().map(ActiveSpan::ctx);
+                SubmissionPart {
+                    shard: i,
+                    range: u.range.clone(),
+                    rx: u.engine.client().submit_traced(xi, trace),
+                    span,
+                }
             })
             .collect();
-        Ok(Submission { nrows: self.nrows, parts })
+        Ok(Submission {
+            nrows: self.nrows,
+            parts,
+            telemetry: parent.map(|_| self.telemetry.clone()),
+            root: None,
+        })
     }
 
     /// The current batch-width cap (every unit shares one target).
@@ -382,6 +413,9 @@ struct SubmissionPart {
     shard: usize,
     range: Range<usize>,
     rx: anyhow::Result<mpsc::Receiver<Response>>,
+    /// Open "shard" span for this leg when the request is traced; closed
+    /// when the leg's partial reply lands in [`Submission::recv`].
+    span: Option<ActiveSpan>,
 }
 
 /// The response handle for one logical request: one receiver per shard,
@@ -390,9 +424,23 @@ struct SubmissionPart {
 pub struct Submission {
     nrows: usize,
     parts: Vec<SubmissionPart>,
+    /// Present only when the request is traced: the handle whose tracer
+    /// closes the per-shard spans (and the root, when attached).
+    telemetry: Option<Arc<Telemetry>>,
+    /// The request's root span, when the minting layer parked it here to
+    /// be closed at assembly time. Error paths drop open spans instead —
+    /// a trace only ever contains completed work.
+    root: Option<ActiveSpan>,
 }
 
 impl Submission {
+    /// Parks the request's root span on the handle; [`Submission::recv`]
+    /// closes it once the full response is assembled.
+    pub(crate) fn attach_root(&mut self, telemetry: Arc<Telemetry>, root: ActiveSpan) {
+        self.telemetry = Some(telemetry);
+        self.root = Some(root);
+    }
+
     /// Waits for every shard and assembles the full response. The
     /// reported latency is the slowest shard's (they run concurrently);
     /// phases and batch size are likewise the per-shard maxima. Errors —
@@ -400,12 +448,21 @@ impl Submission {
     /// replying.
     pub fn recv(self) -> anyhow::Result<Response> {
         let mut parts = self.parts;
+        let telemetry = self.telemetry;
+        let finish = |span: Option<ActiveSpan>| {
+            if let (Some(t), Some(s)) = (telemetry.as_ref(), span) {
+                t.tracer.finish(s);
+            }
+        };
         if parts.len() == 1 && parts[0].range.start == 0 {
             let part = parts.pop().expect("one part");
             let rx = part.rx?;
-            return rx.recv().map_err(|_| {
+            let resp = rx.recv().map_err(|_| {
                 anyhow::anyhow!("shard {} died before replying", part.shard)
-            });
+            })?;
+            finish(part.span);
+            finish(self.root);
+            return Ok(resp);
         }
         let mut y = vec![0.0f64; self.nrows];
         let mut latency = Duration::ZERO;
@@ -431,7 +488,9 @@ impl Submission {
             phases.barrier_s = phases.barrier_s.max(resp.phases.barrier_s);
             phases.kernel_s = phases.kernel_s.max(resp.phases.kernel_s);
             batch_size = batch_size.max(resp.batch_size);
+            finish(part.span);
         }
+        finish(self.root);
         Ok(Response { y, latency, phases, batch_size })
     }
 }

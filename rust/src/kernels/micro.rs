@@ -136,6 +136,73 @@ pub fn host_sum_f64(data: &[f64], nthreads: usize) -> f64 {
     })
 }
 
+/// Builds a single-cycle random permutation of `len` slots (Sattolo's
+/// algorithm over a fixed xorshift stream): interpreting the result as
+/// `next[i] = successor of i` yields one cycle visiting every slot, so a
+/// pointer chase over it is a chain of dependent loads with no exploitable
+/// locality — the paper's random-access latency probe.
+pub fn pointer_chase_cycle(len: usize, seed: u64) -> Vec<usize> {
+    let len = len.max(2);
+    let mut next: Vec<usize> = (0..len).collect();
+    let mut state = seed | 1;
+    let mut rand = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    for i in (1..len).rev() {
+        let j = (rand() % i as u64) as usize;
+        next.swap(i, j);
+    }
+    next
+}
+
+/// Follows `next` (a [`pointer_chase_cycle`]) for `steps` dependent hops
+/// from slot 0, returning the final slot so the loads can't be eliminated.
+/// Time a call and divide by `steps` for the average load-to-use latency of
+/// a cache-missing access.
+pub fn host_chase(next: &[usize], steps: usize) -> usize {
+    let mut i = 0usize;
+    for _ in 0..steps {
+        i = next[i];
+    }
+    i
+}
+
+/// Multiply-add throughput kernel: `nthreads` workers each run `iters`
+/// rounds of `a = a * m + c` over eight independent accumulators (enough
+/// parallelism to hide the FP latency chain and let the compiler
+/// vectorize), returning the checksum. Flops executed:
+/// `16 * iters * nthreads`. Time a call for the host's compute ceiling —
+/// the flat roof of the roofline model.
+pub fn host_mul_add(iters: u64, nthreads: usize) -> f64 {
+    let nthreads = nthreads.max(1);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..nthreads)
+            .map(|t| {
+                s.spawn(move || {
+                    let mut acc = [1.0 + t as f64 * 1e-3; 8];
+                    for (i, a) in acc.iter_mut().enumerate() {
+                        *a += i as f64 * 1e-4;
+                    }
+                    // Multiplier just under 1 keeps the values finite for
+                    // any iteration count.
+                    let m = 0.999_999_9f64;
+                    let c = 1e-7f64;
+                    for _ in 0..iters {
+                        for a in &mut acc {
+                            *a = *a * m + c;
+                        }
+                    }
+                    acc.iter().sum::<f64>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    })
+}
+
 /// Fills `data` with a value using `nthreads` (host write benchmark).
 pub fn host_fill(data: &mut [f64], value: f64, nthreads: usize) {
     let nthreads = nthreads.max(1);
@@ -230,5 +297,28 @@ mod tests {
         let mut buf = vec![0.0; 1000];
         host_fill(&mut buf, 3.5, 4);
         assert!(buf.iter().all(|&v| v == 3.5));
+    }
+
+    #[test]
+    fn pointer_chase_visits_every_slot_once() {
+        let next = pointer_chase_cycle(257, 42);
+        // Sattolo's shuffle yields a single cycle: chasing len hops from 0
+        // returns to 0 having visited every slot exactly once.
+        let mut seen = vec![false; next.len()];
+        let mut i = 0usize;
+        for _ in 0..next.len() {
+            assert!(!seen[i], "revisited slot {i} before the cycle closed");
+            seen[i] = true;
+            i = next[i];
+        }
+        assert_eq!(i, 0, "chase must close the cycle");
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(host_chase(&next, next.len()), 0);
+    }
+
+    #[test]
+    fn mul_add_probe_stays_finite() {
+        let sum = host_mul_add(10_000, 3);
+        assert!(sum.is_finite() && sum > 0.0, "{sum}");
     }
 }

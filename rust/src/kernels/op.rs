@@ -218,6 +218,37 @@ pub trait SpmvOp: Send + Sync {
     fn variant_name(&self) -> Option<&'static str> {
         None
     }
+    /// Analytic compulsory-traffic model: bytes one `Workload` execution
+    /// at width `k` must move, used by `telemetry::roofline` to compute
+    /// achieved GB/s and place the kernel on the machine roofline.
+    ///
+    /// The model is a *lower bound*: the payload is streamed exactly once
+    /// (`storage_bytes`, which already prices each format's own layout —
+    /// CSR's 12 B/nnz + row pointers, ELL's width-padding, BCSR's
+    /// explicit block zeros, HYB's ELL slab + COO tail, SELL-C-σ's
+    /// chunk-padding), plus the dense operands touched once per vector:
+    /// `8·ncols·k` for the `x` panel and `8·nrows·k` for the `y` write.
+    ///
+    /// Assumptions, per term:
+    /// * **payload** — read once front to back; true for every in-tree
+    ///   kernel (they are single-pass over the stored layout).
+    /// * **x-gather** — each `x` entry is fetched once and then served
+    ///   from cache, i.e. *perfect* reuse. The pessimistic bound is
+    ///   `8·nnz·k` (no reuse at all); real traffic lands between the two,
+    ///   which is exactly the latency-bound gap the roofline verdict
+    ///   surfaces. Reordering (RCM) narrows it; the model deliberately
+    ///   does not try to predict it.
+    /// * **y-write** — written once, no read-for-ownership accounted.
+    ///
+    /// Because the model is a lower bound, the derived achieved-GB/s
+    /// figure is conservative; cache-resident payloads can still exceed
+    /// DRAM peak, so exported figures are clamped by
+    /// [`MachineRoofline::cap_gbps`](crate::telemetry::MachineRoofline::cap_gbps).
+    fn bytes_moved(&self, k: usize) -> u64 {
+        let k = k.max(1);
+        (self.storage_bytes() + 8 * (self.ncols() + self.nrows()) * k) as u64
+    }
+
     /// SpMV: `y ← Ax`.
     fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>);
 
@@ -382,6 +413,9 @@ macro_rules! forward_spmv_op {
             fn variant_name(&self) -> Option<&'static str> {
                 (**self).variant_name()
             }
+            fn bytes_moved(&self, k: usize) -> u64 {
+                (**self).bytes_moved(k)
+            }
             fn spmv_into(&self, x: &[f64], y: &mut [f64], ctx: &ExecCtx<'_>) {
                 (**self).spmv_into(x, y, ctx)
             }
@@ -517,6 +551,20 @@ mod tests {
         for op in &ops {
             assert!(op.storage_bytes() > 0, "{}", op.format_name());
             assert_eq!((op.nrows(), op.ncols()), (a.nrows, a.ncols));
+        }
+    }
+
+    #[test]
+    fn bytes_moved_prices_payload_plus_dense_operands() {
+        let a = matrix();
+        let dense = 8 * (a.nrows + a.ncols);
+        for op in all_ops(&a) {
+            let b1 = op.bytes_moved(1);
+            assert_eq!(b1, (op.storage_bytes() + dense) as u64, "{}", op.format_name());
+            // Only the dense operand terms scale with k; the payload is
+            // streamed once regardless of width.
+            assert_eq!(op.bytes_moved(4) - b1, (3 * dense) as u64);
+            assert_eq!(op.bytes_moved(0), b1, "k=0 clamps to one vector");
         }
     }
 

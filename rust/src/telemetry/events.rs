@@ -148,6 +148,38 @@ pub enum EventKind {
         /// `"trial"` or `"model"`.
         source: String,
     },
+    /// The evidence behind a committed decision: why the winner won.
+    /// Published alongside [`EventKind::DecisionCommitted`] with the
+    /// runner-up's numbers, the decision source, and the winner's
+    /// position on the calibrated roofline (when one is installed).
+    DecisionExplained {
+        /// Matrix name the decision is for.
+        name: String,
+        /// Workload tuned.
+        workload: String,
+        /// The winning decision.
+        winner: String,
+        /// The winner's recorded GFlop/s (measured for trials, modeled
+        /// for the cost-model path).
+        winner_gflops: f64,
+        /// The best rejected alternative (empty when the search had a
+        /// single survivor).
+        runner_up: String,
+        /// The runner-up's GFlop/s (0 when there was none).
+        runner_up_gflops: f64,
+        /// `"trial"` (measured) or `"model"` (analytic ranking).
+        source: String,
+        /// Candidates the judgment compared (trials run, or model-ranked
+        /// candidates).
+        compared: usize,
+        /// Arithmetic intensity of the workload under the bytes-moved
+        /// model, flops/byte.
+        flops_per_byte: f64,
+        /// Roofline verdict for the winner (`"latency-bound"`,
+        /// `"bandwidth-bound"`, `"compute-bound"`), or `"uncalibrated"`
+        /// when no machine roofline is installed.
+        bound: String,
+    },
     /// The tuner answered from its cache without searching.
     CacheHit {
         /// Matrix name the lookup was for.
@@ -249,6 +281,7 @@ impl EventKind {
             EventKind::CandidatePruned { .. } => "candidate_pruned",
             EventKind::TrialTimed { .. } => "trial_timed",
             EventKind::DecisionCommitted { .. } => "decision_committed",
+            EventKind::DecisionExplained { .. } => "decision_explained",
             EventKind::CacheHit { .. } => "cache_hit",
             EventKind::CacheMigrated { .. } => "cache_migrated",
             EventKind::RetuneBackoff { .. } => "retune_backoff",
@@ -323,6 +356,29 @@ impl std::fmt::Display for EventKind {
                 write!(
                     f,
                     "decision {name} [{workload}]: {decision} @ {gflops:.2} GF ({source})"
+                )
+            }
+            EventKind::DecisionExplained {
+                name,
+                workload,
+                winner,
+                winner_gflops,
+                runner_up,
+                runner_up_gflops,
+                source,
+                compared,
+                flops_per_byte,
+                bound,
+            } => {
+                write!(
+                    f,
+                    "decision explained {name} [{workload}]: {winner} @ {winner_gflops:.2} GF \
+                     beat {} ({source}, {compared} compared; {flops_per_byte:.3} flop/B, {bound})",
+                    if runner_up.is_empty() {
+                        "no challenger".to_string()
+                    } else {
+                        format!("{runner_up} @ {runner_up_gflops:.2} GF")
+                    }
                 )
             }
             EventKind::CacheHit { name, workload, decision } => {

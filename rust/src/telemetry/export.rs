@@ -90,7 +90,8 @@ impl TelemetrySnapshot {
             .set("gauges", gauges)
             .set("histograms", histograms)
             .set("events", events)
-            .set("pool", pool);
+            .set("pool", pool)
+            .set("roofline", roofline_section(t));
         TelemetrySnapshot { json }
     }
 
@@ -119,6 +120,44 @@ impl TelemetrySnapshot {
         }
         Ok(TelemetrySnapshot { json })
     }
+}
+
+/// The snapshot's `roofline` section: the calibrated peaks plus one
+/// entry per served format family pairing its achieved-GB/s and
+/// achieved-GFlop/s gauges with a [`super::roofline::Boundedness`]
+/// verdict. `{"calibrated": false}` until
+/// [`Telemetry::set_roofline`](super::Telemetry::set_roofline) runs.
+fn roofline_section(t: &Telemetry) -> Json {
+    let Some(roof) = t.roofline() else {
+        return Json::obj().set("calibrated", false);
+    };
+    let mut gauges = std::collections::BTreeMap::new();
+    for (name, metric) in t.metrics.list() {
+        if let Metric::Gauge(g) = metric {
+            gauges.insert(name, g.get());
+        }
+    }
+    let mut paths = Json::obj();
+    for (name, gbps) in &gauges {
+        if let Some(family) = name.strip_prefix("roofline_achieved_gbps_") {
+            let gflops =
+                gauges.get(&super::names::roofline_gflops(family)).copied().unwrap_or(0.0);
+            paths = paths.set(
+                family,
+                Json::obj()
+                    .set("achieved_gbps", *gbps)
+                    .set("achieved_gflops", gflops)
+                    .set("bound", roof.classify(*gbps, gflops).as_str()),
+            );
+        }
+    }
+    Json::obj()
+        .set("calibrated", true)
+        .set("peak_read_gbps", roof.peak_read_gbps)
+        .set("random_latency_ns", roof.random_latency_ns)
+        .set("peak_gflops", roof.peak_gflops)
+        .set("knee_flops_per_byte", roof.knee_flops_per_byte())
+        .set("paths", paths)
 }
 
 /// Sanitizes a metric name into the Prometheus charset and prefixes the
@@ -178,6 +217,40 @@ pub fn prometheus_text(t: &Telemetry, probe: Option<&PoolProbe>) -> String {
     let isa = crate::kernels::IsaLevel::detect();
     let _ = writeln!(out, "# TYPE phi_isa_level gauge");
     let _ = writeln!(out, "phi_isa_level {}", isa as u8);
+    // Roofline classification: one labeled series per served family,
+    // pairing the achieved gauges with the calibrated peaks
+    // (0 latency-bound, 1 bandwidth-bound, 2 compute-bound).
+    if let Some(roof) = t.roofline() {
+        let gauges: Vec<(String, f64)> = t
+            .metrics
+            .list()
+            .into_iter()
+            .filter_map(|(n, m)| match m {
+                Metric::Gauge(g) => Some((n, g.get())),
+                _ => None,
+            })
+            .collect();
+        let lookup: std::collections::BTreeMap<&str, f64> =
+            gauges.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        let mut wrote_type = false;
+        for (name, gbps) in &gauges {
+            if let Some(family) = name.strip_prefix("roofline_achieved_gbps_") {
+                let gflops = lookup
+                    .get(super::names::roofline_gflops(family).as_str())
+                    .copied()
+                    .unwrap_or(0.0);
+                if !wrote_type {
+                    let _ = writeln!(out, "# TYPE phi_roofline_bound gauge");
+                    wrote_type = true;
+                }
+                let _ = writeln!(
+                    out,
+                    "phi_roofline_bound{{family=\"{family}\"}} {}",
+                    roof.classify(*gbps, gflops).code()
+                );
+            }
+        }
+    }
     if let Some(p) = probe {
         let pool_gauges = [
             ("phi_pool_workers", p.workers as f64),
@@ -225,11 +298,20 @@ fn valid_labels(s: &str) -> bool {
 /// must be blank, a well-formed `# TYPE`/`# HELP` comment, or a
 /// `name{labels} value` sample whose name fits the Prometheus charset
 /// and whose value parses as a float (`+Inf`/`-Inf`/`NaN` included).
+///
+/// Beyond line shape, the validator enforces *family typing*: every
+/// sample's metric family must have been declared by a preceding
+/// `# TYPE` line (histogram `_bucket`/`_sum`/`_count` series resolve to
+/// their base family), and a family may be declared at most once — an
+/// exporter emitting duplicate or untyped families is malformed even
+/// when every individual line parses.
+///
 /// Returns the number of sample lines; errors name the first offending
 /// line. This is what the CI smoke job runs against the fleet example's
 /// exposition.
 pub fn validate_prometheus(text: &str) -> anyhow::Result<usize> {
     let mut samples = 0usize;
+    let mut typed: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim_end();
         if line.is_empty() {
@@ -240,16 +322,33 @@ pub fn validate_prometheus(text: &str) -> anyhow::Result<usize> {
             let mut parts = rest.splitn(3, ' ');
             let keyword = parts.next().unwrap_or("");
             let name = parts.next().unwrap_or("");
-            let ok = match keyword {
+            match keyword {
                 "TYPE" => {
                     let kind = parts.next().unwrap_or("");
-                    valid_metric_name(name)
-                        && matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped")
+                    anyhow::ensure!(
+                        valid_metric_name(name)
+                            && matches!(
+                                kind,
+                                "counter" | "gauge" | "histogram" | "summary" | "untyped"
+                            ),
+                        "line {}: malformed comment {line:?}",
+                        lineno + 1
+                    );
+                    anyhow::ensure!(
+                        typed.insert(name.to_string()),
+                        "line {}: duplicate # TYPE for family {name:?}",
+                        lineno + 1
+                    );
                 }
-                "HELP" => valid_metric_name(name),
-                _ => false,
-            };
-            anyhow::ensure!(ok, "line {}: malformed comment {line:?}", lineno + 1);
+                "HELP" => {
+                    anyhow::ensure!(
+                        valid_metric_name(name),
+                        "line {}: malformed comment {line:?}",
+                        lineno + 1
+                    );
+                }
+                _ => anyhow::bail!("line {}: malformed comment {line:?}", lineno + 1),
+            }
             continue;
         }
         let (series, value) = line
@@ -258,15 +357,35 @@ pub fn validate_prometheus(text: &str) -> anyhow::Result<usize> {
         let value_ok = value.parse::<f64>().is_ok()
             || matches!(value, "+Inf" | "-Inf" | "NaN");
         anyhow::ensure!(value_ok, "line {}: bad value {value:?}", lineno + 1);
-        let name_ok = match series.split_once('{') {
+        let bare = match series.split_once('{') {
             Some((name, rest)) => {
-                valid_metric_name(name)
-                    && rest.ends_with('}')
-                    && valid_labels(&rest[..rest.len() - 1])
+                anyhow::ensure!(
+                    valid_metric_name(name)
+                        && rest.ends_with('}')
+                        && valid_labels(&rest[..rest.len() - 1]),
+                    "line {}: bad series {series:?}",
+                    lineno + 1
+                );
+                name
             }
-            None => valid_metric_name(series),
+            None => {
+                anyhow::ensure!(
+                    valid_metric_name(series),
+                    "line {}: bad series {series:?}",
+                    lineno + 1
+                );
+                series
+            }
         };
-        anyhow::ensure!(name_ok, "line {}: bad series {series:?}", lineno + 1);
+        let family_ok = typed.contains(bare)
+            || ["_bucket", "_sum", "_count"]
+                .iter()
+                .any(|suf| bare.strip_suffix(suf).is_some_and(|base| typed.contains(base)));
+        anyhow::ensure!(
+            family_ok,
+            "line {}: sample family {bare:?} has no preceding # TYPE",
+            lineno + 1
+        );
         samples += 1;
     }
     Ok(samples)
@@ -323,5 +442,57 @@ mod tests {
         assert!(validate_prometheus("bad-name 1").is_err());
         assert!(validate_prometheus("name notanumber").is_err());
         assert!(validate_prometheus("# TYPE x bogus").is_err());
+    }
+
+    #[test]
+    fn validator_requires_typed_families_and_rejects_duplicates() {
+        let ok = "# TYPE a counter\na 1\n# TYPE b histogram\nb_bucket{le=\"+Inf\"} 1\nb_sum \
+                  0.5\nb_count 1\n";
+        assert_eq!(validate_prometheus(ok).unwrap(), 4);
+        assert!(
+            validate_prometheus("orphan 1\n").is_err(),
+            "a sample without a # TYPE for its family must be rejected"
+        );
+        assert!(
+            validate_prometheus("# TYPE a counter\n# TYPE a counter\na 1\n").is_err(),
+            "duplicate family declarations must be rejected"
+        );
+        assert!(
+            validate_prometheus("# TYPE a counter\nb 1\n").is_err(),
+            "typing one family must not cover another"
+        );
+    }
+
+    #[test]
+    fn roofline_gauges_classify_and_pass_the_validator() {
+        use crate::telemetry::{names, MachineRoofline};
+        let t = populated();
+        // Uncalibrated: the snapshot says so and no bound series appears.
+        let snap = TelemetrySnapshot::capture_with_probe(&t, None);
+        let section = snap.json.get("roofline").expect("roofline section always present");
+        assert!(matches!(section.get("calibrated"), Some(Json::Bool(false))), "{section:?}");
+
+        t.set_roofline(MachineRoofline {
+            peak_read_gbps: 10.0,
+            random_latency_ns: 100.0,
+            peak_gflops: 20.0,
+        });
+        t.metrics.gauge(&names::roofline_gbps("csr")).set(2.0);
+        t.metrics.gauge(&names::roofline_gflops("csr")).set(1.0);
+        t.metrics.gauge(&names::roofline_gbps("ell")).set(9.0);
+        t.metrics.gauge(&names::roofline_gflops("ell")).set(2.0);
+
+        let snap = TelemetrySnapshot::capture_with_probe(&t, None);
+        let paths = snap.json.get("roofline").and_then(|r| r.get("paths")).unwrap();
+        let csr = paths.get("csr").unwrap();
+        assert_eq!(csr.get("bound").and_then(Json::as_str), Some("latency-bound"));
+        let ell = paths.get("ell").unwrap();
+        assert_eq!(ell.get("bound").and_then(Json::as_str), Some("bandwidth-bound"));
+
+        let text = prometheus_text(&t, None);
+        validate_prometheus(&text).expect("roofline gauges must satisfy the typed validator");
+        assert!(text.contains("phi_roofline_bound{family=\"csr\"} 0"), "{text}");
+        assert!(text.contains("phi_roofline_bound{family=\"ell\"} 1"), "{text}");
+        assert!(text.contains("# TYPE phi_roofline_achieved_gbps_csr gauge"));
     }
 }

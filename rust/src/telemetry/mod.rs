@@ -34,6 +34,12 @@
 //! * [`export`] — [`export::TelemetrySnapshot`] JSON (written next to
 //!   `BENCH_*.json` by examples and benches) and Prometheus text
 //!   exposition with a line-format validator.
+//! * [`trace`] — request-scoped causal tracing: sampled root spans at
+//!   the intake/fleet entry, child spans per shard / batch / kernel,
+//!   exported as Perfetto-loadable Chrome trace-event JSON.
+//! * [`roofline`] — the calibrated machine roofline (peak read GB/s,
+//!   random-access latency, flop ceiling) and the bytes-moved model that
+//!   classifies each served path {latency, bandwidth, compute}-bound.
 //!
 //! Pool utilization and barrier imbalance come from
 //! [`crate::sched::WorkerPool::probe`] — the scheduler stays free of any
@@ -51,14 +57,18 @@
 pub mod events;
 pub mod export;
 pub mod metrics;
+pub mod roofline;
 pub mod span;
+pub mod trace;
 
 pub use events::{Event, EventJournal, EventKind, Subscriber};
 pub use export::{prometheus_text, validate_prometheus, TelemetrySnapshot};
 pub use metrics::{Counter, Gauge, Histogram, Metric, Metrics};
+pub use roofline::{Boundedness, MachineRoofline};
 pub use span::{Phases, ServeTimers};
+pub use trace::{ActiveSpan, SpanCtx, SpanRecord, TraceStats, Tracer};
 
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, OnceLock, RwLock};
 
 /// Canonical metric names — one catalog, so dashboards and tests never
 /// chase string drift. See `docs/ARCHITECTURE.md` for the full metric
@@ -101,6 +111,18 @@ pub mod names {
     pub const SLO_VIOLATIONS: &str = "slo_violations_total";
     /// Counter: shard engines lost to a mid-batch fault.
     pub const SHARD_FAULTS: &str = "shard_faults_total";
+    /// Counter: requests sampled into a trace (root spans minted).
+    pub const TRACES_SAMPLED: &str = "traces_sampled_total";
+    /// Counter: spans recorded into the trace buffer.
+    pub const TRACE_SPANS: &str = "trace_spans_total";
+    /// Counter: spans evicted (oldest-first) from the full trace buffer.
+    pub const TRACE_SPANS_DROPPED: &str = "trace_spans_dropped_total";
+    /// Gauge: calibrated peak streaming read bandwidth, GB/s.
+    pub const ROOFLINE_PEAK_GBPS: &str = "roofline_peak_read_gbps";
+    /// Gauge: calibrated random-access latency, nanoseconds.
+    pub const ROOFLINE_LATENCY_NS: &str = "roofline_random_latency_ns";
+    /// Gauge: calibrated multiply-add flop ceiling, GFlop/s.
+    pub const ROOFLINE_PEAK_GFLOPS: &str = "roofline_peak_gflops";
 
     /// Histogram name for one tenant's end-to-end intake latency
     /// (admission → assembled response), seconds. Derived because the
@@ -127,18 +149,38 @@ pub mod names {
     pub fn kernel_ns_variant(family: &str, variant: &str) -> String {
         format!("kernel_ns_{family}_{variant}")
     }
+
+    /// Gauge name for the most recent achieved bandwidth of one format
+    /// family — `roofline_achieved_gbps_{family}` — capped at the
+    /// calibrated peak (see
+    /// [`crate::telemetry::MachineRoofline::cap_gbps`]). Derived because
+    /// the family axis is open-ended.
+    pub fn roofline_gbps(family: &str) -> String {
+        format!("roofline_achieved_gbps_{family}")
+    }
+
+    /// Gauge name for the most recent achieved compute rate of one format
+    /// family — `roofline_achieved_gflops_{family}`.
+    pub fn roofline_gflops(family: &str) -> String {
+        format!("roofline_achieved_gflops_{family}")
+    }
 }
 
 /// Default bounded capacity of a [`Telemetry`] instance's event journal.
 pub const DEFAULT_EVENT_CAPACITY: usize = 1024;
 
-/// One observability domain: a metric registry plus an event journal.
+/// One observability domain: a metric registry, an event journal, a
+/// request tracer, and (once calibrated) the machine roofline.
 /// Shared by `Arc`; see the module docs for instance scoping.
 pub struct Telemetry {
     /// The metric registry.
     pub metrics: Metrics,
     /// The bounded event journal.
     pub journal: EventJournal,
+    /// The sampling request tracer (disabled until
+    /// [`Tracer::set_sample_every`] or [`Tracer::force`]).
+    pub tracer: Tracer,
+    roofline: RwLock<Option<MachineRoofline>>,
 }
 
 impl std::fmt::Debug for Telemetry {
@@ -155,7 +197,14 @@ impl Telemetry {
 
     /// A fresh instance retaining at most `capacity` journal events.
     pub fn with_event_capacity(capacity: usize) -> Arc<Telemetry> {
-        Arc::new(Telemetry { metrics: Metrics::new(), journal: EventJournal::new(capacity) })
+        let metrics = Metrics::new();
+        let tracer = Tracer::new(trace::DEFAULT_SPAN_CAPACITY, &metrics);
+        Arc::new(Telemetry {
+            metrics,
+            journal: EventJournal::new(capacity),
+            tracer,
+            roofline: RwLock::new(None),
+        })
     }
 
     /// The process-wide shared instance, created on first use.
@@ -168,6 +217,23 @@ impl Telemetry {
     /// well at call sites).
     pub fn publish(&self, kind: EventKind) {
         self.journal.publish(kind);
+    }
+
+    /// Installs a calibrated machine roofline on this instance, exposing
+    /// its three peaks as gauges ([`names::ROOFLINE_PEAK_GBPS`] and
+    /// friends) so snapshots and the Prometheus exposition carry them.
+    pub fn set_roofline(&self, roofline: MachineRoofline) {
+        self.metrics.gauge(names::ROOFLINE_PEAK_GBPS).set(roofline.peak_read_gbps);
+        self.metrics.gauge(names::ROOFLINE_LATENCY_NS).set(roofline.random_latency_ns);
+        self.metrics.gauge(names::ROOFLINE_PEAK_GFLOPS).set(roofline.peak_gflops);
+        *self.roofline.write().unwrap() = Some(roofline);
+    }
+
+    /// The installed machine roofline, if [`Telemetry::set_roofline`] has
+    /// run. `None` means achieved-GB/s figures go uncapped and paths stay
+    /// unclassified.
+    pub fn roofline(&self) -> Option<MachineRoofline> {
+        *self.roofline.read().unwrap()
     }
 }
 
@@ -183,5 +249,18 @@ mod tests {
         assert_eq!(b.metrics.counter(names::REQUESTS_SERVED).get(), 0);
         a.publish(EventKind::Evicted { id: "x".into(), bytes: 1 });
         assert_eq!(b.journal.published(), 0);
+    }
+
+    #[test]
+    fn roofline_installs_once_and_sets_gauges() {
+        let t = Telemetry::new();
+        assert!(t.roofline().is_none());
+        let r =
+            MachineRoofline { peak_read_gbps: 18.5, random_latency_ns: 92.0, peak_gflops: 33.0 };
+        t.set_roofline(r);
+        assert_eq!(t.roofline(), Some(r));
+        assert_eq!(t.metrics.gauge(names::ROOFLINE_PEAK_GBPS).get(), 18.5);
+        assert_eq!(t.metrics.gauge(names::ROOFLINE_LATENCY_NS).get(), 92.0);
+        assert_eq!(t.metrics.gauge(names::ROOFLINE_PEAK_GFLOPS).get(), 33.0);
     }
 }

@@ -1,0 +1,469 @@
+//! Request-scoped causal tracing: trace ids, parent-linked spans, and
+//! Chrome trace-event export.
+//!
+//! The telemetry histograms (PR 6) say how long requests took; this module
+//! says *where the time went*, per request. Every sampled request gets a
+//! trace id at its entry point (intake admission or direct fleet submit)
+//! and a root `request` span; the serving stack then hangs child spans off
+//! it — `admission` at the intake gate, one `shard` span per fan-out leg,
+//! `batch` for the engine drain-to-reply window, and `kernel` for the
+//! multiply itself (annotated with the roofline numbers from
+//! [`super::roofline`]). Finished spans land in a bounded drop-oldest
+//! buffer and export as Chrome trace-event JSON — load the file in
+//! Perfetto (or `chrome://tracing`) and the fan-out is a picture.
+//!
+//! # Sampling and cost
+//!
+//! Tracing is off by default (`sample_every == 0`): the hot path pays one
+//! relaxed atomic load per request and allocates nothing. Enabling 1-in-N
+//! sampling traces every Nth root; [`Tracer::force`] additionally traces
+//! *every* request of a named tenant regardless of the sample rate — the
+//! intake layer forces tenants while their p99 objective is violated, so
+//! the traces you have are the traces you want. Spans are recorded only
+//! when they finish (complete events); a request that dies mid-flight
+//! simply contributes fewer spans, never a corrupt trace.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::telemetry::metrics::{Counter, Metrics};
+use crate::telemetry::names;
+use crate::util::json::Json;
+
+/// Default capacity of the finished-span ring buffer.
+pub const DEFAULT_SPAN_CAPACITY: usize = 8192;
+
+/// Identity of a span within its tracer: the owning trace plus the span's
+/// own id. `Copy`, so it threads through request channels for free.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SpanCtx {
+    /// Trace (= sampled request) this span belongs to.
+    pub trace: u64,
+    /// Unique id of this span within the tracer.
+    pub span: u64,
+}
+
+/// One finished span, as held in the tracer's buffer and exported to the
+/// Chrome trace file.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Owning trace id.
+    pub trace: u64,
+    /// This span's id.
+    pub span: u64,
+    /// Parent span id; `None` for the root `request` span.
+    pub parent: Option<u64>,
+    /// Span name (`request`, `admission`, `shard`, `batch`, `kernel`).
+    pub name: String,
+    /// Start offset from the tracer's epoch, in microseconds.
+    pub start_us: f64,
+    /// Duration in microseconds.
+    pub dur_us: f64,
+    /// Logical id of the thread that *finished* the span.
+    pub tid: u64,
+    /// Free-form annotations (shard index, batch width, achieved GB/s, …).
+    pub args: Vec<(String, Json)>,
+}
+
+/// An open span. Annotate it with [`ActiveSpan::arg`], read its identity
+/// with [`ActiveSpan::ctx`] to parent children across threads, and close
+/// it with [`Tracer::finish`] — dropping it without finishing discards it
+/// (no partial records).
+#[derive(Debug)]
+pub struct ActiveSpan {
+    ctx: SpanCtx,
+    parent: Option<u64>,
+    name: &'static str,
+    start: Instant,
+    args: Vec<(String, Json)>,
+}
+
+impl ActiveSpan {
+    /// Identity to hang child spans off (safe to copy across threads).
+    pub fn ctx(&self) -> SpanCtx {
+        self.ctx
+    }
+
+    /// Attaches a key/value annotation, exported under Chrome `args`.
+    pub fn arg(&mut self, key: &str, value: impl Into<Json>) {
+        self.args.push((key.to_string(), value.into()));
+    }
+}
+
+std::thread_local! {
+    static LOGICAL_TID: u64 = {
+        static NEXT: AtomicU64 = AtomicU64::new(1);
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    };
+}
+
+/// Process-lifetime logical id of the calling thread (std's
+/// `ThreadId::as_u64` is unstable, so the tracer numbers threads itself).
+pub fn logical_tid() -> u64 {
+    LOGICAL_TID.with(|t| *t)
+}
+
+struct Buffer {
+    spans: std::collections::VecDeque<SpanRecord>,
+    capacity: usize,
+}
+
+/// Sampling trace recorder. One lives on every [`super::Telemetry`]; all
+/// serving layers share it through their `Arc<Telemetry>`.
+pub struct Tracer {
+    epoch: Instant,
+    next_trace: AtomicU64,
+    next_span: AtomicU64,
+    sample_every: AtomicU64,
+    sample_counter: AtomicU64,
+    forced_count: AtomicU64,
+    forced: Mutex<BTreeSet<String>>,
+    buffer: Mutex<Buffer>,
+    sampled: Arc<Counter>,
+    spans: Arc<Counter>,
+    dropped: Arc<Counter>,
+}
+
+impl Tracer {
+    /// A tracer with a `capacity`-span buffer, publishing its sampled /
+    /// recorded / dropped counters into `metrics` (under
+    /// [`names::TRACES_SAMPLED`] and friends) so snapshots and the
+    /// Prometheus exposition carry them automatically.
+    pub fn new(capacity: usize, metrics: &Metrics) -> Tracer {
+        Tracer {
+            epoch: Instant::now(),
+            next_trace: AtomicU64::new(1),
+            next_span: AtomicU64::new(1),
+            sample_every: AtomicU64::new(0),
+            sample_counter: AtomicU64::new(0),
+            forced_count: AtomicU64::new(0),
+            forced: Mutex::new(BTreeSet::new()),
+            buffer: Mutex::new(Buffer {
+                spans: std::collections::VecDeque::new(),
+                capacity: capacity.max(1),
+            }),
+            sampled: metrics.counter(names::TRACES_SAMPLED),
+            spans: metrics.counter(names::TRACE_SPANS),
+            dropped: metrics.counter(names::TRACE_SPANS_DROPPED),
+        }
+    }
+
+    /// Sets the sampling rate: trace one request in `n`. `0` disables
+    /// sampling entirely (forced tenants still trace).
+    pub fn set_sample_every(&self, n: u64) {
+        self.sample_every.store(n, Ordering::Relaxed);
+    }
+
+    /// Current 1-in-N sampling rate (0 = disabled).
+    pub fn sample_every(&self) -> u64 {
+        self.sample_every.load(Ordering::Relaxed)
+    }
+
+    /// Forces every request attributed to `tenant` to be traced until
+    /// [`Tracer::unforce`]. The intake layer calls this while a tenant's
+    /// p99 objective is violated.
+    pub fn force(&self, tenant: &str) {
+        let mut forced = self.forced.lock().unwrap();
+        if forced.insert(tenant.to_string()) {
+            self.forced_count.store(forced.len() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Stops force-tracing `tenant` (sampling still applies).
+    pub fn unforce(&self, tenant: &str) {
+        let mut forced = self.forced.lock().unwrap();
+        if forced.remove(tenant) {
+            self.forced_count.store(forced.len() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether any tracing can currently fire (one relaxed load each).
+    pub fn enabled(&self) -> bool {
+        self.sample_every.load(Ordering::Relaxed) > 0
+            || self.forced_count.load(Ordering::Relaxed) > 0
+    }
+
+    /// Sampling decision + root-span mint for one request. Returns `None`
+    /// (allocating nothing) when the request is not traced; otherwise the
+    /// open root span, a fresh trace id attached.
+    pub fn root(&self, name: &'static str, tenant: Option<&str>) -> Option<ActiveSpan> {
+        if !self.enabled() {
+            return None;
+        }
+        let forced = match tenant {
+            Some(t) if self.forced_count.load(Ordering::Relaxed) > 0 => {
+                self.forced.lock().unwrap().contains(t)
+            }
+            _ => false,
+        };
+        let every = self.sample_every.load(Ordering::Relaxed);
+        let sampled =
+            forced || (every > 0 && self.sample_counter.fetch_add(1, Ordering::Relaxed) % every == 0);
+        if !sampled {
+            return None;
+        }
+        self.sampled.inc();
+        let trace = self.next_trace.fetch_add(1, Ordering::Relaxed);
+        let mut span = ActiveSpan {
+            ctx: SpanCtx { trace, span: self.next_span.fetch_add(1, Ordering::Relaxed) },
+            parent: None,
+            name,
+            start: Instant::now(),
+            args: Vec::new(),
+        };
+        if let Some(t) = tenant {
+            span.arg("tenant", t);
+        }
+        Some(span)
+    }
+
+    /// Opens a child span of `parent`, starting now.
+    pub fn child(&self, parent: SpanCtx, name: &'static str) -> ActiveSpan {
+        ActiveSpan {
+            ctx: SpanCtx {
+                trace: parent.trace,
+                span: self.next_span.fetch_add(1, Ordering::Relaxed),
+            },
+            parent: Some(parent.span),
+            name,
+            start: Instant::now(),
+            args: Vec::new(),
+        }
+    }
+
+    /// Closes `span` now and records it.
+    pub fn finish(&self, span: ActiveSpan) {
+        let dur_us = span.start.elapsed().as_secs_f64() * 1e6;
+        let start_us = self.offset_us(span.start);
+        self.push(SpanRecord {
+            trace: span.ctx.trace,
+            span: span.ctx.span,
+            parent: span.parent,
+            name: span.name.to_string(),
+            start_us,
+            dur_us,
+            tid: logical_tid(),
+            args: span.args,
+        });
+    }
+
+    /// Records a complete child span of `parent` post hoc, from `start`
+    /// for `dur_s` seconds — the engine uses this to attribute batch and
+    /// kernel windows it timed itself. Returns the new span's identity so
+    /// further children (kernel under batch) can nest beneath it.
+    pub fn record_span(
+        &self,
+        parent: SpanCtx,
+        name: &'static str,
+        start: Instant,
+        dur_s: f64,
+        args: Vec<(String, Json)>,
+    ) -> SpanCtx {
+        let ctx = SpanCtx {
+            trace: parent.trace,
+            span: self.next_span.fetch_add(1, Ordering::Relaxed),
+        };
+        self.push(SpanRecord {
+            trace: ctx.trace,
+            span: ctx.span,
+            parent: Some(parent.span),
+            name: name.to_string(),
+            start_us: self.offset_us(start),
+            dur_us: dur_s.max(0.0) * 1e6,
+            tid: logical_tid(),
+            args,
+        });
+        ctx
+    }
+
+    fn offset_us(&self, at: Instant) -> f64 {
+        at.checked_duration_since(self.epoch).map(|d| d.as_secs_f64() * 1e6).unwrap_or(0.0)
+    }
+
+    fn push(&self, record: SpanRecord) {
+        self.spans.inc();
+        let mut buf = self.buffer.lock().unwrap();
+        if buf.spans.len() == buf.capacity {
+            buf.spans.pop_front();
+            self.dropped.inc();
+        }
+        buf.spans.push_back(record);
+    }
+
+    /// Snapshot of every buffered finished span, oldest first.
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        self.buffer.lock().unwrap().spans.iter().cloned().collect()
+    }
+
+    /// Total spans recorded / dropped (buffer overflow) / roots sampled.
+    pub fn stats(&self) -> TraceStats {
+        TraceStats {
+            sampled: self.sampled.get(),
+            spans: self.spans.get(),
+            dropped: self.dropped.get(),
+        }
+    }
+
+    /// The buffered spans as a Chrome trace-event JSON document
+    /// (`{"traceEvents": [...]}` with `ph:"X"` complete events) —
+    /// loadable as-is in Perfetto or `chrome://tracing`. Span ids ride in
+    /// `args` (`trace`, `span`, `parent`) so the causal tree survives the
+    /// export even though Chrome's own nesting is per-thread.
+    pub fn chrome_trace(&self) -> Json {
+        let events: Vec<Json> = self
+            .spans()
+            .into_iter()
+            .map(|s| {
+                let mut args = Json::obj().set("trace", s.trace).set("span", s.span);
+                if let Some(p) = s.parent {
+                    args = args.set("parent", p);
+                }
+                for (k, v) in s.args {
+                    args = args.set(&k, v);
+                }
+                Json::obj()
+                    .set("name", s.name)
+                    .set("cat", "phi")
+                    .set("ph", "X")
+                    .set("ts", s.start_us)
+                    .set("dur", s.dur_us)
+                    .set("pid", 1u64)
+                    .set("tid", s.tid)
+                    .set("args", args)
+            })
+            .collect();
+        Json::obj().set("traceEvents", Json::Arr(events)).set("displayTimeUnit", "ms")
+    }
+
+    /// Writes [`Tracer::chrome_trace`] to `path`, pretty-printed.
+    pub fn write_chrome(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.chrome_trace().to_pretty())
+    }
+}
+
+/// Lifetime counters of one [`Tracer`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceStats {
+    /// Root spans sampled (requests traced).
+    pub sampled: u64,
+    /// Spans recorded into the buffer.
+    pub spans: u64,
+    /// Spans evicted from the buffer to make room (oldest first).
+    pub dropped: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn tracer(capacity: usize) -> (Tracer, Metrics) {
+        let metrics = Metrics::new();
+        let t = Tracer::new(capacity, &metrics);
+        (t, metrics)
+    }
+
+    #[test]
+    fn disabled_tracer_samples_nothing() {
+        let (t, _m) = tracer(16);
+        assert!(!t.enabled());
+        assert!(t.root("request", Some("a")).is_none());
+        assert_eq!(t.stats().sampled, 0);
+    }
+
+    #[test]
+    fn one_in_n_sampling_and_forced_tenants() {
+        let (t, _m) = tracer(1024);
+        t.set_sample_every(4);
+        let hits = (0..40).filter(|_| t.root("request", Some("x")).is_some()).count();
+        assert_eq!(hits, 10, "1-in-4 over 40 roots");
+        t.force("slo");
+        for _ in 0..5 {
+            assert!(t.root("request", Some("slo")).is_some(), "forced tenant always traces");
+        }
+        t.unforce("slo");
+        t.set_sample_every(0);
+        assert!(t.root("request", Some("slo")).is_none());
+    }
+
+    #[test]
+    fn spans_nest_and_export_as_chrome_events() {
+        let (t, _m) = tracer(64);
+        t.set_sample_every(1);
+        let mut root = t.root("request", Some("tenant-a")).unwrap();
+        root.arg("bytes", 128u64);
+        let child = t.child(root.ctx(), "shard");
+        std::thread::sleep(Duration::from_millis(2));
+        let kctx = t.record_span(
+            child.ctx(),
+            "kernel",
+            Instant::now() - Duration::from_millis(1),
+            1e-3,
+            vec![("gbps".to_string(), Json::from(3.5))],
+        );
+        t.finish(child);
+        t.finish(root);
+        let spans = t.spans();
+        assert_eq!(spans.len(), 3);
+        let root_rec = spans.iter().find(|s| s.name == "request").unwrap();
+        let shard_rec = spans.iter().find(|s| s.name == "shard").unwrap();
+        let kernel_rec = spans.iter().find(|s| s.name == "kernel").unwrap();
+        assert_eq!(root_rec.parent, None);
+        assert_eq!(shard_rec.parent, Some(root_rec.span));
+        assert_eq!(kernel_rec.parent, Some(shard_rec.span));
+        assert_eq!(kernel_rec.span, kctx.span);
+        assert!(root_rec.dur_us >= shard_rec.dur_us);
+
+        let doc = t.chrome_trace().to_string();
+        let parsed = Json::parse(&doc).unwrap();
+        let events = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(events.len(), 3);
+        for e in events {
+            assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+            assert!(e.get("ts").and_then(Json::as_f64).is_some());
+            assert!(e.get("dur").and_then(Json::as_f64).is_some());
+            assert!(e.get("args").and_then(|a| a.get("trace")).is_some());
+        }
+    }
+
+    #[test]
+    fn buffer_drops_oldest_beyond_capacity() {
+        let (t, _m) = tracer(4);
+        t.set_sample_every(1);
+        for _ in 0..6 {
+            let root = t.root("request", None).unwrap();
+            t.finish(root);
+        }
+        let spans = t.spans();
+        assert_eq!(spans.len(), 4);
+        assert_eq!(t.stats().dropped, 2);
+        assert_eq!(t.stats().spans, 6);
+    }
+
+    #[test]
+    fn trace_ids_are_unique_across_threads() {
+        let (t, _m) = tracer(4096);
+        t.set_sample_every(1);
+        let ids: Vec<u64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    s.spawn(|| {
+                        (0..50)
+                            .map(|_| {
+                                let root = t.root("request", None).unwrap();
+                                let id = root.ctx().trace;
+                                t.finish(root);
+                                id
+                            })
+                            .collect::<Vec<u64>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        let unique: std::collections::BTreeSet<u64> = ids.iter().copied().collect();
+        assert_eq!(unique.len(), ids.len(), "duplicate trace ids");
+    }
+}

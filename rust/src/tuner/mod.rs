@@ -90,7 +90,7 @@ pub use crate::kernels::Workload;
 use crate::kernels::specialize::{self, Specialization};
 use crate::sparse::stats::{mean_diag_distance, row_length_cv};
 use crate::sparse::{Csr, MatrixStats};
-use crate::telemetry::{names, EventKind, Telemetry};
+use crate::telemetry::{names, roofline, EventKind, Telemetry};
 use std::sync::Arc;
 
 /// Cache key for one matrix under one tuner configuration and workload.
@@ -451,7 +451,7 @@ impl Tuner {
         let (nrows_f, nnz_f) = (a.nrows as f64, a.nnz() as f64);
         let cv = row_length_cv(a);
         let spread = mean_diag_distance(a) / a.nrows.max(1) as f64;
-        let chosen = if self.config.trials {
+        let (chosen, runner_up, compared) = if self.config.trials {
             let trialed = match self.seeded_candidates(workload, nrows_f, nnz_f, cv, spread,
                 &space.candidates)
             {
@@ -483,11 +483,15 @@ impl Tuner {
                     iters: r.iters,
                 });
             }
-            let best = results
-                .into_iter()
-                .min_by(|u, v| u.secs.partial_cmp(&v.secs).unwrap_or(std::cmp::Ordering::Equal))
-                .expect("non-empty candidate list");
-            TunedConfig {
+            // Sorted fastest-first so the runner-up — the decision's
+            // margin of victory — survives for the explained event.
+            let mut ordered = results;
+            ordered
+                .sort_by(|u, v| u.secs.partial_cmp(&v.secs).unwrap_or(std::cmp::Ordering::Equal));
+            let compared = ordered.len();
+            let runner_up = ordered.get(1).map(|r| (r.candidate.to_string(), r.gflops));
+            let best = ordered.into_iter().next().expect("non-empty candidate list");
+            let chosen = TunedConfig {
                 workload,
                 format: best.candidate.format,
                 ordering: best.candidate.ordering,
@@ -497,11 +501,16 @@ impl Tuner {
                 gflops: best.gflops,
                 source: "trial".to_string(),
                 tuned_at: cache::now_epoch(),
-            }
+            };
+            (chosen, runner_up, compared)
         } else {
             let ranked = CostModel::new().rank_for(a, &space.candidates, workload);
+            let compared = ranked.len();
+            let runner_up = ranked
+                .get(1)
+                .map(|&(c, s)| (c.to_string(), workload.flops(a.nnz()) / s.max(1e-12) / 1e9));
             let (cand, secs) = ranked[0];
-            TunedConfig {
+            let chosen = TunedConfig {
                 workload,
                 format: cand.format,
                 ordering: cand.ordering,
@@ -511,7 +520,8 @@ impl Tuner {
                 gflops: workload.flops(a.nnz()) / secs.max(1e-12) / 1e9,
                 source: "model".to_string(),
                 tuned_at: cache::now_epoch(),
-            }
+            };
+            (chosen, runner_up, compared)
         };
         self.priors.push(Prior {
             workload,
@@ -534,6 +544,34 @@ impl Tuner {
             decision: chosen.to_string(),
             gflops: chosen.gflops,
             source: chosen.source.clone(),
+        });
+        // The "why" record: winner vs runner-up, how wide the race was,
+        // and where the decision sits on the machine roofline (the
+        // pre-payload CSR traffic estimate stands in for the exact
+        // per-format model — no payload exists yet at decision time).
+        let bytes = roofline::spmv_bytes_estimate(a.nnz(), a.nrows, a.ncols, workload.k());
+        let flops_per_byte = workload.flops(a.nnz()) / bytes.max(1) as f64;
+        let bound = match self.telemetry.as_ref().and_then(|t| t.roofline()) {
+            Some(roof) => {
+                let gbps = chosen.gflops / flops_per_byte.max(1e-12);
+                roof.classify(roof.cap_gbps(gbps), chosen.gflops.min(roof.peak_gflops))
+                    .as_str()
+                    .to_string()
+            }
+            None => "uncalibrated".to_string(),
+        };
+        let (runner_up_name, runner_up_gflops) = runner_up.unwrap_or_default();
+        self.publish(EventKind::DecisionExplained {
+            name: stats.name.clone(),
+            workload: workload.to_string(),
+            winner: chosen.to_string(),
+            winner_gflops: chosen.gflops,
+            runner_up: runner_up_name,
+            runner_up_gflops,
+            source: chosen.source.clone(),
+            compared,
+            flops_per_byte,
+            bound,
         });
         self.cache.insert(key, chosen.clone());
         self.cache.save()?;
@@ -734,6 +772,18 @@ mod tests {
         assert_eq!(counts.get("search_opened"), Some(&1));
         assert!(counts.get("trial_timed").copied().unwrap_or(0) >= 1, "every trial is timed");
         assert_eq!(counts.get("decision_committed"), Some(&1));
+        // Every committed decision carries its "why" record; with no
+        // calibrated roofline the verdict degrades to "uncalibrated".
+        assert_eq!(counts.get("decision_explained"), Some(&1));
+        let explained = t.journal.recent(usize::MAX).into_iter().find_map(|e| match e.kind {
+            EventKind::DecisionExplained { winner_gflops, compared, bound, .. } => {
+                Some((winner_gflops, compared, bound))
+            }
+            _ => None,
+        });
+        let (winner_gflops, compared, bound) = explained.expect("decision_explained journaled");
+        assert!(winner_gflops > 0.0 && compared >= 1);
+        assert_eq!(bound, "uncalibrated");
         assert_eq!(t.metrics.counter(names::TUNER_CACHE_MISSES).get(), 1);
         assert!(t.metrics.counter(names::TUNER_TRIALS).get() >= 1);
 

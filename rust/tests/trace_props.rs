@@ -1,0 +1,318 @@
+//! End-to-end properties of request-scoped tracing through the serving
+//! stack: trace-id uniqueness under concurrent clients, the causal span
+//! tree (intake admission → shard fan-out → batch → kernel) rooted at
+//! the request and closed, span accounting against the client-observed
+//! latency on the sharded path, exact 1-in-N sampler hit rates (and the
+//! zero-rate off switch), and a Chrome trace-event export that round-trips
+//! through the crate's own JSON parser.
+//!
+//! The tracer's single-layer behaviors (buffer eviction, forced tenants,
+//! post-hoc span recording) are unit-tested in `telemetry::trace`; these
+//! tests only assert what emerges from the layers composed.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::time::Instant;
+
+use phi_spmv::fleet::shard::ShardConfig;
+use phi_spmv::fleet::{Admission, Fleet, FleetConfig, Intake, RetuneConfig, TenantBudget};
+use phi_spmv::sparse::gen::stencil::stencil_2d;
+use phi_spmv::sparse::gen::{random_vector, randomize_values};
+use phi_spmv::sparse::Csr;
+use phi_spmv::telemetry::SpanRecord;
+use phi_spmv::tuner::{Tuner, TunerConfig, TuningCache};
+use phi_spmv::util::json::Json;
+
+fn matrix(seed: u64, n: usize) -> Arc<Csr> {
+    let mut a = stencil_2d(n, n);
+    randomize_values(&mut a, seed);
+    Arc::new(a)
+}
+
+/// A quiet fleet (no retune thread); `shards` forces the shard plan on
+/// for every entry, `None` leaves the default single-shard threshold.
+fn fleet(shards: Option<usize>) -> Fleet {
+    let tuner = Tuner::new(TunerConfig::model_only(), TuningCache::in_memory());
+    let mut config = FleetConfig {
+        retune: RetuneConfig { enabled: false, ..RetuneConfig::default() },
+        ..FleetConfig::default()
+    };
+    if let Some(shards) = shards {
+        config.shard = ShardConfig { threshold_nnz: 0, shards };
+    }
+    Fleet::new(config, tuner)
+}
+
+fn spans_of<'a>(spans: &'a [SpanRecord], trace: u64) -> Vec<&'a SpanRecord> {
+    spans.iter().filter(|s| s.trace == trace).collect()
+}
+
+fn find<'a>(trace: &[&'a SpanRecord], name: &str) -> Vec<&'a SpanRecord> {
+    trace.iter().filter(|s| s.name == name).copied().collect()
+}
+
+fn has_arg(span: &SpanRecord, key: &str, want: &str) -> bool {
+    span.args.iter().any(|(k, v)| k == key && v.as_str() == Some(want))
+}
+
+/// Every span's parent must resolve to another span of the same trace,
+/// and exactly one span (the root) may have no parent.
+fn assert_tree_closed(trace: &[&SpanRecord], tag: &str) {
+    let ids: BTreeSet<u64> = trace.iter().map(|s| s.span).collect();
+    assert_eq!(ids.len(), trace.len(), "{tag}: duplicate span ids");
+    let roots = trace.iter().filter(|s| s.parent.is_none()).count();
+    assert_eq!(roots, 1, "{tag}: exactly one root span");
+    for s in trace {
+        if let Some(p) = s.parent {
+            assert!(ids.contains(&p), "{tag}: span {} has dangling parent {p}", s.span);
+        }
+    }
+}
+
+#[test]
+fn concurrent_fleet_clients_get_unique_trace_ids() {
+    let fleet = fleet(None);
+    let a = matrix(3, 16);
+    fleet.register("t", a.clone()).unwrap();
+    let telemetry = fleet.telemetry();
+    telemetry.tracer.set_sample_every(1);
+
+    const CLIENTS: usize = 8;
+    const ROUNDS: usize = 16;
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let fleet = &fleet;
+            let a = &a;
+            s.spawn(move || {
+                for round in 0..ROUNDS {
+                    let x = random_vector(a.ncols, (100 + c * ROUNDS + round) as u64);
+                    fleet.call("t", x).expect("healthy fleet must answer");
+                }
+            });
+        }
+    });
+
+    let spans = telemetry.tracer.spans();
+    let roots = find(&spans.iter().collect::<Vec<_>>(), "request");
+    assert_eq!(roots.len(), CLIENTS * ROUNDS, "every request yields one root");
+    let ids: BTreeSet<u64> = roots.iter().map(|s| s.trace).collect();
+    assert_eq!(ids.len(), roots.len(), "duplicate trace ids under concurrency");
+    assert_eq!(telemetry.tracer.stats().sampled, (CLIENTS * ROUNDS) as u64);
+    // Every recorded span belongs to a request whose root survived.
+    for s in &spans {
+        assert!(ids.contains(&s.trace), "span {} orphaned from trace {}", s.name, s.trace);
+    }
+    fleet.shutdown();
+}
+
+#[test]
+fn intake_trace_tree_is_rooted_at_request_and_closed() {
+    let fleet = fleet(None);
+    let a = matrix(5, 14);
+    fleet.register("acme", a.clone()).unwrap();
+    let telemetry = fleet.telemetry();
+    telemetry.tracer.set_sample_every(1);
+    let intake = Intake::new(fleet, TenantBudget::unlimited());
+
+    match intake.submit("acme", random_vector(a.ncols, 7)).unwrap() {
+        Admission::Admitted(ticket) => {
+            ticket.recv().expect("admitted request must be answered");
+        }
+        Admission::Shed { reason } => panic!("unlimited budget shed: {reason:?}"),
+    }
+
+    let spans = telemetry.tracer.spans();
+    let all: Vec<_> = spans.iter().collect();
+    let root = find(&all, "request").pop().expect("root span");
+    assert_eq!(root.parent, None);
+    assert!(has_arg(root, "tenant", "acme"), "root carries the tenant: {:?}", root.args);
+    let trace = spans_of(&spans, root.trace);
+    assert_tree_closed(&trace, "admitted request");
+
+    let admission = find(&trace, "admission").pop().expect("admission span");
+    assert_eq!(admission.parent, Some(root.span), "admission hangs off the root");
+    assert!(has_arg(admission, "verdict", "admitted"), "args: {:?}", admission.args);
+
+    let shard = find(&trace, "shard").pop().expect("even one-shard entries trace the leg");
+    assert_eq!(shard.parent, Some(root.span));
+    let batch = find(&trace, "batch").pop().expect("batch span");
+    assert_eq!(batch.parent, Some(shard.span), "batch continues the shard leg");
+    let kernel = find(&trace, "kernel").pop().expect("kernel span");
+    assert_eq!(kernel.parent, Some(batch.span), "kernel nests under its batch");
+    assert!(
+        kernel.args.iter().any(|(k, _)| k == "gbps"),
+        "kernel span carries roofline args: {:?}",
+        kernel.args
+    );
+
+    // A shed is a completed (if short) trace too: root + refused
+    // admission, nothing else — and the tree still closes.
+    intake.set_budget("acme", TenantBudget { max_inflight: 0, ..TenantBudget::unlimited() });
+    match intake.submit("acme", random_vector(a.ncols, 8)).unwrap() {
+        Admission::Shed { .. } => {}
+        Admission::Admitted(_) => panic!("zero in-flight budget must shed"),
+    }
+    let spans = telemetry.tracer.spans();
+    let shed_root = spans
+        .iter()
+        .filter(|s| s.name == "request")
+        .max_by_key(|s| s.trace)
+        .expect("shed root");
+    assert!(shed_root.trace > root.trace, "the shed is a fresh trace");
+    let shed_trace = spans_of(&spans, shed_root.trace);
+    assert_eq!(shed_trace.len(), 2, "a shed trace is root + admission: {shed_trace:?}");
+    assert_tree_closed(&shed_trace, "shed request");
+    let verdict = find(&shed_trace, "admission").pop().expect("shed admission span");
+    assert!(has_arg(verdict, "verdict", "inflight"), "args: {:?}", verdict.args);
+}
+
+#[test]
+fn sharded_span_tree_covers_every_leg_within_the_request_window() {
+    let fleet = fleet(Some(3));
+    let a = matrix(11, 18);
+    fleet.register("big", a.clone()).unwrap();
+    let shard_count = fleet.shard_count("big").unwrap();
+    assert!(shard_count >= 2, "a 324-row stencil must split");
+    let telemetry = fleet.telemetry();
+    telemetry.tracer.set_sample_every(1);
+
+    let x = random_vector(a.ncols, 23);
+    let t0 = Instant::now();
+    let submission = fleet.submit("big", x).expect("submit");
+    submission.recv().expect("sharded fleet must answer");
+    let wall_us = t0.elapsed().as_secs_f64() * 1e6;
+
+    let spans = telemetry.tracer.spans();
+    let all: Vec<_> = spans.iter().collect();
+    let root = find(&all, "request").pop().expect("root span");
+    let trace = spans_of(&spans, root.trace);
+    assert_tree_closed(&trace, "sharded request");
+
+    let shards = find(&trace, "shard");
+    assert_eq!(shards.len(), shard_count, "one shard span per fan-out leg");
+    let batches = find(&trace, "batch");
+    let kernels = find(&trace, "kernel");
+    assert_eq!(batches.len(), shard_count, "each leg records its batch window");
+    assert_eq!(kernels.len(), shard_count, "each leg records its kernel");
+
+    // Generous slack for f64 µs arithmetic and scheduler jitter; the
+    // ordering being asserted (root opens first, closes last, and never
+    // exceeds what the client observed) is structural, not statistical.
+    const SLACK_US: f64 = 200.0;
+    assert!(
+        root.dur_us <= wall_us + SLACK_US,
+        "root span ({} µs) cannot exceed the client-observed latency ({wall_us} µs)",
+        root.dur_us
+    );
+    let root_end = root.start_us + root.dur_us;
+    for leg in &shards {
+        assert_eq!(leg.parent, Some(root.span));
+        assert!(
+            leg.start_us + 1.0 >= root.start_us,
+            "shard leg starts ({} µs) before its root ({} µs)",
+            leg.start_us,
+            root.start_us
+        );
+        assert!(
+            leg.start_us + leg.dur_us <= root_end + SLACK_US,
+            "shard leg ends after its root closed"
+        );
+    }
+    // The slowest leg accounts for (almost all of) the root's duration:
+    // legs run concurrently, so the request is as slow as its slowest
+    // shard, not the sum.
+    let slowest_end =
+        shards.iter().map(|s| s.start_us + s.dur_us).fold(0.0f64, f64::max);
+    assert!(
+        root_end + SLACK_US >= slowest_end,
+        "root ({root_end} µs) must cover the slowest leg ({slowest_end} µs)"
+    );
+    fleet.shutdown();
+}
+
+#[test]
+fn sampler_hit_rate_is_exact_and_rate_zero_records_nothing() {
+    let fleet = fleet(None);
+    let a = matrix(13, 12);
+    fleet.register("t", a.clone()).unwrap();
+    let telemetry = fleet.telemetry();
+
+    // 1-in-4 over 40 sequential requests: the counter-based sampler is
+    // exact, not probabilistic.
+    telemetry.tracer.set_sample_every(4);
+    for i in 0..40 {
+        fleet.call("t", random_vector(a.ncols, 300 + i)).expect("serve");
+    }
+    let stats = telemetry.tracer.stats();
+    assert_eq!(stats.sampled, 10, "1-in-4 over 40 requests");
+    let roots = telemetry
+        .tracer
+        .spans()
+        .into_iter()
+        .filter(|s| s.name == "request")
+        .count();
+    assert_eq!(roots, 10);
+
+    // Rate 0 turns tracing off entirely: no sampling, no spans.
+    telemetry.tracer.set_sample_every(0);
+    assert!(!telemetry.tracer.enabled());
+    let before = telemetry.tracer.stats();
+    for i in 0..20 {
+        fleet.call("t", random_vector(a.ncols, 400 + i)).expect("serve");
+    }
+    assert_eq!(telemetry.tracer.stats(), before, "rate 0 must record nothing");
+    fleet.shutdown();
+}
+
+#[test]
+fn chrome_export_round_trips_through_the_json_parser() {
+    let fleet = fleet(Some(2));
+    let a = matrix(17, 16);
+    fleet.register("t", a.clone()).unwrap();
+    let telemetry = fleet.telemetry();
+    telemetry.tracer.set_sample_every(1);
+    fleet.submit("t", random_vector(a.ncols, 41)).unwrap().recv().unwrap();
+
+    let doc = telemetry.tracer.chrome_trace().to_pretty();
+    let parsed = Json::parse(&doc).expect("chrome export must be valid JSON");
+    let events = parsed
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert!(!events.is_empty());
+    for e in events {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"), "complete events only");
+        assert!(e.get("ts").and_then(Json::as_f64).is_some());
+        assert!(e.get("dur").and_then(Json::as_f64).is_some());
+        assert!(e.get("args").and_then(|a| a.get("trace")).is_some());
+    }
+    // The causal tree survives the export: a shard event's parent is the
+    // request event's span id.
+    let span_of = |e: &Json| e.get("args").and_then(|a| a.get("span")).and_then(Json::as_f64);
+    let request = events
+        .iter()
+        .find(|e| e.get("name").and_then(Json::as_str) == Some("request"))
+        .expect("request event");
+    let shard = events
+        .iter()
+        .find(|e| e.get("name").and_then(Json::as_str) == Some("shard"))
+        .expect("shard event");
+    assert_eq!(
+        shard.get("args").and_then(|a| a.get("parent")).and_then(Json::as_f64),
+        span_of(request),
+        "shard's exported parent id is the request's span id"
+    );
+
+    // write_chrome produces the same document on disk.
+    let path = std::env::temp_dir().join(format!("phi_trace_props_{}.json", std::process::id()));
+    let path_str = path.to_str().expect("utf-8 temp path");
+    telemetry.tracer.write_chrome(path_str).expect("write trace file");
+    let on_disk = std::fs::read_to_string(&path).expect("read trace file back");
+    let reparsed = Json::parse(&on_disk).expect("trace file must parse");
+    assert_eq!(
+        reparsed.get("traceEvents").and_then(Json::as_arr).map(<[Json]>::len),
+        Some(events.len())
+    );
+    let _ = std::fs::remove_file(&path);
+    fleet.shutdown();
+}
